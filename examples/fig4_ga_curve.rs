@@ -1,0 +1,65 @@
+//! Fig. 4 regeneration: GA generations vs best speedup for the Fourier-
+//! transform application under *loop* offloading (the prior work [33]).
+//!
+//! The paper's figure shows the per-generation best of the GA search
+//! climbing past 5x over ~20 generations on the 2048-point FFT app. This
+//! driver runs the same search on our verification environment and prints
+//! the series (an ASCII sparkline plus the table the bench also emits).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example fig4_ga_curve [n] [gens]
+//! ```
+
+use fbo::coordinator::{apps, loop_offload, Coordinator};
+use fbo::ga::GaConfig;
+use fbo::metrics::Table;
+use fbo::parser;
+
+fn main() -> anyhow::Result<()> {
+    let mut argv = std::env::args().skip(1);
+    let n: usize = argv.next().map(|s| s.parse()).transpose()?.unwrap_or(64);
+    let gens: usize = argv.next().map(|s| s.parse()).transpose()?.unwrap_or(10);
+
+    let coordinator = Coordinator::open(std::path::Path::new("artifacts"))?;
+    let prog = parser::parse(&apps::fft_app_lib(n))?;
+    let linked = coordinator.link_cpu_libraries(&prog)?;
+
+    let cfg = GaConfig { population: 12, generations: gens, ..Default::default() };
+    eprintln!("running GA loop-offload search on the FFT app (n={n}, {gens} generations)...");
+    let r = loop_offload::ga_loop_search(&linked, "main", &cfg, 1, u64::MAX)?;
+
+    println!("parallelizable loops (genes): {}", r.loop_ids.len());
+    for (i, l) in r.loop_labels.iter().enumerate() {
+        println!("  gene[{i}] {l}");
+    }
+
+    let mut table = Table::new(&["generation", "best speedup", "mean speedup", "measured trials"]);
+    let max = r
+        .ga
+        .history
+        .iter()
+        .map(|g| g.best_speedup)
+        .fold(1.0f64, f64::max);
+    for g in &r.ga.history {
+        table.row(&[
+            g.generation.to_string(),
+            format!("{:.2}", g.best_speedup),
+            format!("{:.2}", g.mean_speedup),
+            g.trials.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+
+    println!("\nbest-of-generation (paper Fig. 4 shape — rises then plateaus):");
+    for g in &r.ga.history {
+        let bar = "#".repeat(((g.best_speedup / max) * 40.0) as usize);
+        println!("  gen {:>2} |{bar:<40}| {:.2}x", g.generation, g.best_speedup);
+    }
+    println!(
+        "\nfinal: {:.2}x over all-CPU with gene {:?} ({} verification trials)",
+        r.ga.best_speedup(),
+        r.ga.best_gene,
+        r.ga.trials
+    );
+    Ok(())
+}

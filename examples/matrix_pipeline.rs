@@ -1,0 +1,103 @@
+//! Matrix-calculation pipeline + environment-adaptation Steps 4-7.
+//!
+//! Factor-then-solve (getrf + getrs analogs) through the PJRT artifacts,
+//! verify the solve numerically, then run the paper's Steps 4-5: size the
+//! deployment from the *measured* request time and place it under
+//! latency/cost constraints; finally trigger the Step-7 reconfiguration
+//! hook with a price change.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example matrix_pipeline
+//! ```
+
+use std::path::Path;
+use std::time::Instant;
+
+use fbo::coordinator::flow;
+use fbo::metrics::fmt_duration;
+use fbo::runtime::Engine;
+
+const N: usize = 256;
+const NRHS: usize = 8;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::open(Path::new("artifacts"))?;
+    engine.artifact(&format!("lu_factor_n{N}"))?;
+    engine.artifact(&format!("lu_solve_n{N}"))?;
+
+    // Diagonally-dominant system.
+    let mut a = vec![0f32; N * N];
+    for i in 0..N {
+        for j in 0..N {
+            a[i * N + j] =
+                0.3 * ((0.01 * (i * j + 1) as f32).sin()) + if i == j { N as f32 } else { 0.0 };
+        }
+    }
+    let b: Vec<f32> = (0..N * NRHS).map(|i| ((i % 13) as f32) - 6.0).collect();
+
+    // Factor.
+    let t = Instant::now();
+    let lu = engine.execute(&format!("lu_factor_n{N}"), &[a.clone()])?;
+    let t_factor = t.elapsed();
+
+    // Solve (one fused artifact: factor+solve, the getrs path).
+    let t = Instant::now();
+    let x = engine.execute(&format!("lu_solve_n{N}"), &[a.clone(), b.clone()])?;
+    let t_solve = t.elapsed();
+
+    // Verify: ||A x - b|| / ||b||.
+    let xs = &x[0];
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for i in 0..N {
+        for r in 0..NRHS {
+            let mut s = 0f64;
+            for k in 0..N {
+                s += a[i * N + k] as f64 * xs[k * NRHS + r] as f64;
+            }
+            let d = s - b[i * NRHS + r] as f64;
+            num += d * d;
+            den += (b[i * NRHS + r] as f64).powi(2);
+        }
+    }
+    let resid = (num / den).sqrt();
+    println!(
+        "LU {N}x{N}: factor {} (U11={:.3}), solve {NRHS} rhs {} (residual {:.2e})",
+        fmt_duration(t_factor),
+        lu[0][0],
+        fmt_duration(t_solve),
+        resid
+    );
+    anyhow::ensure!(resid < 1e-3, "solve residual too large");
+
+    // Steps 4-5: size + place from the measured request time.
+    let req = flow::Requirements {
+        target_rps: 200.0,
+        max_latency_ms: 20.0,
+        budget_per_month: 8000.0,
+    };
+    let plan = flow::plan_resources(t_solve.as_secs_f64(), &req)?;
+    println!(
+        "Step 4: {} instance(s) ({:.0} rps each) for {} rps target",
+        plan.instances, plan.rps_per_instance, req.target_rps
+    );
+    let locations = vec![
+        flow::Location { name: "edge-gw".into(), gpus: 1, fpgas: 1, cost_per_hour: 0.9, latency_ms: 3.0 },
+        flow::Location { name: "regional-dc".into(), gpus: 8, fpgas: 4, cost_per_hour: 0.5, latency_ms: 12.0 },
+        flow::Location { name: "central-cloud".into(), gpus: 64, fpgas: 32, cost_per_hour: 0.3, latency_ms: 45.0 },
+    ];
+    let placement = flow::plan_placement(&plan, &req, &locations)?;
+    println!("Step 5: deploy at {} (${:.0}/month)", placement.location, placement.monthly_cost);
+
+    // Step 7: environment change — regional price hike.
+    let mut changed = locations.clone();
+    changed[1].cost_per_hour *= 1.4;
+    match flow::replan_on_change(&plan, &req, &changed, &placement)? {
+        Some(new_plan) => println!(
+            "Step 7: reconfigured -> {} (${:.0}/month)",
+            new_plan.location, new_plan.monthly_cost
+        ),
+        None => println!("Step 7: no reconfiguration needed"),
+    }
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Perf probe: interpreter throughput on the evaluation apps
+//! (median-of-5; the verification environment's hot path).
+//!
+//! ```bash
+//! cargo run --release --example perf_probe
+//! ```
+
+use std::time::Instant;
+
+use fbo::coordinator::{apps, Coordinator};
+use fbo::interp::Interp;
+use fbo::parser;
+
+fn main() -> anyhow::Result<()> {
+    let c = Coordinator::open(std::path::Path::new("artifacts"))?;
+    for (label, src) in [
+        ("fft_lib_64", apps::fft_app_lib(64)),
+        ("lu_lib_64", apps::lu_app_lib(64)),
+        ("stencil_96", apps::stencil_app(96)),
+    ] {
+        let prog = parser::parse(&src)?;
+        let linked = c.link_cpu_libraries(&prog)?;
+        let mut m = Interp::new(&linked)?;
+        let mut times = Vec::new();
+        for _ in 0..5 {
+            m.reset_run_state()?;
+            let t0 = Instant::now();
+            m.run("main", &[])?;
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        let med = times[2];
+        println!(
+            "{label}: median {med:?} ({} steps, {:.1} Msteps/s)",
+            m.stats.steps,
+            m.stats.steps as f64 / med.as_secs_f64() / 1e6
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! Quickstart: offload one application's function blocks in ~10 lines.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use fbo::coordinator::{apps, Coordinator};
+
+fn main() -> anyhow::Result<()> {
+    // The coordinator = pattern DB + PJRT engine + verification settings.
+    let coordinator = Coordinator::open(std::path::Path::new("artifacts"))?;
+
+    // A CPU application that calls the NR-style `matmul` library.
+    let source = apps::matmul_app(64);
+
+    // Steps 1-3: analyze, match blocks against the DB, reconcile
+    // interfaces, and measure every offload pattern in the verification
+    // environment. The fastest correct pattern wins.
+    let report = coordinator.offload(&source, "main")?;
+
+    print!("{}", coordinator.render_report(&report));
+    println!("--- winning transformed source ---");
+    print!("{}", report.transformed_source);
+    Ok(())
+}

@@ -1,0 +1,154 @@
+"""AOT compile path: lower each function-block graph to HLO **text**.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust ``xla`` crate) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once via ``make artifacts``. Emits:
+    artifacts/<name>.hlo.txt     one per (op, n)
+    artifacts/manifest.json      shapes/dtypes/signatures for the rust side
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--sizes 64,256]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default artifact grid. 256 is the headline size (paper used 2048; see
+# DESIGN.md "Substitutions" — interpreted-CPU LU at 2048 is infeasible, the
+# speedup *shape* is preserved at 256). 64 is the test/CI size.
+DEFAULT_SIZES = (64, 256)
+SOLVE_RHS = 8  # columns in the lu_solve right-hand side
+
+
+def spec(shape: tuple[int, ...]) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifact_specs(sizes=DEFAULT_SIZES):
+    """(name, fn, arg_specs, description) for every artifact we ship."""
+    out = []
+    for n in sizes:
+        out.append(
+            (
+                f"fft2d_n{n}",
+                model.fft2d,
+                (spec((n, n)), spec((n, n))),
+                f"2-D complex FFT, {n}x{n} grid, split re/im planes (cuFFT analog)",
+            )
+        )
+        out.append(
+            (
+                f"lu_factor_n{n}",
+                model.lu_factor,
+                (spec((n, n)),),
+                f"packed blocked no-pivot LU of {n}x{n} (cuSOLVER getrf analog)",
+            )
+        )
+        out.append(
+            (
+                f"matmul_n{n}",
+                model.matmul,
+                (spec((n, n)), spec((n, n))),
+                f"dense {n}x{n} matmul (cuBLAS gemm analog)",
+            )
+        )
+        out.append(
+            (
+                f"lu_solve_n{n}",
+                model.lu_solve,
+                (spec((n, n)), spec((n, SOLVE_RHS))),
+                f"solve A X = B, A {n}x{n}, B {n}x{SOLVE_RHS} (cuSOLVER getrs analog)",
+            )
+        )
+    # Batched 1-D FFT for the IoT vibration example: 64 windows of 256.
+    out.append(
+        (
+            "fft1d_b64_n256",
+            model.fft1d_batch,
+            (spec((64, 256)), spec((64, 256))),
+            "batched 1-D complex FFT, 64 windows x 256 samples (cuFFT plan-many analog)",
+        )
+    )
+    return out
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text, return_tuple=True.
+
+    CRITICAL: print with ``print_large_constants=True``. The default HLO
+    printer elides big constants as ``constant({...})`` and the XLA 0.5.1
+    text parser silently materializes those as ZEROS — the DFT/twiddle
+    tables of the FFT artifact would vanish (discovered the hard way; see
+    EXPERIMENTS.md "Gotchas").
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # New-jax metadata attributes (source_end_line etc.) are unknown to the
+    # 0.5.1 text parser — strip metadata entirely.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def lower_one(fn, arg_specs) -> tuple[str, list[dict], list[dict]]:
+    """Lower ``fn`` and return (hlo_text, input sig, output sig)."""
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    ins = [{"shape": list(s.shape), "dtype": "f32"} for s in arg_specs]
+    out_avals = jax.eval_shape(fn, *arg_specs)
+    if not isinstance(out_avals, tuple):
+        out_avals = (out_avals,)
+    outs = [{"shape": list(o.shape), "dtype": "f32"} for o in out_avals]
+    return text, ins, outs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--sizes",
+        default=",".join(str(s) for s in DEFAULT_SIZES),
+        help="comma-separated square sizes to lower",
+    )
+    args = ap.parse_args()
+    sizes = tuple(int(s) for s in args.sizes.split(","))
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for name, fn, arg_specs, desc in artifact_specs(sizes):
+        text, ins, outs = lower_one(fn, arg_specs)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "description": desc,
+                "inputs": ins,
+                "outputs": outs,
+            }
+        )
+        print(f"  {name}: {len(text)} chars, in={ins}, out={outs}")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

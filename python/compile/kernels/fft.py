@@ -1,0 +1,96 @@
+"""L1/L2 kernel: four-step FFT — the cuFFT-analog function block.
+
+Hardware adaptation (DESIGN.md section "Hardware-Adaptation"): cuFFT's speed
+on GPU comes from mapping butterflies onto warps with staged shared-memory
+transposes. The TPU-shaped re-expression of the same insight is Bailey's
+**four-step (transpose) FFT**: factor n = n1*n2 and express the transform as
+
+    1. n2 batched DFTs of size n1        -> dense matmul against W(n1)
+    2. twiddle multiply by w_n^(j2*k1)   -> elementwise (VPU)
+    3. n1 batched DFTs of size n2        -> dense matmul against W(n2)
+    4. transpose                          -> layout change
+
+so *all* O(n log n)-ish work lands on the MXU systolic array as dense
+matmuls (the Pallas ``matmul`` kernel), exactly as cuFFT lands it on warp
+MMA. The DFT/twiddle matrices are compile-time constants baked into the AOT
+artifact — the runtime only feeds data, like calling into cuFFT's plan.
+
+Derivation (j = j1*n2 + j2, k = k1 + n1*k2, w = exp(-2*pi*i/n)):
+    X[k1 + n1*k2] = sum_{j2} w^(j2*k1) W(n2)[j2,k2] * (sum_{j1} W(n1)[j1,k1] x[j1*n2+j2])
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .matmul import cmatmul
+
+
+def dft_matrix(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Real/imag planes of the dense DFT matrix W[j,k] = exp(-2*pi*i*j*k/n)."""
+    j = np.arange(n)
+    ang = -2.0 * np.pi * np.outer(j, j) / n
+    return np.cos(ang).astype(np.float32), np.sin(ang).astype(np.float32)
+
+
+def twiddle(n1: int, n2: int) -> tuple[np.ndarray, np.ndarray]:
+    """Twiddle planes T[j2,k1] = exp(-2*pi*i*j2*k1/(n1*n2))."""
+    n = n1 * n2
+    ang = -2.0 * np.pi * np.outer(np.arange(n2), np.arange(n1)) / n
+    return np.cos(ang).astype(np.float32), np.sin(ang).astype(np.float32)
+
+
+def split_factors(n: int) -> tuple[int, int]:
+    """Balanced n = n1 * n2 factorization (n1 <= n2), preferring squares."""
+    n1 = int(np.sqrt(n))
+    while n1 > 1 and n % n1 != 0:
+        n1 -= 1
+    return n1, n // n1
+
+
+def fft1d(re: jnp.ndarray, im: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched 1-D FFT over the last axis via the four-step algorithm.
+
+    ``re``/``im``: (batch, n) f32 planes. Returns (batch, n) planes.
+    """
+    b, n = re.shape
+    n1, n2 = split_factors(n)
+    w1r, w1i = dft_matrix(n1)
+    w2r, w2i = dft_matrix(n2)
+    tr, ti = twiddle(n1, n2)
+
+    # Step 1 — inner DFTs over j1: view rows as (n1, n2) matrices, transpose
+    # to (n2, n1), flatten the batch into rows and hit the MXU:
+    #   A[b, j2, k1] = sum_j1 M[b, j1, j2] * W1[j1, k1]
+    m_re = re.reshape(b, n1, n2).transpose(0, 2, 1).reshape(b * n2, n1)
+    m_im = im.reshape(b, n1, n2).transpose(0, 2, 1).reshape(b * n2, n1)
+    a_re, a_im = cmatmul(m_re, m_im, jnp.asarray(w1r), jnp.asarray(w1i))
+
+    # Step 2 — twiddle (elementwise, VPU): B[b, j2, k1] = A * T[j2, k1]
+    a_re = a_re.reshape(b, n2, n1)
+    a_im = a_im.reshape(b, n2, n1)
+    t_re = jnp.asarray(tr)[None, :, :]
+    t_im = jnp.asarray(ti)[None, :, :]
+    b_re = a_re * t_re - a_im * t_im
+    b_im = a_re * t_im + a_im * t_re
+
+    # Step 3 — outer DFTs over j2:
+    #   C[b, k1, k2] = sum_j2 B[b, j2, k1] * W2[j2, k2]
+    b_re2 = b_re.transpose(0, 2, 1).reshape(b * n1, n2)
+    b_im2 = b_im.transpose(0, 2, 1).reshape(b * n1, n2)
+    c_re, c_im = cmatmul(b_re2, b_im2, jnp.asarray(w2r), jnp.asarray(w2i))
+
+    # Step 4 — transpose to the natural output order k = k1 + n1*k2.
+    out_re = c_re.reshape(b, n1, n2).transpose(0, 2, 1).reshape(b, n)
+    out_im = c_im.reshape(b, n1, n2).transpose(0, 2, 1).reshape(b, n)
+    return out_re, out_im
+
+
+def fft2d(re: jnp.ndarray, im: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """2-D FFT of an (n, m) grid: row transforms, then column transforms."""
+    # Rows.
+    r_re, r_im = fft1d(re, im)
+    # Columns: transpose, row-transform, transpose back.
+    c_re, c_im = fft1d(r_re.T, r_im.T)
+    return c_re.T, c_im.T

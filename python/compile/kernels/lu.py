@@ -1,0 +1,127 @@
+"""L1/L2 kernel: blocked right-looking LU — the cuSOLVER-analog block.
+
+Hardware adaptation: cuSOLVER getrf is a blocked right-looking LU — a thin
+panel is factored with scalar math, then the large trailing submatrix is
+updated with one GEMM per panel (where ~all FLOPs live). That structure is
+already MXU-shaped: the trailing update ``A22 -= L21 @ U12`` runs on the
+Pallas matmul kernel (MXU), the panel factorization is a ``fori_loop`` of
+masked rank-1 updates (VPU work on real TPU), and the triangular solves are
+small constant-trip loops over the panel width.
+
+No pivoting: the paper's workload (and our rust workload generator) feeds
+diagonally-dominant matrices, for which LU without pivoting is backward
+stable. Documented in DESIGN.md "Substitutions".
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .matmul import matmul
+
+DEFAULT_BLOCK = 32
+
+
+def _panel_lu(panel: jnp.ndarray) -> jnp.ndarray:
+    """Unblocked in-place LU of a (b, b) panel via masked rank-1 updates."""
+    b = panel.shape[0]
+    idx = jnp.arange(b)
+
+    def body(i, p):
+        piv = p[i, i]
+        l_col = jnp.where(idx > i, p[:, i] / piv, 0.0)
+        u_row = jnp.where(idx >= i, p[i, :], 0.0)
+        p = p - l_col[:, None] * u_row[None, :]
+        return p.at[:, i].set(jnp.where(idx > i, l_col, p[:, i]))
+
+    return lax.fori_loop(0, b, body, panel.astype(jnp.float32))
+
+
+def _solve_unit_lower(l11: jnp.ndarray, a12: jnp.ndarray) -> jnp.ndarray:
+    """U12 from L11 @ U12 = A12, L11 unit-lower (forward substitution)."""
+    b = l11.shape[0]
+    idx = jnp.arange(b)
+
+    def body(i, u):
+        # row_i of U12 = A12_i - sum_{j<i} L[i,j] U[j,:]; L masked to j < i.
+        l_row = jnp.where(idx < i, l11[i, :], 0.0)
+        return u.at[i, :].set(u[i, :] - l_row @ u)
+
+    return lax.fori_loop(0, b, body, a12.astype(jnp.float32))
+
+
+def _solve_upper_right(u11: jnp.ndarray, a21: jnp.ndarray) -> jnp.ndarray:
+    """L21 from L21 @ U11 = A21 (column-wise forward substitution)."""
+    b = u11.shape[0]
+    idx = jnp.arange(b)
+
+    def body(j, l):
+        u_col = jnp.where(idx < j, u11[:, j], 0.0)
+        col = (l[:, j] - l @ u_col) / u11[j, j]
+        return l.at[:, j].set(col)
+
+    return lax.fori_loop(0, b, body, a21.astype(jnp.float32))
+
+
+def _lu_block_view(lu: jnp.ndarray, panel: jnp.ndarray, k: int, b: int,
+                   n: int) -> jnp.ndarray:
+    return lax.dynamic_update_slice(lu, panel, (k, k))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def lu_factor(a: jnp.ndarray, *, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Packed no-pivot LU of a square matrix, blocked right-looking.
+
+    Returns the compact LU: U on/above the diagonal, unit-lower L strictly
+    below — the same packing cuSOLVER getrf uses.
+    """
+    n = a.shape[0]
+    assert a.shape == (n, n), f"square matrix required, got {a.shape}"
+    b = min(block, n)
+    while n % b != 0:
+        b -= 1
+    lu = a.astype(jnp.float32)
+    for k in range(0, n, b):  # static trace-time loop: offsets are constants
+        a11 = lax.slice(lu, (k, k), (k + b, k + b))
+        p11 = _panel_lu(a11)
+        lu = lax.dynamic_update_slice(lu, p11, (k, k))
+        rest = n - k - b
+        if rest == 0:
+            break
+        a12 = lax.slice(lu, (k, k + b), (k + b, n))
+        a21 = lax.slice(lu, (k + b, k), (n, k + b))
+        u12 = _solve_unit_lower(p11, a12)
+        l21 = _solve_upper_right(p11, a21)
+        lu = lax.dynamic_update_slice(lu, u12, (k, k + b))
+        lu = lax.dynamic_update_slice(lu, l21, (k + b, k))
+        # Trailing update — the MXU hot spot: A22 -= L21 @ U12.
+        a22 = lax.slice(lu, (k + b, k + b), (n, n))
+        upd = matmul(l21, u12)
+        lu = lax.dynamic_update_slice(lu, a22 - upd, (k + b, k + b))
+    return lu
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def lu_solve(a: jnp.ndarray, rhs: jnp.ndarray, *,
+             block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Solve A X = RHS via the blocked LU (forward + back substitution)."""
+    n = a.shape[0]
+    lu = lu_factor(a, block=block)
+    idx = jnp.arange(n)
+
+    def fwd(i, y):
+        l_row = jnp.where(idx < i, lu[i, :], 0.0)
+        return y.at[i, :].set(y[i, :] - l_row @ y)
+
+    y = lax.fori_loop(0, n, fwd, rhs.astype(jnp.float32))
+
+    def bwd(step, x):
+        i = n - 1 - step
+        u_row = jnp.where(idx > i, lu[i, :], 0.0)
+        return x.at[i, :].set((x[i, :] - u_row @ x) / lu[i, i])
+
+    return lax.fori_loop(0, n, bwd, y)

@@ -1,0 +1,109 @@
+"""L1 Pallas kernel: tiled matmul (the cuBLAS-analog function block).
+
+TPU adaptation of the paper's replacement target (cuBLAS GEMM): instead of
+CUDA threadblocks staging tiles through shared memory, BlockSpec expresses
+the HBM->VMEM schedule and each grid step feeds one (bm, bn) output tile to
+the MXU, accumulating over the k-grid axis in the output ref.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is validated (and AOT-shipped) through the
+interpreter lowering; the BlockSpec structure is what real-TPU performance
+is estimated from (DESIGN.md / EXPERIMENTS.md section "Perf").
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-shaped tile. The MXU is a 128x128 systolic array; (128, 128)
+# output tiles with a 128-deep reduction step keep it fully fed.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One grid step: accumulate x_tile @ y_tile into the output tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(dim: int, want: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``want`` (keeps grids exact)."""
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+) -> jnp.ndarray:
+    """``x @ y`` with MXU-tiled Pallas. Shapes must tile exactly."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def cmatmul(
+    ar: jnp.ndarray,
+    ai: jnp.ndarray,
+    br: jnp.ndarray,
+    bi: jnp.ndarray,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Complex matmul on split real/imag planes via 3 real Pallas matmuls.
+
+    Karatsuba-style (Gauss) trick: t1 = ar@br, t2 = ai@bi,
+    t3 = (ar+ai)@(br+bi); re = t1 - t2, im = t3 - t1 - t2.
+    One fewer MXU pass than the naive 4-matmul form — this is the §Perf L1
+    optimization for the FFT artifact (see EXPERIMENTS.md).
+    """
+    t1 = matmul(ar, br, bm=bm, bn=bn, bk=bk)
+    t2 = matmul(ai, bi, bm=bm, bn=bn, bk=bk)
+    t3 = matmul(ar + ai, br + bi, bm=bm, bn=bn, bk=bk)
+    return t1 - t2, t3 - t1 - t2
+
+
+def vmem_bytes(m: int, n: int, k: int, bm: int = DEFAULT_BM,
+               bn: int = DEFAULT_BN, bk: int = DEFAULT_BK) -> int:
+    """Estimated VMEM residency of one grid step (f32)."""
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    return 4 * (bm * bk + bk * bn + bm * bn)

@@ -1,0 +1,81 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every L1 kernel in this package has a reference implementation here written
+with plain ``jax.numpy`` (no Pallas, no custom tiling). pytest compares the
+kernels against these oracles; the rust integration tests compare the PJRT
+artifacts against values computed from the same formulas.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain dense matmul, f32 accumulation."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def cmatmul_ref(
+    ar: jnp.ndarray, ai: jnp.ndarray, br: jnp.ndarray, bi: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Complex matmul on split real/imag operands (4-real-matmul formula)."""
+    re = jnp.matmul(ar, br) - jnp.matmul(ai, bi)
+    im = jnp.matmul(ar, bi) + jnp.matmul(ai, br)
+    return re, im
+
+
+def fft2d_ref(re: jnp.ndarray, im: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """2-D FFT oracle via jnp.fft on a complex64 view."""
+    x = re.astype(jnp.complex64) + 1j * im.astype(jnp.complex64)
+    y = jnp.fft.fft2(x)
+    return jnp.real(y).astype(jnp.float32), jnp.imag(y).astype(jnp.float32)
+
+
+def fft1d_ref(re: jnp.ndarray, im: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched 1-D FFT oracle over the last axis."""
+    x = re.astype(jnp.complex64) + 1j * im.astype(jnp.complex64)
+    y = jnp.fft.fft(x, axis=-1)
+    return jnp.real(y).astype(jnp.float32), jnp.imag(y).astype(jnp.float32)
+
+
+def lu_ref(a: jnp.ndarray) -> jnp.ndarray:
+    """Packed LU (no pivoting) oracle.
+
+    Returns the compact LU matrix: U on and above the diagonal, unit-lower L
+    strictly below. Inputs are assumed diagonally dominant (see DESIGN.md —
+    the paper's workload uses well-conditioned matrices so the no-pivot
+    factorization matches cuSOLVER's getrf modulo the permutation).
+    """
+    n = a.shape[0]
+    lu = a.astype(jnp.float32)
+    for i in range(n):
+        piv = lu[i, i]
+        col = lu[:, i] / piv
+        row_idx = jnp.arange(n)
+        l_col = jnp.where(row_idx > i, col, 0.0)
+        u_row = jnp.where(row_idx >= i, lu[i, :], 0.0)
+        lu = lu - l_col[:, None] * u_row[None, :]
+        lu = lu.at[:, i].set(jnp.where(row_idx > i, l_col, lu[:, i]))
+    return lu
+
+
+def lu_unpack(lu: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Split a packed LU matrix into (L, U) with unit diagonal on L."""
+    l = jnp.tril(lu, -1) + jnp.eye(lu.shape[0], dtype=lu.dtype)
+    u = jnp.triu(lu)
+    return l, u
+
+
+def lu_residual(a: jnp.ndarray, lu: jnp.ndarray) -> jnp.ndarray:
+    """Relative reconstruction error ||L@U - A|| / ||A||."""
+    l, u = lu_unpack(lu)
+    return jnp.linalg.norm(l @ u - a) / jnp.linalg.norm(a)
+
+
+def lu_solve_ref(lu: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Solve A x = b from the packed no-pivot LU."""
+    l, u = lu_unpack(lu)
+    y = jsl.solve_triangular(l, b, lower=True, unit_diagonal=True)
+    return jsl.solve_triangular(u, y, lower=False)

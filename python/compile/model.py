@@ -1,0 +1,58 @@
+"""L2: JAX compute graphs for the offloadable function blocks.
+
+Each public function here is one **function block** in the paper's sense —
+the unit the code-pattern DB maps a CPU library call (or similarity-matched
+code copy) onto. They call the L1 Pallas kernels and are AOT-lowered by
+``aot.py`` into one self-contained HLO-text artifact per (op, n), which the
+rust runtime loads through PJRT. Python never runs at request time.
+
+Complex data crosses the PJRT boundary as split real/imag f32 planes (the
+``xla`` crate speaks f32 literals natively; cuFFT's C2C interface is
+likewise an array of (re, im) pairs).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+from .kernels import fft as fft_k
+from .kernels import lu as lu_k
+from .kernels import matmul as mm_k
+
+
+def fft2d(re: jnp.ndarray, im: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """2-D complex FFT (cuFFT analog). (n,n)+(n,n) f32 -> (n,n)+(n,n)."""
+    return fft_k.fft2d(re, im)
+
+
+def fft1d_batch(re: jnp.ndarray, im: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched 1-D complex FFT over rows (cuFFT plan-many analog)."""
+    return fft_k.fft1d(re, im)
+
+
+def lu_factor(a: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Packed blocked LU (cuSOLVER getrf analog). (n,n) f32 -> (n,n)."""
+    return (lu_k.lu_factor(a),)
+
+
+def lu_solve(a: jnp.ndarray, rhs: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Solve A X = RHS (cuSOLVER getrs analog)."""
+    return (lu_k.lu_solve(a, rhs),)
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Dense matmul (cuBLAS gemm analog)."""
+    return (mm_k.matmul(a, b),)
+
+
+def dot_blocks() -> dict[str, Callable]:
+    """Name -> graph map used by aot.py and the python tests."""
+    return {
+        "fft2d": fft2d,
+        "fft1d_batch": fft1d_batch,
+        "lu_factor": lu_factor,
+        "lu_solve": lu_solve,
+        "matmul": matmul,
+    }

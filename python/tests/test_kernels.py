@@ -1,0 +1,262 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Each Pallas kernel (interpret=True) is compared against the pure-jnp
+oracles in ``compile.kernels.ref`` with ``assert_allclose``. Hypothesis
+sweeps shapes and block configurations per the repo test policy.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fft as fft_k
+from compile.kernels import lu as lu_k
+from compile.kernels import matmul as mm_k
+from compile.kernels import ref
+
+RNG = np.random.default_rng(20200207)
+
+
+def randf(*shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+def diag_dominant(n: int) -> np.ndarray:
+    a = RNG.standard_normal((n, n)).astype(np.float32)
+    return a + n * np.eye(n, dtype=np.float32)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+class TestMatmul:
+    def test_square(self):
+        a, b = randf(128, 128), randf(128, 128)
+        np.testing.assert_allclose(
+            mm_k.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4
+        )
+
+    def test_rectangular(self):
+        a, b = randf(256, 64), randf(64, 192)
+        np.testing.assert_allclose(
+            mm_k.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4
+        )
+
+    def test_tiny(self):
+        a, b = randf(2, 3), randf(3, 4)
+        np.testing.assert_allclose(
+            mm_k.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4
+        )
+
+    def test_identity(self):
+        a = randf(64, 64)
+        eye = np.eye(64, dtype=np.float32)
+        np.testing.assert_allclose(mm_k.matmul(a, eye), a, rtol=1e-5, atol=1e-5)
+
+    def test_zeros(self):
+        a = randf(32, 32)
+        z = np.zeros((32, 32), np.float32)
+        np.testing.assert_allclose(mm_k.matmul(a, z), z, atol=0)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.sampled_from([8, 16, 48, 96, 128, 160]),
+        k=st.sampled_from([8, 32, 64, 96, 128]),
+        n=st.sampled_from([8, 16, 64, 128, 192]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_shape_sweep(self, m, k, n, seed):
+        r = np.random.default_rng(seed)
+        a = r.standard_normal((m, k)).astype(np.float32)
+        b = r.standard_normal((k, n)).astype(np.float32)
+        np.testing.assert_allclose(
+            mm_k.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-3, atol=1e-3
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        bm=st.sampled_from([16, 32, 64, 128]),
+        bn=st.sampled_from([16, 64, 128]),
+        bk=st.sampled_from([16, 32, 128]),
+    )
+    def test_block_config_sweep(self, bm, bn, bk):
+        """All legal BlockSpec tilings must agree with the oracle."""
+        a, b = randf(128, 128), randf(128, 128)
+        np.testing.assert_allclose(
+            mm_k.matmul(a, b, bm=bm, bn=bn, bk=bk),
+            ref.matmul_ref(a, b),
+            rtol=1e-3,
+            atol=1e-3,
+        )
+
+    def test_block_picker_divides(self):
+        for dim in (1, 2, 7, 96, 100, 128, 256, 300):
+            for want in (1, 16, 128, 999):
+                blk = mm_k._pick_block(dim, want)
+                assert dim % blk == 0 and 1 <= blk <= dim
+
+    def test_vmem_estimate_within_budget(self):
+        # Default tiles must fit comfortably in 16 MiB VMEM.
+        assert mm_k.vmem_bytes(2048, 2048, 2048) <= 16 * 2**20
+
+
+class TestCMatmul:
+    def test_matches_four_matmul_formula(self):
+        ar, ai = randf(96, 64), randf(96, 64)
+        br, bi = randf(64, 80), randf(64, 80)
+        gr, gi = mm_k.cmatmul(ar, ai, br, bi)
+        er, ei = ref.cmatmul_ref(ar, ai, br, bi)
+        np.testing.assert_allclose(gr, er, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(gi, ei, rtol=1e-3, atol=1e-3)
+
+    def test_real_only_inputs(self):
+        ar = randf(32, 32)
+        z = np.zeros_like(ar)
+        br = randf(32, 32)
+        gr, gi = mm_k.cmatmul(ar, z, br, z)
+        np.testing.assert_allclose(gr, ref.matmul_ref(ar, br), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(gi, np.zeros_like(ar), atol=1e-4)
+
+
+# ---------------------------------------------------------------- fft
+
+
+class TestFFT:
+    @pytest.mark.parametrize("n", [4, 16, 64, 256])
+    def test_fft1d_matches_oracle(self, n):
+        re, im = randf(8, n), randf(8, n)
+        gr, gi = fft_k.fft1d(re, im)
+        er, ei = ref.fft1d_ref(re, im)
+        np.testing.assert_allclose(gr, er, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(gi, ei, rtol=1e-3, atol=1e-3)
+
+    @pytest.mark.parametrize("n", [16, 64, 128])
+    def test_fft2d_matches_oracle(self, n):
+        re, im = randf(n, n), randf(n, n)
+        gr, gi = fft_k.fft2d(re, im)
+        er, ei = ref.fft2d_ref(re, im)
+        np.testing.assert_allclose(gr, er, rtol=1e-3, atol=2e-3)
+        np.testing.assert_allclose(gi, ei, rtol=1e-3, atol=2e-3)
+
+    def test_fft_of_impulse_is_flat(self):
+        n = 64
+        re = np.zeros((1, n), np.float32)
+        re[0, 0] = 1.0
+        im = np.zeros_like(re)
+        gr, gi = fft_k.fft1d(re, im)
+        np.testing.assert_allclose(gr, np.ones((1, n)), atol=1e-4)
+        np.testing.assert_allclose(gi, np.zeros((1, n)), atol=1e-4)
+
+    def test_fft_of_constant_is_impulse(self):
+        n = 64
+        re = np.ones((1, n), np.float32)
+        im = np.zeros_like(re)
+        gr, _ = fft_k.fft1d(re, im)
+        assert abs(gr[0, 0] - n) < 1e-3
+        np.testing.assert_allclose(gr[0, 1:], np.zeros(n - 1), atol=1e-3)
+
+    def test_parseval(self):
+        """Energy preservation: sum|X|^2 = n * sum|x|^2."""
+        n = 128
+        re, im = randf(4, n), randf(4, n)
+        gr, gi = fft_k.fft1d(re, im)
+        e_time = np.sum(re**2 + im**2, axis=1)
+        e_freq = np.sum(np.asarray(gr) ** 2 + np.asarray(gi) ** 2, axis=1)
+        np.testing.assert_allclose(e_freq, n * e_time, rtol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.sampled_from([4, 8, 12, 16, 36, 64, 100, 144, 256]),
+        batch=st.sampled_from([1, 3, 8]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_fft1d_shape_sweep(self, n, batch, seed):
+        r = np.random.default_rng(seed)
+        re = r.standard_normal((batch, n)).astype(np.float32)
+        im = r.standard_normal((batch, n)).astype(np.float32)
+        gr, gi = fft_k.fft1d(re, im)
+        er, ei = ref.fft1d_ref(re, im)
+        np.testing.assert_allclose(gr, er, rtol=1e-3, atol=2e-3)
+        np.testing.assert_allclose(gi, ei, rtol=1e-3, atol=2e-3)
+
+    def test_split_factors(self):
+        for n in (4, 16, 64, 100, 256, 2048):
+            n1, n2 = fft_k.split_factors(n)
+            assert n1 * n2 == n and n1 <= n2
+
+    def test_dft_matrix_unitary_scaled(self):
+        wr, wi = fft_k.dft_matrix(16)
+        w = wr + 1j * wi
+        np.testing.assert_allclose(
+            w @ w.conj().T, 16 * np.eye(16), atol=1e-4
+        )
+
+
+# ---------------------------------------------------------------- lu
+
+
+class TestLU:
+    @pytest.mark.parametrize("n", [8, 32, 64, 128])
+    def test_reconstruction(self, n):
+        a = diag_dominant(n)
+        packed = lu_k.lu_factor(a)
+        assert float(ref.lu_residual(a, packed)) < 1e-5
+
+    @pytest.mark.parametrize("n", [16, 64])
+    def test_matches_unblocked_oracle(self, n):
+        a = diag_dominant(n)
+        np.testing.assert_allclose(
+            lu_k.lu_factor(a), ref.lu_ref(a), rtol=1e-3, atol=1e-3
+        )
+
+    def test_identity_factors_to_identity(self):
+        eye = np.eye(32, dtype=np.float32)
+        np.testing.assert_allclose(lu_k.lu_factor(eye), eye, atol=1e-6)
+
+    def test_block_size_one_equals_unblocked(self):
+        a = diag_dominant(16)
+        np.testing.assert_allclose(
+            lu_k.lu_factor(a, block=1), ref.lu_ref(a), rtol=1e-3, atol=1e-3
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n=st.sampled_from([8, 24, 48, 64, 96]),
+        block=st.sampled_from([1, 4, 8, 16, 32]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_block_sweep(self, n, block, seed):
+        r = np.random.default_rng(seed)
+        a = r.standard_normal((n, n)).astype(np.float32) + n * np.eye(
+            n, dtype=np.float32
+        )
+        packed = lu_k.lu_factor(a, block=block)
+        assert float(ref.lu_residual(a, packed)) < 1e-4
+
+    def test_solve(self):
+        n = 64
+        a = diag_dominant(n)
+        rhs = randf(n, 8)
+        x = lu_k.lu_solve(a, rhs)
+        resid = np.linalg.norm(a @ np.asarray(x) - rhs) / np.linalg.norm(rhs)
+        assert resid < 1e-5
+
+    def test_solve_identity(self):
+        eye = np.eye(16, dtype=np.float32)
+        rhs = randf(16, 4)
+        np.testing.assert_allclose(lu_k.lu_solve(eye, rhs), rhs, atol=1e-6)
+
+    def test_lu_solve_matches_ref_solver(self):
+        n = 32
+        a = diag_dominant(n)
+        rhs = randf(n, 4)
+        packed = ref.lu_ref(a)
+        np.testing.assert_allclose(
+            lu_k.lu_solve(a, rhs),
+            ref.lu_solve_ref(packed, rhs),
+            rtol=1e-3,
+            atol=1e-3,
+        )

@@ -1,0 +1,303 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **winner combination** (paper §4.2: measure blocks individually,
+//!    then combine the winners and re-measure) vs individual-only — on a
+//!    two-block app (factor + solve).
+//! 2. **similarity threshold sweep** — precision/recall over a seeded
+//!    corpus of true copies and independent look-alikes (paper §3.4 B-2:
+//!    threshold chooses the operating point; independent code is out of
+//!    scope).
+//! 3. **FPGA candidate narrowing** (paper §3.2: intensity-rank + resource
+//!    pre-check before the multi-hour compiles) vs exhaustive compilation —
+//!    in simulated toolchain-hours on the virtual clock.
+//!
+//! Run: `cargo bench --bench ablations`
+
+use fbo::analysis;
+use fbo::coordinator::{Coordinator, VerifyConfig};
+use fbo::fpga;
+use fbo::metrics::{fmt_speedup, Table};
+use fbo::parser;
+use fbo::patterndb::{corpus, PatternDb};
+use fbo::similarity::{self, CharVector};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// App with two independent offloadable blocks: LU factor + solve.
+fn two_block_app(n: usize) -> String {
+    format!(
+        r#"
+int N = {n};
+void ludcmp(double a[], int n);
+void lubksb(double a[], int n, double b[], int nrhs);
+int main() {{
+    double a[N * N];
+    double b[N * 8];
+    int i, j;
+    for (i = 0; i < N; i++)
+        for (j = 0; j < N; j++)
+            a[i * N + j] = 0.2 * sin(0.01 * (i * j + 1));
+    for (i = 0; i < N; i++) a[i * N + i] = a[i * N + i] + N;
+    for (i = 0; i < N * 8; i++) b[i] = 1.0 + i % 5;
+    ludcmp(a, N);
+    lubksb(a, N, b, 8);
+    double s = 0.0;
+    for (i = 0; i < N * 8; i++) s += b[i];
+    printf("sum %g\n", s);
+    return s;
+}}
+"#
+    )
+}
+
+fn ablation_combination() -> anyhow::Result<()> {
+    println!("== ablation 1: winner combination (paper's two-phase search) ==");
+    let mut c = Coordinator::open(&artifacts_dir())?;
+    c.verify = VerifyConfig { reps: 3, ..Default::default() };
+    let n = 64;
+    // NOTE: lubksb re-factors inside the artifact (lu_solve = getrf+getrs
+    // fused), so the combined pattern must still win over each individual.
+    let report = c.offload(&two_block_app(n), "main")?;
+    let mut t = Table::new(&["pattern", "speedup", "correct"]);
+    for p in &report.outcome.tried {
+        t.row(&[p.label.clone(), format!("{}x", fmt_speedup(p.speedup)), p.output_ok.to_string()]);
+    }
+    print!("{}", t.render());
+    let combined = report
+        .outcome
+        .tried
+        .iter()
+        .find(|p| p.label == "combined-winners");
+    match combined {
+        Some(p) => {
+            let best_individual = report
+                .outcome
+                .tried
+                .iter()
+                .filter(|q| q.label != "combined-winners")
+                .map(|q| q.speedup)
+                .fold(0.0f64, f64::max);
+            println!(
+                "combined {}x vs best individual {}x -> combination {}",
+                fmt_speedup(p.speedup),
+                fmt_speedup(best_individual),
+                if p.speedup > best_individual { "WINS (kept)" } else { "loses (discarded)" }
+            );
+        }
+        None => println!("(fewer than two individual winners; combination phase skipped)"),
+    }
+    Ok(())
+}
+
+fn ablation_threshold() -> anyhow::Result<()> {
+    println!("\n== ablation 2: similarity threshold sweep ==");
+    let db = PatternDb::builtin();
+
+    // Seeded corpus: true copies (renamed/edited NR code) and independent
+    // numeric functions that merely look similar.
+    let true_copies = [
+        corpus::NR_LUDCMP.replace("ludcmp_nopiv", "my_lu").replace("factor", "f0"),
+        corpus::NR_MATMUL.replace("matmul_cpu", "mm_fast").replace("sum", "acc"),
+        corpus::NR_LUDCMP_2D.replace("ludcmp_grid", "grid_fact").replace("pivot", "pp"),
+    ];
+    let independents = [
+        // Jacobi sweep: loopy numeric code, but not a copy of anything.
+        "void jacobi(double x[], double b[], double a[], int n) {
+            int i, j, it;
+            double s;
+            for (it = 0; it < 10; it++) {
+                for (i = 0; i < n; i++) {
+                    s = b[i];
+                    for (j = 0; j < n; j++) {
+                        if (j != i) s -= a[i * n + j] * x[j];
+                    }
+                    x[i] = s / a[i * n + i];
+                }
+            }
+        }"
+        .to_string(),
+        // Histogram: different shape entirely.
+        "void hist(double v[], int n, double h[], int bins) {
+            int i; int b;
+            for (i = 0; i < n; i++) {
+                b = (int) (v[i] * bins);
+                if (b >= 0) { if (b < bins) { h[b] += 1.0; } }
+            }
+        }"
+        .to_string(),
+        // Dot product chain.
+        "double chain(double a[], double b[], double c[], int n) {
+            int i; double s1 = 0.0; double s2 = 0.0;
+            for (i = 0; i < n; i++) s1 += a[i] * b[i];
+            for (i = 0; i < n; i++) s2 += b[i] * c[i];
+            return s1 * s2;
+        }"
+        .to_string(),
+    ];
+
+    let mut t = Table::new(&["threshold", "recall (copies)", "false pos (independent)"]);
+    for threshold in [0.70, 0.80, 0.85, 0.90, 0.95] {
+        let det = similarity::Detector::new(&db, threshold)?;
+        let mut hit = 0;
+        for src in &true_copies {
+            let prog = parser::parse(src)?;
+            if !det.detect(&prog).is_empty() {
+                hit += 1;
+            }
+        }
+        let mut fp = 0;
+        for src in &independents {
+            let prog = parser::parse(src)?;
+            if !det.detect(&prog).is_empty() {
+                fp += 1;
+            }
+        }
+        t.row(&[
+            format!("{threshold:.2}"),
+            format!("{hit}/{}", true_copies.len()),
+            format!("{fp}/{}", independents.len()),
+        ]);
+        if (threshold - similarity::DEFAULT_THRESHOLD).abs() < 1e-9 {
+            assert_eq!(hit, true_copies.len(), "default threshold must catch all copies");
+        }
+    }
+    print!("{}", t.render());
+    println!(
+        "(paper: copies are in scope, independently-written code is out; count-vector
+         similarity CAN false-positive on look-alike kernels — Jacobi scores ~0.94 vs
+         the GEMM record. The measured verification phase is the safety net:)"
+    );
+
+    // Demonstrate the safety net end-to-end: a Jacobi app gets (wrongly)
+    // matched, the bogus replacement produces wrong output, and the
+    // verification environment rejects the pattern.
+    let mut c = Coordinator::open(&artifacts_dir())?;
+    c.verify = VerifyConfig { reps: 1, ..Default::default() };
+    let jacobi_app = format!(
+        "{}\nint main() {{\n    double x[64]; double b[64]; double a[64 * 64];\n    int i;\n    for (i = 0; i < 64; i++) {{ x[i] = 0.0; b[i] = 1.0; }}\n    for (i = 0; i < 64 * 64; i++) a[i] = 0.01;\n    for (i = 0; i < 64; i++) a[i * 64 + i] = 64.0;\n    jacobi(x, b, a, 64);\n    double s = 0.0;\n    for (i = 0; i < 64; i++) s += x[i];\n    return s;\n}}",
+        independents[0]
+    );
+    let report = c.offload(&jacobi_app, "main")?;
+    let any_false_match = report.blocks.iter().any(|b| {
+        matches!(&b.via, fbo::coordinator::DiscoveryPath::Similarity { .. })
+    });
+    let verified_win = report
+        .outcome
+        .tried
+        .iter()
+        .any(|p| p.speedup > 1.0 && p.output_ok && report.outcome.best_enabled.iter().any(|&e| e));
+    println!(
+        "jacobi app: similarity false-match = {any_false_match}; verification kept a wrong          pattern = {}",
+        verified_win && any_false_match
+    );
+    if any_false_match {
+        assert!(
+            report.outcome.tried.iter().all(|p| p.output_ok || p.speedup == 0.0 || !p.output_ok),
+            "bookkeeping"
+        );
+        // The wrongly-matched pattern must NOT be selected as the winner.
+        let selected_wrong = report
+            .outcome
+            .tried
+            .iter()
+            .any(|p| !p.output_ok && p.enabled == report.outcome.best_enabled && p.speedup > 1.0);
+        assert!(!selected_wrong, "verification must reject incorrect patterns");
+    }
+    Ok(())
+}
+
+fn ablation_fpga_narrowing() -> anyhow::Result<()> {
+    println!("\n== ablation 3: FPGA candidate narrowing vs exhaustive compiles ==");
+    // Loop candidates from the (linked) LU app: rank by arithmetic
+    // intensity, then compile top-k on the simulated 3h-per-compile chain.
+    let c = Coordinator::open(&artifacts_dir())?;
+    let prog = parser::parse(&fbo::coordinator::apps::lu_app_lib(64))?;
+    let linked = c.link_cpu_libraries(&prog)?;
+    let a = analysis::analyze(&linked);
+
+    let mut specs = Vec::new();
+    let mut intensity = Vec::new();
+    for (i, l) in a.loops.iter().enumerate() {
+        // Reconstruct the loop stmt for intensity from the inventory data.
+        let trips = l.nest_trip_count.unwrap_or(1000);
+        let flops = (l.body_stmts as u64).max(1) * 2;
+        let report = fbo::analysis::IntensityReport {
+            flops_per_iter: flops,
+            mem_per_iter: (l.body_stmts as u64).max(1),
+            trips: Some(trips),
+            ratio: 2.0,
+            score: 2.0 * trips as f64,
+        };
+        specs.push(fbo::fpga::KernelSpec {
+            name: format!("loop{i}@{}", l.span),
+            resources: fpga::estimate_loop_resources(&report, 4),
+            trips,
+            ii: 1,
+            transfer_bytes: 64 * 64 * 8,
+        });
+        intensity.push(report.score);
+    }
+
+    // Narrowed: top-2 by intensity with pre-check.
+    let narrowed = fpga::HlsCompiler::new(fpga::ARRIA10_GX);
+    let picked = fpga::narrow_and_compile(&narrowed, &specs, &intensity, 2);
+    // Exhaustive: compile everything.
+    let exhaustive = fpga::HlsCompiler::new(fpga::ARRIA10_GX);
+    let mut all = Vec::new();
+    for s in &specs {
+        if let Ok(k) = exhaustive.compile(s) {
+            all.push(k);
+        }
+    }
+
+    let mut t = Table::new(&["strategy", "compiles", "simulated toolchain-hours", "best exec (model)"]);
+    t.row(&[
+        "narrowed (paper)".into(),
+        picked.len().to_string(),
+        format!("{:.1}", narrowed.clock.elapsed_hours()),
+        picked
+            .first()
+            .map(|k| format!("{:.2}ms", k.exec_secs() * 1e3))
+            .unwrap_or_else(|| "-".into()),
+    ]);
+    t.row(&[
+        "exhaustive".into(),
+        all.len().to_string(),
+        format!("{:.1}", exhaustive.clock.elapsed_hours()),
+        all.iter()
+            .map(|k| k.exec_secs())
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+            .map(|s| format!("{:.2}ms", s * 1e3))
+            .unwrap_or_else(|| "-".into()),
+    ]);
+    print!("{}", t.render());
+    assert!(
+        narrowed.clock.elapsed_hours() < exhaustive.clock.elapsed_hours(),
+        "narrowing must save simulated toolchain time"
+    );
+    println!("(paper: compiles take ~3h each, so candidates are narrowed before compiling)");
+    Ok(())
+}
+
+/// Bonus sanity sweep: characteristic vectors are rename-invariant.
+fn ablation_vector_invariance() -> anyhow::Result<()> {
+    println!("\n== ablation 4: characteristic-vector rename invariance ==");
+    let orig = CharVector::from_source_merged(corpus::NR_MATMUL)?;
+    let renamed = CharVector::from_source_merged(
+        &corpus::NR_MATMUL.replace("matmul_cpu", "zzz").replace("sum", "q"),
+    )?;
+    let sim = similarity::similarity(&orig, &renamed);
+    println!("similarity(original, renamed) = {sim:.4}");
+    assert!(sim > 0.999, "pure renames must not move the vector");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    ablation_combination()?;
+    ablation_threshold()?;
+    ablation_fpga_narrowing()?;
+    ablation_vector_invariance()?;
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Bench: regenerate **Fig. 4** — GA generations vs best speedup for the
+//! Fourier-transform app under loop offloading (prior work [33]).
+//!
+//! Paper series: best-of-generation climbs past 5x vs all-CPU on the 2048
+//! FFT app. We print the same series measured on our verification
+//! environment. Set `FBO_N` (default 64) and `FBO_GENS` (default 10).
+//!
+//! Run: `cargo bench --bench fig4_ga_generations`
+
+use fbo::coordinator::{apps, loop_offload, Coordinator};
+use fbo::ga::GaConfig;
+use fbo::metrics::Table;
+use fbo::parser;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = env_usize("FBO_N", 64);
+    let gens = env_usize("FBO_GENS", 10);
+    let artifacts =
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let coordinator = Coordinator::open(&artifacts)?;
+
+    println!("== Fig. 4: GA loop-offload search, FFT app (n={n}, {gens} generations) ==");
+    let prog = parser::parse(&apps::fft_app_lib(n))?;
+    let linked = coordinator.link_cpu_libraries(&prog)?;
+    let cfg = GaConfig { population: 12, generations: gens, ..Default::default() };
+    let r = loop_offload::ga_loop_search(&linked, "main", &cfg, 1, u64::MAX)?;
+
+    let mut t = Table::new(&["generation", "best speedup", "mean speedup", "trials"]);
+    for g in &r.ga.history {
+        t.row(&[
+            g.generation.to_string(),
+            format!("{:.2}", g.best_speedup),
+            format!("{:.2}", g.mean_speedup),
+            g.trials.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "final best: {:.2}x ({} parallelizable-loop genes, {} measured trials)",
+        r.ga.best_speedup(),
+        r.loop_ids.len(),
+        r.ga.trials
+    );
+    println!("paper reference: >5x by the final generations on the 2048 app.");
+    println!(
+        "NOTE: on NR-structured code our loop baseline under-credits [33] — its\n\
+         data-transfer-reduction optimization is not modeled (DESIGN.md), so the\n\
+         FFT app tops out low. The mechanism itself is shown on a loop-friendly\n\
+         stencil workload below."
+    );
+
+    // Shape assertions (the bench doubles as a regression gate).
+    assert!(!r.ga.history.is_empty());
+    let first = r.ga.history.first().unwrap().best_speedup;
+    let last = r.ga.history.last().unwrap().best_speedup;
+    assert!(last >= first, "GA best must be monotone");
+    assert!(last >= 1.0, "GA must never end below the all-CPU baseline");
+
+    // Part 2: the same GA on a loop-offload-friendly stencil app — mixed
+    // genes (3 big wins, 4 launch-bound losers) give the classic rising
+    // curve of Fig. 4.
+    println!("\n== Fig. 4 (mechanism): GA on the stencil app (n={n}) ==");
+    let prog2 = parser::parse(&apps::stencil_app(n.max(96)))?;
+    let cfg2 = GaConfig {
+        population: 10,
+        generations: gens,
+        mutation_rate: 0.08,
+        ..Default::default()
+    };
+    let r2 = loop_offload::ga_loop_search(&prog2, "main", &cfg2, 1, u64::MAX)?;
+    let mut t2 = Table::new(&["generation", "best speedup", "mean speedup", "trials"]);
+    for g in &r2.ga.history {
+        t2.row(&[
+            g.generation.to_string(),
+            format!("{:.2}", g.best_speedup),
+            format!("{:.2}", g.mean_speedup),
+            g.trials.to_string(),
+        ]);
+    }
+    print!("{}", t2.render());
+    println!(
+        "final best: {:.2}x with gene {:?} ({} genes)",
+        r2.ga.best_speedup(),
+        r2.ga.best_gene,
+        r2.loop_ids.len()
+    );
+    assert!(
+        r2.ga.best_speedup() > 3.0,
+        "stencil loop offload must exceed 3x, got {:.2}",
+        r2.ga.best_speedup()
+    );
+    Ok(())
+}

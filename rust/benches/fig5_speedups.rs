@@ -1,0 +1,170 @@
+//! Bench: regenerate **Fig. 5** — the headline table: speedup vs all-CPU
+//! for loop offloading [33] vs function-block offloading (this paper), on
+//! the Fourier-transform and matrix-calculation applications.
+//!
+//! Paper values (2048, Quadro P4000):
+//!   Fourier transform:  5.4x (loops)  ->    730x (function blocks)
+//!   Matrix calculation:  38x (loops)  -> 130000x (function blocks)
+//!
+//! We do not chase the absolute numbers (our CPU substrate is an AST
+//! interpreter, not gcc on a Core i5) — the *shape* is the claim: function
+//! blocks beat loop offloading by orders of magnitude and the matrix gap
+//! is the larger one. `FBO_N` (default 64; 256 = headline run).
+//!
+//! Run: `cargo bench --bench fig5_speedups`
+
+use std::time::Instant;
+
+use fbo::coordinator::{apps, loop_offload, Coordinator};
+use fbo::ga::GaConfig;
+use fbo::interp::{Interp, Slice, Value};
+use fbo::metrics::{fmt_duration, fmt_speedup, Table};
+use fbo::parser;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = env_usize("FBO_N", 64);
+    let artifacts =
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut coordinator = Coordinator::open(&artifacts)?;
+    coordinator.verify.reps = if n >= 256 { 1 } else { 3 };
+
+    println!("== Fig. 5: speedup vs all-CPU (n={n}) ==");
+    let cases = [
+        ("Fourier transform", apps::fft_app_lib(n), (5.4, 730.0)),
+        ("Matrix calculation", apps::lu_app_lib(n), (38.0, 130_000.0)),
+    ];
+
+    let mut t = Table::new(&[
+        "application",
+        "all-CPU time",
+        "loop offload [33]",
+        "function blocks",
+        "paper (loops -> blocks)",
+    ]);
+
+    let mut shape = Vec::new();
+    for (label, src, paper) in &cases {
+        eprintln!("-- {label} --");
+        let report = coordinator.offload(src, "main")?;
+        let prog = parser::parse(src)?;
+        let linked = coordinator.link_cpu_libraries(&prog)?;
+        let ga_cfg = GaConfig {
+            population: 10,
+            generations: if n >= 256 { 5 } else { 8 },
+            ..Default::default()
+        };
+        let ga = loop_offload::ga_loop_search(&linked, "main", &ga_cfg, 1, u64::MAX)?;
+        t.row(&[
+            label.to_string(),
+            fmt_duration(report.outcome.baseline.median),
+            format!("{}x", fmt_speedup(ga.ga.best_speedup())),
+            format!("{}x", fmt_speedup(report.best_speedup())),
+            format!("{}x -> {}x", paper.0, paper.1),
+        ]);
+        shape.push((label, ga.ga.best_speedup(), report.best_speedup()));
+    }
+    print!("{}", t.render());
+
+    // Shape gates.
+    for (label, loops, blocks) in &shape {
+        assert!(
+            blocks > loops,
+            "{label}: function blocks ({blocks:.1}x) must beat loop offload ({loops:.1}x)"
+        );
+    }
+    let fft_gap = shape[0].2 / shape[0].1.max(1.0);
+    let lu_gap = shape[1].2 / shape[1].1.max(1.0);
+    println!(
+        "\nshape: FFT block/loop gap {fft_gap:.1}x, matrix gap {lu_gap:.1}x \
+         (paper: 135x and 3421x — matrix gap larger)"
+    );
+
+    // ---- block-level measurement (the paper's granularity) ----------
+    // §5.1.2 measures the *processing time of the transform itself*
+    // (cuFFT vs the NR code), not the surrounding data generation. Here:
+    // CPU = interpreting the linked NR routine on prepared data, GPU =
+    // executing the PJRT artifact on the same data.
+    println!("\n== block processing time (paper's measurement granularity) ==");
+    let mut t2 = Table::new(&["block", "CPU (NR interp)", "accel artifact", "speedup", "paper"]);
+
+    // FFT block.
+    {
+        // A call site is needed for the analyzer to treat fft2d as an
+        // external library (linking is call-driven).
+        let lib_src = "void fft2d(double re[], double im[], int n);
+                       void use_it(double re[], double im[], int n) { fft2d(re, im, n); }";
+        let prog = parser::parse(lib_src)?;
+        let linked = coordinator.link_cpu_libraries(&prog)?;
+        let mut interp = Interp::new(&linked)?;
+        let re = Slice::zeros(&[n * n], false);
+        let im = Slice::zeros(&[n * n], false);
+        for i in 0..n * n {
+            re.set(i, (0.02 * i as f64).sin()).unwrap();
+        }
+        let t0 = Instant::now();
+        interp.run("fft2d", &[Value::Arr(re.clone()), Value::Arr(im.clone()), Value::Int(n as i64)])?;
+        let cpu = t0.elapsed();
+
+        let art = format!("fft2d_n{n}");
+        coordinator.engine.artifact(&art)?; // compile outside timing
+        let re32 = re.to_vec_f32();
+        let im32 = im.to_vec_f32();
+        let mut best = f64::MAX;
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            coordinator.engine.execute(&art, &[re32.clone(), im32.clone()])?;
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        let speed = cpu.as_secs_f64() / best;
+        t2.row(&[
+            "Fourier transform".into(),
+            fmt_duration(cpu),
+            format!("{:.2}ms", best * 1e3),
+            format!("{}x", fmt_speedup(speed)),
+            "730x".into(),
+        ]);
+    }
+
+    // LU block.
+    {
+        let lib_src = "void ludcmp(double a[], int n);
+                       void use_it(double a[], int n) { ludcmp(a, n); }";
+        let prog = parser::parse(lib_src)?;
+        let linked = coordinator.link_cpu_libraries(&prog)?;
+        let mut interp = Interp::new(&linked)?;
+        let a = Slice::zeros(&[n * n], false);
+        for i in 0..n {
+            for j in 0..n {
+                a.set(i * n + j, if i == j { n as f64 } else { 0.2 }).unwrap();
+            }
+        }
+        let a_cpu = Slice::new(a.to_vec(), vec![n * n], false);
+        let t0 = Instant::now();
+        interp.run("ludcmp", &[Value::Arr(a_cpu), Value::Int(n as i64)])?;
+        let cpu = t0.elapsed();
+
+        let art = format!("lu_factor_n{n}");
+        coordinator.engine.artifact(&art)?;
+        let a32 = a.to_vec_f32();
+        let mut best = f64::MAX;
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            coordinator.engine.execute(&art, &[a32.clone()])?;
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        let speed = cpu.as_secs_f64() / best;
+        t2.row(&[
+            "Matrix calculation".into(),
+            fmt_duration(cpu),
+            format!("{:.2}ms", best * 1e3),
+            format!("{}x", fmt_speedup(speed)),
+            "130000x".into(),
+        ]);
+    }
+    print!("{}", t2.render());
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Micro-bench: front-end throughput (parse + analyze), L3 substrate.
+//!
+//! The coordinator's Step 1 must stay negligible next to the measured
+//! verification trials; this bench tracks lines/second for parsing and
+//! full analysis over a synthetic NR-style corpus.
+//!
+//! Run: `cargo bench --bench parser_throughput`
+
+use std::time::Instant;
+
+use fbo::metrics::Table;
+use fbo::patterndb::corpus;
+use fbo::{analysis, parser};
+
+fn big_source(copies: usize) -> String {
+    let mut src = String::new();
+    for i in 0..copies {
+        src.push_str(
+            &corpus::NR_FFT2D
+                .replace("four1", &format!("four1_{i}"))
+                .replace("fft2d_cpu", &format!("fft2d_cpu_{i}")),
+        );
+        src.push_str(
+            &corpus::NR_LUDCMP.replace("ludcmp_nopiv", &format!("ludcmp_{i}")),
+        );
+        src.push_str(&corpus::NR_MATMUL.replace("matmul_cpu", &format!("mm_{i}")));
+    }
+    src
+}
+
+fn main() -> anyhow::Result<()> {
+    // Recursive-descent parsing of a very large unit wants stack room;
+    // run the bench body on a thread with an explicit 64 MiB stack.
+    std::thread::Builder::new()
+        .stack_size(64 << 20)
+        .spawn(run)?
+        .join()
+        .expect("bench thread")
+}
+
+fn run() -> anyhow::Result<()> {
+    let mut t = Table::new(&["corpus", "lines", "parse", "analyze", "KLoC/s (parse)"]);
+    for copies in [1usize, 8, 32] {
+        let src = big_source(copies);
+        let lines = src.lines().count();
+
+        let t0 = Instant::now();
+        let mut prog = None;
+        for _ in 0..5 {
+            prog = Some(parser::parse(&src)?);
+        }
+        let parse_t = t0.elapsed() / 5;
+
+        let prog = prog.unwrap();
+        let t0 = Instant::now();
+        for _ in 0..5 {
+            let _ = analysis::analyze(&prog);
+        }
+        let analyze_t = t0.elapsed() / 5;
+
+        t.row(&[
+            format!("{copies}x NR set"),
+            lines.to_string(),
+            format!("{:.2?}", parse_t),
+            format!("{:.2?}", analyze_t),
+            format!("{:.0}", lines as f64 / parse_t.as_secs_f64() / 1e3),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}

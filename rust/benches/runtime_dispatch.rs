@@ -1,0 +1,78 @@
+//! Micro-bench: PJRT dispatch hot path (L3 -> artifact -> L3).
+//!
+//! Times per-call latency and effective bandwidth of each artifact with
+//! inputs staged exactly as the host glue stages them (f64 interpreter
+//! buffers -> f32 literals -> execute -> f32 -> f64 write-back is the
+//! end-to-end cost a function-block call pays).
+//!
+//! Run: `cargo bench --bench runtime_dispatch`
+
+use std::time::Instant;
+
+use fbo::interp::{Slice, Value};
+use fbo::metrics::Table;
+use fbo::patterndb::PatternDb;
+use fbo::runtime::Engine;
+use fbo::transform::glue;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts =
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = Engine::open(&artifacts)?;
+    let db = PatternDb::builtin();
+
+    let mut t = Table::new(&["artifact", "reps", "median/call", "MB moved/call", "GB/s"]);
+
+    // Raw engine dispatch per artifact.
+    for name in engine.artifact_names() {
+        let meta = engine.meta(&name).unwrap().clone();
+        let inputs: Vec<Vec<f32>> = meta
+            .inputs
+            .iter()
+            .map(|s| {
+                let mut v = vec![0.5f32; s.elems()];
+                // Keep LU-ish inputs well-conditioned.
+                let n = s.shape[0];
+                if s.shape.len() == 2 && s.shape[0] == s.shape[1] {
+                    for i in 0..n {
+                        v[i * n + i] = n as f32;
+                    }
+                }
+                v
+            })
+            .collect();
+        engine.execute(&name, &inputs)?; // warm (compile)
+        let reps = 20;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            engine.execute(&name, &inputs)?;
+        }
+        let per = t0.elapsed() / reps;
+        let bytes: usize = meta.inputs.iter().map(|s| s.elems() * 4).sum::<usize>()
+            + meta.outputs.iter().map(|s| s.elems() * 4).sum::<usize>();
+        t.row(&[
+            name.clone(),
+            reps.to_string(),
+            format!("{:.2?}", per),
+            format!("{:.2}", bytes as f64 / 1e6),
+            format!("{:.2}", bytes as f64 / per.as_secs_f64() / 1e9),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // Full glue path (what an interpreted call site pays).
+    println!("\nhost-glue end-to-end (f64 slices -> artifact -> write-back):");
+    let repl = &db.find_library("fft2d").unwrap().replacement;
+    let f = glue::build_external(engine.clone(), repl)?;
+    let n = 64usize;
+    let re = Slice::zeros(&[n, n], false);
+    let im = Slice::zeros(&[n, n], false);
+    f(&[Value::Arr(re.clone()), Value::Arr(im.clone()), Value::Int(n as i64)])?; // warm
+    let reps = 50;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f(&[Value::Arr(re.clone()), Value::Arr(im.clone()), Value::Int(n as i64)])?;
+    }
+    println!("  __fb_fft2d n=64: {:.2?}/call", t0.elapsed() / reps);
+    Ok(())
+}

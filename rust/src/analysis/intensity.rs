@@ -1,0 +1,149 @@
+//! Arithmetic-intensity estimation.
+//!
+//! The paper's FPGA path narrows offload candidates with an "arithmetic
+//! intensity analysis tool" (§3.4 B / §2): high-intensity loops amortize
+//! the transfer and reconfiguration cost of the device. We compute the
+//! classic proxy: arithmetic operations per memory access, scaled by the
+//! estimated trip count — entirely static, from the AST.
+
+use crate::parser::ast::*;
+
+/// Static intensity report for a loop (nest).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct IntensityReport {
+    /// Arithmetic ops (+,-,*,/,% and math calls) per iteration.
+    pub flops_per_iter: u64,
+    /// Array element reads+writes per iteration.
+    pub mem_per_iter: u64,
+    /// Estimated total iterations of the nest (None = symbolic bounds).
+    pub trips: Option<u64>,
+    /// flops / mem ratio (0 when no memory traffic).
+    pub ratio: f64,
+    /// ratio × trips — the ranking score used for FPGA narrowing.
+    pub score: f64,
+}
+
+/// Count one expression node (callers walk the tree; `walk_exprs` visits
+/// every node exactly once).
+fn count_node(n: &Expr, flops: &mut u64, mem: &mut u64) {
+    match &n.kind {
+        ExprKind::Binary(op, ..) if op.is_arith() => *flops += 1,
+        ExprKind::Call(name, _)
+            if crate::interp::builtins::math1(name).is_some()
+                || crate::interp::builtins::math2(name).is_some() =>
+        {
+            // A libm call is several flops; 4 is the conventional proxy.
+            *flops += 4;
+        }
+        // Count one access per index *chain*: only the innermost link
+        // (whose base is not itself an Index) so a[i][j] counts once.
+        ExprKind::Index(base, _) if !matches!(base.kind, ExprKind::Index(..)) => {
+            *mem += 1;
+        }
+        _ => {}
+    }
+}
+
+/// Compute the intensity report for a `for` statement.
+pub fn intensity_of_loop(s: &Stmt) -> IntensityReport {
+    let StmtKind::For { body, .. } = &s.kind else {
+        return IntensityReport::default();
+    };
+    let mut flops = 0u64;
+    let mut mem = 0u64;
+    // Count the innermost body once (per-iteration cost of the nest).
+    let mut cur: &Stmt = body;
+    loop {
+        let inner = match &cur.kind {
+            StmtKind::For { body, .. } => Some(body.as_ref()),
+            StmtKind::Block(stmts) if stmts.len() == 1 => match &stmts[0].kind {
+                StmtKind::For { body, .. } => Some(body.as_ref()),
+                _ => None,
+            },
+            _ => None,
+        };
+        match inner {
+            Some(b) => cur = b,
+            None => break,
+        }
+    }
+    cur.walk_exprs(&mut |e| count_node(e, &mut flops, &mut mem));
+
+    let trips = super::loops::nest_trip_count(s);
+    let ratio = if mem == 0 { flops as f64 } else { flops as f64 / mem as f64 };
+    let score = ratio * trips.unwrap_or(1) as f64;
+    IntensityReport { flops_per_iter: flops, mem_per_iter: mem, trips, ratio, score }
+}
+
+/// Rank loops by intensity score, highest first (FPGA narrowing order).
+pub fn rank_by_intensity<'a>(loops: &[&'a Stmt]) -> Vec<(&'a Stmt, IntensityReport)> {
+    let mut v: Vec<(&Stmt, IntensityReport)> =
+        loops.iter().map(|s| (*s, intensity_of_loop(s))).collect();
+    v.sort_by(|a, b| b.1.score.partial_cmp(&a.1.score).unwrap());
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parser::parse;
+
+    fn first_loop(src: &str) -> Stmt {
+        let prog = parse(src).unwrap();
+        let f = prog.functions().next().unwrap();
+        let mut found = None;
+        f.body.as_ref().unwrap().walk(&mut |s| {
+            if matches!(s.kind, StmtKind::For { .. }) && found.is_none() {
+                found = Some(s.clone());
+            }
+        });
+        found.unwrap()
+    }
+
+    #[test]
+    fn counts_flops_and_mem() {
+        let l = first_loop(
+            "void f(double a[], double b[]) { for (int i = 0; i < 100; i++) a[i] = b[i] * 2.0 + 1.0; }",
+        );
+        let r = intensity_of_loop(&l);
+        assert_eq!(r.flops_per_iter, 2); // * and +
+        assert_eq!(r.mem_per_iter, 2); // a[i], b[i]
+        assert_eq!(r.trips, Some(100));
+        assert!(r.score > 0.0);
+    }
+
+    #[test]
+    fn math_calls_weighted() {
+        let l = first_loop(
+            "void f(double a[]) { for (int i = 0; i < 10; i++) a[i] = sin(a[i]); }",
+        );
+        let r = intensity_of_loop(&l);
+        assert!(r.flops_per_iter >= 4);
+    }
+
+    #[test]
+    fn nest_counts_inner_body_with_product_trips() {
+        let l = first_loop(
+            "void f(double c[][32], double a[][32], double b[][32]) {
+                for (int i = 0; i < 32; i++)
+                    for (int j = 0; j < 32; j++)
+                        c[i][j] = a[i][j] + b[i][j];
+            }",
+        );
+        let r = intensity_of_loop(&l);
+        assert_eq!(r.trips, Some(1024));
+        assert_eq!(r.mem_per_iter, 3);
+    }
+
+    #[test]
+    fn ranking_prefers_denser_loops() {
+        let small = first_loop(
+            "void f(double a[]) { for (int i = 0; i < 4; i++) a[i] = a[i] + 1.0; }",
+        );
+        let big = first_loop(
+            "void g(double a[]) { for (int i = 0; i < 10000; i++) a[i] = sin(a[i]) * cos(a[i]); }",
+        );
+        let ranked = rank_by_intensity(&[&small, &big]);
+        assert_eq!(ranked[0].1.trips, Some(10000));
+    }
+}

@@ -1,0 +1,254 @@
+//! Loop inventory + parallelizability classification.
+//!
+//! The paper's loop baseline first narrows to *parallelizable* loops (a
+//! compiler can prove the negative, not the positive — §3.2), then lets the
+//! GA search over them. Our classifier asks the same question the bulk
+//! executor will: does this loop (nest) compile to an offloadable form, and
+//! if so is it elementwise or a reduction?
+
+use crate::interp::offload_exec;
+use crate::parser::ast::*;
+use crate::parser::Span;
+
+/// Parallelizability class of a `for` loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopClass {
+    /// Independent iterations writing arrays (maps to `acc kernels`).
+    Elementwise,
+    /// Scalar accumulation (maps to `acc parallel reduction`).
+    Reduction,
+    /// Loop-carried dependence / unsupported shape — CPU only.
+    Sequential,
+}
+
+/// One `for` loop in the program.
+#[derive(Debug, Clone)]
+pub struct LoopInfo {
+    pub id: NodeId,
+    pub span: Span,
+    pub in_function: String,
+    /// 0 = outermost loop of a nest.
+    pub depth: usize,
+    pub class: LoopClass,
+    /// Static trip-count estimate of this loop alone (constant bounds), or
+    /// None when bounds are symbolic.
+    pub trip_count: Option<u64>,
+    /// Trip count of the whole nest rooted here (product over levels that
+    /// have constant bounds).
+    pub nest_trip_count: Option<u64>,
+    /// Statements in the body (size proxy).
+    pub body_stmts: usize,
+    /// True when an enclosing loop is itself offloadable — offloading the
+    /// ancestor subsumes this loop, so it is not a separate GA gene.
+    pub inside_offloadable: bool,
+}
+
+/// Classify one `for` statement by probing the bulk-executor compiler —
+/// the single source of truth for "can the verification environment
+/// actually offload this".
+pub fn classify_loop(s: &Stmt) -> LoopClass {
+    match offload_exec::compile_loop(s) {
+        None => LoopClass::Sequential,
+        Some(c) => {
+            if c.reductions.is_empty() {
+                LoopClass::Elementwise
+            } else {
+                LoopClass::Reduction
+            }
+        }
+    }
+}
+
+/// Constant-fold a trip count from `for (i = a; i < b; i += c)` when all
+/// three are integer literals.
+pub fn estimate_trip_count(s: &Stmt) -> Option<u64> {
+    let StmtKind::For { init, cond, step, .. } = &s.kind else {
+        return None;
+    };
+    let lo = match init.as_deref() {
+        Some(Stmt { kind: StmtKind::Decl(ds), .. }) if ds.len() == 1 => {
+            const_int(ds[0].init.as_ref()?)?
+        }
+        Some(Stmt { kind: StmtKind::Expr(e), .. }) => match &e.kind {
+            ExprKind::Assign(AssignOp::Set, _, r) => const_int(r)?,
+            _ => return None,
+        },
+        _ => return None,
+    };
+    let (hi, inclusive) = match cond.as_ref()? {
+        Expr { kind: ExprKind::Binary(op @ (BinOp::Lt | BinOp::Le), _, b), .. } => {
+            (const_int(b)?, matches!(op, BinOp::Le))
+        }
+        _ => return None,
+    };
+    let by = match step.as_ref()? {
+        Expr { kind: ExprKind::PostIncDec(_, true), .. }
+        | Expr { kind: ExprKind::Unary(UnOp::PreInc, _), .. } => 1,
+        Expr { kind: ExprKind::Assign(AssignOp::Add, _, r), .. } => const_int(r)?,
+        _ => return None,
+    };
+    if by <= 0 {
+        return None;
+    }
+    let end = if inclusive { hi + 1 } else { hi };
+    if end <= lo {
+        return Some(0);
+    }
+    Some(((end - lo + by - 1) / by) as u64)
+}
+
+fn const_int(e: &Expr) -> Option<i64> {
+    match &e.kind {
+        ExprKind::IntLit(v) => Some(*v),
+        ExprKind::Unary(UnOp::Neg, inner) => Some(-const_int(inner)?),
+        ExprKind::Binary(op, a, b) => {
+            let (x, y) = (const_int(a)?, const_int(b)?);
+            Some(match op {
+                BinOp::Add => x + y,
+                BinOp::Sub => x - y,
+                BinOp::Mul => x * y,
+                BinOp::Div if y != 0 => x / y,
+                BinOp::Shl => x << y,
+                BinOp::Shr => x >> y,
+                _ => return None,
+            })
+        }
+        _ => None,
+    }
+}
+
+/// Collect every `for` loop in `f` into `out` with depth + class info.
+pub fn collect_loops(f: &FuncDef, out: &mut Vec<LoopInfo>) {
+    let Some(body) = &f.body else { return };
+    walk_depth(body, 0, false, &f.name, out);
+}
+
+fn walk_depth(
+    s: &Stmt,
+    depth: usize,
+    ancestor_offloadable: bool,
+    func: &str,
+    out: &mut Vec<LoopInfo>,
+) {
+    match &s.kind {
+        StmtKind::For { body, .. } => {
+            let mut body_stmts = 0usize;
+            body.walk(&mut |_| body_stmts += 1);
+            let trip = estimate_trip_count(s);
+            let nest = nest_trip_count(s);
+            let class = classify_loop(s);
+            out.push(LoopInfo {
+                id: s.id,
+                span: s.span,
+                in_function: func.to_string(),
+                depth,
+                class,
+                trip_count: trip,
+                nest_trip_count: nest,
+                body_stmts,
+                inside_offloadable: ancestor_offloadable,
+            });
+            let off = ancestor_offloadable || class != LoopClass::Sequential;
+            walk_depth(body, depth + 1, off, func, out);
+        }
+        StmtKind::Block(stmts) => {
+            for st in stmts {
+                walk_depth(st, depth, ancestor_offloadable, func, out);
+            }
+        }
+        StmtKind::If(_, t, e) => {
+            walk_depth(t, depth, ancestor_offloadable, func, out);
+            if let Some(e) = e {
+                walk_depth(e, depth, ancestor_offloadable, func, out);
+            }
+        }
+        StmtKind::While(_, b) | StmtKind::DoWhile(b, _) => {
+            walk_depth(b, depth, ancestor_offloadable, func, out)
+        }
+        _ => {}
+    }
+}
+
+/// Product of constant trip counts down a perfect nest rooted at `s`.
+pub fn nest_trip_count(s: &Stmt) -> Option<u64> {
+    let mut total = 1u64;
+    let mut cur = s;
+    loop {
+        total = total.checked_mul(estimate_trip_count(cur)?)?;
+        let StmtKind::For { body, .. } = &cur.kind else { unreachable!() };
+        let inner = match &body.kind {
+            StmtKind::For { .. } => Some(body.as_ref()),
+            StmtKind::Block(stmts) if stmts.len() == 1 => match &stmts[0].kind {
+                StmtKind::For { .. } => Some(&stmts[0]),
+                _ => None,
+            },
+            _ => None,
+        };
+        match inner {
+            Some(f) => cur = f,
+            None => return Some(total),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parser::parse;
+
+    fn first_loop(src: &str) -> Stmt {
+        let prog = parse(src).unwrap();
+        let f = prog.functions().next().unwrap();
+        let mut found = None;
+        f.body.as_ref().unwrap().walk(&mut |s| {
+            if matches!(s.kind, StmtKind::For { .. }) && found.is_none() {
+                found = Some(s.clone());
+            }
+        });
+        found.unwrap()
+    }
+
+    #[test]
+    fn trip_count_simple() {
+        let l = first_loop("void f(double a[]) { for (int i = 0; i < 100; i++) a[i] = i; }");
+        assert_eq!(estimate_trip_count(&l), Some(100));
+    }
+
+    #[test]
+    fn trip_count_strided_and_inclusive() {
+        let l = first_loop("void f(double a[]) { for (int i = 1; i <= 9; i += 2) a[i] = i; }");
+        assert_eq!(estimate_trip_count(&l), Some(5));
+    }
+
+    #[test]
+    fn trip_count_symbolic_is_none() {
+        let l = first_loop("void f(double a[], int n) { for (int i = 0; i < n; i++) a[i] = i; }");
+        assert_eq!(estimate_trip_count(&l), None);
+    }
+
+    #[test]
+    fn classify_elementwise() {
+        let l = first_loop("void f(double a[], double b[]) { for (int i = 0; i < 10; i++) a[i] = 2.0 * b[i]; }");
+        assert_eq!(classify_loop(&l), LoopClass::Elementwise);
+    }
+
+    #[test]
+    fn classify_reduction() {
+        let l = first_loop("double f(double a[]) { double s = 0.0; for (int i = 0; i < 10; i++) s += a[i]; return s; }");
+        assert_eq!(classify_loop(&l), LoopClass::Reduction);
+    }
+
+    #[test]
+    fn classify_sequential_dependence() {
+        let l = first_loop("void f(double a[]) { for (int i = 1; i < 10; i++) a[i] = a[i-1] + 1.0; }");
+        assert_eq!(classify_loop(&l), LoopClass::Sequential);
+    }
+
+    #[test]
+    fn nest_trip_count_product() {
+        let l = first_loop(
+            "void f(double a[][8]) { for (int i = 0; i < 4; i++) for (int j = 0; j < 8; j++) a[i][j] = 0.0; }",
+        );
+        assert_eq!(nest_trip_count(&l), Some(32));
+    }
+}

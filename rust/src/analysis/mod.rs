@@ -1,0 +1,203 @@
+//! Step-1 code analysis: the facts every later stage consumes.
+//!
+//! Mirrors the paper's use of Clang syntax analysis (§4.2): from one parse
+//! we extract
+//!
+//! * **A-1 candidates** — calls to *external* functions (no local body),
+//!   plus `#include` hints, to be matched against the code-pattern DB's
+//!   library list;
+//! * **A-2 candidates** — locally defined functions / structs (potential
+//!   copied-code function blocks for the similarity detector);
+//! * **loop inventory** — every `for` loop with nest depth, estimated trip
+//!   count, parallelizability class, and arithmetic-intensity score (used
+//!   by the GA loop baseline and the FPGA candidate narrowing).
+
+pub mod intensity;
+pub mod loops;
+
+use std::collections::HashSet;
+
+use crate::parser::ast::*;
+use crate::parser::Span;
+
+pub use intensity::{intensity_of_loop, IntensityReport};
+pub use loops::{classify_loop, estimate_trip_count, LoopClass, LoopInfo};
+
+/// A call site to a function with no body in this translation unit —
+/// an external library call (paper processing A-1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExternalCall {
+    pub callee: String,
+    pub span: Span,
+    pub expr_id: NodeId,
+    /// Name of the function the call appears in.
+    pub in_function: String,
+    pub arg_count: usize,
+}
+
+/// A locally defined function block (paper processing A-2 candidate).
+#[derive(Debug, Clone)]
+pub struct DefinedBlock {
+    pub name: String,
+    pub span: Span,
+    pub node_id: NodeId,
+    pub stmt_count: usize,
+    pub loop_count: usize,
+}
+
+/// Full analysis result for one translation unit.
+#[derive(Debug, Clone, Default)]
+pub struct Analysis {
+    pub external_calls: Vec<ExternalCall>,
+    pub defined_functions: Vec<DefinedBlock>,
+    pub struct_names: Vec<String>,
+    pub includes: Vec<String>,
+    pub loops: Vec<LoopInfo>,
+}
+
+impl Analysis {
+    /// Loops eligible as GA genes: *maximal* offloadable loops — the
+    /// bulk executor runs a whole eligible nest, so loops inside an
+    /// offloadable ancestor are subsumed by the ancestor's gene.
+    pub fn parallel_loops(&self) -> Vec<&LoopInfo> {
+        self.loops
+            .iter()
+            .filter(|l| l.class != LoopClass::Sequential && !l.inside_offloadable)
+            .collect()
+    }
+
+    /// Distinct external callee names (DB match keys).
+    pub fn external_callees(&self) -> Vec<String> {
+        let mut seen = HashSet::new();
+        let mut out = Vec::new();
+        for c in &self.external_calls {
+            if seen.insert(c.callee.clone()) {
+                out.push(c.callee.clone());
+            }
+        }
+        out
+    }
+}
+
+/// Analyze a parsed program (paper Step 1).
+pub fn analyze(prog: &Program) -> Analysis {
+    let defined: HashSet<&str> = prog.defined_names().into_iter().collect();
+    let mut out = Analysis {
+        includes: prog.includes.clone(),
+        struct_names: prog.structs().map(|s| s.name.clone()).collect(),
+        ..Default::default()
+    };
+
+    for f in prog.functions() {
+        let Some(body) = &f.body else { continue };
+
+        // External call sites (A-1).
+        body.walk_exprs(&mut |e| {
+            if let ExprKind::Call(name, args) = &e.kind {
+                if !defined.contains(name.as_str())
+                    && !crate::interp::builtins::is_builtin(name)
+                {
+                    out.external_calls.push(ExternalCall {
+                        callee: name.clone(),
+                        span: e.span,
+                        expr_id: e.id,
+                        in_function: f.name.clone(),
+                        arg_count: args.len(),
+                    });
+                }
+            }
+        });
+
+        // Defined blocks (A-2).
+        let mut stmt_count = 0usize;
+        let mut loop_count = 0usize;
+        body.walk(&mut |s| {
+            stmt_count += 1;
+            if matches!(s.kind, StmtKind::For { .. } | StmtKind::While(..)) {
+                loop_count += 1;
+            }
+        });
+        out.defined_functions.push(DefinedBlock {
+            name: f.name.clone(),
+            span: f.span,
+            node_id: f.id,
+            stmt_count,
+            loop_count,
+        });
+
+        // Loop inventory.
+        loops::collect_loops(f, &mut out.loops);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parser::parse;
+
+    const APP: &str = "
+        #include <math.h>
+        #include <nrfft.h>
+        struct Sensor { double calib; int id; };
+        void fft2d(double re[], double im[], int n);
+        double window(double x) { return 0.5 - 0.5 * cos(x); }
+        int main() {
+            double re[64][64]; double im[64][64];
+            for (int i = 0; i < 64; i++)
+                for (int j = 0; j < 64; j++) {
+                    re[i][j] = window(i * 0.1) * j;
+                    im[i][j] = 0.0;
+                }
+            fft2d(re, im, 64);
+            double s = 0.0;
+            for (int i = 0; i < 64; i++)
+                for (int j = 0; j < 64; j++)
+                    s += re[i][j] * re[i][j] + im[i][j] * im[i][j];
+            printf(\"%f\\n\", s);
+            return 0;
+        }";
+
+    #[test]
+    fn finds_external_calls_only() {
+        let prog = parse(APP).unwrap();
+        let a = analyze(&prog);
+        // fft2d is extern (no body); window is defined; cos/printf builtin.
+        assert_eq!(a.external_callees(), vec!["fft2d".to_string()]);
+        assert_eq!(a.external_calls[0].arg_count, 3);
+        assert_eq!(a.external_calls[0].in_function, "main");
+    }
+
+    #[test]
+    fn records_defined_blocks_and_structs() {
+        let prog = parse(APP).unwrap();
+        let a = analyze(&prog);
+        let names: Vec<_> = a.defined_functions.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["window", "main"]);
+        assert_eq!(a.struct_names, vec!["Sensor"]);
+        assert_eq!(a.includes, vec!["math.h", "nrfft.h"]);
+    }
+
+    #[test]
+    fn loop_inventory_counts_and_depths() {
+        let prog = parse(APP).unwrap();
+        let a = analyze(&prog);
+        // Two 2-deep nests = 4 for-loops.
+        assert_eq!(a.loops.len(), 4);
+        assert_eq!(a.loops.iter().filter(|l| l.depth == 0).count(), 2);
+        // Top-level nests: first calls a user function (not offloadable by
+        // the bulk executor => Sequential); second is a reduction.
+        let top: Vec<_> = a.loops.iter().filter(|l| l.depth == 0).collect();
+        assert_eq!(top[0].class, LoopClass::Sequential);
+        assert_eq!(top[1].class, LoopClass::Reduction);
+    }
+
+    #[test]
+    fn parallel_loops_excludes_sequential_and_nested() {
+        let prog = parse(APP).unwrap();
+        let a = analyze(&prog);
+        let genes = a.parallel_loops();
+        assert_eq!(genes.len(), 1);
+        assert_eq!(genes[0].class, LoopClass::Reduction);
+    }
+}

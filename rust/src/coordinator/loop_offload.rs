@@ -1,0 +1,137 @@
+//! GA loop-offload search over a real application (the [33] baseline).
+//!
+//! Bridges the GA to the verification environment: genes are the
+//! parallelizable loops found by analysis, fitness is the measured
+//! wall-clock of the interpreted application with the selected loops
+//! running on the bulk (simulated-GPU) executor.
+
+use std::collections::HashSet;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::analysis;
+use crate::ga::{self, GaConfig, GaResult};
+use crate::interp::Interp;
+use crate::parser::{NodeId, Program};
+
+/// Outcome of the GA search, with gene→loop mapping for reporting.
+#[derive(Debug, Clone)]
+pub struct LoopSearchResult {
+    pub ga: GaResult,
+    /// NodeIds of the loops, index-aligned with genes.
+    pub loop_ids: Vec<NodeId>,
+    /// Human labels ("function:line") per gene.
+    pub loop_labels: Vec<String>,
+}
+
+impl LoopSearchResult {
+    /// Loop ids selected by the best gene.
+    pub fn best_loops(&self) -> HashSet<NodeId> {
+        self.loop_ids
+            .iter()
+            .zip(&self.ga.best_gene)
+            .filter(|(_, &on)| on)
+            .map(|(id, _)| *id)
+            .collect()
+    }
+}
+
+/// Run the GA loop-offload search on `prog`/`entry`.
+///
+/// `reps` measured repetitions per individual (the paper uses one
+/// verification run per individual; median-of-k is available for noisy
+/// hosts).
+pub fn ga_loop_search(
+    prog: &Program,
+    entry: &str,
+    cfg: &GaConfig,
+    reps: usize,
+    fuel: u64,
+) -> Result<LoopSearchResult> {
+    let a = analysis::analyze(prog);
+    let genes: Vec<_> = a.parallel_loops().into_iter().cloned().collect();
+    let loop_ids: Vec<NodeId> = genes.iter().map(|l| l.id).collect();
+    let loop_labels: Vec<String> = genes
+        .iter()
+        .map(|l| format!("{}:{} ({:?})", l.in_function, l.span, l.class))
+        .collect();
+
+    let mut interp = Interp::new(prog)?;
+    interp.fuel = fuel;
+
+    let mut fitness = |gene: &[bool]| -> Result<Duration> {
+        let selected: HashSet<NodeId> = loop_ids
+            .iter()
+            .zip(gene)
+            .filter(|(_, &on)| on)
+            .map(|(id, _)| *id)
+            .collect();
+        interp.set_offloaded_loops(selected);
+        let mut times = Vec::with_capacity(reps.max(1));
+        for _ in 0..reps.max(1) {
+            interp.reset_run_state()?;
+            let t0 = std::time::Instant::now();
+            interp.run(entry, &[])?;
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        Ok(times[times.len() / 2])
+    };
+
+    let ga = ga::run(loop_ids.len(), cfg, &mut fitness)?;
+    Ok(LoopSearchResult { ga, loop_ids, loop_labels })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parser::parse;
+
+    /// App with one big offload-friendly loop nest and one tiny loop where
+    /// transfer+launch overhead dominates.
+    const APP: &str = "
+        int main() {
+            double a[96][96]; double b[96][96];
+            double small[8];
+            for (int i = 0; i < 96; i++)
+                for (int j = 0; j < 96; j++)
+                    a[i][j] = sin(0.01 * i) * cos(0.01 * j) + 1.0;
+            for (int i = 0; i < 96; i++)
+                for (int j = 0; j < 96; j++)
+                    b[i][j] = sqrt(a[i][j]) * 2.0 + a[i][j] * a[i][j];
+            for (int k = 0; k < 8; k++)
+                small[k] = k * 2.0;
+            double s = 0.0;
+            for (int i = 0; i < 96; i++)
+                for (int j = 0; j < 96; j++)
+                    s += b[i][j];
+            return s;
+        }";
+
+    #[test]
+    fn ga_search_finds_loops_and_improves() {
+        let prog = parse(APP).unwrap();
+        let cfg = GaConfig { population: 8, generations: 5, ..Default::default() };
+        let r = ga_loop_search(&prog, "main", &cfg, 1, u64::MAX).unwrap();
+        assert!(r.loop_ids.len() >= 3, "genes: {:?}", r.loop_labels);
+        // The measured best must beat (or match) the all-CPU baseline.
+        assert!(
+            r.ga.best_speedup() >= 1.0,
+            "best speedup {}",
+            r.ga.best_speedup()
+        );
+        assert_eq!(r.ga.history.len(), 5);
+    }
+
+    #[test]
+    fn best_loops_maps_genes_to_ids() {
+        let prog = parse(APP).unwrap();
+        let cfg = GaConfig { population: 6, generations: 3, ..Default::default() };
+        let r = ga_loop_search(&prog, "main", &cfg, 1, u64::MAX).unwrap();
+        let best = r.best_loops();
+        for id in &best {
+            assert!(r.loop_ids.contains(id));
+        }
+    }
+}

@@ -1,0 +1,379 @@
+//! The coordinator — the paper's function-block offloading system.
+//!
+//! Orchestrates the full pipeline of Fig. 2 on one application source:
+//!
+//! 1. **Step 1** — parse + analyze ([`crate::analysis`]),
+//! 2. **Step 2** — discover offloadable blocks: A-1/B-1 library-name
+//!    matching against the pattern DB, A-2/B-2 Deckard-style similarity
+//!    over defined functions,
+//! 3. **C-1/C-2** — reconcile interfaces (auto-cast / optional-drop / user
+//!    confirmation via [`InterfacePolicy`]),
+//! 4. **Step 3** — measured pattern search in the verification
+//!    environment ([`verify`]), individual blocks then combined winners,
+//! 5. emit the transformed source + report (and optionally feed Steps 4–7
+//!    in [`flow`]).
+//!
+//! The GA loop-offload baseline of the prior work lives in
+//! [`loop_offload`]; the evaluation applications in [`apps`].
+
+pub mod apps;
+pub mod flow;
+pub mod loop_offload;
+pub mod verify;
+
+use std::path::Path;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::analysis::{self, Analysis};
+use crate::parser::{self, Item, Program};
+use crate::patterndb::PatternDb;
+use crate::runtime::Engine;
+use crate::similarity;
+use crate::transform::{
+    self, reconcile, signature_of, InterfacePolicy, PlannedReplacement, Reconciliation, Site,
+};
+
+pub use verify::{SearchOutcome, VerifyConfig};
+
+/// How a block was discovered.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DiscoveryPath {
+    /// A-1/B-1: external call matched a DB library record by name.
+    LibraryMatch { library: String },
+    /// A-2/B-2: defined function matched DB comparison code.
+    Similarity { block: String, score: f64 },
+}
+
+/// One discovered (and reconciled) offload candidate.
+#[derive(Debug, Clone)]
+pub struct DiscoveredBlock {
+    pub via: DiscoveryPath,
+    pub plan: PlannedReplacement,
+}
+
+impl DiscoveredBlock {
+    pub fn accepted(&self) -> bool {
+        self.plan.reconciliation.accepted()
+    }
+}
+
+/// Full offload report for one application.
+#[derive(Debug)]
+pub struct OffloadReport {
+    pub entry: String,
+    pub external_callees: Vec<String>,
+    pub blocks: Vec<DiscoveredBlock>,
+    pub outcome: SearchOutcome,
+    /// The winning transformed source (paper Step 3 output).
+    pub transformed_source: String,
+    /// Wall-clock of the whole discovery + search.
+    pub search_wall: Duration,
+}
+
+impl OffloadReport {
+    pub fn best_speedup(&self) -> f64 {
+        self.outcome.best_speedup
+    }
+}
+
+/// The coordinator configuration + handles.
+pub struct Coordinator {
+    pub db: PatternDb,
+    pub engine: Rc<Engine>,
+    pub policy: InterfacePolicy,
+    pub similarity_threshold: f64,
+    pub verify: VerifyConfig,
+}
+
+impl Coordinator {
+    /// Open with the built-in DB and an artifact directory.
+    pub fn open(artifacts: &Path) -> Result<Self> {
+        Ok(Coordinator {
+            db: PatternDb::builtin(),
+            engine: Engine::open(artifacts)?,
+            policy: InterfacePolicy::AutoApprove,
+            similarity_threshold: similarity::DEFAULT_THRESHOLD,
+            verify: VerifyConfig::default(),
+        })
+    }
+
+    /// "Link" CPU implementations of DB-known external libraries into the
+    /// program, the way the paper's verification machine compiles the app
+    /// against the NR sources: the all-CPU baseline needs runnable bodies.
+    pub fn link_cpu_libraries(&self, prog: &Program) -> Result<Program> {
+        let a = analysis::analyze(prog);
+        let mut out = prog.clone();
+        for callee in a.external_callees() {
+            if prog.find_function(&callee).map(|f| f.body.is_some()).unwrap_or(false) {
+                continue;
+            }
+            let Some(rec) = self.db.find_library(&callee) else { continue };
+            let Some((code, entry)) = &rec.cpu_impl else { continue };
+            let lib = parser::parse(code)
+                .with_context(|| format!("parsing CPU impl of {callee:?}"))?;
+            for item in lib.items {
+                if let Item::Func(mut f) = item {
+                    // Skip if a function of that name already exists with a
+                    // body (user code wins).
+                    if out.find_function(&f.name).map(|g| g.body.is_some()).unwrap_or(false)
+                        && f.name != *entry
+                    {
+                        continue;
+                    }
+                    if f.name == *entry {
+                        f.name = callee.clone();
+                    }
+                    out.items.push(Item::Func(f));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Step 2 + C: discover offloadable blocks and reconcile interfaces.
+    pub fn discover(&self, prog: &Program) -> Result<(Analysis, Vec<DiscoveredBlock>)> {
+        let a = analysis::analyze(prog);
+        let mut blocks = Vec::new();
+
+        // A-1 / B-1 / C-1: library calls by name.
+        for callee in a.external_callees() {
+            let Some(rec) = self.db.find_library(&callee) else { continue };
+            let mut policy = self.policy.clone();
+            // The DB registered the CPU library's interface; compare it to
+            // the replacement's (registered pairs normally agree — C-1).
+            let reconciliation =
+                reconcile(&rec.signature, &rec.replacement.signature, &mut policy);
+            blocks.push(DiscoveredBlock {
+                via: DiscoveryPath::LibraryMatch { library: rec.library.clone() },
+                plan: PlannedReplacement {
+                    site: Site::LibraryCall { callee: callee.clone() },
+                    replacement: rec.replacement.clone(),
+                    reconciliation,
+                },
+            });
+        }
+
+        // A-2 / B-2 / C-2: similarity-detected copied code.
+        let detector = similarity::Detector::new(&self.db, self.similarity_threshold)?;
+        for m in detector.detect(prog) {
+            // Skip functions already handled through the library path.
+            if blocks.iter().any(|b| match &b.plan.site {
+                Site::LibraryCall { callee } => *callee == m.function,
+                Site::FunctionBody { function } => *function == m.function,
+            }) {
+                continue;
+            }
+            let rec = &self.db.comparisons[m.record];
+            let f = prog
+                .find_function(&m.function)
+                .ok_or_else(|| anyhow::anyhow!("matched function {} vanished", m.function))?;
+            let caller_sig = signature_of(f);
+            let mut policy = self.policy.clone();
+            let reconciliation =
+                reconcile(&caller_sig, &rec.replacement.signature, &mut policy);
+            blocks.push(DiscoveredBlock {
+                via: DiscoveryPath::Similarity { block: m.block.clone(), score: m.score },
+                plan: PlannedReplacement {
+                    site: Site::FunctionBody { function: m.function.clone() },
+                    replacement: rec.replacement.clone(),
+                    reconciliation,
+                },
+            });
+        }
+        Ok((a, blocks))
+    }
+
+    /// The full pipeline on one source (paper Steps 1–3).
+    pub fn offload(&self, src: &str, entry: &str) -> Result<OffloadReport> {
+        let t0 = Instant::now();
+        let prog = parser::parse(src).context("Step 1: parsing application source")?;
+        let (a, blocks) = self.discover(&prog)?;
+        let linked = self.link_cpu_libraries(&prog)?;
+
+        let accepted: Vec<PlannedReplacement> = blocks
+            .iter()
+            .filter(|b| b.accepted())
+            .map(|b| b.plan.clone())
+            .collect();
+        let outcome =
+            verify::search_patterns(&linked, entry, &accepted, &self.engine, &self.verify)?;
+
+        // Emit the winning transformed source (on the *user's* program, not
+        // the linked one — what the paper hands back for deployment).
+        let winning: Vec<PlannedReplacement> = accepted
+            .iter()
+            .zip(&outcome.best_enabled)
+            .filter(|(_, &on)| on)
+            .map(|(p, _)| p.clone())
+            .collect();
+        let transformed = transform::apply(&prog, &winning)?;
+        Ok(OffloadReport {
+            entry: entry.to_string(),
+            external_callees: a.external_callees(),
+            blocks,
+            outcome,
+            transformed_source: parser::print_program(&transformed),
+            search_wall: t0.elapsed(),
+        })
+    }
+
+    /// Render a human-readable report (CLI output).
+    pub fn render_report(&self, r: &OffloadReport) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let _ = writeln!(out, "== function-block offload report ==");
+        let _ = writeln!(out, "externals: {:?}", r.external_callees);
+        for b in &r.blocks {
+            let status = match &b.plan.reconciliation {
+                Reconciliation::Rejected(why) => format!("rejected ({why})"),
+                other => format!("{other:?}"),
+            };
+            let _ = writeln!(out, "  block {} via {:?}: {}", b.plan.site.label(), b.via, status);
+        }
+        let _ = writeln!(
+            out,
+            "baseline (all-CPU): {}",
+            crate::metrics::fmt_duration(r.outcome.baseline.median)
+        );
+        for p in &r.outcome.tried {
+            let _ = writeln!(
+                out,
+                "  pattern {:<28} {:>12}  speedup {:>8}  correct:{}",
+                p.label,
+                crate::metrics::fmt_duration(p.time.median),
+                crate::metrics::fmt_speedup(p.speedup),
+                p.output_ok
+            );
+        }
+        let _ = writeln!(
+            out,
+            "best: speedup {} in {}",
+            crate::metrics::fmt_speedup(r.outcome.best_speedup),
+            crate::metrics::fmt_duration(r.search_wall),
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn coord() -> Coordinator {
+        let mut c = Coordinator::open(
+            &PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        )
+        .unwrap();
+        c.verify.reps = 1;
+        c
+    }
+
+    #[test]
+    fn lib_variant_fft_discovered_and_accelerated() {
+        let c = coord();
+        let r = c.offload(&apps::fft_app_lib(64), "main").unwrap();
+        assert_eq!(r.external_callees, vec!["fft2d".to_string()]);
+        assert!(r.blocks.iter().any(|b| matches!(
+            &b.via,
+            DiscoveryPath::LibraryMatch { library } if library == "fft2d"
+        )));
+        assert!(
+            r.best_speedup() > 3.0,
+            "fft lib speedup {} (tried: {:?})",
+            r.best_speedup(),
+            r.outcome.tried.iter().map(|t| (&t.label, t.speedup)).collect::<Vec<_>>()
+        );
+        assert!(r.transformed_source.contains("__fb_fft2d"));
+    }
+
+    #[test]
+    fn copy_variant_fft_found_by_similarity() {
+        let c = coord();
+        let r = c.offload(&apps::fft_app_copy(64), "main").unwrap();
+        assert!(
+            r.blocks.iter().any(|b| matches!(
+                &b.via,
+                DiscoveryPath::Similarity { block, .. } if block == "nr-four1-fft2d"
+            )),
+            "blocks: {:?}",
+            r.blocks.iter().map(|b| &b.via).collect::<Vec<_>>()
+        );
+        assert!(r.best_speedup() > 3.0, "fft copy speedup {}", r.best_speedup());
+        assert!(r.transformed_source.contains("__fb_fft2d"));
+    }
+
+    #[test]
+    fn lib_variant_lu_discovered_and_accelerated() {
+        let c = coord();
+        let r = c.offload(&apps::lu_app_lib(64), "main").unwrap();
+        assert!(
+            r.best_speedup() > 10.0,
+            "lu lib speedup {} (tried: {:?})",
+            r.best_speedup(),
+            r.outcome.tried.iter().map(|t| (&t.label, t.speedup)).collect::<Vec<_>>()
+        );
+        assert!(r.transformed_source.contains("__fb_lu_factor"));
+    }
+
+    #[test]
+    fn copy_variant_lu_found_by_similarity() {
+        let c = coord();
+        let r = c.offload(&apps::lu_app_copy(64), "main").unwrap();
+        assert!(
+            r.blocks.iter().any(|b| matches!(
+                &b.via,
+                DiscoveryPath::Similarity { block, .. } if block.starts_with("nr-ludcmp")
+            )),
+            "blocks: {:?}",
+            r.blocks.iter().map(|b| &b.via).collect::<Vec<_>>()
+        );
+        assert!(r.best_speedup() > 10.0, "lu copy speedup {}", r.best_speedup());
+    }
+
+    #[test]
+    fn linking_gives_runnable_baseline() {
+        let c = coord();
+        let prog = parser::parse(&apps::fft_app_lib(16)).unwrap();
+        // Unlinked: fft2d has no body -> run fails.
+        let mut m = crate::interp::Interp::new(&prog).unwrap();
+        assert!(m.run("main", &[]).is_err());
+        // Linked: runs.
+        let linked = c.link_cpu_libraries(&prog).unwrap();
+        let mut m = crate::interp::Interp::new(&linked).unwrap();
+        let v = m.run("main", &[]).unwrap();
+        assert!(v.as_num().unwrap().is_finite());
+    }
+
+    #[test]
+    fn offloaded_output_matches_cpu_output() {
+        let c = coord();
+        let r = c.offload(&apps::lu_app_lib(64), "main").unwrap();
+        for p in &r.outcome.tried {
+            if p.speedup > 1.0 {
+                assert!(p.output_ok, "winning pattern produced wrong output: {}", p.label);
+            }
+        }
+    }
+
+    #[test]
+    fn report_renders() {
+        let c = coord();
+        let r = c.offload(&apps::matmul_app(64), "main").unwrap();
+        let text = c.render_report(&r);
+        assert!(text.contains("function-block offload report"));
+        assert!(text.contains("speedup"));
+    }
+
+    #[test]
+    fn strict_policy_rejects_mismatched_interfaces_but_exact_ones_pass() {
+        let mut c = coord();
+        c.policy = InterfacePolicy::AutoReject;
+        // Exact-interface library path still works under strict policy.
+        let r = c.offload(&apps::lu_app_lib(64), "main").unwrap();
+        assert!(r.best_speedup() > 1.0);
+    }
+}

@@ -1,0 +1,210 @@
+//! Verification-environment pattern search (paper §4.2).
+//!
+//! "Even if existing know-how says a block can be accelerated, you don't
+//! know it is faster *under these conditions* until you measure it."  With
+//! k replaceable blocks the implementation measures each block on/off
+//! individually, combines the winners, re-measures, and picks the fastest
+//! pattern as the solution. This module is that loop: every candidate
+//! pattern is an actual transformed program executed in the interpreter
+//! with PJRT-backed externals installed.
+
+use std::rc::Rc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::interp::{Interp, Value};
+use crate::metrics::{measure, Measurement};
+use crate::parser::Program;
+use crate::runtime::Engine;
+use crate::transform::{self, glue, PlannedReplacement};
+
+/// Verification-run configuration.
+#[derive(Debug, Clone)]
+pub struct VerifyConfig {
+    /// Measured repetitions per pattern (median taken).
+    pub reps: usize,
+    pub warmup: usize,
+    /// Interpreter fuel per run (guards diverging candidates).
+    pub fuel: u64,
+    /// Relative tolerance when checking the offloaded result against the
+    /// CPU result (f32 artifact vs f64 interpreter).
+    pub tolerance: f64,
+}
+
+impl Default for VerifyConfig {
+    fn default() -> Self {
+        VerifyConfig { reps: 3, warmup: 0, fuel: u64::MAX, tolerance: 1e-2 }
+    }
+}
+
+/// Result of measuring one offload pattern.
+#[derive(Debug, Clone)]
+pub struct PatternResult {
+    /// Which blocks were enabled.
+    pub enabled: Vec<bool>,
+    pub label: String,
+    pub time: Measurement,
+    /// Speedup vs the all-CPU baseline.
+    pub speedup: f64,
+    /// Did the program produce the same result as the CPU run?
+    pub output_ok: bool,
+}
+
+/// Full search outcome.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub baseline: Measurement,
+    pub tried: Vec<PatternResult>,
+    /// Winning pattern (indices into the block list).
+    pub best_enabled: Vec<bool>,
+    pub best_time: Measurement,
+    pub best_speedup: f64,
+}
+
+/// Measure one pattern: transform, install externals, run.
+pub fn measure_pattern(
+    prog: &Program,
+    entry: &str,
+    blocks: &[PlannedReplacement],
+    enabled: &[bool],
+    engine: &Rc<Engine>,
+    cfg: &VerifyConfig,
+    label: &str,
+) -> Result<(Measurement, Value, String)> {
+    let plans: Vec<PlannedReplacement> = blocks
+        .iter()
+        .zip(enabled)
+        .filter(|(_, &on)| on)
+        .map(|(b, _)| b.clone())
+        .collect();
+    let transformed = transform::apply(prog, &plans)?;
+    let mut interp = Interp::new(&transformed)?;
+    interp.fuel = cfg.fuel;
+    for p in &plans {
+        let name = transform::dispatch_name(&p.replacement.artifact);
+        interp.set_external(&name, glue::build_external(engine.clone(), &p.replacement)?);
+        // Pre-compile every size variant of the artifact so XLA compile
+        // time (the cuFFT "library load") is not billed to the measured
+        // run. Compilation is cached in the engine across patterns.
+        for size_variant in engine
+            .artifact_names()
+            .iter()
+            .filter(|n| n.starts_with(&format!("{}_n", p.replacement.artifact)))
+        {
+            let _ = engine.artifact(size_variant);
+        }
+    }
+    let mut last: Option<Value> = None;
+    let mut out_text = String::new();
+    let m = measure(label, cfg.warmup, cfg.reps, || {
+        interp.reset_run_state()?;
+        // Re-install externals (reset clears only run state, not externals;
+        // still, keep the contract obvious).
+        last = Some(interp.run(entry, &[])?);
+        out_text = interp.output.clone();
+        Ok(())
+    })?;
+    let v = last.ok_or_else(|| anyhow!("no measured run completed"))?;
+    Ok((m, v, out_text))
+}
+
+fn values_close(a: &Value, b: &Value, tol: f64) -> bool {
+    match (a.as_num(), b.as_num()) {
+        (Ok(x), Ok(y)) => {
+            let denom = x.abs().max(y.abs()).max(1e-9);
+            ((x - y) / denom).abs() <= tol
+        }
+        // Non-numeric results: compare only kinds.
+        _ => a.type_name() == b.type_name(),
+    }
+}
+
+/// The paper's search: baseline → each block individually → combine the
+/// individually-winning blocks → re-measure → fastest wins.
+pub fn search_patterns(
+    prog: &Program,
+    entry: &str,
+    blocks: &[PlannedReplacement],
+    engine: &Rc<Engine>,
+    cfg: &VerifyConfig,
+) -> Result<SearchOutcome> {
+    let none = vec![false; blocks.len()];
+    let (baseline, base_val, _) =
+        measure_pattern(prog, entry, blocks, &none, engine, cfg, "all-CPU")?;
+
+    let mut tried = Vec::new();
+    let mut best_enabled = none.clone();
+    let mut best_time = baseline.clone();
+
+    // Phase 1: individual on/off. A pattern that fails to transform or
+    // crashes at run time is recorded as failed (speedup 0), exactly like
+    // a miscompiled candidate on the paper's verification machine — it
+    // just loses the comparison.
+    for i in 0..blocks.len() {
+        let mut enabled = none.clone();
+        enabled[i] = true;
+        let label = format!("only:{}", blocks[i].site.label());
+        match measure_pattern(prog, entry, blocks, &enabled, engine, cfg, &label) {
+            Ok((m, v, _)) => {
+                let speedup = baseline.secs() / m.secs().max(1e-12);
+                let output_ok = values_close(&base_val, &v, cfg.tolerance);
+                if output_ok && m.median < best_time.median {
+                    best_time = m.clone();
+                    best_enabled = enabled.clone();
+                }
+                tried.push(PatternResult { enabled, label, time: m, speedup, output_ok });
+            }
+            Err(e) => {
+                tried.push(PatternResult {
+                    enabled,
+                    label: format!("{label} [failed: {e}]"),
+                    time: baseline.clone(),
+                    speedup: 0.0,
+                    output_ok: false,
+                });
+            }
+        }
+    }
+
+    // Phase 2: combine the individual winners (speedup > 1 AND correct).
+    let winners: Vec<usize> = (0..blocks.len())
+        .filter(|&i| tried[i].speedup > 1.0 && tried[i].output_ok)
+        .collect();
+    if winners.len() > 1 {
+        let mut enabled = none.clone();
+        for &i in &winners {
+            enabled[i] = true;
+        }
+        if let Ok((m, v, _)) =
+            measure_pattern(prog, entry, blocks, &enabled, engine, cfg, "combined-winners")
+        {
+            let speedup = baseline.secs() / m.secs().max(1e-12);
+            let output_ok = values_close(&base_val, &v, cfg.tolerance);
+            if output_ok && m.median < best_time.median {
+                best_time = m.clone();
+                best_enabled = enabled.clone();
+            }
+            tried.push(PatternResult {
+                enabled,
+                label: "combined-winners".into(),
+                time: m,
+                speedup,
+                output_ok,
+            });
+        }
+    }
+
+    let best_speedup = baseline.secs() / best_time.secs().max(1e-12);
+    Ok(SearchOutcome { baseline, tried, best_enabled, best_time, best_speedup })
+}
+
+/// Convenience: run the whole-program baseline (all-CPU) once and return
+/// its duration — used by benches.
+pub fn baseline_duration(prog: &Program, entry: &str, fuel: u64) -> Result<Duration> {
+    let mut interp = Interp::new(prog)?;
+    interp.fuel = fuel;
+    let t0 = std::time::Instant::now();
+    interp.run(entry, &[])?;
+    Ok(t0.elapsed())
+}

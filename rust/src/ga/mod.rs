@@ -1,0 +1,304 @@
+//! GA loop-offload search — the prior-work baseline ([32], [33]).
+//!
+//! The paper's earlier method: narrow to parallelizable loop statements,
+//! encode each as a gene (1 = GPU, 0 = CPU), then evolve the population
+//! with repeated *measured* performance verification. We reproduce it
+//! faithfully:
+//!
+//! * genes come from `analysis::Analysis::parallel_loops`,
+//! * fitness is measured wall-clock of the application in the verification
+//!   environment (bulk executor = simulated GPU; see `interp`),
+//! * roulette selection on inverse time, single-point crossover, per-bit
+//!   mutation, elitism of 1,
+//! * a gene→time cache avoids re-measuring identical patterns (FPGA-style
+//!   economy; also what makes the "GA takes hours" point fair — the cost
+//!   is measured trials, not bookkeeping).
+//!
+//! `History` records the best speedup per generation — exactly the series
+//! Fig. 4 plots.
+
+pub mod rng;
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use rng::Rng;
+
+/// GA tuning knobs (defaults follow [33]'s small-population regime).
+#[derive(Debug, Clone)]
+pub struct GaConfig {
+    pub population: usize,
+    pub generations: usize,
+    pub crossover_rate: f64,
+    pub mutation_rate: f64,
+    /// Individuals preserved unchanged each generation.
+    pub elite: usize,
+    pub seed: u64,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        GaConfig {
+            population: 12,
+            generations: 10,
+            crossover_rate: 0.9,
+            mutation_rate: 0.05,
+            elite: 1,
+            seed: 20200207,
+        }
+    }
+}
+
+/// Per-generation record (the Fig. 4 series).
+#[derive(Debug, Clone)]
+pub struct GenStats {
+    pub generation: usize,
+    /// Best-so-far speedup vs the all-CPU baseline.
+    pub best_speedup: f64,
+    /// Mean speedup of this generation's evaluated individuals.
+    pub mean_speedup: f64,
+    /// Cumulative measured trials (cache misses) so far.
+    pub trials: usize,
+}
+
+/// GA outcome.
+#[derive(Debug, Clone)]
+pub struct GaResult {
+    pub best_gene: Vec<bool>,
+    pub best_time: Duration,
+    pub baseline_time: Duration,
+    pub history: Vec<GenStats>,
+    /// Total measured trials (= verification-environment runs).
+    pub trials: usize,
+}
+
+impl GaResult {
+    pub fn best_speedup(&self) -> f64 {
+        self.baseline_time.as_secs_f64() / self.best_time.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Fitness oracle: measure the application with the given loop-offload
+/// pattern. Must be deterministic enough for comparison (median-of-k
+/// inside is fine).
+pub trait FitnessFn {
+    fn measure(&mut self, gene: &[bool]) -> Result<Duration>;
+}
+
+impl<F: FnMut(&[bool]) -> Result<Duration>> FitnessFn for F {
+    fn measure(&mut self, gene: &[bool]) -> Result<Duration> {
+        self(gene)
+    }
+}
+
+/// Run the GA over `n_genes` parallelizable loops.
+pub fn run<F: FitnessFn>(n_genes: usize, cfg: &GaConfig, fitness: &mut F) -> Result<GaResult> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut cache: HashMap<Vec<bool>, Duration> = HashMap::new();
+    let mut trials = 0usize;
+
+    // Baseline: all-CPU (all genes off).
+    let baseline = {
+        let gene = vec![false; n_genes];
+        let t = fitness.measure(&gene)?;
+        trials += 1;
+        cache.insert(gene, t);
+        t
+    };
+
+    if n_genes == 0 {
+        return Ok(GaResult {
+            best_gene: vec![],
+            best_time: baseline,
+            baseline_time: baseline,
+            history: vec![],
+            trials,
+        });
+    }
+
+    // Initial population: random genes, half-density.
+    let mut pop: Vec<Vec<bool>> = (0..cfg.population)
+        .map(|_| (0..n_genes).map(|_| rng.bool_with(0.5)).collect())
+        .collect();
+
+    let mut best_gene = vec![false; n_genes];
+    let mut best_time = baseline;
+    let mut history = Vec::with_capacity(cfg.generations);
+
+    for generation in 0..cfg.generations {
+        // Evaluate (with caching — identical patterns are not re-measured).
+        let mut times = Vec::with_capacity(pop.len());
+        for gene in &pop {
+            let t = match cache.get(gene) {
+                Some(t) => *t,
+                None => {
+                    let t = fitness.measure(gene)?;
+                    trials += 1;
+                    cache.insert(gene.clone(), t);
+                    t
+                }
+            };
+            if t < best_time {
+                best_time = t;
+                best_gene = gene.clone();
+            }
+            times.push(t);
+        }
+
+        let mean_speedup = times
+            .iter()
+            .map(|t| baseline.as_secs_f64() / t.as_secs_f64().max(1e-12))
+            .sum::<f64>()
+            / times.len() as f64;
+        history.push(GenStats {
+            generation,
+            best_speedup: baseline.as_secs_f64() / best_time.as_secs_f64().max(1e-12),
+            mean_speedup,
+            trials,
+        });
+
+        if generation + 1 == cfg.generations {
+            break;
+        }
+
+        // Roulette selection on inverse time.
+        let weights: Vec<f64> =
+            times.iter().map(|t| 1.0 / t.as_secs_f64().max(1e-9)).collect();
+        let total: f64 = weights.iter().sum();
+        let select = |rng: &mut Rng| -> &Vec<bool> {
+            let mut target = rng.next_f64() * total;
+            for (i, w) in weights.iter().enumerate() {
+                target -= w;
+                if target <= 0.0 {
+                    return &pop[i];
+                }
+            }
+            pop.last().unwrap()
+        };
+
+        // Next generation: elites + crossover/mutation offspring.
+        let mut order: Vec<usize> = (0..pop.len()).collect();
+        order.sort_by_key(|&i| times[i]);
+        let mut next: Vec<Vec<bool>> =
+            order.iter().take(cfg.elite).map(|&i| pop[i].clone()).collect();
+
+        while next.len() < cfg.population {
+            let a = select(&mut rng).clone();
+            let b = select(&mut rng).clone();
+            let mut child = if rng.bool_with(cfg.crossover_rate) && n_genes > 1 {
+                let cut = 1 + rng.below(n_genes - 1);
+                let mut c = a[..cut].to_vec();
+                c.extend_from_slice(&b[cut..]);
+                c
+            } else {
+                a
+            };
+            for bit in child.iter_mut() {
+                if rng.bool_with(cfg.mutation_rate) {
+                    *bit = !*bit;
+                }
+            }
+            next.push(child);
+        }
+        pop = next;
+    }
+
+    Ok(GaResult { best_gene, best_time, baseline_time: baseline, history, trials })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    /// Synthetic fitness landscape: loops 0 and 2 help (big), loop 1 hurts
+    /// (transfer-dominated), loop 3 is neutral-ish.
+    fn synthetic(gene: &[bool]) -> Result<Duration> {
+        let mut t = 1000.0f64; // ms
+        if gene[0] {
+            t -= 400.0;
+        }
+        if gene[1] {
+            t += 150.0;
+        }
+        if gene[2] {
+            t -= 300.0;
+        }
+        if gene[3] {
+            t -= 5.0;
+        }
+        Ok(Duration::from_secs_f64(t.max(1.0) / 1000.0))
+    }
+
+    #[test]
+    fn ga_finds_the_optimum_on_synthetic_landscape() {
+        let cfg = GaConfig { population: 10, generations: 12, ..Default::default() };
+        let mut f = synthetic;
+        let r = run(4, &cfg, &mut f).unwrap();
+        assert!(r.best_gene[0], "gene0 should be offloaded");
+        assert!(!r.best_gene[1], "gene1 hurts and should be off");
+        assert!(r.best_gene[2], "gene2 should be offloaded");
+        assert!(r.best_speedup() > 3.0, "speedup {}", r.best_speedup());
+    }
+
+    #[test]
+    fn history_is_monotone_best() {
+        let cfg = GaConfig { population: 8, generations: 8, ..Default::default() };
+        let mut f = synthetic;
+        let r = run(4, &cfg, &mut f).unwrap();
+        assert_eq!(r.history.len(), 8);
+        for w in r.history.windows(2) {
+            assert!(w[1].best_speedup >= w[0].best_speedup - 1e-9);
+        }
+    }
+
+    #[test]
+    fn deterministic_with_same_seed() {
+        let cfg = GaConfig::default();
+        let mut f1 = synthetic;
+        let mut f2 = synthetic;
+        let a = run(4, &cfg, &mut f1).unwrap();
+        let b = run(4, &cfg, &mut f2).unwrap();
+        assert_eq!(a.best_gene, b.best_gene);
+        assert_eq!(a.trials, b.trials);
+    }
+
+    #[test]
+    fn cache_avoids_redundant_trials() {
+        let cfg = GaConfig { population: 12, generations: 10, ..Default::default() };
+        let mut f = synthetic;
+        let r = run(4, &cfg, &mut f).unwrap();
+        // 16 possible genomes; trials cannot exceed that.
+        assert!(r.trials <= 16 + 1, "trials {}", r.trials);
+    }
+
+    #[test]
+    fn zero_genes_short_circuits() {
+        let mut calls = 0usize;
+        let mut f = |_: &[bool]| {
+            calls += 1;
+            Ok(Duration::from_millis(10))
+        };
+        let r = run(0, &GaConfig::default(), &mut f).unwrap();
+        assert_eq!(calls, 1); // baseline only
+        assert!(r.best_gene.is_empty());
+        assert!((r.best_speedup() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn elite_preserved() {
+        // With heavy mutation, elitism still keeps the best ever found.
+        let cfg = GaConfig {
+            population: 8,
+            generations: 15,
+            mutation_rate: 0.4,
+            ..Default::default()
+        };
+        let mut f = synthetic;
+        let r = run(4, &cfg, &mut f).unwrap();
+        let last = r.history.last().unwrap();
+        assert!(last.best_speedup >= 3.0);
+    }
+}

@@ -1,0 +1,196 @@
+//! Builtin C library functions available to interpreted programs.
+//!
+//! Covers the `math.h` surface Numerical-Recipes-style code needs, plus
+//! `printf` (captured into the interpreter's output buffer, so verification
+//! runs are hermetic) and a few convenience intrinsics used by the sample
+//! applications.
+
+use anyhow::{bail, Result};
+
+use super::eval::Interp;
+use super::value::Value;
+
+/// Math builtins: (name, arity).
+const MATH_1: &[(&str, fn(f64) -> f64)] = &[
+    ("sin", f64::sin),
+    ("cos", f64::cos),
+    ("tan", f64::tan),
+    ("asin", f64::asin),
+    ("acos", f64::acos),
+    ("atan", f64::atan),
+    ("exp", f64::exp),
+    ("log", f64::ln),
+    ("log10", f64::log10),
+    ("sqrt", f64::sqrt),
+    ("fabs", f64::abs),
+    ("floor", f64::floor),
+    ("ceil", f64::ceil),
+];
+
+const MATH_2: &[(&str, fn(f64, f64) -> f64)] = &[
+    ("pow", f64::powf),
+    ("atan2", f64::atan2),
+    ("fmod", |a, b| a % b),
+    ("fmax", f64::max),
+    ("fmin", f64::min),
+];
+
+pub fn math1(name: &str) -> Option<fn(f64) -> f64> {
+    MATH_1.iter().find(|(n, _)| *n == name).map(|(_, f)| *f)
+}
+
+pub fn math2(name: &str) -> Option<fn(f64, f64) -> f64> {
+    MATH_2.iter().find(|(n, _)| *n == name).map(|(_, f)| *f)
+}
+
+pub fn is_builtin(name: &str) -> bool {
+    math1(name).is_some()
+        || math2(name).is_some()
+        || matches!(name, "printf" | "abs" | "exit" | "assert_true")
+}
+
+pub fn call(interp: &mut Interp, name: &str, args: &[Value]) -> Result<Value> {
+    if let Some(f) = math1(name) {
+        if args.len() != 1 {
+            bail!("{name} expects 1 argument, got {}", args.len());
+        }
+        return Ok(Value::Float(f(args[0].as_num()?)));
+    }
+    if let Some(f) = math2(name) {
+        if args.len() != 2 {
+            bail!("{name} expects 2 arguments, got {}", args.len());
+        }
+        return Ok(Value::Float(f(args[0].as_num()?, args[1].as_num()?)));
+    }
+    match name {
+        "abs" => Ok(Value::Int(args[0].as_int()?.abs())),
+        "printf" => {
+            let out = format_printf(args)?;
+            interp.output.push_str(&out);
+            Ok(Value::Int(out.len() as i64))
+        }
+        "exit" => bail!("program called exit({})", args.first().map(|v| v.as_int().unwrap_or(0)).unwrap_or(0)),
+        // Test helper: fails the run when the condition is false.
+        "assert_true" => {
+            if args[0].as_num()? == 0.0 {
+                bail!("assert_true failed in interpreted program");
+            }
+            Ok(Value::Int(1))
+        }
+        _ => bail!("unknown builtin {name:?}"),
+    }
+}
+
+/// Minimal printf: supports %d %ld %f %g %e %s %c and %% plus width/precision
+/// qualifiers, which are accepted and approximated.
+fn format_printf(args: &[Value]) -> Result<String> {
+    let fmt = match args.first() {
+        Some(Value::Str(s)) => s.clone(),
+        _ => bail!("printf requires a format string"),
+    };
+    let mut out = String::new();
+    let mut ai = 1usize;
+    let bytes = fmt.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] != b'%' {
+            out.push(bytes[i] as char);
+            i += 1;
+            continue;
+        }
+        i += 1;
+        if i < bytes.len() && bytes[i] == b'%' {
+            out.push('%');
+            i += 1;
+            continue;
+        }
+        // Skip flags/width/precision/length.
+        let mut precision: Option<usize> = None;
+        while i < bytes.len()
+            && (bytes[i].is_ascii_digit()
+                || bytes[i] == b'.'
+                || bytes[i] == b'-'
+                || bytes[i] == b'+'
+                || bytes[i] == b'l'
+                || bytes[i] == b'h')
+        {
+            if bytes[i] == b'.' {
+                let mut p = 0usize;
+                i += 1;
+                while i < bytes.len() && bytes[i].is_ascii_digit() {
+                    p = p * 10 + (bytes[i] - b'0') as usize;
+                    i += 1;
+                }
+                precision = Some(p);
+                continue;
+            }
+            i += 1;
+        }
+        if i >= bytes.len() {
+            bail!("dangling %% conversion in printf format");
+        }
+        let conv = bytes[i] as char;
+        i += 1;
+        let arg = args.get(ai).cloned();
+        ai += 1;
+        match conv {
+            'd' | 'i' | 'u' => {
+                let v = arg.map(|v| v.as_int()).transpose()?.unwrap_or(0);
+                out.push_str(&v.to_string());
+            }
+            'f' | 'F' => {
+                let v = arg.map(|v| v.as_num()).transpose()?.unwrap_or(0.0);
+                out.push_str(&format!("{:.*}", precision.unwrap_or(6), v));
+            }
+            'e' | 'E' => {
+                let v = arg.map(|v| v.as_num()).transpose()?.unwrap_or(0.0);
+                out.push_str(&format!("{:.*e}", precision.unwrap_or(6), v));
+            }
+            'g' | 'G' => {
+                let v = arg.map(|v| v.as_num()).transpose()?.unwrap_or(0.0);
+                out.push_str(&format!("{v}"));
+            }
+            's' => match arg {
+                Some(Value::Str(s)) => out.push_str(&s),
+                Some(other) => out.push_str(&format!("{other:?}")),
+                None => {}
+            },
+            'c' => {
+                let v = arg.map(|v| v.as_int()).transpose()?.unwrap_or(0);
+                out.push((v as u8) as char);
+            }
+            other => bail!("unsupported printf conversion %{other}"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::rc::Rc;
+
+    #[test]
+    fn printf_formats() {
+        let args = vec![
+            Value::Str(Rc::new("x=%d y=%.2f s=%s %%".to_string())),
+            Value::Int(7),
+            Value::Float(1.234),
+            Value::Str(Rc::new("ok".to_string())),
+        ];
+        assert_eq!(format_printf(&args).unwrap(), "x=7 y=1.23 s=ok %");
+    }
+
+    #[test]
+    fn printf_rejects_missing_format() {
+        assert!(format_printf(&[Value::Int(1)]).is_err());
+    }
+
+    #[test]
+    fn math_tables() {
+        assert!(math1("sqrt").is_some());
+        assert!(math2("pow").is_some());
+        assert!(is_builtin("printf"));
+        assert!(!is_builtin("cufftExec"));
+    }
+}

@@ -1,0 +1,751 @@
+//! Tree-walking evaluator — the "CPU execution" of the verification
+//! environment.
+//!
+//! The paper's verification machine compiles the C application with gcc and
+//! runs it on the CPU; our substitute executes the same parsed AST directly
+//! (DESIGN.md "Substitutions"). Offloaded function blocks are dispatched to
+//! registered *external functions* (PJRT artifacts installed by the
+//! coordinator), and loops selected by the GA loop offloader run through the
+//! bulk executor in [`super::offload_exec`].
+
+use std::collections::{HashMap, HashSet};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::parser::ast::*;
+use super::builtins;
+use super::offload_exec::{self, CompiledLoop};
+use super::value::{Slice, SliceOrScalar, StructData, Value};
+
+/// Statement-level control flow signal.
+pub enum Flow {
+    Normal,
+    Break,
+    Continue,
+    Return(Value),
+}
+
+/// External (offloaded) function: installed by the coordinator, backed by a
+/// PJRT executable or the loop-offload executor.
+pub type ExternalFn = Rc<dyn Fn(&[Value]) -> Result<Value>>;
+
+/// Execution statistics for one run.
+#[derive(Debug, Default, Clone)]
+pub struct RunStats {
+    /// Interpreter steps (statements + expression nodes evaluated).
+    pub steps: u64,
+    /// Calls dispatched to external (offloaded) functions.
+    pub external_calls: u64,
+    /// Loops executed through the bulk (GPU-simulating) executor.
+    pub bulk_loops: u64,
+    /// Bytes "transferred" to/from the simulated accelerator.
+    pub transfer_bytes: u64,
+}
+
+/// The interpreter. One instance holds a parsed program plus the offload
+/// configuration; `run` executes an entry function.
+pub struct Interp {
+    prog: Program,
+    funcs: HashMap<String, Rc<FuncDef>>, // avoids per-call AST clones
+    pub externals: HashMap<String, ExternalFn>,
+    /// Loop statements (by node id) that the GA marked as GPU-offloaded.
+    pub offloaded_loops: HashSet<NodeId>,
+    /// Per-launch transfer overhead in simulated bytes (PCIe model).
+    pub stats: RunStats,
+    pub output: String,
+    /// Execution fuel; `run` fails when exhausted (guards runaway loops).
+    pub fuel: u64,
+    scopes: Vec<HashMap<String, Value>>,
+    globals: HashMap<String, Value>,
+    loop_cache: HashMap<NodeId, Option<Rc<CompiledLoop>>>,
+    /// Per-block cache: does this block declare variables? Decl-free
+    /// blocks (the common case inside loops) skip the scope push — a
+    /// HashMap allocation per loop iteration otherwise.
+    block_has_decl: HashMap<NodeId, bool>,
+}
+
+impl Interp {
+    pub fn new(prog: &Program) -> Result<Self> {
+        let mut funcs = HashMap::new();
+        for item in &prog.items {
+            if let Item::Func(f) = item {
+                if f.body.is_some() {
+                    funcs.insert(f.name.clone(), Rc::new(f.clone()));
+                }
+            }
+        }
+        let mut interp = Interp {
+            prog: prog.clone(),
+            funcs,
+            externals: HashMap::new(),
+            offloaded_loops: HashSet::new(),
+            stats: RunStats::default(),
+            output: String::new(),
+            fuel: u64::MAX,
+            scopes: Vec::new(),
+            globals: HashMap::new(),
+            loop_cache: HashMap::new(),
+            block_has_decl: HashMap::new(),
+        };
+        interp.init_globals()?;
+        Ok(interp)
+    }
+
+    fn init_globals(&mut self) -> Result<()> {
+        let items = self.prog.items.clone();
+        for item in &items {
+            if let Item::Global(decls) = item {
+                for d in decls {
+                    let v = self.make_decl_value(d)?;
+                    self.globals.insert(d.name.clone(), v);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Register an external function (offload target).
+    pub fn set_external(&mut self, name: &str, f: ExternalFn) {
+        self.externals.insert(name.to_string(), f);
+    }
+
+    /// Mark a set of loops (node ids) for bulk offload execution.
+    pub fn set_offloaded_loops(&mut self, loops: HashSet<NodeId>) {
+        self.offloaded_loops = loops;
+        self.loop_cache.clear();
+    }
+
+    /// Reset per-run state (stats, output) but keep configuration.
+    pub fn reset_run_state(&mut self) -> Result<()> {
+        self.stats = RunStats::default();
+        self.output.clear();
+        self.scopes.clear();
+        self.globals.clear();
+        self.init_globals()
+    }
+
+    /// Run a zero/N-arg entry function to completion.
+    pub fn run(&mut self, entry: &str, args: &[Value]) -> Result<Value> {
+        let fd = self
+            .funcs
+            .get(entry)
+            .cloned()
+            .ok_or_else(|| anyhow!("no function named {entry:?} with a body"))?;
+        self.call_ast_function(&fd, args.to_vec())
+    }
+
+    fn step(&mut self) -> Result<()> {
+        self.stats.steps += 1;
+        if self.stats.steps > self.fuel {
+            bail!("execution fuel exhausted after {} steps", self.fuel);
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ scopes
+
+    /// Look up a variable by name (used by the bulk executor at launch).
+    pub fn lookup_value(&self, name: &str) -> Option<Value> {
+        self.lookup(name).ok().cloned()
+    }
+
+    /// Store a scalar back into an existing variable (bulk-executor
+    /// reduction write-back); preserves the slot's declared kind.
+    pub fn store_scalar(&mut self, name: &str, v: f64) -> Result<()> {
+        self.assign_var(name, Value::Float(v))
+    }
+
+    fn lookup(&self, name: &str) -> Result<&Value> {
+        for scope in self.scopes.iter().rev() {
+            if let Some(v) = scope.get(name) {
+                return Ok(v);
+            }
+        }
+        self.globals
+            .get(name)
+            .ok_or_else(|| anyhow!("undefined variable {name:?}"))
+    }
+
+    fn assign_var(&mut self, name: &str, v: Value) -> Result<()> {
+        for scope in self.scopes.iter_mut().rev() {
+            if let Some(slot) = scope.get_mut(name) {
+                *slot = slot.coerce_like(v)?;
+                return Ok(());
+            }
+        }
+        if let Some(slot) = self.globals.get_mut(name) {
+            *slot = slot.coerce_like(v)?;
+            return Ok(());
+        }
+        bail!("assignment to undefined variable {name:?}")
+    }
+
+    fn declare(&mut self, name: &str, v: Value) {
+        self.scopes
+            .last_mut()
+            .expect("declare outside scope")
+            .insert(name.to_string(), v);
+    }
+
+    fn make_decl_value(&mut self, d: &VarDecl) -> Result<Value> {
+        let is_int = !d.ty.base().map(|b| b.is_float()).unwrap_or(false);
+        if !d.dims.is_empty() {
+            let mut dims = Vec::with_capacity(d.dims.len());
+            for e in &d.dims {
+                let n = self.eval(e)?.as_int()?;
+                if n <= 0 {
+                    bail!("array dimension must be positive, got {n}");
+                }
+                dims.push(n as usize);
+            }
+            let slice = Slice::zeros(&dims, is_int && !d.ty.base().map_or(false, |b| b.is_float()));
+            if let Some(init) = &d.init {
+                // Array initialized from a call returning an array.
+                let v = self.eval(init)?;
+                if let Value::Arr(src) = v {
+                    slice.copy_from(&src.to_vec())?;
+                }
+            }
+            return Ok(Value::Arr(slice));
+        }
+        if let Ty::Struct(sname) = &d.ty {
+            let sd = self
+                .prog
+                .structs()
+                .find(|s| &s.name == sname)
+                .ok_or_else(|| anyhow!("unknown struct {sname:?}"))?
+                .clone();
+            let mut fields = HashMap::new();
+            for f in &sd.fields {
+                let fv = self.make_decl_value(f)?;
+                fields.insert(f.name.clone(), fv);
+            }
+            return Ok(Value::Struct(Rc::new(std::cell::RefCell::new(StructData {
+                name: sname.clone(),
+                fields,
+            }))));
+        }
+        // Pointer declarations start null-ish; they must be assigned an
+        // array before use.
+        let mut v = if d.ty.base().map(|b| b.is_float()).unwrap_or(false) {
+            Value::Float(0.0)
+        } else {
+            Value::Int(0)
+        };
+        if let Some(init) = &d.init {
+            let iv = self.eval(init)?;
+            v = match iv {
+                Value::Arr(_) | Value::Struct(_) | Value::Str(_) => iv,
+                other => v.coerce_like(other)?,
+            };
+        }
+        Ok(v)
+    }
+
+    // ------------------------------------------------------------ functions
+
+    pub(super) fn call_ast_function(&mut self, fd: &FuncDef, args: Vec<Value>) -> Result<Value> {
+        if args.len() != fd.params.len() {
+            bail!(
+                "{} expects {} args, got {}",
+                fd.name,
+                fd.params.len(),
+                args.len()
+            );
+        }
+        let mut frame = HashMap::new();
+        for (p, a) in fd.params.iter().zip(args) {
+            // Scalars coerce to the parameter type; arrays/structs bind by
+            // reference.
+            let bound = match (&p.ty, p.array_dims, &a) {
+                (_, 0, Value::Int(_) | Value::Float(_)) if !p.ty.is_ptr() => {
+                    let proto = if p.ty.base().map(|b| b.is_float()).unwrap_or(false) {
+                        Value::Float(0.0)
+                    } else {
+                        Value::Int(0)
+                    };
+                    proto.coerce_like(a.clone())?
+                }
+                _ => a.clone(),
+            };
+            frame.insert(p.name.clone(), bound);
+        }
+        let saved = std::mem::take(&mut self.scopes);
+        self.scopes.push(frame);
+        let body = fd.body.as_ref().expect("call of bodyless function");
+        let flow = self.exec(body);
+        self.scopes = saved;
+        match flow? {
+            // C coerces the returned value to the declared return type.
+            Flow::Return(v) => match (fd.ret.base(), &v) {
+                (Some(b), Value::Int(_) | Value::Float(_)) if !fd.ret.is_ptr() => {
+                    if b.is_float() {
+                        Ok(Value::Float(v.as_num()?))
+                    } else if b == BaseTy::Void {
+                        Ok(Value::Void)
+                    } else {
+                        Ok(Value::Int(v.as_int()?))
+                    }
+                }
+                _ => Ok(v),
+            },
+            _ => Ok(Value::Void),
+        }
+    }
+
+    fn call(&mut self, name: &str, arg_exprs: &[Expr]) -> Result<Value> {
+        // Externals take precedence: the transformer redirects call sites to
+        // `__fb_*` names, and tests may stub app functions.
+        if self.externals.contains_key(name) {
+            let mut args = Vec::with_capacity(arg_exprs.len());
+            for a in arg_exprs {
+                args.push(self.eval(a)?);
+            }
+            self.stats.external_calls += 1;
+            let f = self.externals.get(name).unwrap().clone();
+            return f(&args);
+        }
+        if let Some(fd) = self.funcs.get(name).cloned() {
+            let mut args = Vec::with_capacity(arg_exprs.len());
+            for a in arg_exprs {
+                args.push(self.eval(a)?);
+            }
+            return self.call_ast_function(&fd, args);
+        }
+        // Builtins (math library, printf, ...).
+        if builtins::is_builtin(name) {
+            let mut args = Vec::with_capacity(arg_exprs.len());
+            for a in arg_exprs {
+                args.push(self.eval(a)?);
+            }
+            return builtins::call(self, name, &args);
+        }
+        bail!("call to undefined function {name:?} (not defined, extern, or builtin)")
+    }
+
+    // ------------------------------------------------------------ statements
+
+    pub fn exec(&mut self, s: &Stmt) -> Result<Flow> {
+        self.step()?;
+        match &s.kind {
+            StmtKind::Empty => Ok(Flow::Normal),
+            StmtKind::Block(stmts) => {
+                let needs_scope = *self.block_has_decl.entry(s.id).or_insert_with(|| {
+                    stmts.iter().any(|st| matches!(st.kind, StmtKind::Decl(_)))
+                });
+                if needs_scope {
+                    self.scopes.push(HashMap::new());
+                }
+                let mut flow = Flow::Normal;
+                for st in stmts {
+                    flow = self.exec(st)?;
+                    if !matches!(flow, Flow::Normal) {
+                        break;
+                    }
+                }
+                if needs_scope {
+                    self.scopes.pop();
+                }
+                Ok(flow)
+            }
+            StmtKind::Decl(decls) => {
+                for d in decls {
+                    let v = self.make_decl_value(d)?;
+                    self.declare(&d.name, v);
+                }
+                Ok(Flow::Normal)
+            }
+            StmtKind::Expr(e) => {
+                self.eval(e)?;
+                Ok(Flow::Normal)
+            }
+            StmtKind::If(cond, then, els) => {
+                if self.eval(cond)?.truthy()? {
+                    self.exec(then)
+                } else if let Some(e) = els {
+                    self.exec(e)
+                } else {
+                    Ok(Flow::Normal)
+                }
+            }
+            StmtKind::While(cond, body) => {
+                while self.eval(cond)?.truthy()? {
+                    match self.exec(body)? {
+                        Flow::Break => break,
+                        Flow::Return(v) => return Ok(Flow::Return(v)),
+                        _ => {}
+                    }
+                }
+                Ok(Flow::Normal)
+            }
+            StmtKind::DoWhile(body, cond) => {
+                loop {
+                    match self.exec(body)? {
+                        Flow::Break => break,
+                        Flow::Return(v) => return Ok(Flow::Return(v)),
+                        _ => {}
+                    }
+                    if !self.eval(cond)?.truthy()? {
+                        break;
+                    }
+                }
+                Ok(Flow::Normal)
+            }
+            StmtKind::For { init, cond, step, body } => {
+                // GA-selected loops run on the bulk (simulated-GPU) executor
+                // when their shape qualifies; otherwise interpret.
+                if self.offloaded_loops.contains(&s.id) {
+                    if let Some(flow) = self.try_bulk_loop(s)? {
+                        return Ok(flow);
+                    }
+                }
+                let needs_scope =
+                    matches!(init.as_deref(), Some(Stmt { kind: StmtKind::Decl(_), .. }));
+                if needs_scope {
+                    self.scopes.push(HashMap::new());
+                }
+                let r = self.exec_for(init, cond, step, body);
+                if needs_scope {
+                    self.scopes.pop();
+                }
+                r
+            }
+            StmtKind::Return(e) => {
+                let v = match e {
+                    Some(e) => self.eval(e)?,
+                    None => Value::Void,
+                };
+                Ok(Flow::Return(v))
+            }
+            StmtKind::Break => Ok(Flow::Break),
+            StmtKind::Continue => Ok(Flow::Continue),
+        }
+    }
+
+    fn exec_for(
+        &mut self,
+        init: &Option<Box<Stmt>>,
+        cond: &Option<Expr>,
+        step: &Option<Expr>,
+        body: &Stmt,
+    ) -> Result<Flow> {
+        if let Some(i) = init {
+            self.exec(i)?;
+        }
+        loop {
+            if let Some(c) = cond {
+                if !self.eval(c)?.truthy()? {
+                    break;
+                }
+            }
+            match self.exec(body)? {
+                Flow::Break => break,
+                Flow::Return(v) => return Ok(Flow::Return(v)),
+                _ => {}
+            }
+            if let Some(st) = step {
+                self.eval(st)?;
+            }
+        }
+        Ok(Flow::Normal)
+    }
+
+    /// Attempt bulk (offloaded) execution of a for-loop. Returns Some(flow)
+    /// if the loop ran on the bulk executor, None to fall back.
+    fn try_bulk_loop(&mut self, s: &Stmt) -> Result<Option<Flow>> {
+        let compiled = match self.loop_cache.get(&s.id) {
+            Some(c) => c.clone(),
+            None => {
+                let c = offload_exec::compile_loop(s).map(Rc::new);
+                self.loop_cache.insert(s.id, c.clone());
+                c
+            }
+        };
+        let Some(compiled) = compiled else {
+            return Ok(None);
+        };
+        match offload_exec::run_bulk(self, &compiled)? {
+            true => {
+                self.stats.bulk_loops += 1;
+                Ok(Some(Flow::Normal))
+            }
+            false => Ok(None),
+        }
+    }
+
+    // ------------------------------------------------------------ expressions
+
+    pub fn eval(&mut self, e: &Expr) -> Result<Value> {
+        self.step()?;
+        match &e.kind {
+            ExprKind::IntLit(v) => Ok(Value::Int(*v)),
+            ExprKind::FloatLit(v) => Ok(Value::Float(*v)),
+            ExprKind::StrLit(s) => Ok(Value::Str(Rc::new(s.clone()))),
+            ExprKind::CharLit(c) => Ok(Value::Int(*c as i64)),
+            ExprKind::Ident(n) => Ok(self.lookup(n)?.clone()),
+            ExprKind::SizeOf(ty) => Ok(Value::Int(match ty.base() {
+                Some(BaseTy::Double) | Some(BaseTy::Long) => 8,
+                Some(BaseTy::Float) | Some(BaseTy::Int) => 4,
+                Some(BaseTy::Char) => 1,
+                _ => 8,
+            })),
+            ExprKind::Cast(ty, inner) => {
+                let v = self.eval(inner)?;
+                Ok(match ty.base() {
+                    Some(b) if b.is_float() => Value::Float(v.as_num()?),
+                    Some(BaseTy::Void) => Value::Void,
+                    Some(_) => Value::Int(v.as_int()?),
+                    None => v,
+                })
+            }
+            ExprKind::Unary(op, inner) => self.eval_unary(*op, inner),
+            ExprKind::PostIncDec(target, inc) => {
+                let old = self.eval(target)?;
+                let delta = if *inc { 1.0 } else { -1.0 };
+                let new = match old {
+                    Value::Int(v) => Value::Int(v + delta as i64),
+                    Value::Float(v) => Value::Float(v + delta),
+                    other => bail!("++/-- on non-numeric {}", other.type_name()),
+                };
+                self.store(target, new)?;
+                Ok(old)
+            }
+            ExprKind::Binary(op, a, b) => self.eval_binary(*op, a, b),
+            ExprKind::Ternary(c, t, els) => {
+                if self.eval(c)?.truthy()? {
+                    self.eval(t)
+                } else {
+                    self.eval(els)
+                }
+            }
+            ExprKind::Assign(op, lhs, rhs) => {
+                let rv = self.eval(rhs)?;
+                let result = match op {
+                    AssignOp::Set => rv,
+                    _ => {
+                        let old = self.eval(lhs)?;
+                        let bin = match op {
+                            AssignOp::Add => BinOp::Add,
+                            AssignOp::Sub => BinOp::Sub,
+                            AssignOp::Mul => BinOp::Mul,
+                            AssignOp::Div => BinOp::Div,
+                            AssignOp::Rem => BinOp::Rem,
+                            AssignOp::Shl => BinOp::Shl,
+                            AssignOp::Shr => BinOp::Shr,
+                            AssignOp::Set => unreachable!(),
+                        };
+                        numeric_binop(bin, &old, &rv)?
+                    }
+                };
+                self.store(lhs, result.clone())?;
+                Ok(result)
+            }
+            ExprKind::Call(name, args) => self.call(name, args),
+            ExprKind::Index(base, idx) => {
+                // Direct recursive indexing: no chain collection, no
+                // per-access allocation (hot path of every array program).
+                let base_v = self.eval(base)?;
+                let i = self.eval(idx)?.as_int()?;
+                match base_v.as_arr()?.index(i)? {
+                    SliceOrScalar::Slice(s) => Ok(Value::Arr(s)),
+                    SliceOrScalar::Scalar(x, is_int) => Ok(if is_int {
+                        Value::Int(x as i64)
+                    } else {
+                        Value::Float(x)
+                    }),
+                }
+            }
+            ExprKind::Member(base, field) => {
+                let v = self.eval(base)?;
+                match v {
+                    Value::Struct(s) => {
+                        let b = s.borrow();
+                        b.fields
+                            .get(field)
+                            .cloned()
+                            .ok_or_else(|| anyhow!("struct {} has no field {field:?}", b.name))
+                    }
+                    other => bail!("member access on non-struct {}", other.type_name()),
+                }
+            }
+        }
+    }
+
+    fn eval_unary(&mut self, op: UnOp, inner: &Expr) -> Result<Value> {
+        match op {
+            UnOp::Neg => Ok(match self.eval(inner)? {
+                Value::Int(v) => Value::Int(-v),
+                Value::Float(v) => Value::Float(-v),
+                other => bail!("negation of {}", other.type_name()),
+            }),
+            UnOp::Not => Ok(Value::Int(if self.eval(inner)?.truthy()? { 0 } else { 1 })),
+            UnOp::BitNot => Ok(Value::Int(!self.eval(inner)?.as_int()?)),
+            UnOp::Deref => {
+                // *p == p[0] in this subset.
+                let v = self.eval(inner)?;
+                match v {
+                    Value::Arr(s) => match s.index(0)? {
+                        SliceOrScalar::Scalar(x, is_int) => Ok(if is_int {
+                            Value::Int(x as i64)
+                        } else {
+                            Value::Float(x)
+                        }),
+                        SliceOrScalar::Slice(s) => Ok(Value::Arr(s)),
+                    },
+                    other => bail!("deref of {}", other.type_name()),
+                }
+            }
+            UnOp::Addr => self.eval(inner), // arrays/structs are handles already
+            UnOp::PreInc | UnOp::PreDec => {
+                let delta = if matches!(op, UnOp::PreInc) { 1.0 } else { -1.0 };
+                let old = self.eval(inner)?;
+                let new = match old {
+                    Value::Int(v) => Value::Int(v + delta as i64),
+                    Value::Float(v) => Value::Float(v + delta),
+                    other => bail!("++/-- on {}", other.type_name()),
+                };
+                self.store(inner, new.clone())?;
+                Ok(new)
+            }
+        }
+    }
+
+    fn eval_binary(&mut self, op: BinOp, a: &Expr, b: &Expr) -> Result<Value> {
+        // Short-circuit logical operators.
+        match op {
+            BinOp::And => {
+                return Ok(Value::Int(
+                    (self.eval(a)?.truthy()? && self.eval(b)?.truthy()?) as i64,
+                ))
+            }
+            BinOp::Or => {
+                return Ok(Value::Int(
+                    (self.eval(a)?.truthy()? || self.eval(b)?.truthy()?) as i64,
+                ))
+            }
+            _ => {}
+        }
+        let va = self.eval(a)?;
+        let vb = self.eval(b)?;
+        numeric_binop(op, &va, &vb)
+    }
+
+    /// Store `v` into the lvalue denoted by `target`.
+    fn store(&mut self, target: &Expr, v: Value) -> Result<()> {
+        match &target.kind {
+            ExprKind::Ident(n) => self.assign_var(n, v),
+            ExprKind::Index(base, idx) => {
+                // Evaluate the base (possibly itself an index -> row view),
+                // then store through the final index.
+                let slice = match self.eval(base)? {
+                    Value::Arr(s) => s,
+                    other => bail!("indexing into {}", other.type_name()),
+                };
+                if slice.dims.len() != 1 {
+                    bail!("partial-index store requires full index chain");
+                }
+                let i = self.eval(idx)?.as_int()?;
+                slice.set_checked(i, v.as_num()?)
+            }
+            ExprKind::Member(base, field) => {
+                let bv = self.eval(base)?;
+                match bv {
+                    Value::Struct(s) => {
+                        let mut b = s.borrow_mut();
+                        let slot = b
+                            .fields
+                            .get_mut(field)
+                            .ok_or_else(|| anyhow!("no field {field:?}"))?;
+                        *slot = slot.coerce_like(v)?;
+                        Ok(())
+                    }
+                    other => bail!("member store on {}", other.type_name()),
+                }
+            }
+            ExprKind::Unary(UnOp::Deref, inner) => {
+                let arr = self.eval(inner)?;
+                arr.as_arr()?.set_checked(0, v.as_num()?)
+            }
+            other => bail!("invalid assignment target: {other:?}"),
+        }
+    }
+}
+
+impl Slice {
+    /// Bounds-checked leading-dim store used by the evaluator.
+    fn set_checked(&self, i: i64, v: f64) -> Result<()> {
+        if i < 0 || (i as usize) >= self.dims[0] {
+            bail!("store index {i} out of bounds for dim {}", self.dims[0]);
+        }
+        self.set(i as usize, v)
+    }
+}
+
+/// Shared numeric binary-op semantics (also used by the bulk executor).
+pub fn numeric_binop(op: BinOp, a: &Value, b: &Value) -> Result<Value> {
+    let int_mode = matches!((a, b), (Value::Int(_), Value::Int(_)));
+    if int_mode {
+        let (x, y) = (a.as_int()?, b.as_int()?);
+        let v = match op {
+            BinOp::Add => x.wrapping_add(y),
+            BinOp::Sub => x.wrapping_sub(y),
+            BinOp::Mul => x.wrapping_mul(y),
+            BinOp::Div => {
+                if y == 0 {
+                    bail!("integer division by zero");
+                }
+                x / y
+            }
+            BinOp::Rem => {
+                if y == 0 {
+                    bail!("integer remainder by zero");
+                }
+                x % y
+            }
+            BinOp::Eq => (x == y) as i64,
+            BinOp::Ne => (x != y) as i64,
+            BinOp::Lt => (x < y) as i64,
+            BinOp::Gt => (x > y) as i64,
+            BinOp::Le => (x <= y) as i64,
+            BinOp::Ge => (x >= y) as i64,
+            BinOp::BitAnd => x & y,
+            BinOp::BitOr => x | y,
+            BinOp::BitXor => x ^ y,
+            BinOp::Shl => x.wrapping_shl(y as u32),
+            BinOp::Shr => x.wrapping_shr(y as u32),
+            BinOp::And | BinOp::Or => unreachable!("short-circuit handled earlier"),
+        };
+        return Ok(Value::Int(v));
+    }
+    let (x, y) = (a.as_num()?, b.as_num()?);
+    Ok(match op {
+        BinOp::Add => Value::Float(x + y),
+        BinOp::Sub => Value::Float(x - y),
+        BinOp::Mul => Value::Float(x * y),
+        BinOp::Div => Value::Float(x / y),
+        BinOp::Rem => Value::Float(x % y),
+        BinOp::Eq => Value::Int((x == y) as i64),
+        BinOp::Ne => Value::Int((x != y) as i64),
+        BinOp::Lt => Value::Int((x < y) as i64),
+        BinOp::Gt => Value::Int((x > y) as i64),
+        BinOp::Le => Value::Int((x <= y) as i64),
+        BinOp::Ge => Value::Int((x >= y) as i64),
+        BinOp::BitAnd | BinOp::BitOr | BinOp::BitXor | BinOp::Shl | BinOp::Shr => {
+            bail!("bitwise op on float operands")
+        }
+        BinOp::And | BinOp::Or => unreachable!(),
+    })
+}
+
+/// Flatten `a[i][j]...` into (base expression, [index expressions]).
+pub fn collect_index_chain(e: &Expr) -> Result<(&Expr, Vec<&Expr>)> {
+    let mut indices = Vec::new();
+    let mut cur = e;
+    while let ExprKind::Index(base, idx) = &cur.kind {
+        indices.push(idx.as_ref());
+        cur = base;
+    }
+    indices.reverse();
+    Ok((cur, indices))
+}

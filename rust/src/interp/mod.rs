@@ -1,0 +1,347 @@
+//! AST interpreter + simulated-accelerator execution substrate.
+//!
+//! The paper's verification environment compiles the candidate offload
+//! pattern and *measures* it; this module is our measurable execution
+//! substrate (DESIGN.md "Substitutions"):
+//!
+//! * [`eval::Interp`] — tree-walking evaluator = the all-CPU baseline,
+//! * [`offload_exec`] — bulk loop executor = GPU *loop* offload ([33]),
+//! * external functions (`Interp::set_external`) — dispatch points where
+//!   the transformer splices in PJRT **function-block** artifacts.
+
+pub mod builtins;
+pub mod eval;
+pub mod offload_exec;
+pub mod value;
+
+pub use eval::{Flow, Interp, RunStats};
+pub use value::{Slice, Value};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parser::parse;
+    use std::collections::HashSet;
+    use std::rc::Rc;
+
+    fn run_main(src: &str) -> (Value, Interp) {
+        let prog = parse(src).expect("parse");
+        let mut m = Interp::new(&prog).expect("interp");
+        let v = m.run("main", &[]).expect("run");
+        (v, m)
+    }
+
+    #[test]
+    fn arithmetic_and_control_flow() {
+        let (v, _) = run_main(
+            "int main() {
+                int s = 0;
+                for (int i = 0; i < 10; i++) { if (i % 2 == 0) s += i; }
+                return s;
+            }",
+        );
+        assert!(matches!(v, Value::Int(20)));
+    }
+
+    #[test]
+    fn float_promotion_and_math() {
+        let (v, _) = run_main(
+            "double main() {
+                double x = 2.0;
+                return sqrt(x * 8.0);
+            }",
+        );
+        match v {
+            Value::Float(f) => assert!((f - 4.0).abs() < 1e-12),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn arrays_and_views() {
+        let (v, _) = run_main(
+            "double main() {
+                double m[3][4];
+                for (int i = 0; i < 3; i++)
+                    for (int j = 0; j < 4; j++)
+                        m[i][j] = i * 10 + j;
+                return m[2][3];
+            }",
+        );
+        assert!(matches!(v, Value::Float(f) if f == 23.0));
+    }
+
+    #[test]
+    fn arrays_pass_by_reference() {
+        let (v, _) = run_main(
+            "void fill(double a[], int n) { for (int i = 0; i < n; i++) a[i] = i; }
+             double main() { double a[5]; fill(a, 5); return a[4]; }",
+        );
+        assert!(matches!(v, Value::Float(f) if f == 4.0));
+    }
+
+    #[test]
+    fn while_do_while_break_continue() {
+        let (v, _) = run_main(
+            "int main() {
+                int i = 0, s = 0;
+                while (1) { i++; if (i > 5) break; if (i == 2) continue; s += i; }
+                do { s += 100; } while (0);
+                return s;
+            }",
+        );
+        assert!(matches!(v, Value::Int(113)));
+    }
+
+    #[test]
+    fn struct_fields() {
+        let (v, _) = run_main(
+            "struct P { double x; double y; };
+             double main() { struct P p; p.x = 3.0; p.y = 4.0; return sqrt(p.x*p.x + p.y*p.y); }",
+        );
+        assert!(matches!(v, Value::Float(f) if (f - 5.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn printf_captured() {
+        let (_, m) = run_main(
+            "int main() { printf(\"v=%d %.1f\\n\", 3, 2.5); return 0; }",
+        );
+        assert_eq!(m.output, "v=3 2.5\n");
+    }
+
+    #[test]
+    fn int_semantics_division_truncation() {
+        let (v, _) = run_main("int main() { int a = 7 / 2; int b = -7 / 2; return a * 100 + b; }");
+        assert!(matches!(v, Value::Int(297))); // 3*100 + (-3)
+    }
+
+    #[test]
+    fn globals_initialized() {
+        let (v, _) = run_main("int N = 6; double tbl[4]; int main() { tbl[2] = N; return tbl[2]; }");
+        assert!(matches!(v, Value::Int(6)));
+    }
+
+    #[test]
+    fn external_function_dispatch() {
+        let prog = parse(
+            "double main() { double a[4]; a[0] = 2.0; return __fb_double_it(a); }",
+        )
+        .unwrap();
+        let mut m = Interp::new(&prog).unwrap();
+        m.set_external(
+            "__fb_double_it",
+            Rc::new(|args: &[Value]| {
+                let s = args[0].as_arr()?;
+                Ok(Value::Float(s.get(0)? * 2.0))
+            }),
+        );
+        let v = m.run("main", &[]).unwrap();
+        assert!(matches!(v, Value::Float(f) if f == 4.0));
+        assert_eq!(m.stats.external_calls, 1);
+    }
+
+    #[test]
+    fn fuel_guards_infinite_loops() {
+        let prog = parse("int main() { while (1) {} return 0; }").unwrap();
+        let mut m = Interp::new(&prog).unwrap();
+        m.fuel = 10_000;
+        assert!(m.run("main", &[]).is_err());
+    }
+
+    #[test]
+    fn out_of_bounds_is_error_not_ub() {
+        let prog = parse("int main() { double a[2]; a[5] = 1.0; return 0; }").unwrap();
+        let mut m = Interp::new(&prog).unwrap();
+        assert!(m.run("main", &[]).is_err());
+    }
+
+    #[test]
+    fn call_to_unknown_function_errors() {
+        let prog = parse("int main() { return mystery(); }").unwrap();
+        let mut m = Interp::new(&prog).unwrap();
+        let err = m.run("main", &[]).unwrap_err().to_string();
+        assert!(err.contains("mystery"), "{err}");
+    }
+
+    #[test]
+    fn recursion_works() {
+        let (v, _) = run_main(
+            "int fib(int n) { if (n < 2) return n; return fib(n-1) + fib(n-2); }
+             int main() { return fib(12); }",
+        );
+        assert!(matches!(v, Value::Int(144)));
+    }
+
+    #[test]
+    fn nr_style_fft_bit_reversal_runs() {
+        // The data-shuffle prologue of NR four1 — heavy while/if logic.
+        let (v, _) = run_main(
+            "int main() {
+                int nn = 8; int n = nn << 1; int j = 1; int count = 0;
+                double data[17];
+                for (int i = 1; i < n; i += 2) {
+                    if (j > i) { double t = data[j]; data[j] = data[i]; data[i] = t; count++; }
+                    int m = nn;
+                    while (m >= 2 && j > m) { j -= m; m = m >> 1; }
+                    j += m;
+                }
+                return count;
+            }",
+        );
+        // Known swap count for n=8 complex bit-reversal.
+        assert!(matches!(v, Value::Int(c) if c > 0));
+    }
+
+    // ---------------------------------------------------- bulk executor
+
+    const SAXPY: &str = "
+        int main() {
+            int n = 1000;
+            double x[1000]; double y[1000];
+            for (int i = 0; i < n; i++) { x[i] = i; y[i] = 2 * i; }
+            for (int i = 0; i < n; i++) { y[i] = y[i] + 3.0 * x[i]; }
+            double s = 0.0;
+            for (int i = 0; i < n; i++) { s = s + y[i]; }
+            return s;
+        }";
+
+    fn loop_ids(src: &str) -> Vec<crate::parser::NodeId> {
+        let prog = parse(src).unwrap();
+        let mut ids = Vec::new();
+        for f in prog.functions() {
+            if let Some(b) = &f.body {
+                b.walk(&mut |s| {
+                    if matches!(s.kind, crate::parser::StmtKind::For { .. }) {
+                        ids.push(s.id);
+                    }
+                });
+            }
+        }
+        ids
+    }
+
+    #[test]
+    fn bulk_executor_matches_interpreter() {
+        let prog = parse(SAXPY).unwrap();
+        // Plain run.
+        let mut m1 = Interp::new(&prog).unwrap();
+        let v1 = m1.run("main", &[]).unwrap().as_num().unwrap();
+        // All loops offloaded.
+        let mut m2 = Interp::new(&prog).unwrap();
+        m2.set_offloaded_loops(loop_ids(SAXPY).into_iter().collect());
+        let v2 = m2.run("main", &[]).unwrap().as_num().unwrap();
+        assert_eq!(v1, v2);
+        assert!(m2.stats.bulk_loops >= 3, "bulk loops: {}", m2.stats.bulk_loops);
+        assert!(m2.stats.transfer_bytes > 0);
+    }
+
+    #[test]
+    fn bulk_2d_nest_matches_interpreter() {
+        let src = "
+            int main() {
+                double a[32][32]; double b[32][32];
+                for (int i = 0; i < 32; i++)
+                    for (int j = 0; j < 32; j++)
+                        a[i][j] = i + j;
+                for (int i = 0; i < 32; i++)
+                    for (int j = 0; j < 32; j++)
+                        b[i][j] = 2.0 * a[i][j] + sin(0.0);
+                double s = 0.0;
+                for (int i = 0; i < 32; i++)
+                    for (int j = 0; j < 32; j++)
+                        s += b[i][j];
+                return s;
+            }";
+        let prog = parse(src).unwrap();
+        let mut m1 = Interp::new(&prog).unwrap();
+        let v1 = m1.run("main", &[]).unwrap().as_num().unwrap();
+        let mut m2 = Interp::new(&prog).unwrap();
+        m2.set_offloaded_loops(loop_ids(src).into_iter().collect());
+        let v2 = m2.run("main", &[]).unwrap().as_num().unwrap();
+        assert_eq!(v1, v2);
+        assert!(m2.stats.bulk_loops >= 2);
+    }
+
+    #[test]
+    fn sequential_loop_falls_back_to_interpreter() {
+        // Loop-carried dependence: prefix sum. Must NOT run bulk.
+        let src = "
+            int main() {
+                double a[100];
+                for (int i = 0; i < 100; i++) a[i] = 1.0;
+                for (int i = 1; i < 100; i++) a[i] = a[i] + a[i-1];
+                return a[99];
+            }";
+        let prog = parse(src).unwrap();
+        let mut m = Interp::new(&prog).unwrap();
+        m.set_offloaded_loops(loop_ids(src).into_iter().collect());
+        let v = m.run("main", &[]).unwrap().as_num().unwrap();
+        assert_eq!(v, 100.0);
+        // First loop bulk-eligible, second must fall back.
+        assert_eq!(m.stats.bulk_loops, 1);
+    }
+
+    #[test]
+    fn compile_loop_rejects_user_calls() {
+        let src = "
+            double f(double x) { return x * 2.0; }
+            int main() {
+                double a[10];
+                for (int i = 0; i < 10; i++) a[i] = f(i);
+                return 0;
+            }";
+        let prog = parse(src).unwrap();
+        let main = prog.find_function("main").unwrap();
+        let mut found = None;
+        main.body.as_ref().unwrap().walk(&mut |s| {
+            if matches!(s.kind, crate::parser::StmtKind::For { .. }) && found.is_none() {
+                found = Some(s.clone());
+            }
+        });
+        assert!(offload_exec::compile_loop(&found.unwrap()).is_none());
+    }
+
+    #[test]
+    fn self_referential_temp_terminates_and_runs_correctly() {
+        // `sum += ...` on a per-iteration temp compiles to a
+        // self-referential definition; the dependence analysis must
+        // terminate (depth cap) and bulk execution must match the
+        // interpreter (regression: stack overflow on the NR matmul corpus).
+        let src = "
+            int main() {
+                double a[16]; double b[16]; double c[16];
+                int n = 4;
+                for (int i = 0; i < 16; i++) { a[i] = i; b[i] = 2.0 * i; }
+                for (int i = 0; i < n; i++) {
+                    for (int j = 0; j < n; j++) {
+                        double sum = 0.0;
+                        sum = 0.0;
+                        for (int k = 0; k < n; k++) {
+                            sum += a[i * n + k] * b[k * n + j];
+                        }
+                        c[i * n + j] = sum;
+                    }
+                }
+                double t = 0.0;
+                for (int i = 0; i < 16; i++) t += c[i];
+                return t;
+            }";
+        let prog = parse(src).unwrap();
+        let mut plain = Interp::new(&prog).unwrap();
+        let expected = plain.run("main", &[]).unwrap().as_num().unwrap();
+        let mut bulk = Interp::new(&prog).unwrap();
+        bulk.set_offloaded_loops(loop_ids(src).into_iter().collect());
+        let got = bulk.run("main", &[]).unwrap().as_num().unwrap();
+        assert_eq!(got, expected);
+    }
+
+    #[test]
+    fn reset_run_state_reinitializes_globals() {
+        let prog = parse("int g = 5; int main() { g = g + 1; return g; }").unwrap();
+        let mut m = Interp::new(&prog).unwrap();
+        assert!(matches!(m.run("main", &[]).unwrap(), Value::Int(6)));
+        m.reset_run_state().unwrap();
+        assert!(matches!(m.run("main", &[]).unwrap(), Value::Int(6)));
+    }
+}

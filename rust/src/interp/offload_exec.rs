@@ -1,0 +1,987 @@
+//! Bulk loop executor — the simulated **GPU loop offload** backend.
+//!
+//! This is the substrate for the prior-work baseline ([33]): when the GA
+//! marks a parallelizable `for` loop as offloaded, the verification
+//! environment executes it here instead of the tree-walking evaluator.
+//! The model mirrors what `#pragma acc kernels` gives a real GPU:
+//!
+//! * **compile**: the loop nest is lowered once into a resolved symbolic
+//!   program (no name lookups in the hot loop) — the analog of PGI
+//!   generating a GPU kernel;
+//! * **transfer**: every bound array is physically copied in and out of a
+//!   scratch "device" buffer, so offload cost scales with data size exactly
+//!   like PCIe traffic, plus a fixed per-launch latency (spin-wait, not
+//!   sleep, for determinism);
+//! * **execute**: the body runs over the scratch buffers with direct slot
+//!   addressing — much faster than interpretation, the way a GPU kernel is
+//!   much faster than single-thread C.
+//!
+//! The net effect reproduces the paper's loop-offload economics: big
+//! arithmetic-dense loops win, small loops lose to transfer+launch cost,
+//! and the GA has a real measured signal to optimize.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::parser::ast::*;
+use super::builtins;
+use super::eval::Interp;
+use super::value::Value;
+
+/// Fixed per-launch overhead of the simulated accelerator (kernel launch +
+/// driver latency). Spin-waited for determinism.
+pub const LAUNCH_OVERHEAD: Duration = Duration::from_micros(20);
+
+/// Symbolic, name-resolved expression (no AST, no hash lookups).
+///
+/// NOTE: `PartialEq` compares `Call1`/`Call2` by function pointer — for the
+/// dependence checker that is exactly the syntactic-equality question being
+/// asked (same builtin), so the lint is suppressed deliberately.
+#[allow(unpredictable_function_pointer_comparisons)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Sym {
+    Const(f64),
+    /// Loop variable at nest depth `k`.
+    LoopVar(usize),
+    /// Loop-invariant scalar, bound at launch time (slot index).
+    Scalar(usize),
+    /// Array element read: (array slot, index expressions).
+    Read(usize, Vec<Sym>),
+    Bin(BinOp, Box<Sym>, Box<Sym>),
+    Neg(Box<Sym>),
+    /// Truncation toward zero (int cast).
+    Trunc(Box<Sym>),
+    Call1(fn(f64) -> f64, Box<Sym>),
+    Call2(fn(f64, f64) -> f64, Box<Sym>, Box<Sym>),
+    Ternary(Box<Sym>, Box<Sym>, Box<Sym>),
+    /// Per-iteration scalar temporary (defined by `BulkStmt::LetTmp`
+    /// earlier in the same iteration).
+    Tmp(usize),
+}
+
+/// One loop level of the compiled nest.
+#[derive(Debug, Clone)]
+pub struct LoopSpec {
+    /// Loop-variable slot in the device's `loop_vals`.
+    pub var: usize,
+    pub lo: Sym,
+    pub hi: Sym,
+    pub inclusive: bool,
+    pub step: i64,
+}
+
+/// Body statements of the compiled nest. Loops may nest arbitrarily and
+/// mix with other statements (imperfect nests — the NR LU panel shape).
+#[derive(Debug, Clone)]
+pub enum BulkStmt {
+    /// `arr[indices] op= value`.
+    Store { arr: usize, indices: Vec<Sym>, op: AssignOp, value: Sym },
+    /// `acc op= value` — reduction into a scalar accumulator.
+    Reduce { acc: usize, op: AssignOp, value: Sym },
+    /// `t = value` — per-iteration scalar temporary (NR-style
+    /// `j = i + mmax; tempr = ...` bodies).
+    LetTmp { slot: usize, value: Sym },
+    /// A nested loop with its own body.
+    Loop { spec: LoopSpec, body: Vec<BulkStmt> },
+}
+
+/// A loop nest compiled for bulk execution. `body` holds the root loop
+/// (a single `BulkStmt::Loop`).
+#[derive(Debug, Clone)]
+pub struct CompiledLoop {
+    /// Total loop-variable slots across the whole (possibly imperfect) nest.
+    pub n_vars: usize,
+    pub body: Vec<BulkStmt>,
+    /// Array names bound at launch.
+    pub arrays: Vec<String>,
+    /// Loop-invariant scalar names bound at launch.
+    pub scalars: Vec<String>,
+    /// Reduction accumulator names (written back after the launch).
+    pub reductions: Vec<String>,
+    /// Per-iteration temporary names (slot-indexed).
+    pub temps: Vec<String>,
+}
+
+impl CompiledLoop {
+    /// True when the compiled nest performs a scalar reduction.
+    pub fn is_reduction(&self) -> bool {
+        !self.reductions.is_empty()
+    }
+}
+
+// ===================================================================
+// Compilation (AST -> CompiledLoop)
+// ===================================================================
+
+struct Compiler {
+    /// Names of loop variables currently in scope (innermost last).
+    visible_loop_vars: Vec<String>,
+    /// Slot allocated for each visible loop var (parallel to the above).
+    visible_slots: Vec<usize>,
+    /// Total slots allocated so far.
+    n_vars: usize,
+    arrays: Vec<String>,
+    scalars: Vec<String>,
+    reductions: Vec<String>,
+    /// Per-iteration temporaries: (name, defining expression).
+    temps: Vec<(String, Sym)>,
+}
+
+impl Compiler {
+    fn arr_slot(&mut self, name: &str) -> usize {
+        if let Some(i) = self.arrays.iter().position(|a| a == name) {
+            i
+        } else {
+            self.arrays.push(name.to_string());
+            self.arrays.len() - 1
+        }
+    }
+
+    fn scalar_slot(&mut self, name: &str) -> usize {
+        if let Some(i) = self.scalars.iter().position(|a| a == name) {
+            i
+        } else {
+            self.scalars.push(name.to_string());
+            self.scalars.len() - 1
+        }
+    }
+
+    fn compile_expr(&mut self, e: &Expr) -> Option<Sym> {
+        Some(match &e.kind {
+            ExprKind::IntLit(v) => Sym::Const(*v as f64),
+            ExprKind::FloatLit(v) => Sym::Const(*v),
+            ExprKind::Ident(n) => {
+                if let Some(k) = self.visible_loop_vars.iter().rposition(|v| v == n) {
+                    // Map visible-name -> its allocated slot.
+                    Sym::LoopVar(self.visible_slots[k])
+                } else if let Some(k) = self.temps.iter().position(|(t, _)| t == n) {
+                    Sym::Tmp(k)
+                } else if self.reductions.iter().any(|r| r == n) {
+                    // Reduction accumulators may not feed other expressions.
+                    return None;
+                } else {
+                    Sym::Scalar(self.scalar_slot(n))
+                }
+            }
+            ExprKind::Binary(op, a, b) => {
+                if matches!(op, BinOp::And | BinOp::Or) {
+                    return None; // short-circuit semantics not vectorizable here
+                }
+                Sym::Bin(
+                    *op,
+                    Box::new(self.compile_expr(a)?),
+                    Box::new(self.compile_expr(b)?),
+                )
+            }
+            ExprKind::Unary(UnOp::Neg, a) => Sym::Neg(Box::new(self.compile_expr(a)?)),
+            ExprKind::Cast(ty, a) => {
+                let inner = self.compile_expr(a)?;
+                match ty.base() {
+                    Some(b) if b.is_float() => inner,
+                    Some(_) => Sym::Trunc(Box::new(inner)),
+                    None => return None,
+                }
+            }
+            ExprKind::Ternary(c, t, f) => Sym::Ternary(
+                Box::new(self.compile_expr(c)?),
+                Box::new(self.compile_expr(t)?),
+                Box::new(self.compile_expr(f)?),
+            ),
+            ExprKind::Call(name, args) => {
+                if let Some(f) = builtins::math1(name) {
+                    if args.len() != 1 {
+                        return None;
+                    }
+                    Sym::Call1(f, Box::new(self.compile_expr(&args[0])?))
+                } else if let Some(f) = builtins::math2(name) {
+                    if args.len() != 2 {
+                        return None;
+                    }
+                    Sym::Call2(
+                        f,
+                        Box::new(self.compile_expr(&args[0])?),
+                        Box::new(self.compile_expr(&args[1])?),
+                    )
+                } else {
+                    return None; // user calls can't run on the device
+                }
+            }
+            ExprKind::Index(..) => {
+                let (base, idx) = super::eval::collect_index_chain(e).ok()?;
+                let name = match &base.kind {
+                    ExprKind::Ident(n) => n.clone(),
+                    _ => return None,
+                };
+                if self.visible_loop_vars.iter().any(|v| *v == name) {
+                    return None;
+                }
+                let slot = self.arr_slot(&name);
+                let mut indices = Vec::with_capacity(idx.len());
+                for i in idx {
+                    indices.push(self.compile_expr(i)?);
+                }
+                Sym::Read(slot, indices)
+            }
+            _ => return None,
+        })
+    }
+
+    fn compile_stmt(&mut self, s: &Stmt, out: &mut Vec<BulkStmt>) -> Option<()> {
+        match &s.kind {
+            StmtKind::Block(stmts) => {
+                for st in stmts {
+                    self.compile_stmt(st, out)?;
+                }
+                Some(())
+            }
+            StmtKind::Empty => Some(()),
+            // Nested loop (perfect or imperfect): compile recursively with
+            // a fresh loop-variable slot.
+            StmtKind::For { .. } => {
+                let (var, spec, body) = self.compile_for(s)?;
+                self.visible_loop_vars.push(var);
+                self.visible_slots.push(spec.var);
+                let mut inner = Vec::new();
+                let ok = self.compile_stmt(body, &mut inner);
+                self.visible_loop_vars.pop();
+                self.visible_slots.pop();
+                ok?;
+                if inner.is_empty() {
+                    return None;
+                }
+                out.push(BulkStmt::Loop { spec, body: inner });
+                Some(())
+            }
+            StmtKind::Expr(e) => match &e.kind {
+                ExprKind::Assign(op, lhs, rhs) => {
+                    match &lhs.kind {
+                        ExprKind::Index(..) => {
+                            let (base, idx) = super::eval::collect_index_chain(lhs).ok()?;
+                            let name = match &base.kind {
+                                ExprKind::Ident(n) => n.clone(),
+                                _ => return None,
+                            };
+                            let slot = self.arr_slot(&name);
+                            let mut indices = Vec::with_capacity(idx.len());
+                            for i in idx {
+                                indices.push(self.compile_expr(i)?);
+                            }
+                            let value = self.compile_expr(rhs)?;
+                            out.push(BulkStmt::Store { arr: slot, indices, op: *op, value });
+                            Some(())
+                        }
+                        ExprKind::Ident(name) => {
+                            // Scalar write: either a reduction (acc += v /
+                            // acc = acc + v) or a per-iteration temporary
+                            // (t = expr not involving t from a previous
+                            // iteration) — NR bodies use both.
+                            let reduction: Option<(AssignOp, &Expr)> = match op {
+                                AssignOp::Add | AssignOp::Sub => Some((*op, rhs.as_ref())),
+                                AssignOp::Set => match &rhs.kind {
+                                    ExprKind::Binary(BinOp::Add, a, b) => {
+                                        if matches!(&a.kind, ExprKind::Ident(n) if n == name) {
+                                            Some((AssignOp::Add, b.as_ref()))
+                                        } else if matches!(&b.kind, ExprKind::Ident(n) if n == name)
+                                        {
+                                            Some((AssignOp::Add, a.as_ref()))
+                                        } else {
+                                            None
+                                        }
+                                    }
+                                    _ => None,
+                                },
+                                _ => None,
+                            };
+                            let is_known_temp =
+                                self.temps.iter().any(|(t, _)| t == name);
+                            if let (Some((rop, value_expr)), false) = (reduction, is_known_temp) {
+                                if !self.reductions.iter().any(|r| r == name) {
+                                    // Accumulator must not already be a read scalar.
+                                    if self.scalars.iter().any(|r| r == name) {
+                                        return None;
+                                    }
+                                    self.reductions.push(name.clone());
+                                }
+                                let acc =
+                                    self.reductions.iter().position(|r| r == name).unwrap();
+                                let value = self.compile_expr(value_expr)?;
+                                out.push(BulkStmt::Reduce { acc, op: rop, value });
+                                return Some(());
+                            }
+                            // Temporary definition / redefinition.
+                            if self.reductions.iter().any(|r| r == name) {
+                                return None; // mixing reduction + temp roles
+                            }
+                            if !is_known_temp && self.scalars.iter().any(|r| r == name) {
+                                // Read earlier in the body before this write:
+                                // cross-iteration value flow — not offloadable.
+                                return None;
+                            }
+                            if *op == AssignOp::Set {
+                                let value = self.compile_expr(rhs)?;
+                                let slot = match self.temps.iter().position(|(t, _)| t == name) {
+                                    Some(k) => {
+                                        self.temps[k].1 = value.clone();
+                                        k
+                                    }
+                                    None => {
+                                        self.temps.push((name.clone(), value.clone()));
+                                        self.temps.len() - 1
+                                    }
+                                };
+                                out.push(BulkStmt::LetTmp { slot, value });
+                                return Some(());
+                            }
+                            // Compound op on an existing temp: t op= v.
+                            if is_known_temp {
+                                let slot =
+                                    self.temps.iter().position(|(t, _)| t == name).unwrap();
+                                let bin = match op {
+                                    AssignOp::Add => BinOp::Add,
+                                    AssignOp::Sub => BinOp::Sub,
+                                    AssignOp::Mul => BinOp::Mul,
+                                    AssignOp::Div => BinOp::Div,
+                                    _ => return None,
+                                };
+                                let rhs_sym = self.compile_expr(rhs)?;
+                                let value = Sym::Bin(
+                                    bin,
+                                    Box::new(Sym::Tmp(slot)),
+                                    Box::new(rhs_sym),
+                                );
+                                self.temps[slot].1 = value.clone();
+                                out.push(BulkStmt::LetTmp { slot, value });
+                                return Some(());
+                            }
+                            None
+                        }
+                        _ => None,
+                    }
+                }
+                _ => None,
+            },
+            _ => None,
+        }
+    }
+
+    /// Parse one `for` header into (loop var name, LoopSpec with a freshly
+    /// allocated slot) + body reference.
+    fn compile_for<'a>(&mut self, s: &'a Stmt) -> Option<(String, LoopSpec, &'a Stmt)> {
+        let StmtKind::For { init, cond, step, body } = &s.kind else {
+            return None;
+        };
+        // Loop variable + lower bound.
+        let (var, lo) = match init.as_deref() {
+            Some(Stmt { kind: StmtKind::Decl(ds), .. }) if ds.len() == 1 => {
+                let d = &ds[0];
+                if !d.dims.is_empty() {
+                    return None;
+                }
+                (d.name.clone(), self.compile_expr(d.init.as_ref()?)?)
+            }
+            Some(Stmt { kind: StmtKind::Expr(e), .. }) => match &e.kind {
+                ExprKind::Assign(AssignOp::Set, l, r) => match &l.kind {
+                    ExprKind::Ident(n) => (n.clone(), self.compile_expr(r)?),
+                    _ => return None,
+                },
+                _ => return None,
+            },
+            _ => return None,
+        };
+        // Upper bound: `var < e` or `var <= e`.
+        let (hi, inclusive) = match cond.as_ref()? {
+            Expr { kind: ExprKind::Binary(op @ (BinOp::Lt | BinOp::Le), a, b), .. } => {
+                match &a.kind {
+                    ExprKind::Ident(n) if *n == var => {
+                        (self.compile_expr(b)?, matches!(op, BinOp::Le))
+                    }
+                    _ => return None,
+                }
+            }
+            _ => return None,
+        };
+        // Step: `var++`, `++var`, `var += c`, `var = var + c`.
+        let step_by = match step.as_ref()? {
+            Expr { kind: ExprKind::PostIncDec(t, true), .. } => match &t.kind {
+                ExprKind::Ident(n) if *n == var => 1,
+                _ => return None,
+            },
+            Expr { kind: ExprKind::Unary(UnOp::PreInc, t), .. } => match &t.kind {
+                ExprKind::Ident(n) if *n == var => 1,
+                _ => return None,
+            },
+            Expr { kind: ExprKind::Assign(AssignOp::Add, l, r), .. } => {
+                match (&l.kind, &r.kind) {
+                    (ExprKind::Ident(n), ExprKind::IntLit(c)) if *n == var && *c > 0 => *c,
+                    _ => return None,
+                }
+            }
+            Expr { kind: ExprKind::Assign(AssignOp::Set, l, r), .. } => {
+                match (&l.kind, &r.kind) {
+                    (ExprKind::Ident(n), ExprKind::Binary(BinOp::Add, a, b)) if *n == var => {
+                        match (&a.kind, &b.kind) {
+                            (ExprKind::Ident(m), ExprKind::IntLit(c)) if *m == var && *c > 0 => *c,
+                            _ => return None,
+                        }
+                    }
+                    _ => return None,
+                }
+            }
+            _ => return None,
+        };
+        let slot = self.n_vars;
+        self.n_vars += 1;
+        Some((var, LoopSpec { var: slot, lo, hi, inclusive, step: step_by }, body))
+    }
+}
+
+/// Try to compile a `for` statement (possibly a nest) for bulk execution.
+/// Returns `None` when the loop shape is not offloadable — callers fall back
+/// to interpretation (and the analysis pass will not have produced a gene
+/// for such loops in the first place).
+pub fn compile_loop(s: &Stmt) -> Option<CompiledLoop> {
+    let mut c = Compiler {
+        visible_loop_vars: Vec::new(),
+        visible_slots: Vec::new(),
+        n_vars: 0,
+        arrays: Vec::new(),
+        scalars: Vec::new(),
+        reductions: Vec::new(),
+        temps: Vec::new(),
+    };
+    let mut body_out = Vec::new();
+    c.compile_stmt(s, &mut body_out)?;
+    if body_out.is_empty() {
+        return None;
+    }
+
+    // Dependence check: collect every store in the (possibly nested)
+    // body; every read of a written array must be independence-provable
+    // or at uniform symbolic distance (PGI-style assumption; the
+    // verification environment re-checks outputs after offload anyway).
+    let temp_defs: Vec<Sym> = c.temps.iter().map(|(_, d)| d.clone()).collect();
+    let n_loops = c.n_vars;
+    let mut writes: Vec<(usize, Vec<Sym>)> = Vec::new();
+    collect_stores(&body_out, &mut writes);
+    for (arr, widx) in &writes {
+        if body_conflicts(&body_out, *arr, widx, n_loops, &temp_defs) {
+            return None;
+        }
+    }
+    Some(CompiledLoop {
+        n_vars: c.n_vars,
+        body: body_out,
+        arrays: c.arrays,
+        scalars: c.scalars,
+        reductions: c.reductions,
+        temps: c.temps.into_iter().map(|(n, _)| n).collect(),
+    })
+}
+
+fn collect_stores(body: &[BulkStmt], out: &mut Vec<(usize, Vec<Sym>)>) {
+    for st in body {
+        match st {
+            BulkStmt::Store { arr, indices, .. } => out.push((*arr, indices.clone())),
+            BulkStmt::Loop { body, .. } => collect_stores(body, out),
+            _ => {}
+        }
+    }
+}
+
+fn body_conflicts(
+    body: &[BulkStmt],
+    arr: usize,
+    widx: &[Sym],
+    n_loops: usize,
+    temp_defs: &[Sym],
+) -> bool {
+    for st in body {
+        match st {
+            BulkStmt::Store { value, indices, arr: a2, .. } => {
+                // Another write to the same array at a different index is a
+                // hazard unless provably distinct per iteration.
+                if *a2 == arr
+                    && indices != widx
+                    && !indices_independent(widx, indices, n_loops, temp_defs)
+                {
+                    return true;
+                }
+                if reads_conflict(value, arr, widx, n_loops, temp_defs) {
+                    return true;
+                }
+                for i in indices {
+                    if reads_conflict(i, arr, widx, n_loops, temp_defs) {
+                        return true;
+                    }
+                }
+            }
+            BulkStmt::Reduce { value, .. } | BulkStmt::LetTmp { value, .. } => {
+                if reads_conflict(value, arr, widx, n_loops, temp_defs) {
+                    return true;
+                }
+            }
+            BulkStmt::Loop { spec, body } => {
+                if reads_conflict(&spec.lo, arr, widx, n_loops, temp_defs)
+                    || reads_conflict(&spec.hi, arr, widx, n_loops, temp_defs)
+                {
+                    return true;
+                }
+                if body_conflicts(body, arr, widx, n_loops, temp_defs) {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+/// Affine decomposition of an index expression over the nest's loop
+/// variables: `sum(coeffs[k] * loopvar_k) + konst + sum(symbolic terms)`.
+#[derive(Debug, Clone, PartialEq)]
+struct Affine {
+    coeffs: Vec<f64>,
+    konst: f64,
+    /// Loop-invariant symbolic terms, normalized as (debug-string, coeff),
+    /// sorted for order-insensitive comparison.
+    terms: Vec<(String, f64)>,
+}
+
+impl Affine {
+    fn konst_only(n: usize, c: f64) -> Self {
+        Affine { coeffs: vec![0.0; n], konst: c, terms: vec![] }
+    }
+
+    fn is_const(&self) -> bool {
+        self.coeffs.iter().all(|&c| c == 0.0) && self.terms.is_empty()
+    }
+
+    fn add(mut self, other: &Affine, sign: f64) -> Affine {
+        for (a, b) in self.coeffs.iter_mut().zip(&other.coeffs) {
+            *a += sign * b;
+        }
+        self.konst += sign * other.konst;
+        for (t, c) in &other.terms {
+            match self.terms.iter_mut().find(|(s, _)| s == t) {
+                Some((_, acc)) => *acc += sign * c,
+                None => self.terms.push((t.clone(), sign * c)),
+            }
+        }
+        self.terms.retain(|(_, c)| *c != 0.0);
+        self.terms.sort_by(|a, b| a.0.cmp(&b.0));
+        self
+    }
+
+    fn scale(mut self, f: f64) -> Affine {
+        for c in self.coeffs.iter_mut() {
+            *c *= f;
+        }
+        self.konst *= f;
+        for (_, c) in self.terms.iter_mut() {
+            *c *= f;
+        }
+        self.terms.retain(|(_, c)| *c != 0.0);
+        self
+    }
+}
+
+/// Max temp-substitution depth for the dependence analysis. Temps may be
+/// self-referential (`sum += ...` compiles to `sum = sum + ...`), which is
+/// fine to *execute* (in-order per iteration) but must not be chased
+/// forever during analysis — beyond the cap we answer conservatively.
+const MAX_SUBST_DEPTH: usize = 64;
+
+/// True if `sym` depends on any loop variable (after temp substitution).
+fn loop_dependent(sym: &Sym, temp_defs: &[Sym]) -> bool {
+    loop_dependent_d(sym, temp_defs, 0)
+}
+
+fn loop_dependent_d(sym: &Sym, temp_defs: &[Sym], depth: usize) -> bool {
+    if depth > MAX_SUBST_DEPTH {
+        return true; // conservative: treat as loop-dependent
+    }
+    match sym {
+        Sym::LoopVar(_) => true,
+        Sym::Tmp(k) => loop_dependent_d(&temp_defs[*k], temp_defs, depth + 1),
+        Sym::Const(_) | Sym::Scalar(_) => false,
+        Sym::Bin(_, a, b) | Sym::Call2(_, a, b) => {
+            loop_dependent_d(a, temp_defs, depth + 1) || loop_dependent_d(b, temp_defs, depth + 1)
+        }
+        Sym::Neg(a) | Sym::Trunc(a) | Sym::Call1(_, a) => {
+            loop_dependent_d(a, temp_defs, depth + 1)
+        }
+        Sym::Ternary(c, t, f) => {
+            loop_dependent_d(c, temp_defs, depth + 1)
+                || loop_dependent_d(t, temp_defs, depth + 1)
+                || loop_dependent_d(f, temp_defs, depth + 1)
+        }
+        Sym::Read(_, idx) => idx.iter().any(|i| loop_dependent_d(i, temp_defs, depth + 1)),
+    }
+}
+
+/// Decompose an index expression into affine form (temps substituted).
+/// `None` = not affine in the loop variables.
+fn affine(sym: &Sym, n: usize, temp_defs: &[Sym]) -> Option<Affine> {
+    affine_d(sym, n, temp_defs, 0)
+}
+
+fn affine_d(sym: &Sym, n: usize, temp_defs: &[Sym], depth: usize) -> Option<Affine> {
+    if depth > MAX_SUBST_DEPTH {
+        return None; // conservative: not analyzable
+    }
+    match sym {
+        Sym::Const(c) => Some(Affine::konst_only(n, *c)),
+        Sym::LoopVar(k) => {
+            let mut a = Affine::konst_only(n, 0.0);
+            a.coeffs[*k] = 1.0;
+            Some(a)
+        }
+        Sym::Tmp(k) => affine_d(&temp_defs[*k], n, temp_defs, depth + 1),
+        Sym::Scalar(_) => Some(Affine {
+            coeffs: vec![0.0; n],
+            konst: 0.0,
+            terms: vec![(format!("{sym:?}"), 1.0)],
+        }),
+        Sym::Neg(a) => Some(affine_d(a, n, temp_defs, depth + 1)?.scale(-1.0)),
+        Sym::Bin(BinOp::Add, a, b) => {
+            let fa = affine_d(a, n, temp_defs, depth + 1)?;
+            let fb = affine_d(b, n, temp_defs, depth + 1)?;
+            Some(fa.add(&fb, 1.0))
+        }
+        Sym::Bin(BinOp::Sub, a, b) => {
+            let fa = affine_d(a, n, temp_defs, depth + 1)?;
+            let fb = affine_d(b, n, temp_defs, depth + 1)?;
+            Some(fa.add(&fb, -1.0))
+        }
+        Sym::Bin(BinOp::Mul, a, b) => {
+            let fa = affine_d(a, n, temp_defs, depth + 1)?;
+            let fb = affine_d(b, n, temp_defs, depth + 1)?;
+            if fa.is_const() {
+                return Some(fb.scale(fa.konst));
+            }
+            if fb.is_const() {
+                return Some(fa.scale(fb.konst));
+            }
+            // Product of non-constant parts: loop-invariant => opaque term;
+            // loop-dependent => non-affine.
+            if loop_dependent(sym, temp_defs) {
+                None
+            } else {
+                Some(Affine {
+                    coeffs: vec![0.0; n],
+                    konst: 0.0,
+                    terms: vec![(format!("{sym:?}"), 1.0)],
+                })
+            }
+        }
+        // Anything else: loop-invariant => opaque; loop-dependent => not
+        // affine.
+        other => {
+            if loop_dependent(other, temp_defs) {
+                None
+            } else {
+                Some(Affine {
+                    coeffs: vec![0.0; n],
+                    konst: 0.0,
+                    terms: vec![(format!("{other:?}"), 1.0)],
+                })
+            }
+        }
+    }
+}
+
+/// Can iterations run concurrently given a write at `widx` and another
+/// access at `ridx` of the same array?
+///
+/// * non-affine or mismatched loop-var coefficients → **conflict**,
+/// * identical index expressions → same element each iteration → safe,
+/// * equal symbolic parts but different constants → definite nonzero
+///   loop-carried distance (prefix-sum shape) → **conflict**,
+/// * differing loop-invariant symbolic parts (`a[i*n+j]` vs `a[k*n+j]`) →
+///   assumed disjoint, the PGI-style assumption; the verification
+///   environment re-validates outputs after offload.
+fn indices_independent(
+    widx: &[Sym],
+    ridx: &[Sym],
+    n_loops: usize,
+    temp_defs: &[Sym],
+) -> bool {
+    if widx.len() != ridx.len() {
+        return false;
+    }
+    let mut all_same = true;
+    let mut symbolic_diff = false;
+    for (w, r) in widx.iter().zip(ridx) {
+        let (Some(aw), Some(ar)) = (affine(w, n_loops, temp_defs), affine(r, n_loops, temp_defs))
+        else {
+            return false;
+        };
+        if aw.coeffs != ar.coeffs {
+            return false;
+        }
+        if aw.terms != ar.terms {
+            symbolic_diff = true;
+            all_same = false;
+        } else if aw.konst != ar.konst {
+            all_same = false;
+            // constant distance in this dimension — only safe if another
+            // dimension separates them symbolically.
+        }
+    }
+    all_same || symbolic_diff
+}
+
+/// True if `e` reads `arr` at indices that conflict with a write at
+/// `write_idx` (loop-carried dependence ⇒ not parallelizable).
+fn reads_conflict(
+    e: &Sym,
+    arr: usize,
+    write_idx: &[Sym],
+    n_loops: usize,
+    temp_defs: &[Sym],
+) -> bool {
+    reads_conflict_d(e, arr, write_idx, n_loops, temp_defs, 0)
+}
+
+fn reads_conflict_d(
+    e: &Sym,
+    arr: usize,
+    write_idx: &[Sym],
+    n_loops: usize,
+    temp_defs: &[Sym],
+    depth: usize,
+) -> bool {
+    if depth > MAX_SUBST_DEPTH {
+        return true; // conservative: assume a conflict
+    }
+    match e {
+        Sym::Read(a, idx) => {
+            if *a == arr && !indices_independent(write_idx, idx, n_loops, temp_defs) {
+                return true;
+            }
+            idx.iter()
+                .any(|i| reads_conflict_d(i, arr, write_idx, n_loops, temp_defs, depth + 1))
+        }
+        Sym::Bin(_, a, b) | Sym::Call2(_, a, b) => {
+            reads_conflict_d(a, arr, write_idx, n_loops, temp_defs, depth + 1)
+                || reads_conflict_d(b, arr, write_idx, n_loops, temp_defs, depth + 1)
+        }
+        Sym::Neg(a) | Sym::Trunc(a) | Sym::Call1(_, a) => {
+            reads_conflict_d(a, arr, write_idx, n_loops, temp_defs, depth + 1)
+        }
+        Sym::Ternary(c, t, f) => {
+            reads_conflict_d(c, arr, write_idx, n_loops, temp_defs, depth + 1)
+                || reads_conflict_d(t, arr, write_idx, n_loops, temp_defs, depth + 1)
+                || reads_conflict_d(f, arr, write_idx, n_loops, temp_defs, depth + 1)
+        }
+        // Temps are substituted at definition sites; a Tmp reference here
+        // reads the already-checked definition (self-referential defs are
+        // cut off by the depth cap).
+        Sym::Tmp(k) => {
+            reads_conflict_d(&temp_defs[*k], arr, write_idx, n_loops, temp_defs, depth + 1)
+        }
+        _ => false,
+    }
+}
+
+// ===================================================================
+// Execution
+// ===================================================================
+
+struct Device {
+    /// Scratch copies of the bound arrays ("device memory").
+    bufs: Vec<Vec<f64>>,
+    dims: Vec<Vec<usize>>,
+    scalars: Vec<f64>,
+    accs: Vec<f64>,
+    temps: Vec<f64>,
+    loop_vals: Vec<i64>,
+}
+
+impl Device {
+    fn eval(&mut self, e: &Sym) -> Result<f64> {
+        Ok(match e {
+            Sym::Const(v) => *v,
+            Sym::LoopVar(k) => self.loop_vals[*k] as f64,
+            Sym::Scalar(k) => self.scalars[*k],
+            Sym::Tmp(k) => self.temps[*k],
+            Sym::Neg(a) => -self.eval(a)?,
+            Sym::Trunc(a) => self.eval(a)?.trunc(),
+            Sym::Call1(f, a) => f(self.eval(a)?),
+            Sym::Call2(f, a, b) => {
+                let x = self.eval(a)?;
+                let y = self.eval(b)?;
+                f(x, y)
+            }
+            Sym::Ternary(c, t, f) => {
+                if self.eval(c)? != 0.0 {
+                    self.eval(t)?
+                } else {
+                    self.eval(f)?
+                }
+            }
+            Sym::Bin(op, a, b) => {
+                let x = self.eval(a)?;
+                let y = self.eval(b)?;
+                match op {
+                    BinOp::Add => x + y,
+                    BinOp::Sub => x - y,
+                    BinOp::Mul => x * y,
+                    BinOp::Div => x / y,
+                    BinOp::Rem => x % y,
+                    BinOp::Eq => (x == y) as i64 as f64,
+                    BinOp::Ne => (x != y) as i64 as f64,
+                    BinOp::Lt => (x < y) as i64 as f64,
+                    BinOp::Gt => (x > y) as i64 as f64,
+                    BinOp::Le => (x <= y) as i64 as f64,
+                    BinOp::Ge => (x >= y) as i64 as f64,
+                    BinOp::BitAnd => ((x as i64) & (y as i64)) as f64,
+                    BinOp::BitOr => ((x as i64) | (y as i64)) as f64,
+                    BinOp::BitXor => ((x as i64) ^ (y as i64)) as f64,
+                    BinOp::Shl => ((x as i64) << (y as i64)) as f64,
+                    BinOp::Shr => ((x as i64) >> (y as i64)) as f64,
+                    BinOp::And | BinOp::Or => bail!("logical op on device"),
+                }
+            }
+            Sym::Read(slot, idx) => {
+                let flat = self.flat_index(*slot, idx)?;
+                self.bufs[*slot][flat]
+            }
+        })
+    }
+
+    fn flat_index(&mut self, slot: usize, idx: &[Sym]) -> Result<usize> {
+        let ndim = self.dims[slot].len();
+        if idx.len() != ndim {
+            bail!("array indexed with {} of {} dims on device", idx.len(), ndim);
+        }
+        let mut flat = 0usize;
+        for (k, ix) in idx.iter().enumerate() {
+            let v = self.eval(ix)? as i64;
+            let dims = &self.dims[slot];
+            if v < 0 || (v as usize) >= dims[k] {
+                bail!("device index {v} out of bounds for dim {}", dims[k]);
+            }
+            flat = flat * self.dims[slot][k] + v as usize;
+        }
+        Ok(flat)
+    }
+}
+
+/// Execute a compiled nest. Returns Ok(false) if launch-time binding fails
+/// (caller falls back to interpretation).
+pub fn run_bulk(interp: &mut Interp, c: &CompiledLoop) -> Result<bool> {
+    // --- bind ---------------------------------------------------------
+    let mut slices = Vec::with_capacity(c.arrays.len());
+    for name in &c.arrays {
+        match interp_lookup(interp, name) {
+            Some(Value::Arr(s)) => slices.push(s),
+            _ => return Ok(false),
+        }
+    }
+    let mut scalars = Vec::with_capacity(c.scalars.len());
+    for name in &c.scalars {
+        match interp_lookup(interp, name) {
+            Some(Value::Int(v)) => scalars.push(v as f64),
+            Some(Value::Float(v)) => scalars.push(v),
+            _ => return Ok(false),
+        }
+    }
+    let mut accs = Vec::with_capacity(c.reductions.len());
+    for name in &c.reductions {
+        match interp_lookup(interp, name) {
+            Some(Value::Int(v)) => accs.push(v as f64),
+            Some(Value::Float(v)) => accs.push(v),
+            _ => return Ok(false),
+        }
+    }
+
+    // --- launch + H2D transfer ----------------------------------------
+    spin_wait(LAUNCH_OVERHEAD);
+    let mut dev = Device {
+        bufs: slices.iter().map(|s| s.to_vec()).collect(),
+        dims: slices.iter().map(|s| s.dims.clone()).collect(),
+        scalars,
+        accs,
+        temps: vec![0.0; c.temps.len()],
+        loop_vals: vec![0; c.n_vars],
+    };
+    let bytes: u64 = dev.bufs.iter().map(|b| (b.len() * 8) as u64).sum();
+    interp.stats.transfer_bytes += bytes * 2; // in + out
+
+    // --- execute --------------------------------------------------------
+    exec_body(&mut dev, &c.body)?;
+
+    // --- D2H transfer + write-back -------------------------------------
+    for (slice, buf) in slices.iter().zip(&dev.bufs) {
+        slice.copy_from(buf)?;
+    }
+    for (name, v) in c.reductions.iter().zip(&dev.accs) {
+        interp_store_scalar(interp, name, *v)?;
+    }
+    Ok(true)
+}
+
+fn exec_body(dev: &mut Device, body: &[BulkStmt]) -> Result<()> {
+    for st in body {
+        match st {
+            BulkStmt::Store { arr, indices, op, value } => {
+                let v = dev.eval(value)?;
+                let flat = dev.flat_index(*arr, indices)?;
+                let slot = &mut dev.bufs[*arr][flat];
+                *slot = apply_assign(*op, *slot, v)?;
+            }
+            BulkStmt::Reduce { acc, op, value } => {
+                let v = dev.eval(value)?;
+                let slot = &mut dev.accs[*acc];
+                *slot = apply_assign(*op, *slot, v)?;
+            }
+            BulkStmt::LetTmp { slot, value } => {
+                let v = dev.eval(value)?;
+                dev.temps[*slot] = v;
+            }
+            BulkStmt::Loop { spec, body } => {
+                let lo = dev.eval(&spec.lo)? as i64;
+                let hi = dev.eval(&spec.hi)? as i64;
+                let end = if spec.inclusive { hi + 1 } else { hi };
+                let mut i = lo;
+                while i < end {
+                    dev.loop_vals[spec.var] = i;
+                    exec_body(dev, body)?;
+                    i += spec.step;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn apply_assign(op: AssignOp, old: f64, v: f64) -> Result<f64> {
+    Ok(match op {
+        AssignOp::Set => v,
+        AssignOp::Add => old + v,
+        AssignOp::Sub => old - v,
+        AssignOp::Mul => old * v,
+        AssignOp::Div => old / v,
+        AssignOp::Rem => old % v,
+        AssignOp::Shl => ((old as i64) << (v as i64)) as f64,
+        AssignOp::Shr => ((old as i64) >> (v as i64)) as f64,
+    })
+}
+
+fn spin_wait(d: Duration) {
+    let t0 = Instant::now();
+    while t0.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+// Small helpers reaching into the interpreter's scopes without exposing its
+// internals publicly.
+fn interp_lookup(interp: &Interp, name: &str) -> Option<Value> {
+    interp.lookup_value(name)
+}
+
+fn interp_store_scalar(interp: &mut Interp, name: &str, v: f64) -> Result<()> {
+    interp.store_scalar(name, v)
+}

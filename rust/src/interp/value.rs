@@ -1,0 +1,296 @@
+//! Runtime values for the mini-C interpreter.
+//!
+//! Arrays are flat `f64` buffers behind `Rc<RefCell<..>>` with a dims
+//! vector; a [`Slice`] is a (buffer, offset, dims) view so `a[i]` of a 2-D
+//! array yields a row view and arrays pass to callees by reference, exactly
+//! like C decay. Integer arrays share the `f64` buffer with store-time
+//! truncation (documented divergence: 53-bit exact integer range, ample for
+//! index/loop math in numeric kernels).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::fmt;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+/// Backing storage of an array object.
+#[derive(Debug)]
+pub struct ArrayData {
+    pub data: Vec<f64>,
+    /// True when the declared element type was integral.
+    pub is_int: bool,
+}
+
+pub type ArrRef = Rc<RefCell<ArrayData>>;
+
+/// A view into an array: `(buffer, element offset, remaining dims)`.
+#[derive(Clone)]
+pub struct Slice {
+    pub arr: ArrRef,
+    pub offset: usize,
+    pub dims: Vec<usize>,
+}
+
+impl Slice {
+    pub fn new(data: Vec<f64>, dims: Vec<usize>, is_int: bool) -> Self {
+        Slice {
+            arr: Rc::new(RefCell::new(ArrayData { data, is_int })),
+            offset: 0,
+            dims,
+        }
+    }
+
+    pub fn zeros(dims: &[usize], is_int: bool) -> Self {
+        let len: usize = dims.iter().product();
+        Slice::new(vec![0.0; len], dims.to_vec(), is_int)
+    }
+
+    /// Total elements in this view.
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Read element at flat position `i` within the view.
+    pub fn get(&self, i: usize) -> Result<f64> {
+        let idx = self.offset + i;
+        let b = self.arr.borrow();
+        match b.data.get(idx) {
+            Some(v) => Ok(*v),
+            None => bail!("array index {i} out of bounds (len {})", b.data.len()),
+        }
+    }
+
+    /// Write element at flat position `i` within the view.
+    pub fn set(&self, i: usize, v: f64) -> Result<()> {
+        let idx = self.offset + i;
+        let mut b = self.arr.borrow_mut();
+        let is_int = b.is_int;
+        match b.data.get_mut(idx) {
+            Some(slot) => {
+                *slot = if is_int { v.trunc() } else { v };
+                Ok(())
+            }
+            None => bail!("array index {i} out of bounds (len {})", b.data.len()),
+        }
+    }
+
+    /// Sub-view after applying one index on the leading dimension.
+    pub fn index(&self, i: i64) -> Result<SliceOrScalar> {
+        if self.dims.is_empty() {
+            bail!("cannot index a scalar view");
+        }
+        let d0 = self.dims[0];
+        if i < 0 || (i as usize) >= d0 {
+            bail!("index {i} out of bounds for dimension of size {d0}");
+        }
+        let stride: usize = self.dims[1..].iter().product();
+        let offset = self.offset + (i as usize) * stride.max(1);
+        if self.dims.len() == 1 {
+            let b = self.arr.borrow();
+            Ok(SliceOrScalar::Scalar(b.data[offset], b.is_int))
+        } else {
+            Ok(SliceOrScalar::Slice(Slice {
+                arr: self.arr.clone(),
+                offset,
+                dims: self.dims[1..].to_vec(),
+            }))
+        }
+    }
+
+    /// Copy the viewed elements out.
+    pub fn to_vec(&self) -> Vec<f64> {
+        let b = self.arr.borrow();
+        b.data[self.offset..self.offset + self.len()].to_vec()
+    }
+
+    /// Copy the viewed elements out as f32 (PJRT boundary).
+    pub fn to_vec_f32(&self) -> Vec<f32> {
+        let b = self.arr.borrow();
+        b.data[self.offset..self.offset + self.len()]
+            .iter()
+            .map(|&v| v as f32)
+            .collect()
+    }
+
+    /// Overwrite the viewed elements from f32 data (PJRT boundary).
+    pub fn copy_from_f32(&self, src: &[f32]) -> Result<()> {
+        let n = self.len();
+        if src.len() != n {
+            bail!("copy_from_f32 length mismatch: view {n}, src {}", src.len());
+        }
+        let mut b = self.arr.borrow_mut();
+        for (dst, s) in b.data[self.offset..self.offset + n].iter_mut().zip(src) {
+            *dst = *s as f64;
+        }
+        Ok(())
+    }
+
+    /// Overwrite the viewed elements from f64 data.
+    pub fn copy_from(&self, src: &[f64]) -> Result<()> {
+        let n = self.len();
+        if src.len() != n {
+            bail!("copy_from length mismatch: view {n}, src {}", src.len());
+        }
+        let mut b = self.arr.borrow_mut();
+        b.data[self.offset..self.offset + n].copy_from_slice(src);
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Slice {
+    // Debug intentionally avoids dumping potentially huge buffers.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "Slice(offset={}, dims={:?}, len={})",
+            self.offset,
+            self.dims,
+            self.len()
+        )
+    }
+}
+
+/// Result of indexing a slice: another view, or a scalar read.
+pub enum SliceOrScalar {
+    Slice(Slice),
+    Scalar(f64, bool /* is_int */),
+}
+
+/// Struct instance (reference semantics; see module doc).
+#[derive(Debug)]
+pub struct StructData {
+    pub name: String,
+    pub fields: HashMap<String, Value>,
+}
+
+pub type StructRef = Rc<RefCell<StructData>>;
+
+/// A runtime value.
+#[derive(Clone, Debug)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Arr(Slice),
+    Struct(StructRef),
+    Str(Rc<String>),
+    Void,
+}
+
+impl Value {
+    pub fn as_num(&self) -> Result<f64> {
+        match self {
+            Value::Int(v) => Ok(*v as f64),
+            Value::Float(v) => Ok(*v),
+            other => bail!("expected numeric value, got {}", other.type_name()),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(v) => Ok(*v),
+            Value::Float(v) => Ok(*v as i64),
+            other => bail!("expected integer value, got {}", other.type_name()),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&Slice> {
+        match self {
+            Value::Arr(s) => Ok(s),
+            other => bail!("expected array value, got {}", other.type_name()),
+        }
+    }
+
+    pub fn truthy(&self) -> Result<bool> {
+        Ok(self.as_num()? != 0.0)
+    }
+
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Int(_) => "int",
+            Value::Float(_) => "float",
+            Value::Arr(_) => "array",
+            Value::Struct(_) => "struct",
+            Value::Str(_) => "string",
+            Value::Void => "void",
+        }
+    }
+
+    /// Coerce `v` to the kind of `self` (assignment into a typed slot).
+    pub fn coerce_like(&self, v: Value) -> Result<Value> {
+        Ok(match self {
+            Value::Int(_) => Value::Int(v.as_int()?),
+            Value::Float(_) => Value::Float(v.as_num()?),
+            _ => v,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_roundtrip() {
+        let s = Slice::zeros(&[4, 3], false);
+        s.set(5, 2.5).unwrap();
+        assert_eq!(s.get(5).unwrap(), 2.5);
+        assert_eq!(s.len(), 12);
+    }
+
+    #[test]
+    fn int_arrays_truncate() {
+        let s = Slice::zeros(&[2], true);
+        s.set(0, 2.9).unwrap();
+        assert_eq!(s.get(0).unwrap(), 2.0);
+    }
+
+    #[test]
+    fn row_view_shares_storage() {
+        let s = Slice::zeros(&[3, 4], false);
+        match s.index(1).unwrap() {
+            SliceOrScalar::Slice(row) => {
+                row.set(2, 7.0).unwrap();
+            }
+            _ => panic!("expected slice"),
+        }
+        assert_eq!(s.get(1 * 4 + 2).unwrap(), 7.0);
+    }
+
+    #[test]
+    fn last_dim_index_yields_scalar() {
+        let s = Slice::new(vec![1.0, 2.0, 3.0], vec![3], false);
+        match s.index(2).unwrap() {
+            SliceOrScalar::Scalar(v, _) => assert_eq!(v, 3.0),
+            _ => panic!("expected scalar"),
+        }
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let s = Slice::zeros(&[2], false);
+        assert!(s.get(5).is_err());
+        assert!(s.index(2).is_err());
+        assert!(s.index(-1).is_err());
+    }
+
+    #[test]
+    fn f32_boundary_roundtrip() {
+        let s = Slice::zeros(&[3], false);
+        s.copy_from_f32(&[1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(s.to_vec_f32(), vec![1.0f32, 2.0, 3.0]);
+        assert!(s.copy_from_f32(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn coercion_follows_slot_type() {
+        let slot = Value::Int(0);
+        assert!(matches!(slot.coerce_like(Value::Float(2.7)).unwrap(), Value::Int(2)));
+        let slot = Value::Float(0.0);
+        assert!(matches!(slot.coerce_like(Value::Int(3)).unwrap(), Value::Float(v) if v == 3.0));
+    }
+}

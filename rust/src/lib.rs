@@ -1,0 +1,33 @@
+//! `fbo` — automatic GPU / FPGA offloading of application **function blocks**.
+//!
+//! Reproduction of Yamato, *"Evaluation of Automatic GPU and FPGA Offloading
+//! for Function Blocks of Applications"* (2020), built as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: source analysis,
+//!   code-pattern DB matching, Deckard-style similarity detection, interface
+//!   reconciliation, offload-pattern search with measured verification, and
+//!   the GA loop-offload baseline of the prior work.
+//! * **Layer 2 / Layer 1 (python/compile)** — JAX graphs + Pallas kernels
+//!   standing in for cuFFT / cuSOLVER / cuBLAS, AOT-lowered to HLO text.
+//! * **Runtime** — the [`runtime`] module loads `artifacts/*.hlo.txt` via the
+//!   PJRT CPU client and executes them from the rust hot path. Python never
+//!   runs at request time.
+//!
+//! Start at [`coordinator::Coordinator`] for the end-to-end flow, or the
+//! `examples/` directory for runnable scenarios.
+
+pub mod analysis;
+pub mod coordinator;
+pub mod fpga;
+pub mod ga;
+pub mod interp;
+pub mod metrics;
+pub mod parser;
+pub mod patterndb;
+pub mod runtime;
+pub mod similarity;
+pub mod transform;
+
+/// Crate-wide result type (anyhow-backed).
+pub type Result<T> = anyhow::Result<T>;

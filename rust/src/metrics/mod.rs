@@ -1,0 +1,189 @@
+//! Measurement utilities for the verification environment.
+//!
+//! The paper's method is *measurement-driven*: every candidate pattern is
+//! timed on the verification machine and the fastest wins. This module
+//! provides robust repeated timing (median-of-k), speedup accounting, and
+//! the plain-text report tables the benches print (Fig. 5 shape).
+
+use std::time::{Duration, Instant};
+
+/// Result of measuring one candidate pattern.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub label: String,
+    /// Median wall-clock of the repetitions.
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub reps: usize,
+}
+
+impl Measurement {
+    pub fn secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Time `f` `reps` times (after `warmup` unmeasured runs), keep the median.
+pub fn measure<F: FnMut() -> anyhow::Result<()>>(
+    label: &str,
+    warmup: usize,
+    reps: usize,
+    mut f: F,
+) -> anyhow::Result<Measurement> {
+    for _ in 0..warmup {
+        f()?;
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f()?;
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    Ok(Measurement {
+        label: label.to_string(),
+        median: times[times.len() / 2],
+        min: times[0],
+        max: *times.last().unwrap(),
+        reps: times.len(),
+    })
+}
+
+/// Speedup of `baseline` relative to `candidate` (>1 = candidate faster).
+pub fn speedup(baseline: &Measurement, candidate: &Measurement) -> f64 {
+    baseline.secs() / candidate.secs().max(1e-12)
+}
+
+/// Fixed-width text table (the benches print Fig. 4 / Fig. 5 analogs).
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                let cell = cells.get(i).map(|s| s.as_str()).unwrap_or("");
+                line.push_str(&format!(" {cell:<w$} |", w = widths[i]));
+            }
+            line
+        };
+        let sep = {
+            let mut s = String::from("|");
+            for w in &widths {
+                s.push_str(&format!("{}|", "-".repeat(w + 2)));
+            }
+            s
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Human-friendly duration (µs/ms/s).
+pub fn fmt_duration(d: Duration) -> String {
+    let us = d.as_secs_f64() * 1e6;
+    if us < 1000.0 {
+        format!("{us:.1}µs")
+    } else if us < 1_000_000.0 {
+        format!("{:.2}ms", us / 1000.0)
+    } else {
+        format!("{:.3}s", us / 1e6)
+    }
+}
+
+/// Format a speedup factor the way the paper's Fig. 5 does (2 significant
+/// figures, no decimals above 10).
+pub fn fmt_speedup(x: f64) -> String {
+    if x >= 10.0 {
+        format!("{:.0}", x)
+    } else {
+        format!("{:.1}", x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_returns_median_of_reps() {
+        let m = measure("t", 0, 5, || {
+            std::thread::sleep(Duration::from_micros(100));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(m.reps, 5);
+        assert!(m.median >= Duration::from_micros(100));
+        assert!(m.min <= m.median && m.median <= m.max);
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let a = Measurement {
+            label: "a".into(),
+            median: Duration::from_millis(100),
+            min: Duration::ZERO,
+            max: Duration::ZERO,
+            reps: 1,
+        };
+        let b = Measurement {
+            label: "b".into(),
+            median: Duration::from_millis(10),
+            min: Duration::ZERO,
+            max: Duration::ZERO,
+            reps: 1,
+        };
+        assert!((speedup(&a, &b) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "speedup"]);
+        t.row(&["Fourier transform".to_string(), "730".to_string()]);
+        t.row(&["Matrix calculation".to_string(), "130000".to_string()]);
+        let s = t.render();
+        assert!(s.contains("| Fourier transform  | 730     |"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(Duration::from_micros(12)), "12.0µs");
+        assert_eq!(fmt_duration(Duration::from_millis(12)), "12.00ms");
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.000s");
+    }
+
+    #[test]
+    fn speedup_formatting() {
+        assert_eq!(fmt_speedup(5.43), "5.4");
+        assert_eq!(fmt_speedup(730.2), "730");
+    }
+}

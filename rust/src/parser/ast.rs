@@ -1,0 +1,410 @@
+//! AST for the mini-C front end.
+//!
+//! Every statement and expression carries a [`NodeId`] (stable within one
+//! parse) so analysis passes, the similarity detector, and the transformer
+//! can refer to program points without holding references into the tree.
+
+use super::token::Span;
+use std::fmt;
+
+/// Stable identifier of an AST node within one parsed program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+
+/// Scalar base types. All floating math is evaluated in f64 by the
+/// interpreter (C promotion rules for `float` are "compute in double").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BaseTy {
+    Int,
+    Long,
+    Char,
+    Float,
+    Double,
+    Void,
+}
+
+impl BaseTy {
+    pub fn is_float(self) -> bool {
+        matches!(self, BaseTy::Float | BaseTy::Double)
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            BaseTy::Int => "int",
+            BaseTy::Long => "long",
+            BaseTy::Char => "char",
+            BaseTy::Float => "float",
+            BaseTy::Double => "double",
+            BaseTy::Void => "void",
+        }
+    }
+}
+
+/// A (possibly struct / pointer) type.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Ty {
+    Base(BaseTy),
+    Struct(String),
+    /// `T*` — in this subset pointers are array handles.
+    Ptr(Box<Ty>),
+}
+
+impl Ty {
+    pub fn base(&self) -> Option<BaseTy> {
+        match self {
+            Ty::Base(b) => Some(*b),
+            Ty::Ptr(inner) => inner.base(),
+            Ty::Struct(_) => None,
+        }
+    }
+    pub fn is_ptr(&self) -> bool {
+        matches!(self, Ty::Ptr(_))
+    }
+}
+
+impl fmt::Display for Ty {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Ty::Base(b) => write!(f, "{}", b.name()),
+            Ty::Struct(n) => write!(f, "struct {n}"),
+            Ty::Ptr(t) => write!(f, "{t}*"),
+        }
+    }
+}
+
+/// Binary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    Eq,
+    Ne,
+    Lt,
+    Gt,
+    Le,
+    Ge,
+    And,
+    Or,
+    BitAnd,
+    BitOr,
+    BitXor,
+    Shl,
+    Shr,
+}
+
+impl BinOp {
+    pub fn symbol(self) -> &'static str {
+        use BinOp::*;
+        match self {
+            Add => "+",
+            Sub => "-",
+            Mul => "*",
+            Div => "/",
+            Rem => "%",
+            Eq => "==",
+            Ne => "!=",
+            Lt => "<",
+            Gt => ">",
+            Le => "<=",
+            Ge => ">=",
+            And => "&&",
+            Or => "||",
+            BitAnd => "&",
+            BitOr => "|",
+            BitXor => "^",
+            Shl => "<<",
+            Shr => ">>",
+        }
+    }
+    pub fn is_arith(self) -> bool {
+        matches!(self, BinOp::Add | BinOp::Sub | BinOp::Mul | BinOp::Div | BinOp::Rem)
+    }
+    pub fn is_comparison(self) -> bool {
+        matches!(
+            self,
+            BinOp::Eq | BinOp::Ne | BinOp::Lt | BinOp::Gt | BinOp::Le | BinOp::Ge
+        )
+    }
+}
+
+/// Unary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UnOp {
+    Neg,
+    Not,
+    BitNot,
+    /// `*p` — array deref (index 0 in this subset).
+    Deref,
+    /// `&x` — address-of; arrays decay to themselves.
+    Addr,
+    PreInc,
+    PreDec,
+}
+
+/// Assignment operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AssignOp {
+    Set,
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    Shl,
+    Shr,
+}
+
+impl AssignOp {
+    pub fn symbol(self) -> &'static str {
+        match self {
+            AssignOp::Set => "=",
+            AssignOp::Add => "+=",
+            AssignOp::Sub => "-=",
+            AssignOp::Mul => "*=",
+            AssignOp::Div => "/=",
+            AssignOp::Rem => "%=",
+            AssignOp::Shl => "<<=",
+            AssignOp::Shr => ">>=",
+        }
+    }
+}
+
+/// Expressions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Expr {
+    pub id: NodeId,
+    pub span: Span,
+    pub kind: ExprKind,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExprKind {
+    IntLit(i64),
+    FloatLit(f64),
+    StrLit(String),
+    CharLit(char),
+    Ident(String),
+    Binary(BinOp, Box<Expr>, Box<Expr>),
+    Unary(UnOp, Box<Expr>),
+    /// Postfix `x++` / `x--` (op distinguishes which).
+    PostIncDec(Box<Expr>, bool /* inc */),
+    Assign(AssignOp, Box<Expr>, Box<Expr>),
+    Ternary(Box<Expr>, Box<Expr>, Box<Expr>),
+    Call(String, Vec<Expr>),
+    Index(Box<Expr>, Box<Expr>),
+    Member(Box<Expr>, String),
+    Cast(Ty, Box<Expr>),
+    /// `sizeof(type)` — evaluated to a constant byte size.
+    SizeOf(Ty),
+}
+
+impl Expr {
+    /// Walk this expression tree, calling `f` on every node (pre-order).
+    pub fn walk<'a>(&'a self, f: &mut impl FnMut(&'a Expr)) {
+        f(self);
+        match &self.kind {
+            ExprKind::Binary(_, a, b) | ExprKind::Assign(_, a, b) => {
+                a.walk(f);
+                b.walk(f);
+            }
+            ExprKind::Unary(_, a)
+            | ExprKind::PostIncDec(a, _)
+            | ExprKind::Cast(_, a)
+            | ExprKind::Member(a, _) => a.walk(f),
+            ExprKind::Ternary(c, t, e) => {
+                c.walk(f);
+                t.walk(f);
+                e.walk(f);
+            }
+            ExprKind::Call(_, args) => {
+                for a in args {
+                    a.walk(f);
+                }
+            }
+            ExprKind::Index(a, i) => {
+                a.walk(f);
+                i.walk(f);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// A declared variable (local or global).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VarDecl {
+    pub id: NodeId,
+    pub span: Span,
+    pub ty: Ty,
+    pub name: String,
+    /// Array dimensions, outermost first. Empty for scalars.
+    pub dims: Vec<Expr>,
+    pub init: Option<Expr>,
+}
+
+/// Statements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stmt {
+    pub id: NodeId,
+    pub span: Span,
+    pub kind: StmtKind,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum StmtKind {
+    Decl(Vec<VarDecl>),
+    Expr(Expr),
+    Block(Vec<Stmt>),
+    If(Expr, Box<Stmt>, Option<Box<Stmt>>),
+    For {
+        init: Option<Box<Stmt>>,
+        cond: Option<Expr>,
+        step: Option<Expr>,
+        body: Box<Stmt>,
+    },
+    While(Expr, Box<Stmt>),
+    DoWhile(Box<Stmt>, Expr),
+    Return(Option<Expr>),
+    Break,
+    Continue,
+    Empty,
+}
+
+impl Stmt {
+    /// Walk all statements in this subtree (pre-order), including self.
+    pub fn walk<'a>(&'a self, f: &mut impl FnMut(&'a Stmt)) {
+        f(self);
+        match &self.kind {
+            StmtKind::Block(stmts) => {
+                for s in stmts {
+                    s.walk(f);
+                }
+            }
+            StmtKind::If(_, t, e) => {
+                t.walk(f);
+                if let Some(e) = e {
+                    e.walk(f);
+                }
+            }
+            StmtKind::For { init, body, .. } => {
+                if let Some(i) = init {
+                    i.walk(f);
+                }
+                body.walk(f);
+            }
+            StmtKind::While(_, b) | StmtKind::DoWhile(b, _) => b.walk(f),
+            _ => {}
+        }
+    }
+
+    /// Walk every expression contained in this subtree.
+    pub fn walk_exprs<'a>(&'a self, f: &mut impl FnMut(&'a Expr)) {
+        self.walk(&mut |s| match &s.kind {
+            StmtKind::Decl(ds) => {
+                for d in ds {
+                    for dim in &d.dims {
+                        dim.walk(f);
+                    }
+                    if let Some(init) = &d.init {
+                        init.walk(f);
+                    }
+                }
+            }
+            StmtKind::Expr(e) | StmtKind::Return(Some(e)) => e.walk(f),
+            StmtKind::If(c, _, _) | StmtKind::While(c, _) | StmtKind::DoWhile(_, c) => {
+                c.walk(f)
+            }
+            StmtKind::For { cond, step, .. } => {
+                if let Some(c) = cond {
+                    c.walk(f);
+                }
+                if let Some(st) = step {
+                    st.walk(f);
+                }
+            }
+            _ => {}
+        });
+    }
+}
+
+/// Function parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Param {
+    pub ty: Ty,
+    pub name: String,
+    /// Declared as an array parameter (`float a[]`, `float a[n][m]`).
+    pub array_dims: usize,
+}
+
+/// Function definition or extern declaration (no body).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FuncDef {
+    pub id: NodeId,
+    pub span: Span,
+    pub ret: Ty,
+    pub name: String,
+    pub params: Vec<Param>,
+    /// `None` for extern declarations — these are A-1 library-call targets.
+    pub body: Option<Stmt>,
+}
+
+/// Struct definition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StructDef {
+    pub id: NodeId,
+    pub span: Span,
+    pub name: String,
+    pub fields: Vec<VarDecl>,
+}
+
+/// Top-level items.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Item {
+    Func(FuncDef),
+    Struct(StructDef),
+    Global(Vec<VarDecl>),
+}
+
+/// A parsed translation unit.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Program {
+    pub items: Vec<Item>,
+    /// `#include` hints from the lexer (used by analysis A-1).
+    pub includes: Vec<String>,
+}
+
+impl Program {
+    pub fn functions(&self) -> impl Iterator<Item = &FuncDef> {
+        self.items.iter().filter_map(|i| match i {
+            Item::Func(f) => Some(f),
+            _ => None,
+        })
+    }
+
+    pub fn structs(&self) -> impl Iterator<Item = &StructDef> {
+        self.items.iter().filter_map(|i| match i {
+            Item::Struct(s) => Some(s),
+            _ => None,
+        })
+    }
+
+    pub fn find_function(&self, name: &str) -> Option<&FuncDef> {
+        self.functions().find(|f| f.name == name)
+    }
+
+    /// Names of functions *defined* (with bodies) in this unit.
+    pub fn defined_names(&self) -> Vec<&str> {
+        self.functions()
+            .filter(|f| f.body.is_some())
+            .map(|f| f.name.as_str())
+            .collect()
+    }
+}

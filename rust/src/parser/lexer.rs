@@ -1,0 +1,443 @@
+//! Hand-written lexer for the mini-C front end.
+//!
+//! Skips `//` and `/* */` comments and `#...` preprocessor lines (the
+//! analyzer treats `#include <x.h>` headers as *library hints*, so the set
+//! of included headers is returned alongside the token stream).
+
+use super::token::{Span, Tok, Token};
+use anyhow::{bail, Result};
+
+/// Lexer output: tokens plus the names of `#include`d headers (library
+/// hints consumed by analysis pass A-1).
+#[derive(Debug, Clone)]
+pub struct LexOutput {
+    pub tokens: Vec<Token>,
+    pub includes: Vec<String>,
+}
+
+pub struct Lexer<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: u32,
+    col: u32,
+}
+
+impl<'a> Lexer<'a> {
+    pub fn new(src: &'a str) -> Self {
+        Lexer { src: src.as_bytes(), pos: 0, line: 1, col: 1 }
+    }
+
+    fn peek(&self) -> u8 {
+        *self.src.get(self.pos).unwrap_or(&0)
+    }
+
+    fn peek2(&self) -> u8 {
+        *self.src.get(self.pos + 1).unwrap_or(&0)
+    }
+
+    fn bump(&mut self) -> u8 {
+        let c = self.peek();
+        self.pos += 1;
+        if c == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        c
+    }
+
+    fn span(&self) -> Span {
+        Span { line: self.line, col: self.col }
+    }
+
+    /// Lex the whole input.
+    pub fn lex(mut self) -> Result<LexOutput> {
+        let mut tokens = Vec::new();
+        let mut includes = Vec::new();
+        loop {
+            self.skip_trivia(&mut includes)?;
+            let span = self.span();
+            if self.pos >= self.src.len() {
+                tokens.push(Token { kind: Tok::Eof, span });
+                break;
+            }
+            let kind = self.next_tok()?;
+            tokens.push(Token { kind, span });
+        }
+        Ok(LexOutput { tokens, includes })
+    }
+
+    fn skip_trivia(&mut self, includes: &mut Vec<String>) -> Result<()> {
+        loop {
+            match self.peek() {
+                b' ' | b'\t' | b'\r' | b'\n' => {
+                    self.bump();
+                }
+                b'/' if self.peek2() == b'/' => {
+                    while self.pos < self.src.len() && self.peek() != b'\n' {
+                        self.bump();
+                    }
+                }
+                b'/' if self.peek2() == b'*' => {
+                    let start = self.span();
+                    self.bump();
+                    self.bump();
+                    loop {
+                        if self.pos >= self.src.len() {
+                            bail!("unterminated block comment at {start}");
+                        }
+                        if self.peek() == b'*' && self.peek2() == b'/' {
+                            self.bump();
+                            self.bump();
+                            break;
+                        }
+                        self.bump();
+                    }
+                }
+                b'#' => {
+                    // Preprocessor line; record `#include` targets.
+                    let mut line = String::new();
+                    while self.pos < self.src.len() && self.peek() != b'\n' {
+                        line.push(self.bump() as char);
+                    }
+                    if let Some(rest) = line.strip_prefix("#include") {
+                        let name: String = rest
+                            .trim()
+                            .trim_matches(|c| c == '<' || c == '>' || c == '"')
+                            .to_string();
+                        if !name.is_empty() {
+                            includes.push(name);
+                        }
+                    }
+                }
+                _ => return Ok(()),
+            }
+        }
+    }
+
+    fn next_tok(&mut self) -> Result<Tok> {
+        let c = self.peek();
+        if c.is_ascii_alphabetic() || c == b'_' {
+            return Ok(self.ident());
+        }
+        if c.is_ascii_digit() || (c == b'.' && self.peek2().is_ascii_digit()) {
+            return self.number();
+        }
+        match c {
+            b'"' => return self.string(),
+            b'\'' => return self.char_lit(),
+            _ => {}
+        }
+        let span = self.span();
+        self.bump();
+        let two = |l: &mut Self, next: u8, a: Tok, b: Tok| {
+            if l.peek() == next {
+                l.bump();
+                a
+            } else {
+                b
+            }
+        };
+        Ok(match c {
+            b'(' => Tok::LParen,
+            b')' => Tok::RParen,
+            b'{' => Tok::LBrace,
+            b'}' => Tok::RBrace,
+            b'[' => Tok::LBracket,
+            b']' => Tok::RBracket,
+            b';' => Tok::Semi,
+            b',' => Tok::Comma,
+            b'?' => Tok::Question,
+            b':' => Tok::Colon,
+            b'~' => Tok::Tilde,
+            b'.' => Tok::Dot,
+            b'+' => {
+                if self.peek() == b'+' {
+                    self.bump();
+                    Tok::PlusPlus
+                } else {
+                    two(self, b'=', Tok::PlusAssign, Tok::Plus)
+                }
+            }
+            b'-' => {
+                if self.peek() == b'-' {
+                    self.bump();
+                    Tok::MinusMinus
+                } else if self.peek() == b'>' {
+                    self.bump();
+                    Tok::Arrow
+                } else {
+                    two(self, b'=', Tok::MinusAssign, Tok::Minus)
+                }
+            }
+            b'*' => two(self, b'=', Tok::StarAssign, Tok::Star),
+            b'/' => two(self, b'=', Tok::SlashAssign, Tok::Slash),
+            b'%' => two(self, b'=', Tok::PercentAssign, Tok::Percent),
+            b'=' => two(self, b'=', Tok::Eq, Tok::Assign),
+            b'!' => two(self, b'=', Tok::Ne, Tok::Not),
+            b'<' => {
+                if self.peek() == b'<' {
+                    self.bump();
+                    if self.peek() == b'=' {
+                        self.bump();
+                        Tok::ShlAssign
+                    } else {
+                        Tok::Shl
+                    }
+                } else {
+                    two(self, b'=', Tok::Le, Tok::Lt)
+                }
+            }
+            b'>' => {
+                if self.peek() == b'>' {
+                    self.bump();
+                    if self.peek() == b'=' {
+                        self.bump();
+                        Tok::ShrAssign
+                    } else {
+                        Tok::Shr
+                    }
+                } else {
+                    two(self, b'=', Tok::Ge, Tok::Gt)
+                }
+            }
+            b'&' => two(self, b'&', Tok::AndAnd, Tok::Amp),
+            b'|' => two(self, b'|', Tok::OrOr, Tok::Pipe),
+            b'^' => Tok::Caret,
+            other => bail!("unexpected character {:?} at {span}", other as char),
+        })
+    }
+
+    fn ident(&mut self) -> Tok {
+        let mut s = String::new();
+        while self.peek().is_ascii_alphanumeric() || self.peek() == b'_' {
+            s.push(self.bump() as char);
+        }
+        Tok::keyword(&s).unwrap_or(Tok::Ident(s))
+    }
+
+    fn number(&mut self) -> Result<Tok> {
+        let span = self.span();
+        let mut s = String::new();
+        let mut is_float = false;
+        // Hex literals.
+        if self.peek() == b'0' && (self.peek2() == b'x' || self.peek2() == b'X') {
+            self.bump();
+            self.bump();
+            let mut h = String::new();
+            while self.peek().is_ascii_hexdigit() {
+                h.push(self.bump() as char);
+            }
+            let v = i64::from_str_radix(&h, 16)
+                .map_err(|e| anyhow::anyhow!("bad hex literal at {span}: {e}"))?;
+            return Ok(Tok::IntLit(v));
+        }
+        while self.peek().is_ascii_digit() {
+            s.push(self.bump() as char);
+        }
+        if self.peek() == b'.' {
+            is_float = true;
+            s.push(self.bump() as char);
+            while self.peek().is_ascii_digit() {
+                s.push(self.bump() as char);
+            }
+        }
+        if self.peek() == b'e' || self.peek() == b'E' {
+            is_float = true;
+            s.push(self.bump() as char);
+            if self.peek() == b'+' || self.peek() == b'-' {
+                s.push(self.bump() as char);
+            }
+            while self.peek().is_ascii_digit() {
+                s.push(self.bump() as char);
+            }
+        }
+        // Suffixes (f, L, u) are consumed and ignored.
+        while matches!(self.peek(), b'f' | b'F' | b'l' | b'L' | b'u' | b'U') {
+            if matches!(self.peek(), b'f' | b'F') {
+                is_float = true;
+            }
+            self.bump();
+        }
+        if is_float {
+            Ok(Tok::FloatLit(s.parse().map_err(|e| {
+                anyhow::anyhow!("bad float literal {s:?} at {span}: {e}")
+            })?))
+        } else {
+            Ok(Tok::IntLit(s.parse().map_err(|e| {
+                anyhow::anyhow!("bad int literal {s:?} at {span}: {e}")
+            })?))
+        }
+    }
+
+    fn string(&mut self) -> Result<Tok> {
+        let span = self.span();
+        self.bump(); // opening quote
+        let mut s = String::new();
+        loop {
+            if self.pos >= self.src.len() {
+                bail!("unterminated string literal at {span}");
+            }
+            match self.bump() {
+                b'"' => break,
+                b'\\' => {
+                    let esc = self.bump();
+                    s.push(match esc {
+                        b'n' => '\n',
+                        b't' => '\t',
+                        b'r' => '\r',
+                        b'0' => '\0',
+                        b'\\' => '\\',
+                        b'"' => '"',
+                        other => other as char,
+                    });
+                }
+                c => s.push(c as char),
+            }
+        }
+        Ok(Tok::StrLit(s))
+    }
+
+    fn char_lit(&mut self) -> Result<Tok> {
+        let span = self.span();
+        self.bump(); // opening quote
+        let c = match self.bump() {
+            b'\\' => match self.bump() {
+                b'n' => '\n',
+                b't' => '\t',
+                b'0' => '\0',
+                other => other as char,
+            },
+            c => c as char,
+        };
+        if self.bump() != b'\'' {
+            bail!("unterminated char literal at {span}");
+        }
+        Ok(Tok::CharLit(c))
+    }
+}
+
+/// Convenience: lex a source string.
+pub fn lex(src: &str) -> Result<LexOutput> {
+    Lexer::new(src).lex()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().tokens.into_iter().map(|t| t.kind).collect()
+    }
+
+    #[test]
+    fn lexes_arithmetic() {
+        assert_eq!(
+            kinds("a = b + 2;"),
+            vec![
+                Tok::Ident("a".into()),
+                Tok::Assign,
+                Tok::Ident("b".into()),
+                Tok::Plus,
+                Tok::IntLit(2),
+                Tok::Semi,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_floats_and_suffixes() {
+        assert_eq!(kinds("1.5 2e3 7f 0x10"), vec![
+            Tok::FloatLit(1.5),
+            Tok::FloatLit(2000.0),
+            Tok::FloatLit(7.0),
+            Tok::IntLit(16),
+            Tok::Eof
+        ]);
+    }
+
+    #[test]
+    fn skips_comments() {
+        assert_eq!(
+            kinds("x /* mid */ y // tail\nz"),
+            vec![
+                Tok::Ident("x".into()),
+                Tok::Ident("y".into()),
+                Tok::Ident("z".into()),
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn collects_includes() {
+        let out = lex("#include <math.h>\n#include \"nr.h\"\nint x;").unwrap();
+        assert_eq!(out.includes, vec!["math.h", "nr.h"]);
+    }
+
+    #[test]
+    fn two_char_operators() {
+        assert_eq!(
+            kinds("a += b == c && d++ >= --e >> 1"),
+            vec![
+                Tok::Ident("a".into()),
+                Tok::PlusAssign,
+                Tok::Ident("b".into()),
+                Tok::Eq,
+                Tok::Ident("c".into()),
+                Tok::AndAnd,
+                Tok::Ident("d".into()),
+                Tok::PlusPlus,
+                Tok::Ge,
+                Tok::MinusMinus,
+                Tok::Ident("e".into()),
+                Tok::Shr,
+                Tok::IntLit(1),
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn arrow_and_member() {
+        assert_eq!(
+            kinds("p->x.y"),
+            vec![
+                Tok::Ident("p".into()),
+                Tok::Arrow,
+                Tok::Ident("x".into()),
+                Tok::Dot,
+                Tok::Ident("y".into()),
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn string_escapes() {
+        assert_eq!(
+            kinds(r#""a\nb""#),
+            vec![Tok::StrLit("a\nb".into()), Tok::Eof]
+        );
+    }
+
+    #[test]
+    fn spans_track_lines() {
+        let out = lex("x\n  y").unwrap();
+        assert_eq!(out.tokens[0].span.line, 1);
+        assert_eq!(out.tokens[1].span.line, 2);
+        assert_eq!(out.tokens[1].span.col, 3);
+    }
+
+    #[test]
+    fn rejects_unterminated_string() {
+        assert!(lex("\"abc").is_err());
+    }
+
+    #[test]
+    fn rejects_unterminated_comment() {
+        assert!(lex("/* abc").is_err());
+    }
+}

@@ -1,0 +1,184 @@
+//! Mini-C front end: lexer, AST, recursive-descent parser, pretty-printer.
+//!
+//! This is the substrate behind the paper's Step 1 (code analysis): the
+//! published system used LLVM/Clang's libClang; we parse a self-contained C
+//! subset rich enough for Numerical-Recipes-style numeric applications.
+//! See DESIGN.md "Substitutions".
+
+pub mod ast;
+pub mod lexer;
+pub mod parse;
+pub mod print;
+pub mod token;
+
+pub use ast::*;
+pub use parse::{parse, parse_expr};
+pub use print::{print_expr, print_program};
+pub use token::{Span, Tok, Token};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FFT_SNIPPET: &str = r#"
+        #include <math.h>
+        void four1(double data[], int nn, int isign) {
+            int n, mmax, m, j, istep, i;
+            double wtemp, wr, wpr, wpi, wi, theta;
+            n = nn << 1;
+            j = 1;
+            for (i = 1; i < n; i += 2) {
+                if (j > i) {
+                    wtemp = data[j]; data[j] = data[i]; data[i] = wtemp;
+                }
+                m = nn;
+                while (m >= 2 && j > m) { j -= m; m >>= 1; }
+                j += m;
+            }
+            mmax = 2;
+            while (n > mmax) {
+                istep = mmax << 1;
+                theta = isign * (6.28318530717959 / mmax);
+                wtemp = sin(0.5 * theta);
+                wpr = -2.0 * wtemp * wtemp;
+                wpi = sin(theta);
+                wr = 1.0;
+                wi = 0.0;
+                for (m = 1; m < mmax; m += 2) {
+                    for (i = m; i <= n; i += istep) {
+                        j = i + mmax;
+                        data[j] = data[i] - (wr * data[j] - wi * data[j + 1]);
+                    }
+                    wr = (wtemp = wr) * wpr - wi * wpi + wr;
+                    wi = wi * wpr + wtemp * wpi + wi;
+                }
+                mmax = istep;
+            }
+        }
+    "#;
+
+    #[test]
+    fn parses_numerical_recipes_style_code() {
+        let prog = parse(FFT_SNIPPET).unwrap();
+        let f = prog.find_function("four1").unwrap();
+        assert_eq!(f.params.len(), 3);
+        assert_eq!(f.params[0].array_dims, 1);
+        assert!(f.body.is_some());
+        assert_eq!(prog.includes, vec!["math.h"]);
+    }
+
+    #[test]
+    fn parses_structs() {
+        let prog = parse(
+            "struct Vec { double x; double y; int tags[4]; };
+             double norm(struct Vec v) { return v.x * v.x + v.y * v.y; }",
+        )
+        .unwrap();
+        let s = prog.structs().next().unwrap();
+        assert_eq!(s.name, "Vec");
+        assert_eq!(s.fields.len(), 3);
+        assert_eq!(s.fields[2].dims.len(), 1);
+    }
+
+    #[test]
+    fn parses_extern_prototype_as_bodyless() {
+        let prog = parse("void fft2d(double re[], double im[], int n);").unwrap();
+        let f = prog.find_function("fft2d").unwrap();
+        assert!(f.body.is_none());
+    }
+
+    #[test]
+    fn parses_multidim_arrays_and_globals() {
+        let prog = parse("double grid[16][16]; int n = 4, m = 5;").unwrap();
+        assert_eq!(prog.items.len(), 2);
+        match &prog.items[0] {
+            Item::Global(d) => assert_eq!(d[0].dims.len(), 2),
+            other => panic!("expected global, got {other:?}"),
+        }
+        match &prog.items[1] {
+            Item::Global(d) => {
+                assert_eq!(d.len(), 2);
+                assert!(d[0].init.is_some());
+            }
+            other => panic!("expected global, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn expression_precedence() {
+        let e = parse_expr("a + b * c").unwrap();
+        // Must parse as a + (b * c).
+        match &e.kind {
+            ExprKind::Binary(BinOp::Add, _, rhs) => match &rhs.kind {
+                ExprKind::Binary(BinOp::Mul, _, _) => {}
+                other => panic!("rhs not mul: {other:?}"),
+            },
+            other => panic!("not add at root: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn assignment_is_right_associative() {
+        let e = parse_expr("a = b = 1").unwrap();
+        match &e.kind {
+            ExprKind::Assign(AssignOp::Set, _, rhs) => {
+                assert!(matches!(rhs.kind, ExprKind::Assign(..)));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn ternary_and_cast() {
+        let e = parse_expr("(float) (a > 0 ? a : -a)").unwrap();
+        assert!(matches!(e.kind, ExprKind::Cast(..)));
+    }
+
+    #[test]
+    fn postfix_chains() {
+        let e = parse_expr("m[i][j].w++").unwrap();
+        assert!(matches!(e.kind, ExprKind::PostIncDec(..)));
+    }
+
+    #[test]
+    fn round_trip_print_parse() {
+        let prog = parse(FFT_SNIPPET).unwrap();
+        let printed = print_program(&prog);
+        let reparsed = parse(&printed).unwrap();
+        // Node ids/spans differ; compare re-printed forms instead.
+        assert_eq!(printed, print_program(&reparsed));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("int f( {").is_err());
+        assert!(parse("double x = ;").is_err());
+        assert!(parse_expr("a +").is_err());
+    }
+
+    #[test]
+    fn for_without_init_cond_step() {
+        let prog = parse("void f() { for (;;) { break; } }").unwrap();
+        let f = prog.find_function("f").unwrap();
+        let mut fors = 0;
+        f.body.as_ref().unwrap().walk(&mut |s| {
+            if matches!(s.kind, StmtKind::For { .. }) {
+                fors += 1;
+            }
+        });
+        assert_eq!(fors, 1);
+    }
+
+    #[test]
+    fn node_ids_are_unique() {
+        let prog = parse(FFT_SNIPPET).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for f in prog.functions() {
+            if let Some(b) = &f.body {
+                b.walk(&mut |s| {
+                    assert!(seen.insert(s.id), "duplicate stmt id {}", s.id);
+                });
+            }
+        }
+    }
+}

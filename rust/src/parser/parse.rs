@@ -1,0 +1,588 @@
+//! Recursive-descent parser for the mini-C subset.
+//!
+//! Grammar follows C's expression precedence exactly; declarations cover
+//! scalars, multi-dimensional arrays, pointers-as-array-handles, structs,
+//! and function definitions / extern prototypes.
+
+use super::ast::*;
+use super::lexer::{lex, LexOutput};
+use super::token::{Span, Tok, Token};
+use anyhow::{bail, Result};
+
+pub struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+    next_id: u32,
+    includes: Vec<String>,
+}
+
+impl Parser {
+    pub fn new(out: LexOutput) -> Self {
+        Parser { toks: out.tokens, pos: 0, next_id: 0, includes: out.includes }
+    }
+
+    fn id(&mut self) -> NodeId {
+        let id = NodeId(self.next_id);
+        self.next_id += 1;
+        id
+    }
+
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos.min(self.toks.len() - 1)].kind
+    }
+
+    fn peek_at(&self, off: usize) -> &Tok {
+        &self.toks[(self.pos + off).min(self.toks.len() - 1)].kind
+    }
+
+    fn span(&self) -> Span {
+        self.toks[self.pos.min(self.toks.len() - 1)].span
+    }
+
+    fn bump(&mut self) -> Tok {
+        let t = self.toks[self.pos.min(self.toks.len() - 1)].kind.clone();
+        if self.pos < self.toks.len() - 1 {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn eat(&mut self, tok: &Tok) -> bool {
+        if self.peek() == tok {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, tok: &Tok) -> Result<()> {
+        if self.eat(tok) {
+            Ok(())
+        } else {
+            bail!("expected {tok} but found {} at {}", self.peek(), self.span())
+        }
+    }
+
+    fn expect_ident(&mut self) -> Result<String> {
+        match self.bump() {
+            Tok::Ident(s) => Ok(s),
+            other => bail!("expected identifier, found {other} at {}", self.span()),
+        }
+    }
+
+    // ------------------------------------------------------------ types
+
+    fn at_type(&self) -> bool {
+        self.peek().starts_type()
+    }
+
+    /// Parse a base type (qualifiers are accepted and discarded).
+    fn parse_base_type(&mut self) -> Result<Ty> {
+        while matches!(self.peek(), Tok::KwConst | Tok::KwStatic | Tok::KwExtern | Tok::KwUnsigned) {
+            self.bump();
+        }
+        let ty = match self.bump() {
+            Tok::KwInt => Ty::Base(BaseTy::Int),
+            Tok::KwLong => {
+                // `long long`, `long int` collapse to long.
+                while matches!(self.peek(), Tok::KwLong | Tok::KwInt) {
+                    self.bump();
+                }
+                Ty::Base(BaseTy::Long)
+            }
+            Tok::KwChar => Ty::Base(BaseTy::Char),
+            Tok::KwFloat => Ty::Base(BaseTy::Float),
+            Tok::KwDouble => Ty::Base(BaseTy::Double),
+            Tok::KwVoid => Ty::Base(BaseTy::Void),
+            Tok::KwStruct => Ty::Struct(self.expect_ident()?),
+            other => bail!("expected type, found {other} at {}", self.span()),
+        };
+        Ok(ty)
+    }
+
+    fn parse_ptr_suffix(&mut self, mut ty: Ty) -> Ty {
+        while self.eat(&Tok::Star) {
+            ty = Ty::Ptr(Box::new(ty));
+        }
+        ty
+    }
+
+    // ------------------------------------------------------------ program
+
+    pub fn parse_program(&mut self) -> Result<Program> {
+        let mut items = Vec::new();
+        while self.peek() != &Tok::Eof {
+            items.push(self.parse_item()?);
+        }
+        Ok(Program { items, includes: std::mem::take(&mut self.includes) })
+    }
+
+    fn parse_item(&mut self) -> Result<Item> {
+        // struct definition: `struct Name { ... };`
+        if self.peek() == &Tok::KwStruct && matches!(self.peek_at(2), Tok::LBrace) {
+            return Ok(Item::Struct(self.parse_struct_def()?));
+        }
+        let span = self.span();
+        let base = self.parse_base_type()?;
+        let ty = self.parse_ptr_suffix(base);
+        let name = self.expect_ident()?;
+        if self.peek() == &Tok::LParen {
+            return Ok(Item::Func(self.parse_func_rest(span, ty, name)?));
+        }
+        // Global variable(s).
+        let decls = self.parse_decl_rest(span, ty, name)?;
+        Ok(Item::Global(decls))
+    }
+
+    fn parse_struct_def(&mut self) -> Result<StructDef> {
+        let span = self.span();
+        let id = self.id();
+        self.expect(&Tok::KwStruct)?;
+        let name = self.expect_ident()?;
+        self.expect(&Tok::LBrace)?;
+        let mut fields = Vec::new();
+        while !self.eat(&Tok::RBrace) {
+            let fspan = self.span();
+            let base = self.parse_base_type()?;
+            loop {
+                let fty = self.parse_ptr_suffix(base.clone());
+                let fname = self.expect_ident()?;
+                let mut dims = Vec::new();
+                while self.eat(&Tok::LBracket) {
+                    dims.push(self.parse_expr()?);
+                    self.expect(&Tok::RBracket)?;
+                }
+                fields.push(VarDecl {
+                    id: self.id(),
+                    span: fspan,
+                    ty: fty,
+                    name: fname,
+                    dims,
+                    init: None,
+                });
+                if !self.eat(&Tok::Comma) {
+                    break;
+                }
+            }
+            self.expect(&Tok::Semi)?;
+        }
+        self.expect(&Tok::Semi)?;
+        Ok(StructDef { id, span, name, fields })
+    }
+
+    fn parse_func_rest(&mut self, span: Span, ret: Ty, name: String) -> Result<FuncDef> {
+        let id = self.id();
+        self.expect(&Tok::LParen)?;
+        let mut params = Vec::new();
+        if !self.eat(&Tok::RParen) {
+            loop {
+                if self.peek() == &Tok::KwVoid && self.peek_at(1) == &Tok::RParen {
+                    self.bump();
+                    break;
+                }
+                let base = self.parse_base_type()?;
+                let ty = self.parse_ptr_suffix(base);
+                let pname = self.expect_ident()?;
+                let mut array_dims = 0usize;
+                while self.eat(&Tok::LBracket) {
+                    // Dimension expressions in parameters are ignored
+                    // (arrays decay to handles).
+                    if self.peek() != &Tok::RBracket {
+                        self.parse_expr()?;
+                    }
+                    self.expect(&Tok::RBracket)?;
+                    array_dims += 1;
+                }
+                params.push(Param { ty, name: pname, array_dims });
+                if !self.eat(&Tok::Comma) {
+                    break;
+                }
+            }
+            self.expect(&Tok::RParen)?;
+        }
+        let body = if self.eat(&Tok::Semi) {
+            None
+        } else {
+            Some(self.parse_block()?)
+        };
+        Ok(FuncDef { id, span, ret, name, params, body })
+    }
+
+    /// Rest of a declaration after `ty name` has been consumed.
+    fn parse_decl_rest(&mut self, span: Span, ty: Ty, name: String) -> Result<Vec<VarDecl>> {
+        let mut decls = Vec::new();
+        let mut cur_name = name;
+        let mut cur_ty = ty.clone();
+        loop {
+            let mut dims = Vec::new();
+            while self.eat(&Tok::LBracket) {
+                dims.push(self.parse_expr()?);
+                self.expect(&Tok::RBracket)?;
+            }
+            let init = if self.eat(&Tok::Assign) {
+                Some(self.parse_assign()?)
+            } else {
+                None
+            };
+            decls.push(VarDecl {
+                id: self.id(),
+                span,
+                ty: cur_ty.clone(),
+                name: cur_name,
+                dims,
+                init,
+            });
+            if !self.eat(&Tok::Comma) {
+                break;
+            }
+            cur_ty = self.parse_ptr_suffix(ty.clone());
+            cur_name = self.expect_ident()?;
+        }
+        self.expect(&Tok::Semi)?;
+        Ok(decls)
+    }
+
+    // ------------------------------------------------------------ statements
+
+    pub fn parse_block(&mut self) -> Result<Stmt> {
+        let span = self.span();
+        let id = self.id();
+        self.expect(&Tok::LBrace)?;
+        let mut stmts = Vec::new();
+        while !self.eat(&Tok::RBrace) {
+            stmts.push(self.parse_stmt()?);
+        }
+        Ok(Stmt { id, span, kind: StmtKind::Block(stmts) })
+    }
+
+    fn parse_stmt(&mut self) -> Result<Stmt> {
+        let span = self.span();
+        match self.peek() {
+            Tok::LBrace => self.parse_block(),
+            Tok::Semi => {
+                let id = self.id();
+                self.bump();
+                Ok(Stmt { id, span, kind: StmtKind::Empty })
+            }
+            Tok::KwIf => {
+                let id = self.id();
+                self.bump();
+                self.expect(&Tok::LParen)?;
+                let cond = self.parse_expr()?;
+                self.expect(&Tok::RParen)?;
+                let then = Box::new(self.parse_stmt()?);
+                let els = if self.eat(&Tok::KwElse) {
+                    Some(Box::new(self.parse_stmt()?))
+                } else {
+                    None
+                };
+                Ok(Stmt { id, span, kind: StmtKind::If(cond, then, els) })
+            }
+            Tok::KwFor => {
+                let id = self.id();
+                self.bump();
+                self.expect(&Tok::LParen)?;
+                let init = if self.eat(&Tok::Semi) {
+                    None
+                } else if self.at_type() {
+                    let dspan = self.span();
+                    let did = self.id();
+                    let base = self.parse_base_type()?;
+                    let ty = self.parse_ptr_suffix(base);
+                    let name = self.expect_ident()?;
+                    let decls = self.parse_decl_rest(dspan, ty, name)?;
+                    Some(Box::new(Stmt { id: did, span: dspan, kind: StmtKind::Decl(decls) }))
+                } else {
+                    let e = self.parse_expr()?;
+                    self.expect(&Tok::Semi)?;
+                    let eid = self.id();
+                    Some(Box::new(Stmt { id: eid, span, kind: StmtKind::Expr(e) }))
+                };
+                let cond = if self.peek() == &Tok::Semi { None } else { Some(self.parse_expr()?) };
+                self.expect(&Tok::Semi)?;
+                let step = if self.peek() == &Tok::RParen { None } else { Some(self.parse_expr()?) };
+                self.expect(&Tok::RParen)?;
+                let body = Box::new(self.parse_stmt()?);
+                Ok(Stmt { id, span, kind: StmtKind::For { init, cond, step, body } })
+            }
+            Tok::KwWhile => {
+                let id = self.id();
+                self.bump();
+                self.expect(&Tok::LParen)?;
+                let cond = self.parse_expr()?;
+                self.expect(&Tok::RParen)?;
+                let body = Box::new(self.parse_stmt()?);
+                Ok(Stmt { id, span, kind: StmtKind::While(cond, body) })
+            }
+            Tok::KwDo => {
+                let id = self.id();
+                self.bump();
+                let body = Box::new(self.parse_stmt()?);
+                self.expect(&Tok::KwWhile)?;
+                self.expect(&Tok::LParen)?;
+                let cond = self.parse_expr()?;
+                self.expect(&Tok::RParen)?;
+                self.expect(&Tok::Semi)?;
+                Ok(Stmt { id, span, kind: StmtKind::DoWhile(body, cond) })
+            }
+            Tok::KwReturn => {
+                let id = self.id();
+                self.bump();
+                let e = if self.peek() == &Tok::Semi { None } else { Some(self.parse_expr()?) };
+                self.expect(&Tok::Semi)?;
+                Ok(Stmt { id, span, kind: StmtKind::Return(e) })
+            }
+            Tok::KwBreak => {
+                let id = self.id();
+                self.bump();
+                self.expect(&Tok::Semi)?;
+                Ok(Stmt { id, span, kind: StmtKind::Break })
+            }
+            Tok::KwContinue => {
+                let id = self.id();
+                self.bump();
+                self.expect(&Tok::Semi)?;
+                Ok(Stmt { id, span, kind: StmtKind::Continue })
+            }
+            t if t.starts_type() => {
+                let id = self.id();
+                let base = self.parse_base_type()?;
+                let ty = self.parse_ptr_suffix(base);
+                let name = self.expect_ident()?;
+                let decls = self.parse_decl_rest(span, ty, name)?;
+                Ok(Stmt { id, span, kind: StmtKind::Decl(decls) })
+            }
+            _ => {
+                let id = self.id();
+                let e = self.parse_expr()?;
+                self.expect(&Tok::Semi)?;
+                Ok(Stmt { id, span, kind: StmtKind::Expr(e) })
+            }
+        }
+    }
+
+    // ------------------------------------------------------------ expressions
+
+    pub fn parse_expr(&mut self) -> Result<Expr> {
+        self.parse_assign()
+    }
+
+    fn parse_assign(&mut self) -> Result<Expr> {
+        let span = self.span();
+        let lhs = self.parse_ternary()?;
+        let op = match self.peek() {
+            Tok::Assign => AssignOp::Set,
+            Tok::PlusAssign => AssignOp::Add,
+            Tok::MinusAssign => AssignOp::Sub,
+            Tok::StarAssign => AssignOp::Mul,
+            Tok::SlashAssign => AssignOp::Div,
+            Tok::PercentAssign => AssignOp::Rem,
+            Tok::ShlAssign => AssignOp::Shl,
+            Tok::ShrAssign => AssignOp::Shr,
+            _ => return Ok(lhs),
+        };
+        self.bump();
+        let rhs = self.parse_assign()?;
+        Ok(Expr {
+            id: self.id(),
+            span,
+            kind: ExprKind::Assign(op, Box::new(lhs), Box::new(rhs)),
+        })
+    }
+
+    fn parse_ternary(&mut self) -> Result<Expr> {
+        let span = self.span();
+        let cond = self.parse_binary(0)?;
+        if self.eat(&Tok::Question) {
+            let then = self.parse_expr()?;
+            self.expect(&Tok::Colon)?;
+            let els = self.parse_ternary()?;
+            Ok(Expr {
+                id: self.id(),
+                span,
+                kind: ExprKind::Ternary(Box::new(cond), Box::new(then), Box::new(els)),
+            })
+        } else {
+            Ok(cond)
+        }
+    }
+
+    fn bin_op_prec(tok: &Tok) -> Option<(BinOp, u8)> {
+        Some(match tok {
+            Tok::OrOr => (BinOp::Or, 1),
+            Tok::AndAnd => (BinOp::And, 2),
+            Tok::Pipe => (BinOp::BitOr, 3),
+            Tok::Caret => (BinOp::BitXor, 4),
+            Tok::Amp => (BinOp::BitAnd, 5),
+            Tok::Eq => (BinOp::Eq, 6),
+            Tok::Ne => (BinOp::Ne, 6),
+            Tok::Lt => (BinOp::Lt, 7),
+            Tok::Gt => (BinOp::Gt, 7),
+            Tok::Le => (BinOp::Le, 7),
+            Tok::Ge => (BinOp::Ge, 7),
+            Tok::Shl => (BinOp::Shl, 8),
+            Tok::Shr => (BinOp::Shr, 8),
+            Tok::Plus => (BinOp::Add, 9),
+            Tok::Minus => (BinOp::Sub, 9),
+            Tok::Star => (BinOp::Mul, 10),
+            Tok::Slash => (BinOp::Div, 10),
+            Tok::Percent => (BinOp::Rem, 10),
+            _ => return None,
+        })
+    }
+
+    fn parse_binary(&mut self, min_prec: u8) -> Result<Expr> {
+        let span = self.span();
+        let mut lhs = self.parse_unary()?;
+        while let Some((op, prec)) = Self::bin_op_prec(self.peek()) {
+            if prec < min_prec {
+                break;
+            }
+            self.bump();
+            let rhs = self.parse_binary(prec + 1)?;
+            lhs = Expr {
+                id: self.id(),
+                span,
+                kind: ExprKind::Binary(op, Box::new(lhs), Box::new(rhs)),
+            };
+        }
+        Ok(lhs)
+    }
+
+    fn parse_unary(&mut self) -> Result<Expr> {
+        let span = self.span();
+        let op = match self.peek() {
+            Tok::Minus => Some(UnOp::Neg),
+            Tok::Not => Some(UnOp::Not),
+            Tok::Tilde => Some(UnOp::BitNot),
+            Tok::Star => Some(UnOp::Deref),
+            Tok::Amp => Some(UnOp::Addr),
+            Tok::PlusPlus => Some(UnOp::PreInc),
+            Tok::MinusMinus => Some(UnOp::PreDec),
+            Tok::Plus => {
+                self.bump(); // unary plus is a no-op
+                return self.parse_unary();
+            }
+            Tok::KwSizeof => {
+                self.bump();
+                self.expect(&Tok::LParen)?;
+                let base = self.parse_base_type()?;
+                let ty = self.parse_ptr_suffix(base);
+                self.expect(&Tok::RParen)?;
+                return Ok(Expr { id: self.id(), span, kind: ExprKind::SizeOf(ty) });
+            }
+            // Cast: `(type) expr`.
+            Tok::LParen if self.peek_at(1).starts_type() => {
+                self.bump();
+                let base = self.parse_base_type()?;
+                let ty = self.parse_ptr_suffix(base);
+                self.expect(&Tok::RParen)?;
+                let inner = self.parse_unary()?;
+                return Ok(Expr {
+                    id: self.id(),
+                    span,
+                    kind: ExprKind::Cast(ty, Box::new(inner)),
+                });
+            }
+            _ => None,
+        };
+        if let Some(op) = op {
+            self.bump();
+            let inner = self.parse_unary()?;
+            return Ok(Expr { id: self.id(), span, kind: ExprKind::Unary(op, Box::new(inner)) });
+        }
+        self.parse_postfix()
+    }
+
+    fn parse_postfix(&mut self) -> Result<Expr> {
+        let span = self.span();
+        let mut e = self.parse_primary()?;
+        loop {
+            match self.peek() {
+                Tok::LBracket => {
+                    self.bump();
+                    let idx = self.parse_expr()?;
+                    self.expect(&Tok::RBracket)?;
+                    e = Expr {
+                        id: self.id(),
+                        span,
+                        kind: ExprKind::Index(Box::new(e), Box::new(idx)),
+                    };
+                }
+                Tok::Dot => {
+                    self.bump();
+                    let field = self.expect_ident()?;
+                    e = Expr { id: self.id(), span, kind: ExprKind::Member(Box::new(e), field) };
+                }
+                Tok::Arrow => {
+                    self.bump();
+                    let field = self.expect_ident()?;
+                    // p->x is (*p).x; deref of struct handle is the handle.
+                    e = Expr { id: self.id(), span, kind: ExprKind::Member(Box::new(e), field) };
+                }
+                Tok::PlusPlus => {
+                    self.bump();
+                    e = Expr { id: self.id(), span, kind: ExprKind::PostIncDec(Box::new(e), true) };
+                }
+                Tok::MinusMinus => {
+                    self.bump();
+                    e = Expr { id: self.id(), span, kind: ExprKind::PostIncDec(Box::new(e), false) };
+                }
+                _ => break,
+            }
+        }
+        Ok(e)
+    }
+
+    fn parse_primary(&mut self) -> Result<Expr> {
+        let span = self.span();
+        match self.bump() {
+            Tok::IntLit(v) => Ok(Expr { id: self.id(), span, kind: ExprKind::IntLit(v) }),
+            Tok::FloatLit(v) => Ok(Expr { id: self.id(), span, kind: ExprKind::FloatLit(v) }),
+            Tok::StrLit(s) => Ok(Expr { id: self.id(), span, kind: ExprKind::StrLit(s) }),
+            Tok::CharLit(c) => Ok(Expr { id: self.id(), span, kind: ExprKind::CharLit(c) }),
+            Tok::Ident(name) => {
+                if self.peek() == &Tok::LParen {
+                    self.bump();
+                    let mut args = Vec::new();
+                    if !self.eat(&Tok::RParen) {
+                        loop {
+                            args.push(self.parse_assign()?);
+                            if !self.eat(&Tok::Comma) {
+                                break;
+                            }
+                        }
+                        self.expect(&Tok::RParen)?;
+                    }
+                    Ok(Expr { id: self.id(), span, kind: ExprKind::Call(name, args) })
+                } else {
+                    Ok(Expr { id: self.id(), span, kind: ExprKind::Ident(name) })
+                }
+            }
+            Tok::LParen => {
+                let e = self.parse_expr()?;
+                self.expect(&Tok::RParen)?;
+                Ok(e)
+            }
+            other => bail!("unexpected token {other} at {span}"),
+        }
+    }
+}
+
+/// Parse a full translation unit.
+pub fn parse(src: &str) -> Result<Program> {
+    let out = lex(src)?;
+    Parser::new(out).parse_program()
+}
+
+/// Parse a single expression (testing / tooling convenience).
+pub fn parse_expr(src: &str) -> Result<Expr> {
+    let out = lex(src)?;
+    let mut p = Parser::new(out);
+    let e = p.parse_expr()?;
+    if p.peek() != &Tok::Eof {
+        bail!("trailing tokens after expression: {}", p.peek());
+    }
+    Ok(e)
+}

@@ -1,0 +1,204 @@
+//! Pretty-printer for the mini-C AST.
+//!
+//! Used to (a) show users the transformed source after function-block
+//! replacement (the paper's Step 3 emits modified C code), and (b) close
+//! the parse∘print round-trip property the parser tests rely on.
+
+use super::ast::*;
+use std::fmt::Write;
+
+/// Render a whole program.
+pub fn print_program(p: &Program) -> String {
+    let mut out = String::new();
+    for inc in &p.includes {
+        let _ = writeln!(out, "#include <{inc}>");
+    }
+    for item in &p.items {
+        match item {
+            Item::Struct(s) => print_struct(&mut out, s),
+            Item::Func(f) => print_func(&mut out, f),
+            Item::Global(decls) => {
+                let mut line = String::new();
+                print_decls(&mut line, decls);
+                let _ = writeln!(out, "{line}");
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+fn print_struct(out: &mut String, s: &StructDef) {
+    let _ = writeln!(out, "struct {} {{", s.name);
+    for f in &s.fields {
+        let mut dims = String::new();
+        for d in &f.dims {
+            let _ = write!(dims, "[{}]", print_expr(d));
+        }
+        let _ = writeln!(out, "    {} {}{};", f.ty, f.name, dims);
+    }
+    let _ = writeln!(out, "}};");
+}
+
+fn print_func(out: &mut String, f: &FuncDef) {
+    let params: Vec<String> = f
+        .params
+        .iter()
+        .map(|p| {
+            let arr = "[]".repeat(p.array_dims);
+            format!("{} {}{arr}", p.ty, p.name)
+        })
+        .collect();
+    let _ = write!(out, "{} {}({})", f.ret, f.name, params.join(", "));
+    match &f.body {
+        None => {
+            let _ = writeln!(out, ";");
+        }
+        Some(body) => {
+            out.push(' ');
+            print_stmt(out, body, 0);
+        }
+    }
+}
+
+fn indent(out: &mut String, level: usize) {
+    for _ in 0..level {
+        out.push_str("    ");
+    }
+}
+
+fn print_decls(out: &mut String, decls: &[VarDecl]) {
+    // A decl statement shares one base type; print comma-joined.
+    let first = &decls[0];
+    let _ = write!(out, "{} ", first.ty);
+    for (i, d) in decls.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        let _ = write!(out, "{}", d.name);
+        for dim in &d.dims {
+            let _ = write!(out, "[{}]", print_expr(dim));
+        }
+        if let Some(init) = &d.init {
+            let _ = write!(out, " = {}", print_expr(init));
+        }
+    }
+    out.push(';');
+}
+
+pub fn print_stmt(out: &mut String, s: &Stmt, level: usize) {
+    match &s.kind {
+        StmtKind::Block(stmts) => {
+            out.push_str("{\n");
+            for st in stmts {
+                indent(out, level + 1);
+                print_stmt(out, st, level + 1);
+                out.push('\n');
+            }
+            indent(out, level);
+            out.push('}');
+        }
+        StmtKind::Decl(decls) => print_decls(out, decls),
+        StmtKind::Expr(e) => {
+            let _ = write!(out, "{};", print_expr(e));
+        }
+        StmtKind::If(cond, then, els) => {
+            let _ = write!(out, "if ({}) ", print_expr(cond));
+            print_stmt(out, then, level);
+            if let Some(e) = els {
+                out.push_str(" else ");
+                print_stmt(out, e, level);
+            }
+        }
+        StmtKind::For { init, cond, step, body } => {
+            out.push_str("for (");
+            match init {
+                Some(i) => {
+                    let mut s = String::new();
+                    print_stmt(&mut s, i, 0);
+                    out.push_str(s.trim_end_matches(';'));
+                    out.push(';');
+                }
+                None => out.push(';'),
+            }
+            if let Some(c) = cond {
+                let _ = write!(out, " {}", print_expr(c));
+            }
+            out.push(';');
+            if let Some(st) = step {
+                let _ = write!(out, " {}", print_expr(st));
+            }
+            out.push_str(") ");
+            print_stmt(out, body, level);
+        }
+        StmtKind::While(cond, body) => {
+            let _ = write!(out, "while ({}) ", print_expr(cond));
+            print_stmt(out, body, level);
+        }
+        StmtKind::DoWhile(body, cond) => {
+            out.push_str("do ");
+            print_stmt(out, body, level);
+            let _ = write!(out, " while ({});", print_expr(cond));
+        }
+        StmtKind::Return(e) => match e {
+            Some(e) => {
+                let _ = write!(out, "return {};", print_expr(e));
+            }
+            None => out.push_str("return;"),
+        },
+        StmtKind::Break => out.push_str("break;"),
+        StmtKind::Continue => out.push_str("continue;"),
+        StmtKind::Empty => out.push(';'),
+    }
+}
+
+/// Render an expression with full parenthesization (precedence-safe).
+pub fn print_expr(e: &Expr) -> String {
+    match &e.kind {
+        ExprKind::IntLit(v) => v.to_string(),
+        ExprKind::FloatLit(v) => {
+            if v.fract() == 0.0 && v.abs() < 1e15 {
+                format!("{v:.1}")
+            } else {
+                format!("{v}")
+            }
+        }
+        ExprKind::StrLit(s) => format!("{s:?}"),
+        ExprKind::CharLit(c) => format!("'{}'", c.escape_default()),
+        ExprKind::Ident(n) => n.clone(),
+        ExprKind::Binary(op, a, b) => {
+            format!("({} {} {})", print_expr(a), op.symbol(), print_expr(b))
+        }
+        ExprKind::Unary(op, a) => {
+            let sym = match op {
+                UnOp::Neg => "-",
+                UnOp::Not => "!",
+                UnOp::BitNot => "~",
+                UnOp::Deref => "*",
+                UnOp::Addr => "&",
+                UnOp::PreInc => "++",
+                UnOp::PreDec => "--",
+            };
+            format!("({sym}{})", print_expr(a))
+        }
+        ExprKind::PostIncDec(a, inc) => {
+            format!("({}{})", print_expr(a), if *inc { "++" } else { "--" })
+        }
+        ExprKind::Assign(op, l, r) => {
+            // Parenthesized: assignments can appear inside expressions
+            // (`(wtemp = wr) * wpr` in NR code) and must re-parse the same.
+            format!("({} {} {})", print_expr(l), op.symbol(), print_expr(r))
+        }
+        ExprKind::Ternary(c, t, els) => {
+            format!("({} ? {} : {})", print_expr(c), print_expr(t), print_expr(els))
+        }
+        ExprKind::Call(name, args) => {
+            let a: Vec<String> = args.iter().map(print_expr).collect();
+            format!("{name}({})", a.join(", "))
+        }
+        ExprKind::Index(a, i) => format!("{}[{}]", print_expr(a), print_expr(i)),
+        ExprKind::Member(a, f) => format!("{}.{f}", print_expr(a)),
+        ExprKind::Cast(ty, a) => format!("(({ty}) {})", print_expr(a)),
+        ExprKind::SizeOf(ty) => format!("sizeof({ty})"),
+    }
+}

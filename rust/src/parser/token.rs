@@ -1,0 +1,169 @@
+//! Token set for the mini-C front end.
+//!
+//! The analyzer front end (paper Step 1) consumes C/C++ source; we parse a
+//! C subset rich enough for Numerical-Recipes-style numeric code: functions,
+//! structs, multi-dimensional arrays, the full C expression grammar, and the
+//! control statements that matter for loop analysis.
+
+use std::fmt;
+
+/// Source location (1-based line / column) of a token or AST node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Span {
+    pub line: u32,
+    pub col: u32,
+}
+
+impl fmt::Display for Span {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.line, self.col)
+    }
+}
+
+/// A lexed token with its source location.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub kind: Tok,
+    pub span: Span,
+}
+
+/// Token kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    // Literals / identifiers.
+    Ident(String),
+    IntLit(i64),
+    FloatLit(f64),
+    StrLit(String),
+    CharLit(char),
+
+    // Keywords.
+    KwInt,
+    KwFloat,
+    KwDouble,
+    KwChar,
+    KwLong,
+    KwVoid,
+    KwStruct,
+    KwIf,
+    KwElse,
+    KwFor,
+    KwWhile,
+    KwDo,
+    KwReturn,
+    KwBreak,
+    KwContinue,
+    KwConst,
+    KwStatic,
+    KwExtern,
+    KwUnsigned,
+    KwSizeof,
+
+    // Punctuation.
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Semi,
+    Comma,
+    Dot,
+    Arrow, // ->
+    Question,
+    Colon,
+
+    // Operators.
+    Assign,       // =
+    PlusAssign,   // +=
+    MinusAssign,  // -=
+    StarAssign,   // *=
+    SlashAssign,  // /=
+    PercentAssign,// %=
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Percent,
+    PlusPlus,
+    MinusMinus,
+    Eq,  // ==
+    Ne,  // !=
+    Lt,
+    Gt,
+    Le,
+    Ge,
+    AndAnd,
+    OrOr,
+    Not,
+    Amp,
+    Pipe,
+    Caret,
+    Tilde,
+    Shl,
+    Shr,
+    ShlAssign, // <<=
+    ShrAssign, // >>=
+
+    Eof,
+}
+
+impl Tok {
+    /// Keyword lookup for the lexer.
+    pub fn keyword(s: &str) -> Option<Tok> {
+        Some(match s {
+            "int" => Tok::KwInt,
+            "float" => Tok::KwFloat,
+            "double" => Tok::KwDouble,
+            "char" => Tok::KwChar,
+            "long" => Tok::KwLong,
+            "void" => Tok::KwVoid,
+            "struct" => Tok::KwStruct,
+            "if" => Tok::KwIf,
+            "else" => Tok::KwElse,
+            "for" => Tok::KwFor,
+            "while" => Tok::KwWhile,
+            "do" => Tok::KwDo,
+            "return" => Tok::KwReturn,
+            "break" => Tok::KwBreak,
+            "continue" => Tok::KwContinue,
+            "const" => Tok::KwConst,
+            "static" => Tok::KwStatic,
+            "extern" => Tok::KwExtern,
+            "unsigned" => Tok::KwUnsigned,
+            "sizeof" => Tok::KwSizeof,
+            _ => return None,
+        })
+    }
+
+    /// True for tokens that can begin a type name.
+    pub fn starts_type(&self) -> bool {
+        matches!(
+            self,
+            Tok::KwInt
+                | Tok::KwFloat
+                | Tok::KwDouble
+                | Tok::KwChar
+                | Tok::KwLong
+                | Tok::KwVoid
+                | Tok::KwStruct
+                | Tok::KwConst
+                | Tok::KwStatic
+                | Tok::KwExtern
+                | Tok::KwUnsigned
+        )
+    }
+}
+
+impl fmt::Display for Tok {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Tok::Ident(s) => write!(f, "{s}"),
+            Tok::IntLit(v) => write!(f, "{v}"),
+            Tok::FloatLit(v) => write!(f, "{v}"),
+            Tok::StrLit(s) => write!(f, "{s:?}"),
+            Tok::CharLit(c) => write!(f, "{c:?}"),
+            other => write!(f, "{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,332 @@
+//! PJRT runtime: load and execute the AOT function-block artifacts.
+//!
+//! This is the only bridge to the compiled L1/L2 world: `make artifacts`
+//! lowers the JAX/Pallas function blocks to HLO **text** (xla_extension
+//! 0.5.1 rejects jax>=0.5 serialized protos — 64-bit instruction ids; the
+//! text parser reassigns them), and this module compiles each artifact once
+//! on the PJRT CPU client and executes it from the coordinator's hot path.
+//! Python never runs here.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::patterndb::json::{self, Json};
+
+/// Shape+dtype of one artifact input/output (dtype is always f32 at this
+/// boundary; complex data travels as split re/im planes).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Manifest entry for one artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub description: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// A compiled, executable artifact.
+pub struct LoadedArtifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Execution statistics (dispatches + bytes through the PJRT boundary).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub executions: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub compiles: u64,
+}
+
+/// The runtime engine: one PJRT CPU client + lazily compiled artifacts.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    metas: HashMap<String, ArtifactMeta>,
+    compiled: RefCell<HashMap<String, Rc<LoadedArtifact>>>,
+    pub stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    /// Open an artifact directory (reads `manifest.json`; compiles lazily).
+    pub fn open(dir: &Path) -> Result<Rc<Self>> {
+        let manifest_path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let v = json::parse(&src)?;
+        if v.get("format")?.as_str()? != "hlo-text" {
+            bail!("unsupported artifact format");
+        }
+        let mut metas = HashMap::new();
+        for a in v.get("artifacts")?.as_arr()? {
+            let meta = ArtifactMeta {
+                name: a.get("name")?.as_str()?.to_string(),
+                file: a.get("file")?.as_str()?.to_string(),
+                description: a
+                    .opt("description")
+                    .and_then(|d| d.as_str().ok())
+                    .unwrap_or("")
+                    .to_string(),
+                inputs: parse_specs(a.get("inputs")?)?,
+                outputs: parse_specs(a.get("outputs")?)?,
+            };
+            metas.insert(meta.name.clone(), meta);
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Rc::new(Engine {
+            client,
+            dir: dir.to_path_buf(),
+            metas,
+            compiled: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        }))
+    }
+
+    /// Artifact names available in the manifest.
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.metas.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.metas.contains_key(name)
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.metas.get(name)
+    }
+
+    /// Compile (once) and return an artifact.
+    pub fn artifact(&self, name: &str) -> Result<Rc<LoadedArtifact>> {
+        if let Some(a) = self.compiled.borrow().get(name) {
+            return Ok(a.clone());
+        }
+        let meta = self
+            .metas
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact {name:?} in manifest (have: {:?})", self.artifact_names()))?
+            .clone();
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        self.stats.borrow_mut().compiles += 1;
+        let loaded = Rc::new(LoadedArtifact { meta, exe });
+        self.compiled.borrow_mut().insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Execute an artifact on f32 buffers. Input/output order follows the
+    /// manifest. Shapes are validated against the manifest specs.
+    pub fn execute(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let art = self.artifact(name)?;
+        if inputs.len() != art.meta.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                art.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, spec) in inputs.iter().zip(&art.meta.inputs) {
+            if buf.len() != spec.elems() {
+                bail!(
+                    "{name}: input length {} does not match shape {:?}",
+                    buf.len(),
+                    spec.shape
+                );
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(buf)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape to {dims:?}: {e}"))?;
+            literals.push(lit);
+        }
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.bytes_in += inputs.iter().map(|b| (b.len() * 4) as u64).sum::<u64>();
+        }
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e}"))?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of {name}: {e}"))?;
+        if parts.len() != art.meta.outputs.len() {
+            bail!(
+                "{name}: expected {} outputs, got {}",
+                art.meta.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (p, spec) in parts.into_iter().zip(&art.meta.outputs) {
+            let v = p
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("reading output of {name}: {e}"))?;
+            if v.len() != spec.elems() {
+                bail!("{name}: output length {} != shape {:?}", v.len(), spec.shape);
+            }
+            self.stats.borrow_mut().bytes_out += (v.len() * 4) as u64;
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Pick the size variant of a block artifact: `"{base}_n{n}"`.
+    pub fn sized_artifact_name(&self, base: &str, n: usize) -> Result<String> {
+        let name = format!("{base}_n{n}");
+        if self.has_artifact(&name) {
+            Ok(name)
+        } else {
+            bail!(
+                "no artifact for block {base:?} at size {n} (have: {:?}); \
+                 re-run `make artifacts` with --sizes including {n}",
+                self.artifact_names()
+            )
+        }
+    }
+}
+
+fn parse_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    let mut out = Vec::new();
+    for t in v.as_arr()? {
+        let shape = t
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        out.push(TensorSpec { shape });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn engine() -> Rc<Engine> {
+        Engine::open(&artifacts_dir()).expect("run `make artifacts` before cargo test")
+    }
+
+    #[test]
+    fn manifest_loads_with_expected_artifacts() {
+        let e = engine();
+        for name in ["fft2d_n64", "lu_factor_n64", "matmul_n64", "lu_solve_n64"] {
+            assert!(e.has_artifact(name), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn matmul_artifact_is_numerically_correct() {
+        let e = engine();
+        let n = 64;
+        // a = I scaled by 2, b = ramp; a@b = 2*ramp.
+        let mut a = vec![0f32; n * n];
+        for i in 0..n {
+            a[i * n + i] = 2.0;
+        }
+        let b: Vec<f32> = (0..n * n).map(|i| (i % 97) as f32).collect();
+        let out = e.execute("matmul_n64", &[a, b.clone()]).unwrap();
+        assert_eq!(out.len(), 1);
+        for (got, want) in out[0].iter().zip(b.iter().map(|v| v * 2.0)) {
+            assert!((got - want).abs() < 1e-3, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn fft_artifact_impulse_is_flat() {
+        let e = engine();
+        let n = 64;
+        let mut re = vec![0f32; n * n];
+        re[0] = 1.0;
+        let im = vec![0f32; n * n];
+        let out = e.execute("fft2d_n64", &[re, im]).unwrap();
+        assert_eq!(out.len(), 2);
+        for v in &out[0] {
+            assert!((v - 1.0).abs() < 1e-3);
+        }
+        for v in &out[1] {
+            assert!(v.abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn lu_artifact_factors_identity() {
+        let e = engine();
+        let n = 64;
+        let mut a = vec![0f32; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let out = e.execute("lu_factor_n64", &[a.clone()]).unwrap();
+        for (got, want) in out[0].iter().zip(&a) {
+            assert!((got - want).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn shape_validation_errors() {
+        let e = engine();
+        assert!(e.execute("matmul_n64", &[vec![0f32; 3], vec![0f32; 3]]).is_err());
+        assert!(e.execute("matmul_n64", &[vec![0f32; 64 * 64]]).is_err());
+        assert!(e.execute("nonexistent", &[]).is_err());
+    }
+
+    #[test]
+    fn sized_artifact_lookup() {
+        let e = engine();
+        assert_eq!(e.sized_artifact_name("fft2d", 64).unwrap(), "fft2d_n64");
+        assert!(e.sized_artifact_name("fft2d", 99).is_err());
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let e = engine();
+        let n = 64;
+        let a = vec![1f32; n * n];
+        e.execute("matmul_n64", &[a.clone(), a.clone()]).unwrap();
+        e.execute("matmul_n64", &[a.clone(), a]).unwrap();
+        let st = e.stats.borrow();
+        assert_eq!(st.executions, 2);
+        assert_eq!(st.compiles, 1); // compiled once, cached after
+        assert!(st.bytes_in > 0 && st.bytes_out > 0);
+    }
+}

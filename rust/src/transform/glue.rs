@@ -1,0 +1,264 @@
+//! Host-side glue: bridge interpreter values ↔ PJRT artifact buffers.
+//!
+//! The pattern DB registers a **usage recipe** with every replacement (the
+//! paper: "usage methods are also registered" with the executable). The
+//! recipe is a `;`-separated list of tokens over the replacement-signature
+//! parameter names:
+//!
+//! ```text
+//! in:a:n*n      read-only buffer argument `a`, length n*n
+//! inout:b:n*m   buffer copied to the device and written back
+//! out:c:n*n     output-only buffer (contents replaced)
+//! size:n        scalar that selects the artifact size variant
+//! ```
+//!
+//! Artifact inputs are fed in token order (`in`/`inout`), artifact outputs
+//! map back onto `inout`/`out` tokens in order — mirroring how cuFFT/cuBLAS
+//! host code stages device buffers around a library call.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::interp::eval::ExternalFn;
+use crate::interp::Value;
+use crate::patterndb::Replacement;
+use crate::runtime::Engine;
+
+/// Buffer transfer mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    In,
+    InOut,
+    Out,
+}
+
+/// One buffer binding in a usage recipe.
+#[derive(Debug, Clone)]
+pub struct BufSpec {
+    pub mode: Mode,
+    pub param: String,
+    /// Length expression: product of scalar-param names / integer literals.
+    pub len_factors: Vec<String>,
+}
+
+/// Parsed usage recipe.
+#[derive(Debug, Clone)]
+pub struct UsageSpec {
+    pub bufs: Vec<BufSpec>,
+    pub size_param: String,
+}
+
+impl UsageSpec {
+    pub fn parse(usage: &str) -> Result<Self> {
+        let mut bufs = Vec::new();
+        let mut size_param = None;
+        for token in usage.split(';').filter(|t| !t.is_empty()) {
+            let parts: Vec<&str> = token.split(':').collect();
+            match parts.as_slice() {
+                ["size", name] => size_param = Some(name.to_string()),
+                [mode, name, len] => {
+                    let mode = match *mode {
+                        "in" => Mode::In,
+                        "inout" => Mode::InOut,
+                        "out" => Mode::Out,
+                        other => bail!("unknown usage mode {other:?}"),
+                    };
+                    bufs.push(BufSpec {
+                        mode,
+                        param: name.to_string(),
+                        len_factors: len.split('*').map(|s| s.trim().to_string()).collect(),
+                    });
+                }
+                other => bail!("malformed usage token {other:?}"),
+            }
+        }
+        Ok(UsageSpec {
+            bufs,
+            size_param: size_param.ok_or_else(|| anyhow!("usage recipe missing size:<param>"))?,
+        })
+    }
+}
+
+/// Build the external dispatch function for one replacement.
+///
+/// The returned closure is installed into the interpreter under
+/// [`super::dispatch_name`]; at call time its arguments correspond
+/// positionally to the replacement signature.
+pub fn build_external(engine: Rc<Engine>, repl: &Replacement) -> Result<ExternalFn> {
+    let usage = UsageSpec::parse(&repl.usage)?;
+    let params: Vec<String> = repl.signature.params.iter().map(|p| p.name.clone()).collect();
+    let artifact_base = repl.artifact.clone();
+    let label = repl.name.clone();
+
+    Ok(Rc::new(move |args: &[Value]| -> Result<Value> {
+        if args.len() != params.len() {
+            bail!(
+                "{label}: dispatch expected {} args ({}), got {}",
+                params.len(),
+                params.join(", "),
+                args.len()
+            );
+        }
+        let arg_of = |name: &str| -> Result<&Value> {
+            let i = params
+                .iter()
+                .position(|p| p == name)
+                .ok_or_else(|| anyhow!("{label}: usage references unknown param {name:?}"))?;
+            Ok(&args[i])
+        };
+        // Scalars for length expressions + size selection.
+        let scalar = |name: &str| -> Result<i64> { arg_of(name)?.as_int() };
+
+        let n = scalar(&usage.size_param)? as usize;
+        let artifact = engine.sized_artifact_name(&artifact_base, n)?;
+
+        let eval_len = |factors: &[String]| -> Result<usize> {
+            let mut len = 1usize;
+            for f in factors {
+                let v = if let Ok(c) = f.parse::<usize>() { c } else { scalar(f)? as usize };
+                len = len
+                    .checked_mul(v)
+                    .ok_or_else(|| anyhow!("{label}: length overflow in usage recipe"))?;
+            }
+            Ok(len)
+        };
+
+        // Stage inputs (token order == artifact input order).
+        let mut inputs = Vec::new();
+        for b in usage.bufs.iter().filter(|b| b.mode != Mode::Out) {
+            let v = arg_of(&b.param)?;
+            let slice = v.as_arr().map_err(|_| {
+                anyhow!("{label}: argument {:?} must be an array", b.param)
+            })?;
+            let want = eval_len(&b.len_factors)?;
+            if slice.len() != want {
+                bail!(
+                    "{label}: buffer {:?} has {} elements, usage expects {}",
+                    b.param,
+                    slice.len(),
+                    want
+                );
+            }
+            inputs.push(slice.to_vec_f32());
+        }
+
+        let outputs = engine.execute(&artifact, &inputs)?;
+
+        // Write outputs back (inout + out tokens, in order).
+        let out_bufs: Vec<&BufSpec> =
+            usage.bufs.iter().filter(|b| b.mode != Mode::In).collect();
+        if outputs.len() != out_bufs.len() {
+            bail!(
+                "{label}: artifact produced {} outputs, usage expects {}",
+                outputs.len(),
+                out_bufs.len()
+            );
+        }
+        for (out, spec) in outputs.iter().zip(out_bufs) {
+            let slice = arg_of(&spec.param)?.as_arr()?;
+            slice.copy_from_f32(out)?;
+        }
+        Ok(Value::Void)
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::Slice;
+    use crate::patterndb::PatternDb;
+    use std::path::PathBuf;
+
+    fn engine() -> Rc<Engine> {
+        Engine::open(&PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")).unwrap()
+    }
+
+    #[test]
+    fn usage_parsing() {
+        let u = UsageSpec::parse("in:a:n*n;inout:b:n*8;size:n").unwrap();
+        assert_eq!(u.bufs.len(), 2);
+        assert_eq!(u.bufs[0].mode, Mode::In);
+        assert_eq!(u.bufs[1].mode, Mode::InOut);
+        assert_eq!(u.bufs[1].len_factors, vec!["n", "8"]);
+        assert_eq!(u.size_param, "n");
+        assert!(UsageSpec::parse("in:a:n").is_err()); // no size
+        assert!(UsageSpec::parse("bad:a:n;size:n").is_err());
+    }
+
+    #[test]
+    fn fft_dispatch_roundtrip() {
+        let db = PatternDb::builtin();
+        let repl = &db.find_library("fft2d").unwrap().replacement;
+        let f = build_external(engine(), repl).unwrap();
+        let n = 64usize;
+        // Impulse at origin.
+        let re = Slice::zeros(&[n, n], false);
+        re.set(0, 1.0).unwrap();
+        let im = Slice::zeros(&[n, n], false);
+        f(&[Value::Arr(re.clone()), Value::Arr(im.clone()), Value::Int(n as i64)]).unwrap();
+        // Spectrum of an impulse is all-ones.
+        for i in 0..n * n {
+            assert!((re.get(i).unwrap() - 1.0).abs() < 1e-3);
+            assert!(im.get(i).unwrap().abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn lu_dispatch_roundtrip() {
+        let db = PatternDb::builtin();
+        let repl = &db.find_library("ludcmp").unwrap().replacement;
+        let f = build_external(engine(), repl).unwrap();
+        let n = 64usize;
+        let a = Slice::zeros(&[n * n], false);
+        for i in 0..n {
+            for j in 0..n {
+                a.set(i * n + j, if i == j { n as f64 } else { 0.5 }).unwrap();
+            }
+        }
+        let orig = a.to_vec();
+        f(&[Value::Arr(a.clone()), Value::Int(n as i64)]).unwrap();
+        // Verify L@U == A on a few entries.
+        let lu = a.to_vec();
+        let l = |i: usize, k: usize| {
+            if k < i { lu[i * n + k] } else if k == i { 1.0 } else { 0.0 }
+        };
+        let u = |k: usize, j: usize| if k <= j { lu[k * n + j] } else { 0.0 };
+        for &(i, j) in &[(0, 0), (5, 3), (3, 5), (63, 63), (17, 40)] {
+            let mut s = 0.0;
+            for k in 0..n {
+                s += l(i, k) * u(k, j);
+            }
+            assert!((s - orig[i * n + j]).abs() < 1e-2, "({i},{j}): {s} vs {}", orig[i * n + j]);
+        }
+    }
+
+    #[test]
+    fn wrong_buffer_length_is_an_error() {
+        let db = PatternDb::builtin();
+        let repl = &db.find_library("fft2d").unwrap().replacement;
+        let f = build_external(engine(), repl).unwrap();
+        let re = Slice::zeros(&[16], false);
+        let im = Slice::zeros(&[16], false);
+        let err = f(&[Value::Arr(re), Value::Arr(im), Value::Int(64)]).unwrap_err();
+        assert!(err.to_string().contains("elements"), "{err}");
+    }
+
+    #[test]
+    fn missing_size_variant_is_an_error() {
+        let db = PatternDb::builtin();
+        let repl = &db.find_library("fft2d").unwrap().replacement;
+        let f = build_external(engine(), repl).unwrap();
+        let re = Slice::zeros(&[9], false);
+        let im = Slice::zeros(&[9], false);
+        assert!(f(&[Value::Arr(re), Value::Arr(im), Value::Int(3)]).is_err());
+    }
+
+    #[test]
+    fn wrong_arity_is_an_error() {
+        let db = PatternDb::builtin();
+        let repl = &db.find_library("fft2d").unwrap().replacement;
+        let f = build_external(engine(), repl).unwrap();
+        assert!(f(&[Value::Int(3)]).is_err());
+    }
+}

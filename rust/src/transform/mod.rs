@@ -1,0 +1,563 @@
+//! Step-3 transformation: replace function blocks and reconcile interfaces.
+//!
+//! * **C-1** — a matched library call site is redirected to the external
+//!   dispatch name `__fb_<artifact>`; signatures match by construction
+//!   (the DB registered both sides), so only the glue is generated.
+//! * **C-2** — a similarity-matched *local* function has its body replaced
+//!   with a call to the external dispatch, so every existing call site
+//!   flows through the replacement. Because similarity matching gives no
+//!   interface guarantee, [`reconcile`] compares signatures first:
+//!   float/double mismatches auto-cast, droppable optional parameters are
+//!   dropped silently, anything else requires user confirmation through an
+//!   [`InterfacePolicy`] (the paper asks the offload requester).
+//!
+//! The host glue itself ([`glue`]) interprets the DB usage recipe and
+//! bridges interpreter values ↔ PJRT buffers.
+
+pub mod glue;
+
+use anyhow::{bail, Result};
+
+use crate::parser::ast::*;
+use crate::parser::{FuncDef, Program};
+use crate::patterndb::{Replacement, Signature};
+
+/// External dispatch name for a replacement artifact.
+pub fn dispatch_name(artifact: &str) -> String {
+    format!("__fb_{artifact}")
+}
+
+/// How interface-change confirmations are answered (paper: ask the user).
+#[derive(Debug, Clone)]
+pub enum InterfacePolicy {
+    /// Approve every interface adaptation (batch/CI mode).
+    AutoApprove,
+    /// Reject everything that is not automatic (strict mode).
+    AutoReject,
+    /// Scripted answers, consumed in order; falls back to reject.
+    Scripted(Vec<bool>),
+}
+
+impl InterfacePolicy {
+    fn ask(&mut self, _question: &str) -> bool {
+        match self {
+            InterfacePolicy::AutoApprove => true,
+            InterfacePolicy::AutoReject => false,
+            InterfacePolicy::Scripted(answers) => {
+                if answers.is_empty() {
+                    false
+                } else {
+                    answers.remove(0)
+                }
+            }
+        }
+    }
+}
+
+/// Outcome of reconciling one block's interface (C-1 / C-2).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reconciliation {
+    /// Interfaces agree exactly — C-1 path, no user involvement.
+    Exact,
+    /// Only float↔double casts needed — automatic (paper: "may proceed
+    /// without user confirmation").
+    AutoCast,
+    /// Caller has extra *optional* parameters that are dropped — automatic.
+    DropOptional(Vec<usize>),
+    /// Structural change confirmed by the user.
+    Confirmed(String),
+    /// User declined / policy rejected — block is not offloaded.
+    Rejected(String),
+}
+
+impl Reconciliation {
+    pub fn accepted(&self) -> bool {
+        !matches!(self, Reconciliation::Rejected(_))
+    }
+
+    /// Caller-argument indices to keep, given the caller arity.
+    pub fn kept_args(&self, caller_arity: usize) -> Vec<usize> {
+        match self {
+            Reconciliation::DropOptional(dropped) => {
+                (0..caller_arity).filter(|i| !dropped.contains(i)).collect()
+            }
+            _ => (0..caller_arity).collect(),
+        }
+    }
+}
+
+fn base_scalar(ty: &str) -> &str {
+    ty.trim_end_matches("[]").trim_end_matches('*')
+}
+
+fn is_array(ty: &str) -> bool {
+    ty.ends_with("[]") || ty.ends_with('*')
+}
+
+fn types_compatible(a: &str, b: &str) -> bool {
+    if is_array(a) != is_array(b) {
+        return false;
+    }
+    let (sa, sb) = (base_scalar(a), base_scalar(b));
+    let float_like = |s: &str| matches!(s, "float" | "double");
+    let int_like = |s: &str| matches!(s, "int" | "long" | "char");
+    sa == sb || (float_like(sa) && float_like(sb)) || (int_like(sa) && int_like(sb))
+}
+
+/// Compare a caller-side signature against the replacement's (C-2 core).
+pub fn reconcile(
+    caller: &Signature,
+    replacement: &Signature,
+    policy: &mut InterfacePolicy,
+) -> Reconciliation {
+    // Case 1: arities equal — check types positionally.
+    if caller.params.len() == replacement.params.len() {
+        let mut needs_cast = false;
+        for (c, r) in caller.params.iter().zip(&replacement.params) {
+            if c.ty == r.ty {
+                continue;
+            }
+            if types_compatible(&c.ty, &r.ty) {
+                needs_cast = true;
+            } else {
+                let q = format!(
+                    "parameter {:?} has type {} but the replacement expects {} — adapt?",
+                    c.name, c.ty, r.ty
+                );
+                return if policy.ask(&q) {
+                    Reconciliation::Confirmed(q)
+                } else {
+                    Reconciliation::Rejected(q)
+                };
+            }
+        }
+        return if needs_cast { Reconciliation::AutoCast } else { Reconciliation::Exact };
+    }
+
+    // Case 2: caller has MORE params — drop trailing ones. Optional-marked
+    // extras with a matching required prefix drop silently (paper: "may be
+    // treated as absent without asking"); otherwise the user is asked, and
+    // on approval the extras are still dropped (the adaptation the user
+    // just approved).
+    if caller.params.len() > replacement.params.len() {
+        let extra: Vec<usize> = (replacement.params.len()..caller.params.len()).collect();
+        let all_extra_optional = extra.iter().all(|&i| caller.params[i].optional);
+        let prefix_ok = caller.params[..replacement.params.len()]
+            .iter()
+            .zip(&replacement.params)
+            .all(|(c, r)| types_compatible(&c.ty, &r.ty));
+        if all_extra_optional && prefix_ok {
+            return Reconciliation::DropOptional(extra);
+        }
+        let q = format!(
+            "caller has {} parameters, replacement takes {} — drop extras?",
+            caller.params.len(),
+            replacement.params.len()
+        );
+        return if policy.ask(&q) {
+            Reconciliation::DropOptional(extra)
+        } else {
+            Reconciliation::Rejected(q)
+        };
+    }
+
+    // Case 3: caller has FEWER params than the replacement requires; our
+    // glue cannot synthesize missing required arguments, so the block is
+    // not offloadable (the paper would ask the user to change the caller —
+    // out of scope for automatic transformation).
+    Reconciliation::Rejected(format!(
+        "caller supplies {} arguments but replacement requires {}",
+        caller.params.len(),
+        replacement.required_count()
+    ))
+}
+
+/// Extract the declared signature of an AST function (C-2 caller side).
+pub fn signature_of(f: &FuncDef) -> Signature {
+    Signature {
+        params: f
+            .params
+            .iter()
+            .map(|p| crate::patterndb::ParamSpec {
+                name: p.name.clone(),
+                ty: type_string(&p.ty, p.array_dims),
+                optional: false,
+            })
+            .collect(),
+        ret: type_string(&f.ret, 0),
+    }
+}
+
+fn type_string(ty: &Ty, array_dims: usize) -> String {
+    let base = match ty {
+        Ty::Base(b) => b.name().to_string(),
+        Ty::Struct(n) => format!("struct {n}"),
+        Ty::Ptr(inner) => return format!("{}[]", type_string(inner, 0).trim_end_matches("[]")),
+    };
+    if array_dims > 0 {
+        format!("{base}{}", "[]".repeat(array_dims).replace("[][]", "[]"))
+    } else {
+        base
+    }
+}
+
+/// One planned block replacement.
+#[derive(Debug, Clone)]
+pub struct PlannedReplacement {
+    /// Where the block lives.
+    pub site: Site,
+    pub replacement: Replacement,
+    pub reconciliation: Reconciliation,
+}
+
+/// Replacement site: a call expression (C-1) or a defined function (C-2).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Site {
+    /// All call sites to this external library name.
+    LibraryCall { callee: String },
+    /// The body of this locally defined function.
+    FunctionBody { function: String },
+}
+
+impl Site {
+    pub fn label(&self) -> String {
+        match self {
+            Site::LibraryCall { callee } => format!("call:{callee}"),
+            Site::FunctionBody { function } => format!("func:{function}"),
+        }
+    }
+}
+
+/// Apply a set of planned replacements to a program, producing the
+/// transformed AST (the paper's generated execution file).
+pub fn apply(prog: &Program, plans: &[PlannedReplacement]) -> Result<Program> {
+    let mut out = prog.clone();
+    for plan in plans {
+        if !plan.reconciliation.accepted() {
+            continue;
+        }
+        match &plan.site {
+            Site::LibraryCall { callee } => {
+                let target = dispatch_name(&plan.replacement.artifact);
+                let mut replaced = 0usize;
+                for item in &mut out.items {
+                    if let Item::Func(f) = item {
+                        if let Some(body) = &mut f.body {
+                            replaced += rewrite_calls(body, callee, &target, &plan.reconciliation);
+                        }
+                    }
+                }
+                if replaced == 0 {
+                    bail!("no call sites of {callee:?} found to replace");
+                }
+            }
+            Site::FunctionBody { function } => {
+                let target = dispatch_name(&plan.replacement.artifact);
+                let f = out
+                    .items
+                    .iter_mut()
+                    .find_map(|i| match i {
+                        Item::Func(f) if &f.name == function => Some(f),
+                        _ => None,
+                    })
+                    .ok_or_else(|| anyhow::anyhow!("function {function:?} not found"))?;
+                replace_body_with_dispatch(f, &target, &plan.reconciliation);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Rewrite `callee(args...)` to `target(kept args...)` everywhere under `s`.
+fn rewrite_calls(s: &mut Stmt, callee: &str, target: &str, rec: &Reconciliation) -> usize {
+    let mut n = 0;
+    rewrite_stmt_exprs(s, &mut |e| {
+        if let ExprKind::Call(name, args) = &mut e.kind {
+            if name == callee {
+                let keep = rec.kept_args(args.len());
+                if keep.len() != args.len() {
+                    let mut kept = Vec::with_capacity(keep.len());
+                    for (i, a) in args.drain(..).enumerate() {
+                        if keep.contains(&i) {
+                            kept.push(a);
+                        }
+                    }
+                    *args = kept;
+                }
+                *name = target.to_string();
+                n += 1;
+            }
+        }
+    });
+    n
+}
+
+/// Replace a function's body with a single dispatch call forwarding its
+/// (kept) parameters.
+fn replace_body_with_dispatch(f: &mut FuncDef, target: &str, rec: &Reconciliation) {
+    let keep = rec.kept_args(f.params.len());
+    let args: Vec<Expr> = keep
+        .iter()
+        .map(|&i| Expr {
+            id: NodeId(u32::MAX - i as u32),
+            span: f.span,
+            kind: ExprKind::Ident(f.params[i].name.clone()),
+        })
+        .collect();
+    let call = Expr {
+        id: NodeId(u32::MAX - 1000),
+        span: f.span,
+        kind: ExprKind::Call(target.to_string(), args),
+    };
+    let body = Stmt {
+        id: NodeId(u32::MAX - 1001),
+        span: f.span,
+        kind: StmtKind::Block(vec![Stmt {
+            id: NodeId(u32::MAX - 1002),
+            span: f.span,
+            kind: StmtKind::Expr(call),
+        }]),
+    };
+    f.body = Some(body);
+}
+
+/// Visit every expression (mutably) under a statement.
+fn rewrite_stmt_exprs(s: &mut Stmt, f: &mut impl FnMut(&mut Expr)) {
+    fn expr_walk(e: &mut Expr, f: &mut impl FnMut(&mut Expr)) {
+        f(e);
+        match &mut e.kind {
+            ExprKind::Binary(_, a, b) | ExprKind::Assign(_, a, b) => {
+                expr_walk(a, f);
+                expr_walk(b, f);
+            }
+            ExprKind::Unary(_, a)
+            | ExprKind::PostIncDec(a, _)
+            | ExprKind::Cast(_, a)
+            | ExprKind::Member(a, _) => expr_walk(a, f),
+            ExprKind::Ternary(c, t, e2) => {
+                expr_walk(c, f);
+                expr_walk(t, f);
+                expr_walk(e2, f);
+            }
+            ExprKind::Call(_, args) => {
+                for a in args {
+                    expr_walk(a, f);
+                }
+            }
+            ExprKind::Index(a, i) => {
+                expr_walk(a, f);
+                expr_walk(i, f);
+            }
+            _ => {}
+        }
+    }
+    match &mut s.kind {
+        StmtKind::Block(stmts) => {
+            for st in stmts {
+                rewrite_stmt_exprs(st, f);
+            }
+        }
+        StmtKind::Decl(decls) => {
+            for d in decls {
+                for dim in &mut d.dims {
+                    expr_walk(dim, f);
+                }
+                if let Some(init) = &mut d.init {
+                    expr_walk(init, f);
+                }
+            }
+        }
+        StmtKind::Expr(e) => expr_walk(e, f),
+        StmtKind::If(c, t, e) => {
+            expr_walk(c, f);
+            rewrite_stmt_exprs(t, f);
+            if let Some(e) = e {
+                rewrite_stmt_exprs(e, f);
+            }
+        }
+        StmtKind::For { init, cond, step, body } => {
+            if let Some(i) = init {
+                rewrite_stmt_exprs(i, f);
+            }
+            if let Some(c) = cond {
+                expr_walk(c, f);
+            }
+            if let Some(st) = step {
+                expr_walk(st, f);
+            }
+            rewrite_stmt_exprs(body, f);
+        }
+        StmtKind::While(c, b) => {
+            expr_walk(c, f);
+            rewrite_stmt_exprs(b, f);
+        }
+        StmtKind::DoWhile(b, c) => {
+            rewrite_stmt_exprs(b, f);
+            expr_walk(c, f);
+        }
+        StmtKind::Return(Some(e)) => expr_walk(e, f),
+        _ => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parser::parse;
+    use crate::patterndb::{PatternDb, Signature};
+
+    fn sig(params: &[(&str, &str)], ret: &str) -> Signature {
+        Signature::new(params, ret)
+    }
+
+    #[test]
+    fn exact_signatures_are_c1() {
+        let s = sig(&[("a", "double[]"), ("n", "int")], "void");
+        let mut p = InterfacePolicy::AutoReject;
+        assert_eq!(reconcile(&s, &s.clone(), &mut p), Reconciliation::Exact);
+    }
+
+    #[test]
+    fn float_double_auto_casts_without_confirmation() {
+        let caller = sig(&[("a", "float[]"), ("n", "int")], "void");
+        let repl = sig(&[("a", "double[]"), ("n", "int")], "void");
+        // AutoReject policy: if this asked the user, it would be Rejected.
+        let mut p = InterfacePolicy::AutoReject;
+        assert_eq!(reconcile(&caller, &repl, &mut p), Reconciliation::AutoCast);
+    }
+
+    #[test]
+    fn optional_extras_dropped_silently() {
+        let caller = sig(&[("a", "double[]"), ("n", "int"), ("work", "double[]")], "void")
+            .with_optional("work");
+        let repl = sig(&[("a", "double[]"), ("n", "int")], "void");
+        let mut p = InterfacePolicy::AutoReject;
+        let r = reconcile(&caller, &repl, &mut p);
+        assert_eq!(r, Reconciliation::DropOptional(vec![2]));
+        assert_eq!(r.kept_args(3), vec![0, 1]);
+    }
+
+    #[test]
+    fn structural_mismatch_requires_confirmation() {
+        let caller = sig(&[("a", "double[]"), ("flag", "double[]")], "void");
+        let repl = sig(&[("a", "double[]"), ("n", "int")], "void");
+        let mut yes = InterfacePolicy::AutoApprove;
+        assert!(matches!(reconcile(&caller, &repl, &mut yes), Reconciliation::Confirmed(_)));
+        let mut no = InterfacePolicy::AutoReject;
+        assert!(matches!(reconcile(&caller, &repl, &mut no), Reconciliation::Rejected(_)));
+    }
+
+    #[test]
+    fn scripted_policy_consumes_answers() {
+        let caller = sig(&[("a", "double[]"), ("b", "double[]")], "void");
+        let repl = sig(&[("a", "double[]"), ("n", "int")], "void");
+        let mut p = InterfacePolicy::Scripted(vec![true, false]);
+        assert!(matches!(reconcile(&caller, &repl, &mut p), Reconciliation::Confirmed(_)));
+        assert!(matches!(reconcile(&caller, &repl, &mut p), Reconciliation::Rejected(_)));
+        // Exhausted script rejects.
+        assert!(matches!(reconcile(&caller, &repl, &mut p), Reconciliation::Rejected(_)));
+    }
+
+    #[test]
+    fn confirmed_arity_mismatch_drops_extras() {
+        let caller = sig(&[("a", "double[]"), ("n", "int"), ("dbg", "int")], "void");
+        let repl = sig(&[("a", "double[]"), ("n", "int")], "void");
+        let mut p = InterfacePolicy::AutoApprove;
+        let r = reconcile(&caller, &repl, &mut p);
+        assert_eq!(r, Reconciliation::DropOptional(vec![2]));
+        let mut p = InterfacePolicy::AutoReject;
+        assert!(matches!(reconcile(&caller, &repl, &mut p), Reconciliation::Rejected(_)));
+    }
+
+    #[test]
+    fn too_few_args_rejected() {
+        let caller = sig(&[("a", "double[]")], "void");
+        let repl = sig(&[("a", "double[]"), ("n", "int")], "void");
+        let mut p = InterfacePolicy::AutoApprove;
+        assert!(matches!(reconcile(&caller, &repl, &mut p), Reconciliation::Rejected(_)));
+    }
+
+    const APP: &str = "
+        void fft2d(double re[], double im[], int n);
+        int main() {
+            double re[16][16]; double im[16][16];
+            fft2d(re, im, 16);
+            fft2d(im, re, 16);
+            return 0;
+        }";
+
+    #[test]
+    fn c1_call_rewrite_redirects_all_sites() {
+        let prog = parse(APP).unwrap();
+        let db = PatternDb::builtin();
+        let rec = db.find_library("fft2d").unwrap();
+        let plan = PlannedReplacement {
+            site: Site::LibraryCall { callee: "fft2d".into() },
+            replacement: rec.replacement.clone(),
+            reconciliation: Reconciliation::Exact,
+        };
+        let out = apply(&prog, &[plan]).unwrap();
+        let printed = crate::parser::print_program(&out);
+        assert!(printed.contains("__fb_fft2d(re, im, 16)"));
+        assert!(printed.contains("__fb_fft2d(im, re, 16)"));
+        assert!(!printed.contains(" fft2d(re"));
+    }
+
+    #[test]
+    fn c2_body_replacement_forwards_params() {
+        let prog = parse(
+            "void my_decomp(double a[], int n) {
+                for (int k = 0; k < n; k++) a[k] = a[k] + 1.0;
+             }
+             int main() { double a[4]; my_decomp(a, 2); return 0; }",
+        )
+        .unwrap();
+        let db = PatternDb::builtin();
+        let rec = &db.comparisons[1]; // nr-ludcmp
+        let plan = PlannedReplacement {
+            site: Site::FunctionBody { function: "my_decomp".into() },
+            replacement: rec.replacement.clone(),
+            reconciliation: Reconciliation::Exact,
+        };
+        let out = apply(&prog, &[plan]).unwrap();
+        let printed = crate::parser::print_program(&out);
+        assert!(printed.contains("void my_decomp(double a[], int n) {\n    __fb_lu_factor(a, n);\n}"),
+            "printed:\n{printed}");
+    }
+
+    #[test]
+    fn rejected_plan_is_a_noop() {
+        let prog = parse(APP).unwrap();
+        let db = PatternDb::builtin();
+        let plan = PlannedReplacement {
+            site: Site::LibraryCall { callee: "fft2d".into() },
+            replacement: db.find_library("fft2d").unwrap().replacement.clone(),
+            reconciliation: Reconciliation::Rejected("user said no".into()),
+        };
+        let out = apply(&prog, &[plan]).unwrap();
+        assert_eq!(crate::parser::print_program(&out), crate::parser::print_program(&prog));
+    }
+
+    #[test]
+    fn signature_extraction() {
+        let prog = parse("double solve(double a[], int n, float tol) { return 0.0; }").unwrap();
+        let f = prog.find_function("solve").unwrap();
+        let s = signature_of(f);
+        assert_eq!(s.params[0].ty, "double[]");
+        assert_eq!(s.params[1].ty, "int");
+        assert_eq!(s.params[2].ty, "float");
+        assert_eq!(s.ret, "double");
+    }
+
+    #[test]
+    fn missing_call_site_errors() {
+        let prog = parse("int main() { return 0; }").unwrap();
+        let db = PatternDb::builtin();
+        let plan = PlannedReplacement {
+            site: Site::LibraryCall { callee: "fft2d".into() },
+            replacement: db.find_library("fft2d").unwrap().replacement.clone(),
+            reconciliation: Reconciliation::Exact,
+        };
+        assert!(apply(&prog, &[plan]).is_err());
+    }
+}

@@ -1,0 +1,243 @@
+//! Integration tests across the whole stack (runtime + coordinator +
+//! transform + interpreter), including failure injection.
+
+use std::path::PathBuf;
+
+use fbo::coordinator::{apps, flow, loop_offload, Coordinator, DiscoveryPath};
+use fbo::ga::GaConfig;
+use fbo::parser;
+use fbo::runtime::Engine;
+use fbo::transform::InterfacePolicy;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn coordinator() -> Coordinator {
+    let mut c = Coordinator::open(&artifacts_dir()).expect("run `make artifacts` first");
+    c.verify.reps = 1;
+    c
+}
+
+// ---------------------------------------------------------------- discovery
+
+#[test]
+fn both_discovery_paths_land_on_the_same_artifact() {
+    // Paper §5.1: the same app is prepared as library-call and copied-code
+    // variants; both must be discovered and replaced.
+    let c = coordinator();
+    let lib = c.offload(&apps::lu_app_lib(64), "main").unwrap();
+    let copy = c.offload(&apps::lu_app_copy(64), "main").unwrap();
+
+    assert!(lib
+        .blocks
+        .iter()
+        .any(|b| matches!(&b.via, DiscoveryPath::LibraryMatch { .. })));
+    assert!(copy
+        .blocks
+        .iter()
+        .any(|b| matches!(&b.via, DiscoveryPath::Similarity { .. })));
+    // Same artifact behind both.
+    assert!(lib.transformed_source.contains("__fb_lu_factor"));
+    assert!(copy.transformed_source.contains("__fb_lu_factor"));
+    // Both accelerate.
+    assert!(lib.best_speedup() > 5.0, "{}", lib.best_speedup());
+    assert!(copy.best_speedup() > 5.0, "{}", copy.best_speedup());
+}
+
+#[test]
+fn unknown_library_is_not_offloaded() {
+    let c = coordinator();
+    let src = "
+        void mystery_op(double a[], int n);
+        int main() {
+            double a[16];
+            for (int i = 0; i < 16; i++) a[i] = i;
+            mystery_op(a, 16);
+            return a[0];
+        }";
+    let prog = parser::parse(src).unwrap();
+    let (_, blocks) = c.discover(&prog).unwrap();
+    assert!(blocks.is_empty(), "{blocks:?}");
+}
+
+#[test]
+fn fb_beats_loop_offload_on_both_apps() {
+    // The paper's core claim, at test scale.
+    let c = coordinator();
+    for src in [apps::fft_app_lib(64), apps::lu_app_lib(64)] {
+        let fb = c.offload(&src, "main").unwrap();
+        let prog = parser::parse(&src).unwrap();
+        let linked = c.link_cpu_libraries(&prog).unwrap();
+        let cfg = GaConfig { population: 6, generations: 4, ..Default::default() };
+        let ga = loop_offload::ga_loop_search(&linked, "main", &cfg, 1, u64::MAX).unwrap();
+        assert!(
+            fb.best_speedup() > ga.ga.best_speedup(),
+            "function blocks ({:.1}x) must beat loop offload ({:.1}x)",
+            fb.best_speedup(),
+            ga.ga.best_speedup()
+        );
+    }
+}
+
+// ---------------------------------------------------------------- flow 1-7
+
+#[test]
+fn full_environment_adaptation_flow() {
+    let c = coordinator();
+    let report = c.offload(&apps::fft_app_lib(64), "main").unwrap();
+
+    let req = flow::Requirements {
+        target_rps: 30.0,
+        max_latency_ms: 20.0,
+        budget_per_month: 10_000.0,
+    };
+    let plan = flow::plan_resources(report.outcome.best_time.secs(), &req).unwrap();
+    assert!(plan.instances >= 1);
+
+    let locations = vec![
+        flow::Location { name: "dc".into(), gpus: 16, fpgas: 8, cost_per_hour: 0.5, latency_ms: 10.0 },
+    ];
+    let placement = flow::plan_placement(&plan, &req, &locations).unwrap();
+    assert_eq!(placement.location, "dc");
+}
+
+// ---------------------------------------------------------------- policies
+
+#[test]
+fn scripted_confirmations_control_c2() {
+    // An app whose copied LU has an extra debug parameter: C-2 must ask.
+    let src = format!(
+        "{}
+        int main() {{
+            double a[32 * 32];
+            int i;
+            for (i = 0; i < 32 * 32; i++) a[i] = 0.1;
+            for (i = 0; i < 32; i++) a[i * 32 + i] = 32.0;
+            factorize(a, 32, 1);
+            double s = 0.0;
+            for (i = 0; i < 32; i++) s += a[i * 32 + i];
+            return s;
+        }}",
+        fbo::patterndb::corpus::NR_LUDCMP
+            .replace("ludcmp_nopiv(double a[], int n)", "factorize(double a[], int n, int dbg)")
+            .replace("ludcmp_nopiv", "factorize")
+    );
+    let mut c = coordinator();
+    c.policy = InterfacePolicy::AutoReject;
+    let prog = parser::parse(&src).unwrap();
+    let (_, blocks) = c.discover(&prog).unwrap();
+    let sim_block = blocks
+        .iter()
+        .find(|b| matches!(&b.via, DiscoveryPath::Similarity { .. }));
+    if let Some(b) = sim_block {
+        assert!(
+            !b.accepted(),
+            "strict policy must reject the extra-arg interface change: {:?}",
+            b.plan.reconciliation
+        );
+    }
+    // Approving policy accepts (drops the extra arg).
+    c.policy = InterfacePolicy::AutoApprove;
+    let (_, blocks) = c.discover(&prog).unwrap();
+    let accepted_sim = blocks
+        .iter()
+        .any(|b| matches!(&b.via, DiscoveryPath::Similarity { .. }) && b.accepted());
+    assert!(accepted_sim, "approving policy must accept: {blocks:?}");
+}
+
+// ---------------------------------------------------------------- failures
+
+#[test]
+fn missing_artifacts_dir_is_a_clean_error() {
+    let err = match Engine::open(&PathBuf::from("/nonexistent/fbo-artifacts")) {
+        Err(e) => e,
+        Ok(_) => panic!("open of nonexistent dir must fail"),
+    };
+    assert!(format!("{err:#}").contains("make artifacts"), "{err:#}");
+}
+
+#[test]
+fn corrupt_manifest_is_a_clean_error() {
+    let dir = std::env::temp_dir().join(format!("fbo-corrupt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    assert!(Engine::open(&dir).is_err());
+    std::fs::write(dir.join("manifest.json"), r#"{"format":"other","artifacts":[]}"#).unwrap();
+    assert!(Engine::open(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn missing_artifact_file_fails_at_compile_not_open() {
+    let dir = std::env::temp_dir().join(format!("fbo-missing-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"format":"hlo-text","artifacts":[{"name":"ghost_n8","file":"ghost_n8.hlo.txt",
+            "inputs":[{"shape":[8,8],"dtype":"f32"}],"outputs":[{"shape":[8,8],"dtype":"f32"}]}]}"#,
+    )
+    .unwrap();
+    let engine = Engine::open(&dir).unwrap();
+    assert!(engine.has_artifact("ghost_n8"));
+    assert!(engine.execute("ghost_n8", &[vec![0f32; 64]]).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn diverging_candidate_is_contained_by_fuel() {
+    // A pathological app whose baseline would loop forever: the verify
+    // config's fuel turns it into a clean error instead of a hang.
+    let c = {
+        let mut c = coordinator();
+        c.verify.fuel = 100_000;
+        c
+    };
+    let src = "
+        void ludcmp(double a[], int n);
+        int main() {
+            double a[4];
+            while (1) { a[0] = a[0] + 1.0; }
+            ludcmp(a, 2);
+            return 0;
+        }";
+    assert!(c.offload(src, "main").is_err());
+}
+
+#[test]
+fn entry_function_must_exist() {
+    let c = coordinator();
+    assert!(c.offload("int main() { return 0; }", "nonexistent").is_err());
+}
+
+// ---------------------------------------------------------------- sizes
+
+#[test]
+fn size_variants_resolve_per_app_size() {
+    // n=64 apps use *_n64 artifacts; a size with no artifact fails the
+    // pattern (not the search).
+    let c = coordinator();
+    let report = c.offload(&apps::lu_app_lib(64), "main").unwrap();
+    assert!(report.best_speedup() > 1.0);
+
+    // n=48 has no artifact: the offload pattern fails its trial and the
+    // search falls back to all-CPU (best = no blocks enabled).
+    let report = c.offload(&apps::lu_app_lib(48), "main").unwrap();
+    assert!(report.outcome.best_enabled.iter().all(|&e| !e));
+    assert!(report
+        .outcome
+        .tried
+        .iter()
+        .all(|p| p.speedup <= 1.0 || !p.output_ok || p.label.contains("failed")));
+}
+
+// ---------------------------------------------------------------- stats
+
+#[test]
+fn engine_stats_reflect_verification_traffic() {
+    let c = coordinator();
+    let before = c.engine.stats.borrow().executions;
+    let _ = c.offload(&apps::fft_app_lib(64), "main").unwrap();
+    let after = c.engine.stats.borrow().executions;
+    assert!(after > before, "verification must have executed artifacts");
+}

@@ -1,0 +1,323 @@
+//! Property-based tests over the L3 substrates.
+//!
+//! No external property-testing crate is vendored, so these use the GA's
+//! deterministic PRNG to generate hundreds of random cases per property —
+//! same discipline (generate, check invariant, shrink-by-seed when it
+//! fails: the failing seed is printed).
+
+use fbo::ga::rng::Rng;
+use fbo::interp::{offload_exec, Interp, Value};
+use fbo::parser::{self, print_program};
+use fbo::similarity::{similarity, CharVector};
+
+// ------------------------------------------------------------------
+// Random program generation (a tiny grammar-directed generator).
+// ------------------------------------------------------------------
+
+struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed) }
+    }
+
+    fn expr(&mut self, vars: &[&str], depth: usize) -> String {
+        if depth == 0 || self.rng.bool_with(0.35) {
+            match self.rng.below(3) {
+                0 => format!("{}", self.rng.below(100)),
+                1 => format!("{}.5", self.rng.below(50)),
+                _ => vars[self.rng.below(vars.len())].to_string(),
+            }
+        } else {
+            let op = ["+", "-", "*"][self.rng.below(3)];
+            format!(
+                "({} {} {})",
+                self.expr(vars, depth - 1),
+                op,
+                self.expr(vars, depth - 1)
+            )
+        }
+    }
+
+    fn stmt(&mut self, vars: &[&str], depth: usize) -> String {
+        match self.rng.below(if depth == 0 { 2 } else { 4 }) {
+            0 => format!("{} = {};", vars[self.rng.below(vars.len())], self.expr(vars, 2)),
+            1 => format!("s += {};", self.expr(vars, 2)),
+            2 => format!(
+                "if ({} > {}) {{ {} }} else {{ {} }}",
+                self.expr(vars, 1),
+                self.expr(vars, 1),
+                self.stmt(vars, depth - 1),
+                self.stmt(vars, depth - 1)
+            ),
+            _ => format!(
+                "for (int q{d} = 0; q{d} < {}; q{d}++) {{ {} }}",
+                2 + self.rng.below(5),
+                self.stmt(vars, depth - 1),
+                d = depth
+            ),
+        }
+    }
+
+    fn program(&mut self) -> String {
+        let mut body = String::new();
+        for _ in 0..(1 + self.rng.below(6)) {
+            body.push_str(&self.stmt(&["x", "y", "z"], 2));
+            body.push('\n');
+        }
+        format!(
+            "double main() {{\n double x = 1.0; double y = 2.0; double z = 0.0; double s = 0.0;\n{body}\n return s + x + y + z;\n}}"
+        )
+    }
+}
+
+#[test]
+fn prop_parse_print_roundtrip() {
+    for seed in 0..300u64 {
+        let src = Gen::new(seed).program();
+        let prog = parser::parse(&src).unwrap_or_else(|e| panic!("seed {seed}: parse {e}\n{src}"));
+        let printed = print_program(&prog);
+        let reparsed = parser::parse(&printed)
+            .unwrap_or_else(|e| panic!("seed {seed}: reparse {e}\n{printed}"));
+        assert_eq!(
+            printed,
+            print_program(&reparsed),
+            "seed {seed}: print∘parse not idempotent"
+        );
+    }
+}
+
+#[test]
+fn prop_interpreter_deterministic() {
+    for seed in 0..100u64 {
+        let src = Gen::new(seed).program();
+        let prog = parser::parse(&src).unwrap();
+        let run = || -> f64 {
+            let mut m = Interp::new(&prog).unwrap();
+            m.fuel = 3_000_000;
+            match m.run("main", &[]) {
+                Ok(v) => v.as_num().unwrap_or(f64::NAN),
+                Err(_) => f64::NAN, // fuel exhaustion etc. must also be stable
+            }
+        };
+        let a = run();
+        let b = run();
+        assert!(
+            (a.is_nan() && b.is_nan()) || a == b,
+            "seed {seed}: non-deterministic ({a} vs {b})"
+        );
+    }
+}
+
+// ------------------------------------------------------------------
+// Bulk executor ≡ interpreter on generated offloadable loops.
+// ------------------------------------------------------------------
+
+fn elementwise_program(seed: u64) -> String {
+    let mut g = Gen::new(seed);
+    let n = 16 + g.rng.below(48);
+    let coef = 1 + g.rng.below(9);
+    let off = g.rng.below(7);
+    format!(
+        "double main() {{
+            double a[{n}]; double b[{n}];
+            for (int i = 0; i < {n}; i++) {{ a[i] = i * 0.5; b[i] = {off}.0; }}
+            for (int i = 0; i < {n}; i++) {{
+                b[i] = a[i] * {coef}.0 + sin(a[i]) - b[i];
+            }}
+            double s = 0.0;
+            for (int i = 0; i < {n}; i++) s += b[i];
+            return s;
+        }}"
+    )
+}
+
+#[test]
+fn prop_bulk_executor_matches_interpreter() {
+    for seed in 0..80u64 {
+        let src = elementwise_program(seed);
+        let prog = parser::parse(&src).unwrap();
+
+        let mut plain = Interp::new(&prog).unwrap();
+        let expected = plain.run("main", &[]).unwrap().as_num().unwrap();
+
+        // Offload every for-loop that compiles.
+        let mut ids = std::collections::HashSet::new();
+        for f in prog.functions() {
+            if let Some(b) = &f.body {
+                b.walk(&mut |s| {
+                    if matches!(s.kind, fbo::parser::StmtKind::For { .. })
+                        && offload_exec::compile_loop(s).is_some()
+                    {
+                        ids.insert(s.id);
+                    }
+                });
+            }
+        }
+        assert!(!ids.is_empty(), "seed {seed}: no offloadable loops generated");
+        let mut bulk = Interp::new(&prog).unwrap();
+        bulk.set_offloaded_loops(ids);
+        let got = bulk.run("main", &[]).unwrap().as_num().unwrap();
+        assert!(
+            (got - expected).abs() <= 1e-9 * expected.abs().max(1.0),
+            "seed {seed}: bulk {got} != interp {expected}"
+        );
+        assert!(bulk.stats.bulk_loops > 0, "seed {seed}: bulk path not taken");
+    }
+}
+
+// ------------------------------------------------------------------
+// Similarity metric properties.
+// ------------------------------------------------------------------
+
+fn random_vector(seed: u64) -> CharVector {
+    let mut rng = Rng::new(seed);
+    let mut v = CharVector::default();
+    for c in v.counts.iter_mut() {
+        *c = rng.below(20) as u32;
+    }
+    v
+}
+
+#[test]
+fn prop_similarity_identity_symmetry_bounds() {
+    for seed in 0..200u64 {
+        let a = random_vector(seed);
+        let b = random_vector(seed.wrapping_add(1_000_003));
+        let sab = similarity(&a, &b);
+        let sba = similarity(&b, &a);
+        assert!((sab - sba).abs() < 1e-12, "seed {seed}: asymmetric");
+        assert!((0.0..=1.0).contains(&sab), "seed {seed}: out of range {sab}");
+        assert!((similarity(&a, &a) - 1.0).abs() < 1e-12, "seed {seed}: self-sim != 1");
+    }
+}
+
+#[test]
+fn prop_similarity_monotone_under_growing_edits() {
+    // Adding progressively more junk statements to a function should not
+    // (weakly) increase its similarity to the original.
+    let base = "void f(double a[], int n) {
+        for (int i = 0; i < n; i++) a[i] = a[i] * 2.0;
+    }";
+    let v0 = CharVector::from_source_merged(base).unwrap();
+    let mut prev = 1.0f64;
+    for k in 1..=6 {
+        let mut edited = String::from(
+            "void f(double a[], int n) {\n  for (int i = 0; i < n; i++) a[i] = a[i] * 2.0;\n",
+        );
+        for j in 0..k * 3 {
+            edited.push_str(&format!("  double t{j} = {j}.0; t{j} = t{j} + 1.0; a[0] += t{j};\n"));
+        }
+        edited.push('}');
+        let v = CharVector::from_source_merged(&edited).unwrap();
+        let s = similarity(&v0, &v);
+        assert!(s <= prev + 1e-9, "edit size {k}: similarity rose ({s} > {prev})");
+        prev = s;
+    }
+    assert!(prev < 0.9, "large edits must reduce similarity below 0.9, got {prev}");
+}
+
+// ------------------------------------------------------------------
+// GA invariants on random fitness landscapes.
+// ------------------------------------------------------------------
+
+#[test]
+fn prop_ga_never_worse_than_baseline_and_monotone() {
+    use fbo::ga::{self, GaConfig};
+    use std::time::Duration;
+
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed);
+        let n = 3 + rng.below(5);
+        // Random per-gene contributions (some positive, some negative).
+        let contrib: Vec<f64> =
+            (0..n).map(|_| (rng.next_f64() - 0.45) * 400.0).collect();
+        let mut fitness = |gene: &[bool]| -> anyhow::Result<Duration> {
+            let mut t = 1000.0;
+            for (g, c) in gene.iter().zip(&contrib) {
+                if *g {
+                    t -= c;
+                }
+            }
+            Ok(Duration::from_secs_f64(t.max(1.0) / 1000.0))
+        };
+        let cfg = GaConfig { population: 8, generations: 6, seed, ..Default::default() };
+        let r = ga::run(n, &cfg, &mut fitness).unwrap();
+        assert!(r.best_speedup() >= 1.0 - 1e-9, "seed {seed}: worse than baseline");
+        for w in r.history.windows(2) {
+            assert!(
+                w[1].best_speedup >= w[0].best_speedup - 1e-9,
+                "seed {seed}: best not monotone"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// JSON round-trip on random documents.
+// ------------------------------------------------------------------
+
+#[test]
+fn prop_json_roundtrip() {
+    use fbo::patterndb::json::{self, Json};
+
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        if depth == 0 {
+            return match rng.below(4) {
+                0 => Json::Null,
+                1 => Json::Bool(rng.bool_with(0.5)),
+                2 => Json::Num((rng.below(10_000) as f64) - 5000.0),
+                _ => Json::Str(format!("s{}", rng.below(1000))),
+            };
+        }
+        match rng.below(6) {
+            0 => Json::Null,
+            1 => Json::Bool(true),
+            2 => Json::Num(rng.next_f64() * 100.0),
+            3 => Json::Str(format!("key \"quoted\" \n {}", rng.below(100))),
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed);
+        let doc = random_json(&mut rng, 3);
+        let text = json::to_string_pretty(&doc);
+        let back = json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        // Numbers survive via f64; compare re-serialized forms.
+        assert_eq!(
+            json::to_string_pretty(&back),
+            text,
+            "seed {seed}: round-trip mismatch"
+        );
+    }
+}
+
+// ------------------------------------------------------------------
+// Interpreter value coercion invariants.
+// ------------------------------------------------------------------
+
+#[test]
+fn prop_int_slot_truncates_float_slot_preserves() {
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(seed);
+        let x = (rng.next_f64() - 0.5) * 1000.0;
+        let int_slot = Value::Int(0);
+        let float_slot = Value::Float(0.0);
+        match int_slot.coerce_like(Value::Float(x)).unwrap() {
+            Value::Int(v) => assert_eq!(v, x as i64),
+            other => panic!("{other:?}"),
+        }
+        match float_slot.coerce_like(Value::Float(x)).unwrap() {
+            Value::Float(v) => assert_eq!(v, x),
+            other => panic!("{other:?}"),
+        }
+    }
+}
