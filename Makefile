@@ -1,0 +1,18 @@
+# Repo-level entry points.
+#
+#   make artifacts   lower the JAX/Pallas function blocks to HLO text
+#                    (writes rust/artifacts/*.hlo.txt + manifest.json)
+#   make test        tier-1 verification
+#   make bench       throughput + paper-figure benches
+
+.PHONY: artifacts test bench
+
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../rust/artifacts
+
+test:
+	cargo build --release && cargo test -q
+
+bench:
+	cargo bench --bench service_throughput
+	cargo bench --bench search_time

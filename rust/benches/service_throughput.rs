@@ -1,0 +1,122 @@
+//! Bench: offload-service throughput, cold decision cache vs warm.
+//!
+//! Cold = every job runs the paper's full pipeline (discovery + measured
+//! pattern search). Warm = every job replays a previously verified
+//! decision from the content-addressed cache. The gap is the whole point
+//! of the service tier: verification is a one-time cost, serving is not.
+//!
+//! Also checks the cache contract: a warm read must be **byte-identical**
+//! to the serialization produced when the decision was first computed.
+//!
+//! Run: `cargo bench --bench service_throughput`
+//! Records: `BENCH_service.json` at the repo root.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use fbo::coordinator::apps;
+use fbo::metrics::{fmt_duration, Table};
+use fbo::patterndb::json::{self, Json};
+use fbo::service::{OffloadService, ServiceConfig};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = env_usize("FBO_N", 64);
+    let repeat = env_usize("FBO_REPEAT", 2);
+    let workers = env_usize("FBO_JOBS", 2);
+
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let cache_dir =
+        std::env::temp_dir().join(format!("fbo-bench-cache-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cache_dir);
+
+    let mut cfg = ServiceConfig::new(artifacts);
+    cfg.cache_dir = Some(cache_dir.clone());
+    cfg.workers = workers;
+    cfg.verify.reps = 1;
+
+    // The five evaluation apps, `repeat`-fold (a batch with duplicates is
+    // the realistic shape: many users submit the same application).
+    let mut batch: Vec<(String, String)> = Vec::new();
+    for _ in 0..repeat {
+        batch.extend(apps::all(n).into_iter().map(|(_, src)| (src, "main".to_string())));
+    }
+
+    println!("== service throughput: {} jobs, {} workers, n={} ==", batch.len(), workers, n);
+    let service = OffloadService::start(cfg)?;
+    service.cache().clear()?; // guaranteed cold even across bench re-runs
+
+    let t0 = Instant::now();
+    let cold: Vec<_> = service
+        .run_batch(&batch)
+        .into_iter()
+        .collect::<Result<Vec<_>, _>>()?;
+    let cold_wall = t0.elapsed();
+    let cold_stats = service.stats();
+
+    let t0 = Instant::now();
+    let warm: Vec<_> = service
+        .run_batch(&batch)
+        .into_iter()
+        .collect::<Result<Vec<_>, _>>()?;
+    let warm_wall = t0.elapsed();
+
+    // Cache contract: every warm job is a hit, and its bytes equal the
+    // fresh serialization of the same (source, entry, DB) decision.
+    let mut byte_identical = true;
+    for (c, w) in cold.iter().zip(&warm) {
+        assert!(w.from_cache, "warm pass must be served entirely from the cache");
+        byte_identical &= c.report_json == w.report_json;
+    }
+    assert!(byte_identical, "cached decisions must be byte-identical to fresh ones");
+
+    let jobs = batch.len() as f64;
+    let cold_jps = jobs / cold_wall.as_secs_f64().max(1e-12);
+    let warm_jps = jobs / warm_wall.as_secs_f64().max(1e-12);
+    let gain = warm_jps / cold_jps.max(1e-12);
+
+    let mut t = Table::new(&["pass", "wall", "jobs/sec", "cache"]);
+    t.row(&[
+        "cold (verify all)".into(),
+        fmt_duration(cold_wall),
+        format!("{cold_jps:.2}"),
+        format!("{} misses", cold_stats.cache_misses),
+    ]);
+    t.row(&[
+        "warm (replay)".into(),
+        fmt_duration(warm_wall),
+        format!("{warm_jps:.2}"),
+        format!("{} entries", service.stats().cache_entries),
+    ]);
+    print!("{}", t.render());
+    println!("warm/cold throughput: {gain:.1}x");
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("service_throughput")),
+        ("n", Json::num(n as f64)),
+        ("jobs", Json::num(jobs)),
+        ("workers", Json::num(workers as f64)),
+        ("cold_secs", Json::num(cold_wall.as_secs_f64())),
+        ("cold_jobs_per_sec", Json::num(cold_jps)),
+        ("warm_secs", Json::num(warm_wall.as_secs_f64())),
+        ("warm_jobs_per_sec", Json::num(warm_jps)),
+        ("warm_over_cold", Json::num(gain)),
+        ("cache_entries", Json::num(service.stats().cache_entries as f64)),
+        ("byte_identical", Json::Bool(byte_identical)),
+    ]);
+    let bench_path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_service.json");
+    std::fs::write(&bench_path, json::to_string_pretty(&out))?;
+    println!("recorded {}", bench_path.display());
+
+    std::fs::remove_dir_all(&cache_dir).ok();
+    assert!(
+        gain >= 10.0,
+        "warm cache must be >= 10x cold throughput (measured {gain:.1}x)"
+    );
+    Ok(())
+}

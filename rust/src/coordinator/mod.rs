@@ -19,6 +19,7 @@
 pub mod apps;
 pub mod flow;
 pub mod loop_offload;
+pub mod report_json;
 pub mod verify;
 
 use std::path::Path;
@@ -61,7 +62,7 @@ impl DiscoveredBlock {
 }
 
 /// Full offload report for one application.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct OffloadReport {
     pub entry: String,
     pub external_callees: Vec<String>,

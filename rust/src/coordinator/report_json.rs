@@ -1,0 +1,385 @@
+//! JSON codec for [`OffloadReport`] — the substrate of the service layer's
+//! persistent decision cache.
+//!
+//! The paper's Step 3 (measured pattern search) is the expensive part of
+//! the pipeline by design; its output is a *verified decision* worth
+//! keeping. This codec round-trips the full report — discovery provenance,
+//! every measured pattern, the winning transformed source — through the
+//! in-tree [`crate::patterndb::json`] substrate so the service layer can
+//! persist decisions and replay them without re-running pattern search or
+//! measurement.
+//!
+//! The printed form is **canonical** (object keys are sorted by `BTreeMap`,
+//! numbers print in shortest-round-trip form), so
+//! `report_to_string ∘ report_from_str` is the identity on its own output.
+//! The decision cache relies on that for byte-identical warm reads.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::verify::{PatternResult, SearchOutcome};
+use crate::coordinator::{DiscoveredBlock, DiscoveryPath, OffloadReport};
+use crate::metrics::Measurement;
+use crate::patterndb::json::{self, Json};
+use crate::patterndb::{repl_from_json, repl_to_json};
+use crate::transform::{PlannedReplacement, Reconciliation, Site};
+
+/// Format tag written into every serialized report.
+pub const REPORT_FORMAT: &str = "fbo-offload-report-v1";
+
+/// Serialize a report to the canonical JSON value.
+pub fn report_to_json(r: &OffloadReport) -> Json {
+    Json::obj(vec![
+        ("format", Json::str(REPORT_FORMAT)),
+        ("entry", Json::str(&r.entry)),
+        (
+            "external_callees",
+            Json::Arr(r.external_callees.iter().map(Json::str).collect()),
+        ),
+        ("blocks", Json::Arr(r.blocks.iter().map(block_to_json).collect())),
+        ("outcome", outcome_to_json(&r.outcome)),
+        ("transformed_source", Json::str(&r.transformed_source)),
+        ("search_wall_ns", duration_to_json(r.search_wall)),
+    ])
+}
+
+/// Serialize a report to the canonical pretty-printed string.
+pub fn report_to_string(r: &OffloadReport) -> String {
+    json::to_string_pretty(&report_to_json(r))
+}
+
+/// Deserialize a report from a JSON value.
+pub fn report_from_json(v: &Json) -> Result<OffloadReport> {
+    let format = v.get("format")?.as_str()?;
+    if format != REPORT_FORMAT {
+        bail!("unsupported offload-report format {format:?} (want {REPORT_FORMAT:?})");
+    }
+    Ok(OffloadReport {
+        entry: v.get("entry")?.as_str()?.to_string(),
+        external_callees: v
+            .get("external_callees")?
+            .as_arr()?
+            .iter()
+            .map(|s| Ok(s.as_str()?.to_string()))
+            .collect::<Result<_>>()?,
+        blocks: v
+            .get("blocks")?
+            .as_arr()?
+            .iter()
+            .map(block_from_json)
+            .collect::<Result<_>>()?,
+        outcome: outcome_from_json(v.get("outcome")?)?,
+        transformed_source: v.get("transformed_source")?.as_str()?.to_string(),
+        search_wall: duration_from_json(v.get("search_wall_ns")?)?,
+    })
+}
+
+/// Deserialize a report from its string form.
+pub fn report_from_str(s: &str) -> Result<OffloadReport> {
+    report_from_json(&json::parse(s)?)
+}
+
+// ------------------------------------------------------------- components
+
+fn duration_to_json(d: Duration) -> Json {
+    // Nanoseconds fit f64 exactly up to 2^53 ns ≈ 104 days; searches are
+    // minutes at worst.
+    Json::num(d.as_nanos() as f64)
+}
+
+fn duration_from_json(v: &Json) -> Result<Duration> {
+    Ok(Duration::from_nanos(v.as_f64()? as u64))
+}
+
+fn measurement_to_json(m: &Measurement) -> Json {
+    Json::obj(vec![
+        ("label", Json::str(&m.label)),
+        ("median_ns", duration_to_json(m.median)),
+        ("min_ns", duration_to_json(m.min)),
+        ("max_ns", duration_to_json(m.max)),
+        ("reps", Json::num(m.reps as f64)),
+    ])
+}
+
+fn measurement_from_json(v: &Json) -> Result<Measurement> {
+    Ok(Measurement {
+        label: v.get("label")?.as_str()?.to_string(),
+        median: duration_from_json(v.get("median_ns")?)?,
+        min: duration_from_json(v.get("min_ns")?)?,
+        max: duration_from_json(v.get("max_ns")?)?,
+        reps: v.get("reps")?.as_usize()?,
+    })
+}
+
+fn via_to_json(via: &DiscoveryPath) -> Json {
+    match via {
+        DiscoveryPath::LibraryMatch { library } => Json::obj(vec![
+            ("path", Json::str("library_match")),
+            ("library", Json::str(library)),
+        ]),
+        DiscoveryPath::Similarity { block, score } => Json::obj(vec![
+            ("path", Json::str("similarity")),
+            ("block", Json::str(block)),
+            ("score", Json::num(*score)),
+        ]),
+    }
+}
+
+fn via_from_json(v: &Json) -> Result<DiscoveryPath> {
+    Ok(match v.get("path")?.as_str()? {
+        "library_match" => DiscoveryPath::LibraryMatch {
+            library: v.get("library")?.as_str()?.to_string(),
+        },
+        "similarity" => DiscoveryPath::Similarity {
+            block: v.get("block")?.as_str()?.to_string(),
+            score: v.get("score")?.as_f64()?,
+        },
+        other => bail!("unknown discovery path {other:?}"),
+    })
+}
+
+fn site_to_json(site: &Site) -> Json {
+    match site {
+        Site::LibraryCall { callee } => Json::obj(vec![
+            ("kind", Json::str("library_call")),
+            ("callee", Json::str(callee)),
+        ]),
+        Site::FunctionBody { function } => Json::obj(vec![
+            ("kind", Json::str("function_body")),
+            ("function", Json::str(function)),
+        ]),
+    }
+}
+
+fn site_from_json(v: &Json) -> Result<Site> {
+    Ok(match v.get("kind")?.as_str()? {
+        "library_call" => Site::LibraryCall { callee: v.get("callee")?.as_str()?.to_string() },
+        "function_body" => {
+            Site::FunctionBody { function: v.get("function")?.as_str()?.to_string() }
+        }
+        other => bail!("unknown site kind {other:?}"),
+    })
+}
+
+fn reconciliation_to_json(r: &Reconciliation) -> Json {
+    match r {
+        Reconciliation::Exact => Json::obj(vec![("kind", Json::str("exact"))]),
+        Reconciliation::AutoCast => Json::obj(vec![("kind", Json::str("auto_cast"))]),
+        Reconciliation::DropOptional(dropped) => Json::obj(vec![
+            ("kind", Json::str("drop_optional")),
+            ("dropped", Json::Arr(dropped.iter().map(|&i| Json::num(i as f64)).collect())),
+        ]),
+        Reconciliation::Confirmed(q) => {
+            Json::obj(vec![("kind", Json::str("confirmed")), ("question", Json::str(q))])
+        }
+        Reconciliation::Rejected(q) => {
+            Json::obj(vec![("kind", Json::str("rejected")), ("question", Json::str(q))])
+        }
+    }
+}
+
+fn reconciliation_from_json(v: &Json) -> Result<Reconciliation> {
+    Ok(match v.get("kind")?.as_str()? {
+        "exact" => Reconciliation::Exact,
+        "auto_cast" => Reconciliation::AutoCast,
+        "drop_optional" => Reconciliation::DropOptional(
+            v.get("dropped")?.as_arr()?.iter().map(|i| i.as_usize()).collect::<Result<_>>()?,
+        ),
+        "confirmed" => Reconciliation::Confirmed(v.get("question")?.as_str()?.to_string()),
+        "rejected" => Reconciliation::Rejected(v.get("question")?.as_str()?.to_string()),
+        other => bail!("unknown reconciliation kind {other:?}"),
+    })
+}
+
+fn block_to_json(b: &DiscoveredBlock) -> Json {
+    Json::obj(vec![
+        ("via", via_to_json(&b.via)),
+        ("site", site_to_json(&b.plan.site)),
+        ("replacement", repl_to_json(&b.plan.replacement)),
+        ("reconciliation", reconciliation_to_json(&b.plan.reconciliation)),
+    ])
+}
+
+fn block_from_json(v: &Json) -> Result<DiscoveredBlock> {
+    Ok(DiscoveredBlock {
+        via: via_from_json(v.get("via")?)?,
+        plan: PlannedReplacement {
+            site: site_from_json(v.get("site")?)?,
+            replacement: repl_from_json(v.get("replacement")?)?,
+            reconciliation: reconciliation_from_json(v.get("reconciliation")?)?,
+        },
+    })
+}
+
+fn pattern_to_json(p: &PatternResult) -> Json {
+    Json::obj(vec![
+        ("enabled", Json::Arr(p.enabled.iter().map(|&b| Json::Bool(b)).collect())),
+        ("label", Json::str(&p.label)),
+        ("time", measurement_to_json(&p.time)),
+        ("speedup", Json::num(p.speedup)),
+        ("output_ok", Json::Bool(p.output_ok)),
+    ])
+}
+
+fn pattern_from_json(v: &Json) -> Result<PatternResult> {
+    Ok(PatternResult {
+        enabled: bools_from_json(v.get("enabled")?)?,
+        label: v.get("label")?.as_str()?.to_string(),
+        time: measurement_from_json(v.get("time")?)?,
+        speedup: v.get("speedup")?.as_f64()?,
+        output_ok: match v.get("output_ok")? {
+            Json::Bool(b) => *b,
+            other => bail!("expected JSON bool for output_ok, got {other:?}"),
+        },
+    })
+}
+
+fn outcome_to_json(o: &SearchOutcome) -> Json {
+    Json::obj(vec![
+        ("baseline", measurement_to_json(&o.baseline)),
+        ("tried", Json::Arr(o.tried.iter().map(pattern_to_json).collect())),
+        ("best_enabled", Json::Arr(o.best_enabled.iter().map(|&b| Json::Bool(b)).collect())),
+        ("best_time", measurement_to_json(&o.best_time)),
+        ("best_speedup", Json::num(o.best_speedup)),
+    ])
+}
+
+fn outcome_from_json(v: &Json) -> Result<SearchOutcome> {
+    Ok(SearchOutcome {
+        baseline: measurement_from_json(v.get("baseline")?)?,
+        tried: v
+            .get("tried")?
+            .as_arr()?
+            .iter()
+            .map(pattern_from_json)
+            .collect::<Result<_>>()?,
+        best_enabled: bools_from_json(v.get("best_enabled")?)?,
+        best_time: measurement_from_json(v.get("best_time")?)?,
+        best_speedup: v.get("best_speedup")?.as_f64()?,
+    })
+}
+
+fn bools_from_json(v: &Json) -> Result<Vec<bool>> {
+    v.as_arr()?
+        .iter()
+        .map(|b| match b {
+            Json::Bool(x) => Ok(*x),
+            other => bail!("expected JSON bool, got {other:?}"),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::patterndb::PatternDb;
+
+    /// A synthetic report exercising every enum arm — no engine or
+    /// artifacts needed.
+    fn sample_report() -> OffloadReport {
+        let db = PatternDb::builtin();
+        let m = |label: &str, us: u64| Measurement {
+            label: label.to_string(),
+            median: Duration::from_micros(us),
+            min: Duration::from_micros(us / 2),
+            max: Duration::from_micros(us * 3),
+            reps: 3,
+        };
+        let blocks = vec![
+            DiscoveredBlock {
+                via: DiscoveryPath::LibraryMatch { library: "fft2d".into() },
+                plan: PlannedReplacement {
+                    site: Site::LibraryCall { callee: "fft2d".into() },
+                    replacement: db.libraries[0].replacement.clone(),
+                    reconciliation: Reconciliation::Exact,
+                },
+            },
+            DiscoveredBlock {
+                via: DiscoveryPath::Similarity { block: "nr-ludcmp".into(), score: 0.8725 },
+                plan: PlannedReplacement {
+                    site: Site::FunctionBody { function: "my_decomp".into() },
+                    replacement: db.libraries[1].replacement.clone(),
+                    reconciliation: Reconciliation::DropOptional(vec![2, 3]),
+                },
+            },
+            DiscoveredBlock {
+                via: DiscoveryPath::Similarity { block: "nr-matmul".into(), score: 0.51 },
+                plan: PlannedReplacement {
+                    site: Site::FunctionBody { function: "mm".into() },
+                    replacement: db.libraries[3].replacement.clone(),
+                    reconciliation: Reconciliation::Rejected("user said no".into()),
+                },
+            },
+        ];
+        OffloadReport {
+            entry: "main".into(),
+            external_callees: vec!["fft2d".into(), "qsort".into()],
+            blocks,
+            outcome: SearchOutcome {
+                baseline: m("all-CPU", 1000),
+                tried: vec![
+                    PatternResult {
+                        enabled: vec![true, false],
+                        label: "only:call:fft2d".into(),
+                        time: m("only:call:fft2d", 120),
+                        speedup: 8.333,
+                        output_ok: true,
+                    },
+                    PatternResult {
+                        enabled: vec![false, true],
+                        label: "only:func:my_decomp [failed: boom]".into(),
+                        time: m("all-CPU", 1000),
+                        speedup: 0.0,
+                        output_ok: false,
+                    },
+                ],
+                best_enabled: vec![true, false],
+                best_time: m("only:call:fft2d", 120),
+                best_speedup: 8.333,
+            },
+            transformed_source: "#include <math.h>\nint main() {\n    return 0;\n}\n".into(),
+            search_wall: Duration::from_millis(47),
+        }
+    }
+
+    #[test]
+    fn round_trip_preserves_everything() {
+        let r = sample_report();
+        let s = report_to_string(&r);
+        let back = report_from_str(&s).unwrap();
+        assert_eq!(back.entry, r.entry);
+        assert_eq!(back.external_callees, r.external_callees);
+        assert_eq!(back.transformed_source, r.transformed_source);
+        assert_eq!(back.search_wall, r.search_wall);
+        assert_eq!(back.blocks.len(), r.blocks.len());
+        for (a, b) in back.blocks.iter().zip(&r.blocks) {
+            assert_eq!(a.via, b.via);
+            assert_eq!(a.plan.site, b.plan.site);
+            assert_eq!(a.plan.replacement, b.plan.replacement);
+            assert_eq!(a.plan.reconciliation, b.plan.reconciliation);
+        }
+        assert_eq!(back.outcome.best_enabled, r.outcome.best_enabled);
+        assert_eq!(back.outcome.best_speedup, r.outcome.best_speedup);
+        assert_eq!(back.outcome.tried.len(), r.outcome.tried.len());
+        assert_eq!(back.outcome.tried[0].speedup, r.outcome.tried[0].speedup);
+        assert_eq!(back.outcome.tried[1].output_ok, false);
+        assert_eq!(back.outcome.baseline.median, r.outcome.baseline.median);
+        assert_eq!(back.outcome.baseline.reps, r.outcome.baseline.reps);
+    }
+
+    #[test]
+    fn serialization_is_byte_stable() {
+        // to_string ∘ from_str must be the identity on serialized output:
+        // the decision cache's byte-identical guarantee rests on this.
+        let once = report_to_string(&sample_report());
+        let twice = report_to_string(&report_from_str(&once).unwrap());
+        assert_eq!(once, twice);
+    }
+
+    #[test]
+    fn rejects_other_formats() {
+        assert!(report_from_str(r#"{"format": "something-else"}"#).is_err());
+        assert!(report_from_str("not json").is_err());
+    }
+}

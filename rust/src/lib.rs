@@ -13,8 +13,15 @@
 //! * **Runtime** — the [`runtime`] module loads `artifacts/*.hlo.txt` via the
 //!   PJRT CPU client and executes them from the rust hot path. Python never
 //!   runs at request time.
+//! * **Service tier** — the [`service`] module turns the one-shot pipeline
+//!   into a system: a worker pool of coordinators behind a job queue,
+//!   fronted by a persistent content-addressed cache of verified offload
+//!   decisions (the paper's expensive measured verification is a one-time
+//!   cost; the cache is what makes it one-time across requests and
+//!   restarts).
 //!
-//! Start at [`coordinator::Coordinator`] for the end-to-end flow, or the
+//! Start at [`coordinator::Coordinator`] for the end-to-end flow,
+//! [`service::OffloadService`] for the batch/serving tier, or the
 //! `examples/` directory for runnable scenarios.
 
 pub mod analysis;
@@ -26,6 +33,7 @@ pub mod metrics;
 pub mod parser;
 pub mod patterndb;
 pub mod runtime;
+pub mod service;
 pub mod similarity;
 pub mod transform;
 

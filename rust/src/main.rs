@@ -5,6 +5,8 @@
 //! fbo offload   <file.c> [--entry main] [...]    full pipeline (Steps 1-3)
 //! fbo ga        <file.c> [--pop 12 --gens 10]    GA loop-offload baseline
 //! fbo flow      <file.c>                         Steps 1-7 incl. sizing/placement
+//! fbo batch     <files...> [--jobs N]            service pool + decision cache
+//! fbo serve     [--jobs N]                       long-running service on stdin
 //! fbo gen-apps  [--n 256] [--dir apps]           materialize evaluation apps
 //! fbo gen-db    [--out patterndb.json]           dump the built-in pattern DB
 //! fbo artifacts [--dir artifacts]                list loaded PJRT artifacts
@@ -23,6 +25,7 @@ use fbo::coordinator::{apps, flow, loop_offload, Coordinator};
 use fbo::ga::GaConfig;
 use fbo::metrics;
 use fbo::patterndb::PatternDb;
+use fbo::service::{OffloadService, ServiceConfig};
 use fbo::transform::InterfacePolicy;
 use fbo::{analysis, parser, runtime};
 
@@ -30,6 +33,10 @@ struct Args {
     positional: Vec<String>,
     flags: HashMap<String, String>,
 }
+
+/// Flags that never take a value — without this list the generic rule
+/// below would swallow the following argument as the flag's "value".
+const BOOLEAN_FLAGS: &[&str] = &["no-cache-persist"];
 
 impl Args {
     fn parse(argv: &[String]) -> Result<Self> {
@@ -39,6 +46,11 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
+                if BOOLEAN_FLAGS.contains(&name) {
+                    flags.insert(name.to_string(), "true".to_string());
+                    i += 1;
+                    continue;
+                }
                 let value = argv.get(i + 1).cloned().unwrap_or_default();
                 if value.starts_with("--") || value.is_empty() {
                     flags.insert(name.to_string(), "true".to_string());
@@ -198,6 +210,122 @@ fn cmd_flow(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn service_from(args: &Args) -> Result<OffloadService> {
+    let mut cfg = ServiceConfig::new(PathBuf::from(args.flag("artifacts", "artifacts")));
+    cfg.workers = args.flag_usize("jobs", 2)?;
+    if let Some(dir) = args.flags.get("cache") {
+        cfg.cache_dir = Some(PathBuf::from(dir));
+    }
+    if args.flag("no-cache-persist", "false") == "true" {
+        cfg.persist = false;
+    }
+    cfg.policy = match args.flag("policy", "approve").as_str() {
+        "approve" => InterfacePolicy::AutoApprove,
+        "reject" => InterfacePolicy::AutoReject,
+        other => bail!("unknown --policy {other:?} (approve|reject)"),
+    };
+    cfg.verify.reps = args.flag_usize("reps", 3)?;
+    OffloadService::start(cfg)
+}
+
+fn print_completed(label: &str, done: &fbo::service::CompletedJob) {
+    println!(
+        "{label}: best speedup {} in {}{}",
+        metrics::fmt_speedup(done.report.best_speedup()),
+        metrics::fmt_duration(done.wall),
+        if done.from_cache { "  [cached decision]" } else { "" },
+    );
+}
+
+fn cmd_batch(args: &Args) -> Result<()> {
+    if args.positional.is_empty() {
+        bail!("usage: fbo batch <file.c...> [--entry main] [--jobs N] [--cache DIR]");
+    }
+    let entry = args.flag("entry", "main");
+    let service = service_from(args)?;
+    let jobs: Vec<(String, String)> = args
+        .positional
+        .iter()
+        .map(|p| Ok((read_source(p)?, entry.clone())))
+        .collect::<Result<_>>()?;
+    let handles = service.submit_batch(&jobs);
+    let mut failures = 0usize;
+    for (path, handle) in args.positional.iter().zip(handles) {
+        match handle.wait() {
+            Ok(done) => print_completed(path, &done),
+            Err(e) => {
+                failures += 1;
+                eprintln!("{path}: error: {e:#}");
+            }
+        }
+    }
+    println!("{}", service.stats().render());
+    if failures > 0 {
+        bail!("{failures} of {} jobs failed", args.positional.len());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::io::BufRead;
+    let service = service_from(args)?;
+    if let Some(dir) = service.cache().dir() {
+        eprintln!("decision cache: {} ({} entries)", dir.display(), service.cache().len());
+    }
+    eprintln!(
+        "serving offload requests from stdin, one per line: <file.c> [entry]  (Ctrl-D to stop)"
+    );
+    // The stdin loop only submits; a printer thread waits on each handle
+    // (in submission order) and prints the moment it completes, so a
+    // request/response client that blocks for output before sending its
+    // next line is never deadlocked, and work still overlaps across the
+    // --jobs workers for pipelined clients.
+    let (done_tx, done_rx) = std::sync::mpsc::channel::<(String, fbo::service::JobHandle)>();
+    let printer = std::thread::spawn(move || {
+        let mut failed = 0u64;
+        for (path, handle) in done_rx {
+            match handle.wait() {
+                Ok(done) => print_completed(&path, &done),
+                Err(e) => {
+                    failed += 1;
+                    eprintln!("{path}: error: {e:#}");
+                }
+            }
+        }
+        failed
+    });
+    let mut read_failures = 0u64;
+    for line in std::io::stdin().lock().lines() {
+        let line = line?;
+        let mut parts = line.split_whitespace();
+        let Some(path) = parts.next() else { continue };
+        let entry = parts.next().unwrap_or("main").to_string();
+        match read_source(path) {
+            Ok(src) => {
+                let handle = service.submit(&src, &entry);
+                if done_tx.send((path.to_string(), handle)).is_err() {
+                    bail!("serve printer thread died");
+                }
+            }
+            Err(e) => {
+                read_failures += 1;
+                eprintln!("{path}: error: {e:#}");
+            }
+        }
+    }
+    drop(done_tx); // EOF: let the printer drain and finish
+    let printed_failures = printer.join().unwrap_or_else(|_| {
+        eprintln!("fbo serve: printer thread panicked; some results were lost");
+        1
+    });
+    let failed = printed_failures + read_failures;
+    println!("{}", service.stats().render());
+    if failed > 0 {
+        bail!("{failed} request(s) failed");
+    }
+    Ok(())
+}
+
 fn cmd_gen_apps(args: &Args) -> Result<()> {
     let n = args.flag_usize("n", 256)?;
     let dir = PathBuf::from(args.flag("dir", "apps"));
@@ -242,6 +370,13 @@ fn usage() -> &'static str {
                  [--reps N] [--out transformed.c]\n\
        ga        <file.c> [--pop 12] [--gens 10] [--entry main]\n\
        flow      <file.c> [--rps 50]      full Steps 1-7\n\
+       batch     <file.c...> [--entry main] [--jobs N] [--artifacts DIR]\n\
+                 [--cache DIR] [--no-cache-persist] [--reps N]\n\
+                 offload many files through the service worker pool +\n\
+                 persistent decision cache\n\
+       serve     [--jobs N] [--artifacts DIR] [--cache DIR]\n\
+                 long-running service; reads \"<file.c> [entry]\" lines\n\
+                 from stdin, prints one decision per line + stats on EOF\n\
        gen-apps  [--n 256] [--dir apps]\n\
        gen-db    [--out patterndb.json]\n\
        artifacts [--dir artifacts]\n"
@@ -265,6 +400,8 @@ fn main() -> ExitCode {
         "offload" => cmd_offload(&args),
         "ga" => cmd_ga(&args),
         "flow" => cmd_flow(&args),
+        "batch" => cmd_batch(&args),
+        "serve" => cmd_serve(&args),
         "gen-apps" => cmd_gen_apps(&args),
         "gen-db" => cmd_gen_db(&args),
         "artifacts" => cmd_artifacts(&args),

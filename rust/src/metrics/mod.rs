@@ -55,6 +55,28 @@ pub fn speedup(baseline: &Measurement, candidate: &Measurement) -> f64 {
     baseline.secs() / candidate.secs().max(1e-12)
 }
 
+/// The p-th percentile (0..=100) of a sample set, by linear index
+/// interpolation on the sorted samples (p50 of an odd-length set is the
+/// median). Returns `None` for an empty set. Used by the service layer's
+/// per-service p50/p95 latency counters.
+pub fn percentile(samples: &[Duration], p: f64) -> Option<Duration> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut v: Vec<Duration> = samples.to_vec();
+    v.sort();
+    let pos = (p.clamp(0.0, 100.0) / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        return Some(v[lo]);
+    }
+    let frac = pos - lo as f64;
+    let a = v[lo].as_secs_f64();
+    let b = v[hi].as_secs_f64();
+    Some(Duration::from_secs_f64(a + (b - a) * frac))
+}
+
 /// Fixed-width text table (the benches print Fig. 4 / Fig. 5 analogs).
 #[derive(Debug, Default)]
 pub struct Table {
@@ -162,6 +184,22 @@ mod tests {
             reps: 1,
         };
         assert!((speedup(&a, &b) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles() {
+        let ms: Vec<Duration> = (1..=100).map(Duration::from_millis).collect();
+        assert_eq!(percentile(&ms, 0.0).unwrap(), Duration::from_millis(1));
+        assert_eq!(percentile(&ms, 100.0).unwrap(), Duration::from_millis(100));
+        // p50 of 1..=100 ms interpolates halfway between 50 and 51.
+        let p50 = percentile(&ms, 50.0).unwrap();
+        assert!(p50 >= Duration::from_millis(50) && p50 <= Duration::from_millis(51), "{p50:?}");
+        let p95 = percentile(&ms, 95.0).unwrap();
+        assert!(p95 >= Duration::from_millis(95) && p95 <= Duration::from_millis(96), "{p95:?}");
+        // Odd-length set: p50 is the exact median.
+        let odd: Vec<Duration> = [3u64, 1, 2].iter().map(|&m| Duration::from_millis(m)).collect();
+        assert_eq!(percentile(&odd, 50.0).unwrap(), Duration::from_millis(2));
+        assert_eq!(percentile(&[], 50.0), None);
     }
 
     #[test]

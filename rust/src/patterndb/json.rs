@@ -248,6 +248,21 @@ impl<'a> P<'a> {
     }
 }
 
+/// FNV-1a 64-bit hash. Used for content-addressed keys (decision cache,
+/// pattern-DB fingerprint): stable across runs, platforms, and rustc
+/// versions — unlike `std::hash::DefaultHasher`, whose output is
+/// unspecified and must never be persisted.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
 /// Parse a JSON document.
 pub fn parse(src: &str) -> Result<Json> {
     let mut p = P { b: src.as_bytes(), i: 0 };
@@ -389,5 +404,23 @@ mod tests {
     fn unicode_and_escapes() {
         let v = parse(r#""A\té 日本""#).unwrap();
         assert_eq!(v.as_str().unwrap(), "A\té 日本");
+    }
+
+    #[test]
+    fn fnv_is_stable_and_discriminating() {
+        // Known FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_ne!(fnv1a64(b"abc"), fnv1a64(b"abd"));
+    }
+
+    #[test]
+    fn canonical_form_is_reprint_stable() {
+        // parse ∘ print must be the identity on printed output — the
+        // decision cache relies on this for byte-identical warm reads.
+        let v = parse(r#"{"z": 1, "a": [1.5, -0.25, 9007199254740991], "s": "xy"}"#).unwrap();
+        let once = to_string_pretty(&v);
+        let twice = to_string_pretty(&parse(&once).unwrap());
+        assert_eq!(once, twice);
     }
 }

@@ -447,6 +447,16 @@ impl PatternDb {
             .with_context(|| format!("reading pattern DB from {}", path.display()))?;
         Self::from_json(&json::parse(&src)?)
     }
+
+    /// Cheap content fingerprint: FNV-1a 64 over the canonical JSON
+    /// serialization, as 16 hex digits. The decision cache embeds this in
+    /// every key, so *any* DB change (new record, edited recipe, changed
+    /// signature) invalidates previously verified offload decisions. The
+    /// whole DB serializes in well under a millisecond — cheap enough to
+    /// compute once per service start.
+    pub fn fingerprint(&self) -> String {
+        format!("{:016x}", json::fnv1a64(json::to_string_pretty(&self.to_json()).as_bytes()))
+    }
 }
 
 fn sig_to_json(s: &Signature) -> Json {
@@ -482,7 +492,8 @@ fn sig_from_json(v: &Json) -> Result<Signature> {
     Ok(Signature { params, ret: v.get("ret")?.as_str()?.to_string() })
 }
 
-fn repl_to_json(r: &Replacement) -> Json {
+/// Serialize a [`Replacement`] (shared with the coordinator's report codec).
+pub fn repl_to_json(r: &Replacement) -> Json {
     Json::obj(vec![
         ("name", Json::str(&r.name)),
         ("kind", Json::str(r.kind.as_str())),
@@ -497,7 +508,8 @@ fn repl_to_json(r: &Replacement) -> Json {
     ])
 }
 
-fn repl_from_json(v: &Json) -> Result<Replacement> {
+/// Inverse of [`repl_to_json`].
+pub fn repl_from_json(v: &Json) -> Result<Replacement> {
     Ok(Replacement {
         name: v.get("name")?.as_str()?.to_string(),
         kind: TargetKind::parse(v.get("kind")?.as_str()?)?,
@@ -592,6 +604,21 @@ mod tests {
         // Round-trips through JSON.
         let back = PatternDb::from_json(&db.to_json()).unwrap();
         assert_eq!(back.fpga_ip_cores.len(), 2);
+    }
+
+    #[test]
+    fn fingerprint_tracks_content() {
+        let db = PatternDb::builtin();
+        let fp = db.fingerprint();
+        assert_eq!(fp.len(), 16);
+        assert_eq!(fp, PatternDb::builtin().fingerprint(), "must be deterministic");
+        // Any content change flips the fingerprint.
+        let mut edited = db.clone();
+        edited.external_library_list.push("new_lib".into());
+        assert_ne!(edited.fingerprint(), fp);
+        let mut edited = db.clone();
+        edited.libraries[0].replacement.usage.push_str(";pad:1");
+        assert_ne!(edited.fingerprint(), fp);
     }
 
     #[test]

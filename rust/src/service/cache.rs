@@ -1,0 +1,269 @@
+//! Content-addressed decision cache.
+//!
+//! The pipeline's output for a given (source, entry, pattern DB) is a
+//! *verified decision*: which blocks to offload and the measured evidence.
+//! The companion proposal paper frames the verification cost as one-time,
+//! paid before commercial operation — this cache is the mechanism that
+//! makes it one-time. Keys are content-addressed:
+//!
+//! * **source hash** — FNV-1a 64 over the *parsed and re-printed* program,
+//!   so whitespace- and comment-only edits (and `//`-comment churn from
+//!   code generators) hit the same entry while any semantic change misses;
+//! * **entry point** — the same source offloaded from a different entry is
+//!   a different decision;
+//! * **decision fingerprint** — the service digests the pattern DB, the
+//!   AOT artifact contents, and its policy/verification settings into
+//!   this component (see `service::pool`), so any DB change (new
+//!   replacement, edited usage recipe), regenerated artifacts, or config
+//!   change (`--policy`, `--reps`) invalidates every previously verified
+//!   decision.
+//!
+//! Values are canonical [`crate::coordinator::report_json`] strings, held
+//! in memory and (optionally) persisted one JSON file per entry so
+//! decisions survive restarts. Because both the report codec and this
+//! module print through the canonical JSON writer, a warm read returns
+//! **byte-identical** output to the freshly computed serialization.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::parser;
+use crate::patterndb::json::{self, fnv1a64, Json};
+
+/// Format tag of a persisted cache entry.
+pub const DECISION_FORMAT: &str = "fbo-decision-v1";
+
+/// Content-addressed key of one offload decision.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// 16-hex FNV-1a 64 of the canonically printed AST.
+    pub source_hash: String,
+    /// Entry-point function name.
+    pub entry: String,
+    /// 16-hex digest of the decision environment. The service passes a
+    /// combined digest of [`crate::patterndb::PatternDb::fingerprint`]
+    /// and its policy/verification settings; a bare DB fingerprint works
+    /// too when policy/config invalidation is not needed.
+    pub db_fingerprint: String,
+}
+
+impl CacheKey {
+    /// Compute the key for an application source. Parses the source (the
+    /// only non-trivial cost, microseconds at app scale) and hashes the
+    /// canonical re-print, so formatting and comments never affect the key.
+    pub fn compute(src: &str, entry: &str, db_fingerprint: &str) -> Result<CacheKey> {
+        let prog = parser::parse(src).context("computing cache key: source must parse")?;
+        let printed = parser::print_program(&prog);
+        Ok(CacheKey {
+            source_hash: format!("{:016x}", fnv1a64(printed.as_bytes())),
+            entry: entry.to_string(),
+            db_fingerprint: db_fingerprint.to_string(),
+        })
+    }
+
+    /// Stable file stem for the persisted entry (digest of all three
+    /// components; the full key is also stored inside the file).
+    pub fn file_stem(&self) -> String {
+        let blob = format!("{}|{}|{}", self.source_hash, self.entry, self.db_fingerprint);
+        format!("{:016x}", fnv1a64(blob.as_bytes()))
+    }
+}
+
+/// Thread-safe decision store: in-memory map + optional JSON-per-entry
+/// persistence directory. Values are `Arc<str>` so a warm hit hands out
+/// the serialized report with an O(1) clone instead of copying multi-KB
+/// JSON under the map lock.
+pub struct DecisionCache {
+    dir: Option<PathBuf>,
+    entries: Mutex<HashMap<CacheKey, Arc<str>>>,
+    tmp_seq: AtomicU64,
+}
+
+impl DecisionCache {
+    /// A purely in-memory cache (tests, ephemeral runs).
+    pub fn in_memory() -> Self {
+        DecisionCache { dir: None, entries: Mutex::new(HashMap::new()), tmp_seq: AtomicU64::new(0) }
+    }
+
+    /// Open (creating if needed) a persistent cache directory and load
+    /// every existing entry. Corrupt or foreign files are skipped — a
+    /// damaged entry costs one re-verification, never a failed start.
+    pub fn open(dir: &Path) -> Result<Self> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating decision cache dir {}", dir.display()))?;
+        let mut entries = HashMap::new();
+        for e in std::fs::read_dir(dir)
+            .with_context(|| format!("reading decision cache dir {}", dir.display()))?
+        {
+            let path = e?.path();
+            if path.extension().and_then(|x| x.to_str()) != Some("json") {
+                continue;
+            }
+            if let Ok((key, report)) = load_entry(&path) {
+                entries.insert(key, report);
+            }
+        }
+        Ok(DecisionCache {
+            dir: Some(dir.to_path_buf()),
+            entries: Mutex::new(entries),
+            tmp_seq: AtomicU64::new(0),
+        })
+    }
+
+    /// The persistence directory, if any.
+    pub fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    /// Number of cached decisions.
+    pub fn len(&self) -> usize {
+        self.entries.lock().expect("decision cache lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fetch the serialized report for a key, if present (O(1) `Arc` clone).
+    pub fn lookup(&self, key: &CacheKey) -> Option<Arc<str>> {
+        self.entries.lock().expect("decision cache lock").get(key).cloned()
+    }
+
+    /// Store a serialized report under a key (persisting it if the cache
+    /// is disk-backed). `report_json` must be the canonical report
+    /// serialization; the write is tmp-file + rename so concurrent readers
+    /// of the directory never observe a torn entry. The in-memory map is
+    /// updated first — a failed disk write degrades persistence, never
+    /// in-process serving.
+    pub fn insert(&self, key: &CacheKey, report_json: &str) -> Result<()> {
+        self.entries
+            .lock()
+            .expect("decision cache lock")
+            .insert(key.clone(), Arc::from(report_json));
+        if let Some(dir) = &self.dir {
+            let report = json::parse(report_json)
+                .context("decision cache insert: report must be valid JSON")?;
+            let wrapper = Json::obj(vec![
+                ("format", Json::str(DECISION_FORMAT)),
+                ("source_hash", Json::str(&key.source_hash)),
+                ("entry", Json::str(&key.entry)),
+                ("db_fingerprint", Json::str(&key.db_fingerprint)),
+                ("report", report),
+            ]);
+            let stem = key.file_stem();
+            let seq = self.tmp_seq.fetch_add(1, Ordering::Relaxed);
+            let tmp = dir.join(format!(".{stem}.{}.{seq}.tmp", std::process::id()));
+            let path = dir.join(format!("{stem}.json"));
+            std::fs::write(&tmp, json::to_string_pretty(&wrapper))
+                .with_context(|| format!("writing decision entry {}", tmp.display()))?;
+            std::fs::rename(&tmp, &path)
+                .with_context(|| format!("publishing decision entry {}", path.display()))?;
+        }
+        Ok(())
+    }
+
+    /// Drop every cached decision (memory and disk). Used by benches to
+    /// build a guaranteed-cold cache.
+    pub fn clear(&self) -> Result<()> {
+        self.entries.lock().expect("decision cache lock").clear();
+        if let Some(dir) = &self.dir {
+            for e in std::fs::read_dir(dir)? {
+                let path = e?.path();
+                if path.extension().and_then(|x| x.to_str()) == Some("json") {
+                    std::fs::remove_file(&path)
+                        .with_context(|| format!("removing {}", path.display()))?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn load_entry(path: &Path) -> Result<(CacheKey, Arc<str>)> {
+    let src = std::fs::read_to_string(path)?;
+    let v = json::parse(&src)?;
+    if v.get("format")?.as_str()? != DECISION_FORMAT {
+        bail!("not a decision entry");
+    }
+    let key = CacheKey {
+        source_hash: v.get("source_hash")?.as_str()?.to_string(),
+        entry: v.get("entry")?.as_str()?.to_string(),
+        db_fingerprint: v.get("db_fingerprint")?.as_str()?.to_string(),
+    };
+    // Re-print the report subtree standalone: the canonical writer
+    // reproduces exactly the bytes `insert` was given.
+    let report = json::to_string_pretty(v.get("report")?);
+    Ok((key, Arc::from(report)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FP: &str = "00000000deadbeef";
+
+    #[test]
+    fn key_is_insensitive_to_whitespace_and_comments() {
+        let a = "int main() { return 40 + 2; }";
+        let b = "// a comment\nint   main(  )   {\n\n  /* block\n comment */ return 40 + 2;\n}\n";
+        let ka = CacheKey::compute(a, "main", FP).unwrap();
+        let kb = CacheKey::compute(b, "main", FP).unwrap();
+        assert_eq!(ka, kb);
+    }
+
+    #[test]
+    fn key_tracks_semantics_entry_and_db() {
+        let base = CacheKey::compute("int main() { return 1; }", "main", FP).unwrap();
+        let edited = CacheKey::compute("int main() { return 2; }", "main", FP).unwrap();
+        assert_ne!(base.source_hash, edited.source_hash);
+        let other_entry = CacheKey::compute("int main() { return 1; }", "other", FP).unwrap();
+        assert_ne!(base, other_entry);
+        assert_eq!(base.source_hash, other_entry.source_hash);
+        let other_db =
+            CacheKey::compute("int main() { return 1; }", "main", "ffffffff00000000").unwrap();
+        assert_ne!(base, other_db);
+        assert_ne!(base.file_stem(), other_db.file_stem());
+    }
+
+    #[test]
+    fn unparseable_source_has_no_key() {
+        assert!(CacheKey::compute("int f( {", "main", FP).is_err());
+    }
+
+    #[test]
+    fn in_memory_insert_lookup() {
+        let c = DecisionCache::in_memory();
+        let k = CacheKey::compute("int main() { return 0; }", "main", FP).unwrap();
+        assert!(c.lookup(&k).is_none());
+        c.insert(&k, r#"{"x": 1}"#).unwrap();
+        assert_eq!(&*c.lookup(&k).unwrap(), r#"{"x": 1}"#);
+        assert_eq!(c.len(), 1);
+        c.clear().unwrap();
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn persistent_entries_survive_reopen() {
+        let dir = std::env::temp_dir().join(format!("fbo-cache-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let k = CacheKey::compute("int main() { return 7; }", "main", FP).unwrap();
+        // Canonical bytes: what report_to_string would produce.
+        let body = json::to_string_pretty(&json::parse(r#"{"b": [1, 2], "a": "x"}"#).unwrap());
+        {
+            let c = DecisionCache::open(&dir).unwrap();
+            c.insert(&k, &body).unwrap();
+        }
+        let c = DecisionCache::open(&dir).unwrap();
+        assert_eq!(c.len(), 1);
+        assert_eq!(&*c.lookup(&k).unwrap(), body, "reloaded entry must be byte-identical");
+        // Corrupt files are skipped, not fatal.
+        std::fs::write(dir.join("junk.json"), "{ not json").unwrap();
+        let c = DecisionCache::open(&dir).unwrap();
+        assert_eq!(c.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

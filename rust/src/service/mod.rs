@@ -1,0 +1,46 @@
+//! Offload **service layer**: amortizing the paper's one-time verification
+//! cost across many requests.
+//!
+//! The pipeline behind [`crate::coordinator::Coordinator::offload`] is
+//! expensive *by design* — it times every candidate pattern on the
+//! verification machine before picking a winner. The companion proposal
+//! paper (arXiv:2004.09883) frames that as a one-time cost paid before
+//! commercial operation; this module is the tier that actually makes it
+//! one-time and serves the result at traffic scale:
+//!
+//! * [`cache`] — a content-addressed **decision cache** keyed by
+//!   (source AST hash, entry point, decision fingerprint), where the
+//!   fingerprint digests the pattern DB, the AOT artifact contents, and
+//!   the policy/verification settings the pipeline runs under. A hit
+//!   returns the previously
+//!   verified [`crate::coordinator::OffloadReport`] byte-identically,
+//!   with no pattern search and no measurement. Entries persist as JSON
+//!   next to the artifacts dir and survive restarts.
+//! * [`pool`] — a **worker pool** running one [`crate::coordinator::Coordinator`]
+//!   per thread (the PJRT runtime is deliberately single-threaded state:
+//!   `Rc`/`RefCell`), fed by per-worker queues sharded on the cache key
+//!   (identical in-flight jobs serialize; the pipeline never runs twice
+//!   for one key), with submit/await and batch APIs plus per-service
+//!   counters (jobs, cache hits/misses, p50/p95 latency).
+//!
+//! ```no_run
+//! use fbo::service::{OffloadService, ServiceConfig};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let service = OffloadService::start(ServiceConfig::new("artifacts"))?;
+//! let handle = service.submit("void ludcmp(double a[], int n);\
+//!                              int main() { double a[4]; ludcmp(a, 2); return 0; }", "main");
+//! let done = handle.wait()?;
+//! println!("speedup {} (cached: {})", done.report.best_speedup(), done.from_cache);
+//! println!("{}", service.stats().render());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! CLI: `fbo batch <files...>` and `fbo serve --jobs N`.
+
+pub mod cache;
+pub mod pool;
+
+pub use cache::{CacheKey, DecisionCache, DECISION_FORMAT};
+pub use pool::{CompletedJob, JobHandle, OffloadService, ServiceConfig, StatsSnapshot};

@@ -1,0 +1,591 @@
+//! Job queue + coordinator worker pool.
+//!
+//! One [`Coordinator`] per worker thread: the PJRT runtime behind it holds
+//! `Rc`/`RefCell` state and is not `Send`, so each coordinator is
+//! constructed on its own thread and never leaves it. Jobs (owned source +
+//! entry name) are `Send` and flow through one `mpsc` queue per worker;
+//! each worker compiles its own copy of the artifacts once and then
+//! serves pipeline runs for the life of the service.
+//!
+//! Every job is checked against the decision cache twice: at submit time
+//! (a hit completes without touching the queue) and again on the worker
+//! (an identical job may have been verified while this one was queued).
+//! Jobs are **sharded onto workers by cache key**, so identical jobs in
+//! flight land on the same worker and run in order: the first one
+//! verifies, the duplicates behind it hit the cache on their second check
+//! and replay the decision byte-identically — the pipeline never runs
+//! twice for one key.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::{report_json, Coordinator, OffloadReport, VerifyConfig};
+use crate::metrics;
+use crate::patterndb::json::fnv1a64;
+use crate::patterndb::PatternDb;
+use crate::transform::InterfacePolicy;
+
+use super::cache::{CacheKey, DecisionCache};
+
+/// Service construction parameters.
+#[derive(Clone)]
+pub struct ServiceConfig {
+    /// AOT artifact directory (each worker opens its own engine on it).
+    pub artifacts: PathBuf,
+    /// Decision cache directory. `None` defaults to `decision_cache/`
+    /// next to the artifacts dir (when `persist` is on).
+    pub cache_dir: Option<PathBuf>,
+    /// Persist decisions to disk so they survive restarts.
+    pub persist: bool,
+    /// Worker-thread count (one coordinator + PJRT engine each).
+    pub workers: usize,
+    /// Pattern DB shared by all workers; digested (together with `policy`,
+    /// `verify`, `similarity_threshold`, and the artifact contents) into
+    /// the cache key's decision fingerprint.
+    pub db: PatternDb,
+    pub policy: InterfacePolicy,
+    pub verify: VerifyConfig,
+    /// Deckard-style similarity threshold for copied-code discovery.
+    pub similarity_threshold: f64,
+}
+
+impl ServiceConfig {
+    pub fn new(artifacts: impl Into<PathBuf>) -> Self {
+        ServiceConfig {
+            artifacts: artifacts.into(),
+            cache_dir: None,
+            persist: true,
+            workers: 2,
+            db: PatternDb::builtin(),
+            policy: InterfacePolicy::AutoApprove,
+            verify: VerifyConfig::default(),
+            similarity_threshold: crate::similarity::DEFAULT_THRESHOLD,
+        }
+    }
+
+    fn effective_cache_dir(&self) -> Option<PathBuf> {
+        if !self.persist {
+            return None;
+        }
+        Some(self.cache_dir.clone().unwrap_or_else(|| {
+            self.artifacts.parent().unwrap_or_else(|| Path::new(".")).join("decision_cache")
+        }))
+    }
+}
+
+/// One finished offload job.
+pub struct CompletedJob {
+    pub id: u64,
+    pub key: CacheKey,
+    pub entry: String,
+    pub report: OffloadReport,
+    /// Canonical serialized report — byte-identical whether this job ran
+    /// the pipeline or replayed a cached decision (shared with the cache,
+    /// so replaying is an O(1) clone).
+    pub report_json: Arc<str>,
+    /// True when the decision came from the cache (no pattern search or
+    /// measurement ran for this job).
+    pub from_cache: bool,
+    /// Submit-to-completion wall clock.
+    pub wall: Duration,
+}
+
+enum HandleState {
+    Ready(Result<CompletedJob>),
+    Pending(mpsc::Receiver<Result<CompletedJob>>),
+}
+
+/// Await handle for a submitted job.
+pub struct JobHandle {
+    id: u64,
+    state: HandleState,
+}
+
+impl JobHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the job finishes.
+    pub fn wait(self) -> Result<CompletedJob> {
+        match self.state {
+            HandleState::Ready(r) => r,
+            HandleState::Pending(rx) => rx.recv().unwrap_or_else(|_| {
+                Err(anyhow!("offload service worker terminated before replying"))
+            }),
+        }
+    }
+
+    /// Non-blocking poll: the finished result, or the handle back if the
+    /// job is still running (lets callers stream results as they land).
+    pub fn try_wait(self) -> std::result::Result<Result<CompletedJob>, JobHandle> {
+        match self.state {
+            HandleState::Ready(r) => Ok(r),
+            HandleState::Pending(rx) => match rx.try_recv() {
+                Ok(r) => Ok(r),
+                Err(mpsc::TryRecvError::Empty) => {
+                    Err(JobHandle { id: self.id, state: HandleState::Pending(rx) })
+                }
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    Ok(Err(anyhow!("offload service worker terminated before replying")))
+                }
+            },
+        }
+    }
+}
+
+struct Job {
+    id: u64,
+    src: String,
+    entry: String,
+    key: CacheKey,
+    submitted_at: Instant,
+    reply: mpsc::Sender<Result<CompletedJob>>,
+}
+
+/// Latency samples kept for the percentile counters: a sliding window so a
+/// long-running `serve` process stays O(1) in memory no matter how many
+/// jobs it has answered.
+const LATENCY_WINDOW: usize = 4096;
+
+#[derive(Default)]
+struct LatencyRing {
+    buf: Vec<u64>,
+    next: usize,
+}
+
+impl LatencyRing {
+    fn record(&mut self, ns: u64) {
+        if self.buf.len() < LATENCY_WINDOW {
+            self.buf.push(ns);
+        } else {
+            self.buf[self.next] = ns; // overwrite the oldest sample
+            self.next = (self.next + 1) % LATENCY_WINDOW;
+        }
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    latencies_ns: Mutex<LatencyRing>,
+}
+
+struct Shared {
+    cache: DecisionCache,
+    /// Third cache-key component: everything besides the source and entry
+    /// that determines the decision — see [`decision_fingerprint`].
+    decision_fingerprint: String,
+    counters: Counters,
+}
+
+/// Digest of the decision *environment*: pattern-DB content, the AOT
+/// artifacts verification measures against, and the interface policy and
+/// verification settings the pipeline runs under. Any of these changes
+/// the decision a run would produce, so any of them changing must miss
+/// the cache — a report verified under `--policy reject` must never be
+/// replayed for a `--policy approve` request, and regenerated artifacts
+/// (`make artifacts` after a kernel edit) must re-verify rather than
+/// replay measurements taken against the old HLO.
+fn decision_fingerprint(cfg: &ServiceConfig) -> String {
+    let policy = match &cfg.policy {
+        InterfacePolicy::AutoApprove => "approve".to_string(),
+        InterfacePolicy::AutoReject => "reject".to_string(),
+        InterfacePolicy::Scripted(answers) => format!("scripted:{answers:?}"),
+    };
+    let blob = format!(
+        "{}|artifacts:{}|policy:{policy}|reps:{}|warmup:{}|fuel:{}|tol:{}|sim:{}",
+        cfg.db.fingerprint(),
+        artifacts_fingerprint(&cfg.artifacts),
+        cfg.verify.reps,
+        cfg.verify.warmup,
+        cfg.verify.fuel,
+        cfg.verify.tolerance,
+        cfg.similarity_threshold,
+    );
+    format!("{:016x}", fnv1a64(blob.as_bytes()))
+}
+
+/// Content hash of an artifact directory: manifest bytes plus every
+/// `*.hlo.txt`, by name order. Reading ~1 MB once per service start is
+/// noise next to compiling the artifacts. A missing/unreadable dir hashes
+/// to a distinct value and startup then fails in `Coordinator::open` with
+/// the proper error.
+fn artifacts_fingerprint(dir: &Path) -> String {
+    let manifest = std::fs::read(dir.join("manifest.json")).unwrap_or_default();
+    let mut blob = format!("manifest:{:016x}", fnv1a64(&manifest));
+    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+        .into_iter()
+        .flatten()
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().and_then(|x| x.to_str()) == Some("txt"))
+        .collect();
+    files.sort();
+    for path in files {
+        let content = std::fs::read(&path).unwrap_or_default();
+        blob.push_str(&format!(
+            "|{}:{:016x}",
+            path.file_name().and_then(|n| n.to_str()).unwrap_or(""),
+            fnv1a64(&content)
+        ));
+    }
+    format!("{:016x}", fnv1a64(blob.as_bytes()))
+}
+
+impl Shared {
+    fn record_outcome(&self, result: &Result<CompletedJob>) {
+        match result {
+            Ok(done) => {
+                self.counters.completed.fetch_add(1, Ordering::Relaxed);
+                self.counters
+                    .latencies_ns
+                    .lock()
+                    .expect("latency lock")
+                    .record(done.wall.as_nanos() as u64);
+            }
+            Err(_) => {
+                self.counters.failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Cache probe. `None` means "run the pipeline": either a genuine miss
+    /// or an undecodable entry — a damaged decision file must cost one
+    /// re-verification (which overwrites it), never fail the key forever.
+    /// Only a successfully decoded replay counts as a hit.
+    fn try_cached(
+        &self,
+        id: u64,
+        key: &CacheKey,
+        entry: &str,
+        started: Instant,
+    ) -> Option<CompletedJob> {
+        let bytes: Arc<str> = self.cache.lookup(key)?;
+        match report_json::report_from_str(&bytes) {
+            Ok(report) => {
+                self.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
+                Some(CompletedJob {
+                    id,
+                    key: key.clone(),
+                    entry: entry.to_string(),
+                    report,
+                    report_json: bytes,
+                    from_cache: true,
+                    wall: started.elapsed(),
+                })
+            }
+            Err(e) => {
+                eprintln!(
+                    "fbo service: ignoring undecodable cache entry {} ({e:#}); re-verifying",
+                    key.file_stem()
+                );
+                None
+            }
+        }
+    }
+}
+
+/// Point-in-time service counters. Latency percentiles are computed over
+/// a sliding window of the most recent 4096 completed jobs.
+#[derive(Debug, Clone)]
+pub struct StatsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_entries: u64,
+    pub latency_p50: Option<Duration>,
+    pub latency_p95: Option<Duration>,
+}
+
+impl StatsSnapshot {
+    /// One-line human rendering (CLI `batch`/`serve` output).
+    pub fn render(&self) -> String {
+        let fmt = |d: Option<Duration>| {
+            d.map(metrics::fmt_duration).unwrap_or_else(|| "-".to_string())
+        };
+        format!(
+            "jobs: {} submitted, {} completed, {} failed | cache: {} hits / {} misses ({} entries) | latency p50 {} p95 {}",
+            self.submitted,
+            self.completed,
+            self.failed,
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_entries,
+            fmt(self.latency_p50),
+            fmt(self.latency_p95),
+        )
+    }
+}
+
+/// The offload service: decision cache + worker pool over the paper's
+/// pipeline. See the [module docs](self) and [`crate::service`].
+pub struct OffloadService {
+    shared: Arc<Shared>,
+    /// One queue per worker; jobs are sharded onto them by cache key.
+    txs: Option<Vec<mpsc::Sender<Job>>>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl OffloadService {
+    /// Start the worker pool. Blocks until every worker has opened its
+    /// engine (so artifact problems surface here, not on first submit).
+    pub fn start(cfg: ServiceConfig) -> Result<OffloadService> {
+        if cfg.workers == 0 {
+            bail!("service needs at least one worker");
+        }
+        let cache = match cfg.effective_cache_dir() {
+            Some(dir) => DecisionCache::open(&dir)?,
+            None => DecisionCache::in_memory(),
+        };
+        let shared = Arc::new(Shared {
+            cache,
+            decision_fingerprint: decision_fingerprint(&cfg),
+            counters: Counters::default(),
+        });
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let nworkers = cfg.workers;
+        let mut txs = Vec::with_capacity(nworkers);
+        let mut workers = Vec::with_capacity(nworkers);
+        for i in 0..nworkers {
+            let (tx, rx) = mpsc::channel::<Job>();
+            txs.push(tx);
+            let shared = shared.clone();
+            let cfg = cfg.clone();
+            let ready = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("fbo-worker-{i}"))
+                .spawn(move || worker_main(cfg, shared, rx, ready))
+                .context("spawning service worker")?;
+            workers.push(handle);
+        }
+        drop(ready_tx);
+        for _ in 0..nworkers {
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("service worker died during startup"))?
+                .context("service worker startup")?;
+        }
+        Ok(OffloadService { shared, txs: Some(txs), workers, next_id: AtomicU64::new(1) })
+    }
+
+    /// Convenience: start with defaults over an artifact dir.
+    pub fn open(artifacts: impl Into<PathBuf>) -> Result<OffloadService> {
+        Self::start(ServiceConfig::new(artifacts))
+    }
+
+    /// Submit one job. Returns immediately; a cache hit (or an unparseable
+    /// source) resolves the handle without touching the queue.
+    pub fn submit(&self, src: &str, entry: &str) -> JobHandle {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.shared.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        let started = Instant::now();
+
+        let key = match CacheKey::compute(src, entry, &self.shared.decision_fingerprint) {
+            Ok(k) => k,
+            Err(e) => return self.ready_handle(id, Err(e)),
+        };
+        if let Some(done) = self.shared.try_cached(id, &key, entry, started) {
+            return self.ready_handle(id, Ok(done));
+        }
+
+        let (reply_tx, reply_rx) = mpsc::channel();
+        // Shard by key: identical jobs serialize through one worker, so a
+        // queued duplicate replays the first one's decision instead of
+        // re-running the pipeline.
+        let Some(txs) = &self.txs else {
+            return self.ready_handle(id, Err(anyhow!("offload service is shut down")));
+        };
+        let shard = (fnv1a64(key.file_stem().as_bytes()) % txs.len() as u64) as usize;
+        let job = Job {
+            id,
+            src: src.to_string(),
+            entry: entry.to_string(),
+            key,
+            submitted_at: started,
+            reply: reply_tx,
+        };
+        match txs[shard].send(job) {
+            Ok(()) => JobHandle { id, state: HandleState::Pending(reply_rx) },
+            Err(_) => self.ready_handle(id, Err(anyhow!("offload service is shut down"))),
+        }
+    }
+
+    /// Submit a batch of `(source, entry)` jobs; handles resolve
+    /// independently as workers finish.
+    pub fn submit_batch(&self, jobs: &[(String, String)]) -> Vec<JobHandle> {
+        jobs.iter().map(|(src, entry)| self.submit(src, entry)).collect()
+    }
+
+    /// Submit a batch and block for every result, in submission order.
+    pub fn run_batch(&self, jobs: &[(String, String)]) -> Vec<Result<CompletedJob>> {
+        self.submit_batch(jobs).into_iter().map(JobHandle::wait).collect()
+    }
+
+    /// Current counters (jobs, cache traffic, latency percentiles).
+    pub fn stats(&self) -> StatsSnapshot {
+        let c = &self.shared.counters;
+        let durations: Vec<Duration> = {
+            let ring = c.latencies_ns.lock().expect("latency lock");
+            ring.buf.iter().map(|&n| Duration::from_nanos(n)).collect()
+        };
+        StatsSnapshot {
+            submitted: c.submitted.load(Ordering::Relaxed),
+            completed: c.completed.load(Ordering::Relaxed),
+            failed: c.failed.load(Ordering::Relaxed),
+            cache_hits: c.cache_hits.load(Ordering::Relaxed),
+            cache_misses: c.cache_misses.load(Ordering::Relaxed),
+            cache_entries: self.shared.cache.len() as u64,
+            latency_p50: metrics::percentile(&durations, 50.0),
+            latency_p95: metrics::percentile(&durations, 95.0),
+        }
+    }
+
+    /// The decision cache (benches clear it to measure cold starts).
+    pub fn cache(&self) -> &DecisionCache {
+        &self.shared.cache
+    }
+
+    /// Fingerprint keying this service's decisions (pattern DB + policy +
+    /// verification settings).
+    pub fn decision_fingerprint(&self) -> &str {
+        &self.shared.decision_fingerprint
+    }
+
+    /// Drain the queue and join every worker.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn ready_handle(&self, id: u64, result: Result<CompletedJob>) -> JobHandle {
+        self.shared.record_outcome(&result);
+        JobHandle { id, state: HandleState::Ready(result) }
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.txs.take(); // closing the queues ends every worker loop
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for OffloadService {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn worker_main(
+    cfg: ServiceConfig,
+    shared: Arc<Shared>,
+    rx: mpsc::Receiver<Job>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    // Built on this thread, never crosses it (PJRT state is not Send).
+    let coordinator = match Coordinator::open(&cfg.artifacts) {
+        Ok(mut c) => {
+            c.db = cfg.db;
+            c.policy = cfg.policy;
+            c.verify = cfg.verify;
+            c.similarity_threshold = cfg.similarity_threshold;
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    // This worker owns its shard's queue outright; recv() erroring means
+    // the service dropped the sender — shutdown.
+    while let Ok(job) = rx.recv() {
+        let result = run_job(&coordinator, &shared, &job);
+        shared.record_outcome(&result);
+        let _ = job.reply.send(result);
+    }
+}
+
+fn run_job(c: &Coordinator, shared: &Shared, job: &Job) -> Result<CompletedJob> {
+    // Second cache check: an identical job may have been verified while
+    // this one sat in the queue.
+    if let Some(done) = shared.try_cached(job.id, &job.key, &job.entry, job.submitted_at) {
+        return Ok(done);
+    }
+    shared.counters.cache_misses.fetch_add(1, Ordering::Relaxed);
+    let report = c.offload(&job.src, &job.entry)?;
+    let report_json: Arc<str> = Arc::from(report_json::report_to_string(&report));
+    // The verified decision is the product; failing to persist it degrades
+    // the cache (and is reported), but must not fail the job.
+    if let Err(e) = shared.cache.insert(&job.key, &report_json) {
+        eprintln!("fbo service: failed to persist decision {}: {e:#}", job.key.file_stem());
+    }
+    Ok(CompletedJob {
+        id: job.id,
+        key: job.key.clone(),
+        entry: job.entry.clone(),
+        report,
+        report_json,
+        from_cache: false,
+        wall: job.submitted_at.elapsed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults() {
+        let cfg = ServiceConfig::new("some/artifacts");
+        assert_eq!(cfg.workers, 2);
+        assert!(cfg.persist);
+        assert_eq!(
+            cfg.effective_cache_dir().unwrap(),
+            PathBuf::from("some/decision_cache"),
+            "default cache dir sits next to the artifacts dir"
+        );
+        let mut ephemeral = cfg.clone();
+        ephemeral.persist = false;
+        assert!(ephemeral.effective_cache_dir().is_none());
+        let mut explicit = cfg;
+        explicit.cache_dir = Some(PathBuf::from("/tmp/x"));
+        assert_eq!(explicit.effective_cache_dir().unwrap(), PathBuf::from("/tmp/x"));
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        let mut cfg = ServiceConfig::new("artifacts");
+        cfg.workers = 0;
+        assert!(OffloadService::start(cfg).is_err());
+    }
+
+    #[test]
+    fn stats_render_handles_empty() {
+        let s = StatsSnapshot {
+            submitted: 0,
+            completed: 0,
+            failed: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            cache_entries: 0,
+            latency_p50: None,
+            latency_p95: None,
+        };
+        let line = s.render();
+        assert!(line.contains("0 submitted"));
+        assert!(line.contains("p50 -"));
+    }
+}

@@ -1,0 +1,200 @@
+//! Integration tests for the offload service layer: decision-cache
+//! content addressing, byte-identical replay, restart persistence, and
+//! concurrent submission through the worker pool.
+
+use std::path::PathBuf;
+
+use fbo::coordinator::{apps, report_json};
+use fbo::patterndb::PatternDb;
+use fbo::service::{CacheKey, OffloadService, ServiceConfig};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Per-test config with an isolated cache dir under the temp root.
+fn test_config(tag: &str) -> (ServiceConfig, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("fbo-servicetest-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = ServiceConfig::new(artifacts_dir());
+    cfg.cache_dir = Some(dir.clone());
+    cfg.workers = 2;
+    cfg.verify.reps = 1;
+    (cfg, dir)
+}
+
+// ------------------------------------------------------------ cache keys
+
+#[test]
+fn cache_key_survives_whitespace_and_comment_edits() {
+    let db = PatternDb::builtin().fingerprint();
+    let src = apps::lu_app_lib(64);
+    // Comment-only and whitespace-only edits: the key hashes the parsed
+    // and re-printed AST, not the raw bytes.
+    let cosmetic = format!(
+        "// regenerated 2026-07-31 by build bot\n{}\n\n/* trailing\n   notes */\n",
+        src.replace("    ", "\t")
+    );
+    let a = CacheKey::compute(&src, "main", &db).unwrap();
+    let b = CacheKey::compute(&cosmetic, "main", &db).unwrap();
+    assert_eq!(a, b);
+
+    // A semantic edit (different constant) must change the key.
+    let edited = src.replace("int N = 64;", "int N = 32;");
+    assert_ne!(a, CacheKey::compute(&edited, "main", &db).unwrap());
+}
+
+#[test]
+fn pattern_db_change_invalidates_keys() {
+    let base = PatternDb::builtin();
+    let mut grown = base.clone();
+    grown.external_library_list.push("tensor_contract".into());
+    assert_ne!(base.fingerprint(), grown.fingerprint());
+
+    let src = apps::lu_app_lib(64);
+    let k_old = CacheKey::compute(&src, "main", &base.fingerprint()).unwrap();
+    let k_new = CacheKey::compute(&src, "main", &grown.fingerprint()).unwrap();
+    assert_eq!(k_old.source_hash, k_new.source_hash);
+    assert_ne!(k_old, k_new, "DB growth must miss every old cache entry");
+}
+
+// ------------------------------------------------- byte-identical replay
+
+#[test]
+fn cached_decision_is_byte_identical_and_survives_restart() {
+    let (cfg, dir) = test_config("replay");
+    let src = apps::lu_app_lib(64);
+
+    let (fresh_json, cached_json) = {
+        let service = OffloadService::start(cfg.clone()).unwrap();
+        let fresh = service.submit(&src, "main").wait().unwrap();
+        assert!(!fresh.from_cache, "first submission must run the pipeline");
+        assert!(fresh.report.best_speedup() > 1.0);
+
+        // Same decision again — and through a cosmetic variant, which must
+        // hash to the same content address.
+        let cached = service.submit(&src, "main").wait().unwrap();
+        assert!(cached.from_cache);
+        let cosmetic = format!("{src}\n// deployed by ops\n");
+        let via_variant = service.submit(&cosmetic, "main").wait().unwrap();
+        assert!(via_variant.from_cache);
+        assert_eq!(via_variant.report_json, fresh.report_json);
+
+        let stats = service.stats();
+        assert_eq!(stats.cache_misses, 1);
+        assert_eq!(stats.cache_hits, 2);
+        (fresh.report_json, cached.report_json)
+    };
+    assert_eq!(
+        cached_json, fresh_json,
+        "cached report must be byte-identical to the freshly computed one"
+    );
+
+    // Restart: the decision was persisted next to the artifacts dir
+    // (redirected to a temp dir here) and must replay byte-identically.
+    let service = OffloadService::start(cfg).unwrap();
+    let replayed = service.submit(&src, "main").wait().unwrap();
+    assert!(replayed.from_cache, "persisted decision must survive restart");
+    assert_eq!(replayed.report_json, fresh_json);
+    // The replayed report deserializes into a usable decision.
+    assert_eq!(replayed.report.entry, "main");
+    assert!(replayed.report.transformed_source.contains("__fb_lu_factor"));
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn real_report_round_trips_through_codec() {
+    let (cfg, dir) = test_config("codec");
+    let service = OffloadService::start(cfg).unwrap();
+    let done = service.submit(&apps::matmul_app(64), "main").wait().unwrap();
+    let reparsed = report_json::report_from_str(&done.report_json).unwrap();
+    assert_eq!(report_json::report_to_string(&reparsed).as_str(), &*done.report_json);
+    assert_eq!(reparsed.outcome.best_speedup, done.report.outcome.best_speedup);
+    assert_eq!(reparsed.transformed_source, done.report.transformed_source);
+    drop(service);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ----------------------------------------------------------- concurrency
+
+#[test]
+fn concurrent_submissions_through_the_pool() {
+    let (mut cfg, dir) = test_config("concurrent");
+    cfg.workers = 3;
+    let service = OffloadService::start(cfg).unwrap();
+
+    // Three distinct applications, three copies each, all in flight at
+    // once across three workers.
+    let sources =
+        [apps::lu_app_lib(64), apps::matmul_app(64), apps::fft_app_lib(64)];
+    let jobs: Vec<(String, String)> = sources
+        .iter()
+        .cycle()
+        .take(9)
+        .map(|s| (s.clone(), "main".to_string()))
+        .collect();
+    let results = service.run_batch(&jobs);
+    assert_eq!(results.len(), 9);
+
+    let mut by_source: std::collections::HashMap<String, Vec<std::sync::Arc<str>>> =
+        std::collections::HashMap::new();
+    for (job, result) in jobs.iter().zip(results) {
+        let done = result.expect("every job must complete");
+        assert!(done.report.best_speedup() >= 1.0, "speedup {}", done.report.best_speedup());
+        by_source.entry(job.0.clone()).or_default().push(done.report_json);
+    }
+    // Duplicates of the same source must agree byte-for-byte, whether they
+    // were answered by the pipeline or the cache.
+    for (_, reports) in by_source {
+        assert_eq!(reports.len(), 3);
+        assert_eq!(reports[0], reports[1]);
+        assert_eq!(reports[0], reports[2]);
+    }
+
+    let stats = service.stats();
+    assert_eq!(stats.submitted, 9);
+    assert_eq!(stats.completed, 9);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.cache_hits + stats.cache_misses, 9);
+    assert!(stats.cache_misses >= 3, "each distinct source verifies at least once");
+    assert!(stats.latency_p50.is_some() && stats.latency_p95.is_some());
+
+    service.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// -------------------------------------------------------------- failures
+
+#[test]
+fn failures_are_contained() {
+    let (cfg, dir) = test_config("failures");
+    let service = OffloadService::start(cfg).unwrap();
+
+    // Unparseable source fails the job (no cache key exists for it).
+    assert!(service.submit("int f( {", "main").wait().is_err());
+    // Missing entry point fails the job but never poisons the pool.
+    assert!(service.submit("int main() { return 0; }", "nope").wait().is_err());
+    // The service keeps serving real work afterwards.
+    let done = service.submit(&apps::lu_app_lib(64), "main").wait().unwrap();
+    assert!(done.report.best_speedup() > 1.0);
+
+    let stats = service.stats();
+    assert_eq!(stats.failed, 2);
+    assert_eq!(stats.completed, 1);
+    // Failed decisions are never cached.
+    assert_eq!(stats.cache_entries, 1);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn missing_artifacts_fail_at_startup() {
+    let mut cfg = ServiceConfig::new("/nonexistent/fbo-artifacts");
+    cfg.persist = false;
+    let err = match OffloadService::start(cfg) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("startup must fail without artifacts"),
+    };
+    assert!(err.contains("make artifacts"), "{err}");
+}
