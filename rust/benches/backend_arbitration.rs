@@ -1,0 +1,109 @@
+//! Bench: GPU-vs-FPGA backend arbitration over the evaluation apps.
+//!
+//! For each app, runs the full Steps 1–3 pipeline under `--target auto`
+//! and records what Step 3b decided: the measured PJRT ("GPU") device
+//! seconds of the chosen pattern, the FPGA estimate from the device
+//! model, the chosen backend, and the simulated toolchain hours the
+//! decision charged. The paper's Table-2 shape: which blocks land on
+//! which accelerator, and what the narrowing + pre-check saved.
+//!
+//! Run: `cargo bench --bench backend_arbitration`
+//! Records: `BENCH_backend.json` at the repo root.
+
+use std::path::PathBuf;
+
+use fbo::coordinator::{apps, Backend, Coordinator};
+use fbo::metrics::{fmt_duration, fmt_hours, Table};
+use fbo::patterndb::json::{self, Json};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = env_usize("FBO_N", 64);
+    let reps = env_usize("FBO_REPS", 3);
+
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut c = Coordinator::open(&artifacts)?;
+    c.verify.reps = reps;
+
+    println!("== backend arbitration: eval apps at n={n}, --target auto ==");
+    let mut table = Table::new(&[
+        "app",
+        "backend",
+        "gpu device (measured)",
+        "fpga est (modeled)",
+        "toolchain",
+        "speedup",
+    ]);
+    let mut rows = Vec::new();
+    let mut chosen = Vec::new();
+
+    for (name, src) in apps::all(n) {
+        let report = c.offload(&src, "main")?;
+        let arb = &report.arbitration;
+        // The app's accelerated block (eval apps have exactly one winner).
+        let block = arb
+            .blocks
+            .iter()
+            .zip(&report.outcome.best_enabled)
+            .find(|(_, &on)| on)
+            .map(|(b, _)| b);
+        let (gpu_dev, fpga_est) = match block {
+            Some(b) => (
+                b.gpu_device_secs,
+                b.fpga.as_ref().filter(|f| f.precheck_ok).map(|f| f.est_secs),
+            ),
+            None => (0.0, None),
+        };
+        chosen.push(arb.backend);
+        table.row(&[
+            name.clone(),
+            arb.backend.as_str().to_string(),
+            fmt_duration(std::time::Duration::from_secs_f64(gpu_dev)),
+            fpga_est
+                .map(|s| fmt_duration(std::time::Duration::from_secs_f64(s)))
+                .unwrap_or_else(|| "-".to_string()),
+            fmt_hours(arb.simulated_hours),
+            format!("{:.1}", report.best_speedup()),
+        ]);
+        rows.push(Json::obj(vec![
+            ("app", Json::str(&name)),
+            ("backend", Json::str(arb.backend.as_str())),
+            ("gpu_device_secs", Json::num(gpu_dev)),
+            (
+                "fpga_est_secs",
+                fpga_est.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("simulated_hours", Json::num(arb.simulated_hours)),
+            ("best_speedup", Json::num(report.best_speedup())),
+        ]));
+    }
+    print!("{}", table.render());
+
+    let fpga_count = chosen.iter().filter(|&&b| b == Backend::Fpga).count();
+    let gpu_count = chosen.iter().filter(|&&b| b == Backend::Gpu).count();
+    println!("chosen: {fpga_count} fpga, {gpu_count} gpu, of {} apps", chosen.len());
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("backend_arbitration")),
+        ("n", Json::num(n as f64)),
+        ("reps", Json::num(reps as f64)),
+        ("apps", Json::Arr(rows)),
+        ("fpga_count", Json::num(fpga_count as f64)),
+        ("gpu_count", Json::num(gpu_count as f64)),
+    ]);
+    let bench_path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_backend.json");
+    std::fs::write(&bench_path, json::to_string_pretty(&out))?;
+    println!("recorded {}", bench_path.display());
+
+    // The arbitration thesis at eval scale: the DB-registered IP cores
+    // (FFT, LU) beat the measured PJRT path for at least one app, while
+    // apps without a registered core (matmul) stay on the GPU.
+    assert!(fpga_count >= 1, "expected at least one app to arbitrate to the FPGA");
+    assert!(gpu_count >= 1, "expected at least one app to stay on the GPU");
+    Ok(())
+}

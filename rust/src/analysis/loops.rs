@@ -24,11 +24,15 @@ pub enum LoopClass {
 /// One `for` loop in the program.
 #[derive(Debug, Clone)]
 pub struct LoopInfo {
+    /// AST node id of the `for` statement.
     pub id: NodeId,
+    /// Source location of the loop.
     pub span: Span,
+    /// Name of the function containing the loop.
     pub in_function: String,
     /// 0 = outermost loop of a nest.
     pub depth: usize,
+    /// Parallelizability class (gene eligibility).
     pub class: LoopClass,
     /// Static trip-count estimate of this loop alone (constant bounds), or
     /// None when bounds are symbolic.

@@ -27,31 +27,45 @@ pub use loops::{classify_loop, estimate_trip_count, LoopClass, LoopInfo};
 /// an external library call (paper processing A-1).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExternalCall {
+    /// Name of the called function.
     pub callee: String,
+    /// Source location of the call.
     pub span: Span,
+    /// AST node id of the call expression.
     pub expr_id: NodeId,
     /// Name of the function the call appears in.
     pub in_function: String,
+    /// Number of arguments at the call site.
     pub arg_count: usize,
 }
 
 /// A locally defined function block (paper processing A-2 candidate).
 #[derive(Debug, Clone)]
 pub struct DefinedBlock {
+    /// Function name.
     pub name: String,
+    /// Source location of the definition.
     pub span: Span,
+    /// AST node id of the function definition.
     pub node_id: NodeId,
+    /// Statements in the body (size proxy).
     pub stmt_count: usize,
+    /// `for`/`while` loops in the body.
     pub loop_count: usize,
 }
 
 /// Full analysis result for one translation unit.
 #[derive(Debug, Clone, Default)]
 pub struct Analysis {
+    /// A-1 candidates: calls to functions with no local body.
     pub external_calls: Vec<ExternalCall>,
+    /// A-2 candidates: locally defined function blocks.
     pub defined_functions: Vec<DefinedBlock>,
+    /// Struct names defined in the unit.
     pub struct_names: Vec<String>,
+    /// `#include` hints (library-name evidence for A-1).
     pub includes: Vec<String>,
+    /// Every `for` loop with depth, class, and trip estimate.
     pub loops: Vec<LoopInfo>,
 }
 

@@ -11,16 +11,46 @@
 
 use anyhow::{bail, Result};
 
+use super::backend::Backend;
+use super::OffloadReport;
+
 /// A candidate deployment location (commercial environment).
 #[derive(Debug, Clone)]
 pub struct Location {
+    /// Location name (e.g. "regional-dc").
     pub name: String,
+    /// GPU instances available here.
     pub gpus: usize,
+    /// FPGA instances available here.
     pub fpgas: usize,
-    /// $/hour for one accelerator instance here.
+    /// $/hour for one GPU instance here.
     pub cost_per_hour: f64,
+    /// $/hour for one FPGA instance here (the paper's motivation for FPGA
+    /// offload is exactly this asymmetry: FPGAs draw far less power, so
+    /// operators price them below GPUs).
+    pub fpga_cost_per_hour: f64,
     /// Network RTT from the clients (ms).
     pub latency_ms: f64,
+}
+
+impl Location {
+    /// Instance capacity for one backend.
+    fn capacity(&self, backend: Backend) -> usize {
+        match backend {
+            Backend::Gpu => self.gpus,
+            Backend::Fpga => self.fpgas,
+            Backend::Cpu => 0,
+        }
+    }
+
+    /// Hourly price of one instance of a backend.
+    fn hourly(&self, backend: Backend) -> f64 {
+        match backend {
+            Backend::Gpu => self.cost_per_hour,
+            Backend::Fpga => self.fpga_cost_per_hour,
+            Backend::Cpu => f64::INFINITY,
+        }
+    }
 }
 
 /// What the user needs from the deployment.
@@ -37,6 +67,7 @@ pub struct Requirements {
 /// Step-4 output: how many accelerator instances to provision.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ResourcePlan {
+    /// Accelerator instances to provision.
     pub instances: usize,
     /// Predicted per-instance throughput (requests/s).
     pub rps_per_instance: f64,
@@ -45,7 +76,45 @@ pub struct ResourcePlan {
 /// Step-5 output: where to run.
 #[derive(Debug, Clone)]
 pub struct PlacementPlan {
+    /// Chosen location name.
     pub location: String,
+    /// Projected monthly cost ($).
+    pub monthly_cost: f64,
+}
+
+/// Per-backend request times feeding Step-5 placement, produced by the
+/// Step-3b arbitration: `None` means that backend is not usable for this
+/// application (no winning offload pattern, or no pre-check-passing IP
+/// core).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BackendTimes {
+    /// Measured per-request seconds of the winning pattern on GPUs.
+    pub gpu_secs: Option<f64>,
+    /// Estimated per-request seconds with FPGA-capable blocks on FPGAs.
+    pub fpga_secs: Option<f64>,
+}
+
+impl BackendTimes {
+    /// Extract the per-backend times from an offload report.
+    pub fn from_report(r: &OffloadReport) -> Self {
+        BackendTimes {
+            gpu_secs: r.arbitration.gpu_request_secs,
+            fpga_secs: r.arbitration.fpga_request_secs,
+        }
+    }
+}
+
+/// Step-5 output when placement arbitrates backends: where to run *and on
+/// what*.
+#[derive(Debug, Clone)]
+pub struct BackendPlacement {
+    /// Chosen accelerator backend.
+    pub backend: Backend,
+    /// Resource plan sized from that backend's request time.
+    pub plan: ResourcePlan,
+    /// Chosen location name.
+    pub location: String,
+    /// Projected monthly cost ($).
     pub monthly_cost: f64,
 }
 
@@ -93,6 +162,57 @@ pub fn plan_placement(
     })
 }
 
+/// Step-5 with backend arbitration: size each usable backend from its own
+/// request time and pick the cheapest (backend, location) pair satisfying
+/// latency + per-backend capacity + budget. This is where the Step-3b
+/// times pay off commercially: a GPU-fastest block still deploys on
+/// FPGAs when every GPU option busts the budget.
+pub fn plan_backend_placement(
+    times: &BackendTimes,
+    req: &Requirements,
+    locations: &[Location],
+) -> Result<BackendPlacement> {
+    let candidates = [
+        (Backend::Gpu, times.gpu_secs),
+        (Backend::Fpga, times.fpga_secs),
+    ];
+    let mut best: Option<BackendPlacement> = None;
+    for (backend, secs) in candidates {
+        let Some(secs) = secs else { continue };
+        let plan = plan_resources(secs, req)?;
+        for loc in locations {
+            if loc.latency_ms > req.max_latency_ms {
+                continue;
+            }
+            if loc.capacity(backend) < plan.instances {
+                continue;
+            }
+            let monthly = loc.hourly(backend) * plan.instances as f64 * 24.0 * 30.0;
+            if monthly > req.budget_per_month {
+                continue;
+            }
+            if best.as_ref().map(|b| monthly < b.monthly_cost).unwrap_or(true) {
+                best = Some(BackendPlacement {
+                    backend,
+                    plan: plan.clone(),
+                    location: loc.name.clone(),
+                    monthly_cost: monthly,
+                });
+            }
+        }
+    }
+    best.ok_or_else(|| {
+        anyhow::anyhow!(
+            "no (backend, location) pair satisfies latency<={}ms and budget ${}/mo \
+             (gpu {:?}s, fpga {:?}s per request)",
+            req.max_latency_ms,
+            req.budget_per_month,
+            times.gpu_secs,
+            times.fpga_secs
+        )
+    })
+}
+
 /// Step-7 trigger: re-plan placement when the environment changes (a
 /// location is drained, prices move, latency degrades).
 pub fn replan_on_change(
@@ -122,6 +242,7 @@ mod tests {
                 gpus: 1,
                 fpgas: 1,
                 cost_per_hour: 0.9,
+                fpga_cost_per_hour: 0.35,
                 latency_ms: 3.0,
             },
             Location {
@@ -129,6 +250,7 @@ mod tests {
                 gpus: 8,
                 fpgas: 4,
                 cost_per_hour: 0.5,
+                fpga_cost_per_hour: 0.2,
                 latency_ms: 12.0,
             },
             Location {
@@ -136,6 +258,7 @@ mod tests {
                 gpus: 64,
                 fpgas: 32,
                 cost_per_hour: 0.3,
+                fpga_cost_per_hour: 0.12,
                 latency_ms: 45.0,
             },
         ]
@@ -173,6 +296,51 @@ mod tests {
         let tight = Requirements { budget_per_month: 100.0, ..req() };
         let plan = ResourcePlan { instances: 4, rps_per_instance: 10.0 };
         assert!(plan_placement(&plan, &tight, &locations()).is_err());
+    }
+
+    #[test]
+    fn backend_placement_prefers_cheapest_feasible_pair() {
+        // Both backends usable and equally fast: the FPGA's lower hourly
+        // price wins at the same (latency-feasible) location.
+        let times = BackendTimes { gpu_secs: Some(0.1), fpga_secs: Some(0.1) };
+        let p = plan_backend_placement(&times, &req(), &locations()).unwrap();
+        assert_eq!(p.backend, Backend::Fpga);
+        assert_eq!(p.location, "regional-dc");
+        assert_eq!(p.plan.instances, 4);
+    }
+
+    #[test]
+    fn fpga_location_chosen_when_gpu_locations_violate_budget() {
+        // The Step-5 scenario from the paper's cost motivation: GPU
+        // placement is feasible on capacity and latency but every GPU
+        // option busts the monthly budget; the FPGA estimate (slower per
+        // request, cheaper per hour) is what ships.
+        let times = BackendTimes { gpu_secs: Some(0.1), fpga_secs: Some(0.2) };
+        // 40 rps: GPU needs 4 instances, FPGA needs 8.
+        let tight = Requirements { budget_per_month: 1300.0, ..req() };
+        // GPU at regional-dc: 4 × $0.5 × 720 = $1440 > budget.
+        // FPGA at regional-dc lacks capacity (4 < 8); edge-gw too.
+        let mut locs = locations();
+        locs[1].fpgas = 16;
+        // FPGA at regional-dc: 8 × $0.2 × 720 = $1152 <= budget.
+        let p = plan_backend_placement(&times, &tight, &locs).unwrap();
+        assert_eq!(p.backend, Backend::Fpga);
+        assert_eq!(p.location, "regional-dc");
+        assert_eq!(p.plan.instances, 8);
+        assert!((p.monthly_cost - 1152.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn backend_placement_fails_when_no_backend_available() {
+        let times = BackendTimes::default();
+        assert!(plan_backend_placement(&times, &req(), &locations()).is_err());
+        // FPGA-only times with no FPGA capacity anywhere is infeasible too.
+        let times = BackendTimes { gpu_secs: None, fpga_secs: Some(0.1) };
+        let mut locs = locations();
+        for l in &mut locs {
+            l.fpgas = 0;
+        }
+        assert!(plan_backend_placement(&times, &req(), &locs).is_err());
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::parser::{NodeId, Program};
 /// Outcome of the GA search, with gene→loop mapping for reporting.
 #[derive(Debug, Clone)]
 pub struct LoopSearchResult {
+    /// The GA search result (best gene, history).
     pub ga: GaResult,
     /// NodeIds of the loops, index-aligned with genes.
     pub loop_ids: Vec<NodeId>,

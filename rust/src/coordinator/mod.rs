@@ -17,6 +17,7 @@
 //! [`loop_offload`]; the evaluation applications in [`apps`].
 
 pub mod apps;
+pub mod backend;
 pub mod flow;
 pub mod loop_offload;
 pub mod report_json;
@@ -37,6 +38,7 @@ use crate::transform::{
     self, reconcile, signature_of, InterfacePolicy, PlannedReplacement, Reconciliation, Site,
 };
 
+pub use backend::{ArbitrationOutcome, Backend, BackendPolicy};
 pub use verify::{SearchOutcome, VerifyConfig};
 
 /// How a block was discovered.
@@ -51,11 +53,14 @@ pub enum DiscoveryPath {
 /// One discovered (and reconciled) offload candidate.
 #[derive(Debug, Clone)]
 pub struct DiscoveredBlock {
+    /// Discovery provenance (A-1/B-1 name match or A-2/B-2 similarity).
     pub via: DiscoveryPath,
+    /// The planned replacement, including the reconciled interface.
     pub plan: PlannedReplacement,
 }
 
 impl DiscoveredBlock {
+    /// True when the interface reconciliation did not reject the block.
     pub fn accepted(&self) -> bool {
         self.plan.reconciliation.accepted()
     }
@@ -64,10 +69,17 @@ impl DiscoveredBlock {
 /// Full offload report for one application.
 #[derive(Debug, Clone)]
 pub struct OffloadReport {
+    /// Entry-point function the pipeline ran from.
     pub entry: String,
+    /// Distinct external callee names found by Step-1 analysis.
     pub external_callees: Vec<String>,
+    /// Every discovered block with its discovery provenance.
     pub blocks: Vec<DiscoveredBlock>,
+    /// Step-3 measured pattern-search outcome.
     pub outcome: SearchOutcome,
+    /// Step-3b backend arbitration: CPU/GPU/FPGA per block, and the
+    /// overall backend of the winning pattern.
+    pub arbitration: ArbitrationOutcome,
     /// The winning transformed source (paper Step 3 output).
     pub transformed_source: String,
     /// Wall-clock of the whole discovery + search.
@@ -75,18 +87,33 @@ pub struct OffloadReport {
 }
 
 impl OffloadReport {
+    /// Speedup of the winning pattern over the all-CPU baseline.
     pub fn best_speedup(&self) -> f64 {
         self.outcome.best_speedup
+    }
+
+    /// Overall backend of the winning pattern (Step-3b decision).
+    pub fn backend(&self) -> Backend {
+        self.arbitration.backend
     }
 }
 
 /// The coordinator configuration + handles.
 pub struct Coordinator {
+    /// Code-pattern DB (libraries, comparison code, FPGA IP cores).
     pub db: PatternDb,
+    /// PJRT engine executing the AOT artifacts.
     pub engine: Rc<Engine>,
+    /// Interface-reconciliation policy (C-1/C-2 confirmations).
     pub policy: InterfacePolicy,
+    /// Deckard-style similarity threshold for copied-code discovery.
     pub similarity_threshold: f64,
+    /// Verification-measurement settings (Step 3).
     pub verify: VerifyConfig,
+    /// Which backends Step-3b arbitration may choose (CLI `--target`).
+    pub backend_policy: BackendPolicy,
+    /// FPGA device model the arbitration evaluates IP cores against.
+    pub device: crate::fpga::Device,
 }
 
 impl Coordinator {
@@ -98,6 +125,8 @@ impl Coordinator {
             policy: InterfacePolicy::AutoApprove,
             similarity_threshold: similarity::DEFAULT_THRESHOLD,
             verify: VerifyConfig::default(),
+            backend_policy: BackendPolicy::Auto,
+            device: crate::fpga::ARRIA10_GX,
         })
     }
 
@@ -202,6 +231,18 @@ impl Coordinator {
         let outcome =
             verify::search_patterns(&linked, entry, &accepted, &self.engine, &self.verify)?;
 
+        // Step 3b: arbitrate CPU/GPU/FPGA per block against the measured
+        // search results (fails fast under `--target fpga` when an IP core
+        // flunks the resource pre-check).
+        let arbitration = backend::arbitrate(
+            &self.db,
+            self.backend_policy,
+            self.device,
+            backend::NARROW_MIN_SCORE,
+            &accepted,
+            &outcome,
+        )?;
+
         // Emit the winning transformed source (on the *user's* program, not
         // the linked one — what the paper hands back for deployment).
         let winning: Vec<PlannedReplacement> = accepted
@@ -216,6 +257,7 @@ impl Coordinator {
             external_callees: a.external_callees(),
             blocks,
             outcome,
+            arbitration,
             transformed_source: parser::print_program(&transformed),
             search_wall: t0.elapsed(),
         })
@@ -254,6 +296,46 @@ impl Coordinator {
             "best: speedup {} in {}",
             crate::metrics::fmt_speedup(r.outcome.best_speedup),
             crate::metrics::fmt_duration(r.search_wall),
+        );
+        let arb = &r.arbitration;
+        let _ = writeln!(
+            out,
+            "backend arbitration (--target {}, device {}):",
+            arb.policy.as_str(),
+            arb.device.name
+        );
+        for b in &arb.blocks {
+            let fpga = match &b.fpga {
+                None => "no IP core".to_string(),
+                Some(f) if f.narrowed_out => {
+                    format!("narrowed out (intensity {:.0})", f.intensity_score)
+                }
+                Some(f) if !f.precheck_ok => format!(
+                    "pre-check rejected ({:.0}% of scarcest resource)",
+                    f.utilization * 100.0
+                ),
+                Some(f) => format!(
+                    "est {} ({:.0}% util, {} toolchain)",
+                    crate::metrics::fmt_duration(std::time::Duration::from_secs_f64(f.est_secs)),
+                    f.utilization * 100.0,
+                    crate::metrics::fmt_hours(f.compile_hours),
+                ),
+            };
+            let _ = writeln!(
+                out,
+                "  block {:<24} -> {:<4}  gpu(measured) {}  fpga: {fpga}",
+                b.label,
+                b.backend.as_str(),
+                crate::metrics::fmt_duration(std::time::Duration::from_secs_f64(
+                    b.gpu_device_secs
+                )),
+            );
+        }
+        let _ = writeln!(
+            out,
+            "chosen backend: {} ({} simulated toolchain time)",
+            arb.backend.as_str(),
+            crate::metrics::fmt_hours(arb.simulated_hours),
         );
         out
     }
@@ -367,6 +449,10 @@ mod tests {
         let text = c.render_report(&r);
         assert!(text.contains("function-block offload report"));
         assert!(text.contains("speedup"));
+        assert!(text.contains("backend arbitration"), "{text}");
+        assert!(text.contains("chosen backend:"), "{text}");
+        // matmul has no registered IP core: never FPGA.
+        assert_ne!(r.backend(), Backend::Fpga);
     }
 
     #[test]

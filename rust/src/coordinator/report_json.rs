@@ -18,15 +18,23 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::verify::{PatternResult, SearchOutcome};
+use crate::coordinator::backend::{
+    ArbitrationOutcome, Backend, BackendPolicy, BlockArbitration, DeviceModel, FpgaEstimate,
+};
+use crate::coordinator::verify::{DeviceTraffic, PatternResult, SearchOutcome};
 use crate::coordinator::{DiscoveredBlock, DiscoveryPath, OffloadReport};
+use crate::fpga::ResourceEstimate;
 use crate::metrics::Measurement;
 use crate::patterndb::json::{self, Json};
 use crate::patterndb::{repl_from_json, repl_to_json};
 use crate::transform::{PlannedReplacement, Reconciliation, Site};
 
-/// Format tag written into every serialized report.
-pub const REPORT_FORMAT: &str = "fbo-offload-report-v1";
+/// Format tag written into every serialized report. v2 added the backend
+/// arbitration section (`backend`, `arbitration`) and per-pattern device
+/// traffic; v1 reports are rejected, which the decision cache treats as a
+/// miss and re-verifies (by design — a v1 decision predates backend
+/// choice, so replaying it would silently drop the arbitration).
+pub const REPORT_FORMAT: &str = "fbo-offload-report-v2";
 
 /// Serialize a report to the canonical JSON value.
 pub fn report_to_json(r: &OffloadReport) -> Json {
@@ -39,6 +47,10 @@ pub fn report_to_json(r: &OffloadReport) -> Json {
         ),
         ("blocks", Json::Arr(r.blocks.iter().map(block_to_json).collect())),
         ("outcome", outcome_to_json(&r.outcome)),
+        // The overall backend is lifted to the top level so consumers can
+        // route on it without walking the arbitration detail.
+        ("backend", Json::str(r.arbitration.backend.as_str())),
+        ("arbitration", arbitration_to_json(&r.arbitration)),
         ("transformed_source", Json::str(&r.transformed_source)),
         ("search_wall_ns", duration_to_json(r.search_wall)),
     ])
@@ -55,7 +67,7 @@ pub fn report_from_json(v: &Json) -> Result<OffloadReport> {
     if format != REPORT_FORMAT {
         bail!("unsupported offload-report format {format:?} (want {REPORT_FORMAT:?})");
     }
-    Ok(OffloadReport {
+    let report = OffloadReport {
         entry: v.get("entry")?.as_str()?.to_string(),
         external_callees: v
             .get("external_callees")?
@@ -70,9 +82,20 @@ pub fn report_from_json(v: &Json) -> Result<OffloadReport> {
             .map(block_from_json)
             .collect::<Result<_>>()?,
         outcome: outcome_from_json(v.get("outcome")?)?,
+        arbitration: arbitration_from_json(v.get("arbitration")?)?,
         transformed_source: v.get("transformed_source")?.as_str()?.to_string(),
         search_wall: duration_from_json(v.get("search_wall_ns")?)?,
-    })
+    };
+    // The lifted top-level backend must agree with the arbitration detail.
+    let top = Backend::parse(v.get("backend")?.as_str()?)?;
+    if top != report.arbitration.backend {
+        bail!(
+            "corrupt report: top-level backend {:?} disagrees with arbitration {:?}",
+            top.as_str(),
+            report.arbitration.backend.as_str()
+        );
+    }
+    Ok(report)
 }
 
 /// Deserialize a report from its string form.
@@ -212,6 +235,24 @@ fn block_from_json(v: &Json) -> Result<DiscoveredBlock> {
     })
 }
 
+fn traffic_to_json(t: &DeviceTraffic) -> Json {
+    Json::obj(vec![
+        ("bytes_in", Json::num(t.bytes_in as f64)),
+        ("bytes_out", Json::num(t.bytes_out as f64)),
+        ("dispatches", Json::num(t.dispatches as f64)),
+        ("device_secs", Json::num(t.device_secs)),
+    ])
+}
+
+fn traffic_from_json(v: &Json) -> Result<DeviceTraffic> {
+    Ok(DeviceTraffic {
+        bytes_in: v.get("bytes_in")?.as_f64()? as u64,
+        bytes_out: v.get("bytes_out")?.as_f64()? as u64,
+        dispatches: v.get("dispatches")?.as_f64()? as u64,
+        device_secs: v.get("device_secs")?.as_f64()?,
+    })
+}
+
 fn pattern_to_json(p: &PatternResult) -> Json {
     Json::obj(vec![
         ("enabled", Json::Arr(p.enabled.iter().map(|&b| Json::Bool(b)).collect())),
@@ -219,6 +260,7 @@ fn pattern_to_json(p: &PatternResult) -> Json {
         ("time", measurement_to_json(&p.time)),
         ("speedup", Json::num(p.speedup)),
         ("output_ok", Json::Bool(p.output_ok)),
+        ("traffic", traffic_to_json(&p.traffic)),
     ])
 }
 
@@ -228,10 +270,129 @@ fn pattern_from_json(v: &Json) -> Result<PatternResult> {
         label: v.get("label")?.as_str()?.to_string(),
         time: measurement_from_json(v.get("time")?)?,
         speedup: v.get("speedup")?.as_f64()?,
-        output_ok: match v.get("output_ok")? {
-            Json::Bool(b) => *b,
-            other => bail!("expected JSON bool for output_ok, got {other:?}"),
+        output_ok: bool_from_json(v.get("output_ok")?)?,
+        traffic: traffic_from_json(v.get("traffic")?)?,
+    })
+}
+
+// ------------------------------------------------- backend arbitration
+
+fn bool_from_json(v: &Json) -> Result<bool> {
+    match v {
+        Json::Bool(b) => Ok(*b),
+        other => bail!("expected JSON bool, got {other:?}"),
+    }
+}
+
+fn opt_num_to_json(v: Option<f64>) -> Json {
+    v.map(Json::num).unwrap_or(Json::Null)
+}
+
+fn opt_num_from_json(v: &Json, key: &str) -> Result<Option<f64>> {
+    v.opt(key).map(|n| n.as_f64()).transpose()
+}
+
+fn device_to_json(d: &DeviceModel) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&d.name)),
+        ("alms", Json::num(d.alms as f64)),
+        ("dsps", Json::num(d.dsps as f64)),
+        ("m20ks", Json::num(d.m20ks as f64)),
+        ("fmax", Json::num(d.fmax)),
+    ])
+}
+
+fn device_from_json(v: &Json) -> Result<DeviceModel> {
+    Ok(DeviceModel {
+        name: v.get("name")?.as_str()?.to_string(),
+        alms: v.get("alms")?.as_f64()? as u64,
+        dsps: v.get("dsps")?.as_f64()? as u64,
+        m20ks: v.get("m20ks")?.as_f64()? as u64,
+        fmax: v.get("fmax")?.as_f64()?,
+    })
+}
+
+fn fpga_estimate_to_json(f: &FpgaEstimate) -> Json {
+    Json::obj(vec![
+        ("core", Json::str(&f.core)),
+        ("intensity_score", Json::num(f.intensity_score)),
+        ("narrowed_out", Json::Bool(f.narrowed_out)),
+        ("alms", Json::num(f.resources.alms as f64)),
+        ("dsps", Json::num(f.resources.dsps as f64)),
+        ("m20ks", Json::num(f.resources.m20ks as f64)),
+        ("utilization", Json::num(f.utilization)),
+        ("precheck_ok", Json::Bool(f.precheck_ok)),
+        ("est_secs", Json::num(f.est_secs)),
+        ("compile_hours", Json::num(f.compile_hours)),
+    ])
+}
+
+fn fpga_estimate_from_json(v: &Json) -> Result<FpgaEstimate> {
+    Ok(FpgaEstimate {
+        core: v.get("core")?.as_str()?.to_string(),
+        intensity_score: v.get("intensity_score")?.as_f64()?,
+        narrowed_out: bool_from_json(v.get("narrowed_out")?)?,
+        resources: ResourceEstimate {
+            alms: v.get("alms")?.as_f64()? as u64,
+            dsps: v.get("dsps")?.as_f64()? as u64,
+            m20ks: v.get("m20ks")?.as_f64()? as u64,
         },
+        utilization: v.get("utilization")?.as_f64()?,
+        precheck_ok: bool_from_json(v.get("precheck_ok")?)?,
+        est_secs: v.get("est_secs")?.as_f64()?,
+        compile_hours: v.get("compile_hours")?.as_f64()?,
+    })
+}
+
+fn block_arbitration_to_json(b: &BlockArbitration) -> Json {
+    Json::obj(vec![
+        ("label", Json::str(&b.label)),
+        ("backend", Json::str(b.backend.as_str())),
+        ("gpu_secs", opt_num_to_json(b.gpu_secs)),
+        ("gpu_device_secs", Json::num(b.gpu_device_secs)),
+        (
+            "fpga",
+            b.fpga.as_ref().map(fpga_estimate_to_json).unwrap_or(Json::Null),
+        ),
+    ])
+}
+
+fn block_arbitration_from_json(v: &Json) -> Result<BlockArbitration> {
+    Ok(BlockArbitration {
+        label: v.get("label")?.as_str()?.to_string(),
+        backend: Backend::parse(v.get("backend")?.as_str()?)?,
+        gpu_secs: opt_num_from_json(v, "gpu_secs")?,
+        gpu_device_secs: v.get("gpu_device_secs")?.as_f64()?,
+        fpga: v.opt("fpga").map(fpga_estimate_from_json).transpose()?,
+    })
+}
+
+fn arbitration_to_json(a: &ArbitrationOutcome) -> Json {
+    Json::obj(vec![
+        ("policy", Json::str(a.policy.as_str())),
+        ("device", device_to_json(&a.device)),
+        ("blocks", Json::Arr(a.blocks.iter().map(block_arbitration_to_json).collect())),
+        ("backend", Json::str(a.backend.as_str())),
+        ("simulated_hours", Json::num(a.simulated_hours)),
+        ("gpu_request_secs", opt_num_to_json(a.gpu_request_secs)),
+        ("fpga_request_secs", opt_num_to_json(a.fpga_request_secs)),
+    ])
+}
+
+fn arbitration_from_json(v: &Json) -> Result<ArbitrationOutcome> {
+    Ok(ArbitrationOutcome {
+        policy: BackendPolicy::parse(v.get("policy")?.as_str()?)?,
+        device: device_from_json(v.get("device")?)?,
+        blocks: v
+            .get("blocks")?
+            .as_arr()?
+            .iter()
+            .map(block_arbitration_from_json)
+            .collect::<Result<_>>()?,
+        backend: Backend::parse(v.get("backend")?.as_str()?)?,
+        simulated_hours: v.get("simulated_hours")?.as_f64()?,
+        gpu_request_secs: opt_num_from_json(v, "gpu_request_secs")?,
+        fpga_request_secs: opt_num_from_json(v, "fpga_request_secs")?,
     })
 }
 
@@ -325,6 +486,12 @@ mod tests {
                         time: m("only:call:fft2d", 120),
                         speedup: 8.333,
                         output_ok: true,
+                        traffic: DeviceTraffic {
+                            bytes_in: 32768,
+                            bytes_out: 32768,
+                            dispatches: 1,
+                            device_secs: 6.25e-5,
+                        },
                     },
                     PatternResult {
                         enabled: vec![false, true],
@@ -332,11 +499,55 @@ mod tests {
                         time: m("all-CPU", 1000),
                         speedup: 0.0,
                         output_ok: false,
+                        traffic: DeviceTraffic::default(),
                     },
                 ],
                 best_enabled: vec![true, false],
                 best_time: m("only:call:fft2d", 120),
                 best_speedup: 8.333,
+            },
+            arbitration: ArbitrationOutcome {
+                policy: BackendPolicy::Auto,
+                device: DeviceModel {
+                    name: "Intel Arria10 GX 1150".into(),
+                    alms: 427_200,
+                    dsps: 1_518,
+                    m20ks: 2_713,
+                    fmax: 240.0e6,
+                },
+                blocks: vec![
+                    BlockArbitration {
+                        label: "call:fft2d".into(),
+                        backend: Backend::Fpga,
+                        gpu_secs: Some(1.2e-4),
+                        gpu_device_secs: 9.5e-5,
+                        fpga: Some(FpgaEstimate {
+                            core: "2-D FFT IP core".into(),
+                            intensity_score: 7821.5,
+                            narrowed_out: false,
+                            resources: ResourceEstimate {
+                                alms: 26_280,
+                                dsps: 83,
+                                m20ks: 109,
+                            },
+                            utilization: 0.0615,
+                            precheck_ok: true,
+                            est_secs: 6.25e-5,
+                            compile_hours: 3.23,
+                        }),
+                    },
+                    BlockArbitration {
+                        label: "func:my_decomp".into(),
+                        backend: Backend::Cpu,
+                        gpu_secs: None,
+                        gpu_device_secs: 0.0,
+                        fpga: None,
+                    },
+                ],
+                backend: Backend::Fpga,
+                simulated_hours: 3.27,
+                gpu_request_secs: Some(1.2e-4),
+                fpga_request_secs: Some(8.75e-5),
             },
             transformed_source: "#include <math.h>\nint main() {\n    return 0;\n}\n".into(),
             search_wall: Duration::from_millis(47),
@@ -363,9 +574,25 @@ mod tests {
         assert_eq!(back.outcome.best_speedup, r.outcome.best_speedup);
         assert_eq!(back.outcome.tried.len(), r.outcome.tried.len());
         assert_eq!(back.outcome.tried[0].speedup, r.outcome.tried[0].speedup);
+        assert_eq!(back.outcome.tried[0].traffic, r.outcome.tried[0].traffic);
         assert_eq!(back.outcome.tried[1].output_ok, false);
+        assert_eq!(back.outcome.tried[1].traffic, DeviceTraffic::default());
         assert_eq!(back.outcome.baseline.median, r.outcome.baseline.median);
         assert_eq!(back.outcome.baseline.reps, r.outcome.baseline.reps);
+        // v2: the backend-arbitration section round-trips in full.
+        assert_eq!(back.arbitration, r.arbitration);
+        assert_eq!(back.backend(), Backend::Fpga);
+    }
+
+    #[test]
+    fn top_level_backend_must_agree_with_arbitration() {
+        let r = sample_report();
+        let tampered = report_to_string(&r).replace(
+            "\"backend\": \"fpga\",\n  \"blocks\"",
+            "\"backend\": \"gpu\",\n  \"blocks\"",
+        );
+        assert_ne!(tampered, report_to_string(&r), "tamper point must exist");
+        assert!(report_from_str(&tampered).is_err());
     }
 
     #[test]

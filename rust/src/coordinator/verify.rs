@@ -24,6 +24,7 @@ use crate::transform::{self, glue, PlannedReplacement};
 pub struct VerifyConfig {
     /// Measured repetitions per pattern (median taken).
     pub reps: usize,
+    /// Unmeasured warm-up runs before the measured repetitions.
     pub warmup: usize,
     /// Interpreter fuel per run (guards diverging candidates).
     pub fuel: u64,
@@ -38,31 +39,59 @@ impl Default for VerifyConfig {
     }
 }
 
+/// Host<->device traffic observed while measuring one pattern, averaged
+/// per run. Captured from [`crate::runtime::EngineStats`] deltas around
+/// the measured runs; the backend-arbitration stage uses it to size the
+/// FPGA timing model (working set, dispatch count) and to compare FPGA
+/// estimates against the *measured* PJRT device seconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DeviceTraffic {
+    /// Bytes staged host -> device per run.
+    pub bytes_in: u64,
+    /// Bytes read device -> host per run.
+    pub bytes_out: u64,
+    /// Artifact dispatches per run.
+    pub dispatches: u64,
+    /// Measured wall-clock seconds inside the PJRT engine per run
+    /// (staging + device execution + readback).
+    pub device_secs: f64,
+}
+
 /// Result of measuring one offload pattern.
 #[derive(Debug, Clone)]
 pub struct PatternResult {
     /// Which blocks were enabled.
     pub enabled: Vec<bool>,
+    /// Human-readable pattern label (e.g. `only:call:fft2d`).
     pub label: String,
+    /// Measured wall-clock of the whole pattern run.
     pub time: Measurement,
     /// Speedup vs the all-CPU baseline.
     pub speedup: f64,
     /// Did the program produce the same result as the CPU run?
     pub output_ok: bool,
+    /// Per-run host<->device traffic observed during measurement.
+    pub traffic: DeviceTraffic,
 }
 
 /// Full search outcome.
 #[derive(Debug, Clone)]
 pub struct SearchOutcome {
+    /// All-CPU baseline measurement.
     pub baseline: Measurement,
+    /// Every measured pattern, per-block ones first (index-aligned with the block list).
     pub tried: Vec<PatternResult>,
     /// Winning pattern (indices into the block list).
     pub best_enabled: Vec<bool>,
+    /// Measurement of the winning pattern.
     pub best_time: Measurement,
+    /// Speedup of the winning pattern over the baseline.
     pub best_speedup: f64,
 }
 
-/// Measure one pattern: transform, install externals, run.
+/// Measure one pattern: transform, install externals, run. Returns the
+/// timing, the program's result value, its printed output, and the
+/// per-run device traffic observed through the engine.
 pub fn measure_pattern(
     prog: &Program,
     entry: &str,
@@ -71,7 +100,7 @@ pub fn measure_pattern(
     engine: &Rc<Engine>,
     cfg: &VerifyConfig,
     label: &str,
-) -> Result<(Measurement, Value, String)> {
+) -> Result<(Measurement, Value, String, DeviceTraffic)> {
     let plans: Vec<PlannedReplacement> = blocks
         .iter()
         .zip(enabled)
@@ -97,6 +126,7 @@ pub fn measure_pattern(
     }
     let mut last: Option<Value> = None;
     let mut out_text = String::new();
+    let stats_before = engine.stats.borrow().clone();
     let m = measure(label, cfg.warmup, cfg.reps, || {
         interp.reset_run_state()?;
         // Re-install externals (reset clears only run state, not externals;
@@ -105,8 +135,18 @@ pub fn measure_pattern(
         out_text = interp.output.clone();
         Ok(())
     })?;
+    let stats_after = engine.stats.borrow().clone();
+    // Warmup runs dispatch identically to measured ones, so the per-run
+    // average over (warmup + reps) is the per-run traffic.
+    let runs = (cfg.warmup + cfg.reps.max(1)) as u64;
+    let traffic = DeviceTraffic {
+        bytes_in: (stats_after.bytes_in - stats_before.bytes_in) / runs,
+        bytes_out: (stats_after.bytes_out - stats_before.bytes_out) / runs,
+        dispatches: (stats_after.executions - stats_before.executions) / runs,
+        device_secs: (stats_after.exec_secs - stats_before.exec_secs) / runs as f64,
+    };
     let v = last.ok_or_else(|| anyhow!("no measured run completed"))?;
-    Ok((m, v, out_text))
+    Ok((m, v, out_text, traffic))
 }
 
 fn values_close(a: &Value, b: &Value, tol: f64) -> bool {
@@ -130,7 +170,7 @@ pub fn search_patterns(
     cfg: &VerifyConfig,
 ) -> Result<SearchOutcome> {
     let none = vec![false; blocks.len()];
-    let (baseline, base_val, _) =
+    let (baseline, base_val, _, _) =
         measure_pattern(prog, entry, blocks, &none, engine, cfg, "all-CPU")?;
 
     let mut tried = Vec::new();
@@ -146,14 +186,14 @@ pub fn search_patterns(
         enabled[i] = true;
         let label = format!("only:{}", blocks[i].site.label());
         match measure_pattern(prog, entry, blocks, &enabled, engine, cfg, &label) {
-            Ok((m, v, _)) => {
+            Ok((m, v, _, traffic)) => {
                 let speedup = baseline.secs() / m.secs().max(1e-12);
                 let output_ok = values_close(&base_val, &v, cfg.tolerance);
                 if output_ok && m.median < best_time.median {
                     best_time = m.clone();
                     best_enabled = enabled.clone();
                 }
-                tried.push(PatternResult { enabled, label, time: m, speedup, output_ok });
+                tried.push(PatternResult { enabled, label, time: m, speedup, output_ok, traffic });
             }
             Err(e) => {
                 tried.push(PatternResult {
@@ -162,6 +202,7 @@ pub fn search_patterns(
                     time: baseline.clone(),
                     speedup: 0.0,
                     output_ok: false,
+                    traffic: DeviceTraffic::default(),
                 });
             }
         }
@@ -176,7 +217,7 @@ pub fn search_patterns(
         for &i in &winners {
             enabled[i] = true;
         }
-        if let Ok((m, v, _)) =
+        if let Ok((m, v, _, traffic)) =
             measure_pattern(prog, entry, blocks, &enabled, engine, cfg, "combined-winners")
         {
             let speedup = baseline.secs() / m.secs().max(1e-12);
@@ -191,6 +232,7 @@ pub fn search_patterns(
                 time: m,
                 speedup,
                 output_ok,
+                traffic,
             });
         }
     }

@@ -23,9 +23,13 @@ use crate::analysis::IntensityReport;
 /// FPGA device resource envelope.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Device {
+    /// Device name (e.g. "Intel Arria10 GX 1150").
     pub name: &'static str,
+    /// Adaptive logic modules available.
     pub alms: u64,
+    /// DSP blocks available.
     pub dsps: u64,
+    /// M20K BRAM blocks available.
     pub m20ks: u64,
     /// Achievable pipeline clock (Hz).
     pub fmax: f64,
@@ -43,12 +47,16 @@ pub const ARRIA10_GX: Device = Device {
 /// Static resource estimate of one kernel.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct ResourceEstimate {
+    /// Adaptive logic modules required.
     pub alms: u64,
+    /// DSP blocks required.
     pub dsps: u64,
+    /// M20K BRAM blocks required.
     pub m20ks: u64,
 }
 
 impl ResourceEstimate {
+    /// True when every resource dimension fits the device.
     pub fn fits(&self, dev: &Device) -> bool {
         self.alms <= dev.alms && self.dsps <= dev.dsps && self.m20ks <= dev.m20ks
     }
@@ -96,14 +104,17 @@ pub struct VirtualClock {
 }
 
 impl VirtualClock {
+    /// Advance the clock by `secs` simulated seconds.
     pub fn advance(&self, secs: f64) {
         self.seconds.set(self.seconds.get() + secs);
     }
 
+    /// Total simulated seconds elapsed.
     pub fn elapsed_secs(&self) -> f64 {
         self.seconds.get()
     }
 
+    /// Total simulated hours elapsed.
     pub fn elapsed_hours(&self) -> f64 {
         self.seconds.get() / 3600.0
     }
@@ -112,7 +123,9 @@ impl VirtualClock {
 /// One kernel submitted to the HLS chain.
 #[derive(Debug, Clone)]
 pub struct KernelSpec {
+    /// Kernel name (diagnostics).
     pub name: String,
+    /// Static resource estimate checked by the pre-check.
     pub resources: ResourceEstimate,
     /// Iterations of the pipelined loop per invocation.
     pub trips: u64,
@@ -125,24 +138,44 @@ pub struct KernelSpec {
 /// A successfully compiled kernel with its timing model.
 #[derive(Debug, Clone)]
 pub struct CompiledKernel {
+    /// The submitted kernel.
     pub spec: KernelSpec,
+    /// Device the kernel was compiled for.
     pub device: Device,
     /// Simulated seconds the compile consumed.
     pub compile_secs: f64,
 }
 
+/// Pipeline fill latency charged to every kernel invocation (cycles).
+pub const PIPELINE_FILL_CYCLES: f64 = 100.0;
+
+/// Effective host<->device PCIe bandwidth of the modeled card (bytes/s).
+pub const PCIE_BYTES_PER_SEC: f64 = 6.0e9;
+
+/// Modeled execution time of one kernel invocation on `device`: pipeline
+/// fill + trips×II cycles at `fmax`, plus PCIe transfer at
+/// [`PCIE_BYTES_PER_SEC`]. This is the estimate the backend-arbitration
+/// stage compares against the *measured* GPU time before committing to an
+/// hours-long compile; [`CompiledKernel::exec_secs`] reports the same
+/// number after the compile, so the pre-compile estimate is exact by
+/// construction (DESIGN.md "Substitutions").
+pub fn modeled_exec_secs(spec: &KernelSpec, device: &Device) -> f64 {
+    let cycles = PIPELINE_FILL_CYCLES + (spec.trips * spec.ii) as f64;
+    cycles / device.fmax + spec.transfer_bytes as f64 / PCIE_BYTES_PER_SEC
+}
+
 impl CompiledKernel {
-    /// Modeled execution time per invocation: pipeline fill + trips×II
-    /// cycles at fmax, plus PCIe transfer at ~6 GB/s effective.
+    /// Modeled execution time per invocation (see [`modeled_exec_secs`]).
     pub fn exec_secs(&self) -> f64 {
-        let cycles = 100.0 + (self.spec.trips * self.spec.ii) as f64;
-        cycles / self.device.fmax + self.spec.transfer_bytes as f64 / 6.0e9
+        modeled_exec_secs(&self.spec, &self.device)
     }
 }
 
 /// Simulated Intel HLS chain (Quartus synthesis + place&route).
 pub struct HlsCompiler {
+    /// Target device.
     pub device: Device,
+    /// Accounts simulated toolchain time across pre-checks and compiles.
     pub clock: VirtualClock,
     /// Base compile latency in simulated seconds (paper: ≈3 h).
     pub base_compile_secs: f64,
@@ -152,6 +185,7 @@ pub struct HlsCompiler {
 }
 
 impl HlsCompiler {
+    /// New compiler chain for a device with paper-calibrated timings.
     pub fn new(device: Device) -> Self {
         HlsCompiler {
             device,
@@ -299,6 +333,74 @@ mod tests {
         assert!(names.contains(&"high") && names.contains(&"mid"));
         // Two full compiles + prechecks only — not four compiles.
         assert!(hls.clock.elapsed_hours() < 16.0);
+    }
+
+    #[test]
+    fn exact_fit_passes_precheck_and_compiles() {
+        // A kernel consuming the device to the last ALM/DSP/M20K is still
+        // placeable: the pre-check is `<=`, not `<`.
+        let hls = HlsCompiler::new(ARRIA10_GX);
+        let exact = KernelSpec {
+            name: "exact".into(),
+            resources: ResourceEstimate {
+                alms: ARRIA10_GX.alms,
+                dsps: ARRIA10_GX.dsps,
+                m20ks: ARRIA10_GX.m20ks,
+            },
+            trips: 1024,
+            ii: 1,
+            transfer_bytes: 1 << 16,
+        };
+        assert!(hls.precheck(&exact).is_ok());
+        let k = hls.compile(&exact).unwrap();
+        assert!((k.spec.resources.utilization(&ARRIA10_GX) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn each_resource_dimension_overflows_independently() {
+        // One resource over budget is enough to reject, whichever it is —
+        // and the rejection is the *early* error with its cheap accounting.
+        let fit = ResourceEstimate { alms: 100_000, dsps: 500, m20ks: 500 };
+        let overflows = [
+            ResourceEstimate { alms: ARRIA10_GX.alms + 1, ..fit },
+            ResourceEstimate { dsps: ARRIA10_GX.dsps + 1, ..fit },
+            ResourceEstimate { m20ks: ARRIA10_GX.m20ks + 1, ..fit },
+        ];
+        for (i, resources) in overflows.into_iter().enumerate() {
+            assert!(!resources.fits(&ARRIA10_GX), "overflow {i} must not fit");
+            let hls = HlsCompiler::new(ARRIA10_GX);
+            let bad = KernelSpec {
+                name: format!("over{i}"),
+                resources,
+                trips: 1024,
+                ii: 1,
+                transfer_bytes: 1 << 16,
+            };
+            // Pre-check: rejected for ~minutes of simulated time.
+            assert!(hls.precheck(&bad).is_err());
+            assert!(hls.clock.elapsed_secs() < 600.0, "pre-check must stay cheap");
+            // Full compile without a pre-check: errors early, far below the
+            // ≥3 h a successful compile would charge.
+            let before = hls.clock.elapsed_hours();
+            assert!(hls.compile(&bad).is_err());
+            let charged = hls.clock.elapsed_hours() - before;
+            assert!(
+                charged > 0.0 && charged < 1.0,
+                "early error must charge (0, 1) h, charged {charged}"
+            );
+        }
+    }
+
+    #[test]
+    fn modeled_estimate_matches_compiled_timing() {
+        // The arbitration stage estimates before compiling; the estimate
+        // must equal what the compiled kernel reports.
+        let hls = HlsCompiler::new(ARRIA10_GX);
+        let s = spec("k", 200, 1 << 18);
+        let est = modeled_exec_secs(&s, &ARRIA10_GX);
+        let compiled = hls.compile(&s).unwrap();
+        assert_eq!(est, compiled.exec_secs());
+        assert!(est > 0.0);
     }
 
     #[test]

@@ -29,12 +29,17 @@ use rng::Rng;
 /// GA tuning knobs (defaults follow [33]'s small-population regime).
 #[derive(Debug, Clone)]
 pub struct GaConfig {
+    /// Individuals per generation.
     pub population: usize,
+    /// Generations to run.
     pub generations: usize,
+    /// Probability of two-point crossover per offspring.
     pub crossover_rate: f64,
+    /// Per-gene mutation probability.
     pub mutation_rate: f64,
     /// Individuals preserved unchanged each generation.
     pub elite: usize,
+    /// PRNG seed (the search is fully deterministic).
     pub seed: u64,
 }
 
@@ -54,6 +59,7 @@ impl Default for GaConfig {
 /// Per-generation record (the Fig. 4 series).
 #[derive(Debug, Clone)]
 pub struct GenStats {
+    /// Generation index (0-based).
     pub generation: usize,
     /// Best-so-far speedup vs the all-CPU baseline.
     pub best_speedup: f64,
@@ -66,15 +72,20 @@ pub struct GenStats {
 /// GA outcome.
 #[derive(Debug, Clone)]
 pub struct GaResult {
+    /// Best on/off pattern found.
     pub best_gene: Vec<bool>,
+    /// Measured time of the best gene.
     pub best_time: Duration,
+    /// All-CPU baseline time.
     pub baseline_time: Duration,
+    /// Per-generation series (Fig. 4).
     pub history: Vec<GenStats>,
     /// Total measured trials (= verification-environment runs).
     pub trials: usize,
 }
 
 impl GaResult {
+    /// Speedup of the best gene over the baseline.
     pub fn best_speedup(&self) -> f64 {
         self.baseline_time.as_secs_f64() / self.best_time.as_secs_f64().max(1e-12)
     }

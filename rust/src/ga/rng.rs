@@ -10,11 +10,13 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seeded generator (the all-zero fixed point is avoided).
     pub fn new(seed: u64) -> Self {
         // Avoid the all-zero fixed point.
         Rng { state: seed.wrapping_mul(0x9E3779B97F4A7C15) | 1 }
     }
 
+    /// Next raw 64-bit sample.
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.state;
         x ^= x >> 12;
@@ -34,6 +36,7 @@ impl Rng {
         (self.next_u64() % n.max(1) as u64) as usize
     }
 
+    /// Bernoulli draw with probability `p`.
     pub fn bool_with(&mut self, p: f64) -> bool {
         self.next_f64() < p
     }

@@ -35,20 +35,24 @@ const MATH_2: &[(&str, fn(f64, f64) -> f64)] = &[
     ("fmin", f64::min),
 ];
 
+/// Unary libm builtin by name (`sin`, `cos`, `sqrt`, ...).
 pub fn math1(name: &str) -> Option<fn(f64) -> f64> {
     MATH_1.iter().find(|(n, _)| *n == name).map(|(_, f)| *f)
 }
 
+/// Binary libm builtin by name (`pow`, `atan2`, ...).
 pub fn math2(name: &str) -> Option<fn(f64, f64) -> f64> {
     MATH_2.iter().find(|(n, _)| *n == name).map(|(_, f)| *f)
 }
 
+/// Is `name` an interpreter builtin (libm or printf-family)?
 pub fn is_builtin(name: &str) -> bool {
     math1(name).is_some()
         || math2(name).is_some()
         || matches!(name, "printf" | "abs" | "exit" | "assert_true")
 }
 
+/// Dispatch a builtin call with evaluated arguments.
 pub fn call(interp: &mut Interp, name: &str, args: &[Value]) -> Result<Value> {
     if let Some(f) = math1(name) {
         if args.len() != 1 {

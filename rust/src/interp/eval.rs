@@ -20,9 +20,13 @@ use super::value::{Slice, SliceOrScalar, StructData, Value};
 
 /// Statement-level control flow signal.
 pub enum Flow {
+    /// Fall through to the next statement.
     Normal,
+    /// `break` out of the innermost loop.
     Break,
+    /// `continue` the innermost loop.
     Continue,
+    /// `return` (with the function's value).
     Return(Value),
 }
 
@@ -48,11 +52,13 @@ pub struct RunStats {
 pub struct Interp {
     prog: Program,
     funcs: HashMap<String, Rc<FuncDef>>, // avoids per-call AST clones
+    /// Installed external (offloaded) functions by dispatch name.
     pub externals: HashMap<String, ExternalFn>,
     /// Loop statements (by node id) that the GA marked as GPU-offloaded.
     pub offloaded_loops: HashSet<NodeId>,
     /// Per-launch transfer overhead in simulated bytes (PCIe model).
     pub stats: RunStats,
+    /// Captured `printf` output of the last run.
     pub output: String,
     /// Execution fuel; `run` fails when exhausted (guards runaway loops).
     pub fuel: u64,
@@ -66,6 +72,7 @@ pub struct Interp {
 }
 
 impl Interp {
+    /// Build an interpreter over a parsed program.
     pub fn new(prog: &Program) -> Result<Self> {
         let mut funcs = HashMap::new();
         for item in &prog.items {
@@ -326,6 +333,7 @@ impl Interp {
 
     // ------------------------------------------------------------ statements
 
+    /// Execute one statement.
     pub fn exec(&mut self, s: &Stmt) -> Result<Flow> {
         self.step()?;
         match &s.kind {
@@ -476,6 +484,7 @@ impl Interp {
 
     // ------------------------------------------------------------ expressions
 
+    /// Evaluate one expression.
     pub fn eval(&mut self, e: &Expr) -> Result<Value> {
         self.step()?;
         match &e.kind {

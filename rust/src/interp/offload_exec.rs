@@ -41,6 +41,7 @@ pub const LAUNCH_OVERHEAD: Duration = Duration::from_micros(20);
 #[allow(unpredictable_function_pointer_comparisons)]
 #[derive(Debug, Clone, PartialEq)]
 pub enum Sym {
+    /// Constant operand.
     Const(f64),
     /// Loop variable at nest depth `k`.
     LoopVar(usize),
@@ -48,12 +49,17 @@ pub enum Sym {
     Scalar(usize),
     /// Array element read: (array slot, index expressions).
     Read(usize, Vec<Sym>),
+    /// Binary arithmetic/comparison on two operands.
     Bin(BinOp, Box<Sym>, Box<Sym>),
+    /// Arithmetic negation.
     Neg(Box<Sym>),
     /// Truncation toward zero (int cast).
     Trunc(Box<Sym>),
+    /// Unary libm call (by function pointer).
     Call1(fn(f64) -> f64, Box<Sym>),
+    /// Binary libm call (by function pointer).
     Call2(fn(f64, f64) -> f64, Box<Sym>, Box<Sym>),
+    /// `c ? t : e` select.
     Ternary(Box<Sym>, Box<Sym>, Box<Sym>),
     /// Per-iteration scalar temporary (defined by `BulkStmt::LetTmp`
     /// earlier in the same iteration).
@@ -65,9 +71,13 @@ pub enum Sym {
 pub struct LoopSpec {
     /// Loop-variable slot in the device's `loop_vals`.
     pub var: usize,
+    /// Lower bound (inclusive).
     pub lo: Sym,
+    /// Upper bound (see `inclusive`).
     pub hi: Sym,
+    /// True for `<=` loops, false for `<`.
     pub inclusive: bool,
+    /// Constant stride (negative = downward).
     pub step: i64,
 }
 
@@ -92,6 +102,7 @@ pub enum BulkStmt {
 pub struct CompiledLoop {
     /// Total loop-variable slots across the whole (possibly imperfect) nest.
     pub n_vars: usize,
+    /// Root statements (a single `BulkStmt::Loop`).
     pub body: Vec<BulkStmt>,
     /// Array names bound at launch.
     pub arrays: Vec<String>,

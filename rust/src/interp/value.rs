@@ -17,22 +17,28 @@ use anyhow::{bail, Result};
 /// Backing storage of an array object.
 #[derive(Debug)]
 pub struct ArrayData {
+    /// Flat element storage (integral arrays store truncated values).
     pub data: Vec<f64>,
     /// True when the declared element type was integral.
     pub is_int: bool,
 }
 
+/// Shared handle to array storage.
 pub type ArrRef = Rc<RefCell<ArrayData>>;
 
 /// A view into an array: `(buffer, element offset, remaining dims)`.
 #[derive(Clone)]
 pub struct Slice {
+    /// Backing buffer.
     pub arr: ArrRef,
+    /// Element offset of this view into the buffer.
     pub offset: usize,
+    /// Remaining dimensions of the view (outermost first).
     pub dims: Vec<usize>,
 }
 
 impl Slice {
+    /// New owning view over fresh storage.
     pub fn new(data: Vec<f64>, dims: Vec<usize>, is_int: bool) -> Self {
         Slice {
             arr: Rc::new(RefCell::new(ArrayData { data, is_int })),
@@ -41,6 +47,7 @@ impl Slice {
         }
     }
 
+    /// Zero-filled array of the given shape.
     pub fn zeros(dims: &[usize], is_int: bool) -> Self {
         let len: usize = dims.iter().product();
         Slice::new(vec![0.0; len], dims.to_vec(), is_int)
@@ -51,6 +58,7 @@ impl Slice {
         self.dims.iter().product()
     }
 
+    /// True when the view covers no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -157,31 +165,43 @@ impl fmt::Debug for Slice {
 
 /// Result of indexing a slice: another view, or a scalar read.
 pub enum SliceOrScalar {
+    /// A sub-array view (more dimensions remain).
     Slice(Slice),
+    /// A scalar element (no dimensions remain); the flag marks integral storage.
     Scalar(f64, bool /* is_int */),
 }
 
 /// Struct instance (reference semantics; see module doc).
 #[derive(Debug)]
 pub struct StructData {
+    /// Struct type name.
     pub name: String,
+    /// Field values by name.
     pub fields: HashMap<String, Value>,
 }
 
+/// Shared handle to a struct instance.
 pub type StructRef = Rc<RefCell<StructData>>;
 
 /// A runtime value.
 #[derive(Clone, Debug)]
 pub enum Value {
+    /// Integer scalar.
     Int(i64),
+    /// Floating scalar.
     Float(f64),
+    /// Array view.
     Arr(Slice),
+    /// Struct instance (reference semantics).
     Struct(StructRef),
+    /// String literal value.
     Str(Rc<String>),
+    /// Absence of a value (`void` returns).
     Void,
 }
 
 impl Value {
+    /// Numeric coercion (int or float).
     pub fn as_num(&self) -> Result<f64> {
         match self {
             Value::Int(v) => Ok(*v as f64),
@@ -190,6 +210,7 @@ impl Value {
         }
     }
 
+    /// Integer coercion (floats truncate).
     pub fn as_int(&self) -> Result<i64> {
         match self {
             Value::Int(v) => Ok(*v),
@@ -198,6 +219,7 @@ impl Value {
         }
     }
 
+    /// The array view, or an error for non-arrays.
     pub fn as_arr(&self) -> Result<&Slice> {
         match self {
             Value::Arr(s) => Ok(s),
@@ -205,10 +227,12 @@ impl Value {
         }
     }
 
+    /// C truthiness of a numeric value.
     pub fn truthy(&self) -> Result<bool> {
         Ok(self.as_num()? != 0.0)
     }
 
+    /// Human-readable type name for diagnostics.
     pub fn type_name(&self) -> &'static str {
         match self {
             Value::Int(_) => "int",

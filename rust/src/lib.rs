@@ -20,9 +20,17 @@
 //!   cost; the cache is what makes it one-time across requests and
 //!   restarts).
 //!
+//! * **Backend arbitration** — Step 3b ([`coordinator::backend`]) decides
+//!   CPU vs GPU vs FPGA per block: the [`fpga`] substrate models the
+//!   Arria10 device, the HLS toolchain's simulated hours, and the resource
+//!   pre-check that narrows candidates before the hours-long compile
+//!   (DESIGN.md "Backend arbitration").
+//!
 //! Start at [`coordinator::Coordinator`] for the end-to-end flow,
 //! [`service::OffloadService`] for the batch/serving tier, or the
 //! `examples/` directory for runnable scenarios.
+
+#![warn(missing_docs)]
 
 pub mod analysis;
 pub mod coordinator;

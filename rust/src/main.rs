@@ -21,7 +21,7 @@ use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
 
-use fbo::coordinator::{apps, flow, loop_offload, Coordinator};
+use fbo::coordinator::{apps, flow, loop_offload, BackendPolicy, Coordinator};
 use fbo::ga::GaConfig;
 use fbo::metrics;
 use fbo::patterndb::PatternDb;
@@ -92,6 +92,7 @@ fn coordinator_from(args: &Args) -> Result<Coordinator> {
         other => bail!("unknown --policy {other:?} (approve|reject)"),
     };
     c.verify.reps = args.flag_usize("reps", 3)?;
+    c.backend_policy = BackendPolicy::parse(&args.flag("target", "auto"))?;
     Ok(c)
 }
 
@@ -183,23 +184,48 @@ fn cmd_flow(args: &Args) -> Result<()> {
     let report = c.offload(&src, &entry)?;
     print!("{}", c.render_report(&report));
 
-    println!("-- Step 4: resource sizing --");
     let req = flow::Requirements {
         target_rps: args.flag_usize("rps", 50)? as f64,
         max_latency_ms: 20.0,
         budget_per_month: 10_000.0,
     };
-    let plan = flow::plan_resources(report.outcome.best_time.secs(), &req)?;
-    println!("  {} instance(s) at {:.1} rps each", plan.instances, plan.rps_per_instance);
-
-    println!("-- Step 5: placement --");
     let locations = vec![
-        flow::Location { name: "edge-gw".into(), gpus: 1, fpgas: 1, cost_per_hour: 0.9, latency_ms: 3.0 },
-        flow::Location { name: "regional-dc".into(), gpus: 8, fpgas: 4, cost_per_hour: 0.5, latency_ms: 12.0 },
-        flow::Location { name: "central-cloud".into(), gpus: 64, fpgas: 32, cost_per_hour: 0.3, latency_ms: 45.0 },
+        flow::Location { name: "edge-gw".into(), gpus: 1, fpgas: 1, cost_per_hour: 0.9, fpga_cost_per_hour: 0.35, latency_ms: 3.0 },
+        flow::Location { name: "regional-dc".into(), gpus: 8, fpgas: 4, cost_per_hour: 0.5, fpga_cost_per_hour: 0.2, latency_ms: 12.0 },
+        flow::Location { name: "central-cloud".into(), gpus: 64, fpgas: 32, cost_per_hour: 0.3, fpga_cost_per_hour: 0.12, latency_ms: 45.0 },
     ];
-    let placement = flow::plan_placement(&plan, &req, &locations)?;
-    println!("  {} (${:.0}/month)", placement.location, placement.monthly_cost);
+    // Steps 4+5 are solved together: placement arbitrates the backend, and
+    // the sizing printed for Step 4 is the one the chosen backend needs.
+    let times = flow::BackendTimes::from_report(&report);
+    if times.gpu_secs.is_none() && times.fpga_secs.is_none() {
+        // Nothing offloaded: size and place the all-CPU pattern with the
+        // generic capacity/price walk. (A real accelerator infeasibility
+        // must NOT fall back here — the generic walk pools gpu+fpga
+        // capacity and would print a deployment no single backend hosts.)
+        let plan = flow::plan_resources(report.outcome.best_time.secs(), &req)?;
+        println!("-- Step 4: resource sizing --");
+        println!("  {} instance(s) at {:.1} rps each", plan.instances, plan.rps_per_instance);
+        println!("-- Step 5: placement --");
+        let p = flow::plan_placement(&plan, &req, &locations)?;
+        println!("  {} (${:.0}/month)", p.location, p.monthly_cost);
+    } else {
+        let p = flow::plan_backend_placement(&times, &req, &locations)?;
+        println!("-- Step 4: resource sizing (for the arbitrated backend) --");
+        println!(
+            "  {} {} instance(s) at {:.1} rps each",
+            p.plan.instances,
+            p.backend.as_str(),
+            p.plan.rps_per_instance
+        );
+        println!("-- Step 5: placement (consumes the per-backend Step-3b times) --");
+        println!(
+            "  {} on {} x{} (${:.0}/month)",
+            p.location,
+            p.backend.as_str(),
+            p.plan.instances,
+            p.monthly_cost
+        );
+    }
 
     println!("-- Step 6: deploy + operational verification --");
     println!(
@@ -225,13 +251,15 @@ fn service_from(args: &Args) -> Result<OffloadService> {
         other => bail!("unknown --policy {other:?} (approve|reject)"),
     };
     cfg.verify.reps = args.flag_usize("reps", 3)?;
+    cfg.backend_policy = BackendPolicy::parse(&args.flag("target", "auto"))?;
     OffloadService::start(cfg)
 }
 
 fn print_completed(label: &str, done: &fbo::service::CompletedJob) {
     println!(
-        "{label}: best speedup {} in {}{}",
+        "{label}: best speedup {} on {} in {}{}",
         metrics::fmt_speedup(done.report.best_speedup()),
+        done.report.backend().as_str(),
         metrics::fmt_duration(done.wall),
         if done.from_cache { "  [cached decision]" } else { "" },
     );
@@ -367,14 +395,17 @@ fn usage() -> &'static str {
      commands:\n\
        analyze   <file.c>                 Step 1-2 analysis report\n\
        offload   <file.c> [--entry main] [--artifacts DIR] [--policy approve|reject]\n\
-                 [--reps N] [--out transformed.c]\n\
+                 [--target gpu|fpga|auto] [--reps N] [--out transformed.c]\n\
        ga        <file.c> [--pop 12] [--gens 10] [--entry main]\n\
-       flow      <file.c> [--rps 50]      full Steps 1-7\n\
+       flow      <file.c> [--rps 50] [--target gpu|fpga|auto]\n\
+                 full Steps 1-7 (Step 5 places on the arbitrated backend)\n\
        batch     <file.c...> [--entry main] [--jobs N] [--artifacts DIR]\n\
                  [--cache DIR] [--no-cache-persist] [--reps N]\n\
+                 [--target gpu|fpga|auto]\n\
                  offload many files through the service worker pool +\n\
                  persistent decision cache\n\
        serve     [--jobs N] [--artifacts DIR] [--cache DIR]\n\
+                 [--target gpu|fpga|auto]\n\
                  long-running service; reads \"<file.c> [entry]\" lines\n\
                  from stdin, prints one decision per line + stats on EOF\n\
        gen-apps  [--n 256] [--dir apps]\n\

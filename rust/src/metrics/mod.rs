@@ -10,15 +10,20 @@ use std::time::{Duration, Instant};
 /// Result of measuring one candidate pattern.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// What was measured.
     pub label: String,
     /// Median wall-clock of the repetitions.
     pub median: Duration,
+    /// Fastest repetition.
     pub min: Duration,
+    /// Slowest repetition.
     pub max: Duration,
+    /// Number of measured repetitions.
     pub reps: usize,
 }
 
 impl Measurement {
+    /// Median wall-clock in seconds.
     pub fn secs(&self) -> f64 {
         self.median.as_secs_f64()
     }
@@ -85,14 +90,17 @@ pub struct Table {
 }
 
 impl Table {
+    /// New table with the given column headers.
     pub fn new(header: &[&str]) -> Self {
         Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Append one row (missing cells render empty).
     pub fn row(&mut self, cells: &[String]) {
         self.rows.push(cells.to_vec());
     }
 
+    /// Render the table as aligned plain text.
     pub fn render(&self) -> String {
         let ncol = self.header.len();
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
@@ -138,6 +146,16 @@ pub fn fmt_duration(d: Duration) -> String {
         format!("{:.2}ms", us / 1000.0)
     } else {
         format!("{:.3}s", us / 1e6)
+    }
+}
+
+/// Human-friendly simulated toolchain time (minutes below one hour, else
+/// hours) — the FPGA flow accounts HLS compiles in virtual hours.
+pub fn fmt_hours(h: f64) -> String {
+    if h < 1.0 {
+        format!("{:.0}min", h * 60.0)
+    } else {
+        format!("{h:.1}h")
     }
 }
 
@@ -223,5 +241,12 @@ mod tests {
     fn speedup_formatting() {
         assert_eq!(fmt_speedup(5.43), "5.4");
         assert_eq!(fmt_speedup(730.2), "730");
+    }
+
+    #[test]
+    fn hours_formatting() {
+        assert_eq!(fmt_hours(0.033), "2min");
+        assert_eq!(fmt_hours(3.2), "3.2h");
+        assert_eq!(fmt_hours(0.0), "0min");
     }
 }

@@ -21,18 +21,26 @@ impl fmt::Display for NodeId {
 /// interpreter (C promotion rules for `float` are "compute in double").
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum BaseTy {
+    /// `int`.
     Int,
+    /// `long`.
     Long,
+    /// `char`.
     Char,
+    /// `float`.
     Float,
+    /// `double`.
     Double,
+    /// `void`.
     Void,
 }
 
 impl BaseTy {
+    /// True for `float` / `double`.
     pub fn is_float(self) -> bool {
         matches!(self, BaseTy::Float | BaseTy::Double)
     }
+    /// C spelling of the type.
     pub fn name(self) -> &'static str {
         match self {
             BaseTy::Int => "int",
@@ -48,13 +56,16 @@ impl BaseTy {
 /// A (possibly struct / pointer) type.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum Ty {
+    /// A scalar type.
     Base(BaseTy),
+    /// A named struct type.
     Struct(String),
     /// `T*` — in this subset pointers are array handles.
     Ptr(Box<Ty>),
 }
 
 impl Ty {
+    /// The scalar base type, if any (through pointers).
     pub fn base(&self) -> Option<BaseTy> {
         match self {
             Ty::Base(b) => Some(*b),
@@ -62,6 +73,7 @@ impl Ty {
             Ty::Struct(_) => None,
         }
     }
+    /// True for pointer types.
     pub fn is_ptr(&self) -> bool {
         matches!(self, Ty::Ptr(_))
     }
@@ -80,27 +92,46 @@ impl fmt::Display for Ty {
 /// Binary operators.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum BinOp {
+    /// `+`.
     Add,
+    /// `-`.
     Sub,
+    /// `*`.
     Mul,
+    /// `/`.
     Div,
+    /// `%`.
     Rem,
+    /// `==`.
     Eq,
+    /// `!=`.
     Ne,
+    /// `<`.
     Lt,
+    /// `>`.
     Gt,
+    /// `<=`.
     Le,
+    /// `>=`.
     Ge,
+    /// `&&`.
     And,
+    /// `||`.
     Or,
+    /// `&`.
     BitAnd,
+    /// `|`.
     BitOr,
+    /// `^`.
     BitXor,
+    /// `<<`.
     Shl,
+    /// `>>`.
     Shr,
 }
 
 impl BinOp {
+    /// C spelling of the operator.
     pub fn symbol(self) -> &'static str {
         use BinOp::*;
         match self {
@@ -124,9 +155,11 @@ impl BinOp {
             Shr => ">>",
         }
     }
+    /// True for `+ - * / %` (the intensity counter's flop set).
     pub fn is_arith(self) -> bool {
         matches!(self, BinOp::Add | BinOp::Sub | BinOp::Mul | BinOp::Div | BinOp::Rem)
     }
+    /// True for `== != < > <= >=`.
     pub fn is_comparison(self) -> bool {
         matches!(
             self,
@@ -138,31 +171,45 @@ impl BinOp {
 /// Unary operators.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum UnOp {
+    /// `-x`.
     Neg,
+    /// `!x`.
     Not,
+    /// `~x`.
     BitNot,
     /// `*p` — array deref (index 0 in this subset).
     Deref,
     /// `&x` — address-of; arrays decay to themselves.
     Addr,
+    /// `++x`.
     PreInc,
+    /// `--x`.
     PreDec,
 }
 
 /// Assignment operators.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum AssignOp {
+    /// `=`.
     Set,
+    /// `+=`.
     Add,
+    /// `-=`.
     Sub,
+    /// `*=`.
     Mul,
+    /// `/=`.
     Div,
+    /// `%=`.
     Rem,
+    /// `<<=`.
     Shl,
+    /// `>>=`.
     Shr,
 }
 
 impl AssignOp {
+    /// C spelling of the operator.
     pub fn symbol(self) -> &'static str {
         match self {
             AssignOp::Set => "=",
@@ -180,27 +227,44 @@ impl AssignOp {
 /// Expressions.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Expr {
+    /// Stable node id within the parse.
     pub id: NodeId,
+    /// Source location.
     pub span: Span,
+    /// The expression itself.
     pub kind: ExprKind,
 }
 
 #[derive(Debug, Clone, PartialEq)]
+/// Expression kinds.
 pub enum ExprKind {
+    /// Integer literal.
     IntLit(i64),
+    /// Floating literal.
     FloatLit(f64),
+    /// String literal.
     StrLit(String),
+    /// Character literal.
     CharLit(char),
+    /// Variable reference.
     Ident(String),
+    /// Binary operation.
     Binary(BinOp, Box<Expr>, Box<Expr>),
+    /// Unary operation.
     Unary(UnOp, Box<Expr>),
     /// Postfix `x++` / `x--` (op distinguishes which).
     PostIncDec(Box<Expr>, bool /* inc */),
+    /// Assignment (plain or compound).
     Assign(AssignOp, Box<Expr>, Box<Expr>),
+    /// `c ? t : e`.
     Ternary(Box<Expr>, Box<Expr>, Box<Expr>),
+    /// Function call by name.
     Call(String, Vec<Expr>),
+    /// Array indexing `a[i]`.
     Index(Box<Expr>, Box<Expr>),
+    /// Struct member access `s.f` / `p->f`.
     Member(Box<Expr>, String),
+    /// `(T)x` cast.
     Cast(Ty, Box<Expr>),
     /// `sizeof(type)` — evaluated to a constant byte size.
     SizeOf(Ty),
@@ -241,40 +305,60 @@ impl Expr {
 /// A declared variable (local or global).
 #[derive(Debug, Clone, PartialEq)]
 pub struct VarDecl {
+    /// Stable node id within the parse.
     pub id: NodeId,
+    /// Source location.
     pub span: Span,
+    /// Declared type.
     pub ty: Ty,
+    /// Variable name.
     pub name: String,
     /// Array dimensions, outermost first. Empty for scalars.
     pub dims: Vec<Expr>,
+    /// Initializer expression, if any.
     pub init: Option<Expr>,
 }
 
 /// Statements.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Stmt {
+    /// Stable node id within the parse.
     pub id: NodeId,
+    /// Source location.
     pub span: Span,
+    /// The statement itself.
     pub kind: StmtKind,
 }
 
 #[derive(Debug, Clone, PartialEq)]
+/// Statement kinds.
 pub enum StmtKind {
+    /// Variable declaration(s).
     Decl(Vec<VarDecl>),
+    /// Expression statement.
     Expr(Expr),
+    /// `{ ... }` block.
     Block(Vec<Stmt>),
+    /// `if` / `else`.
     If(Expr, Box<Stmt>, Option<Box<Stmt>>),
+    /// `for` loop (any clause may be absent).
     For {
         init: Option<Box<Stmt>>,
         cond: Option<Expr>,
         step: Option<Expr>,
         body: Box<Stmt>,
     },
+    /// `while` loop.
     While(Expr, Box<Stmt>),
+    /// `do ... while` loop.
     DoWhile(Box<Stmt>, Expr),
+    /// `return`.
     Return(Option<Expr>),
+    /// `break`.
     Break,
+    /// `continue`.
     Continue,
+    /// Empty statement (`;`).
     Empty,
 }
 
@@ -338,7 +422,9 @@ impl Stmt {
 /// Function parameter.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Param {
+    /// Declared type.
     pub ty: Ty,
+    /// Parameter name.
     pub name: String,
     /// Declared as an array parameter (`float a[]`, `float a[n][m]`).
     pub array_dims: usize,
@@ -347,10 +433,15 @@ pub struct Param {
 /// Function definition or extern declaration (no body).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FuncDef {
+    /// Stable node id within the parse.
     pub id: NodeId,
+    /// Source location.
     pub span: Span,
+    /// Return type.
     pub ret: Ty,
+    /// Function name.
     pub name: String,
+    /// Parameters, in order.
     pub params: Vec<Param>,
     /// `None` for extern declarations — these are A-1 library-call targets.
     pub body: Option<Stmt>,
@@ -359,29 +450,38 @@ pub struct FuncDef {
 /// Struct definition.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StructDef {
+    /// Stable node id within the parse.
     pub id: NodeId,
+    /// Source location.
     pub span: Span,
+    /// Struct name.
     pub name: String,
+    /// Field declarations.
     pub fields: Vec<VarDecl>,
 }
 
 /// Top-level items.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Item {
+    /// A function definition or extern declaration.
     Func(FuncDef),
+    /// A struct definition.
     Struct(StructDef),
+    /// Global variable declaration(s).
     Global(Vec<VarDecl>),
 }
 
 /// A parsed translation unit.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct Program {
+    /// Top-level items in source order.
     pub items: Vec<Item>,
     /// `#include` hints from the lexer (used by analysis A-1).
     pub includes: Vec<String>,
 }
 
 impl Program {
+    /// Iterate all functions (defined and extern).
     pub fn functions(&self) -> impl Iterator<Item = &FuncDef> {
         self.items.iter().filter_map(|i| match i {
             Item::Func(f) => Some(f),
@@ -389,6 +489,7 @@ impl Program {
         })
     }
 
+    /// Iterate all struct definitions.
     pub fn structs(&self) -> impl Iterator<Item = &StructDef> {
         self.items.iter().filter_map(|i| match i {
             Item::Struct(s) => Some(s),
@@ -396,6 +497,7 @@ impl Program {
         })
     }
 
+    /// Find a function by name.
     pub fn find_function(&self, name: &str) -> Option<&FuncDef> {
         self.functions().find(|f| f.name == name)
     }

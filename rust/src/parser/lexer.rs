@@ -11,10 +11,13 @@ use anyhow::{bail, Result};
 /// hints consumed by analysis pass A-1).
 #[derive(Debug, Clone)]
 pub struct LexOutput {
+    /// The lexed token stream (ends with `Tok::Eof`).
     pub tokens: Vec<Token>,
+    /// Headers named by `#include` lines, in order.
     pub includes: Vec<String>,
 }
 
+/// Streaming lexer over raw source bytes.
 pub struct Lexer<'a> {
     src: &'a [u8],
     pos: usize,
@@ -23,6 +26,7 @@ pub struct Lexer<'a> {
 }
 
 impl<'a> Lexer<'a> {
+    /// New lexer over a source string.
     pub fn new(src: &'a str) -> Self {
         Lexer { src: src.as_bytes(), pos: 0, line: 1, col: 1 }
     }

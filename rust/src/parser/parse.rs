@@ -9,6 +9,7 @@ use super::lexer::{lex, LexOutput};
 use super::token::{Span, Tok, Token};
 use anyhow::{bail, Result};
 
+/// Recursive-descent parser state over a lexed token stream.
 pub struct Parser {
     toks: Vec<Token>,
     pos: usize,
@@ -17,6 +18,7 @@ pub struct Parser {
 }
 
 impl Parser {
+    /// New parser over lexer output.
     pub fn new(out: LexOutput) -> Self {
         Parser { toks: out.tokens, pos: 0, next_id: 0, includes: out.includes }
     }
@@ -110,6 +112,7 @@ impl Parser {
 
     // ------------------------------------------------------------ program
 
+    /// Parse a whole translation unit.
     pub fn parse_program(&mut self) -> Result<Program> {
         let mut items = Vec::new();
         while self.peek() != &Tok::Eof {
@@ -245,6 +248,7 @@ impl Parser {
 
     // ------------------------------------------------------------ statements
 
+    /// Parse a `{ ... }` block.
     pub fn parse_block(&mut self) -> Result<Stmt> {
         let span = self.span();
         let id = self.id();
@@ -364,6 +368,7 @@ impl Parser {
 
     // ------------------------------------------------------------ expressions
 
+    /// Parse one expression (assignment precedence and below).
     pub fn parse_expr(&mut self) -> Result<Expr> {
         self.parse_assign()
     }

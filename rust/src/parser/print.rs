@@ -86,6 +86,7 @@ fn print_decls(out: &mut String, decls: &[VarDecl]) {
     out.push(';');
 }
 
+/// Print one statement at the given indent level.
 pub fn print_stmt(out: &mut String, s: &Stmt, level: usize) {
     match &s.kind {
         StmtKind::Block(stmts) => {

@@ -10,7 +10,9 @@ use std::fmt;
 /// Source location (1-based line / column) of a token or AST node.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct Span {
+    /// 1-based source line.
     pub line: u32,
+    /// 1-based source column.
     pub col: u32,
 }
 
@@ -23,7 +25,9 @@ impl fmt::Display for Span {
 /// A lexed token with its source location.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Token {
+    /// Token kind.
     pub kind: Tok,
+    /// Source location.
     pub span: Span,
 }
 
@@ -31,80 +35,148 @@ pub struct Token {
 #[derive(Debug, Clone, PartialEq)]
 pub enum Tok {
     // Literals / identifiers.
+    /// Identifier.
     Ident(String),
+    /// Integer literal.
     IntLit(i64),
+    /// Floating literal.
     FloatLit(f64),
+    /// String literal.
     StrLit(String),
+    /// Character literal.
     CharLit(char),
 
     // Keywords.
+    /// `int`.
     KwInt,
+    /// `float`.
     KwFloat,
+    /// `double`.
     KwDouble,
+    /// `char`.
     KwChar,
+    /// `long`.
     KwLong,
+    /// `void`.
     KwVoid,
+    /// `struct`.
     KwStruct,
+    /// `if`.
     KwIf,
+    /// `else`.
     KwElse,
+    /// `for`.
     KwFor,
+    /// `while`.
     KwWhile,
+    /// `do`.
     KwDo,
+    /// `return`.
     KwReturn,
+    /// `break`.
     KwBreak,
+    /// `continue`.
     KwContinue,
+    /// `const`.
     KwConst,
+    /// `static`.
     KwStatic,
+    /// `extern`.
     KwExtern,
+    /// `unsigned`.
     KwUnsigned,
+    /// `sizeof`.
     KwSizeof,
 
     // Punctuation.
+    /// `(`.
     LParen,
+    /// `)`.
     RParen,
+    /// `{`.
     LBrace,
+    /// `}`.
     RBrace,
+    /// `[`.
     LBracket,
+    /// `]`.
     RBracket,
+    /// `;`.
     Semi,
+    /// `,`.
     Comma,
+    /// `.`.
     Dot,
+    /// `->`.
     Arrow, // ->
+    /// `?`.
     Question,
+    /// `:`.
     Colon,
 
     // Operators.
+    /// `=`.
     Assign,       // =
+    /// `+=`.
     PlusAssign,   // +=
+    /// `-=`.
     MinusAssign,  // -=
+    /// `*=`.
     StarAssign,   // *=
+    /// `/=`.
     SlashAssign,  // /=
+    /// `%=`.
     PercentAssign,// %=
+    /// `+`.
     Plus,
+    /// `-`.
     Minus,
+    /// `*`.
     Star,
+    /// `/`.
     Slash,
+    /// `%`.
     Percent,
+    /// `++`.
     PlusPlus,
+    /// `--`.
     MinusMinus,
+    /// `==`.
     Eq,  // ==
+    /// `!=`.
     Ne,  // !=
+    /// `<`.
     Lt,
+    /// `>`.
     Gt,
+    /// `<=`.
     Le,
+    /// `>=`.
     Ge,
+    /// `&&`.
     AndAnd,
+    /// `||`.
     OrOr,
+    /// `!`.
     Not,
+    /// `&`.
     Amp,
+    /// `|`.
     Pipe,
+    /// `^`.
     Caret,
+    /// `~`.
     Tilde,
+    /// `<<`.
     Shl,
+    /// `>>`.
     Shr,
+    /// `<<=`.
     ShlAssign, // <<=
+    /// `>>=`.
     ShrAssign, // >>=
 
+    /// End of input.
     Eof,
 }
 

@@ -14,15 +14,22 @@ use anyhow::{bail, Result};
 /// A JSON value. Objects use BTreeMap for deterministic serialization.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (all JSON numbers are f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys -> canonical serialization).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// The string value, or an error for other kinds.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -30,6 +37,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, or an error for other kinds.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(v) => Ok(*v),
@@ -37,10 +45,12 @@ impl Json {
         }
     }
 
+    /// The numeric value as usize (truncating).
     pub fn as_usize(&self) -> Result<usize> {
         Ok(self.as_f64()? as usize)
     }
 
+    /// The array items, or an error for other kinds.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -48,6 +58,7 @@ impl Json {
         }
     }
 
+    /// The object map, or an error for other kinds.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -67,14 +78,17 @@ impl Json {
         self.as_obj().ok().and_then(|m| m.get(key)).filter(|v| !matches!(v, Json::Null))
     }
 
+    /// Build an object from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a string value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// Build a numeric value.
     pub fn num(v: impl Into<f64>) -> Json {
         Json::Num(v.into())
     }

@@ -47,7 +47,9 @@ impl TargetKind {
 /// (`"double[]"`, `"int"`, ...).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParamSpec {
+    /// Parameter name.
     pub name: String,
+    /// C type string (`"double[]"`, `"int"`, ...).
     pub ty: String,
     /// Optional parameters may be dropped without user confirmation (C-2).
     pub optional: bool,
@@ -56,11 +58,14 @@ pub struct ParamSpec {
 /// Declared interface of a function block (either side of a replacement).
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct Signature {
+    /// Declared parameters, in order.
     pub params: Vec<ParamSpec>,
+    /// Return type string.
     pub ret: String,
 }
 
 impl Signature {
+    /// Signature from `(name, type)` pairs (all required).
     pub fn new(params: &[(&str, &str)], ret: &str) -> Self {
         Signature {
             params: params
@@ -71,6 +76,7 @@ impl Signature {
         }
     }
 
+    /// Mark the named parameter optional (C-2 droppable).
     pub fn with_optional(mut self, name: &str) -> Self {
         if let Some(p) = self.params.iter_mut().find(|p| p.name == name) {
             p.optional = true;
@@ -78,8 +84,61 @@ impl Signature {
         self
     }
 
+    /// Number of non-optional parameters.
     pub fn required_count(&self) -> usize {
         self.params.iter().filter(|p| !p.optional).count()
+    }
+}
+
+/// Dependent-pass structure of a streaming FPGA IP core: how many times
+/// the fully pipelined datapath must stream the working set, as a function
+/// of the block size `n`.
+///
+/// The paper treats IP cores as *existing know-how* held in the DB
+/// (§4.1), so their pipelining structure is DB-registered alongside the
+/// OpenCL text rather than inferred from it. The backend-arbitration
+/// stage ([`crate::coordinator::backend`]) multiplies the streamed element
+/// count by `passes(n)` to model execution time at `fmax`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PassModel {
+    /// One pass: a pure elementwise map over the working set.
+    Unit,
+    /// `log2(n)` dependent passes (e.g. FFT butterfly stages).
+    Log2N,
+    /// `n / k` dependent wavefronts (e.g. LU pivot steps through `k`-way
+    /// banked rows).
+    NOver(u64),
+}
+
+impl PassModel {
+    /// Number of dependent passes over the working set at block size `n`.
+    pub fn passes(self, n: u64) -> u64 {
+        match self {
+            PassModel::Unit => 1,
+            PassModel::Log2N => (63 - n.max(2).leading_zeros() as u64).max(1),
+            PassModel::NOver(k) => (n / k.max(1)).max(1),
+        }
+    }
+
+    fn as_str(self) -> String {
+        match self {
+            PassModel::Unit => "unit".to_string(),
+            PassModel::Log2N => "log2n".to_string(),
+            PassModel::NOver(k) => format!("n/{k}"),
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "unit" => PassModel::Unit,
+            "log2n" => PassModel::Log2N,
+            other => match other.strip_prefix("n/") {
+                Some(k) => PassModel::NOver(
+                    k.parse().with_context(|| format!("bad pass model divisor {k:?}"))?,
+                ),
+                None => anyhow::bail!("unknown pass model {other:?}"),
+            },
+        })
     }
 }
 
@@ -88,6 +147,7 @@ impl Signature {
 pub struct Replacement {
     /// Human name, e.g. "cuFFT 2-D C2C (analog)".
     pub name: String,
+    /// GPU library or FPGA IP core.
     pub kind: TargetKind,
     /// Artifact base name (runtime appends `_n{size}`), e.g. "fft2d".
     pub artifact: String,
@@ -98,6 +158,10 @@ pub struct Replacement {
     pub usage: String,
     /// FPGA IP cores carry their OpenCL kernel code in the DB (paper C-1).
     pub opencl_code: Option<String>,
+    /// FPGA IP cores also register their dependent-pass structure (how the
+    /// streaming pipeline covers the working set); `None` for GPU records.
+    pub pass_model: Option<PassModel>,
+    /// Human-readable description of the implementation.
     pub description: String,
 }
 
@@ -106,9 +170,11 @@ pub struct Replacement {
 pub struct LibraryRecord {
     /// Primary callee-name key.
     pub library: String,
+    /// Alternative callee names that match this record.
     pub aliases: Vec<String>,
     /// Interface of the *CPU* library being replaced.
     pub signature: Signature,
+    /// The registered accelerator replacement.
     pub replacement: Replacement,
     /// CPU implementation source of the library (Numerical Recipes is
     /// distributed as source; the verification environment "links" this
@@ -117,6 +183,7 @@ pub struct LibraryRecord {
 }
 
 impl LibraryRecord {
+    /// Does `callee` name this library (primary name or alias)?
     pub fn matches(&self, callee: &str) -> bool {
         self.library == callee || self.aliases.iter().any(|a| a == callee)
     }
@@ -131,13 +198,16 @@ pub struct ComparisonRecord {
     pub code: String,
     /// Interface the matched user function is expected to have.
     pub signature: Signature,
+    /// The registered accelerator replacement.
     pub replacement: Replacement,
 }
 
 /// The full code-pattern DB.
 #[derive(Debug, Clone, Default)]
 pub struct PatternDb {
+    /// B-1 records: replaceable libraries by name.
     pub libraries: Vec<LibraryRecord>,
+    /// B-2 records: comparison code for similarity detection.
     pub comparisons: Vec<ComparisonRecord>,
     /// Known external library names (A-1 list). Superset of `libraries`
     /// keys: includes libraries we know about but cannot accelerate.
@@ -173,6 +243,7 @@ impl PatternDb {
             ),
             usage: "inout:re:n*n;inout:im:n*n;size:n".into(),
             opencl_code: None,
+            pass_model: None,
             description: "four-step FFT on MXU-shaped matmul stages; replaces \
                           NR four1-based 2-D FFT"
                 .into(),
@@ -184,6 +255,7 @@ impl PatternDb {
             signature: Signature::new(&[("a", "double[]"), ("n", "int")], "void"),
             usage: "inout:a:n*n;size:n".into(),
             opencl_code: None,
+            pass_model: None,
             description: "blocked right-looking no-pivot LU; replaces NR ludcmp".into(),
         };
         let lusolve_replacement = Replacement {
@@ -196,6 +268,7 @@ impl PatternDb {
             ),
             usage: "in:a:n*n;inout:b:n*nrhs;size:n".into(),
             opencl_code: None,
+            pass_model: None,
             description: "triangular solve from packed LU".into(),
         };
         let mm_replacement = Replacement {
@@ -208,6 +281,7 @@ impl PatternDb {
             ),
             usage: "in:a:n*n;in:b:n*n;out:c:n*n;size:n".into(),
             opencl_code: None,
+            pass_model: None,
             description: "MXU-tiled dense matmul; replaces triple-loop GEMM".into(),
         };
         // FPGA twins of the same blocks: IP cores with OpenCL code in the DB
@@ -219,6 +293,7 @@ impl PatternDb {
             signature: fft_replacement.signature.clone(),
             usage: fft_replacement.usage.clone(),
             opencl_code: Some(FFT_OPENCL.into()),
+            pass_model: Some(PassModel::Log2N),
             description: "streaming radix-2 pipeline, II=1 butterfly stages".into(),
         };
         let lu_fpga = Replacement {
@@ -228,6 +303,7 @@ impl PatternDb {
             signature: lu_replacement.signature.clone(),
             usage: lu_replacement.usage.clone(),
             opencl_code: Some(LU_OPENCL.into()),
+            pass_model: Some(PassModel::NOver(4)),
             description: "row-streaming LU with banked local memory".into(),
         };
 
@@ -311,6 +387,7 @@ impl PatternDb {
                         ),
                         usage: "in:a:n*n;in:b:n*n;out:c:n*n;size:n".into(),
                         opencl_code: None,
+                        pass_model: None,
                         description: "MXU-tiled dense matmul".into(),
                     },
                 },
@@ -336,6 +413,7 @@ impl PatternDb {
 
     // ------------------------------------------------------- persistence
 
+    /// Serialize the DB to its canonical JSON value.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("format", Json::str("fbo-patterndb-v1")),
@@ -394,6 +472,7 @@ impl PatternDb {
         ])
     }
 
+    /// Deserialize a DB from JSON (inverse of [`PatternDb::to_json`]).
     pub fn from_json(v: &Json) -> Result<Self> {
         let mut db = PatternDb::default();
         for s in v.get("external_library_list")?.as_arr()? {
@@ -437,11 +516,13 @@ impl PatternDb {
         Ok(db)
     }
 
+    /// Write the DB as canonical JSON to `path`.
     pub fn save(&self, path: &Path) -> Result<()> {
         std::fs::write(path, json::to_string_pretty(&self.to_json()))
             .with_context(|| format!("writing pattern DB to {}", path.display()))
     }
 
+    /// Load a DB from a JSON file.
     pub fn load(path: &Path) -> Result<Self> {
         let src = std::fs::read_to_string(path)
             .with_context(|| format!("reading pattern DB from {}", path.display()))?;
@@ -504,6 +585,10 @@ pub fn repl_to_json(r: &Replacement) -> Json {
             "opencl_code",
             r.opencl_code.as_ref().map(Json::str).unwrap_or(Json::Null),
         ),
+        (
+            "pass_model",
+            r.pass_model.map(|m| Json::str(m.as_str())).unwrap_or(Json::Null),
+        ),
         ("description", Json::str(&r.description)),
     ])
 }
@@ -517,6 +602,7 @@ pub fn repl_from_json(v: &Json) -> Result<Replacement> {
         signature: sig_from_json(v.get("signature")?)?,
         usage: v.get("usage")?.as_str()?.to_string(),
         opencl_code: v.opt("opencl_code").map(|c| Ok::<_, anyhow::Error>(c.as_str()?.to_string())).transpose()?,
+        pass_model: v.opt("pass_model").map(|m| PassModel::parse(m.as_str()?)).transpose()?,
         description: v.get("description")?.as_str()?.to_string(),
     })
 }
@@ -601,9 +687,26 @@ mod tests {
         let core = db.find_ip_core("fft2d").unwrap();
         assert_eq!(core.kind, TargetKind::FpgaIpCore);
         assert!(core.opencl_code.is_some());
-        // Round-trips through JSON.
+        assert_eq!(core.pass_model, Some(PassModel::Log2N));
+        // Round-trips through JSON (including the pass model).
         let back = PatternDb::from_json(&db.to_json()).unwrap();
         assert_eq!(back.fpga_ip_cores.len(), 2);
+        assert_eq!(back.fpga_ip_cores[0].pass_model, db.fpga_ip_cores[0].pass_model);
+        assert_eq!(back.fpga_ip_cores[1].pass_model, Some(PassModel::NOver(4)));
+    }
+
+    #[test]
+    fn pass_model_counts_and_round_trips() {
+        assert_eq!(PassModel::Unit.passes(1024), 1);
+        assert_eq!(PassModel::Log2N.passes(64), 6);
+        assert_eq!(PassModel::Log2N.passes(2), 1);
+        assert_eq!(PassModel::NOver(4).passes(64), 16);
+        assert_eq!(PassModel::NOver(0).passes(64), 64, "zero divisor is clamped");
+        for m in [PassModel::Unit, PassModel::Log2N, PassModel::NOver(8)] {
+            assert_eq!(PassModel::parse(&m.as_str()).unwrap(), m);
+        }
+        assert!(PassModel::parse("n/x").is_err());
+        assert!(PassModel::parse("cubic").is_err());
     }
 
     #[test]

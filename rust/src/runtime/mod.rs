@@ -20,10 +20,12 @@ use crate::patterndb::json::{self, Json};
 /// boundary; complex data travels as split re/im planes).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorSpec {
+    /// Dimensions, outermost first.
     pub shape: Vec<usize>,
 }
 
 impl TensorSpec {
+    /// Total element count.
     pub fn elems(&self) -> usize {
         self.shape.iter().product()
     }
@@ -32,15 +34,21 @@ impl TensorSpec {
 /// Manifest entry for one artifact.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// Artifact name (`{block}_n{size}`).
     pub name: String,
+    /// HLO text file name within the artifact dir.
     pub file: String,
+    /// Human-readable description from the manifest.
     pub description: String,
+    /// Input tensor shapes, in dispatch order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor shapes, in result order.
     pub outputs: Vec<TensorSpec>,
 }
 
 /// A compiled, executable artifact.
 pub struct LoadedArtifact {
+    /// Manifest entry the artifact was compiled from.
     pub meta: ArtifactMeta,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -48,10 +56,19 @@ pub struct LoadedArtifact {
 /// Execution statistics (dispatches + bytes through the PJRT boundary).
 #[derive(Debug, Default, Clone)]
 pub struct EngineStats {
+    /// Artifact dispatches executed.
     pub executions: u64,
+    /// Bytes staged host -> device across all dispatches.
     pub bytes_in: u64,
+    /// Bytes read device -> host across all dispatches.
     pub bytes_out: u64,
+    /// Artifacts compiled (first dispatch of each; cached after).
     pub compiles: u64,
+    /// Wall-clock seconds spent inside [`Engine::execute`] after the
+    /// artifact lookup: host staging + device execution + readback. This is
+    /// the measured "GPU time" of the PJRT-as-GPU substitution; the
+    /// backend-arbitration stage compares FPGA estimates against it.
+    pub exec_secs: f64,
 }
 
 /// The runtime engine: one PJRT CPU client + lazily compiled artifacts.
@@ -60,6 +77,7 @@ pub struct Engine {
     dir: PathBuf,
     metas: HashMap<String, ArtifactMeta>,
     compiled: RefCell<HashMap<String, Rc<LoadedArtifact>>>,
+    /// Execution statistics (dispatches, bytes, measured seconds).
     pub stats: RefCell<EngineStats>,
 }
 
@@ -109,10 +127,12 @@ impl Engine {
         v
     }
 
+    /// Is an artifact with this name in the manifest?
     pub fn has_artifact(&self, name: &str) -> bool {
         self.metas.contains_key(name)
     }
 
+    /// Manifest entry for an artifact, if present.
     pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
         self.metas.get(name)
     }
@@ -147,6 +167,8 @@ impl Engine {
     /// manifest. Shapes are validated against the manifest specs.
     pub fn execute(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         let art = self.artifact(name)?;
+        // Timed from here (compile excluded): staging + execute + readback.
+        let t0 = std::time::Instant::now();
         if inputs.len() != art.meta.inputs.len() {
             bail!(
                 "{name}: expected {} inputs, got {}",
@@ -202,6 +224,7 @@ impl Engine {
             self.stats.borrow_mut().bytes_out += (v.len() * 4) as u64;
             out.push(v);
         }
+        self.stats.borrow_mut().exec_secs += t0.elapsed().as_secs_f64();
         Ok(out)
     }
 
@@ -328,5 +351,6 @@ mod tests {
         assert_eq!(st.executions, 2);
         assert_eq!(st.compiles, 1); // compiled once, cached after
         assert!(st.bytes_in > 0 && st.bytes_out > 0);
+        assert!(st.exec_secs > 0.0, "dispatch wall-clock must accumulate");
     }
 }

@@ -12,11 +12,12 @@
 //! * **entry point** — the same source offloaded from a different entry is
 //!   a different decision;
 //! * **decision fingerprint** — the service digests the pattern DB, the
-//!   AOT artifact contents, and its policy/verification settings into
-//!   this component (see `service::pool`), so any DB change (new
-//!   replacement, edited usage recipe), regenerated artifacts, or config
-//!   change (`--policy`, `--reps`) invalidates every previously verified
-//!   decision.
+//!   AOT artifact contents, its policy/verification settings, and the
+//!   backend-arbitration inputs (`--target` policy + FPGA device model)
+//!   into this component (see `service::pool`), so any DB change (new
+//!   replacement, edited usage recipe), regenerated artifacts, config
+//!   change (`--policy`, `--reps`), backend retarget, or device-model
+//!   change invalidates every previously verified decision.
 //!
 //! Values are canonical [`crate::coordinator::report_json`] strings, held
 //! in memory and (optionally) persisted one JSON file per entry so
@@ -124,6 +125,7 @@ impl DecisionCache {
         self.entries.lock().expect("decision cache lock").len()
     }
 
+    /// True when no decisions are cached.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

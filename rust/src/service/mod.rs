@@ -10,8 +10,9 @@
 //!
 //! * [`cache`] — a content-addressed **decision cache** keyed by
 //!   (source AST hash, entry point, decision fingerprint), where the
-//!   fingerprint digests the pattern DB, the AOT artifact contents, and
-//!   the policy/verification settings the pipeline runs under. A hit
+//!   fingerprint digests the pattern DB, the AOT artifact contents, the
+//!   policy/verification settings the pipeline runs under, and the
+//!   backend target + FPGA device model arbitration decides against. A hit
 //!   returns the previously
 //!   verified [`crate::coordinator::OffloadReport`] byte-identically,
 //!   with no pattern search and no measurement. Entries persist as JSON

@@ -24,7 +24,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::{report_json, Coordinator, OffloadReport, VerifyConfig};
+use crate::coordinator::{report_json, BackendPolicy, Coordinator, OffloadReport, VerifyConfig};
+use crate::fpga;
 use crate::metrics;
 use crate::patterndb::json::fnv1a64;
 use crate::patterndb::PatternDb;
@@ -45,16 +46,27 @@ pub struct ServiceConfig {
     /// Worker-thread count (one coordinator + PJRT engine each).
     pub workers: usize,
     /// Pattern DB shared by all workers; digested (together with `policy`,
-    /// `verify`, `similarity_threshold`, and the artifact contents) into
-    /// the cache key's decision fingerprint.
+    /// `verify`, `similarity_threshold`, `backend_policy`, `device`, and
+    /// the artifact contents) into the cache key's decision fingerprint.
     pub db: PatternDb,
+    /// Interface-reconciliation policy (C-1/C-2 confirmations).
     pub policy: InterfacePolicy,
+    /// Verification-measurement settings (Step 3).
     pub verify: VerifyConfig,
     /// Deckard-style similarity threshold for copied-code discovery.
     pub similarity_threshold: f64,
+    /// Backend-arbitration policy (CLI `--target`): part of the decision
+    /// fingerprint, so a `--target fpga` decision never replays for a
+    /// `--target gpu` request.
+    pub backend_policy: BackendPolicy,
+    /// FPGA device model arbitration runs against: also fingerprinted, so
+    /// retargeting the deployment (different card, different fmax)
+    /// invalidates every previously verified decision.
+    pub device: fpga::Device,
 }
 
 impl ServiceConfig {
+    /// Defaults over an artifact directory (2 workers, persistent cache).
     pub fn new(artifacts: impl Into<PathBuf>) -> Self {
         ServiceConfig {
             artifacts: artifacts.into(),
@@ -65,6 +77,8 @@ impl ServiceConfig {
             policy: InterfacePolicy::AutoApprove,
             verify: VerifyConfig::default(),
             similarity_threshold: crate::similarity::DEFAULT_THRESHOLD,
+            backend_policy: BackendPolicy::Auto,
+            device: fpga::ARRIA10_GX,
         }
     }
 
@@ -80,9 +94,13 @@ impl ServiceConfig {
 
 /// One finished offload job.
 pub struct CompletedJob {
+    /// Job id (unique within one service).
     pub id: u64,
+    /// Content-addressed key the decision is cached under.
     pub key: CacheKey,
+    /// Entry-point function of the job.
     pub entry: String,
+    /// The decoded offload decision.
     pub report: OffloadReport,
     /// Canonical serialized report — byte-identical whether this job ran
     /// the pipeline or replayed a cached decision (shared with the cache,
@@ -107,6 +125,7 @@ pub struct JobHandle {
 }
 
 impl JobHandle {
+    /// Job id this handle awaits.
     pub fn id(&self) -> u64 {
         self.id
     }
@@ -189,13 +208,16 @@ struct Shared {
 }
 
 /// Digest of the decision *environment*: pattern-DB content, the AOT
-/// artifacts verification measures against, and the interface policy and
-/// verification settings the pipeline runs under. Any of these changes
-/// the decision a run would produce, so any of them changing must miss
-/// the cache — a report verified under `--policy reject` must never be
-/// replayed for a `--policy approve` request, and regenerated artifacts
+/// artifacts verification measures against, the interface policy and
+/// verification settings the pipeline runs under, and the backend policy
+/// + FPGA device model the Step-3b arbitration targets. Any of these
+/// changes the decision a run would produce, so any of them changing must
+/// miss the cache — a report verified under `--policy reject` must never
+/// be replayed for a `--policy approve` request, regenerated artifacts
 /// (`make artifacts` after a kernel edit) must re-verify rather than
-/// replay measurements taken against the old HLO.
+/// replay measurements taken against the old HLO, and a decision
+/// arbitrated for one FPGA card must re-arbitrate when the deployment
+/// retargets another.
 fn decision_fingerprint(cfg: &ServiceConfig) -> String {
     let policy = match &cfg.policy {
         InterfacePolicy::AutoApprove => "approve".to_string(),
@@ -203,7 +225,8 @@ fn decision_fingerprint(cfg: &ServiceConfig) -> String {
         InterfacePolicy::Scripted(answers) => format!("scripted:{answers:?}"),
     };
     let blob = format!(
-        "{}|artifacts:{}|policy:{policy}|reps:{}|warmup:{}|fuel:{}|tol:{}|sim:{}",
+        "{}|artifacts:{}|policy:{policy}|reps:{}|warmup:{}|fuel:{}|tol:{}|sim:{}\
+         |target:{}|device:{}/{}/{}/{}/{}",
         cfg.db.fingerprint(),
         artifacts_fingerprint(&cfg.artifacts),
         cfg.verify.reps,
@@ -211,6 +234,12 @@ fn decision_fingerprint(cfg: &ServiceConfig) -> String {
         cfg.verify.fuel,
         cfg.verify.tolerance,
         cfg.similarity_threshold,
+        cfg.backend_policy.as_str(),
+        cfg.device.name,
+        cfg.device.alms,
+        cfg.device.dsps,
+        cfg.device.m20ks,
+        cfg.device.fmax,
     );
     format!("{:016x}", fnv1a64(blob.as_bytes()))
 }
@@ -299,13 +328,21 @@ impl Shared {
 /// a sliding window of the most recent 4096 completed jobs.
 #[derive(Debug, Clone)]
 pub struct StatsSnapshot {
+    /// Jobs accepted.
     pub submitted: u64,
+    /// Jobs completed successfully.
     pub completed: u64,
+    /// Jobs failed (bad source, missing entry, pipeline error).
     pub failed: u64,
+    /// Jobs answered from the decision cache.
     pub cache_hits: u64,
+    /// Jobs that ran the full pipeline.
     pub cache_misses: u64,
+    /// Decisions currently cached.
     pub cache_entries: u64,
+    /// Median completion latency over the sliding window.
     pub latency_p50: Option<Duration>,
+    /// 95th-percentile completion latency over the sliding window.
     pub latency_p95: Option<Duration>,
 }
 
@@ -501,6 +538,8 @@ fn worker_main(
             c.policy = cfg.policy;
             c.verify = cfg.verify;
             c.similarity_threshold = cfg.similarity_threshold;
+            c.backend_policy = cfg.backend_policy;
+            c.device = cfg.device;
             let _ = ready.send(Ok(()));
             c
         }
@@ -563,6 +602,22 @@ mod tests {
         let mut explicit = cfg;
         explicit.cache_dir = Some(PathBuf::from("/tmp/x"));
         assert_eq!(explicit.effective_cache_dir().unwrap(), PathBuf::from("/tmp/x"));
+    }
+
+    #[test]
+    fn fingerprint_tracks_backend_policy_and_device() {
+        let cfg = ServiceConfig::new("some/artifacts");
+        let base = decision_fingerprint(&cfg);
+
+        let mut retargeted = cfg.clone();
+        retargeted.backend_policy = BackendPolicy::Fpga;
+        assert_ne!(decision_fingerprint(&retargeted), base, "--target must invalidate");
+
+        let mut redeviced = cfg.clone();
+        redeviced.device = fpga::Device { fmax: 300.0e6, ..fpga::ARRIA10_GX };
+        assert_ne!(decision_fingerprint(&redeviced), base, "device model must invalidate");
+
+        assert_eq!(decision_fingerprint(&cfg.clone()), base, "must be deterministic");
     }
 
     #[test]

@@ -28,6 +28,7 @@ pub const DIM: usize = 29;
 /// Occurrence-count characteristic vector of an AST subtree.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct CharVector {
+    /// Occurrence counts, laid out per the internal `idx` map.
     pub counts: [u32; DIM],
 }
 
@@ -159,16 +160,19 @@ impl CharVector {
         self.counts[slot] += 1;
     }
 
+    /// Element-wise accumulate another vector.
     pub fn add(&mut self, other: &Self) {
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
             *a += b;
         }
     }
 
+    /// Euclidean norm.
     pub fn norm(&self) -> f64 {
         self.counts.iter().map(|&c| (c as f64) * (c as f64)).sum::<f64>().sqrt()
     }
 
+    /// Total node count (vector mass).
     pub fn total(&self) -> u32 {
         self.counts.iter().sum()
     }
@@ -201,8 +205,11 @@ pub fn similarity(a: &CharVector, b: &CharVector) -> f64 {
 /// A similarity hit: user function ↔ DB comparison record.
 #[derive(Debug, Clone)]
 pub struct Match {
+    /// Matched user-defined function name.
     pub function: String,
+    /// DB block label that matched.
     pub block: String,
+    /// Similarity score in [0, 1].
     pub score: f64,
     /// Index into `PatternDb::comparisons`.
     pub record: usize,
@@ -210,6 +217,7 @@ pub struct Match {
 
 /// Similarity detector bound to a pattern DB.
 pub struct Detector {
+    /// Minimum score for a match.
     pub threshold: f64,
     /// (record index, block, per-function vectors, merged vector).
     records: Vec<(usize, String, Vec<CharVector>, CharVector)>,
@@ -219,6 +227,7 @@ pub struct Detector {
 pub const DEFAULT_THRESHOLD: f64 = 0.85;
 
 impl Detector {
+    /// Build a detector from the DB's comparison records.
     pub fn new(db: &PatternDb, threshold: f64) -> Result<Self> {
         let mut records = Vec::new();
         for (i, rec) in db.comparisons.iter().enumerate() {

@@ -28,15 +28,20 @@ use crate::runtime::Engine;
 /// Buffer transfer mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
+    /// Host -> device only.
     In,
+    /// Host -> device and back.
     InOut,
+    /// Device -> host only.
     Out,
 }
 
 /// One buffer binding in a usage recipe.
 #[derive(Debug, Clone)]
 pub struct BufSpec {
+    /// Transfer direction.
     pub mode: Mode,
+    /// Signature parameter the buffer binds to.
     pub param: String,
     /// Length expression: product of scalar-param names / integer literals.
     pub len_factors: Vec<String>,
@@ -45,11 +50,14 @@ pub struct BufSpec {
 /// Parsed usage recipe.
 #[derive(Debug, Clone)]
 pub struct UsageSpec {
+    /// Buffer bindings, in artifact input order.
     pub bufs: Vec<BufSpec>,
+    /// Scalar parameter holding the problem size `n`.
     pub size_param: String,
 }
 
 impl UsageSpec {
+    /// Parse a `mode:param:len;...;size:param` recipe string.
     pub fn parse(usage: &str) -> Result<Self> {
         let mut bufs = Vec::new();
         let mut size_param = None;

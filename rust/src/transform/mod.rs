@@ -71,6 +71,7 @@ pub enum Reconciliation {
 }
 
 impl Reconciliation {
+    /// True when the reconciliation did not reject the block.
     pub fn accepted(&self) -> bool {
         !matches!(self, Reconciliation::Rejected(_))
     }
@@ -206,7 +207,9 @@ fn type_string(ty: &Ty, array_dims: usize) -> String {
 pub struct PlannedReplacement {
     /// Where the block lives.
     pub site: Site,
+    /// The accelerator implementation to install.
     pub replacement: Replacement,
+    /// How the interfaces were reconciled.
     pub reconciliation: Reconciliation,
 }
 
@@ -220,6 +223,7 @@ pub enum Site {
 }
 
 impl Site {
+    /// Short label (`call:{name}` / `func:{name}`) for reports.
     pub fn label(&self) -> String {
         match self {
             Site::LibraryCall { callee } => format!("call:{callee}"),

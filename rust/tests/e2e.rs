@@ -96,10 +96,17 @@ fn full_environment_adaptation_flow() {
     assert!(plan.instances >= 1);
 
     let locations = vec![
-        flow::Location { name: "dc".into(), gpus: 16, fpgas: 8, cost_per_hour: 0.5, latency_ms: 10.0 },
+        flow::Location { name: "dc".into(), gpus: 16, fpgas: 8, cost_per_hour: 0.5, fpga_cost_per_hour: 0.2, latency_ms: 10.0 },
     ];
     let placement = flow::plan_placement(&plan, &req, &locations).unwrap();
     assert_eq!(placement.location, "dc");
+
+    // Step 5 with backend arbitration: the report's per-backend times are
+    // consumable directly, and at minimum the GPU path is deployable.
+    let times = flow::BackendTimes::from_report(&report);
+    assert!(times.gpu_secs.is_some(), "winning pattern must offload something");
+    let backend_placement = flow::plan_backend_placement(&times, &req, &locations).unwrap();
+    assert_eq!(backend_placement.location, "dc");
 }
 
 // ---------------------------------------------------------------- policies
