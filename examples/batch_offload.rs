@@ -64,7 +64,10 @@ fn main() -> anyhow::Result<()> {
     for (name, result) in names.iter().zip(service.run_batch(&batch)) {
         let done = result?;
         assert!(done.from_cache, "{name} must be served from the persisted cache");
-        println!("  {name:<22} served from disk cache in {}", fbo::metrics::fmt_duration(done.wall));
+        println!(
+            "  {name:<22} served from disk cache in {}",
+            fbo::metrics::fmt_duration(done.wall)
+        );
     }
     println!("  {}", service.stats().render());
 

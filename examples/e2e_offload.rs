@@ -44,8 +44,8 @@ fn main() -> anyhow::Result<()> {
     for (label, src) in &cases {
         eprintln!("== {label} (n={n}) ==");
 
-        // Function-block pipeline (Steps 1-3).
-        let report = coordinator.offload(src, "main")?;
+        // Function-block pipeline (Steps 1-3), through the staged API.
+        let report = coordinator.request(src, "main").run()?;
         eprint!("{}", coordinator.render_report(&report));
 
         // GA loop-offload baseline on the same (linked) program.

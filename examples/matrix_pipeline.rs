@@ -82,9 +82,30 @@ fn main() -> anyhow::Result<()> {
         plan.instances, plan.rps_per_instance, req.target_rps
     );
     let locations = vec![
-        flow::Location { name: "edge-gw".into(), gpus: 1, fpgas: 1, cost_per_hour: 0.9, fpga_cost_per_hour: 0.35, latency_ms: 3.0 },
-        flow::Location { name: "regional-dc".into(), gpus: 8, fpgas: 4, cost_per_hour: 0.5, fpga_cost_per_hour: 0.2, latency_ms: 12.0 },
-        flow::Location { name: "central-cloud".into(), gpus: 64, fpgas: 32, cost_per_hour: 0.3, fpga_cost_per_hour: 0.12, latency_ms: 45.0 },
+        flow::Location {
+            name: "edge-gw".into(),
+            gpus: 1,
+            fpgas: 1,
+            cost_per_hour: 0.9,
+            fpga_cost_per_hour: 0.35,
+            latency_ms: 3.0,
+        },
+        flow::Location {
+            name: "regional-dc".into(),
+            gpus: 8,
+            fpgas: 4,
+            cost_per_hour: 0.5,
+            fpga_cost_per_hour: 0.2,
+            latency_ms: 12.0,
+        },
+        flow::Location {
+            name: "central-cloud".into(),
+            gpus: 64,
+            fpgas: 32,
+            cost_per_hour: 0.3,
+            fpga_cost_per_hour: 0.12,
+            latency_ms: 45.0,
+        },
     ];
     let placement = flow::plan_placement(&plan, &req, &locations)?;
     println!("Step 5: deploy at {} (${:.0}/month)", placement.location, placement.monthly_cost);

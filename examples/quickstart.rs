@@ -13,10 +13,12 @@ fn main() -> anyhow::Result<()> {
     // A CPU application that calls the NR-style `matmul` library.
     let source = apps::matmul_app(64);
 
-    // Steps 1-3: analyze, match blocks against the DB, reconcile
-    // interfaces, and measure every offload pattern in the verification
-    // environment. The fastest correct pattern wins.
-    let report = coordinator.offload(&source, "main")?;
+    // Build a request and run every stage: analyze, match blocks against
+    // the DB, reconcile interfaces, measure every offload pattern in the
+    // verification environment, arbitrate the backend. The fastest
+    // correct pattern wins. (See examples/staged_pipeline.rs for driving
+    // the stages one by one.)
+    let report = coordinator.request(&source, "main").run()?;
 
     print!("{}", coordinator.render_report(&report));
     println!("--- winning transformed source ---");

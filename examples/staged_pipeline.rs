@@ -1,0 +1,73 @@
+//! Inspect-and-resume through the staged pipeline API.
+//!
+//! The expensive part of the paper's flow is Step 3 — every candidate
+//! pattern is actually measured in the verification environment. The
+//! staged API makes that cost resumable: run the pipeline through
+//! [`Verified`] once, keep the artifact (a plain serializable value),
+//! then arbitrate it under different backend policies without ever
+//! re-measuring.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example staged_pipeline
+//! ```
+
+use fbo::coordinator::{apps, BackendPolicy, Coordinator, Verified};
+
+fn main() -> anyhow::Result<()> {
+    let mut coordinator = Coordinator::open(std::path::Path::new("artifacts"))?;
+    coordinator.verify.reps = 1;
+    let source = apps::lu_app_lib(64);
+
+    // Stages 1-3: parse -> discover -> reconcile -> verify. Each artifact
+    // is a value; inspect whatever you need along the way.
+    let request = coordinator.request(&source, "main");
+    let parsed = request.parse()?;
+    let discovered = parsed.discover(&request)?;
+    println!(
+        "discovered {} candidate block(s) from {} external callee(s)",
+        discovered.candidates.len(),
+        discovered.external_callees.len()
+    );
+    let verified = discovered.reconcile(&request)?.verify(&request)?;
+    println!(
+        "verified: {} pattern(s) measured, best speedup {:.1} (wall {:?})",
+        verified.outcome.tried.len(),
+        verified.outcome.best_speedup,
+        verified.wall
+    );
+
+    // The Verified artifact serializes — ship it to another process, put
+    // it in a cache, or just keep the string around...
+    let saved = verified.to_json_string();
+
+    // ...then resume it under `--target gpu`: arbitration re-runs against
+    // the *same* measurements, no re-verification.
+    let gpu_request = coordinator.request(&source, "main").with_target(BackendPolicy::Gpu);
+    let gpu = Verified::from_json_str(&saved)?.arbitrate(&gpu_request)?;
+    println!(
+        "--target gpu  -> backend {} ({:.2} simulated toolchain hours)",
+        gpu.arbitration.backend.as_str(),
+        gpu.arbitration.simulated_hours
+    );
+
+    // Mutate the backend policy and resume the same artifact again: a
+    // different Arbitrated outcome from identical measurements.
+    let fpga_request = coordinator.request(&source, "main").with_target(BackendPolicy::Fpga);
+    let fpga = Verified::from_json_str(&saved)?.arbitrate(&fpga_request)?;
+    println!(
+        "--target fpga -> backend {} ({:.2} simulated toolchain hours)",
+        fpga.arbitration.backend.as_str(),
+        fpga.arbitration.simulated_hours
+    );
+
+    assert_ne!(
+        gpu.arbitration.backend, fpga.arbitration.backend,
+        "the resumed artifact must arbitrate differently under a different target"
+    );
+    assert_eq!(
+        gpu.verified.outcome.best_speedup, fpga.verified.outcome.best_speedup,
+        "both decisions rest on the same cached measurements"
+    );
+    println!("same measurements, two deployments - verification ran once.");
+    Ok(())
+}

@@ -252,7 +252,8 @@ fn ablation_fpga_narrowing() -> anyhow::Result<()> {
         }
     }
 
-    let mut t = Table::new(&["strategy", "compiles", "simulated toolchain-hours", "best exec (model)"]);
+    let mut t =
+        Table::new(&["strategy", "compiles", "simulated toolchain-hours", "best exec (model)"]);
     t.row(&[
         "narrowed (paper)".into(),
         picked.len().to_string(),

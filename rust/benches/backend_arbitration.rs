@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     let mut chosen = Vec::new();
 
     for (name, src) in apps::all(n) {
-        let report = c.offload(&src, "main")?;
+        let report = c.request(&src, "main").run()?;
         let arb = &report.arbitration;
         // The app's accelerated block (eval apps have exactly one winner).
         let block = arb

@@ -106,7 +106,10 @@ fn main() -> anyhow::Result<()> {
             re.set(i, (0.02 * i as f64).sin()).unwrap();
         }
         let t0 = Instant::now();
-        interp.run("fft2d", &[Value::Arr(re.clone()), Value::Arr(im.clone()), Value::Int(n as i64)])?;
+        interp.run(
+            "fft2d",
+            &[Value::Arr(re.clone()), Value::Arr(im.clone()), Value::Int(n as i64)],
+        )?;
         let cpu = t0.elapsed();
 
         let art = format!("fft2d_n{n}");

@@ -7,6 +7,9 @@
 //!
 //! Also checks the cache contract: a warm read must be **byte-identical**
 //! to the serialization produced when the decision was first computed.
+//! The stats line includes the per-stage latency means collected through
+//! the pipeline's `StageObserver` hook, so the cold pass shows where the
+//! verification time actually goes.
 //!
 //! Run: `cargo bench --bench service_throughput`
 //! Records: `BENCH_service.json` at the repo root.
@@ -56,6 +59,7 @@ fn main() -> anyhow::Result<()> {
         .collect::<Result<Vec<_>, _>>()?;
     let cold_wall = t0.elapsed();
     let cold_stats = service.stats();
+    println!("cold pass: {}", cold_stats.render());
 
     let t0 = Instant::now();
     let warm: Vec<_> = service

@@ -232,19 +232,24 @@ mod tests {
 
     #[test]
     fn classify_elementwise() {
-        let l = first_loop("void f(double a[], double b[]) { for (int i = 0; i < 10; i++) a[i] = 2.0 * b[i]; }");
+        let l = first_loop(
+            "void f(double a[], double b[]) { for (int i = 0; i < 10; i++) a[i] = 2.0 * b[i]; }",
+        );
         assert_eq!(classify_loop(&l), LoopClass::Elementwise);
     }
 
     #[test]
     fn classify_reduction() {
-        let l = first_loop("double f(double a[]) { double s = 0.0; for (int i = 0; i < 10; i++) s += a[i]; return s; }");
+        let l = first_loop(
+            "double f(double a[]) { double s = 0.0; for (int i = 0; i < 10; i++) s += a[i]; return s; }",
+        );
         assert_eq!(classify_loop(&l), LoopClass::Reduction);
     }
 
     #[test]
     fn classify_sequential_dependence() {
-        let l = first_loop("void f(double a[]) { for (int i = 1; i < 10; i++) a[i] = a[i-1] + 1.0; }");
+        let l =
+            first_loop("void f(double a[]) { for (int i = 1; i < 10; i++) a[i] = a[i-1] + 1.0; }");
         assert_eq!(classify_loop(&l), LoopClass::Sequential);
     }
 

@@ -13,6 +13,13 @@
 //! 5. emit the transformed source + report (and optionally feed Steps 4–7
 //!    in [`flow`]).
 //!
+//! The pipeline itself is staged ([`pipeline`]): [`Coordinator::request`]
+//! builds an [`OffloadRequest`] that advances through typed artifacts
+//! (`Parsed → Discovered → Reconciled → Verified → Arbitrated → Placed`),
+//! each inspectable, serializable, and resumable in isolation.
+//! [`Coordinator::offload`] is the thin compatibility wrapper that runs
+//! every stage in one call.
+//!
 //! The GA loop-offload baseline of the prior work lives in
 //! [`loop_offload`]; the evaluation applications in [`apps`].
 
@@ -20,25 +27,28 @@ pub mod apps;
 pub mod backend;
 pub mod flow;
 pub mod loop_offload;
+pub mod pipeline;
 pub mod report_json;
 pub mod verify;
 
 use std::path::Path;
 use std::rc::Rc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::analysis::{self, Analysis};
-use crate::parser::{self, Item, Program};
+use crate::parser::Program;
 use crate::patterndb::PatternDb;
 use crate::runtime::Engine;
 use crate::similarity;
-use crate::transform::{
-    self, reconcile, signature_of, InterfacePolicy, PlannedReplacement, Reconciliation, Site,
-};
+use crate::transform::{InterfacePolicy, PlannedReplacement, Reconciliation};
 
 pub use backend::{ArbitrationOutcome, Backend, BackendPolicy};
+pub use pipeline::{
+    Arbitrated, Candidate, Discovered, OffloadError, OffloadRequest, Parsed, Placed, Reconciled,
+    Stage, StageObserver, Verified,
+};
 pub use verify::{SearchOutcome, VerifyConfig};
 
 /// How a block was discovered.
@@ -134,133 +144,36 @@ impl Coordinator {
     /// program, the way the paper's verification machine compiles the app
     /// against the NR sources: the all-CPU baseline needs runnable bodies.
     pub fn link_cpu_libraries(&self, prog: &Program) -> Result<Program> {
-        let a = analysis::analyze(prog);
-        let mut out = prog.clone();
-        for callee in a.external_callees() {
-            if prog.find_function(&callee).map(|f| f.body.is_some()).unwrap_or(false) {
-                continue;
-            }
-            let Some(rec) = self.db.find_library(&callee) else { continue };
-            let Some((code, entry)) = &rec.cpu_impl else { continue };
-            let lib = parser::parse(code)
-                .with_context(|| format!("parsing CPU impl of {callee:?}"))?;
-            for item in lib.items {
-                if let Item::Func(mut f) = item {
-                    // Skip if a function of that name already exists with a
-                    // body (user code wins).
-                    if out.find_function(&f.name).map(|g| g.body.is_some()).unwrap_or(false)
-                        && f.name != *entry
-                    {
-                        continue;
-                    }
-                    if f.name == *entry {
-                        f.name = callee.clone();
-                    }
-                    out.items.push(Item::Func(f));
-                }
-            }
-        }
-        Ok(out)
+        pipeline::link_cpu_libraries(&self.db, prog)
     }
 
-    /// Step 2 + C: discover offloadable blocks and reconcile interfaces.
+    /// Step 2 + C: discover offloadable blocks and reconcile interfaces
+    /// (the Discover + Reconcile stages over an already-parsed program).
     pub fn discover(&self, prog: &Program) -> Result<(Analysis, Vec<DiscoveredBlock>)> {
         let a = analysis::analyze(prog);
-        let mut blocks = Vec::new();
-
-        // A-1 / B-1 / C-1: library calls by name.
-        for callee in a.external_callees() {
-            let Some(rec) = self.db.find_library(&callee) else { continue };
-            let mut policy = self.policy.clone();
-            // The DB registered the CPU library's interface; compare it to
-            // the replacement's (registered pairs normally agree — C-1).
-            let reconciliation =
-                reconcile(&rec.signature, &rec.replacement.signature, &mut policy);
-            blocks.push(DiscoveredBlock {
-                via: DiscoveryPath::LibraryMatch { library: rec.library.clone() },
-                plan: PlannedReplacement {
-                    site: Site::LibraryCall { callee: callee.clone() },
-                    replacement: rec.replacement.clone(),
-                    reconciliation,
-                },
-            });
-        }
-
-        // A-2 / B-2 / C-2: similarity-detected copied code.
-        let detector = similarity::Detector::new(&self.db, self.similarity_threshold)?;
-        for m in detector.detect(prog) {
-            // Skip functions already handled through the library path.
-            if blocks.iter().any(|b| match &b.plan.site {
-                Site::LibraryCall { callee } => *callee == m.function,
-                Site::FunctionBody { function } => *function == m.function,
-            }) {
-                continue;
-            }
-            let rec = &self.db.comparisons[m.record];
-            let f = prog
-                .find_function(&m.function)
-                .ok_or_else(|| anyhow::anyhow!("matched function {} vanished", m.function))?;
-            let caller_sig = signature_of(f);
-            let mut policy = self.policy.clone();
-            let reconciliation =
-                reconcile(&caller_sig, &rec.replacement.signature, &mut policy);
-            blocks.push(DiscoveredBlock {
-                via: DiscoveryPath::Similarity { block: m.block.clone(), score: m.score },
-                plan: PlannedReplacement {
-                    site: Site::FunctionBody { function: m.function.clone() },
-                    replacement: rec.replacement.clone(),
-                    reconciliation,
-                },
-            });
-        }
+        let candidates = pipeline::discover_candidates(
+            &self.db,
+            self.similarity_threshold,
+            prog,
+            &a.external_callees(),
+        )?;
+        let blocks = pipeline::reconcile_candidates(&candidates, &self.policy);
         Ok((a, blocks))
     }
 
-    /// The full pipeline on one source (paper Steps 1–3).
+    /// Build a staged [`OffloadRequest`] for one source, seeded with this
+    /// coordinator's handles and policies. Advance it stage by stage, or
+    /// [`OffloadRequest::run`] all of them.
+    pub fn request(&self, src: &str, entry: &str) -> OffloadRequest {
+        OffloadRequest::from_coordinator(self, src, entry)
+    }
+
+    /// The full pipeline on one source (paper Steps 1–3b): a thin
+    /// compatibility wrapper that builds a request and runs every stage.
+    /// Use [`Coordinator::request`] to drive (or resume) stages
+    /// individually and to get the structured [`OffloadError`] directly.
     pub fn offload(&self, src: &str, entry: &str) -> Result<OffloadReport> {
-        let t0 = Instant::now();
-        let prog = parser::parse(src).context("Step 1: parsing application source")?;
-        let (a, blocks) = self.discover(&prog)?;
-        let linked = self.link_cpu_libraries(&prog)?;
-
-        let accepted: Vec<PlannedReplacement> = blocks
-            .iter()
-            .filter(|b| b.accepted())
-            .map(|b| b.plan.clone())
-            .collect();
-        let outcome =
-            verify::search_patterns(&linked, entry, &accepted, &self.engine, &self.verify)?;
-
-        // Step 3b: arbitrate CPU/GPU/FPGA per block against the measured
-        // search results (fails fast under `--target fpga` when an IP core
-        // flunks the resource pre-check).
-        let arbitration = backend::arbitrate(
-            &self.db,
-            self.backend_policy,
-            self.device,
-            backend::NARROW_MIN_SCORE,
-            &accepted,
-            &outcome,
-        )?;
-
-        // Emit the winning transformed source (on the *user's* program, not
-        // the linked one — what the paper hands back for deployment).
-        let winning: Vec<PlannedReplacement> = accepted
-            .iter()
-            .zip(&outcome.best_enabled)
-            .filter(|(_, &on)| on)
-            .map(|(p, _)| p.clone())
-            .collect();
-        let transformed = transform::apply(&prog, &winning)?;
-        Ok(OffloadReport {
-            entry: entry.to_string(),
-            external_callees: a.external_callees(),
-            blocks,
-            outcome,
-            arbitration,
-            transformed_source: parser::print_program(&transformed),
-            search_wall: t0.elapsed(),
-        })
+        Ok(self.request(src, entry).run()?)
     }
 
     /// Render a human-readable report (CLI output).
@@ -344,6 +257,7 @@ impl Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::parser;
     use std::path::PathBuf;
 
     fn coord() -> Coordinator {

@@ -1,0 +1,1078 @@
+//! Staged pipeline API: typed stage artifacts behind a builder facade.
+//!
+//! The paper's Fig. 2 flow is explicitly staged — Step 1 analysis, Step 2
+//! discovery, C-1/C-2 reconciliation, Step 3 measured search, Step 3b
+//! arbitration, Steps 4–7 placement — and its companion proposal paper
+//! (arXiv:2004.09883) frames each step as an independently re-runnable
+//! phase of environment-adaptive software. This module makes that shape
+//! the public API:
+//!
+//! * [`OffloadRequest`] — a builder carrying the source, entry point, and
+//!   every policy/handle the pipeline needs (pattern DB, PJRT engine,
+//!   interface policy, verification settings, backend target, FPGA device
+//!   model).
+//! * Typed stage artifacts — [`Parsed`] → [`Discovered`] → [`Reconciled`]
+//!   → [`Verified`] → [`Arbitrated`] → [`Placed`]. Each is a plain value
+//!   you can inspect, serialize ([`Parsed::to_json_string`] etc.), and
+//!   resume from ([`Parsed::from_json_str`] etc.): deserialize a stage on
+//!   another process — or under a different policy — and advance it from
+//!   there. The service tier uses exactly this to cache per-stage results
+//!   (see `service::pool`), and `examples/staged_pipeline.rs` shows the
+//!   inspect-and-resume loop.
+//! * [`OffloadError`] — a structured error at the public boundary: one
+//!   variant per stage, each carrying the last good artifact, so a caller
+//!   that fails in Step 3 still holds the reconciled blocks of Steps 1–2.
+//! * [`StageObserver`] — a per-stage completion hook; the service pool
+//!   installs one to keep per-stage latency counters.
+//!
+//! [`super::Coordinator::offload`] is a thin compatibility wrapper that
+//! builds a request and runs every stage.
+//!
+//! Design note: stage methods take `&self` and each artifact owns its
+//! predecessor by value. That costs a clone per transition (and one DB
+//! clone per request) — deliberately: every stage is dwarfed by the
+//! measured Step-3 verification, and `&self` is what lets one artifact
+//! be advanced repeatedly (arbitrate the same [`Verified`] under several
+//! targets) without re-deserializing.
+
+use std::fmt;
+use std::rc::Rc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::analysis;
+use crate::fpga;
+use crate::parser::{self, Item, Program};
+use crate::patterndb::json::{self, Json};
+use crate::patterndb::{
+    repl_from_json, repl_to_json, sig_from_json, sig_to_json, PatternDb, Replacement, Signature,
+};
+use crate::runtime::Engine;
+use crate::similarity;
+use crate::transform::{self, reconcile, signature_of, InterfacePolicy, PlannedReplacement, Site};
+
+use super::backend::{self, Backend, BackendPolicy};
+use super::flow;
+use super::report_json;
+use super::verify::{self, SearchOutcome, VerifyConfig};
+use super::{Coordinator, DiscoveredBlock, DiscoveryPath, OffloadReport};
+
+// ---------------------------------------------------------------- stages
+
+/// The pipeline stages, in execution order (paper Fig. 2 / Fig. 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Step 1: parse the application source (and canonicalize it).
+    Parse,
+    /// Step 2: discover offloadable blocks (A-1/B-1 name match, A-2/B-2
+    /// similarity).
+    Discover,
+    /// C-1/C-2: reconcile block interfaces under the interface policy.
+    Reconcile,
+    /// Step 3: measured pattern search in the verification environment.
+    Verify,
+    /// Step 3b: CPU/GPU/FPGA backend arbitration.
+    Arbitrate,
+    /// Steps 4–5: resource sizing + placement.
+    Place,
+}
+
+impl Stage {
+    /// Every stage, in execution order.
+    pub const ALL: [Stage; 6] = [
+        Stage::Parse,
+        Stage::Discover,
+        Stage::Reconcile,
+        Stage::Verify,
+        Stage::Arbitrate,
+        Stage::Place,
+    ];
+
+    /// Canonical lowercase name (CLI and counters).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::Parse => "parse",
+            Stage::Discover => "discover",
+            Stage::Reconcile => "reconcile",
+            Stage::Verify => "verify",
+            Stage::Arbitrate => "arbitrate",
+            Stage::Place => "place",
+        }
+    }
+
+    /// Position in [`Stage::ALL`] (stable index for per-stage counters).
+    pub fn index(self) -> usize {
+        match self {
+            Stage::Parse => 0,
+            Stage::Discover => 1,
+            Stage::Reconcile => 2,
+            Stage::Verify => 3,
+            Stage::Arbitrate => 4,
+            Stage::Place => 5,
+        }
+    }
+}
+
+/// Hook called as pipeline stages complete — the service pool installs one
+/// to keep per-stage latency counters; embedders can trace or log.
+pub trait StageObserver: Send + Sync {
+    /// One stage finished successfully after `wall` of work.
+    fn stage_completed(&self, stage: Stage, wall: Duration);
+}
+
+// ---------------------------------------------------------------- errors
+
+/// Structured pipeline error: which stage failed, why, and the last good
+/// stage artifact (so partial progress is never thrown away at the public
+/// boundary).
+#[derive(Debug)]
+pub enum OffloadError {
+    /// Step 1 failed: the source did not parse, or the entry point is not
+    /// defined in it.
+    Parse {
+        /// Entry point the request named.
+        entry: String,
+        /// What went wrong.
+        message: String,
+    },
+    /// Step 2 discovery failed; the parsed artifact survives.
+    Discovery {
+        /// The successful Step-1 artifact.
+        parsed: Box<Parsed>,
+        /// What went wrong.
+        message: String,
+    },
+    /// C-1/C-2 reconciliation failed; the discovery artifact survives.
+    /// Currently reserved: the built-in [`InterfacePolicy`] answers are
+    /// infallible, so [`Discovered::reconcile`] never produces this —
+    /// it exists so an interactive/remote confirmation policy can fail
+    /// without changing the public error shape.
+    Reconcile {
+        /// The successful Step-2 artifact.
+        discovered: Box<Discovered>,
+        /// What went wrong.
+        message: String,
+    },
+    /// Step 3 verification failed; the reconciled artifact survives.
+    Verify {
+        /// The successful reconciliation artifact.
+        reconciled: Box<Reconciled>,
+        /// What went wrong.
+        message: String,
+    },
+    /// Step 3b arbitration failed; the verified artifact survives.
+    Arbitrate {
+        /// The successful Step-3 artifact.
+        verified: Box<Verified>,
+        /// What went wrong.
+        message: String,
+    },
+    /// Steps 4–5 placement failed; the arbitrated artifact survives.
+    Placement {
+        /// The successful Step-3b artifact.
+        arbitrated: Box<Arbitrated>,
+        /// What went wrong.
+        message: String,
+    },
+}
+
+impl OffloadError {
+    /// The stage that failed.
+    pub fn stage(&self) -> Stage {
+        match self {
+            OffloadError::Parse { .. } => Stage::Parse,
+            OffloadError::Discovery { .. } => Stage::Discover,
+            OffloadError::Reconcile { .. } => Stage::Reconcile,
+            OffloadError::Verify { .. } => Stage::Verify,
+            OffloadError::Arbitrate { .. } => Stage::Arbitrate,
+            OffloadError::Placement { .. } => Stage::Place,
+        }
+    }
+
+    /// The underlying failure message.
+    pub fn message(&self) -> &str {
+        match self {
+            OffloadError::Parse { message, .. }
+            | OffloadError::Discovery { message, .. }
+            | OffloadError::Reconcile { message, .. }
+            | OffloadError::Verify { message, .. }
+            | OffloadError::Arbitrate { message, .. }
+            | OffloadError::Placement { message, .. } => message,
+        }
+    }
+}
+
+impl fmt::Display for OffloadError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "offload {} stage failed: {}", self.stage().as_str(), self.message())
+    }
+}
+
+impl std::error::Error for OffloadError {}
+
+// --------------------------------------------------------------- request
+
+/// Builder facade for one offload run: the source, the entry point, and
+/// every policy/handle the stages consume. Construct one with
+/// [`Coordinator::request`], tweak it with the `with_*` methods, then
+/// either [`OffloadRequest::run`] all stages or advance artifact by
+/// artifact.
+///
+/// ```no_run
+/// use fbo::coordinator::{BackendPolicy, Coordinator};
+///
+/// # fn main() -> anyhow::Result<()> {
+/// let coordinator = Coordinator::open(std::path::Path::new("artifacts"))?;
+/// let request = coordinator
+///     .request("void ludcmp(double a[], int n);\
+///               int main() { double a[4]; ludcmp(a, 2); return 0; }", "main")
+///     .with_target(BackendPolicy::Auto);
+///
+/// // Stage by stage: every artifact is a value to inspect and serialize.
+/// let parsed = request.parse()?;
+/// let verified = parsed.discover(&request)?.reconcile(&request)?.verify(&request)?;
+/// println!("{} patterns measured", verified.outcome.tried.len());
+///
+/// let report = verified.arbitrate(&request)?.report();
+/// println!("best speedup {} on {}", report.best_speedup(), report.backend().as_str());
+/// # Ok(())
+/// # }
+/// ```
+pub struct OffloadRequest {
+    src: String,
+    entry: String,
+    /// Code-pattern DB (libraries, comparison code, FPGA IP cores).
+    pub db: PatternDb,
+    /// PJRT engine executing the AOT artifacts during verification.
+    pub engine: Rc<Engine>,
+    /// Interface-reconciliation policy (C-1/C-2 confirmations).
+    pub policy: InterfacePolicy,
+    /// Deckard-style similarity threshold for copied-code discovery.
+    pub similarity_threshold: f64,
+    /// Verification-measurement settings (Step 3).
+    pub verify: VerifyConfig,
+    /// Which backends Step-3b arbitration may choose (CLI `--target`).
+    pub backend_policy: BackendPolicy,
+    /// FPGA device model the arbitration evaluates IP cores against.
+    pub device: fpga::Device,
+    observer: Option<Arc<dyn StageObserver>>,
+}
+
+impl OffloadRequest {
+    /// Build a request from a coordinator's handles + policies.
+    pub(super) fn from_coordinator(c: &Coordinator, src: &str, entry: &str) -> OffloadRequest {
+        OffloadRequest {
+            src: src.to_string(),
+            entry: entry.to_string(),
+            db: c.db.clone(),
+            engine: c.engine.clone(),
+            policy: c.policy.clone(),
+            similarity_threshold: c.similarity_threshold,
+            verify: c.verify.clone(),
+            backend_policy: c.backend_policy,
+            device: c.device,
+            observer: None,
+        }
+    }
+
+    /// The raw application source this request offloads.
+    pub fn src(&self) -> &str {
+        &self.src
+    }
+
+    /// The entry-point function name.
+    pub fn entry(&self) -> &str {
+        &self.entry
+    }
+
+    /// Override the interface-reconciliation policy.
+    pub fn with_interface_policy(mut self, policy: InterfacePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Override the verification settings.
+    pub fn with_verify(mut self, verify: VerifyConfig) -> Self {
+        self.verify = verify;
+        self
+    }
+
+    /// Override the similarity threshold for copied-code discovery.
+    pub fn with_similarity_threshold(mut self, threshold: f64) -> Self {
+        self.similarity_threshold = threshold;
+        self
+    }
+
+    /// Override the backend-arbitration target (CLI `--target`).
+    pub fn with_target(mut self, policy: BackendPolicy) -> Self {
+        self.backend_policy = policy;
+        self
+    }
+
+    /// Override the FPGA device model.
+    pub fn with_device(mut self, device: fpga::Device) -> Self {
+        self.device = device;
+        self
+    }
+
+    /// Install a per-stage completion observer.
+    pub fn with_observer(mut self, observer: Arc<dyn StageObserver>) -> Self {
+        self.observer = Some(observer);
+        self
+    }
+
+    fn observe(&self, stage: Stage, wall: Duration) {
+        if let Some(o) = &self.observer {
+            o.stage_completed(stage, wall);
+        }
+    }
+
+    /// Stage 1: parse the source and canonicalize it. Fails when the
+    /// source does not parse or the entry point is not defined.
+    pub fn parse(&self) -> std::result::Result<Parsed, OffloadError> {
+        let t0 = Instant::now();
+        let parse_err = |message: String| OffloadError::Parse {
+            entry: self.entry.clone(),
+            message,
+        };
+        let program = parser::parse(&self.src)
+            .map_err(|e| parse_err(format!("Step 1: parsing application source: {e:#}")))?;
+        if program.find_function(&self.entry).is_none() {
+            return Err(parse_err(format!(
+                "entry function {:?} is not defined in the source",
+                self.entry
+            )));
+        }
+        let source = parser::print_program(&program);
+        let wall = t0.elapsed();
+        self.observe(Stage::Parse, wall);
+        Ok(Parsed { entry: self.entry.clone(), source, program, wall })
+    }
+
+    /// Run every stage through arbitration and assemble the report —
+    /// what [`Coordinator::offload`] wraps.
+    pub fn run(&self) -> std::result::Result<OffloadReport, OffloadError> {
+        Ok(self
+            .parse()?
+            .discover(self)?
+            .reconcile(self)?
+            .verify(self)?
+            .arbitrate(self)?
+            .report())
+    }
+}
+
+// ------------------------------------------------------------- artifacts
+
+/// Format tag of a serialized [`Parsed`] artifact.
+pub const STAGE_PARSED_FORMAT: &str = "fbo-stage-parsed-v1";
+/// Format tag of a serialized [`Discovered`] artifact.
+pub const STAGE_DISCOVERED_FORMAT: &str = "fbo-stage-discovered-v1";
+/// Format tag of a serialized [`Reconciled`] artifact.
+pub const STAGE_RECONCILED_FORMAT: &str = "fbo-stage-reconciled-v1";
+/// Format tag of a serialized [`Verified`] artifact.
+pub const STAGE_VERIFIED_FORMAT: &str = "fbo-stage-verified-v1";
+/// Format tag of a serialized [`Arbitrated`] artifact.
+pub const STAGE_ARBITRATED_FORMAT: &str = "fbo-stage-arbitrated-v1";
+/// Format tag of a serialized [`Placed`] artifact.
+pub const STAGE_PLACED_FORMAT: &str = "fbo-stage-placed-v1";
+
+fn check_format(v: &Json, want: &str) -> Result<()> {
+    let format = v.get("format")?.as_str()?;
+    if format != want {
+        bail!("unsupported stage artifact format {format:?} (want {want:?})");
+    }
+    Ok(())
+}
+
+/// Stage-1 artifact: the parsed (and canonically re-printed) program.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    /// Entry-point function name.
+    pub entry: String,
+    /// Canonically re-printed source — whitespace- and comment-free, the
+    /// same form the service's cache keys hash.
+    pub source: String,
+    /// The parsed program (re-parsed from `source` when decoding).
+    pub program: Program,
+    /// Wall-clock this stage took.
+    pub wall: Duration,
+}
+
+impl Parsed {
+    /// Stage 2: discover offloadable blocks (A-1/B-1 library-name match,
+    /// A-2/B-2 similarity over defined functions).
+    pub fn discover(&self, req: &OffloadRequest) -> std::result::Result<Discovered, OffloadError> {
+        let t0 = Instant::now();
+        let a = analysis::analyze(&self.program);
+        let external_callees = a.external_callees();
+        let candidates = discover_candidates(
+            &req.db,
+            req.similarity_threshold,
+            &self.program,
+            &external_callees,
+        )
+        .map_err(|e| OffloadError::Discovery {
+            parsed: Box::new(self.clone()),
+            message: format!("{e:#}"),
+        })?;
+        let wall = t0.elapsed();
+        req.observe(Stage::Discover, wall);
+        Ok(Discovered { parsed: self.clone(), external_callees, candidates, wall })
+    }
+
+    /// Serialize to the canonical JSON value.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str(STAGE_PARSED_FORMAT)),
+            ("entry", Json::str(&self.entry)),
+            ("source", Json::str(&self.source)),
+            ("wall_ns", report_json::duration_to_json(self.wall)),
+        ])
+    }
+
+    /// Decode from a JSON value (re-parses the canonical source).
+    pub fn from_json(v: &Json) -> Result<Parsed> {
+        check_format(v, STAGE_PARSED_FORMAT)?;
+        let source = v.get("source")?.as_str()?.to_string();
+        let program = parser::parse(&source)
+            .context("re-parsing the canonical source of a Parsed artifact")?;
+        Ok(Parsed {
+            entry: v.get("entry")?.as_str()?.to_string(),
+            source,
+            program,
+            wall: report_json::duration_from_json(v.get("wall_ns")?)?,
+        })
+    }
+
+    /// Serialize to the canonical pretty-printed string.
+    pub fn to_json_string(&self) -> String {
+        json::to_string_pretty(&self.to_json())
+    }
+
+    /// Decode from the string form.
+    pub fn from_json_str(s: &str) -> Result<Parsed> {
+        Self::from_json(&json::parse(s)?)
+    }
+}
+
+/// One discovered offload candidate, before interface reconciliation.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    /// Discovery provenance (A-1/B-1 name match or A-2/B-2 similarity).
+    pub via: DiscoveryPath,
+    /// Where the block lives.
+    pub site: Site,
+    /// The accelerator implementation the DB registers for it.
+    pub replacement: Replacement,
+    /// The caller-side interface reconciliation will compare against.
+    pub caller_signature: Signature,
+}
+
+fn candidate_to_json(c: &Candidate) -> Json {
+    Json::obj(vec![
+        ("via", report_json::via_to_json(&c.via)),
+        ("site", report_json::site_to_json(&c.site)),
+        ("replacement", repl_to_json(&c.replacement)),
+        ("caller_signature", sig_to_json(&c.caller_signature)),
+    ])
+}
+
+fn candidate_from_json(v: &Json) -> Result<Candidate> {
+    Ok(Candidate {
+        via: report_json::via_from_json(v.get("via")?)?,
+        site: report_json::site_from_json(v.get("site")?)?,
+        replacement: repl_from_json(v.get("replacement")?)?,
+        caller_signature: sig_from_json(v.get("caller_signature")?)?,
+    })
+}
+
+/// Stage-2 artifact: discovered candidates plus the analysis facts the
+/// report carries forward.
+#[derive(Debug, Clone)]
+pub struct Discovered {
+    /// The Step-1 artifact this stage advanced from.
+    pub parsed: Parsed,
+    /// Distinct external callee names found by Step-1 analysis.
+    pub external_callees: Vec<String>,
+    /// Offload candidates, library-path entries first.
+    pub candidates: Vec<Candidate>,
+    /// Wall-clock this stage took.
+    pub wall: Duration,
+}
+
+impl Discovered {
+    /// C-1/C-2: reconcile every candidate's interface under the request's
+    /// interface policy. With the built-in policies this cannot fail; the
+    /// `Result` (and [`OffloadError::Reconcile`]) keep the stage signature
+    /// uniform for policies that ask an external confirmer.
+    pub fn reconcile(&self, req: &OffloadRequest) -> std::result::Result<Reconciled, OffloadError> {
+        let t0 = Instant::now();
+        let blocks = reconcile_candidates(&self.candidates, &req.policy);
+        let wall = t0.elapsed();
+        req.observe(Stage::Reconcile, wall);
+        Ok(Reconciled { discovered: self.clone(), blocks, wall })
+    }
+
+    /// Serialize to the canonical JSON value.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str(STAGE_DISCOVERED_FORMAT)),
+            ("parsed", self.parsed.to_json()),
+            (
+                "external_callees",
+                Json::Arr(self.external_callees.iter().map(Json::str).collect()),
+            ),
+            (
+                "candidates",
+                Json::Arr(self.candidates.iter().map(candidate_to_json).collect()),
+            ),
+            ("wall_ns", report_json::duration_to_json(self.wall)),
+        ])
+    }
+
+    /// Decode from a JSON value.
+    pub fn from_json(v: &Json) -> Result<Discovered> {
+        check_format(v, STAGE_DISCOVERED_FORMAT)?;
+        Ok(Discovered {
+            parsed: Parsed::from_json(v.get("parsed")?)?,
+            external_callees: v
+                .get("external_callees")?
+                .as_arr()?
+                .iter()
+                .map(|s| Ok(s.as_str()?.to_string()))
+                .collect::<Result<_>>()?,
+            candidates: v
+                .get("candidates")?
+                .as_arr()?
+                .iter()
+                .map(candidate_from_json)
+                .collect::<Result<_>>()?,
+            wall: report_json::duration_from_json(v.get("wall_ns")?)?,
+        })
+    }
+
+    /// Serialize to the canonical pretty-printed string.
+    pub fn to_json_string(&self) -> String {
+        json::to_string_pretty(&self.to_json())
+    }
+
+    /// Decode from the string form.
+    pub fn from_json_str(s: &str) -> Result<Discovered> {
+        Self::from_json(&json::parse(s)?)
+    }
+}
+
+/// Stage-C artifact: every candidate with its interface reconciliation.
+#[derive(Debug, Clone)]
+pub struct Reconciled {
+    /// The Step-2 artifact this stage advanced from.
+    pub discovered: Discovered,
+    /// Every discovered block with its reconciliation outcome, aligned
+    /// with the candidate order.
+    pub blocks: Vec<DiscoveredBlock>,
+    /// Wall-clock this stage took.
+    pub wall: Duration,
+}
+
+impl Reconciled {
+    /// The accepted replacement plans, in block order — the slice Step 3
+    /// searches over and Step 3b arbitrates.
+    pub fn accepted(&self) -> Vec<PlannedReplacement> {
+        self.blocks.iter().filter(|b| b.accepted()).map(|b| b.plan.clone()).collect()
+    }
+
+    /// Step 3: link CPU library bodies, then run the measured pattern
+    /// search in the verification environment.
+    pub fn verify(&self, req: &OffloadRequest) -> std::result::Result<Verified, OffloadError> {
+        let t0 = Instant::now();
+        let search = || -> Result<SearchOutcome> {
+            let linked = link_cpu_libraries(&req.db, &self.discovered.parsed.program)?;
+            let accepted = self.accepted();
+            verify::search_patterns(
+                &linked,
+                &self.discovered.parsed.entry,
+                &accepted,
+                &req.engine,
+                &req.verify,
+            )
+        };
+        let outcome = search().map_err(|e| OffloadError::Verify {
+            reconciled: Box::new(self.clone()),
+            message: format!("{e:#}"),
+        })?;
+        let wall = t0.elapsed();
+        req.observe(Stage::Verify, wall);
+        Ok(Verified { reconciled: self.clone(), outcome, wall })
+    }
+
+    /// Serialize to the canonical JSON value.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str(STAGE_RECONCILED_FORMAT)),
+            ("discovered", self.discovered.to_json()),
+            (
+                "blocks",
+                Json::Arr(self.blocks.iter().map(report_json::block_to_json).collect()),
+            ),
+            ("wall_ns", report_json::duration_to_json(self.wall)),
+        ])
+    }
+
+    /// Decode from a JSON value.
+    pub fn from_json(v: &Json) -> Result<Reconciled> {
+        check_format(v, STAGE_RECONCILED_FORMAT)?;
+        Ok(Reconciled {
+            discovered: Discovered::from_json(v.get("discovered")?)?,
+            blocks: v
+                .get("blocks")?
+                .as_arr()?
+                .iter()
+                .map(report_json::block_from_json)
+                .collect::<Result<_>>()?,
+            wall: report_json::duration_from_json(v.get("wall_ns")?)?,
+        })
+    }
+
+    /// Serialize to the canonical pretty-printed string.
+    pub fn to_json_string(&self) -> String {
+        json::to_string_pretty(&self.to_json())
+    }
+
+    /// Decode from the string form.
+    pub fn from_json_str(s: &str) -> Result<Reconciled> {
+        Self::from_json(&json::parse(s)?)
+    }
+}
+
+/// Stage-3 artifact: the measured pattern-search outcome.
+#[derive(Debug, Clone)]
+pub struct Verified {
+    /// The reconciliation artifact this stage advanced from.
+    pub reconciled: Reconciled,
+    /// Step-3 measured pattern-search outcome.
+    pub outcome: SearchOutcome,
+    /// Wall-clock this stage took.
+    pub wall: Duration,
+}
+
+impl Verified {
+    /// Step 3b: arbitrate CPU/GPU/FPGA per block against the measured
+    /// search results, and emit the winning transformed source.
+    pub fn arbitrate(&self, req: &OffloadRequest) -> std::result::Result<Arbitrated, OffloadError> {
+        let t0 = Instant::now();
+        let go = || -> Result<(backend::ArbitrationOutcome, String)> {
+            let accepted = self.reconciled.accepted();
+            let arbitration = backend::arbitrate(
+                &req.db,
+                req.backend_policy,
+                req.device,
+                backend::NARROW_MIN_SCORE,
+                &accepted,
+                &self.outcome,
+            )?;
+            // Emit the winning transformed source (on the *user's* program,
+            // not the linked one — what the paper hands back for deployment).
+            let winning: Vec<PlannedReplacement> = accepted
+                .iter()
+                .zip(&self.outcome.best_enabled)
+                .filter(|(_, &on)| on)
+                .map(|(p, _)| p.clone())
+                .collect();
+            let transformed =
+                transform::apply(&self.reconciled.discovered.parsed.program, &winning)?;
+            Ok((arbitration, parser::print_program(&transformed)))
+        };
+        let (arbitration, transformed_source) = go().map_err(|e| OffloadError::Arbitrate {
+            verified: Box::new(self.clone()),
+            message: format!("{e:#}"),
+        })?;
+        let wall = t0.elapsed();
+        req.observe(Stage::Arbitrate, wall);
+        Ok(Arbitrated { verified: self.clone(), arbitration, transformed_source, wall })
+    }
+
+    /// Serialize to the canonical JSON value.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str(STAGE_VERIFIED_FORMAT)),
+            ("reconciled", self.reconciled.to_json()),
+            ("outcome", report_json::outcome_to_json(&self.outcome)),
+            ("wall_ns", report_json::duration_to_json(self.wall)),
+        ])
+    }
+
+    /// Decode from a JSON value.
+    pub fn from_json(v: &Json) -> Result<Verified> {
+        check_format(v, STAGE_VERIFIED_FORMAT)?;
+        Ok(Verified {
+            reconciled: Reconciled::from_json(v.get("reconciled")?)?,
+            outcome: report_json::outcome_from_json(v.get("outcome")?, false)?,
+            wall: report_json::duration_from_json(v.get("wall_ns")?)?,
+        })
+    }
+
+    /// Serialize to the canonical pretty-printed string.
+    pub fn to_json_string(&self) -> String {
+        json::to_string_pretty(&self.to_json())
+    }
+
+    /// Decode from the string form.
+    pub fn from_json_str(s: &str) -> Result<Verified> {
+        Self::from_json(&json::parse(s)?)
+    }
+}
+
+/// Stage-3b artifact: the backend decision plus the winning transformed
+/// source — everything [`OffloadReport`] carries.
+#[derive(Debug, Clone)]
+pub struct Arbitrated {
+    /// The Step-3 artifact this stage advanced from.
+    pub verified: Verified,
+    /// Step-3b backend arbitration outcome.
+    pub arbitration: backend::ArbitrationOutcome,
+    /// The winning transformed source (paper Step 3 output).
+    pub transformed_source: String,
+    /// Wall-clock this stage took.
+    pub wall: Duration,
+}
+
+impl Arbitrated {
+    /// Assemble the full offload report. `search_wall` is the sum of the
+    /// stage wall-clocks that produced this artifact.
+    pub fn report(&self) -> OffloadReport {
+        let discovered = &self.verified.reconciled.discovered;
+        OffloadReport {
+            entry: discovered.parsed.entry.clone(),
+            external_callees: discovered.external_callees.clone(),
+            blocks: self.verified.reconciled.blocks.clone(),
+            outcome: self.verified.outcome.clone(),
+            arbitration: self.arbitration.clone(),
+            transformed_source: self.transformed_source.clone(),
+            search_wall: discovered.parsed.wall
+                + discovered.wall
+                + self.verified.reconciled.wall
+                + self.verified.wall
+                + self.wall,
+        }
+    }
+
+    /// Steps 4–5: size the arbitrated backend from its request time and
+    /// pick the cheapest feasible location. When nothing was offloaded,
+    /// the all-CPU pattern is sized and placed with the generic
+    /// capacity/price walk instead.
+    pub fn place(
+        &self,
+        req: &OffloadRequest,
+        requirements: &flow::Requirements,
+        locations: &[flow::Location],
+    ) -> std::result::Result<Placed, OffloadError> {
+        let t0 = Instant::now();
+        let go = || -> Result<Placed> {
+            let times = flow::BackendTimes {
+                gpu_secs: self.arbitration.gpu_request_secs,
+                fpga_secs: self.arbitration.fpga_request_secs,
+            };
+            if times.gpu_secs.is_none() && times.fpga_secs.is_none() {
+                let plan =
+                    flow::plan_resources(self.verified.outcome.best_time.secs(), requirements)?;
+                let p = flow::plan_placement(&plan, requirements, locations)?;
+                Ok(Placed {
+                    backend: Backend::Cpu,
+                    instances: plan.instances,
+                    rps_per_instance: plan.rps_per_instance,
+                    location: p.location,
+                    monthly_cost: p.monthly_cost,
+                    wall: Duration::ZERO,
+                })
+            } else {
+                let p = flow::plan_backend_placement(&times, requirements, locations)?;
+                Ok(Placed {
+                    backend: p.backend,
+                    instances: p.plan.instances,
+                    rps_per_instance: p.plan.rps_per_instance,
+                    location: p.location,
+                    monthly_cost: p.monthly_cost,
+                    wall: Duration::ZERO,
+                })
+            }
+        };
+        let mut placed = go().map_err(|e| OffloadError::Placement {
+            arbitrated: Box::new(self.clone()),
+            message: format!("{e:#}"),
+        })?;
+        placed.wall = t0.elapsed();
+        req.observe(Stage::Place, placed.wall);
+        Ok(placed)
+    }
+
+    /// Serialize to the canonical JSON value.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str(STAGE_ARBITRATED_FORMAT)),
+            ("verified", self.verified.to_json()),
+            ("arbitration", report_json::arbitration_to_json(&self.arbitration)),
+            ("transformed_source", Json::str(&self.transformed_source)),
+            ("wall_ns", report_json::duration_to_json(self.wall)),
+        ])
+    }
+
+    /// Decode from a JSON value.
+    pub fn from_json(v: &Json) -> Result<Arbitrated> {
+        check_format(v, STAGE_ARBITRATED_FORMAT)?;
+        Ok(Arbitrated {
+            verified: Verified::from_json(v.get("verified")?)?,
+            arbitration: report_json::arbitration_from_json(v.get("arbitration")?)?,
+            transformed_source: v.get("transformed_source")?.as_str()?.to_string(),
+            wall: report_json::duration_from_json(v.get("wall_ns")?)?,
+        })
+    }
+
+    /// Serialize to the canonical pretty-printed string.
+    pub fn to_json_string(&self) -> String {
+        json::to_string_pretty(&self.to_json())
+    }
+
+    /// Decode from the string form.
+    pub fn from_json_str(s: &str) -> Result<Arbitrated> {
+        Self::from_json(&json::parse(s)?)
+    }
+}
+
+/// Steps 4–5 artifact: where the arbitrated deployment runs and what it
+/// costs.
+#[derive(Debug, Clone)]
+pub struct Placed {
+    /// Backend the deployment runs on (`Cpu` when nothing was offloaded).
+    pub backend: Backend,
+    /// Accelerator (or CPU) instances to provision (Step 4).
+    pub instances: usize,
+    /// Predicted per-instance throughput (requests/s).
+    pub rps_per_instance: f64,
+    /// Chosen location name (Step 5).
+    pub location: String,
+    /// Projected monthly cost ($).
+    pub monthly_cost: f64,
+    /// Wall-clock this stage took.
+    pub wall: Duration,
+}
+
+impl Placed {
+    /// Serialize to the canonical JSON value.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str(STAGE_PLACED_FORMAT)),
+            ("backend", Json::str(self.backend.as_str())),
+            ("instances", Json::num(self.instances as f64)),
+            ("rps_per_instance", Json::num(self.rps_per_instance)),
+            ("location", Json::str(&self.location)),
+            ("monthly_cost", Json::num(self.monthly_cost)),
+            ("wall_ns", report_json::duration_to_json(self.wall)),
+        ])
+    }
+
+    /// Decode from a JSON value.
+    pub fn from_json(v: &Json) -> Result<Placed> {
+        check_format(v, STAGE_PLACED_FORMAT)?;
+        Ok(Placed {
+            backend: Backend::parse(v.get("backend")?.as_str()?)?,
+            instances: v.get("instances")?.as_usize()?,
+            rps_per_instance: v.get("rps_per_instance")?.as_f64()?,
+            location: v.get("location")?.as_str()?.to_string(),
+            monthly_cost: v.get("monthly_cost")?.as_f64()?,
+            wall: report_json::duration_from_json(v.get("wall_ns")?)?,
+        })
+    }
+
+    /// Serialize to the canonical pretty-printed string.
+    pub fn to_json_string(&self) -> String {
+        json::to_string_pretty(&self.to_json())
+    }
+
+    /// Decode from the string form.
+    pub fn from_json_str(s: &str) -> Result<Placed> {
+        Self::from_json(&json::parse(s)?)
+    }
+}
+
+// ------------------------------------------------------- shared plumbing
+
+/// Step-2 discovery over an analyzed program: A-1/B-1 library calls by
+/// name, then A-2/B-2 similarity-detected copied code (skipping functions
+/// already claimed by the library path).
+pub(crate) fn discover_candidates(
+    db: &PatternDb,
+    similarity_threshold: f64,
+    prog: &Program,
+    external_callees: &[String],
+) -> Result<Vec<Candidate>> {
+    let mut out = Vec::new();
+
+    // A-1 / B-1: library calls by name. The DB registered the CPU
+    // library's interface; reconciliation compares it to the
+    // replacement's (registered pairs normally agree — C-1).
+    for callee in external_callees {
+        let Some(rec) = db.find_library(callee) else { continue };
+        out.push(Candidate {
+            via: DiscoveryPath::LibraryMatch { library: rec.library.clone() },
+            site: Site::LibraryCall { callee: callee.clone() },
+            replacement: rec.replacement.clone(),
+            caller_signature: rec.signature.clone(),
+        });
+    }
+
+    // A-2 / B-2: similarity-detected copied code.
+    let detector = similarity::Detector::new(db, similarity_threshold)?;
+    for m in detector.detect(prog) {
+        // Skip functions already handled through the library path.
+        if out.iter().any(|c| match &c.site {
+            Site::LibraryCall { callee } => *callee == m.function,
+            Site::FunctionBody { function } => *function == m.function,
+        }) {
+            continue;
+        }
+        let rec = &db.comparisons[m.record];
+        let f = prog
+            .find_function(&m.function)
+            .ok_or_else(|| anyhow::anyhow!("matched function {} vanished", m.function))?;
+        out.push(Candidate {
+            via: DiscoveryPath::Similarity { block: m.block.clone(), score: m.score },
+            site: Site::FunctionBody { function: m.function.clone() },
+            replacement: rec.replacement.clone(),
+            caller_signature: signature_of(f),
+        });
+    }
+    Ok(out)
+}
+
+/// C-1/C-2 reconciliation of every candidate. Each candidate consults a
+/// fresh clone of the policy, so scripted answers apply per block.
+pub(crate) fn reconcile_candidates(
+    candidates: &[Candidate],
+    policy: &InterfacePolicy,
+) -> Vec<DiscoveredBlock> {
+    candidates
+        .iter()
+        .map(|c| {
+            let mut policy = policy.clone();
+            let reconciliation =
+                reconcile(&c.caller_signature, &c.replacement.signature, &mut policy);
+            DiscoveredBlock {
+                via: c.via.clone(),
+                plan: PlannedReplacement {
+                    site: c.site.clone(),
+                    replacement: c.replacement.clone(),
+                    reconciliation,
+                },
+            }
+        })
+        .collect()
+}
+
+/// "Link" CPU implementations of DB-known external libraries into the
+/// program, the way the paper's verification machine compiles the app
+/// against the NR sources: the all-CPU baseline needs runnable bodies.
+pub fn link_cpu_libraries(db: &PatternDb, prog: &Program) -> Result<Program> {
+    let a = analysis::analyze(prog);
+    let mut out = prog.clone();
+    for callee in a.external_callees() {
+        if prog.find_function(&callee).map(|f| f.body.is_some()).unwrap_or(false) {
+            continue;
+        }
+        let Some(rec) = db.find_library(&callee) else { continue };
+        let Some((code, entry)) = &rec.cpu_impl else { continue };
+        let lib = parser::parse(code)
+            .with_context(|| format!("parsing CPU impl of {callee:?}"))?;
+        for item in lib.items {
+            if let Item::Func(mut f) = item {
+                // Skip if a function of that name already exists with a
+                // body (user code wins).
+                if out.find_function(&f.name).map(|g| g.body.is_some()).unwrap_or(false)
+                    && f.name != *entry
+                {
+                    continue;
+                }
+                if f.name == *entry {
+                    f.name = callee.clone();
+                }
+                out.items.push(Item::Func(f));
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_enum_is_ordered_and_named() {
+        assert_eq!(Stage::ALL.len(), 6);
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i);
+        }
+        assert_eq!(Stage::Verify.as_str(), "verify");
+    }
+
+    #[test]
+    fn error_reports_stage_and_message() {
+        let e = OffloadError::Parse { entry: "main".into(), message: "boom".into() };
+        assert_eq!(e.stage(), Stage::Parse);
+        assert_eq!(e.message(), "boom");
+        assert!(e.to_string().contains("parse stage failed: boom"));
+    }
+
+    #[test]
+    fn parsed_artifact_round_trips() {
+        let src = "int main() { return 40 + 2; }";
+        let program = parser::parse(src).unwrap();
+        let parsed = Parsed {
+            entry: "main".into(),
+            source: parser::print_program(&program),
+            program,
+            wall: Duration::from_micros(12),
+        };
+        let s = parsed.to_json_string();
+        let back = Parsed::from_json_str(&s).unwrap();
+        assert_eq!(back.entry, parsed.entry);
+        assert_eq!(back.source, parsed.source);
+        assert_eq!(back.wall, parsed.wall);
+        assert_eq!(back.to_json_string(), s, "stage codec must be byte-stable");
+    }
+
+    #[test]
+    fn placed_artifact_round_trips() {
+        let placed = Placed {
+            backend: Backend::Fpga,
+            instances: 8,
+            rps_per_instance: 5.0,
+            location: "regional-dc".into(),
+            monthly_cost: 1152.0,
+            wall: Duration::from_micros(3),
+        };
+        let s = placed.to_json_string();
+        let back = Placed::from_json_str(&s).unwrap();
+        assert_eq!(back.backend, placed.backend);
+        assert_eq!(back.instances, placed.instances);
+        assert_eq!(back.location, placed.location);
+        assert_eq!(back.to_json_string(), s);
+    }
+
+    #[test]
+    fn wrong_format_tag_is_rejected() {
+        let src = "int main() { return 0; }";
+        let program = parser::parse(src).unwrap();
+        let parsed = Parsed {
+            entry: "main".into(),
+            source: parser::print_program(&program),
+            program,
+            wall: Duration::ZERO,
+        };
+        let tampered = parsed.to_json_string().replace(STAGE_PARSED_FORMAT, "something-else");
+        assert!(Parsed::from_json_str(&tampered).is_err());
+        assert!(Discovered::from_json_str(&parsed.to_json_string()).is_err());
+    }
+}

@@ -31,10 +31,19 @@ use crate::transform::{PlannedReplacement, Reconciliation, Site};
 
 /// Format tag written into every serialized report. v2 added the backend
 /// arbitration section (`backend`, `arbitration`) and per-pattern device
-/// traffic; v1 reports are rejected, which the decision cache treats as a
-/// miss and re-verifies (by design — a v1 decision predates backend
-/// choice, so replaying it would silently drop the arbitration).
+/// traffic.
 pub const REPORT_FORMAT: &str = "fbo-offload-report-v2";
+
+/// The previous report format: no `backend`/`arbitration` sections and no
+/// per-pattern device traffic. v1 reports still **decode** (the archived
+/// decisions of pre-arbitration deployments stay readable): traffic reads
+/// as zero and the arbitration section is synthesized for the GPU-only
+/// policy the v1 pipeline effectively ran under. Re-encoding always emits
+/// v2 bytes, so the byte-identical replay guarantee of the decision cache
+/// applies only to v2 entries — v1-era cache entries can never match a
+/// current decision fingerprint and therefore re-verify rather than
+/// replay.
+pub const REPORT_FORMAT_V1: &str = "fbo-offload-report-v1";
 
 /// Serialize a report to the canonical JSON value.
 pub fn report_to_json(r: &OffloadReport) -> Json {
@@ -61,12 +70,24 @@ pub fn report_to_string(r: &OffloadReport) -> String {
     json::to_string_pretty(&report_to_json(r))
 }
 
-/// Deserialize a report from a JSON value.
+/// Deserialize a report from a JSON value (v2, or v1 upgraded on the fly
+/// — see [`REPORT_FORMAT_V1`]).
 pub fn report_from_json(v: &Json) -> Result<OffloadReport> {
     let format = v.get("format")?.as_str()?;
-    if format != REPORT_FORMAT {
-        bail!("unsupported offload-report format {format:?} (want {REPORT_FORMAT:?})");
-    }
+    let v1 = match format {
+        REPORT_FORMAT => false,
+        REPORT_FORMAT_V1 => true,
+        other => bail!(
+            "unsupported offload-report format {other:?} \
+             (want {REPORT_FORMAT:?} or {REPORT_FORMAT_V1:?})"
+        ),
+    };
+    let outcome = outcome_from_json(v.get("outcome")?, v1)?;
+    let arbitration = if v1 {
+        v1_arbitration(&outcome)
+    } else {
+        arbitration_from_json(v.get("arbitration")?)?
+    };
     let report = OffloadReport {
         entry: v.get("entry")?.as_str()?.to_string(),
         external_callees: v
@@ -81,21 +102,47 @@ pub fn report_from_json(v: &Json) -> Result<OffloadReport> {
             .iter()
             .map(block_from_json)
             .collect::<Result<_>>()?,
-        outcome: outcome_from_json(v.get("outcome")?)?,
-        arbitration: arbitration_from_json(v.get("arbitration")?)?,
+        outcome,
+        arbitration,
         transformed_source: v.get("transformed_source")?.as_str()?.to_string(),
         search_wall: duration_from_json(v.get("search_wall_ns")?)?,
     };
-    // The lifted top-level backend must agree with the arbitration detail.
-    let top = Backend::parse(v.get("backend")?.as_str()?)?;
-    if top != report.arbitration.backend {
-        bail!(
-            "corrupt report: top-level backend {:?} disagrees with arbitration {:?}",
-            top.as_str(),
-            report.arbitration.backend.as_str()
-        );
+    if !v1 {
+        // The lifted top-level backend must agree with the arbitration detail.
+        let top = Backend::parse(v.get("backend")?.as_str()?)?;
+        if top != report.arbitration.backend {
+            bail!(
+                "corrupt report: top-level backend {:?} disagrees with arbitration {:?}",
+                top.as_str(),
+                report.arbitration.backend.as_str()
+            );
+        }
     }
     Ok(report)
+}
+
+/// Synthesize the arbitration section a v1 report predates: the v1
+/// pipeline never ran Step 3b, which is the paper's evaluated GPU-only
+/// configuration. No per-block detail exists, no toolchain hours were
+/// charged, and the overall backend is GPU exactly when the winning
+/// pattern offloads anything.
+fn v1_arbitration(outcome: &SearchOutcome) -> ArbitrationOutcome {
+    let offloads = outcome.best_enabled.iter().any(|&on| on);
+    ArbitrationOutcome {
+        policy: BackendPolicy::Gpu,
+        device: DeviceModel {
+            name: "pre-arbitration (v1 report)".to_string(),
+            alms: 0,
+            dsps: 0,
+            m20ks: 0,
+            fmax: 0.0,
+        },
+        blocks: Vec::new(),
+        backend: if offloads { Backend::Gpu } else { Backend::Cpu },
+        simulated_hours: 0.0,
+        gpu_request_secs: offloads.then(|| outcome.best_time.secs()),
+        fpga_request_secs: None,
+    }
 }
 
 /// Deserialize a report from its string form.
@@ -105,13 +152,13 @@ pub fn report_from_str(s: &str) -> Result<OffloadReport> {
 
 // ------------------------------------------------------------- components
 
-fn duration_to_json(d: Duration) -> Json {
+pub(crate) fn duration_to_json(d: Duration) -> Json {
     // Nanoseconds fit f64 exactly up to 2^53 ns ≈ 104 days; searches are
     // minutes at worst.
     Json::num(d.as_nanos() as f64)
 }
 
-fn duration_from_json(v: &Json) -> Result<Duration> {
+pub(crate) fn duration_from_json(v: &Json) -> Result<Duration> {
     Ok(Duration::from_nanos(v.as_f64()? as u64))
 }
 
@@ -135,7 +182,7 @@ fn measurement_from_json(v: &Json) -> Result<Measurement> {
     })
 }
 
-fn via_to_json(via: &DiscoveryPath) -> Json {
+pub(crate) fn via_to_json(via: &DiscoveryPath) -> Json {
     match via {
         DiscoveryPath::LibraryMatch { library } => Json::obj(vec![
             ("path", Json::str("library_match")),
@@ -149,7 +196,7 @@ fn via_to_json(via: &DiscoveryPath) -> Json {
     }
 }
 
-fn via_from_json(v: &Json) -> Result<DiscoveryPath> {
+pub(crate) fn via_from_json(v: &Json) -> Result<DiscoveryPath> {
     Ok(match v.get("path")?.as_str()? {
         "library_match" => DiscoveryPath::LibraryMatch {
             library: v.get("library")?.as_str()?.to_string(),
@@ -162,7 +209,7 @@ fn via_from_json(v: &Json) -> Result<DiscoveryPath> {
     })
 }
 
-fn site_to_json(site: &Site) -> Json {
+pub(crate) fn site_to_json(site: &Site) -> Json {
     match site {
         Site::LibraryCall { callee } => Json::obj(vec![
             ("kind", Json::str("library_call")),
@@ -175,7 +222,7 @@ fn site_to_json(site: &Site) -> Json {
     }
 }
 
-fn site_from_json(v: &Json) -> Result<Site> {
+pub(crate) fn site_from_json(v: &Json) -> Result<Site> {
     Ok(match v.get("kind")?.as_str()? {
         "library_call" => Site::LibraryCall { callee: v.get("callee")?.as_str()?.to_string() },
         "function_body" => {
@@ -215,7 +262,7 @@ fn reconciliation_from_json(v: &Json) -> Result<Reconciliation> {
     })
 }
 
-fn block_to_json(b: &DiscoveredBlock) -> Json {
+pub(crate) fn block_to_json(b: &DiscoveredBlock) -> Json {
     Json::obj(vec![
         ("via", via_to_json(&b.via)),
         ("site", site_to_json(&b.plan.site)),
@@ -224,7 +271,7 @@ fn block_to_json(b: &DiscoveredBlock) -> Json {
     ])
 }
 
-fn block_from_json(v: &Json) -> Result<DiscoveredBlock> {
+pub(crate) fn block_from_json(v: &Json) -> Result<DiscoveredBlock> {
     Ok(DiscoveredBlock {
         via: via_from_json(v.get("via")?)?,
         plan: PlannedReplacement {
@@ -264,14 +311,21 @@ fn pattern_to_json(p: &PatternResult) -> Json {
     ])
 }
 
-fn pattern_from_json(v: &Json) -> Result<PatternResult> {
+/// `v1` relaxes the schema to the pre-arbitration report format, where
+/// patterns carried no device-traffic section (it reads as zero).
+fn pattern_from_json(v: &Json, v1: bool) -> Result<PatternResult> {
+    let traffic = if v1 {
+        v.opt("traffic").map(traffic_from_json).transpose()?.unwrap_or_default()
+    } else {
+        traffic_from_json(v.get("traffic")?)?
+    };
     Ok(PatternResult {
         enabled: bools_from_json(v.get("enabled")?)?,
         label: v.get("label")?.as_str()?.to_string(),
         time: measurement_from_json(v.get("time")?)?,
         speedup: v.get("speedup")?.as_f64()?,
         output_ok: bool_from_json(v.get("output_ok")?)?,
-        traffic: traffic_from_json(v.get("traffic")?)?,
+        traffic,
     })
 }
 
@@ -367,7 +421,7 @@ fn block_arbitration_from_json(v: &Json) -> Result<BlockArbitration> {
     })
 }
 
-fn arbitration_to_json(a: &ArbitrationOutcome) -> Json {
+pub(crate) fn arbitration_to_json(a: &ArbitrationOutcome) -> Json {
     Json::obj(vec![
         ("policy", Json::str(a.policy.as_str())),
         ("device", device_to_json(&a.device)),
@@ -379,7 +433,7 @@ fn arbitration_to_json(a: &ArbitrationOutcome) -> Json {
     ])
 }
 
-fn arbitration_from_json(v: &Json) -> Result<ArbitrationOutcome> {
+pub(crate) fn arbitration_from_json(v: &Json) -> Result<ArbitrationOutcome> {
     Ok(ArbitrationOutcome {
         policy: BackendPolicy::parse(v.get("policy")?.as_str()?)?,
         device: device_from_json(v.get("device")?)?,
@@ -396,7 +450,7 @@ fn arbitration_from_json(v: &Json) -> Result<ArbitrationOutcome> {
     })
 }
 
-fn outcome_to_json(o: &SearchOutcome) -> Json {
+pub(crate) fn outcome_to_json(o: &SearchOutcome) -> Json {
     Json::obj(vec![
         ("baseline", measurement_to_json(&o.baseline)),
         ("tried", Json::Arr(o.tried.iter().map(pattern_to_json).collect())),
@@ -406,14 +460,15 @@ fn outcome_to_json(o: &SearchOutcome) -> Json {
     ])
 }
 
-fn outcome_from_json(v: &Json) -> Result<SearchOutcome> {
+/// `v1` relaxes the per-pattern schema — see [`pattern_from_json`].
+pub(crate) fn outcome_from_json(v: &Json, v1: bool) -> Result<SearchOutcome> {
     Ok(SearchOutcome {
         baseline: measurement_from_json(v.get("baseline")?)?,
         tried: v
             .get("tried")?
             .as_arr()?
             .iter()
-            .map(pattern_from_json)
+            .map(|p| pattern_from_json(p, v1))
             .collect::<Result<_>>()?,
         best_enabled: bools_from_json(v.get("best_enabled")?)?,
         best_time: measurement_from_json(v.get("best_time")?)?,
@@ -608,5 +663,41 @@ mod tests {
     fn rejects_other_formats() {
         assert!(report_from_str(r#"{"format": "something-else"}"#).is_err());
         assert!(report_from_str("not json").is_err());
+    }
+
+    #[test]
+    fn v1_reports_still_decode_and_upgrade() {
+        // Shape a v1 document from the sample: same blocks/outcome, no
+        // backend/arbitration sections, no per-pattern traffic.
+        let r = sample_report();
+        let mut top = report_to_json(&r).as_obj().unwrap().clone();
+        top.insert("format".to_string(), Json::str(REPORT_FORMAT_V1));
+        top.remove("backend");
+        top.remove("arbitration");
+        if let Some(Json::Obj(outcome)) = top.get_mut("outcome") {
+            if let Some(Json::Arr(tried)) = outcome.get_mut("tried") {
+                for p in tried {
+                    if let Json::Obj(po) = p {
+                        po.remove("traffic");
+                    }
+                }
+            }
+        }
+        let v1_text = json::to_string_pretty(&Json::Obj(top));
+
+        let back = report_from_str(&v1_text).unwrap();
+        assert_eq!(back.entry, r.entry);
+        assert_eq!(back.outcome.best_speedup, r.outcome.best_speedup);
+        assert_eq!(back.outcome.tried[0].traffic, DeviceTraffic::default());
+        // Synthesized arbitration: GPU-only policy, no per-block detail,
+        // overall backend from the winning pattern.
+        assert_eq!(back.arbitration.policy, BackendPolicy::Gpu);
+        assert_eq!(back.backend(), Backend::Gpu);
+        assert!(back.arbitration.blocks.is_empty());
+        assert_eq!(back.arbitration.simulated_hours, 0.0);
+        // Re-encoding upgrades to v2 and is then byte-stable.
+        let upgraded = report_to_string(&back);
+        assert!(upgraded.contains(REPORT_FORMAT));
+        assert_eq!(report_to_string(&report_from_str(&upgraded).unwrap()), upgraded);
     }
 }

@@ -73,7 +73,10 @@ pub fn call(interp: &mut Interp, name: &str, args: &[Value]) -> Result<Value> {
             interp.output.push_str(&out);
             Ok(Value::Int(out.len() as i64))
         }
-        "exit" => bail!("program called exit({})", args.first().map(|v| v.as_int().unwrap_or(0)).unwrap_or(0)),
+        "exit" => bail!(
+            "program called exit({})",
+            args.first().map(|v| v.as_int().unwrap_or(0)).unwrap_or(0)
+        ),
         // Test helper: fails the run when the condition is false.
         "assert_true" => {
             if args[0].as_num()? == 0.0 {

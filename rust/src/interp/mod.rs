@@ -118,7 +118,8 @@ mod tests {
 
     #[test]
     fn globals_initialized() {
-        let (v, _) = run_main("int N = 6; double tbl[4]; int main() { tbl[2] = N; return tbl[2]; }");
+        let (v, _) =
+            run_main("int N = 6; double tbl[4]; int main() { tbl[2] = N; return tbl[2]; }");
         assert!(matches!(v, Value::Int(6)));
     }
 

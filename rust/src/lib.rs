@@ -26,7 +26,16 @@
 //!   pre-check that narrows candidates before the hours-long compile
 //!   (DESIGN.md "Backend arbitration").
 //!
+//! * **Staged pipeline API** — [`coordinator::pipeline`] is the public
+//!   shape of the flow: [`coordinator::Coordinator::request`] builds an
+//!   [`coordinator::OffloadRequest`] that advances through typed stage
+//!   artifacts (`Parsed → Discovered → Reconciled → Verified → Arbitrated
+//!   → Placed`), each inspectable, serializable, and resumable; failures
+//!   cross the boundary as the structured [`coordinator::OffloadError`].
+//!   [`coordinator::Coordinator::offload`] wraps all stages in one call.
+//!
 //! Start at [`coordinator::Coordinator`] for the end-to-end flow,
+//! [`coordinator::OffloadRequest`] for the staged API,
 //! [`service::OffloadService`] for the batch/serving tier, or the
 //! `examples/` directory for runnable scenarios.
 

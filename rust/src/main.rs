@@ -3,6 +3,7 @@
 //! ```text
 //! fbo analyze   <file.c>                         Step 1-2 analysis report
 //! fbo offload   <file.c> [--entry main] [...]    full pipeline (Steps 1-3)
+//! fbo stages    <file.c> [--dump DIR]            pipeline stage by stage
 //! fbo ga        <file.c> [--pop 12 --gens 10]    GA loop-offload baseline
 //! fbo flow      <file.c>                         Steps 1-7 incl. sizing/placement
 //! fbo batch     <files...> [--jobs N]            service pool + decision cache
@@ -139,6 +140,91 @@ fn cmd_offload(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_stages(args: &Args) -> Result<()> {
+    let path = args.positional.first().context("usage: fbo stages <file.c> [--dump DIR]")?;
+    let src = read_source(path)?;
+    let entry = args.flag("entry", "main");
+    let c = coordinator_from(args)?;
+    let req = c.request(&src, &entry);
+
+    let dump_dir = match args.flags.get("dump") {
+        // The arg parser stores the sentinel "true" for a valueless flag;
+        // never mistake it for a directory actually called "true".
+        Some(v) if v == "true" => bail!("--dump expects a directory path"),
+        Some(v) => Some(PathBuf::from(v)),
+        None => None,
+    };
+    if let Some(dir) = &dump_dir {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating stage dump dir {}", dir.display()))?;
+    }
+    let dump = |stage: &str, payload: String| -> Result<()> {
+        if let Some(dir) = &dump_dir {
+            let p = dir.join(format!("{stage}.json"));
+            std::fs::write(&p, payload).with_context(|| format!("writing {}", p.display()))?;
+            println!("             artifact -> {}", p.display());
+        }
+        Ok(())
+    };
+    let wall = |d: std::time::Duration| format!("{:>10}", metrics::fmt_duration(d));
+
+    let parsed = req.parse()?;
+    println!(
+        "parse      {}  entry {} ({} top-level items)",
+        wall(parsed.wall),
+        parsed.entry,
+        parsed.program.items.len()
+    );
+    dump("parsed", parsed.to_json_string())?;
+
+    let discovered = parsed.discover(&req)?;
+    println!(
+        "discover   {}  {} external callee(s), {} candidate block(s)",
+        wall(discovered.wall),
+        discovered.external_callees.len(),
+        discovered.candidates.len()
+    );
+    for cand in &discovered.candidates {
+        println!("             {} via {:?}", cand.site.label(), cand.via);
+    }
+    dump("discovered", discovered.to_json_string())?;
+
+    let reconciled = discovered.reconcile(&req)?;
+    let accepted = reconciled.blocks.iter().filter(|b| b.accepted()).count();
+    println!(
+        "reconcile  {}  {} accepted, {} rejected",
+        wall(reconciled.wall),
+        accepted,
+        reconciled.blocks.len() - accepted
+    );
+    dump("reconciled", reconciled.to_json_string())?;
+
+    let verified = reconciled.verify(&req)?;
+    println!(
+        "verify     {}  {} pattern(s) measured, best speedup {}",
+        wall(verified.wall),
+        verified.outcome.tried.len(),
+        metrics::fmt_speedup(verified.outcome.best_speedup)
+    );
+    dump("verified", verified.to_json_string())?;
+
+    let arbitrated = verified.arbitrate(&req)?;
+    println!(
+        "arbitrate  {}  backend {} ({} simulated toolchain)",
+        wall(arbitrated.wall),
+        arbitrated.arbitration.backend.as_str(),
+        metrics::fmt_hours(arbitrated.arbitration.simulated_hours)
+    );
+    dump("arbitrated", arbitrated.to_json_string())?;
+
+    let report = arbitrated.report();
+    println!(
+        "total      {}  (resume any stage from its dumped artifact; `fbo flow` places it)",
+        wall(report.search_wall)
+    );
+    Ok(())
+}
+
 fn cmd_ga(args: &Args) -> Result<()> {
     let path = args.positional.first().context("usage: fbo ga <file.c>")?;
     let src = read_source(path)?;
@@ -181,7 +267,14 @@ fn cmd_flow(args: &Args) -> Result<()> {
     let c = coordinator_from(args)?;
 
     println!("-- Steps 1-3: analyze, extract, search --");
-    let report = c.offload(&src, &entry)?;
+    let request = c.request(&src, &entry);
+    let arbitrated = request
+        .parse()?
+        .discover(&request)?
+        .reconcile(&request)?
+        .verify(&request)?
+        .arbitrate(&request)?;
+    let report = arbitrated.report();
     print!("{}", c.render_report(&report));
 
     let req = flow::Requirements {
@@ -190,42 +283,50 @@ fn cmd_flow(args: &Args) -> Result<()> {
         budget_per_month: 10_000.0,
     };
     let locations = vec![
-        flow::Location { name: "edge-gw".into(), gpus: 1, fpgas: 1, cost_per_hour: 0.9, fpga_cost_per_hour: 0.35, latency_ms: 3.0 },
-        flow::Location { name: "regional-dc".into(), gpus: 8, fpgas: 4, cost_per_hour: 0.5, fpga_cost_per_hour: 0.2, latency_ms: 12.0 },
-        flow::Location { name: "central-cloud".into(), gpus: 64, fpgas: 32, cost_per_hour: 0.3, fpga_cost_per_hour: 0.12, latency_ms: 45.0 },
+        flow::Location {
+            name: "edge-gw".into(),
+            gpus: 1,
+            fpgas: 1,
+            cost_per_hour: 0.9,
+            fpga_cost_per_hour: 0.35,
+            latency_ms: 3.0,
+        },
+        flow::Location {
+            name: "regional-dc".into(),
+            gpus: 8,
+            fpgas: 4,
+            cost_per_hour: 0.5,
+            fpga_cost_per_hour: 0.2,
+            latency_ms: 12.0,
+        },
+        flow::Location {
+            name: "central-cloud".into(),
+            gpus: 64,
+            fpgas: 32,
+            cost_per_hour: 0.3,
+            fpga_cost_per_hour: 0.12,
+            latency_ms: 45.0,
+        },
     ];
-    // Steps 4+5 are solved together: placement arbitrates the backend, and
-    // the sizing printed for Step 4 is the one the chosen backend needs.
-    let times = flow::BackendTimes::from_report(&report);
-    if times.gpu_secs.is_none() && times.fpga_secs.is_none() {
-        // Nothing offloaded: size and place the all-CPU pattern with the
-        // generic capacity/price walk. (A real accelerator infeasibility
-        // must NOT fall back here — the generic walk pools gpu+fpga
-        // capacity and would print a deployment no single backend hosts.)
-        let plan = flow::plan_resources(report.outcome.best_time.secs(), &req)?;
-        println!("-- Step 4: resource sizing --");
-        println!("  {} instance(s) at {:.1} rps each", plan.instances, plan.rps_per_instance);
-        println!("-- Step 5: placement --");
-        let p = flow::plan_placement(&plan, &req, &locations)?;
-        println!("  {} (${:.0}/month)", p.location, p.monthly_cost);
-    } else {
-        let p = flow::plan_backend_placement(&times, &req, &locations)?;
-        println!("-- Step 4: resource sizing (for the arbitrated backend) --");
-        println!(
-            "  {} {} instance(s) at {:.1} rps each",
-            p.plan.instances,
-            p.backend.as_str(),
-            p.plan.rps_per_instance
-        );
-        println!("-- Step 5: placement (consumes the per-backend Step-3b times) --");
-        println!(
-            "  {} on {} x{} (${:.0}/month)",
-            p.location,
-            p.backend.as_str(),
-            p.plan.instances,
-            p.monthly_cost
-        );
-    }
+    // Steps 4+5 are one stage: placement arbitrates the backend (falling
+    // back to the generic all-CPU walk when nothing offloaded), and the
+    // sizing printed for Step 4 is the one the chosen backend needs.
+    let placed = arbitrated.place(&request, &req, &locations)?;
+    println!("-- Step 4: resource sizing (for the arbitrated backend) --");
+    println!(
+        "  {} {} instance(s) at {:.1} rps each",
+        placed.instances,
+        placed.backend.as_str(),
+        placed.rps_per_instance
+    );
+    println!("-- Step 5: placement (consumes the per-backend Step-3b times) --");
+    println!(
+        "  {} on {} x{} (${:.0}/month)",
+        placed.location,
+        placed.backend.as_str(),
+        placed.instances,
+        placed.monthly_cost
+    );
 
     println!("-- Step 6: deploy + operational verification --");
     println!(
@@ -396,6 +497,10 @@ fn usage() -> &'static str {
        analyze   <file.c>                 Step 1-2 analysis report\n\
        offload   <file.c> [--entry main] [--artifacts DIR] [--policy approve|reject]\n\
                  [--target gpu|fpga|auto] [--reps N] [--out transformed.c]\n\
+       stages    <file.c> [--entry main] [--dump DIR] [--policy approve|reject]\n\
+                 [--target gpu|fpga|auto] [--reps N]\n\
+                 run the pipeline stage by stage, printing per-stage\n\
+                 artifacts + timings (--dump writes the JSON artifacts)\n\
        ga        <file.c> [--pop 12] [--gens 10] [--entry main]\n\
        flow      <file.c> [--rps 50] [--target gpu|fpga|auto]\n\
                  full Steps 1-7 (Step 5 places on the arbitrated backend)\n\
@@ -429,6 +534,7 @@ fn main() -> ExitCode {
     let result = match cmd.as_str() {
         "analyze" => cmd_analyze(&args),
         "offload" => cmd_offload(&args),
+        "stages" => cmd_stages(&args),
         "ga" => cmd_ga(&args),
         "flow" => cmd_flow(&args),
         "batch" => cmd_batch(&args),

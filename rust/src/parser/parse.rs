@@ -81,7 +81,10 @@ impl Parser {
 
     /// Parse a base type (qualifiers are accepted and discarded).
     fn parse_base_type(&mut self) -> Result<Ty> {
-        while matches!(self.peek(), Tok::KwConst | Tok::KwStatic | Tok::KwExtern | Tok::KwUnsigned) {
+        while matches!(
+            self.peek(),
+            Tok::KwConst | Tok::KwStatic | Tok::KwExtern | Tok::KwUnsigned
+        ) {
             self.bump();
         }
         let ty = match self.bump() {
@@ -305,7 +308,8 @@ impl Parser {
                 };
                 let cond = if self.peek() == &Tok::Semi { None } else { Some(self.parse_expr()?) };
                 self.expect(&Tok::Semi)?;
-                let step = if self.peek() == &Tok::RParen { None } else { Some(self.parse_expr()?) };
+                let step =
+                    if self.peek() == &Tok::RParen { None } else { Some(self.parse_expr()?) };
                 self.expect(&Tok::RParen)?;
                 let body = Box::new(self.parse_stmt()?);
                 Ok(Stmt { id, span, kind: StmtKind::For { init, cond, step, body } })
@@ -532,7 +536,11 @@ impl Parser {
                 }
                 Tok::MinusMinus => {
                     self.bump();
-                    e = Expr { id: self.id(), span, kind: ExprKind::PostIncDec(Box::new(e), false) };
+                    e = Expr {
+                        id: self.id(),
+                        span,
+                        kind: ExprKind::PostIncDec(Box::new(e), false),
+                    };
                 }
                 _ => break,
             }

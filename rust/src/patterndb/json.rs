@@ -114,7 +114,12 @@ impl<'a> P<'a> {
 
     fn expect(&mut self, c: u8) -> Result<()> {
         if self.peek() != c {
-            bail!("JSON: expected {:?} at byte {}, found {:?}", c as char, self.i, self.peek() as char);
+            bail!(
+                "JSON: expected {:?} at byte {}, found {:?}",
+                c as char,
+                self.i,
+                self.peek() as char
+            );
         }
         self.i += 1;
         Ok(())
@@ -165,7 +170,9 @@ impl<'a> P<'a> {
                     self.i += 1;
                     return Ok(Json::Obj(m));
                 }
-                other => bail!("JSON: expected , or }} at byte {}, found {:?}", self.i, other as char),
+                other => {
+                    bail!("JSON: expected , or }} at byte {}, found {:?}", self.i, other as char)
+                }
             }
         }
     }
@@ -187,7 +194,9 @@ impl<'a> P<'a> {
                     self.i += 1;
                     return Ok(Json::Arr(v));
                 }
-                other => bail!("JSON: expected , or ] at byte {}, found {:?}", self.i, other as char),
+                other => {
+                    bail!("JSON: expected , or ] at byte {}, found {:?}", self.i, other as char)
+                }
             }
         }
     }

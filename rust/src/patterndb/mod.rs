@@ -352,7 +352,12 @@ impl PatternDb {
                     block: "nr-four1-fft2d".into(),
                     code: corpus::NR_FFT2D.into(),
                     signature: Signature::new(
-                        &[("re", "double[]"), ("im", "double[]"), ("n", "int"), ("work", "double[]")],
+                        &[
+                            ("re", "double[]"),
+                            ("im", "double[]"),
+                            ("n", "int"),
+                            ("work", "double[]"),
+                        ],
                         "void",
                     )
                     .with_optional("work"),
@@ -382,7 +387,12 @@ impl PatternDb {
                         kind: TargetKind::GpuLibrary,
                         artifact: "matmul".into(),
                         signature: Signature::new(
-                            &[("a", "double[]"), ("b", "double[]"), ("c", "double[]"), ("n", "int")],
+                            &[
+                                ("a", "double[]"),
+                                ("b", "double[]"),
+                                ("c", "double[]"),
+                                ("n", "int"),
+                            ],
                             "void",
                         ),
                         usage: "in:a:n*n;in:b:n*n;out:c:n*n;size:n".into(),
@@ -540,7 +550,8 @@ impl PatternDb {
     }
 }
 
-fn sig_to_json(s: &Signature) -> Json {
+/// Serialize a [`Signature`] (shared with the coordinator's stage codec).
+pub fn sig_to_json(s: &Signature) -> Json {
     Json::obj(vec![
         (
             "params",
@@ -561,7 +572,8 @@ fn sig_to_json(s: &Signature) -> Json {
     ])
 }
 
-fn sig_from_json(v: &Json) -> Result<Signature> {
+/// Inverse of [`sig_to_json`].
+pub fn sig_from_json(v: &Json) -> Result<Signature> {
     let mut params = Vec::new();
     for p in v.get("params")?.as_arr()? {
         params.push(ParamSpec {
@@ -601,7 +613,10 @@ pub fn repl_from_json(v: &Json) -> Result<Replacement> {
         artifact: v.get("artifact")?.as_str()?.to_string(),
         signature: sig_from_json(v.get("signature")?)?,
         usage: v.get("usage")?.as_str()?.to_string(),
-        opencl_code: v.opt("opencl_code").map(|c| Ok::<_, anyhow::Error>(c.as_str()?.to_string())).transpose()?,
+        opencl_code: v
+            .opt("opencl_code")
+            .map(|c| Ok::<_, anyhow::Error>(c.as_str()?.to_string()))
+            .transpose()?,
         pass_model: v.opt("pass_model").map(|m| PassModel::parse(m.as_str()?)).transpose()?,
         description: v.get("description")?.as_str()?.to_string(),
     })

@@ -145,7 +145,9 @@ impl Engine {
         let meta = self
             .metas
             .get(name)
-            .ok_or_else(|| anyhow!("no artifact {name:?} in manifest (have: {:?})", self.artifact_names()))?
+            .ok_or_else(|| {
+                anyhow!("no artifact {name:?} in manifest (have: {:?})", self.artifact_names())
+            })?
             .clone();
         let path = self.dir.join(&meta.file);
         let proto = xla::HloModuleProto::from_text_file(

@@ -66,6 +66,19 @@ impl CacheKey {
         })
     }
 
+    /// The same (source, entry) under a different environment fingerprint.
+    /// The service derives its per-stage keys from the submit-time key
+    /// this way: `Reconciled` and `Verified` stage artifacts are cached
+    /// under narrower fingerprints than the full decision, so a config
+    /// change invalidates exactly the pipeline stages it affects.
+    pub fn with_fingerprint(&self, fingerprint: &str) -> CacheKey {
+        CacheKey {
+            source_hash: self.source_hash.clone(),
+            entry: self.entry.clone(),
+            db_fingerprint: fingerprint.to_string(),
+        }
+    }
+
     /// Stable file stem for the persisted entry (digest of all three
     /// components; the full key is also stored inside the file).
     pub fn file_stem(&self) -> String {
@@ -135,9 +148,10 @@ impl DecisionCache {
         self.entries.lock().expect("decision cache lock").get(key).cloned()
     }
 
-    /// Store a serialized report under a key (persisting it if the cache
-    /// is disk-backed). `report_json` must be the canonical report
-    /// serialization; the write is tmp-file + rename so concurrent readers
+    /// Store a serialized decision under a key (persisting it if the cache
+    /// is disk-backed). `report_json` must be a canonical serialization —
+    /// a full report or a pipeline stage artifact (the service caches
+    /// both); the write is tmp-file + rename so concurrent readers
     /// of the directory never observe a torn entry. The in-memory map is
     /// updated first — a failed disk write degrades persistence, never
     /// in-process serving.

@@ -16,23 +16,44 @@
 //!   returns the previously
 //!   verified [`crate::coordinator::OffloadReport`] byte-identically,
 //!   with no pattern search and no measurement. Entries persist as JSON
-//!   next to the artifacts dir and survive restarts.
+//!   next to the artifacts dir and survive restarts. Caching is
+//!   **stage-granular**: the pipeline's `Reconciled` and `Verified` stage
+//!   artifacts are cached under their own narrower fingerprints, so a
+//!   full-decision miss resumes from the deepest still-valid stage (a
+//!   verify-settings change replays discovery; a backend retarget replays
+//!   the verified measurements and only re-arbitrates).
 //! * [`pool`] — a **worker pool** running one [`crate::coordinator::Coordinator`]
 //!   per thread (the PJRT runtime is deliberately single-threaded state:
 //!   `Rc`/`RefCell`), fed by per-worker queues sharded on the cache key
 //!   (identical in-flight jobs serialize; the pipeline never runs twice
 //!   for one key), with submit/await and batch APIs plus per-service
-//!   counters (jobs, cache hits/misses, p50/p95 latency).
+//!   counters (jobs, cache hits/misses, stage replays, per-stage latency
+//!   via the pipeline's [`crate::coordinator::StageObserver`] hook, and
+//!   p50/p95 latency).
+//!
+//! Pipeline failures cross the service boundary as the structured
+//! [`crate::coordinator::OffloadError`], so callers can route on the
+//! failing stage:
 //!
 //! ```no_run
+//! use fbo::coordinator::OffloadError;
 //! use fbo::service::{OffloadService, ServiceConfig};
 //!
 //! # fn main() -> anyhow::Result<()> {
 //! let service = OffloadService::start(ServiceConfig::new("artifacts"))?;
 //! let handle = service.submit("void ludcmp(double a[], int n);\
 //!                              int main() { double a[4]; ludcmp(a, 2); return 0; }", "main");
-//! let done = handle.wait()?;
-//! println!("speedup {} (cached: {})", done.report.best_speedup(), done.from_cache);
+//! match handle.wait() {
+//!     Ok(done) => {
+//!         println!("speedup {} (cached: {})", done.report.best_speedup(), done.from_cache);
+//!     }
+//!     Err(e) => match e.downcast_ref::<OffloadError>() {
+//!         Some(stage_err) => {
+//!             eprintln!("pipeline failed at the {} stage: {stage_err}", stage_err.stage().as_str());
+//!         }
+//!         None => eprintln!("service error: {e:#}"),
+//!     },
+//! }
 //! println!("{}", service.stats().render());
 //! # Ok(())
 //! # }
@@ -44,4 +65,4 @@ pub mod cache;
 pub mod pool;
 
 pub use cache::{CacheKey, DecisionCache, DECISION_FORMAT};
-pub use pool::{CompletedJob, JobHandle, OffloadService, ServiceConfig, StatsSnapshot};
+pub use pool::{CompletedJob, JobHandle, OffloadService, ServiceConfig, StageStat, StatsSnapshot};

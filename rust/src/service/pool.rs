@@ -15,6 +15,15 @@
 //! verifies, the duplicates behind it hit the cache on their second check
 //! and replay the decision byte-identically — the pipeline never runs
 //! twice for one key.
+//!
+//! Caching is **stage-granular**: besides full decisions, workers persist
+//! the pipeline's `Reconciled` and `Verified` stage artifacts under
+//! per-stage fingerprints (`StageFingerprints`). A full-decision miss
+//! resumes from the deepest valid stage instead of starting over — a
+//! `--reps` change replays discovery from the cache and only re-measures;
+//! a `--target` or FPGA-device change replays the verified measurements
+//! and only re-arbitrates. Workers install a [`StageObserver`] so the
+//! service counts per-stage latency ([`StatsSnapshot::stages`]).
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -24,7 +33,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::{report_json, BackendPolicy, Coordinator, OffloadReport, VerifyConfig};
+use crate::coordinator::{
+    report_json, BackendPolicy, Coordinator, OffloadError, OffloadReport, Reconciled, Stage,
+    StageObserver, Verified, VerifyConfig,
+};
 use crate::fpga;
 use crate::metrics;
 use crate::patterndb::json::fnv1a64;
@@ -47,7 +59,8 @@ pub struct ServiceConfig {
     pub workers: usize,
     /// Pattern DB shared by all workers; digested (together with `policy`,
     /// `verify`, `similarity_threshold`, `backend_policy`, `device`, and
-    /// the artifact contents) into the cache key's decision fingerprint.
+    /// the artifact contents) into the per-stage cache fingerprints
+    /// (`StageFingerprints`).
     pub db: PatternDb,
     /// Interface-reconciliation policy (C-1/C-2 confirmations).
     pub policy: InterfacePolicy,
@@ -109,6 +122,12 @@ pub struct CompletedJob {
     /// True when the decision came from the cache (no pattern search or
     /// measurement ran for this job).
     pub from_cache: bool,
+    /// Deepest pipeline stage replayed from the per-stage cache:
+    /// `Some(Stage::Verify)` means a cached `Verified` artifact was resumed
+    /// (only arbitration re-ran), `Some(Stage::Reconcile)` means discovery
+    /// replayed while verification re-ran. `None` when the pipeline ran
+    /// from scratch — or never ran at all (`from_cache`).
+    pub resumed_from: Option<Stage>,
     /// Submit-to-completion wall clock.
     pub wall: Duration,
 }
@@ -196,52 +215,115 @@ struct Counters {
     failed: AtomicU64,
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
+    reconciled_hits: AtomicU64,
+    verified_hits: AtomicU64,
     latencies_ns: Mutex<LatencyRing>,
+}
+
+/// Per-stage latency totals, fed by the pipeline's [`StageObserver`] hook
+/// from every worker.
+#[derive(Default)]
+struct StageLatencies {
+    total_ns: [AtomicU64; 6],
+    count: [AtomicU64; 6],
+}
+
+impl StageObserver for StageLatencies {
+    fn stage_completed(&self, stage: Stage, wall: Duration) {
+        let i = stage.index();
+        self.total_ns[i].fetch_add(wall.as_nanos() as u64, Ordering::Relaxed);
+        self.count[i].fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 struct Shared {
     cache: DecisionCache,
-    /// Third cache-key component: everything besides the source and entry
-    /// that determines the decision — see [`decision_fingerprint`].
-    decision_fingerprint: String,
+    /// Per-stage cache-key components — see [`decision_fingerprint`].
+    fingerprints: StageFingerprints,
     counters: Counters,
+    latencies: Arc<StageLatencies>,
 }
 
-/// Digest of the decision *environment*: pattern-DB content, the AOT
-/// artifacts verification measures against, the interface policy and
-/// verification settings the pipeline runs under, and the backend policy
-/// + FPGA device model the Step-3b arbitration targets. Any of these
-/// changes the decision a run would produce, so any of them changing must
-/// miss the cache — a report verified under `--policy reject` must never
-/// be replayed for a `--policy approve` request, regenerated artifacts
-/// (`make artifacts` after a kernel edit) must re-verify rather than
-/// replay measurements taken against the old HLO, and a decision
-/// arbitrated for one FPGA card must re-arbitrate when the deployment
-/// retargets another.
-fn decision_fingerprint(cfg: &ServiceConfig) -> String {
+/// The three cache-key fingerprints, one per cached pipeline prefix. Each
+/// digests exactly the inputs that can change that prefix's output, so a
+/// config change invalidates the stages it affects and *only* those: a
+/// `--reps` change re-verifies but replays discovery from the cache; a
+/// `--target` or device change re-arbitrates but replays the verified
+/// measurements.
+struct StageFingerprints {
+    /// Keys `Reconciled` artifacts: pattern DB + interface policy +
+    /// similarity threshold (the Parse/Discover/Reconcile inputs).
+    discovery: String,
+    /// Keys `Verified` artifacts: `discovery` plus the AOT artifact
+    /// contents and the verification settings (the Verify inputs).
+    verify: String,
+    /// Keys full decisions: `verify` plus the backend policy and FPGA
+    /// device model (the Arbitrate inputs).
+    decision: String,
+}
+
+fn fnv_hex(blob: &str) -> String {
+    format!("{:016x}", fnv1a64(blob.as_bytes()))
+}
+
+/// Digest of the Parse/Discover/Reconcile environment: pattern-DB
+/// content, the interface policy, and the similarity threshold.
+fn discovery_fingerprint(cfg: &ServiceConfig) -> String {
     let policy = match &cfg.policy {
         InterfacePolicy::AutoApprove => "approve".to_string(),
         InterfacePolicy::AutoReject => "reject".to_string(),
         InterfacePolicy::Scripted(answers) => format!("scripted:{answers:?}"),
     };
-    let blob = format!(
-        "{}|artifacts:{}|policy:{policy}|reps:{}|warmup:{}|fuel:{}|tol:{}|sim:{}\
-         |target:{}|device:{}/{}/{}/{}/{}",
+    fnv_hex(&format!(
+        "discover|{}|policy:{policy}|sim:{}",
         cfg.db.fingerprint(),
+        cfg.similarity_threshold,
+    ))
+}
+
+/// Digest of the Verify environment: the discovery fingerprint plus the
+/// AOT artifacts measurement runs against (`make artifacts` after a
+/// kernel edit must re-verify, never replay measurements taken against
+/// the old HLO) and the verification settings.
+fn verify_fingerprint(cfg: &ServiceConfig) -> String {
+    fnv_hex(&format!(
+        "verify|{}|artifacts:{}|reps:{}|warmup:{}|fuel:{}|tol:{}",
+        discovery_fingerprint(cfg),
         artifacts_fingerprint(&cfg.artifacts),
         cfg.verify.reps,
         cfg.verify.warmup,
         cfg.verify.fuel,
         cfg.verify.tolerance,
-        cfg.similarity_threshold,
+    ))
+}
+
+/// Digest of the full decision *environment*: the verify fingerprint plus
+/// the backend policy and FPGA device model the Step-3b arbitration
+/// targets. Any input changing misses the full-decision cache — a report
+/// verified under `--policy reject` must never be replayed for a
+/// `--policy approve` request, and a decision arbitrated for one FPGA
+/// card must re-arbitrate when the deployment retargets another — while
+/// the per-stage entries keyed by the narrower fingerprints above still
+/// replay whatever prefix remains valid.
+fn decision_fingerprint(cfg: &ServiceConfig) -> String {
+    fnv_hex(&format!(
+        "decide|{}|target:{}|device:{}/{}/{}/{}/{}",
+        verify_fingerprint(cfg),
         cfg.backend_policy.as_str(),
         cfg.device.name,
         cfg.device.alms,
         cfg.device.dsps,
         cfg.device.m20ks,
         cfg.device.fmax,
-    );
-    format!("{:016x}", fnv1a64(blob.as_bytes()))
+    ))
+}
+
+fn stage_fingerprints(cfg: &ServiceConfig) -> StageFingerprints {
+    StageFingerprints {
+        discovery: discovery_fingerprint(cfg),
+        verify: verify_fingerprint(cfg),
+        decision: decision_fingerprint(cfg),
+    }
 }
 
 /// Content hash of an artifact directory: manifest bytes plus every
@@ -310,6 +392,7 @@ impl Shared {
                     report,
                     report_json: bytes,
                     from_cache: true,
+                    resumed_from: None,
                     wall: started.elapsed(),
                 })
             }
@@ -320,6 +403,31 @@ impl Shared {
                 );
                 None
             }
+        }
+    }
+
+    /// Per-stage cache probe: `None` means "recompute the stage" — either
+    /// a genuine miss or an undecodable entry (a damaged stage file costs
+    /// one recomputation, which overwrites it, never fails the key).
+    fn try_stage<T>(&self, key: &CacheKey, decode: fn(&str) -> Result<T>, what: &str) -> Option<T> {
+        let bytes = self.cache.lookup(key)?;
+        match decode(&bytes) {
+            Ok(artifact) => Some(artifact),
+            Err(e) => {
+                eprintln!(
+                    "fbo service: ignoring undecodable {what} stage entry {} ({e:#}); recomputing",
+                    key.file_stem()
+                );
+                None
+            }
+        }
+    }
+
+    /// Persist a stage artifact. Stage entries are a cache warm-up, not
+    /// the product: failing to write one degrades resume, never the job.
+    fn persist_stage(&self, key: &CacheKey, payload: &str) {
+        if let Err(e) = self.cache.insert(key, payload) {
+            eprintln!("fbo service: failed to persist stage entry {}: {e:#}", key.file_stem());
         }
     }
 }
@@ -336,14 +444,37 @@ pub struct StatsSnapshot {
     pub failed: u64,
     /// Jobs answered from the decision cache.
     pub cache_hits: u64,
-    /// Jobs that ran the full pipeline.
+    /// Jobs that ran (at least part of) the pipeline.
     pub cache_misses: u64,
-    /// Decisions currently cached.
+    /// Full-decision misses that resumed from a cached `Reconciled`
+    /// artifact: discovery replayed, verification re-ran (e.g. after a
+    /// `--reps` change or regenerated artifacts).
+    pub reconciled_replays: u64,
+    /// Full-decision misses that resumed from a cached `Verified`
+    /// artifact: only arbitration re-ran (e.g. after a `--target` or
+    /// device-model change).
+    pub verified_replays: u64,
+    /// Cache entries currently held — full decisions *and* per-stage
+    /// artifacts (a scratch pipeline run writes one of each tier).
     pub cache_entries: u64,
     /// Median completion latency over the sliding window.
     pub latency_p50: Option<Duration>,
     /// 95th-percentile completion latency over the sliding window.
     pub latency_p95: Option<Duration>,
+    /// Per-stage latency totals across every pipeline stage the service
+    /// ran (replayed stages don't re-run, so they don't count here).
+    pub stages: Vec<StageStat>,
+}
+
+/// Aggregate latency of one pipeline stage across a service's lifetime.
+#[derive(Debug, Clone)]
+pub struct StageStat {
+    /// Stage name (see [`Stage::as_str`]).
+    pub stage: &'static str,
+    /// How many times the stage ran.
+    pub count: u64,
+    /// Total wall-clock spent in the stage.
+    pub total: Duration,
 }
 
 impl StatsSnapshot {
@@ -352,7 +483,7 @@ impl StatsSnapshot {
         let fmt = |d: Option<Duration>| {
             d.map(metrics::fmt_duration).unwrap_or_else(|| "-".to_string())
         };
-        format!(
+        let mut line = format!(
             "jobs: {} submitted, {} completed, {} failed | cache: {} hits / {} misses ({} entries) | latency p50 {} p95 {}",
             self.submitted,
             self.completed,
@@ -362,7 +493,30 @@ impl StatsSnapshot {
             self.cache_entries,
             fmt(self.latency_p50),
             fmt(self.latency_p95),
-        )
+        );
+        if self.reconciled_replays + self.verified_replays > 0 {
+            line.push_str(&format!(
+                " | stage replays: {} reconciled, {} verified",
+                self.reconciled_replays, self.verified_replays
+            ));
+        }
+        let ran: Vec<String> = self
+            .stages
+            .iter()
+            .filter(|s| s.count > 0)
+            .map(|s| {
+                format!(
+                    "{} {}x{}",
+                    s.stage,
+                    s.count,
+                    metrics::fmt_duration(s.total / s.count.max(1) as u32)
+                )
+            })
+            .collect();
+        if !ran.is_empty() {
+            line.push_str(&format!(" | stage mean: {}", ran.join(", ")));
+        }
+        line
     }
 }
 
@@ -389,8 +543,9 @@ impl OffloadService {
         };
         let shared = Arc::new(Shared {
             cache,
-            decision_fingerprint: decision_fingerprint(&cfg),
+            fingerprints: stage_fingerprints(&cfg),
             counters: Counters::default(),
+            latencies: Arc::new(StageLatencies::default()),
         });
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let nworkers = cfg.workers;
@@ -430,9 +585,20 @@ impl OffloadService {
         self.shared.counters.submitted.fetch_add(1, Ordering::Relaxed);
         let started = Instant::now();
 
-        let key = match CacheKey::compute(src, entry, &self.shared.decision_fingerprint) {
+        let key = match CacheKey::compute(src, entry, &self.shared.fingerprints.decision) {
             Ok(k) => k,
-            Err(e) => return self.ready_handle(id, Err(e)),
+            // Key computation fails only when the source does not parse.
+            // Surface that as the same structured Parse-stage error the
+            // pipeline itself would produce, so callers can
+            // `downcast_ref::<OffloadError>()` uniformly (the module doc
+            // example relies on this).
+            Err(e) => {
+                let err = OffloadError::Parse {
+                    entry: entry.to_string(),
+                    message: format!("{e:#}"),
+                };
+                return self.ready_handle(id, Err(err.into()));
+            }
         };
         if let Some(done) = self.shared.try_cached(id, &key, entry, started) {
             return self.ready_handle(id, Ok(done));
@@ -478,15 +644,27 @@ impl OffloadService {
             let ring = c.latencies_ns.lock().expect("latency lock");
             ring.buf.iter().map(|&n| Duration::from_nanos(n)).collect()
         };
+        let lat = &self.shared.latencies;
+        let stages = Stage::ALL
+            .iter()
+            .map(|s| StageStat {
+                stage: s.as_str(),
+                count: lat.count[s.index()].load(Ordering::Relaxed),
+                total: Duration::from_nanos(lat.total_ns[s.index()].load(Ordering::Relaxed)),
+            })
+            .collect();
         StatsSnapshot {
             submitted: c.submitted.load(Ordering::Relaxed),
             completed: c.completed.load(Ordering::Relaxed),
             failed: c.failed.load(Ordering::Relaxed),
             cache_hits: c.cache_hits.load(Ordering::Relaxed),
             cache_misses: c.cache_misses.load(Ordering::Relaxed),
+            reconciled_replays: c.reconciled_hits.load(Ordering::Relaxed),
+            verified_replays: c.verified_hits.load(Ordering::Relaxed),
             cache_entries: self.shared.cache.len() as u64,
             latency_p50: metrics::percentile(&durations, 50.0),
             latency_p95: metrics::percentile(&durations, 95.0),
+            stages,
         }
     }
 
@@ -495,10 +673,10 @@ impl OffloadService {
         &self.shared.cache
     }
 
-    /// Fingerprint keying this service's decisions (pattern DB + policy +
-    /// verification settings).
+    /// Fingerprint keying this service's full decisions (pattern DB +
+    /// policies + verification settings + arbitration target).
     pub fn decision_fingerprint(&self) -> &str {
-        &self.shared.decision_fingerprint
+        &self.shared.fingerprints.decision
     }
 
     /// Drain the queue and join every worker.
@@ -564,7 +742,46 @@ fn run_job(c: &Coordinator, shared: &Shared, job: &Job) -> Result<CompletedJob> 
         return Ok(done);
     }
     shared.counters.cache_misses.fetch_add(1, Ordering::Relaxed);
-    let report = c.offload(&job.src, &job.entry)?;
+
+    let observer: Arc<dyn StageObserver> = shared.latencies.clone();
+    let req = c.request(&job.src, &job.entry).with_observer(observer);
+
+    // Resume from the deepest valid per-stage entry. The stage keys share
+    // the job's (source, entry) components but use the narrower
+    // per-prefix fingerprints, so a config change invalidates exactly the
+    // stages it affects: a full-decision miss can still replay discovery
+    // (and even verification) from a previous run.
+    let reconciled_key = job.key.with_fingerprint(&shared.fingerprints.discovery);
+    let verified_key = job.key.with_fingerprint(&shared.fingerprints.verify);
+
+    let mut resumed_from = None;
+    let verified = match shared.try_stage(&verified_key, Verified::from_json_str, "verified") {
+        Some(v) => {
+            shared.counters.verified_hits.fetch_add(1, Ordering::Relaxed);
+            resumed_from = Some(Stage::Verify);
+            v
+        }
+        None => {
+            let reconciled =
+                match shared.try_stage(&reconciled_key, Reconciled::from_json_str, "reconciled") {
+                    Some(r) => {
+                        shared.counters.reconciled_hits.fetch_add(1, Ordering::Relaxed);
+                        resumed_from = Some(Stage::Reconcile);
+                        r
+                    }
+                    None => {
+                        let r = req.parse()?.discover(&req)?.reconcile(&req)?;
+                        shared.persist_stage(&reconciled_key, &r.to_json_string());
+                        r
+                    }
+                };
+            let v = reconciled.verify(&req)?;
+            shared.persist_stage(&verified_key, &v.to_json_string());
+            v
+        }
+    };
+    let report = verified.arbitrate(&req)?.report();
+
     let report_json: Arc<str> = Arc::from(report_json::report_to_string(&report));
     // The verified decision is the product; failing to persist it degrades
     // the cache (and is reported), but must not fail the job.
@@ -578,6 +795,7 @@ fn run_job(c: &Coordinator, shared: &Shared, job: &Job) -> Result<CompletedJob> 
         report,
         report_json,
         from_cache: false,
+        resumed_from,
         wall: job.submitted_at.elapsed(),
     })
 }
@@ -635,12 +853,49 @@ mod tests {
             failed: 0,
             cache_hits: 0,
             cache_misses: 0,
+            reconciled_replays: 0,
+            verified_replays: 0,
             cache_entries: 0,
             latency_p50: None,
             latency_p95: None,
+            stages: Vec::new(),
         };
         let line = s.render();
         assert!(line.contains("0 submitted"));
         assert!(line.contains("p50 -"));
+        assert!(!line.contains("stage"), "idle services render no stage segments: {line}");
+    }
+
+    #[test]
+    fn stage_fingerprints_isolate_their_inputs() {
+        let cfg = ServiceConfig::new("some/artifacts");
+        let base = stage_fingerprints(&cfg);
+
+        // A verification-settings change invalidates verify + decision but
+        // leaves discovery intact: that is what lets the pool replay
+        // discovery from the cache while re-running verification.
+        let mut reps = cfg.clone();
+        reps.verify.reps += 1;
+        let fp = stage_fingerprints(&reps);
+        assert_eq!(fp.discovery, base.discovery);
+        assert_ne!(fp.verify, base.verify);
+        assert_ne!(fp.decision, base.decision);
+
+        // A backend retarget invalidates only the decision: verified
+        // measurements replay, arbitration re-runs.
+        let mut target = cfg.clone();
+        target.backend_policy = BackendPolicy::Fpga;
+        let fp = stage_fingerprints(&target);
+        assert_eq!(fp.discovery, base.discovery);
+        assert_eq!(fp.verify, base.verify);
+        assert_ne!(fp.decision, base.decision);
+
+        // An interface-policy change invalidates everything.
+        let mut policy = cfg.clone();
+        policy.policy = InterfacePolicy::AutoReject;
+        let fp = stage_fingerprints(&policy);
+        assert_ne!(fp.discovery, base.discovery);
+        assert_ne!(fp.verify, base.verify);
+        assert_ne!(fp.decision, base.decision);
     }
 }

@@ -525,8 +525,10 @@ mod tests {
         };
         let out = apply(&prog, &[plan]).unwrap();
         let printed = crate::parser::print_program(&out);
-        assert!(printed.contains("void my_decomp(double a[], int n) {\n    __fb_lu_factor(a, n);\n}"),
-            "printed:\n{printed}");
+        assert!(
+            printed.contains("void my_decomp(double a[], int n) {\n    __fb_lu_factor(a, n);\n}"),
+            "printed:\n{printed}"
+        );
     }
 
     #[test]

@@ -95,9 +95,14 @@ fn full_environment_adaptation_flow() {
     let plan = flow::plan_resources(report.outcome.best_time.secs(), &req).unwrap();
     assert!(plan.instances >= 1);
 
-    let locations = vec![
-        flow::Location { name: "dc".into(), gpus: 16, fpgas: 8, cost_per_hour: 0.5, fpga_cost_per_hour: 0.2, latency_ms: 10.0 },
-    ];
+    let locations = vec![flow::Location {
+        name: "dc".into(),
+        gpus: 16,
+        fpgas: 8,
+        cost_per_hour: 0.5,
+        fpga_cost_per_hour: 0.2,
+        latency_ms: 10.0,
+    }];
     let placement = flow::plan_placement(&plan, &req, &locations).unwrap();
     assert_eq!(placement.location, "dc");
 

@@ -1,0 +1,271 @@
+//! Integration tests for the staged pipeline API: stage-by-stage runs
+//! must match the one-shot `Coordinator::offload` wrapper, every stage
+//! artifact must serialize and resume in isolation, structured errors
+//! must carry the failing stage and its partial artifact, and stage
+//! observers must see every stage.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use fbo::coordinator::{
+    apps, flow, Backend, BackendPolicy, Coordinator, OffloadError, OffloadReport, Stage,
+    StageObserver, Verified,
+};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn coordinator() -> Coordinator {
+    let mut c = Coordinator::open(&artifacts_dir()).expect("run `make artifacts` first");
+    c.verify.reps = 1;
+    c
+}
+
+/// The decision content of a report — everything except the measured
+/// wall-clocks, which differ between any two runs by nature.
+fn decision_of(r: &OffloadReport) -> String {
+    format!(
+        "entry:{} callees:{:?} blocks:{:?} enabled:{:?} labels:{:?} ok:{:?} \
+         backends:{:?} overall:{} policy:{} source:{}",
+        r.entry,
+        r.external_callees,
+        r.blocks
+            .iter()
+            .map(|b| {
+                (
+                    format!("{:?}", b.via),
+                    b.plan.site.label(),
+                    format!("{:?}", b.plan.reconciliation),
+                )
+            })
+            .collect::<Vec<_>>(),
+        r.outcome.best_enabled,
+        r.outcome.tried.iter().map(|p| p.label.clone()).collect::<Vec<_>>(),
+        r.outcome.tried.iter().map(|p| p.output_ok).collect::<Vec<_>>(),
+        r.arbitration.blocks.iter().map(|b| b.backend.as_str()).collect::<Vec<_>>(),
+        r.arbitration.backend.as_str(),
+        r.arbitration.policy.as_str(),
+        r.transformed_source,
+    )
+}
+
+// ------------------------------------------------- staged == one-shot
+
+#[test]
+fn staged_run_matches_one_shot_offload() {
+    let c = coordinator();
+    let src = apps::fft_app_lib(64);
+
+    // Drive the pipeline stage by stage...
+    let req = c.request(&src, "main");
+    let parsed = req.parse().unwrap();
+    let discovered = parsed.discover(&req).unwrap();
+    assert!(!discovered.candidates.is_empty(), "fft2d must be discovered");
+    let reconciled = discovered.reconcile(&req).unwrap();
+    assert_eq!(reconciled.blocks.len(), discovered.candidates.len());
+    let verified = reconciled.verify(&req).unwrap();
+    assert!(verified.outcome.best_speedup > 1.0);
+    let arbitrated = verified.arbitrate(&req).unwrap();
+    let staged = arbitrated.report();
+
+    // ...and through the compatibility wrapper: the decision must be
+    // identical (timings are wall-clock and differ between runs).
+    let one_shot = c.offload(&src, "main").unwrap();
+    assert_eq!(decision_of(&staged), decision_of(&one_shot));
+
+    // The staged report is the real thing end to end: it serializes
+    // through the same codec the decision cache uses.
+    let encoded = fbo::coordinator::report_json::report_to_string(&staged);
+    let back = fbo::coordinator::report_json::report_from_str(&encoded).unwrap();
+    assert_eq!(decision_of(&back), decision_of(&staged));
+}
+
+// ------------------------------------------------- serialize + resume
+
+#[test]
+fn every_stage_artifact_serializes_and_resumes() {
+    let c = coordinator();
+    let src = apps::lu_app_lib(64);
+    let req = c.request(&src, "main");
+
+    let parsed = req.parse().unwrap();
+    let parsed2 = fbo::coordinator::Parsed::from_json_str(&parsed.to_json_string()).unwrap();
+    assert_eq!(parsed2.source, parsed.source);
+
+    let discovered = parsed2.discover(&req).unwrap();
+    let discovered2 =
+        fbo::coordinator::Discovered::from_json_str(&discovered.to_json_string()).unwrap();
+    assert_eq!(discovered2.candidates.len(), discovered.candidates.len());
+
+    let reconciled = discovered2.reconcile(&req).unwrap();
+    let reconciled2 =
+        fbo::coordinator::Reconciled::from_json_str(&reconciled.to_json_string()).unwrap();
+    assert_eq!(reconciled2.blocks.len(), reconciled.blocks.len());
+
+    let verified = reconciled2.verify(&req).unwrap();
+    let saved = verified.to_json_string();
+    let verified2 = Verified::from_json_str(&saved).unwrap();
+    assert_eq!(verified2.to_json_string(), saved, "stage codec must be byte-stable");
+
+    let arbitrated = verified2.arbitrate(&req).unwrap();
+    let arbitrated2 =
+        fbo::coordinator::Arbitrated::from_json_str(&arbitrated.to_json_string()).unwrap();
+    assert_eq!(arbitrated2.transformed_source, arbitrated.transformed_source);
+    assert!(arbitrated2.report().best_speedup() > 1.0);
+}
+
+#[test]
+fn resuming_a_verified_artifact_under_a_new_target_changes_the_outcome() {
+    // The inspect-and-resume loop of examples/staged_pipeline.rs, under
+    // test: verify once, arbitrate twice under different targets. The
+    // measurements are shared; only arbitration re-runs.
+    let c = coordinator();
+    let src = apps::lu_app_lib(64);
+    let req = c.request(&src, "main");
+    let saved = req
+        .parse()
+        .unwrap()
+        .discover(&req)
+        .unwrap()
+        .reconcile(&req)
+        .unwrap()
+        .verify(&req)
+        .unwrap()
+        .to_json_string();
+
+    let gpu_req = c.request(&src, "main").with_target(BackendPolicy::Gpu);
+    let gpu = Verified::from_json_str(&saved).unwrap().arbitrate(&gpu_req).unwrap();
+    assert_eq!(gpu.report().backend(), Backend::Gpu);
+    assert_eq!(gpu.arbitration.simulated_hours, 0.0);
+
+    let fpga_req = c.request(&src, "main").with_target(BackendPolicy::Fpga);
+    let fpga = Verified::from_json_str(&saved).unwrap().arbitrate(&fpga_req).unwrap();
+    assert_eq!(fpga.report().backend(), Backend::Fpga);
+    assert!(fpga.arbitration.simulated_hours >= 3.0, "forced FPGA pays the compile");
+
+    // Same verified measurements behind both decisions.
+    assert_eq!(
+        gpu.verified.outcome.best_speedup,
+        fpga.verified.outcome.best_speedup
+    );
+}
+
+// ----------------------------------------------------------- observers
+
+#[derive(Default)]
+struct Recorder(Mutex<Vec<(Stage, Duration)>>);
+
+impl StageObserver for Recorder {
+    fn stage_completed(&self, stage: Stage, wall: Duration) {
+        self.0.lock().unwrap().push((stage, wall));
+    }
+}
+
+#[test]
+fn observer_sees_every_stage_in_order() {
+    let c = coordinator();
+    let recorder = Arc::new(Recorder::default());
+    let observer: Arc<dyn StageObserver> = recorder.clone();
+    let req = c.request(&apps::matmul_app(64), "main").with_observer(observer);
+    let report = req.run().unwrap();
+    assert!(report.best_speedup() > 1.0);
+
+    let stages: Vec<Stage> = recorder.0.lock().unwrap().iter().map(|(s, _)| *s).collect();
+    assert_eq!(
+        stages,
+        vec![Stage::Parse, Stage::Discover, Stage::Reconcile, Stage::Verify, Stage::Arbitrate]
+    );
+}
+
+// -------------------------------------------------------------- errors
+
+#[test]
+fn errors_carry_the_failing_stage_and_partial_artifact() {
+    let c = coordinator();
+
+    // Unparseable source: Parse stage.
+    let err = c.request("int f( {", "main").run().unwrap_err();
+    assert_eq!(err.stage(), Stage::Parse);
+
+    // Missing entry point: caught up front, Parse stage.
+    let err = c.request("int main() { return 0; }", "nope").run().unwrap_err();
+    assert_eq!(err.stage(), Stage::Parse);
+    assert!(err.message().contains("nope"), "{err}");
+
+    // A diverging baseline is contained by fuel in the Verify stage, and
+    // the error still carries the reconciled blocks of Steps 1-2.
+    let mut c2 = coordinator();
+    c2.verify.fuel = 100_000;
+    let src = "
+        void ludcmp(double a[], int n);
+        int main() {
+            double a[4];
+            while (1) { a[0] = a[0] + 1.0; }
+            ludcmp(a, 2);
+            return 0;
+        }";
+    let err = c2.request(src, "main").run().unwrap_err();
+    assert_eq!(err.stage(), Stage::Verify);
+    match err {
+        OffloadError::Verify { reconciled, .. } => {
+            assert!(!reconciled.blocks.is_empty(), "partial artifact must survive");
+        }
+        other => panic!("wrong variant: {other}"),
+    }
+}
+
+// ------------------------------------------------------------ placement
+
+#[test]
+fn place_stage_consumes_the_arbitrated_times() {
+    let c = coordinator();
+    let src = apps::fft_app_lib(64);
+    let req = c.request(&src, "main");
+    let arbitrated = req
+        .parse()
+        .unwrap()
+        .discover(&req)
+        .unwrap()
+        .reconcile(&req)
+        .unwrap()
+        .verify(&req)
+        .unwrap()
+        .arbitrate(&req)
+        .unwrap();
+
+    let requirements = flow::Requirements {
+        target_rps: 30.0,
+        max_latency_ms: 20.0,
+        budget_per_month: 10_000.0,
+    };
+    let locations = vec![flow::Location {
+        name: "dc".into(),
+        gpus: 16,
+        fpgas: 8,
+        cost_per_hour: 0.5,
+        fpga_cost_per_hour: 0.2,
+        latency_ms: 10.0,
+    }];
+    let placed = arbitrated.place(&req, &requirements, &locations).unwrap();
+    assert_eq!(placed.location, "dc");
+    assert!(placed.instances >= 1);
+    assert_ne!(placed.backend, Backend::Cpu, "fft offloads, so an accelerator hosts it");
+
+    // Infeasible requirements surface as a structured Placement error
+    // carrying the arbitrated artifact.
+    let impossible = flow::Requirements {
+        target_rps: 30.0,
+        max_latency_ms: 1.0,
+        budget_per_month: 10_000.0,
+    };
+    let err = arbitrated.place(&req, &impossible, &locations).unwrap_err();
+    assert_eq!(err.stage(), Stage::Place);
+    match err {
+        OffloadError::Placement { arbitrated: partial, .. } => {
+            assert_eq!(partial.arbitration.backend, arbitrated.arbitration.backend);
+        }
+        other => panic!("wrong variant: {other}"),
+    }
+}

@@ -1,0 +1,61 @@
+//! Report-JSON version compatibility: a committed v1 fixture (the
+//! pre-arbitration format) must still decode, and a v2 fixture must
+//! round-trip byte-identically through `coordinator/report_json.rs` —
+//! the invariant the decision cache's byte-identical replay rests on.
+
+use fbo::coordinator::{report_json, Backend, BackendPolicy};
+use fbo::transform::Reconciliation;
+
+const V1_FIXTURE: &str = include_str!("fixtures/report_v1.json");
+const V2_FIXTURE: &str = include_str!("fixtures/report_v2.json");
+
+#[test]
+fn committed_v1_fixture_still_decodes() {
+    let report = report_json::report_from_str(V1_FIXTURE)
+        .expect("v1 reports must stay decodable");
+    assert_eq!(report.entry, "main");
+    assert_eq!(report.external_callees, vec!["ludcmp".to_string()]);
+    assert_eq!(report.blocks.len(), 1);
+    assert_eq!(
+        report.blocks[0].plan.reconciliation,
+        Reconciliation::DropOptional(vec![2])
+    );
+    assert_eq!(report.outcome.best_speedup, 8.0);
+    // v1 predates per-pattern traffic: it reads as zero.
+    assert_eq!(report.outcome.tried[0].traffic.dispatches, 0);
+    // v1 predates arbitration: the section is synthesized for the GPU-only
+    // configuration the v1 pipeline effectively ran under.
+    assert_eq!(report.arbitration.policy, BackendPolicy::Gpu);
+    assert_eq!(report.backend(), Backend::Gpu);
+    assert!(report.arbitration.blocks.is_empty());
+    assert_eq!(report.arbitration.simulated_hours, 0.0);
+    assert!(report.arbitration.gpu_request_secs.is_some());
+    assert!(report.arbitration.fpga_request_secs.is_none());
+}
+
+#[test]
+fn v1_fixture_upgrades_to_v2_on_reencode() {
+    let report = report_json::report_from_str(V1_FIXTURE).unwrap();
+    let upgraded = report_json::report_to_string(&report);
+    assert!(upgraded.contains(report_json::REPORT_FORMAT));
+    assert!(!upgraded.contains(report_json::REPORT_FORMAT_V1));
+    assert!(upgraded.contains("\"arbitration\""));
+    // Once upgraded, the canonical form is a fixed point of the codec.
+    let again = report_json::report_to_string(&report_json::report_from_str(&upgraded).unwrap());
+    assert_eq!(again, upgraded);
+}
+
+#[test]
+fn committed_v2_fixture_round_trips_byte_identically() {
+    let report = report_json::report_from_str(V2_FIXTURE).expect("v2 fixture must decode");
+    assert_eq!(report.entry, "main");
+    assert_eq!(report.backend(), Backend::Fpga);
+    assert_eq!(report.outcome.tried[0].traffic.bytes_in, 32768);
+    let reencoded = report_json::report_to_string(&report);
+    // The canonical print is a fixed point of the codec...
+    let twice = report_json::report_to_string(&report_json::report_from_str(&reencoded).unwrap());
+    assert_eq!(twice, reencoded, "canonical print must be a codec fixed point");
+    // ...and the committed fixture is already in canonical form (modulo
+    // the file's trailing newline), so one round trip is byte-identical.
+    assert_eq!(reencoded, V2_FIXTURE.trim_end(), "v2 fixture must round-trip byte-identically");
+}

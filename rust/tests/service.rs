@@ -4,7 +4,7 @@
 
 use std::path::PathBuf;
 
-use fbo::coordinator::{apps, report_json};
+use fbo::coordinator::{apps, report_json, Backend, BackendPolicy, Stage};
 use fbo::patterndb::PatternDb;
 use fbo::service::{CacheKey, OffloadService, ServiceConfig};
 
@@ -164,6 +164,84 @@ fn concurrent_submissions_through_the_pool() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+// ------------------------------------------------- stage-granular cache
+
+#[test]
+fn verify_policy_change_replays_discovery_and_retarget_replays_verification() {
+    let (cfg, dir) = test_config("stagecache");
+    let src = apps::fft_app_lib(64);
+
+    // Scratch run: full pipeline, stage artifacts persisted alongside the
+    // decision.
+    {
+        let service = OffloadService::start(cfg.clone()).unwrap();
+        let first = service.submit(&src, "main").wait().unwrap();
+        assert!(!first.from_cache);
+        assert_eq!(first.resumed_from, None, "nothing to resume from on a cold cache");
+        let stats = service.stats();
+        assert_eq!(stats.cache_misses, 1);
+        assert_eq!(stats.reconciled_replays, 0);
+        assert_eq!(stats.verified_replays, 0);
+        // The observer-backed stage counters saw the whole pipeline run.
+        for stage in ["parse", "discover", "reconcile", "verify", "arbitrate"] {
+            let s = stats.stages.iter().find(|s| s.stage == stage).unwrap();
+            assert_eq!(s.count, 1, "{stage} must have run exactly once");
+        }
+    }
+
+    // A verify-settings change invalidates the decision and the verified
+    // artifact but replays discovery from the cache: the hit/miss counters
+    // show a full-decision miss alongside a reconciled-stage replay.
+    {
+        let mut reverify = cfg.clone();
+        reverify.verify.reps = 2;
+        let service = OffloadService::start(reverify).unwrap();
+        let done = service.submit(&src, "main").wait().unwrap();
+        assert!(!done.from_cache, "verify-settings change must re-verify");
+        assert_eq!(done.resumed_from, Some(Stage::Reconcile), "discovery must replay");
+        assert_eq!(done.report.outcome.baseline.reps, 2, "verification re-ran with new reps");
+        let stats = service.stats();
+        assert_eq!(stats.cache_hits, 0);
+        assert_eq!(stats.cache_misses, 1);
+        assert_eq!(stats.reconciled_replays, 1);
+        assert_eq!(stats.verified_replays, 0);
+        // Parse/discover/reconcile were replayed, not re-run.
+        for stage in ["parse", "discover", "reconcile"] {
+            let s = stats.stages.iter().find(|s| s.stage == stage).unwrap();
+            assert_eq!(s.count, 0, "{stage} must have been replayed from cache");
+        }
+        assert_eq!(stats.stages.iter().find(|s| s.stage == "verify").unwrap().count, 1);
+    }
+
+    // A backend retarget keeps the verified measurements and only
+    // re-arbitrates.
+    {
+        let mut retarget = cfg.clone();
+        retarget.backend_policy = BackendPolicy::Gpu;
+        let service = OffloadService::start(retarget).unwrap();
+        let done = service.submit(&src, "main").wait().unwrap();
+        assert!(!done.from_cache, "--target change must re-arbitrate");
+        assert_eq!(done.resumed_from, Some(Stage::Verify), "measurements must replay");
+        assert_eq!(done.report.backend(), Backend::Gpu);
+        let stats = service.stats();
+        assert_eq!(stats.verified_replays, 1);
+        assert_eq!(stats.reconciled_replays, 0);
+        assert_eq!(stats.stages.iter().find(|s| s.stage == "verify").unwrap().count, 0);
+        assert_eq!(stats.stages.iter().find(|s| s.stage == "arbitrate").unwrap().count, 1);
+    }
+
+    // Unchanged config after all that: the original decision still
+    // replays byte-identically from the full cache.
+    {
+        let service = OffloadService::start(cfg).unwrap();
+        let done = service.submit(&src, "main").wait().unwrap();
+        assert!(done.from_cache);
+        assert_eq!(done.resumed_from, None);
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 // -------------------------------------------------------------- failures
 
 #[test]
@@ -171,8 +249,14 @@ fn failures_are_contained() {
     let (cfg, dir) = test_config("failures");
     let service = OffloadService::start(cfg).unwrap();
 
-    // Unparseable source fails the job (no cache key exists for it).
-    assert!(service.submit("int f( {", "main").wait().is_err());
+    // Unparseable source fails the job (no cache key exists for it) —
+    // and the error downcasts to the structured Parse-stage error, the
+    // contract the service/mod.rs doc example routes on.
+    let err = service.submit("int f( {", "main").wait().unwrap_err();
+    let stage_err = err
+        .downcast_ref::<fbo::coordinator::OffloadError>()
+        .expect("parse failures must cross the service boundary as OffloadError");
+    assert_eq!(stage_err.stage(), Stage::Parse);
     // Missing entry point fails the job but never poisons the pool.
     assert!(service.submit("int main() { return 0; }", "nope").wait().is_err());
     // The service keeps serving real work afterwards.
@@ -182,8 +266,10 @@ fn failures_are_contained() {
     let stats = service.stats();
     assert_eq!(stats.failed, 2);
     assert_eq!(stats.completed, 1);
-    // Failed decisions are never cached.
-    assert_eq!(stats.cache_entries, 1);
+    // Failed decisions are never cached. The one successful pipeline run
+    // writes three entries: the full decision plus the Reconciled and
+    // Verified stage artifacts it can later resume from.
+    assert_eq!(stats.cache_entries, 3);
 
     std::fs::remove_dir_all(&dir).ok();
 }
