@@ -1,0 +1,132 @@
+//! Bench: serial vs pooled pattern-search verification (Step 3).
+//!
+//! The paper measures every offload pattern serially on the verification
+//! machine; the per-stage latency counters show that this dominates
+//! end-to-end wall time. The baseline and the phase-1 single-block
+//! patterns are independent, so the pooled executor fans them across
+//! sibling PJRT engines and pays the slowest pattern instead of the sum.
+//! This bench runs both executors over the 3-block sensor-fusion app and
+//! asserts the *decisions* are identical — the parallelism buys time,
+//! never a different answer.
+//!
+//! Run: `cargo bench --bench verify_parallel` (add `-- --test` for the
+//! CI smoke mode: 1 rep, no wall-clock assertion — timing on shared
+//! runners is noise).
+//! Records: `BENCH_verify.json` at the repo root.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use fbo::coordinator::{apps, Coordinator, OffloadReport};
+use fbo::metrics::Table;
+use fbo::patterndb::json::{self, Json};
+use fbo::service::MeasurePool;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn pattern_labels(r: &OffloadReport) -> Vec<String> {
+    r.outcome.tried.iter().map(|p| p.label.clone()).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--test");
+    let n = env_usize("FBO_N", 64);
+    let reps = env_usize("FBO_REPS", if smoke { 1 } else { 3 });
+    let parallel = env_usize("FBO_VERIFY_PARALLEL", 4).max(2);
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let src = apps::sensor_fusion_app(n);
+
+    println!(
+        "== verify executors: sensor-fusion app (3 blocks) at n={n}, reps={reps}, \
+         --verify-parallel {parallel} =="
+    );
+
+    // Serial: one engine, patterns back to back. Warm once so artifact
+    // compiles (cached in the engine) are not billed to either side.
+    let mut serial = Coordinator::open(&artifacts)?;
+    serial.verify.reps = reps;
+    let _ = serial.offload(&src, "main")?;
+    let t0 = Instant::now();
+    let serial_report = serial.offload(&src, "main")?;
+    let serial_secs = t0.elapsed().as_secs_f64();
+
+    // Pooled: local engine + (parallel - 1) measure-only siblings.
+    let mut pooled = Coordinator::open(&artifacts)?;
+    pooled.verify.reps = reps;
+    let pool = MeasurePool::start(&artifacts, parallel - 1)?;
+    pooled.executor = Some(Rc::new(pool.executor(pooled.engine.clone(), parallel)));
+    let _ = pooled.offload(&src, "main")?;
+    let t0 = Instant::now();
+    let pooled_report = pooled.offload(&src, "main")?;
+    let pooled_secs = t0.elapsed().as_secs_f64();
+
+    // The determinism contract: identical decision regardless of executor.
+    assert!(
+        serial_report.outcome.tried.len() >= 4,
+        "expected >=3 per-block patterns + combined, got {:?}",
+        pattern_labels(&serial_report)
+    );
+    assert_eq!(
+        serial_report.outcome.best_enabled, pooled_report.outcome.best_enabled,
+        "serial and pooled searches must pick the same pattern"
+    );
+    assert_eq!(
+        pattern_labels(&serial_report),
+        pattern_labels(&pooled_report),
+        "tried order must match"
+    );
+
+    let speedup = serial_secs / pooled_secs.max(1e-12);
+    let mut table = Table::new(&["executor", "wall (s)", "patterns", "best speedup"]);
+    for (name, secs, report) in [
+        ("serial", serial_secs, &serial_report),
+        ("pooled", pooled_secs, &pooled_report),
+    ] {
+        table.row(&[
+            name.to_string(),
+            format!("{secs:.3}"),
+            report.outcome.tried.len().to_string(),
+            format!("{:.1}", report.best_speedup()),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("pooled vs serial verify wall: {speedup:.2}x");
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("verify_parallel")),
+        ("n", Json::num(n as f64)),
+        ("reps", Json::num(reps as f64)),
+        ("verify_parallel", Json::num(parallel as f64)),
+        ("blocks", Json::num(3.0)),
+        (
+            "patterns",
+            Json::Arr(pattern_labels(&serial_report).iter().map(Json::str).collect()),
+        ),
+        ("serial_secs", Json::num(serial_secs)),
+        ("pooled_secs", Json::num(pooled_secs)),
+        ("speedup", Json::num(speedup)),
+        ("best_speedup", Json::num(serial_report.best_speedup())),
+        (
+            "decisions_identical",
+            Json::Bool(serial_report.outcome.best_enabled == pooled_report.outcome.best_enabled),
+        ),
+    ]);
+    let bench_path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_verify.json");
+    std::fs::write(&bench_path, json::to_string_pretty(&out))?;
+    println!("recorded {}", bench_path.display());
+
+    // Wall-clock thesis — skipped in smoke mode, where 1-rep timings on a
+    // noisy shared runner prove nothing.
+    if !smoke {
+        assert!(
+            pooled_secs < serial_secs,
+            "pooled verify ({pooled_secs:.3}s) must beat serial ({serial_secs:.3}s)"
+        );
+    }
+    Ok(())
+}

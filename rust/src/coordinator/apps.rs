@@ -268,6 +268,66 @@ int main() {{
     )
 }
 
+/// Sensor-fusion analytics app: **three** replaceable library blocks in
+/// one program — FFT the sensor frame (`fft2d`), correlate it against a
+/// filter bank (`matmul`), LU-factor the fused covariance (`ludcmp`).
+/// The multi-block fixture for the Step-3 pattern search: phase 1
+/// measures each block alone, phase 2 combines the winners, and the
+/// parallel-verification bench compares serial vs pooled executors on it.
+pub fn sensor_fusion_app(n: usize) -> String {
+    format!(
+        r#"// Sensor fusion: spectrum (NR fft2d) -> filter-bank correlation
+// (matmul) -> LU factorization of the fused covariance (NR ludcmp).
+#include <math.h>
+#include <nr.h>
+#include <nrfft.h>
+
+int N = {n};
+
+void fft2d(double re[], double im[], int n);
+void ludcmp(double a[], int n);
+void matmul(double a[], double b[], double c[], int n);
+
+int main() {{
+    double re[N * N];
+    double im[N * N];
+    double w[N * N];
+    double h[N * N];
+    double a[N * N];
+    int i, j;
+    for (i = 0; i < N; i++) {{
+        for (j = 0; j < N; j++) {{
+            re[i * N + j] = sin(0.02 * i) + 0.5 * sin(0.31 * i + 0.17 * j);
+            im[i * N + j] = 0.0;
+            w[i * N + j] = cos(0.001 * (i * N + j));
+        }}
+    }}
+    fft2d(re, im, N);
+    matmul(w, re, h, N);
+    for (i = 0; i < N; i++) {{
+        for (j = 0; j < N; j++) {{
+            a[i * N + j] = 0.001 * h[i * N + j] / (N * N);
+        }}
+    }}
+    for (i = 0; i < N; i++) {{
+        a[i * N + i] = a[i * N + i] + N;
+    }}
+    ludcmp(a, N);
+    double energy = 0.0;
+    for (i = 0; i < N * N; i++) {{
+        energy += re[i] * re[i] + im[i] * im[i];
+    }}
+    double logdet = 0.0;
+    for (i = 0; i < N; i++) {{
+        logdet += log(fabs(a[i * N + i]));
+    }}
+    printf("fused energy %g log|det| %g\n", energy, logdet);
+    return logdet + energy / (N * N * N);
+}}
+"#
+    )
+}
+
 /// Dense stencil/map app: heavy elementwise math with no library calls —
 /// the workload class where *loop* offloading ([33]) legitimately shines
 /// (used by the Fig. 4 bench to show the GA curve with real signal).
@@ -319,6 +379,7 @@ pub fn all(n: usize) -> Vec<(String, String)> {
         (format!("lu_app_lib_{n}.c"), lu_app_lib(n)),
         (format!("lu_app_copy_{n}.c"), lu_app_copy(n)),
         (format!("matmul_app_{n}.c"), matmul_app(n)),
+        (format!("sensor_fusion_app_{n}.c"), sensor_fusion_app(n)),
     ]
 }
 
@@ -371,7 +432,7 @@ mod tests {
     fn write_all_materializes_files() {
         let dir = std::env::temp_dir().join(format!("fbo-apps-{}", std::process::id()));
         let names = write_all(&dir, 16).unwrap();
-        assert_eq!(names.len(), 5);
+        assert_eq!(names.len(), 6);
         for n in names {
             assert!(dir.join(n).exists());
         }

@@ -49,7 +49,10 @@ pub use pipeline::{
     Arbitrated, Candidate, Discovered, OffloadError, OffloadRequest, Parsed, Placed, Reconciled,
     Stage, StageObserver, Verified,
 };
-pub use verify::{SearchOutcome, VerifyConfig};
+pub use verify::{
+    MeasuredPattern, PatternExecutor, PatternSpec, ResultProbe, SearchOutcome, SerialExecutor,
+    VerifyConfig, VerifyContext, VerifyPlan,
+};
 
 /// How a block was discovered.
 #[derive(Debug, Clone, PartialEq)]
@@ -124,6 +127,12 @@ pub struct Coordinator {
     pub backend_policy: BackendPolicy,
     /// FPGA device model the arbitration evaluates IP cores against.
     pub device: crate::fpga::Device,
+    /// Pattern executor the Verify stage measures with. `None` means the
+    /// serial default (one engine, patterns back to back); the service
+    /// tier and CLI `--verify-parallel` install a pooled executor that
+    /// fans independent patterns across sibling engines. The choice never
+    /// changes the [`SearchOutcome`] — only how fast it is produced.
+    pub executor: Option<std::rc::Rc<dyn PatternExecutor>>,
 }
 
 impl Coordinator {
@@ -137,6 +146,7 @@ impl Coordinator {
             verify: VerifyConfig::default(),
             backend_policy: BackendPolicy::Auto,
             device: crate::fpga::ARRIA10_GX,
+            executor: None,
         })
     }
 

@@ -56,7 +56,7 @@ use crate::transform::{self, reconcile, signature_of, InterfacePolicy, PlannedRe
 use super::backend::{self, Backend, BackendPolicy};
 use super::flow;
 use super::report_json;
-use super::verify::{self, SearchOutcome, VerifyConfig};
+use super::verify::{self, PatternExecutor, SearchOutcome, SerialExecutor, VerifyConfig};
 use super::{Coordinator, DiscoveredBlock, DiscoveryPath, OffloadReport};
 
 // ---------------------------------------------------------------- stages
@@ -258,6 +258,7 @@ pub struct OffloadRequest {
     /// FPGA device model the arbitration evaluates IP cores against.
     pub device: fpga::Device,
     observer: Option<Arc<dyn StageObserver>>,
+    executor: Option<Rc<dyn PatternExecutor>>,
 }
 
 impl OffloadRequest {
@@ -274,6 +275,7 @@ impl OffloadRequest {
             backend_policy: c.backend_policy,
             device: c.device,
             observer: None,
+            executor: c.executor.clone(),
         }
     }
 
@@ -320,6 +322,17 @@ impl OffloadRequest {
     /// Install a per-stage completion observer.
     pub fn with_observer(mut self, observer: Arc<dyn StageObserver>) -> Self {
         self.observer = Some(observer);
+        self
+    }
+
+    /// Install the [`PatternExecutor`] the Verify stage measures patterns
+    /// with. Defaults to a [`SerialExecutor`] over the request's engine
+    /// (the paper's serial Step 3); the service tier installs its pooled
+    /// executor here to fan independent patterns across idle sibling
+    /// engines. The executor affects only *how fast* the measurements run
+    /// — the reduced [`SearchOutcome`] is identical either way.
+    pub fn with_executor(mut self, executor: Rc<dyn PatternExecutor>) -> Self {
+        self.executor = Some(executor);
         self
     }
 
@@ -591,12 +604,23 @@ impl Reconciled {
         let search = || -> Result<SearchOutcome> {
             let linked = link_cpu_libraries(&req.db, &self.discovered.parsed.program)?;
             let accepted = self.accepted();
-            verify::search_patterns(
+            // The request's executor decides how the independent pattern
+            // measurements run (serial on this engine, or fanned out by
+            // the service pool) — never what the outcome is.
+            let serial;
+            let executor: &dyn PatternExecutor = match &req.executor {
+                Some(e) => e.as_ref(),
+                None => {
+                    serial = SerialExecutor::new(req.engine.clone());
+                    &serial
+                }
+            };
+            verify::search_patterns_with(
                 &linked,
                 &self.discovered.parsed.entry,
                 &accepted,
-                &req.engine,
                 &req.verify,
+                executor,
             )
         };
         let outcome = search().map_err(|e| OffloadError::Verify {

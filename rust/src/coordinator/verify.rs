@@ -7,13 +7,29 @@
 //! pattern as the solution. This module is that loop: every candidate
 //! pattern is an actual transformed program executed in the interpreter
 //! with PJRT-backed externals installed.
+//!
+//! The search is structured **plan / measure / reduce** so the independent
+//! measurements can be fanned out:
+//!
+//! * [`VerifyPlan`] enumerates the pattern measurements — the all-CPU
+//!   baseline and every phase-1 single-block pattern form one batch of
+//!   *independent* measurements; the phase-2 `combined-winners` pattern is
+//!   derived from the phase-1 results and measured in a second round.
+//! * A [`PatternExecutor`] runs a batch. [`SerialExecutor`] measures the
+//!   patterns one after another on a single engine (the paper's serial
+//!   Step 3); the service tier's `PooledExecutor` fans them out across the
+//!   worker pool's idle sibling engines.
+//! * The reduce step ([`VerifyPlan::reduce`]) consumes results
+//!   index-aligned with the plan, so the [`SearchOutcome`] — `best_enabled`,
+//!   tie-breaks, `tried` ordering — is identical regardless of the order in
+//!   which an executor completed the measurements.
 
 use std::rc::Rc;
 use std::time::Duration;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::interp::{Interp, Value};
+use crate::interp::{ExternalFn, Interp, Value};
 use crate::metrics::{measure, Measurement};
 use crate::parser::Program;
 use crate::runtime::Engine;
@@ -57,6 +73,62 @@ pub struct DeviceTraffic {
     pub device_secs: f64,
 }
 
+/// One planned pattern measurement: which blocks to enable plus the
+/// human-readable label the result is reported under.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PatternSpec {
+    /// Per-block on/off mask (index-aligned with the block list).
+    pub enabled: Vec<bool>,
+    /// Pattern label (`all-CPU`, `only:call:fft2d`, `combined-winners`).
+    pub label: String,
+}
+
+/// Thread-portable digest of a run's result value — exactly what the
+/// correctness check ([`ResultProbe::close_to`]) needs, so the pooled
+/// executor can ship it across worker threads (interpreter [`Value`]s
+/// hold `Rc` state and cannot leave their engine's thread).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResultProbe {
+    /// Numeric result, when the run produced one.
+    pub num: Option<f64>,
+    /// Type name of the result (compared when non-numeric).
+    pub type_name: &'static str,
+}
+
+impl ResultProbe {
+    /// Digest a run's result value.
+    pub fn of(v: &Value) -> ResultProbe {
+        ResultProbe { num: v.as_num().ok(), type_name: v.type_name() }
+    }
+
+    /// Is this result within `tol` (relative) of `other`? Non-numeric
+    /// results compare by type name only.
+    pub fn close_to(&self, other: &ResultProbe, tol: f64) -> bool {
+        match (self.num, other.num) {
+            (Some(x), Some(y)) => {
+                let denom = x.abs().max(y.abs()).max(1e-9);
+                ((x - y) / denom).abs() <= tol
+            }
+            _ => self.type_name == other.type_name,
+        }
+    }
+}
+
+/// One measured pattern, before correctness/speedup resolution. All
+/// fields are plain values (`Send`), so executors may produce them on
+/// sibling worker threads.
+#[derive(Debug, Clone)]
+pub struct MeasuredPattern {
+    /// Measured wall-clock of the pattern run.
+    pub time: Measurement,
+    /// Digest of the program's result value (correctness check input).
+    pub probe: ResultProbe,
+    /// Captured `printf` output of the last run.
+    pub output: String,
+    /// Per-run host<->device traffic observed during measurement.
+    pub traffic: DeviceTraffic,
+}
+
 /// Result of measuring one offload pattern.
 #[derive(Debug, Clone)]
 pub struct PatternResult {
@@ -89,9 +161,88 @@ pub struct SearchOutcome {
     pub best_speedup: f64,
 }
 
+/// Everything a [`PatternExecutor`] needs to measure patterns of one
+/// program: the (library-linked) program, its entry point, the reconciled
+/// block list, and the measurement settings.
+#[derive(Debug, Clone, Copy)]
+pub struct VerifyContext<'a> {
+    /// The library-linked program the patterns transform.
+    pub prog: &'a Program,
+    /// Entry-point function name.
+    pub entry: &'a str,
+    /// Accepted replacement plans, in block order.
+    pub blocks: &'a [PlannedReplacement],
+    /// Measurement settings (reps, warmup, fuel, tolerance).
+    pub cfg: &'a VerifyConfig,
+}
+
+/// Runs a batch of *independent* pattern measurements. Implementations
+/// may execute the batch in any order — or concurrently on sibling
+/// engines — but must return results **index-aligned** with `specs`, so
+/// the reduce step is deterministic regardless of completion order.
+/// Per-pattern failures are `Err` entries (recorded as failed patterns by
+/// the search, exactly like a miscompiled candidate on the paper's
+/// verification machine).
+pub trait PatternExecutor {
+    /// Measure every spec in the batch; one result per spec, in order.
+    fn measure(
+        &self,
+        ctx: &VerifyContext<'_>,
+        specs: &[PatternSpec],
+    ) -> Vec<Result<MeasuredPattern>>;
+
+    /// Short human label for reports and benches (`serial`, `pooled`).
+    fn name(&self) -> &'static str;
+}
+
+/// The default executor: measures patterns one after another on a single
+/// engine — the paper's serial Step 3.
+pub struct SerialExecutor {
+    engine: Rc<Engine>,
+}
+
+impl SerialExecutor {
+    /// Executor over one engine.
+    pub fn new(engine: Rc<Engine>) -> Self {
+        SerialExecutor { engine }
+    }
+}
+
+impl PatternExecutor for SerialExecutor {
+    fn measure(
+        &self,
+        ctx: &VerifyContext<'_>,
+        specs: &[PatternSpec],
+    ) -> Vec<Result<MeasuredPattern>> {
+        specs.iter().map(|s| measure_spec(ctx, s, &self.engine)).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+}
+
+/// Measure one planned pattern on an engine (the per-spec body shared by
+/// [`SerialExecutor`] and the service tier's pooled workers).
+pub fn measure_spec(
+    ctx: &VerifyContext<'_>,
+    spec: &PatternSpec,
+    engine: &Rc<Engine>,
+) -> Result<MeasuredPattern> {
+    measure_pattern(
+        ctx.prog,
+        ctx.entry,
+        ctx.blocks,
+        &spec.enabled,
+        engine,
+        ctx.cfg,
+        &spec.label,
+    )
+}
+
 /// Measure one pattern: transform, install externals, run. Returns the
-/// timing, the program's result value, its printed output, and the
-/// per-run device traffic observed through the engine.
+/// timing, a digest of the program's result value, its printed output,
+/// and the per-run device traffic observed through the engine.
 pub fn measure_pattern(
     prog: &Program,
     entry: &str,
@@ -100,7 +251,7 @@ pub fn measure_pattern(
     engine: &Rc<Engine>,
     cfg: &VerifyConfig,
     label: &str,
-) -> Result<(Measurement, Value, String, DeviceTraffic)> {
+) -> Result<MeasuredPattern> {
     let plans: Vec<PlannedReplacement> = blocks
         .iter()
         .zip(enabled)
@@ -110,9 +261,10 @@ pub fn measure_pattern(
     let transformed = transform::apply(prog, &plans)?;
     let mut interp = Interp::new(&transformed)?;
     interp.fuel = cfg.fuel;
+    let mut externals: Vec<(String, ExternalFn)> = Vec::with_capacity(plans.len());
     for p in &plans {
         let name = transform::dispatch_name(&p.replacement.artifact);
-        interp.set_external(&name, glue::build_external(engine.clone(), &p.replacement)?);
+        externals.push((name, glue::build_external(engine.clone(), &p.replacement)?));
         // Pre-compile every size variant of the artifact so XLA compile
         // time (the cuFFT "library load") is not billed to the measured
         // run. Compilation is cached in the engine across patterns.
@@ -129,16 +281,25 @@ pub fn measure_pattern(
     let stats_before = engine.stats.borrow().clone();
     let m = measure(label, cfg.warmup, cfg.reps, || {
         interp.reset_run_state()?;
-        // Re-install externals (reset clears only run state, not externals;
-        // still, keep the contract obvious).
+        // Re-install the externals after every reset. `reset_run_state`
+        // clears only run state today, but the pooled executor re-runs
+        // interpreters aggressively — the contract is enforced here, not
+        // assumed (see the externals_survive_reset regression test).
+        for (name, f) in &externals {
+            interp.set_external(name, f.clone());
+        }
         last = Some(interp.run(entry, &[])?);
         out_text = interp.output.clone();
         Ok(())
     })?;
     let stats_after = engine.stats.borrow().clone();
     // Warmup runs dispatch identically to measured ones, so the per-run
-    // average over (warmup + reps) is the per-run traffic.
-    let runs = (cfg.warmup + cfg.reps.max(1)) as u64;
+    // traffic is the delta divided by the exact number of
+    // engine-dispatching runs: the warmups plus the measured repetitions
+    // *actually performed*. `measure` clamps `reps == 0` to one measured
+    // run; deriving the count from the returned `Measurement` keeps this
+    // divisor honest instead of re-deriving the clamp here.
+    let runs = (cfg.warmup + m.reps) as u64;
     let traffic = DeviceTraffic {
         bytes_in: (stats_after.bytes_in - stats_before.bytes_in) / runs,
         bytes_out: (stats_after.bytes_out - stats_before.bytes_out) / runs,
@@ -146,22 +307,122 @@ pub fn measure_pattern(
         device_secs: (stats_after.exec_secs - stats_before.exec_secs) / runs as f64,
     };
     let v = last.ok_or_else(|| anyhow!("no measured run completed"))?;
-    Ok((m, v, out_text, traffic))
+    Ok(MeasuredPattern { time: m, probe: ResultProbe::of(&v), output: out_text, traffic })
 }
 
-fn values_close(a: &Value, b: &Value, tol: f64) -> bool {
-    match (a.as_num(), b.as_num()) {
-        (Ok(x), Ok(y)) => {
-            let denom = x.abs().max(y.abs()).max(1e-9);
-            ((x - y) / denom).abs() <= tol
+/// The plan side of the search: enumerates the pattern batches and folds
+/// measured results back into a deterministic [`SearchOutcome`].
+#[derive(Debug, Clone)]
+pub struct VerifyPlan {
+    labels: Vec<String>,
+}
+
+impl VerifyPlan {
+    /// Plan over a reconciled block list.
+    pub fn new(blocks: &[PlannedReplacement]) -> VerifyPlan {
+        VerifyPlan { labels: blocks.iter().map(|b| b.site.label()).collect() }
+    }
+
+    /// Number of replaceable blocks the plan covers.
+    pub fn block_count(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// The first batch of independent measurements: the all-CPU baseline
+    /// (index 0) followed by every phase-1 single-block pattern, in block
+    /// order.
+    pub fn phase1(&self) -> Vec<PatternSpec> {
+        let n = self.labels.len();
+        let mut specs = Vec::with_capacity(n + 1);
+        specs.push(PatternSpec { enabled: vec![false; n], label: "all-CPU".to_string() });
+        for (i, label) in self.labels.iter().enumerate() {
+            let mut enabled = vec![false; n];
+            enabled[i] = true;
+            specs.push(PatternSpec { enabled, label: format!("only:{label}") });
         }
-        // Non-numeric results: compare only kinds.
-        _ => a.type_name() == b.type_name(),
+        specs
+    }
+
+    /// The phase-2 pattern derived from the phase-1 results: combine the
+    /// individual winners (speedup > 1 AND correct). `None` when fewer
+    /// than two blocks won individually.
+    pub fn phase2(&self, phase1: &[PatternResult]) -> Option<PatternSpec> {
+        let n = self.labels.len();
+        let winners: Vec<usize> = (0..n.min(phase1.len()))
+            .filter(|&i| phase1[i].speedup > 1.0 && phase1[i].output_ok)
+            .collect();
+        if winners.len() > 1 {
+            let mut enabled = vec![false; n];
+            for &i in &winners {
+                enabled[i] = true;
+            }
+            Some(PatternSpec { enabled, label: "combined-winners".to_string() })
+        } else {
+            None
+        }
+    }
+
+    /// Fold one measured (or failed) pattern into a [`PatternResult`]. A
+    /// failed measurement is recorded exactly like a miscompiled candidate
+    /// on the paper's verification machine — speedup 0, incorrect, the
+    /// failure folded into the label — for phase-1 *and* phase-2 patterns
+    /// alike.
+    pub fn resolve(
+        &self,
+        spec: &PatternSpec,
+        measured: Result<MeasuredPattern>,
+        baseline: &Measurement,
+        base_probe: &ResultProbe,
+        tolerance: f64,
+    ) -> PatternResult {
+        match measured {
+            Ok(m) => {
+                let speedup = baseline.secs() / m.time.secs().max(1e-12);
+                let output_ok = m.probe.close_to(base_probe, tolerance);
+                PatternResult {
+                    enabled: spec.enabled.clone(),
+                    label: spec.label.clone(),
+                    time: m.time,
+                    speedup,
+                    output_ok,
+                    traffic: m.traffic,
+                }
+            }
+            Err(e) => PatternResult {
+                enabled: spec.enabled.clone(),
+                label: format!("{} [failed: {e}]", spec.label),
+                time: baseline.clone(),
+                speedup: 0.0,
+                output_ok: false,
+                traffic: DeviceTraffic::default(),
+            },
+        }
+    }
+
+    /// Deterministic reduce: walk `tried` in plan order (phase-1 block
+    /// order, then `combined-winners`) and keep the fastest correct
+    /// pattern, ties broken toward the earlier pattern (and toward the
+    /// baseline over everything). Because `tried` is index-aligned with
+    /// the plan, the outcome is independent of measurement completion
+    /// order — serial and pooled executors agree exactly.
+    pub fn reduce(&self, baseline: Measurement, tried: Vec<PatternResult>) -> SearchOutcome {
+        let mut best_enabled = vec![false; self.labels.len()];
+        let mut best_time = baseline.clone();
+        for p in &tried {
+            if p.output_ok && p.time.median < best_time.median {
+                best_time = p.time.clone();
+                best_enabled = p.enabled.clone();
+            }
+        }
+        let best_speedup = baseline.secs() / best_time.secs().max(1e-12);
+        SearchOutcome { baseline, tried, best_enabled, best_time, best_speedup }
     }
 }
 
 /// The paper's search: baseline → each block individually → combine the
-/// individually-winning blocks → re-measure → fastest wins.
+/// individually-winning blocks → re-measure → fastest wins. Measures
+/// serially on the given engine; [`search_patterns_with`] takes an
+/// arbitrary executor.
 pub fn search_patterns(
     prog: &Program,
     entry: &str,
@@ -169,76 +430,65 @@ pub fn search_patterns(
     engine: &Rc<Engine>,
     cfg: &VerifyConfig,
 ) -> Result<SearchOutcome> {
-    let none = vec![false; blocks.len()];
-    let (baseline, base_val, _, _) =
-        measure_pattern(prog, entry, blocks, &none, engine, cfg, "all-CPU")?;
+    search_patterns_with(prog, entry, blocks, cfg, &SerialExecutor::new(engine.clone()))
+}
 
-    let mut tried = Vec::new();
-    let mut best_enabled = none.clone();
-    let mut best_time = baseline.clone();
-
-    // Phase 1: individual on/off. A pattern that fails to transform or
-    // crashes at run time is recorded as failed (speedup 0), exactly like
-    // a miscompiled candidate on the paper's verification machine — it
-    // just loses the comparison.
-    for i in 0..blocks.len() {
-        let mut enabled = none.clone();
-        enabled[i] = true;
-        let label = format!("only:{}", blocks[i].site.label());
-        match measure_pattern(prog, entry, blocks, &enabled, engine, cfg, &label) {
-            Ok((m, v, _, traffic)) => {
-                let speedup = baseline.secs() / m.secs().max(1e-12);
-                let output_ok = values_close(&base_val, &v, cfg.tolerance);
-                if output_ok && m.median < best_time.median {
-                    best_time = m.clone();
-                    best_enabled = enabled.clone();
-                }
-                tried.push(PatternResult { enabled, label, time: m, speedup, output_ok, traffic });
-            }
-            Err(e) => {
-                tried.push(PatternResult {
-                    enabled,
-                    label: format!("{label} [failed: {e}]"),
-                    time: baseline.clone(),
-                    speedup: 0.0,
-                    output_ok: false,
-                    traffic: DeviceTraffic::default(),
-                });
-            }
-        }
+/// The paper's search over an arbitrary [`PatternExecutor`]: plan the
+/// independent batches, have the executor measure them (serially or
+/// fanned out), and reduce deterministically. A baseline failure fails
+/// the search; any other pattern failure is recorded as a failed
+/// [`PatternResult`].
+pub fn search_patterns_with(
+    prog: &Program,
+    entry: &str,
+    blocks: &[PlannedReplacement],
+    cfg: &VerifyConfig,
+    executor: &dyn PatternExecutor,
+) -> Result<SearchOutcome> {
+    let ctx = VerifyContext { prog, entry, blocks, cfg };
+    let plan = VerifyPlan::new(blocks);
+    // The baseline ships in the same batch as the phase-1 patterns so a
+    // pooled executor can overlap it with them (it is the slowest
+    // pattern — measuring it alone first would serialize the search's
+    // long pole). The trade-off: when the baseline itself fails, the
+    // per-block patterns were measured for nothing before the error
+    // surfaces below.
+    let phase1 = plan.phase1();
+    let mut measured = executor.measure(&ctx, &phase1);
+    if measured.len() != phase1.len() {
+        bail!(
+            "{} executor returned {} results for {} planned patterns",
+            executor.name(),
+            measured.len(),
+            phase1.len()
+        );
     }
+    let base = measured
+        .remove(0)
+        .with_context(|| format!("measuring the all-CPU baseline of {entry:?}"))?;
+    let baseline = base.time.clone();
+    let base_probe = base.probe.clone();
 
-    // Phase 2: combine the individual winners (speedup > 1 AND correct).
-    let winners: Vec<usize> = (0..blocks.len())
-        .filter(|&i| tried[i].speedup > 1.0 && tried[i].output_ok)
+    let mut tried: Vec<PatternResult> = phase1[1..]
+        .iter()
+        .zip(measured)
+        .map(|(spec, res)| plan.resolve(spec, res, &baseline, &base_probe, cfg.tolerance))
         .collect();
-    if winners.len() > 1 {
-        let mut enabled = none.clone();
-        for &i in &winners {
-            enabled[i] = true;
-        }
-        if let Ok((m, v, _, traffic)) =
-            measure_pattern(prog, entry, blocks, &enabled, engine, cfg, "combined-winners")
-        {
-            let speedup = baseline.secs() / m.secs().max(1e-12);
-            let output_ok = values_close(&base_val, &v, cfg.tolerance);
-            if output_ok && m.median < best_time.median {
-                best_time = m.clone();
-                best_enabled = enabled.clone();
-            }
-            tried.push(PatternResult {
-                enabled,
-                label: "combined-winners".into(),
-                time: m,
-                speedup,
-                output_ok,
-                traffic,
+
+    if let Some(combined) = plan.phase2(&tried) {
+        let res = executor
+            .measure(&ctx, std::slice::from_ref(&combined))
+            .pop()
+            .unwrap_or_else(|| {
+                Err(anyhow!(
+                    "{} executor returned no result for the combined pattern",
+                    executor.name()
+                ))
             });
-        }
+        tried.push(plan.resolve(&combined, res, &baseline, &base_probe, cfg.tolerance));
     }
 
-    let best_speedup = baseline.secs() / best_time.secs().max(1e-12);
-    Ok(SearchOutcome { baseline, tried, best_enabled, best_time, best_speedup })
+    Ok(plan.reduce(baseline, tried))
 }
 
 /// Convenience: run the whole-program baseline (all-CPU) once and return
@@ -249,4 +499,272 @@ pub fn baseline_duration(prog: &Program, entry: &str, fuel: u64) -> Result<Durat
     let t0 = std::time::Instant::now();
     interp.run(entry, &[])?;
     Ok(t0.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::patterndb::PatternDb;
+    use crate::transform::Reconciliation;
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+
+    fn fake_blocks(n: usize) -> Vec<PlannedReplacement> {
+        let repl = PatternDb::builtin().libraries[0].replacement.clone();
+        (0..n)
+            .map(|i| PlannedReplacement {
+                site: crate::transform::Site::LibraryCall { callee: format!("blk{i}") },
+                replacement: repl.clone(),
+                reconciliation: Reconciliation::Exact,
+            })
+            .collect()
+    }
+
+    fn ms(label: &str, millis: u64) -> Measurement {
+        Measurement {
+            label: label.to_string(),
+            median: Duration::from_millis(millis),
+            min: Duration::from_millis(millis),
+            max: Duration::from_millis(millis),
+            reps: 1,
+        }
+    }
+
+    fn pat(millis: u64) -> MeasuredPattern {
+        MeasuredPattern {
+            time: ms("x", millis),
+            probe: ResultProbe { num: Some(42.0), type_name: "float" },
+            output: String::new(),
+            traffic: DeviceTraffic::default(),
+        }
+    }
+
+    /// Executor scripted by label -> milliseconds (or failure). Optionally
+    /// runs the batch in reverse order — the results are still returned
+    /// index-aligned, which is the determinism contract.
+    struct Scripted {
+        times: HashMap<String, u64>,
+        fail: Vec<String>,
+        reverse: bool,
+        calls: RefCell<Vec<Vec<String>>>,
+    }
+
+    impl Scripted {
+        fn new(times: &[(&str, u64)], fail: &[&str], reverse: bool) -> Scripted {
+            Scripted {
+                times: times.iter().map(|(l, t)| (l.to_string(), *t)).collect(),
+                fail: fail.iter().map(|s| s.to_string()).collect(),
+                reverse,
+                calls: RefCell::new(Vec::new()),
+            }
+        }
+
+        fn one(&self, spec: &PatternSpec) -> Result<MeasuredPattern> {
+            if self.fail.contains(&spec.label) {
+                bail!("scripted failure");
+            }
+            let t = *self
+                .times
+                .get(&spec.label)
+                .unwrap_or_else(|| panic!("unscripted pattern {:?}", spec.label));
+            Ok(pat(t))
+        }
+    }
+
+    impl PatternExecutor for Scripted {
+        fn measure(
+            &self,
+            _ctx: &VerifyContext<'_>,
+            specs: &[PatternSpec],
+        ) -> Vec<Result<MeasuredPattern>> {
+            self.calls.borrow_mut().push(specs.iter().map(|s| s.label.clone()).collect());
+            let mut out: Vec<Option<Result<MeasuredPattern>>> =
+                specs.iter().map(|_| None).collect();
+            let order: Vec<usize> = if self.reverse {
+                (0..specs.len()).rev().collect()
+            } else {
+                (0..specs.len()).collect()
+            };
+            for i in order {
+                out[i] = Some(self.one(&specs[i]));
+            }
+            out.into_iter().map(|r| r.expect("all specs measured")).collect()
+        }
+
+        fn name(&self) -> &'static str {
+            "scripted"
+        }
+    }
+
+    fn run(script: &Scripted, nblocks: usize) -> SearchOutcome {
+        let prog = crate::parser::parse("int main() { return 0; }").unwrap();
+        let blocks = fake_blocks(nblocks);
+        search_patterns_with(&prog, "main", &blocks, &VerifyConfig::default(), script).unwrap()
+    }
+
+    #[test]
+    fn plan_enumerates_baseline_then_each_block() {
+        let plan = VerifyPlan::new(&fake_blocks(3));
+        let specs = plan.phase1();
+        assert_eq!(specs.len(), 4);
+        assert_eq!(specs[0].label, "all-CPU");
+        assert_eq!(specs[0].enabled, vec![false, false, false]);
+        assert_eq!(specs[1].label, "only:call:blk0");
+        assert_eq!(specs[1].enabled, vec![true, false, false]);
+        assert_eq!(specs[3].enabled, vec![false, false, true]);
+    }
+
+    #[test]
+    fn combined_winners_beat_individuals() {
+        let s = Scripted::new(
+            &[
+                ("all-CPU", 100),
+                ("only:call:blk0", 50),
+                ("only:call:blk1", 60),
+                ("only:call:blk2", 200),
+                ("combined-winners", 30),
+            ],
+            &[],
+            false,
+        );
+        let out = run(&s, 3);
+        assert_eq!(
+            out.tried.iter().map(|p| p.label.as_str()).collect::<Vec<_>>(),
+            vec!["only:call:blk0", "only:call:blk1", "only:call:blk2", "combined-winners"]
+        );
+        // Only blk0+blk1 won individually; the combined pattern enables
+        // exactly those and wins overall.
+        assert_eq!(out.best_enabled, vec![true, true, false]);
+        assert_eq!(out.best_time.median, Duration::from_millis(30));
+        assert!((out.best_speedup - 100.0 / 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn completion_order_does_not_change_the_outcome() {
+        let script = [
+            ("all-CPU", 100),
+            ("only:call:blk0", 55),
+            ("only:call:blk1", 55),
+            ("only:call:blk2", 90),
+            ("combined-winners", 40),
+        ];
+        let fwd = run(&Scripted::new(&script, &[], false), 3);
+        let rev = run(&Scripted::new(&script, &[], true), 3);
+        assert_eq!(fwd.best_enabled, rev.best_enabled);
+        assert_eq!(
+            fwd.tried.iter().map(|p| &p.label).collect::<Vec<_>>(),
+            rev.tried.iter().map(|p| &p.label).collect::<Vec<_>>()
+        );
+        assert_eq!(fwd.best_time.median, rev.best_time.median);
+    }
+
+    #[test]
+    fn equal_times_tie_break_toward_the_earlier_pattern() {
+        let s = Scripted::new(
+            &[
+                ("all-CPU", 100),
+                ("only:call:blk0", 40),
+                ("only:call:blk1", 40),
+                ("combined-winners", 40),
+            ],
+            &[],
+            false,
+        );
+        let out = run(&s, 2);
+        // Strict `<`: a later equal measurement (blk1, then the combined
+        // pattern) never displaces the earlier one — the tie-break the
+        // cached decisions depend on.
+        assert_eq!(out.best_enabled, vec![true, false]);
+        assert_eq!(out.tried.len(), 3);
+    }
+
+    #[test]
+    fn failed_combined_pattern_is_recorded_not_dropped() {
+        let s = Scripted::new(
+            &[
+                ("all-CPU", 100),
+                ("only:call:blk0", 50),
+                ("only:call:blk1", 60),
+            ],
+            &["combined-winners"],
+            false,
+        );
+        let out = run(&s, 2);
+        // The phase-2 failure shows up in `tried` exactly like a phase-1
+        // failure would: failed label, speedup 0, incorrect.
+        assert_eq!(out.tried.len(), 3, "combined failure must be recorded");
+        let combined = &out.tried[2];
+        assert!(combined.label.starts_with("combined-winners [failed:"), "{}", combined.label);
+        assert_eq!(combined.speedup, 0.0);
+        assert!(!combined.output_ok);
+        assert_eq!(combined.enabled, vec![true, true]);
+        // The best pattern falls back to the fastest individual winner.
+        assert_eq!(out.best_enabled, vec![true, false]);
+    }
+
+    #[test]
+    fn failed_phase1_pattern_is_recorded_and_loses() {
+        let s = Scripted::new(
+            &[("all-CPU", 100), ("only:call:blk1", 60)],
+            &["only:call:blk0"],
+            false,
+        );
+        let out = run(&s, 2);
+        assert_eq!(out.tried.len(), 2, "one winner -> no combined round");
+        assert!(out.tried[0].label.contains("[failed:"));
+        assert_eq!(out.best_enabled, vec![false, true]);
+    }
+
+    #[test]
+    fn baseline_failure_fails_the_search() {
+        let s = Scripted::new(&[("only:call:blk0", 10)], &["all-CPU"], false);
+        let prog = crate::parser::parse("int main() { return 0; }").unwrap();
+        let blocks = fake_blocks(1);
+        let err = search_patterns_with(&prog, "main", &blocks, &VerifyConfig::default(), &s)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("all-CPU baseline"), "{err:#}");
+    }
+
+    #[test]
+    fn zero_blocks_reduce_to_the_baseline() {
+        let s = Scripted::new(&[("all-CPU", 100)], &[], false);
+        let out = run(&s, 0);
+        assert!(out.tried.is_empty());
+        assert!(out.best_enabled.is_empty());
+        assert_eq!(out.best_time.median, Duration::from_millis(100));
+        assert!((out.best_speedup - 1.0).abs() < 1e-9);
+        // The executor saw exactly one batch: the baseline alone.
+        assert_eq!(*s.calls.borrow(), vec![vec!["all-CPU".to_string()]]);
+    }
+
+    #[test]
+    fn incorrect_output_never_wins() {
+        // Fastest pattern, wrong answer: resolve() must mark it incorrect
+        // and reduce() must keep the baseline.
+        let plan = VerifyPlan::new(&fake_blocks(1));
+        let specs = plan.phase1();
+        let baseline = ms("all-CPU", 100);
+        let base_probe = ResultProbe { num: Some(1.0), type_name: "float" };
+        let mut wrong = pat(10);
+        wrong.probe = ResultProbe { num: Some(5.0), type_name: "float" };
+        let r = plan.resolve(&specs[1], Ok(wrong), &baseline, &base_probe, 1e-2);
+        assert!(!r.output_ok);
+        let out = plan.reduce(baseline, vec![r]);
+        assert_eq!(out.best_enabled, vec![false]);
+    }
+
+    #[test]
+    fn probe_tolerance_matches_the_old_values_close() {
+        let a = ResultProbe { num: Some(100.0), type_name: "float" };
+        let b = ResultProbe { num: Some(100.5), type_name: "float" };
+        assert!(a.close_to(&b, 1e-2));
+        let c = ResultProbe { num: Some(110.0), type_name: "float" };
+        assert!(!a.close_to(&c, 1e-2));
+        // Non-numeric results compare by kind.
+        let x = ResultProbe { num: None, type_name: "array" };
+        let y = ResultProbe { num: None, type_name: "array" };
+        let z = ResultProbe { num: None, type_name: "struct" };
+        assert!(x.close_to(&y, 1e-2));
+        assert!(!x.close_to(&z, 1e-2));
+    }
 }

@@ -14,7 +14,7 @@ pub mod eval;
 pub mod offload_exec;
 pub mod value;
 
-pub use eval::{Flow, Interp, RunStats};
+pub use eval::{ExternalFn, Flow, Interp, RunStats};
 pub use value::{Slice, Value};
 
 #[cfg(test)]

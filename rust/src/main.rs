@@ -26,7 +26,7 @@ use fbo::coordinator::{apps, flow, loop_offload, BackendPolicy, Coordinator};
 use fbo::ga::GaConfig;
 use fbo::metrics;
 use fbo::patterndb::PatternDb;
-use fbo::service::{OffloadService, ServiceConfig};
+use fbo::service::{MeasurePool, OffloadService, ServiceConfig};
 use fbo::transform::InterfacePolicy;
 use fbo::{analysis, parser, runtime};
 
@@ -84,7 +84,14 @@ fn read_source(path: &str) -> Result<String> {
     std::fs::read_to_string(path).with_context(|| format!("reading {path}"))
 }
 
-fn coordinator_from(args: &Args) -> Result<Coordinator> {
+/// Build a coordinator from the shared CLI flags. With `verify_pool`
+/// set and `--verify-parallel N` (N > 1), also starts a pool of N-1
+/// measure-only workers and installs the pooled executor, so the Verify
+/// stage fans its independent pattern measurements out; the returned
+/// pool must stay alive for the duration of the command. Commands that
+/// never reach the Verify stage (`ga`) pass `verify_pool: false` so the
+/// flag cannot spawn engines that would sit idle.
+fn coordinator_from(args: &Args, verify_pool: bool) -> Result<(Coordinator, Option<MeasurePool>)> {
     let dir = PathBuf::from(args.flag("artifacts", "artifacts"));
     let mut c = Coordinator::open(&dir)?;
     c.policy = match args.flag("policy", "approve").as_str() {
@@ -94,7 +101,16 @@ fn coordinator_from(args: &Args) -> Result<Coordinator> {
     };
     c.verify.reps = args.flag_usize("reps", 3)?;
     c.backend_policy = BackendPolicy::parse(&args.flag("target", "auto"))?;
-    Ok(c)
+    let verify_parallel = args.flag_usize("verify-parallel", 1)?;
+    let pool = if verify_pool && verify_parallel > 1 {
+        let pool = MeasurePool::start(&dir, verify_parallel - 1)?;
+        c.executor =
+            Some(std::rc::Rc::new(pool.executor(c.engine.clone(), verify_parallel)));
+        Some(pool)
+    } else {
+        None
+    };
+    Ok((c, pool))
 }
 
 fn cmd_analyze(args: &Args) -> Result<()> {
@@ -130,7 +146,7 @@ fn cmd_offload(args: &Args) -> Result<()> {
     let path = args.positional.first().context("usage: fbo offload <file.c>")?;
     let src = read_source(path)?;
     let entry = args.flag("entry", "main");
-    let c = coordinator_from(args)?;
+    let (c, _measure_pool) = coordinator_from(args, true)?;
     let report = c.offload(&src, &entry)?;
     print!("{}", c.render_report(&report));
     if let Some(out) = args.flags.get("out") {
@@ -144,7 +160,7 @@ fn cmd_stages(args: &Args) -> Result<()> {
     let path = args.positional.first().context("usage: fbo stages <file.c> [--dump DIR]")?;
     let src = read_source(path)?;
     let entry = args.flag("entry", "main");
-    let c = coordinator_from(args)?;
+    let (c, _measure_pool) = coordinator_from(args, true)?;
     let req = c.request(&src, &entry);
 
     let dump_dir = match args.flags.get("dump") {
@@ -229,7 +245,7 @@ fn cmd_ga(args: &Args) -> Result<()> {
     let path = args.positional.first().context("usage: fbo ga <file.c>")?;
     let src = read_source(path)?;
     let entry = args.flag("entry", "main");
-    let c = coordinator_from(args)?;
+    let (c, _measure_pool) = coordinator_from(args, false)?;
     let prog = parser::parse(&src)?;
     let linked = c.link_cpu_libraries(&prog)?;
     let cfg = GaConfig {
@@ -264,7 +280,7 @@ fn cmd_flow(args: &Args) -> Result<()> {
     let path = args.positional.first().context("usage: fbo flow <file.c>")?;
     let src = read_source(path)?;
     let entry = args.flag("entry", "main");
-    let c = coordinator_from(args)?;
+    let (c, _measure_pool) = coordinator_from(args, true)?;
 
     println!("-- Steps 1-3: analyze, extract, search --");
     let request = c.request(&src, &entry);
@@ -353,6 +369,7 @@ fn service_from(args: &Args) -> Result<OffloadService> {
     };
     cfg.verify.reps = args.flag_usize("reps", 3)?;
     cfg.backend_policy = BackendPolicy::parse(&args.flag("target", "auto"))?;
+    cfg.verify_parallel = args.flag_usize("verify-parallel", 1)?;
     OffloadService::start(cfg)
 }
 
@@ -496,9 +513,10 @@ fn usage() -> &'static str {
      commands:\n\
        analyze   <file.c>                 Step 1-2 analysis report\n\
        offload   <file.c> [--entry main] [--artifacts DIR] [--policy approve|reject]\n\
-                 [--target gpu|fpga|auto] [--reps N] [--out transformed.c]\n\
+                 [--target gpu|fpga|auto] [--reps N] [--verify-parallel N]\n\
+                 [--out transformed.c]\n\
        stages    <file.c> [--entry main] [--dump DIR] [--policy approve|reject]\n\
-                 [--target gpu|fpga|auto] [--reps N]\n\
+                 [--target gpu|fpga|auto] [--reps N] [--verify-parallel N]\n\
                  run the pipeline stage by stage, printing per-stage\n\
                  artifacts + timings (--dump writes the JSON artifacts)\n\
        ga        <file.c> [--pop 12] [--gens 10] [--entry main]\n\
@@ -506,16 +524,21 @@ fn usage() -> &'static str {
                  full Steps 1-7 (Step 5 places on the arbitrated backend)\n\
        batch     <file.c...> [--entry main] [--jobs N] [--artifacts DIR]\n\
                  [--cache DIR] [--no-cache-persist] [--reps N]\n\
-                 [--target gpu|fpga|auto]\n\
+                 [--target gpu|fpga|auto] [--verify-parallel N]\n\
                  offload many files through the service worker pool +\n\
                  persistent decision cache\n\
        serve     [--jobs N] [--artifacts DIR] [--cache DIR]\n\
-                 [--target gpu|fpga|auto]\n\
+                 [--target gpu|fpga|auto] [--verify-parallel N]\n\
                  long-running service; reads \"<file.c> [entry]\" lines\n\
                  from stdin, prints one decision per line + stats on EOF\n\
        gen-apps  [--n 256] [--dir apps]\n\
        gen-db    [--out patterndb.json]\n\
-       artifacts [--dir artifacts]\n"
+       artifacts [--dir artifacts]\n\
+     \n\
+     --verify-parallel N measures up to N independent offload patterns of\n\
+     one Step-3 search concurrently (N-1 sibling PJRT engines for\n\
+     offload/stages; the pool's idle workers for batch/serve). The\n\
+     decision is identical to a serial search, only faster.\n"
 }
 
 fn main() -> ExitCode {

@@ -183,13 +183,22 @@ impl DecisionCache {
     }
 
     /// Drop every cached decision (memory and disk). Used by benches to
-    /// build a guaranteed-cold cache.
+    /// build a guaranteed-cold cache. Only files that actually parse as
+    /// [`DECISION_FORMAT`] entries are removed — foreign `.json` files
+    /// that `open` deliberately skips are left alone, mirroring that
+    /// tolerance on the write side. A *corrupt* entry of our own is
+    /// indistinguishable from a foreign file and is also left behind;
+    /// that is harmless — `open` skips it and the next verification of
+    /// its key overwrites it via the tmp-file + rename in `insert`.
     pub fn clear(&self) -> Result<()> {
         self.entries.lock().expect("decision cache lock").clear();
         if let Some(dir) = &self.dir {
             for e in std::fs::read_dir(dir)? {
                 let path = e?.path();
-                if path.extension().and_then(|x| x.to_str()) == Some("json") {
+                if path.extension().and_then(|x| x.to_str()) != Some("json") {
+                    continue;
+                }
+                if load_entry(&path).is_ok() {
                     std::fs::remove_file(&path)
                         .with_context(|| format!("removing {}", path.display()))?;
                 }
@@ -280,6 +289,34 @@ mod tests {
         std::fs::write(dir.join("junk.json"), "{ not json").unwrap();
         let c = DecisionCache::open(&dir).unwrap();
         assert_eq!(c.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn clear_spares_foreign_json_files() {
+        let dir = std::env::temp_dir().join(format!("fbo-cacheclear-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = DecisionCache::open(&dir).unwrap();
+        let k = CacheKey::compute("int main() { return 7; }", "main", FP).unwrap();
+        c.insert(&k, r#"{"x": 1}"#).unwrap();
+        // A foreign config file someone dropped next to the entries (valid
+        // JSON, wrong format tag) and a non-JSON note: `open` skips both,
+        // so `clear` must not delete them either.
+        let foreign = dir.join("deploy-notes.json");
+        std::fs::write(&foreign, r#"{"format": "ops-notes", "owner": "sre"}"#).unwrap();
+        let note = dir.join("README.txt");
+        std::fs::write(&note, "hands off").unwrap();
+        c.clear().unwrap();
+        assert!(c.is_empty());
+        assert!(foreign.exists(), "foreign .json must survive clear()");
+        assert!(note.exists());
+        assert!(
+            !dir.join(format!("{}.json", k.file_stem())).exists(),
+            "our entry must be removed"
+        );
+        // Reopening sees the same world clear() left behind: no entries.
+        let c = DecisionCache::open(&dir).unwrap();
+        assert!(c.is_empty());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

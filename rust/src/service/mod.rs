@@ -30,6 +30,16 @@
 //!   counters (jobs, cache hits/misses, stage replays, per-stage latency
 //!   via the pipeline's [`crate::coordinator::StageObserver`] hook, and
 //!   p50/p95 latency).
+//! * [`verify_exec`] — **parallel pattern-search verification**: with
+//!   `verify_parallel > 1` the independent pattern measurements of one
+//!   Step-3 search fan out across the pool's idle sibling engines
+//!   (measurement sub-jobs interleave with decision jobs on the worker
+//!   queues), so one search costs the wall-clock of its slowest pattern
+//!   instead of the sum of all patterns. [`MeasurePool`] provides
+//!   dedicated measure-only siblings for CLI runs without a service. The
+//!   executor never changes the search *outcome* — serial and pooled
+//!   decisions are byte-identical, and neither invalidates the other's
+//!   cache entries.
 //!
 //! Pipeline failures cross the service boundary as the structured
 //! [`crate::coordinator::OffloadError`], so callers can route on the
@@ -63,6 +73,8 @@
 
 pub mod cache;
 pub mod pool;
+pub mod verify_exec;
 
 pub use cache::{CacheKey, DecisionCache, DECISION_FORMAT};
 pub use pool::{CompletedJob, JobHandle, OffloadService, ServiceConfig, StageStat, StatsSnapshot};
+pub use verify_exec::{MeasurePool, PooledExecutor};

@@ -24,8 +24,19 @@
 //! a `--target` or FPGA-device change replays the verified measurements
 //! and only re-arbitrates. Workers install a [`StageObserver`] so the
 //! service counts per-stage latency ([`StatsSnapshot::stages`]).
+//!
+//! With `verify_parallel > 1`, the Verify stage's independent pattern
+//! measurements are fanned out across the pool: **measurement sub-jobs**
+//! interleave with decision jobs on the per-worker queues, so idle
+//! workers measure patterns for a busy sibling (see
+//! [`super::verify_exec`]). The executor choice is deliberately *not*
+//! part of any cache fingerprint — serial and pooled searches reduce to
+//! the same outcome, so their cached decisions are byte-identical.
 
+use std::cell::RefCell;
+use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
+use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -44,6 +55,7 @@ use crate::patterndb::PatternDb;
 use crate::transform::InterfacePolicy;
 
 use super::cache::{CacheKey, DecisionCache};
+use super::verify_exec::{self, ExecStats, MeasureJob, MeasureTx, PooledExecutor};
 
 /// Service construction parameters.
 #[derive(Clone)]
@@ -76,6 +88,14 @@ pub struct ServiceConfig {
     /// retargeting the deployment (different card, different fmax)
     /// invalidates every previously verified decision.
     pub device: fpga::Device,
+    /// Patterns measured concurrently inside one Step-3 search (CLI
+    /// `--verify-parallel`). `1` (the default) measures serially; above 1,
+    /// independent pattern measurements fan out across the pool's idle
+    /// sibling workers. Deliberately **not** part of any cache
+    /// fingerprint: the executor changes how fast a search runs, never
+    /// its outcome, so serial and pooled decisions replay each other
+    /// byte-identically.
+    pub verify_parallel: usize,
 }
 
 impl ServiceConfig {
@@ -92,6 +112,7 @@ impl ServiceConfig {
             similarity_threshold: crate::similarity::DEFAULT_THRESHOLD,
             backend_policy: BackendPolicy::Auto,
             device: fpga::ARRIA10_GX,
+            verify_parallel: 1,
         }
     }
 
@@ -177,13 +198,75 @@ impl JobHandle {
     }
 }
 
-struct Job {
+pub(crate) struct Job {
     id: u64,
     src: String,
     entry: String,
     key: CacheKey,
     submitted_at: Instant,
     reply: mpsc::Sender<Result<CompletedJob>>,
+}
+
+/// What flows through a worker's queue: full decision jobs, pattern
+/// measurement sub-jobs fanned out by a sibling's Verify stage, and the
+/// explicit shutdown marker (required because workers hold clones of
+/// each other's senders for fan-out, so channel disconnect alone can
+/// never end the pool).
+pub(crate) enum WorkerMsg {
+    /// A submitted offload job (runs the pipeline / replays the cache).
+    Decision(Job),
+    /// One pattern measurement fanned out by a sibling worker's search.
+    Measure(MeasureJob),
+    /// Drain the queue, then exit.
+    Shutdown,
+}
+
+/// A worker's receive side plus the decision jobs it had to set aside
+/// while servicing measurement sub-jobs mid-verify. Shared (same-thread)
+/// between the worker loop and its pooled executor.
+pub(crate) struct WorkerQueue {
+    rx: mpsc::Receiver<WorkerMsg>,
+    deferred: VecDeque<Job>,
+    shutting_down: bool,
+}
+
+impl WorkerQueue {
+    fn new(rx: mpsc::Receiver<WorkerMsg>) -> WorkerQueue {
+        WorkerQueue { rx, deferred: VecDeque::new(), shutting_down: false }
+    }
+
+    /// Next message for the worker loop: deferred decision jobs first (in
+    /// arrival order), then the channel. `None` means shut down.
+    fn next_blocking(&mut self) -> Option<WorkerMsg> {
+        if let Some(job) = self.deferred.pop_front() {
+            return Some(WorkerMsg::Decision(job));
+        }
+        if self.shutting_down {
+            return None;
+        }
+        match self.rx.recv() {
+            Ok(WorkerMsg::Shutdown) | Err(_) => None,
+            Ok(msg) => Some(msg),
+        }
+    }
+
+    /// Non-blocking: pop the next measurement sub-job, deferring any
+    /// decision jobs encountered (their order is preserved). Called by
+    /// the pooled executor while it waits on siblings — the progress
+    /// guarantee that keeps mutual fan-out deadlock-free.
+    pub(crate) fn try_measure(&mut self) -> Option<MeasureJob> {
+        loop {
+            match self.rx.try_recv() {
+                Ok(WorkerMsg::Measure(job)) => return Some(job),
+                Ok(WorkerMsg::Decision(job)) => self.deferred.push_back(job),
+                Ok(WorkerMsg::Shutdown) => {
+                    self.shutting_down = true;
+                    return None;
+                }
+                Err(_) => return None,
+            }
+        }
+    }
 }
 
 /// Latency samples kept for the percentile counters: a sliding window so a
@@ -242,6 +325,9 @@ struct Shared {
     fingerprints: StageFingerprints,
     counters: Counters,
     latencies: Arc<StageLatencies>,
+    /// Parallel-vs-serial pattern-measurement counters, shared by every
+    /// worker's pooled executor.
+    measure_stats: Arc<ExecStats>,
 }
 
 /// The three cache-key fingerprints, one per cached pipeline prefix. Each
@@ -457,6 +543,12 @@ pub struct StatsSnapshot {
     /// Cache entries currently held — full decisions *and* per-stage
     /// artifacts (a scratch pipeline run writes one of each tier).
     pub cache_entries: u64,
+    /// Pattern measurements fanned out to an idle sibling worker's engine
+    /// (only nonzero with `verify_parallel > 1`).
+    pub patterns_parallel: u64,
+    /// Pattern measurements run inline on the verifying worker's own
+    /// engine (every measurement, when `verify_parallel` is 1).
+    pub patterns_serial: u64,
     /// Median completion latency over the sliding window.
     pub latency_p50: Option<Duration>,
     /// 95th-percentile completion latency over the sliding window.
@@ -500,6 +592,12 @@ impl StatsSnapshot {
                 self.reconciled_replays, self.verified_replays
             ));
         }
+        if self.patterns_parallel + self.patterns_serial > 0 {
+            line.push_str(&format!(
+                " | verify patterns: {} parallel, {} serial",
+                self.patterns_parallel, self.patterns_serial
+            ));
+        }
         let ran: Vec<String> = self
             .stages
             .iter()
@@ -525,7 +623,7 @@ impl StatsSnapshot {
 pub struct OffloadService {
     shared: Arc<Shared>,
     /// One queue per worker; jobs are sharded onto them by cache key.
-    txs: Option<Vec<mpsc::Sender<Job>>>,
+    txs: Option<Vec<mpsc::Sender<WorkerMsg>>>,
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
 }
@@ -546,29 +644,49 @@ impl OffloadService {
             fingerprints: stage_fingerprints(&cfg),
             counters: Counters::default(),
             latencies: Arc::new(StageLatencies::default()),
+            measure_stats: Arc::new(ExecStats::default()),
         });
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let nworkers = cfg.workers;
         let mut txs = Vec::with_capacity(nworkers);
-        let mut workers = Vec::with_capacity(nworkers);
-        for i in 0..nworkers {
-            let (tx, rx) = mpsc::channel::<Job>();
+        let mut rxs = Vec::with_capacity(nworkers);
+        for _ in 0..nworkers {
+            let (tx, rx) = mpsc::channel::<WorkerMsg>();
             txs.push(tx);
+            rxs.push(rx);
+        }
+        let mut workers = Vec::with_capacity(nworkers);
+        for (i, rx) in rxs.into_iter().enumerate() {
             let shared = shared.clone();
             let cfg = cfg.clone();
             let ready = ready_tx.clone();
+            // Every worker holds the full sender list so its pooled
+            // executor can fan measurement sub-jobs to idle siblings.
+            let all_txs = txs.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("fbo-worker-{i}"))
-                .spawn(move || worker_main(cfg, shared, rx, ready))
+                .spawn(move || worker_main(cfg, shared, rx, all_txs, i, ready))
                 .context("spawning service worker")?;
             workers.push(handle);
         }
         drop(ready_tx);
         for _ in 0..nworkers {
-            ready_rx
+            let started = ready_rx
                 .recv()
-                .map_err(|_| anyhow!("service worker died during startup"))?
-                .context("service worker startup")?;
+                .map_err(|_| anyhow!("service worker died during startup"))
+                .and_then(|r| r.context("service worker startup"));
+            if let Err(e) = started {
+                // Workers hold each other's senders, so dropping `txs`
+                // alone would leave the healthy ones blocked forever:
+                // shut them down explicitly before bailing.
+                for tx in &txs {
+                    let _ = tx.send(WorkerMsg::Shutdown);
+                }
+                for w in workers {
+                    let _ = w.join();
+                }
+                return Err(e);
+            }
         }
         Ok(OffloadService { shared, txs: Some(txs), workers, next_id: AtomicU64::new(1) })
     }
@@ -620,7 +738,7 @@ impl OffloadService {
             submitted_at: started,
             reply: reply_tx,
         };
-        match txs[shard].send(job) {
+        match txs[shard].send(WorkerMsg::Decision(job)) {
             Ok(()) => JobHandle { id, state: HandleState::Pending(reply_rx) },
             Err(_) => self.ready_handle(id, Err(anyhow!("offload service is shut down"))),
         }
@@ -662,6 +780,8 @@ impl OffloadService {
             reconciled_replays: c.reconciled_hits.load(Ordering::Relaxed),
             verified_replays: c.verified_hits.load(Ordering::Relaxed),
             cache_entries: self.shared.cache.len() as u64,
+            patterns_parallel: self.shared.measure_stats.fanned_out.load(Ordering::Relaxed),
+            patterns_serial: self.shared.measure_stats.local.load(Ordering::Relaxed),
             latency_p50: metrics::percentile(&durations, 50.0),
             latency_p95: metrics::percentile(&durations, 95.0),
             stages,
@@ -690,7 +810,15 @@ impl OffloadService {
     }
 
     fn shutdown_inner(&mut self) {
-        self.txs.take(); // closing the queues ends every worker loop
+        // Workers hold clones of each other's senders (measurement
+        // fan-out), so closing the service's own senders is not enough to
+        // disconnect the queues: tell each worker explicitly. Queued jobs
+        // drain first — the marker sits behind them in FIFO order.
+        if let Some(txs) = self.txs.take() {
+            for tx in &txs {
+                let _ = tx.send(WorkerMsg::Shutdown);
+            }
+        }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -706,18 +834,45 @@ impl Drop for OffloadService {
 fn worker_main(
     cfg: ServiceConfig,
     shared: Arc<Shared>,
-    rx: mpsc::Receiver<Job>,
+    rx: mpsc::Receiver<WorkerMsg>,
+    all_txs: Vec<mpsc::Sender<WorkerMsg>>,
+    index: usize,
     ready: mpsc::Sender<Result<()>>,
 ) {
+    // The queue is shared (same thread) between this loop and the pooled
+    // executor, which services measurement sub-jobs while it waits on
+    // siblings mid-verify.
+    let queue = Rc::new(RefCell::new(WorkerQueue::new(rx)));
     // Built on this thread, never crosses it (PJRT state is not Send).
     let coordinator = match Coordinator::open(&cfg.artifacts) {
         Ok(mut c) => {
-            c.db = cfg.db;
             c.policy = cfg.policy;
             c.verify = cfg.verify;
             c.similarity_threshold = cfg.similarity_threshold;
             c.backend_policy = cfg.backend_policy;
             c.device = cfg.device;
+            // Fan independent pattern measurements out to the sibling
+            // workers when configured; with `verify_parallel == 1` the
+            // executor measures everything locally (and still feeds the
+            // parallel-vs-serial counters). The sibling list is rotated
+            // to start after this worker, so concurrent searches with a
+            // fan-out width below the pool size spread across different
+            // siblings instead of all hammering worker 0.
+            let siblings: Vec<MeasureTx> = if cfg.verify_parallel > 1 {
+                (1..all_txs.len())
+                    .map(|off| MeasureTx::Worker(all_txs[(index + off) % all_txs.len()].clone()))
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            c.executor = Some(Rc::new(PooledExecutor::new(
+                c.engine.clone(),
+                siblings,
+                cfg.verify_parallel.max(1),
+                Some(queue.clone()),
+                shared.measure_stats.clone(),
+            )));
+            c.db = cfg.db;
             let _ = ready.send(Ok(()));
             c
         }
@@ -726,12 +881,24 @@ fn worker_main(
             return;
         }
     };
-    // This worker owns its shard's queue outright; recv() erroring means
-    // the service dropped the sender — shutdown.
-    while let Ok(job) = rx.recv() {
-        let result = run_job(&coordinator, &shared, &job);
-        shared.record_outcome(&result);
-        let _ = job.reply.send(result);
+    loop {
+        let msg = {
+            let mut q = queue.borrow_mut();
+            q.next_blocking()
+        };
+        match msg {
+            // next_blocking maps Shutdown to None; the explicit variant
+            // arm only keeps the match exhaustive.
+            None | Some(WorkerMsg::Shutdown) => break,
+            Some(WorkerMsg::Measure(job)) => {
+                verify_exec::run_measure_job(&coordinator.engine, job);
+            }
+            Some(WorkerMsg::Decision(job)) => {
+                let result = run_job(&coordinator, &shared, &job);
+                shared.record_outcome(&result);
+                let _ = job.reply.send(result);
+            }
+        }
     }
 }
 
@@ -856,6 +1023,8 @@ mod tests {
             reconciled_replays: 0,
             verified_replays: 0,
             cache_entries: 0,
+            patterns_parallel: 0,
+            patterns_serial: 0,
             latency_p50: None,
             latency_p95: None,
             stages: Vec::new(),
@@ -864,6 +1033,27 @@ mod tests {
         assert!(line.contains("0 submitted"));
         assert!(line.contains("p50 -"));
         assert!(!line.contains("stage"), "idle services render no stage segments: {line}");
+        assert!(!line.contains("verify patterns"), "{line}");
+        let mut busy = s;
+        busy.patterns_parallel = 4;
+        busy.patterns_serial = 2;
+        assert!(busy.render().contains("verify patterns: 4 parallel, 2 serial"));
+    }
+
+    #[test]
+    fn verify_parallel_never_touches_the_fingerprints() {
+        // The executor changes how fast a search runs, never its outcome:
+        // a decision verified serially must replay byte-identically for a
+        // pooled request (and vice versa), so no fingerprint may fold
+        // `verify_parallel` in.
+        let cfg = ServiceConfig::new("some/artifacts");
+        let base = stage_fingerprints(&cfg);
+        let mut pooled = cfg.clone();
+        pooled.verify_parallel = 4;
+        let fp = stage_fingerprints(&pooled);
+        assert_eq!(fp.discovery, base.discovery);
+        assert_eq!(fp.verify, base.verify);
+        assert_eq!(fp.decision, base.decision);
     }
 
     #[test]

@@ -1,0 +1,443 @@
+//! Pooled pattern-measurement execution: fan the independent pattern
+//! measurements of one Step-3 search across sibling PJRT engines.
+//!
+//! The paper measures every offload pattern serially in the verification
+//! environment, and the per-stage latency counters show that Step 3
+//! dominates end-to-end wall time. The baseline and the phase-1
+//! single-block patterns of one search are *independent* measurements
+//! (see [`crate::coordinator::VerifyPlan`]), so the service can run them
+//! concurrently — one per engine — and pay the wall-clock of the slowest
+//! pattern instead of the sum of all patterns.
+//!
+//! Two sources of sibling engines exist:
+//!
+//! * the decision worker pool itself ([`super::pool`]): measurement
+//!   sub-jobs are interleaved with decision jobs on the per-worker
+//!   queues, so idle workers measure patterns for busy ones;
+//! * a dedicated [`MeasurePool`] of measure-only workers, used by the
+//!   CLI (`--verify-parallel N` on `fbo offload` / `fbo stages`) where
+//!   no decision pool exists.
+//!
+//! Either way the executor returns results **index-aligned** with the
+//! planned batch, so the reduced `SearchOutcome` — and therefore the
+//! cached decision bytes — are identical to the serial executor's.
+//!
+//! ## Deadlock freedom
+//!
+//! Two pool workers can be inside the Verify stage at the same time and
+//! fan patterns out *to each other*. While a worker waits for sibling
+//! results it keeps servicing the measurement sub-jobs arriving on its
+//! own queue (decision jobs are deferred, preserving their order), so a
+//! cycle of mutually-waiting workers always makes progress. If a sibling
+//! disappears without replying (service shutdown mid-search), the reply
+//! channel disconnects and the remaining patterns are measured locally.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::verify::{self, MeasuredPattern, PatternSpec, VerifyContext};
+use crate::coordinator::{PatternExecutor, VerifyConfig};
+use crate::parser::Program;
+use crate::runtime::Engine;
+use crate::transform::PlannedReplacement;
+
+/// One pattern-measurement sub-job shipped to a sibling worker. The
+/// search context is `Arc`-shared across the batch (cloned once per
+/// search, not once per pattern); everything is plain owned data, so the
+/// job crosses threads even though the engines executing it never do.
+pub(crate) struct MeasureJob {
+    pub(crate) program: Arc<Program>,
+    pub(crate) entry: Arc<str>,
+    pub(crate) blocks: Arc<[PlannedReplacement]>,
+    pub(crate) cfg: Arc<VerifyConfig>,
+    pub(crate) spec: PatternSpec,
+    pub(crate) index: usize,
+    pub(crate) reply: mpsc::Sender<(usize, Result<MeasuredPattern>)>,
+}
+
+// MeasureJob must stay Send: it is the one value that crosses worker
+// threads. (The engines and interpreters never do.)
+#[allow(dead_code)]
+fn assert_measure_job_is_send() {
+    fn assert_send<T: Send>() {}
+    assert_send::<MeasureJob>();
+}
+
+/// Execute one measurement sub-job on this thread's engine and reply.
+/// A dropped reply receiver (the requesting search already finished or
+/// fell back) is not an error.
+pub(crate) fn run_measure_job(engine: &Rc<Engine>, job: MeasureJob) {
+    let ctx = VerifyContext {
+        prog: &job.program,
+        entry: &job.entry,
+        blocks: &job.blocks,
+        cfg: &job.cfg,
+    };
+    let result = verify::measure_spec(&ctx, &job.spec, engine);
+    let _ = job.reply.send((job.index, result));
+}
+
+/// What flows to a dedicated measure-only worker: jobs, or the explicit
+/// shutdown marker. The marker is required because executors hold sender
+/// clones that can outlive the [`MeasurePool`], so channel disconnect
+/// alone cannot end the workers (joining on it would deadlock).
+pub(crate) enum DedicatedMsg {
+    /// One pattern measurement to run.
+    Job(MeasureJob),
+    /// Finish the queued jobs, then exit.
+    Shutdown,
+}
+
+/// A sibling engine's inbox: either a decision worker's interleaved queue
+/// or a dedicated measure-only worker.
+#[derive(Clone)]
+pub(crate) enum MeasureTx {
+    /// A decision worker of the service pool (measure jobs interleave
+    /// with decision jobs on its queue).
+    Worker(mpsc::Sender<super::pool::WorkerMsg>),
+    /// A measure-only worker of a [`MeasurePool`].
+    Dedicated(mpsc::Sender<DedicatedMsg>),
+}
+
+impl MeasureTx {
+    /// Send a job; hands it back if the sibling is gone so the caller can
+    /// run it locally.
+    fn send(&self, job: MeasureJob) -> std::result::Result<(), MeasureJob> {
+        match self {
+            MeasureTx::Worker(tx) => {
+                tx.send(super::pool::WorkerMsg::Measure(job)).map_err(|e| match e.0 {
+                    super::pool::WorkerMsg::Measure(j) => j,
+                    _ => unreachable!("only measure jobs are sent through MeasureTx"),
+                })
+            }
+            MeasureTx::Dedicated(tx) => tx.send(DedicatedMsg::Job(job)).map_err(|e| match e.0 {
+                DedicatedMsg::Job(j) => j,
+                DedicatedMsg::Shutdown => {
+                    unreachable!("only measure jobs are sent through MeasureTx")
+                }
+            }),
+        }
+    }
+}
+
+/// Counters shared by every pooled executor of one service: how many
+/// patterns were fanned out to a sibling engine vs measured inline on
+/// the requesting thread. Feeds `StatsSnapshot`.
+#[derive(Default)]
+pub(crate) struct ExecStats {
+    pub(crate) fanned_out: AtomicU64,
+    pub(crate) local: AtomicU64,
+}
+
+/// A [`PatternExecutor`] that fans independent pattern measurements out
+/// across sibling engines, keeping the requesting thread's engine busy
+/// with its own share. Built by the service pool (one per decision
+/// worker) or by [`MeasurePool::executor`] for CLI use. The executor
+/// changes only how fast the batch measures — the reduced outcome is
+/// byte-identical to the serial executor's.
+pub struct PooledExecutor {
+    engine: Rc<Engine>,
+    siblings: Vec<MeasureTx>,
+    max_inflight: usize,
+    /// The owning decision worker's queue, serviced while waiting so
+    /// mutually-fanning workers cannot deadlock. `None` outside the pool.
+    queue: Option<Rc<RefCell<super::pool::WorkerQueue>>>,
+    stats: Arc<ExecStats>,
+}
+
+impl PooledExecutor {
+    pub(crate) fn new(
+        engine: Rc<Engine>,
+        siblings: Vec<MeasureTx>,
+        max_inflight: usize,
+        queue: Option<Rc<RefCell<super::pool::WorkerQueue>>>,
+        stats: Arc<ExecStats>,
+    ) -> PooledExecutor {
+        PooledExecutor { engine, siblings, max_inflight, queue, stats }
+    }
+
+    /// Patterns measured concurrently at most (the local engine plus the
+    /// usable siblings), i.e. the effective `--verify-parallel`.
+    pub fn width(&self) -> usize {
+        if self.siblings.is_empty() {
+            1
+        } else {
+            self.max_inflight.clamp(1, self.siblings.len() + 1)
+        }
+    }
+
+    fn measure_local(
+        &self,
+        ctx: &VerifyContext<'_>,
+        spec: &PatternSpec,
+    ) -> Result<MeasuredPattern> {
+        verify::measure_spec(ctx, spec, &self.engine)
+    }
+}
+
+impl PatternExecutor for PooledExecutor {
+    fn measure(
+        &self,
+        ctx: &VerifyContext<'_>,
+        specs: &[PatternSpec],
+    ) -> Vec<Result<MeasuredPattern>> {
+        let n = specs.len();
+        let width = self.width();
+        if n <= 1 || width <= 1 {
+            self.stats.local.fetch_add(n as u64, Ordering::Relaxed);
+            return specs.iter().map(|s| self.measure_local(ctx, s)).collect();
+        }
+
+        // Deal the batch round-robin across (local engine, siblings…),
+        // bounded by the configured width. Slot 0 stays local; a send to
+        // a vanished sibling falls back to the local share. The search
+        // context is cloned once for the whole batch and Arc-shared by
+        // every job.
+        let program = Arc::new(ctx.prog.clone());
+        let entry: Arc<str> = Arc::from(ctx.entry);
+        let blocks: Arc<[PlannedReplacement]> = ctx.blocks.to_vec().into();
+        let cfg = Arc::new(ctx.cfg.clone());
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let mut local: VecDeque<usize> = VecDeque::new();
+        let mut outstanding = 0usize;
+        for (i, spec) in specs.iter().enumerate() {
+            let slot = i % width;
+            if slot == 0 {
+                local.push_back(i);
+                continue;
+            }
+            let job = MeasureJob {
+                program: program.clone(),
+                entry: entry.clone(),
+                blocks: blocks.clone(),
+                cfg: cfg.clone(),
+                spec: spec.clone(),
+                index: i,
+                reply: reply_tx.clone(),
+            };
+            match self.siblings[slot - 1].send(job) {
+                Ok(()) => outstanding += 1,
+                Err(job) => local.push_back(job.index),
+            }
+        }
+        drop(reply_tx);
+        self.stats.fanned_out.fetch_add(outstanding as u64, Ordering::Relaxed);
+        self.stats.local.fetch_add((n - outstanding) as u64, Ordering::Relaxed);
+
+        let mut results: Vec<Option<Result<MeasuredPattern>>> =
+            specs.iter().map(|_| None).collect();
+        let mut disconnected = false;
+        loop {
+            while let Ok((i, r)) = reply_rx.try_recv() {
+                results[i] = Some(r);
+                outstanding -= 1;
+            }
+            // Our own share first: the local engine is a full participant.
+            if let Some(i) = local.pop_front() {
+                results[i] = Some(self.measure_local(ctx, &specs[i]));
+                continue;
+            }
+            if outstanding == 0 {
+                break;
+            }
+            // While waiting on siblings, service the measurement sub-jobs
+            // arriving on our own queue (decision jobs are deferred) —
+            // the progress guarantee that makes mutual fan-out safe. The
+            // short timeout exists only to re-poll that queue; without
+            // one (the dedicated MeasurePool path) block outright.
+            if let Some(q) = &self.queue {
+                let sub = q.borrow_mut().try_measure();
+                if let Some(job) = sub {
+                    run_measure_job(&self.engine, job);
+                    continue;
+                }
+                match reply_rx.recv_timeout(Duration::from_millis(1)) {
+                    Ok((i, r)) => {
+                        results[i] = Some(r);
+                        outstanding -= 1;
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            } else {
+                match reply_rx.recv() {
+                    Ok((i, r)) => {
+                        results[i] = Some(r);
+                        outstanding -= 1;
+                    }
+                    Err(_) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if disconnected {
+            // A sibling shut down without replying: measure whatever is
+            // still missing on the local engine — slower, never wrong —
+            // and move those patterns from the fanned-out counter to the
+            // local one so the stats report what actually happened.
+            for (i, slot) in results.iter_mut().enumerate() {
+                if slot.is_none() {
+                    *slot = Some(self.measure_local(ctx, &specs[i]));
+                    self.stats.fanned_out.fetch_sub(1, Ordering::Relaxed);
+                    self.stats.local.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        results.into_iter().map(|r| r.expect("every planned pattern has a result")).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "pooled"
+    }
+}
+
+/// A pool of measure-only workers, each owning its own PJRT engine over
+/// the same artifact directory — the sibling source for CLI runs
+/// (`--verify-parallel N` on `fbo offload` / `fbo stages`), where no
+/// decision worker pool exists. Workers exit when the pool (and every
+/// executor built from it) is dropped.
+pub struct MeasurePool {
+    txs: Vec<mpsc::Sender<DedicatedMsg>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl MeasurePool {
+    /// Start `workers` measure-only workers over an artifact directory.
+    /// Blocks until every worker has opened its engine, so artifact
+    /// problems surface here.
+    pub fn start(artifacts: &Path, workers: usize) -> Result<MeasurePool> {
+        if workers == 0 {
+            bail!("measure pool needs at least one worker");
+        }
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let mut txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (tx, rx) = mpsc::channel::<DedicatedMsg>();
+            txs.push(tx);
+            let dir: PathBuf = artifacts.to_path_buf();
+            let ready = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("fbo-measure-{i}"))
+                .spawn(move || measure_worker_main(dir, rx, ready))
+                .context("spawning measure worker")?;
+            handles.push(handle);
+        }
+        drop(ready_tx);
+        let mut pool = MeasurePool { txs, workers: handles };
+        for _ in 0..workers {
+            let started = ready_rx
+                .recv()
+                .map_err(|_| anyhow!("measure worker died during startup"))
+                .and_then(|r| r.context("measure worker startup"));
+            if let Err(e) = started {
+                pool.stop();
+                return Err(e);
+            }
+        }
+        Ok(pool)
+    }
+
+    /// Number of measure workers in the pool.
+    pub fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Build a pooled executor fanning out to this pool's workers, with
+    /// `engine` as the requesting thread's local engine. `max_inflight`
+    /// caps concurrently measured patterns (local engine included).
+    pub fn executor(&self, engine: Rc<Engine>, max_inflight: usize) -> PooledExecutor {
+        PooledExecutor::new(
+            engine,
+            self.txs.iter().cloned().map(MeasureTx::Dedicated).collect(),
+            max_inflight,
+            None,
+            Arc::new(ExecStats::default()),
+        )
+    }
+
+    fn stop(&mut self) {
+        // Executors hold clones of these senders and can outlive the
+        // pool, so waiting for channel disconnect would deadlock the
+        // join: tell each worker to exit explicitly (queued jobs drain
+        // first — the marker sits behind them in FIFO order).
+        for tx in self.txs.drain(..) {
+            let _ = tx.send(DedicatedMsg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for MeasurePool {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn measure_worker_main(
+    artifacts: PathBuf,
+    rx: mpsc::Receiver<DedicatedMsg>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    // Built on this thread, never crosses it (PJRT state is not Send).
+    let engine = match Engine::open(&artifacts) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            DedicatedMsg::Job(job) => run_measure_job(&engine, job),
+            DedicatedMsg::Shutdown => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_worker_pool_rejected() {
+        assert!(MeasurePool::start(Path::new("artifacts"), 0).is_err());
+    }
+
+    #[test]
+    fn missing_artifacts_fail_pool_startup() {
+        let err = match MeasurePool::start(Path::new("/nonexistent/fbo-artifacts"), 2) {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("startup must fail without artifacts"),
+        };
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn width_is_bounded_by_siblings_and_cap() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let pool = MeasurePool::start(&dir, 3).unwrap();
+        let engine = Engine::open(&dir).unwrap();
+        assert_eq!(pool.executor(engine.clone(), 2).width(), 2, "cap below pool size");
+        assert_eq!(pool.executor(engine.clone(), 16).width(), 4, "pool size + local engine");
+        assert_eq!(pool.executor(engine, 1).width(), 1);
+    }
+}

@@ -1,0 +1,262 @@
+//! Integration tests for the Step-3 pattern search: measurement
+//! accounting regressions (traffic divisor, externals-after-reset),
+//! search edge cases (no blocks, every pattern failing), and the
+//! serial-vs-pooled executor equivalence the parallel verification
+//! feature is built on.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use fbo::coordinator::verify;
+use fbo::coordinator::{apps, Coordinator, VerifyConfig};
+use fbo::interp::{Interp, Value};
+use fbo::parser;
+use fbo::service::{MeasurePool, OffloadService, ServiceConfig};
+use fbo::transform::PlannedReplacement;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn coordinator() -> Coordinator {
+    let mut c = Coordinator::open(&artifacts_dir()).unwrap();
+    c.verify.reps = 1;
+    c
+}
+
+/// The accepted replacement plans + library-linked program of an app —
+/// the exact inputs `search_patterns` consumes inside the Verify stage.
+fn verify_inputs(c: &Coordinator, src: &str) -> (parser::Program, Vec<PlannedReplacement>) {
+    let req = c.request(src, "main");
+    let reconciled = req.parse().unwrap().discover(&req).unwrap().reconcile(&req).unwrap();
+    let accepted = reconciled.accepted();
+    let prog = parser::parse(src).unwrap();
+    let linked = c.link_cpu_libraries(&prog).unwrap();
+    (linked, accepted)
+}
+
+// ------------------------------------------------ measurement accounting
+
+#[test]
+fn externals_survive_reset_run_state() {
+    // The pooled executor re-runs interpreters aggressively; the verify
+    // loop re-installs externals after every reset and this pins the
+    // underlying contract: a reset never strands an external dispatch.
+    let prog =
+        parser::parse("double main() { double a[2]; a[0] = 21.0; return __fb_twice(a); }").unwrap();
+    let mut m = Interp::new(&prog).unwrap();
+    m.set_external(
+        "__fb_twice",
+        Rc::new(|args: &[Value]| {
+            let s = args[0].as_arr()?;
+            Ok(Value::Float(s.get(0)? * 2.0))
+        }),
+    );
+    let v1 = m.run("main", &[]).unwrap().as_num().unwrap();
+    assert_eq!(v1, 42.0);
+    m.reset_run_state().unwrap();
+    assert!(
+        m.externals.contains_key("__fb_twice"),
+        "reset_run_state clears run state only, never the installed externals"
+    );
+    let v2 = m.run("main", &[]).unwrap().as_num().unwrap();
+    assert_eq!(v2, 42.0, "the external must still dispatch after a reset");
+}
+
+#[test]
+fn traffic_divisor_counts_every_engine_dispatching_run() {
+    // Regression for the per-run DeviceTraffic divisor: with reps == 0
+    // (clamped to one measured run) and warmup > 0, the divisor must be
+    // the exact number of engine-dispatching runs — the per-run traffic
+    // then equals a plain single-run measurement's, and the FPGA
+    // arbitration sees the same working set either way.
+    let c = coordinator();
+    let src = apps::fft_app_lib(64);
+    let (linked, accepted) = verify_inputs(&c, &src);
+    assert!(!accepted.is_empty());
+    let mut enabled = vec![false; accepted.len()];
+    enabled[0] = true;
+
+    let clamped = VerifyConfig { reps: 0, warmup: 2, ..VerifyConfig::default() };
+    let m0 = verify::measure_pattern(
+        &linked,
+        "main",
+        &accepted,
+        &enabled,
+        &c.engine,
+        &clamped,
+        "reps0",
+    )
+    .unwrap();
+    assert_eq!(m0.time.reps, 1, "measure clamps reps=0 to one measured run");
+
+    let single = VerifyConfig { reps: 1, warmup: 0, ..VerifyConfig::default() };
+    let m1 = verify::measure_pattern(
+        &linked,
+        "main",
+        &accepted,
+        &enabled,
+        &c.engine,
+        &single,
+        "reps1",
+    )
+    .unwrap();
+
+    // fft_app_lib dispatches the artifact exactly once per run.
+    assert_eq!(m1.traffic.dispatches, 1);
+    assert_eq!(m0.traffic.dispatches, m1.traffic.dispatches, "per-run dispatches must agree");
+    assert_eq!(m0.traffic.bytes_in, m1.traffic.bytes_in, "per-run bytes_in must agree");
+    assert_eq!(m0.traffic.bytes_out, m1.traffic.bytes_out, "per-run bytes_out must agree");
+    assert!(m0.traffic.device_secs > 0.0);
+}
+
+// ------------------------------------------------------ search edge cases
+
+#[test]
+fn zero_replaceable_blocks_reduce_to_the_baseline() {
+    let c = coordinator();
+    let prog = parser::parse(&apps::stencil_app(16)).unwrap();
+    let outcome =
+        verify::search_patterns(&prog, "main", &[], &c.engine, &c.verify).unwrap();
+    assert!(outcome.tried.is_empty());
+    assert!(outcome.best_enabled.is_empty());
+    assert!((outcome.best_speedup - 1.0).abs() < 1e-9);
+    assert_eq!(outcome.best_time.median, outcome.baseline.median);
+}
+
+#[test]
+fn all_patterns_failing_falls_back_to_the_baseline() {
+    let c = coordinator();
+    let src = apps::sensor_fusion_app(64);
+    let (linked, mut accepted) = verify_inputs(&c, &src);
+    assert_eq!(accepted.len(), 3, "sensor-fusion app must discover three blocks");
+    for plan in &mut accepted {
+        plan.replacement.artifact = "no_such_artifact".to_string();
+    }
+    let outcome =
+        verify::search_patterns(&linked, "main", &accepted, &c.engine, &c.verify).unwrap();
+    assert_eq!(outcome.tried.len(), 3, "every failed pattern is still recorded");
+    for p in &outcome.tried {
+        assert!(p.label.contains("[failed:"), "{}", p.label);
+        assert_eq!(p.speedup, 0.0);
+        assert!(!p.output_ok);
+    }
+    assert_eq!(outcome.best_enabled, vec![false, false, false]);
+    assert!((outcome.best_speedup - 1.0).abs() < 1e-9);
+}
+
+// -------------------------------------------- serial / pooled equivalence
+
+#[test]
+fn serial_and_pooled_executors_agree_on_the_multi_block_fixture() {
+    let src = apps::sensor_fusion_app(64);
+
+    let serial = coordinator();
+    let serial_report = serial.offload(&src, "main").unwrap();
+    assert!(
+        serial_report.outcome.tried.len() >= 4,
+        "3 per-block patterns + combined-winners, got {:?}",
+        serial_report.outcome.tried.iter().map(|p| &p.label).collect::<Vec<_>>()
+    );
+
+    let mut pooled = coordinator();
+    let pool = MeasurePool::start(&artifacts_dir(), 2).unwrap();
+    pooled.executor = Some(Rc::new(pool.executor(pooled.engine.clone(), 3)));
+    let pooled_report = pooled.offload(&src, "main").unwrap();
+
+    assert_eq!(
+        serial_report.outcome.best_enabled, pooled_report.outcome.best_enabled,
+        "executors must pick the same winning pattern"
+    );
+    assert_eq!(
+        serial_report.outcome.tried.iter().map(|p| &p.label).collect::<Vec<_>>(),
+        pooled_report.outcome.tried.iter().map(|p| &p.label).collect::<Vec<_>>(),
+        "tried order must be identical"
+    );
+    assert_eq!(
+        serial_report.outcome.tried.iter().map(|p| p.output_ok).collect::<Vec<_>>(),
+        pooled_report.outcome.tried.iter().map(|p| p.output_ok).collect::<Vec<_>>(),
+    );
+    assert!(serial_report.best_speedup() > 1.0);
+    assert!(pooled_report.best_speedup() > 1.0);
+}
+
+#[test]
+fn pooled_service_replays_serial_decisions_byte_identically() {
+    let dir = std::env::temp_dir().join(format!("fbo-verifytest-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = ServiceConfig::new(artifacts_dir());
+    cfg.cache_dir = Some(dir.clone());
+    cfg.verify.reps = 1;
+    cfg.workers = 2;
+    let src = apps::sensor_fusion_app(64);
+
+    // Verify serially and cache the decision.
+    let serial_json = {
+        let service = OffloadService::start(cfg.clone()).unwrap();
+        let done = service.submit(&src, "main").wait().unwrap();
+        assert!(!done.from_cache);
+        done.report_json
+    };
+
+    // A pooled service over the same cache: the executor is not part of
+    // any fingerprint, so the serial decision replays byte-identically.
+    let mut pooled_cfg = cfg.clone();
+    pooled_cfg.workers = 3;
+    pooled_cfg.verify_parallel = 3;
+    let service = OffloadService::start(pooled_cfg).unwrap();
+    let replayed = service.submit(&src, "main").wait().unwrap();
+    assert!(replayed.from_cache, "pooled request must hit the serial decision");
+    assert_eq!(replayed.report_json, serial_json, "cached replay must be byte-identical");
+
+    // Cold the cache and re-verify through the pool: the measurement
+    // sub-jobs fan out to the idle sibling workers and the decision is
+    // structurally the same one the serial search produced.
+    service.cache().clear().unwrap();
+    let fresh = service.submit(&src, "main").wait().unwrap();
+    assert!(!fresh.from_cache);
+    assert_eq!(fresh.report.outcome.best_enabled, replayed.report.outcome.best_enabled);
+    let stats = service.stats();
+    assert!(
+        stats.patterns_parallel > 0,
+        "pooled verify must fan patterns to siblings: {}",
+        stats.render()
+    );
+    assert!(stats.patterns_serial > 0, "the verifying worker measures its own share too");
+
+    service.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn concurrent_pooled_searches_do_not_deadlock() {
+    // Two workers, both inside the Verify stage at once, fanning pattern
+    // measurements to each other: the waiting worker must keep servicing
+    // its own queue's measurement sub-jobs or this test hangs.
+    let mut cfg = ServiceConfig::new(artifacts_dir());
+    cfg.persist = false;
+    cfg.workers = 2;
+    cfg.verify_parallel = 2;
+    cfg.verify.reps = 1;
+    let service = OffloadService::start(cfg).unwrap();
+
+    let jobs: Vec<(String, String)> = [
+        apps::sensor_fusion_app(64),
+        apps::fft_app_lib(64),
+        apps::lu_app_lib(64),
+        apps::matmul_app(64),
+    ]
+    .into_iter()
+    .map(|src| (src, "main".to_string()))
+    .collect();
+    let results = service.run_batch(&jobs);
+    assert_eq!(results.len(), 4);
+    for r in results {
+        let done = r.expect("every job completes despite mutual fan-out");
+        assert!(done.report.best_speedup() >= 1.0);
+    }
+    let stats = service.stats();
+    assert_eq!(stats.completed, 4);
+    assert_eq!(stats.failed, 0);
+    service.shutdown();
+}
