@@ -88,6 +88,7 @@ fn main() -> anyhow::Result<()> {
             fpgas: 1,
             cost_per_hour: 0.9,
             fpga_cost_per_hour: 0.35,
+            energy_cost_per_kwh: 0.30,
             latency_ms: 3.0,
         },
         flow::Location {
@@ -96,6 +97,7 @@ fn main() -> anyhow::Result<()> {
             fpgas: 4,
             cost_per_hour: 0.5,
             fpga_cost_per_hour: 0.2,
+            energy_cost_per_kwh: 0.12,
             latency_ms: 12.0,
         },
         flow::Location {
@@ -104,6 +106,7 @@ fn main() -> anyhow::Result<()> {
             fpgas: 32,
             cost_per_hour: 0.3,
             fpga_cost_per_hour: 0.12,
+            energy_cost_per_kwh: 0.08,
             latency_ms: 45.0,
         },
     ];

@@ -11,7 +11,7 @@
 //! make artifacts && cargo run --release --example staged_pipeline
 //! ```
 
-use fbo::coordinator::{apps, BackendPolicy, Coordinator, Verified};
+use fbo::coordinator::{apps, BackendPolicy, Coordinator, PowerPolicy, Verified};
 
 fn main() -> anyhow::Result<()> {
     let mut coordinator = Coordinator::open(std::path::Path::new("artifacts"))?;
@@ -68,6 +68,30 @@ fn main() -> anyhow::Result<()> {
         gpu.verified.outcome.best_speedup, fpga.verified.outcome.best_speedup,
         "both decisions rest on the same cached measurements"
     );
-    println!("same measurements, two deployments - verification ran once.");
+
+    // The power stage resumes the same way: score the saved measurements
+    // under perf-per-watt, inspect the modeled energy, then arbitrate.
+    let ppw_request = coordinator
+        .request(&source, "main")
+        .with_power_policy(PowerPolicy::PerfPerWatt);
+    let scored = Verified::from_json_str(&saved)?.power_score(&ppw_request)?;
+    for block in &scored.scores.blocks {
+        if let Some(gpu_energy) = &block.gpu {
+            println!(
+                "power-score: {} -> {:.2} mJ/run, efficiency {:.1}x vs CPU",
+                block.label,
+                gpu_energy.energy_j * 1e3,
+                gpu_energy.efficiency
+            );
+        }
+    }
+    let powered = scored.arbitrate(&ppw_request)?;
+    println!(
+        "--power-policy perf-per-watt -> backend {}",
+        powered.arbitration.backend.as_str()
+    );
+    assert!(powered.arbitration.power.is_some(), "v3 report records the energy residue");
+
+    println!("same measurements, three deployments - verification ran once.");
     Ok(())
 }

@@ -1,0 +1,9 @@
+"""Make the in-repo ``compile`` package importable regardless of where
+pytest is invoked from: the CI python job runs ``python -m pytest
+python/`` from the repo root, where ``python/`` itself is not on
+``sys.path``."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -10,6 +10,11 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+# The property sweeps need hypothesis (installed in the CI python job);
+# without it this module skips instead of failing collection, so a bare
+# `pytest python/` still runs the AOT tests on a minimal environment.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import fft as fft_k

@@ -21,8 +21,9 @@ fn env_usize(name: &str, default: usize) -> usize {
 }
 
 fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--test");
     let n = env_usize("FBO_N", 64);
-    let reps = env_usize("FBO_REPS", 3);
+    let reps = env_usize("FBO_REPS", if smoke { 1 } else { 3 });
 
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let mut c = Coordinator::open(&artifacts)?;

@@ -17,8 +17,9 @@ fn env_usize(name: &str, default: usize) -> usize {
 }
 
 fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--test");
     let n = env_usize("FBO_N", 64);
-    let gens = env_usize("FBO_GENS", 10);
+    let gens = env_usize("FBO_GENS", if smoke { 4 } else { 10 });
     let artifacts =
         std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let coordinator = Coordinator::open(&artifacts)?;

@@ -26,11 +26,12 @@ fn env_usize(name: &str, default: usize) -> usize {
 }
 
 fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--test");
     let n = env_usize("FBO_N", 64);
     let artifacts =
         std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let mut coordinator = Coordinator::open(&artifacts)?;
-    coordinator.verify.reps = if n >= 256 { 1 } else { 3 };
+    coordinator.verify.reps = if smoke || n >= 256 { 1 } else { 3 };
 
     println!("== Fig. 5: speedup vs all-CPU (n={n}) ==");
     let cases = [

@@ -1,0 +1,160 @@
+//! Bench: power-aware arbitration over the evaluation apps.
+//!
+//! For each app, Steps 1–3 run once; the saved `Verified` measurements
+//! are then arbitrated three ways from the same artifact:
+//!
+//! 1. `--power-policy perf` (the default) — the decision-identity gate:
+//!    the report must serialize as v2 with no power section, and the
+//!    decision must be completely invariant to the wattage model (watts
+//!    cannot influence a time-only arbitration), which is exactly the
+//!    pre-power behavior;
+//! 2. `--power-policy perf-per-watt` — modeled joules decide
+//!    (arXiv:2110.11520's selection rule); the bench records per-block
+//!    energies and whether the backend flipped vs the perf decision;
+//! 3. `--power-policy cap:50` — the 75 W GPU is excluded, the 40 W FPGA
+//!    and the CPU remain.
+//!
+//! Run: `cargo bench --bench power_arbitration` (add `-- --test` for the
+//! CI smoke mode: 1 rep).
+//! Records: `BENCH_power.json` at the repo root.
+
+use std::path::PathBuf;
+
+use fbo::coordinator::{apps, Backend, Coordinator, PowerModel, PowerPolicy};
+use fbo::metrics::Table;
+use fbo::patterndb::json::{self, Json};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--test");
+    let n = env_usize("FBO_N", 64);
+    let reps = env_usize("FBO_REPS", if smoke { 1 } else { 3 });
+
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut c = Coordinator::open(&artifacts)?;
+    c.verify.reps = reps;
+
+    println!("== power arbitration: eval apps at n={n}, --target auto ==");
+    let mut table = Table::new(&[
+        "app",
+        "perf backend",
+        "perf-per-watt backend",
+        "cap:50 backend",
+        "gpu energy (winner)",
+        "fpga energy (winner)",
+    ]);
+    let mut rows = Vec::new();
+    let mut flips = 0usize;
+
+    for (name, src) in apps::all(n) {
+        let req = c.request(&src, "main");
+        let verified =
+            req.parse()?.discover(&req)?.reconcile(&req)?.verify(&req)?;
+
+        // 1. Default perf path.
+        let perf = verified.arbitrate(&req)?;
+        let perf_report = perf.report();
+        let perf_json = fbo::coordinator::report_json::report_to_string(&perf_report);
+        assert!(
+            perf_json.contains("fbo-offload-report-v2"),
+            "{name}: the default policy must emit v2 report bytes"
+        );
+        assert!(
+            !perf_json.contains("\"power\""),
+            "{name}: the default policy must record no power section"
+        );
+
+        // Decision-identity gate: a perf arbitration is a *time* decision,
+        // so the wattage model must be unable to influence any of it —
+        // same per-block backends, same overall backend, same request
+        // times — which is precisely the pre-power arbitration behavior.
+        let mut hot = PowerModel::builtin();
+        hot.gpu.active_watts *= 10.0;
+        hot.fpga.active_watts *= 10.0;
+        hot.cpu.active_watts *= 10.0;
+        let hot_req = c.request(&src, "main").with_power_model(hot);
+        let perf_hot = verified.arbitrate(&hot_req)?;
+        assert_eq!(
+            perf.arbitration, perf_hot.arbitration,
+            "{name}: perf decisions must be wattage-independent"
+        );
+
+        // 2. Performance-per-watt.
+        let ppw_req =
+            c.request(&src, "main").with_power_policy(PowerPolicy::PerfPerWatt);
+        let ppw = verified.power_score(&ppw_req)?.arbitrate(&ppw_req)?;
+        let residue = ppw
+            .arbitration
+            .power
+            .as_ref()
+            .expect("non-default policy must record the power residue");
+
+        // 3. Wattage cap below the GPU's draw.
+        let cap_req =
+            c.request(&src, "main").with_power_policy(PowerPolicy::Cap(50.0));
+        let cap = verified.power_score(&cap_req)?.arbitrate(&cap_req)?;
+        assert!(
+            cap.arbitration.blocks.iter().all(|b| b.backend != Backend::Gpu),
+            "{name}: no block may land on the 75 W GPU under cap:50"
+        );
+
+        let flipped = ppw.arbitration.backend != perf.arbitration.backend;
+        flips += flipped as usize;
+
+        // Energy of the winning block, when one offloaded.
+        let win = ppw
+            .arbitration
+            .blocks
+            .iter()
+            .zip(residue.blocks.iter())
+            .find(|(b, _)| b.backend != Backend::Cpu)
+            .map(|(_, e)| e);
+        let fmt_j = |v: Option<f64>| match v {
+            Some(j) => format!("{:.3} mJ", j * 1e3),
+            None => "-".to_string(),
+        };
+        let (gpu_j, fpga_j) = match win {
+            Some(e) => (e.gpu_energy_j, e.fpga_energy_j),
+            None => (None, None),
+        };
+        table.row(&[
+            name.clone(),
+            perf.arbitration.backend.as_str().to_string(),
+            ppw.arbitration.backend.as_str().to_string(),
+            cap.arbitration.backend.as_str().to_string(),
+            fmt_j(gpu_j),
+            fmt_j(fpga_j),
+        ]);
+        rows.push(Json::obj(vec![
+            ("app", Json::str(&name)),
+            ("perf_backend", Json::str(perf.arbitration.backend.as_str())),
+            ("ppw_backend", Json::str(ppw.arbitration.backend.as_str())),
+            ("cap50_backend", Json::str(cap.arbitration.backend.as_str())),
+            ("flipped", Json::Bool(flipped)),
+            ("gpu_energy_j", gpu_j.map(Json::num).unwrap_or(Json::Null)),
+            ("fpga_energy_j", fpga_j.map(Json::num).unwrap_or(Json::Null)),
+            ("gpu_watts", Json::num(residue.gpu_watts)),
+            ("fpga_watts", Json::num(residue.fpga_watts)),
+            ("perf_decisions_identical", Json::Bool(true)),
+        ]));
+    }
+    print!("{}", table.render());
+    println!("perf-per-watt flipped {flips} app(s) vs the perf decision");
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("power_arbitration")),
+        ("n", Json::num(n as f64)),
+        ("reps", Json::num(reps as f64)),
+        ("apps", Json::Arr(rows)),
+        ("ppw_flips", Json::num(flips as f64)),
+    ]);
+    let bench_path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_power.json");
+    std::fs::write(&bench_path, json::to_string_pretty(&out))?;
+    println!("recorded {}", bench_path.display());
+    Ok(())
+}

@@ -37,6 +37,7 @@ use crate::parser::{self, StmtKind};
 use crate::patterndb::{PassModel, PatternDb};
 use crate::transform::{glue, PlannedReplacement};
 
+use super::power::{self, PowerOutcome, PowerPolicy};
 use super::verify::SearchOutcome;
 
 /// Where a block (or a whole winning pattern) runs.
@@ -209,6 +210,12 @@ pub struct ArbitrationOutcome {
     /// way Step 3 combines winners (independent savings). `None` when no
     /// block passed the pre-check.
     pub fpga_request_secs: Option<f64>,
+    /// Power residue of the decision: present exactly when a non-default
+    /// `--power-policy` decided backends (and then the report serializes
+    /// as v3 with per-block energies); `None` under the default `perf`
+    /// policy, keeping its report bytes identical to time-only
+    /// arbitration.
+    pub power: Option<power::PowerDecision>,
 }
 
 /// Default intensity-narrowing floor: a block must amortize the ≈3 h
@@ -230,6 +237,13 @@ pub const STREAM_LANES: u64 = 4;
 /// `min_intensity` is the narrowing floor (callers pass
 /// [`NARROW_MIN_SCORE`]; tests raise it to exercise narrowing).
 ///
+/// `power` is the `PowerScore` stage result: under the default
+/// [`PowerPolicy::Perf`] it is inert (time decides, byte-identical to
+/// pre-power arbitration); under `perf-per-watt` the per-block
+/// comparisons weigh modeled joules instead of seconds, and under
+/// `cap:<watts>` backends whose modeled active draw exceeds the cap are
+/// excluded (the CPU always remains as the fallback).
+///
 /// Fails only under [`BackendPolicy::Fpga`], when a block's IP core flunks
 /// the resource pre-check — deliberately *before* any compile hours are
 /// charged, mirroring the paper's early resource error.
@@ -240,6 +254,7 @@ pub fn arbitrate(
     min_intensity: f64,
     accepted: &[PlannedReplacement],
     outcome: &SearchOutcome,
+    power: &PowerOutcome,
 ) -> Result<ArbitrationOutcome> {
     if outcome.tried.len() < accepted.len() {
         bail!(
@@ -250,8 +265,23 @@ pub fn arbitrate(
         );
     }
     let hls = HlsCompiler::new(device);
+    let model = &power.model;
+    let power_policy = power.policy;
+    let cap_allows = |b: Backend| match power_policy {
+        PowerPolicy::Cap(w) => model.for_backend(b).active_watts <= w,
+        _ => true,
+    };
     let mut blocks = Vec::with_capacity(accepted.len());
     let mut projections: Vec<Option<f64>> = Vec::with_capacity(accepted.len());
+    let mut energies: Vec<(Option<f64>, Option<f64>)> = Vec::with_capacity(accepted.len());
+    // Energy coherence of the per-backend deployments under perf-per-watt:
+    // only blocks that actually save energy on a backend are part of that
+    // backend's deployment option, so Step 5 neither ships a backend the
+    // policy rejected nor sizes from a pattern the shipped (filtered)
+    // program cannot reproduce. Per-block time savings over the baseline
+    // combine independently — the same assumption Step 3's combine phase
+    // and the all-FPGA projection below make.
+    let mut ppw_gpu_savings: Vec<f64> = Vec::new();
 
     for (i, plan) in accepted.iter().enumerate() {
         let label = plan.site.label();
@@ -288,30 +318,87 @@ pub fn arbitrate(
         // offload is motivated by).
         let fpga_pattern_secs =
             |est: f64| (pattern.time.secs() - gpu_device_secs + est).max(0.0);
+
+        // Power-aware comparisons. Under the default `perf` policy every
+        // closure below reduces to the original time-only rule; under
+        // `perf-per-watt` modeled joules decide (arXiv:2110.11520's
+        // selection criterion); the wattage `cap` only excludes backends.
+        let tsecs = power::transfer_secs(&pattern.traffic);
+        let gpu_block_j = power::device_energy(&model.gpu, gpu_device_secs, tsecs);
+        let fpga_block_j =
+            |est: f64| power::device_energy(&model.fpga, est, tsecs);
+        let gpu_pattern_j = power::pattern_energy(
+            model,
+            &model.gpu,
+            pattern.time.secs(),
+            gpu_device_secs,
+            &pattern.traffic,
+        );
+        let fpga_pattern_j = |est: f64| {
+            power::pattern_energy(
+                model,
+                &model.fpga,
+                fpga_pattern_secs(est),
+                est,
+                &pattern.traffic,
+            )
+        };
+        let gpu_wins_on_policy = match power_policy {
+            // Offload when it saves energy for the same work, not (only)
+            // time — a slower-but-frugal pattern stays rejected because a
+            // slower pattern on a hotter device always burns more joules.
+            PowerPolicy::PerfPerWatt => {
+                pattern.output_ok && gpu_pattern_j < power.baseline.energy_j
+            }
+            _ => gpu_ok,
+        };
+        let gpu_wins_cpu = gpu_wins_on_policy && cap_allows(Backend::Gpu);
+        let fpga_wins = |est: &FpgaEstimate| {
+            if !cap_allows(Backend::Fpga) {
+                return false;
+            }
+            // With the GPU capped out, the FPGA competes against the CPU
+            // baseline alone.
+            let beats_gpu = !cap_allows(Backend::Gpu)
+                || match power_policy {
+                    PowerPolicy::PerfPerWatt => fpga_block_j(est.est_secs) < gpu_block_j,
+                    _ => est.est_secs < gpu_device_secs,
+                };
+            let beats_baseline = match power_policy {
+                PowerPolicy::PerfPerWatt => {
+                    fpga_pattern_j(est.est_secs) < power.baseline.energy_j
+                }
+                _ => fpga_pattern_secs(est.est_secs) < outcome.baseline.secs(),
+            };
+            beats_gpu && beats_baseline
+        };
+
         let backend = match policy {
             BackendPolicy::Gpu => {
-                if gpu_ok {
+                if gpu_wins_cpu {
                     Backend::Gpu
                 } else {
                     Backend::Cpu
                 }
             }
             BackendPolicy::Fpga => match &fpga {
-                Some(est) if est.precheck_ok => Backend::Fpga,
+                Some(est) if est.precheck_ok && cap_allows(Backend::Fpga) => Backend::Fpga,
                 _ => Backend::Cpu,
             },
             BackendPolicy::Auto => match &fpga {
-                Some(est)
-                    if est.precheck_ok
-                        && est.est_secs < gpu_device_secs
-                        && fpga_pattern_secs(est.est_secs) < outcome.baseline.secs() =>
-                {
-                    Backend::Fpga
-                }
-                _ if gpu_ok => Backend::Gpu,
+                Some(est) if est.precheck_ok && fpga_wins(est) => Backend::Fpga,
+                _ if gpu_wins_cpu => Backend::Gpu,
                 _ => Backend::Cpu,
             },
         };
+        energies.push((
+            (pattern.traffic.dispatches > 0).then_some(gpu_block_j),
+            fpga.as_ref().filter(|est| est.precheck_ok).map(|est| fpga_block_j(est.est_secs)),
+        ));
+        let in_best = outcome.best_enabled.get(i).copied().unwrap_or(false);
+        if in_best && gpu_wins_on_policy {
+            ppw_gpu_savings.push((outcome.baseline.secs() - pattern.time.secs()).max(0.0));
+        }
 
         // Committing to the FPGA pays the full simulated compile.
         let fpga = fpga.map(|mut est| {
@@ -332,10 +419,18 @@ pub fn arbitrate(
         });
 
         // Projected per-pattern time with this block on the FPGA (used
-        // for the all-FPGA request-time estimate below).
+        // for the all-FPGA request-time estimate below). Under
+        // perf-per-watt, a core whose projected pattern loses on joules
+        // is excluded from the all-FPGA deployment option too.
         let projection = fpga
             .as_ref()
             .filter(|est| est.precheck_ok)
+            .filter(|est| match power_policy {
+                PowerPolicy::PerfPerWatt => {
+                    fpga_pattern_j(est.est_secs) < power.baseline.energy_j
+                }
+                _ => true,
+            })
             .map(|est| fpga_pattern_secs(est.est_secs));
         projections.push(projection);
         blocks.push(BlockArbitration { label, backend, gpu_secs, gpu_device_secs, fpga });
@@ -361,15 +456,46 @@ pub fn arbitrate(
     // projected per-pattern improvement over the CPU baseline combines
     // independently (the same assumption Step 3's combine phase makes).
     let offloads = outcome.best_enabled.iter().any(|&on| on);
-    let gpu_request_secs = offloads.then(|| outcome.best_time.secs());
     let base = outcome.baseline.secs();
     let fpga_savings: Vec<f64> = projections
         .iter()
         .flatten()
         .map(|&p| base - p)
         .collect();
-    let fpga_request_secs = (!fpga_savings.is_empty())
+    // A policy-excluded backend is excluded from deployment entirely: its
+    // request time must not reach Step-5 placement, or the placement walk
+    // would happily ship the service on a backend the cap forbade (or
+    // that perf-per-watt rejected on joules for every block). Under
+    // perf-per-watt the GPU request time is rebuilt from the coherent
+    // blocks' combined savings — `best_time` was measured with *every*
+    // time-winner offloaded, including the energy losers the emitted
+    // deployment drops. Under `perf` both paths are the pre-power ones.
+    let gpu_request_secs = match power_policy {
+        PowerPolicy::PerfPerWatt => {
+            let deployable = !ppw_gpu_savings.is_empty() && cap_allows(Backend::Gpu);
+            deployable.then(|| (base - ppw_gpu_savings.iter().sum::<f64>()).max(1e-9))
+        }
+        _ => (offloads && cap_allows(Backend::Gpu)).then(|| outcome.best_time.secs()),
+    };
+    let fpga_request_secs = (!fpga_savings.is_empty() && cap_allows(Backend::Fpga))
         .then(|| (base - fpga_savings.iter().sum::<f64>()).max(1e-9));
+
+    // Power residue: recorded only when a non-default policy decided, so
+    // the default report bytes stay identical to time-only arbitration.
+    let power_decision = (!power_policy.is_default()).then(|| power::PowerDecision {
+        policy: power_policy,
+        gpu_watts: model.gpu.active_watts,
+        fpga_watts: model.fpga.active_watts,
+        blocks: blocks
+            .iter()
+            .zip(&energies)
+            .map(|(b, &(gpu_energy_j, fpga_energy_j))| power::BlockEnergy {
+                label: b.label.clone(),
+                gpu_energy_j,
+                fpga_energy_j,
+            })
+            .collect(),
+    });
 
     Ok(ArbitrationOutcome {
         policy,
@@ -379,6 +505,7 @@ pub fn arbitrate(
         simulated_hours: hls.clock.elapsed_hours(),
         gpu_request_secs,
         fpga_request_secs,
+        power: power_decision,
     })
 }
 
@@ -513,10 +640,16 @@ fn block_intensity(db: &PatternDb, artifact: &str, n: u64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::power::PowerModel;
     use crate::coordinator::verify::{DeviceTraffic, PatternResult, SearchOutcome};
     use crate::metrics::Measurement;
     use crate::transform::{Reconciliation, Site};
     use std::time::Duration;
+
+    /// The inert default: time decides, as before the power stage existed.
+    fn perf_power(outcome: &SearchOutcome) -> PowerOutcome {
+        power::score(&PowerModel::builtin(), PowerPolicy::Perf, outcome)
+    }
 
     fn measurement(label: &str, us: u64) -> Measurement {
         Measurement {
@@ -572,6 +705,7 @@ mod tests {
             NARROW_MIN_SCORE,
             &accepted,
             &outcome,
+            &perf_power(&outcome),
         )
         .unwrap();
         assert_eq!(out.backend, Backend::Fpga);
@@ -597,6 +731,7 @@ mod tests {
             NARROW_MIN_SCORE,
             &accepted,
             &outcome,
+            &perf_power(&outcome),
         )
         .unwrap();
         assert_eq!(out.backend, Backend::Gpu);
@@ -617,6 +752,7 @@ mod tests {
             f64::INFINITY, // nothing clears the bar
             &accepted,
             &outcome,
+            &perf_power(&outcome),
         )
         .unwrap();
         assert_eq!(out.backend, Backend::Gpu);
@@ -637,6 +773,7 @@ mod tests {
             NARROW_MIN_SCORE,
             &accepted,
             &outcome,
+            &perf_power(&outcome),
         )
         .unwrap();
         assert_eq!(out.backend, Backend::Gpu);
@@ -658,6 +795,7 @@ mod tests {
             NARROW_MIN_SCORE,
             &accepted,
             &outcome,
+            &perf_power(&outcome),
         )
         .unwrap_err()
         .to_string();
@@ -684,6 +822,7 @@ mod tests {
             NARROW_MIN_SCORE,
             &accepted,
             &outcome,
+            &perf_power(&outcome),
         )
         .unwrap();
         assert_eq!(out.backend, Backend::Fpga);
@@ -714,6 +853,7 @@ mod tests {
             NARROW_MIN_SCORE,
             &accepted,
             &outcome,
+            &perf_power(&outcome),
         )
         .unwrap();
         // Projection: 11 ms - 10.5 ms device + ~63 µs est < 1 ms baseline.
@@ -733,6 +873,7 @@ mod tests {
             NARROW_MIN_SCORE,
             &accepted,
             &outcome,
+            &perf_power(&outcome),
         )
         .unwrap();
         assert_eq!(forced.blocks[0].backend, Backend::Fpga);
@@ -774,12 +915,187 @@ mod tests {
                 NARROW_MIN_SCORE,
                 &[plan.clone()],
                 &outcome,
+                &perf_power(&outcome),
             )
             .unwrap();
             assert!(out.blocks[0].fpga.is_none(), "{policy:?}");
             let want = if policy == BackendPolicy::Fpga { Backend::Cpu } else { Backend::Gpu };
             assert_eq!(out.blocks[0].backend, want, "{policy:?}");
         }
+    }
+
+    #[test]
+    fn perf_per_watt_flips_a_gpu_time_winner_to_fpga() {
+        // Pick a measured device time *below* the FPGA estimate, so time-
+        // only arbitration keeps the GPU — then show that the ~75 W vs
+        // ~40 W draw asymmetry flips the block to the FPGA once joules
+        // decide. First extract the estimate under the default policy.
+        let db = PatternDb::builtin();
+        let (accepted, probe_outcome) = fft_case(0.010);
+        let probe = arbitrate(
+            &db,
+            BackendPolicy::Auto,
+            fpga::ARRIA10_GX,
+            NARROW_MIN_SCORE,
+            &accepted,
+            &probe_outcome,
+            &perf_power(&probe_outcome),
+        )
+        .unwrap();
+        let est = probe.blocks[0].fpga.as_ref().unwrap().est_secs;
+        assert!(est > 0.0);
+
+        // Measured GPU seconds at 80% of the estimate: time says GPU, but
+        // gpu joules ≈ 75 W × 0.8·est > fpga joules ≈ 40 W × est.
+        let (accepted, outcome) = fft_case(est * 0.8);
+        let model = PowerModel::builtin();
+        let perf = arbitrate(
+            &db,
+            BackendPolicy::Auto,
+            fpga::ARRIA10_GX,
+            NARROW_MIN_SCORE,
+            &accepted,
+            &outcome,
+            &power::score(&model, PowerPolicy::Perf, &outcome),
+        )
+        .unwrap();
+        assert_eq!(perf.blocks[0].backend, Backend::Gpu, "time-only keeps the GPU");
+        assert!(perf.power.is_none(), "default policy records no power residue");
+
+        let ppw = arbitrate(
+            &db,
+            BackendPolicy::Auto,
+            fpga::ARRIA10_GX,
+            NARROW_MIN_SCORE,
+            &accepted,
+            &outcome,
+            &power::score(&model, PowerPolicy::PerfPerWatt, &outcome),
+        )
+        .unwrap();
+        assert_eq!(ppw.blocks[0].backend, Backend::Fpga, "joules flip the block");
+        assert_eq!(ppw.backend, Backend::Fpga);
+        // The v3 power residue records the per-block energy comparison.
+        let residue = ppw.power.as_ref().unwrap();
+        assert_eq!(residue.policy, PowerPolicy::PerfPerWatt);
+        let block = &residue.blocks[0];
+        let (gpu_j, fpga_j) =
+            (block.gpu_energy_j.unwrap(), block.fpga_energy_j.unwrap());
+        assert!(fpga_j < gpu_j, "fpga {fpga_j} J vs gpu {gpu_j} J");
+        assert!((residue.gpu_watts - model.gpu.active_watts).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wattage_cap_excludes_hot_backends() {
+        let db = PatternDb::builtin();
+        let model = PowerModel::builtin();
+        // The FPGA estimate loses on time (measured PJRT near-free), so
+        // uncapped auto keeps the GPU; capping below the GPU's 75 W draw
+        // excludes it, and the FPGA — the only backend under the cap —
+        // must still beat the CPU baseline to win the block.
+        let (accepted, outcome) = fft_case(1e-7);
+        let capped = arbitrate(
+            &db,
+            BackendPolicy::Auto,
+            fpga::ARRIA10_GX,
+            NARROW_MIN_SCORE,
+            &accepted,
+            &outcome,
+            &power::score(&model, PowerPolicy::Cap(50.0), &outcome),
+        )
+        .unwrap();
+        assert_eq!(capped.blocks[0].backend, Backend::Fpga, "GPU capped out");
+        assert!(capped.power.is_some(), "cap is a non-default policy: residue recorded");
+        // The exclusion reaches Step-5: no GPU deployment may be offered.
+        assert!(capped.gpu_request_secs.is_none(), "capped-out GPU must not reach placement");
+        assert!(capped.fpga_request_secs.is_some());
+
+        // A cap below every accelerator leaves only the CPU.
+        let starved = arbitrate(
+            &db,
+            BackendPolicy::Auto,
+            fpga::ARRIA10_GX,
+            NARROW_MIN_SCORE,
+            &accepted,
+            &outcome,
+            &power::score(&model, PowerPolicy::Cap(30.0), &outcome),
+        )
+        .unwrap();
+        assert_eq!(starved.blocks[0].backend, Backend::Cpu);
+        assert_eq!(starved.backend, Backend::Cpu);
+        assert!(starved.gpu_request_secs.is_none());
+        assert!(starved.fpga_request_secs.is_none());
+
+        // Even a forced --target fpga respects the hard cap.
+        let forced = arbitrate(
+            &db,
+            BackendPolicy::Fpga,
+            fpga::ARRIA10_GX,
+            NARROW_MIN_SCORE,
+            &accepted,
+            &outcome,
+            &power::score(&model, PowerPolicy::Cap(30.0), &outcome),
+        )
+        .unwrap();
+        assert_eq!(forced.blocks[0].backend, Backend::Cpu);
+    }
+
+    #[test]
+    fn perf_per_watt_sends_an_energy_losing_time_winner_back_to_cpu() {
+        // A 1.05x time win that burns more joules than the all-CPU run:
+        // 95 ms pattern (5 ms on the device) vs a 100 ms baseline — the
+        // hotter GPU + host draw outweighs the small time saving, and the
+        // modeled FPGA projection loses on pattern energy too.
+        let db = PatternDb::builtin();
+        let model = PowerModel::builtin();
+        let (accepted, mut outcome) = fft_case(0.005);
+        outcome.tried[0].time = measurement("only:call:fft2d", 95_000);
+        outcome.tried[0].speedup = 100_000.0 / 95_000.0;
+        outcome.best_time = outcome.tried[0].time.clone();
+        outcome.best_speedup = outcome.tried[0].speedup;
+        let out = arbitrate(
+            &db,
+            BackendPolicy::Auto,
+            fpga::ARRIA10_GX,
+            NARROW_MIN_SCORE,
+            &accepted,
+            &outcome,
+            &power::score(&model, PowerPolicy::PerfPerWatt, &outcome),
+        )
+        .unwrap();
+        assert_eq!(out.blocks[0].backend, Backend::Cpu, "energy loser stays on the CPU");
+        assert_eq!(out.backend, Backend::Cpu);
+        // The policy-incoherent deployments are withheld from Step 5
+        // entirely: placement can never ship a backend the policy
+        // rejected for every block.
+        assert!(out.gpu_request_secs.is_none());
+        assert!(out.fpga_request_secs.is_none());
+    }
+
+    #[test]
+    fn perf_per_watt_rejects_a_slower_pattern_outright() {
+        // A pattern slower than the baseline burns more joules than the
+        // baseline on any device: perf-per-watt must not "rescue" it onto
+        // the GPU.
+        let db = PatternDb::builtin();
+        let model = PowerModel::builtin();
+        let (accepted, mut outcome) = fft_case(1e-7);
+        outcome.baseline = measurement("all-CPU", 1_000);
+        outcome.tried[0].time = measurement("only:call:fft2d", 11_000);
+        outcome.tried[0].speedup = 1_000.0 / 11_000.0;
+        outcome.best_enabled = vec![false];
+        outcome.best_time = outcome.baseline.clone();
+        outcome.best_speedup = 1.0;
+        let out = arbitrate(
+            &db,
+            BackendPolicy::Auto,
+            fpga::ARRIA10_GX,
+            NARROW_MIN_SCORE,
+            &accepted,
+            &outcome,
+            &power::score(&model, PowerPolicy::PerfPerWatt, &outcome),
+        )
+        .unwrap();
+        assert_ne!(out.blocks[0].backend, Backend::Gpu);
     }
 
     #[test]

@@ -29,6 +29,11 @@ pub struct Location {
     /// offload is exactly this asymmetry: FPGAs draw far less power, so
     /// operators price them below GPUs).
     pub fpga_cost_per_hour: f64,
+    /// $/kWh for metered electricity at this location. Charged on top of
+    /// the instance price when the arbitration supplied per-instance
+    /// wattage (a non-default `--power-policy`); locations that fold
+    /// power into the instance price set it to zero.
+    pub energy_cost_per_kwh: f64,
     /// Network RTT from the clients (ms).
     pub latency_ms: f64,
 }
@@ -92,14 +97,38 @@ pub struct BackendTimes {
     pub gpu_secs: Option<f64>,
     /// Estimated per-request seconds with FPGA-capable blocks on FPGAs.
     pub fpga_secs: Option<f64>,
+    /// Modeled draw of one GPU instance (W) — `Some` only when a
+    /// non-default `--power-policy` arbitrated, making placement charge
+    /// metered electricity on top of the instance price.
+    pub gpu_watts: Option<f64>,
+    /// Modeled draw of one FPGA instance (W); see `gpu_watts`.
+    pub fpga_watts: Option<f64>,
 }
 
 impl BackendTimes {
-    /// Extract the per-backend times from an offload report.
-    pub fn from_report(r: &OffloadReport) -> Self {
+    /// Extract the per-backend times (and, when a power policy decided,
+    /// per-instance watts) from a Step-3b arbitration outcome — the one
+    /// place the report fields map onto placement inputs.
+    pub fn from_arbitration(a: &super::backend::ArbitrationOutcome) -> Self {
         BackendTimes {
-            gpu_secs: r.arbitration.gpu_request_secs,
-            fpga_secs: r.arbitration.fpga_request_secs,
+            gpu_secs: a.gpu_request_secs,
+            fpga_secs: a.fpga_request_secs,
+            gpu_watts: a.power.as_ref().map(|p| p.gpu_watts),
+            fpga_watts: a.power.as_ref().map(|p| p.fpga_watts),
+        }
+    }
+
+    /// Extract the placement inputs from an offload report.
+    pub fn from_report(r: &OffloadReport) -> Self {
+        Self::from_arbitration(&r.arbitration)
+    }
+
+    /// Per-instance draw for one backend, when known.
+    fn watts(&self, backend: Backend) -> Option<f64> {
+        match backend {
+            Backend::Gpu => self.gpu_watts,
+            Backend::Fpga => self.fpga_watts,
+            Backend::Cpu => None,
         }
     }
 }
@@ -166,7 +195,11 @@ pub fn plan_placement(
 /// request time and pick the cheapest (backend, location) pair satisfying
 /// latency + per-backend capacity + budget. This is where the Step-3b
 /// times pay off commercially: a GPU-fastest block still deploys on
-/// FPGAs when every GPU option busts the budget.
+/// FPGAs when every GPU option busts the budget. When the arbitration
+/// supplied per-instance watts (a non-default `--power-policy`), the
+/// monthly cost additionally meters electricity at each location's
+/// $/kWh — so a power-hungry backend can lose a location it would win on
+/// instance price alone (the paper's power/cost motivation, priced).
 pub fn plan_backend_placement(
     times: &BackendTimes,
     req: &Requirements,
@@ -187,7 +220,12 @@ pub fn plan_backend_placement(
             if loc.capacity(backend) < plan.instances {
                 continue;
             }
-            let monthly = loc.hourly(backend) * plan.instances as f64 * 24.0 * 30.0;
+            let hours = 24.0 * 30.0;
+            let energy_hourly = times
+                .watts(backend)
+                .map(|w| w / 1000.0 * loc.energy_cost_per_kwh)
+                .unwrap_or(0.0);
+            let monthly = (loc.hourly(backend) + energy_hourly) * plan.instances as f64 * hours;
             if monthly > req.budget_per_month {
                 continue;
             }
@@ -243,6 +281,7 @@ mod tests {
                 fpgas: 1,
                 cost_per_hour: 0.9,
                 fpga_cost_per_hour: 0.35,
+                energy_cost_per_kwh: 0.30,
                 latency_ms: 3.0,
             },
             Location {
@@ -251,6 +290,7 @@ mod tests {
                 fpgas: 4,
                 cost_per_hour: 0.5,
                 fpga_cost_per_hour: 0.2,
+                energy_cost_per_kwh: 0.12,
                 latency_ms: 12.0,
             },
             Location {
@@ -259,6 +299,7 @@ mod tests {
                 fpgas: 32,
                 cost_per_hour: 0.3,
                 fpga_cost_per_hour: 0.12,
+                energy_cost_per_kwh: 0.08,
                 latency_ms: 45.0,
             },
         ]
@@ -302,7 +343,8 @@ mod tests {
     fn backend_placement_prefers_cheapest_feasible_pair() {
         // Both backends usable and equally fast: the FPGA's lower hourly
         // price wins at the same (latency-feasible) location.
-        let times = BackendTimes { gpu_secs: Some(0.1), fpga_secs: Some(0.1) };
+        let times =
+            BackendTimes { gpu_secs: Some(0.1), fpga_secs: Some(0.1), ..Default::default() };
         let p = plan_backend_placement(&times, &req(), &locations()).unwrap();
         assert_eq!(p.backend, Backend::Fpga);
         assert_eq!(p.location, "regional-dc");
@@ -315,7 +357,8 @@ mod tests {
         // placement is feasible on capacity and latency but every GPU
         // option busts the monthly budget; the FPGA estimate (slower per
         // request, cheaper per hour) is what ships.
-        let times = BackendTimes { gpu_secs: Some(0.1), fpga_secs: Some(0.2) };
+        let times =
+            BackendTimes { gpu_secs: Some(0.1), fpga_secs: Some(0.2), ..Default::default() };
         // 40 rps: GPU needs 4 instances, FPGA needs 8.
         let tight = Requirements { budget_per_month: 1300.0, ..req() };
         // GPU at regional-dc: 4 × $0.5 × 720 = $1440 > budget.
@@ -331,11 +374,43 @@ mod tests {
     }
 
     #[test]
+    fn metered_energy_flips_the_backend_choice() {
+        // One location where the GPU's *instance* price narrowly beats the
+        // FPGA's. Without wattage (default --power-policy) the GPU wins;
+        // with the arbitration's per-instance watts and a metered $/kWh,
+        // the GPU's 75 W draw prices it above the 40 W FPGA.
+        let locs = vec![Location {
+            name: "metered-dc".into(),
+            gpus: 8,
+            fpgas: 8,
+            cost_per_hour: 0.20,
+            fpga_cost_per_hour: 0.21,
+            energy_cost_per_kwh: 1.0,
+            latency_ms: 10.0,
+        }];
+        let blind =
+            BackendTimes { gpu_secs: Some(0.1), fpga_secs: Some(0.1), ..Default::default() };
+        let p = plan_backend_placement(&blind, &req(), &locs).unwrap();
+        assert_eq!(p.backend, Backend::Gpu, "instance price alone favors the GPU");
+
+        let metered = BackendTimes {
+            gpu_watts: Some(75.0),
+            fpga_watts: Some(40.0),
+            ..blind
+        };
+        let p = plan_backend_placement(&metered, &req(), &locs).unwrap();
+        assert_eq!(p.backend, Backend::Fpga, "metered electricity flips it");
+        // 4 instances × (0.21 + 0.040 × 1.0) $/h × 720 h.
+        assert!((p.monthly_cost - 4.0 * 0.25 * 720.0).abs() < 1e-6, "{}", p.monthly_cost);
+    }
+
+    #[test]
     fn backend_placement_fails_when_no_backend_available() {
         let times = BackendTimes::default();
         assert!(plan_backend_placement(&times, &req(), &locations()).is_err());
         // FPGA-only times with no FPGA capacity anywhere is infeasible too.
-        let times = BackendTimes { gpu_secs: None, fpga_secs: Some(0.1) };
+        let times =
+            BackendTimes { gpu_secs: None, fpga_secs: Some(0.1), ..Default::default() };
         let mut locs = locations();
         for l in &mut locs {
             l.fpgas = 0;

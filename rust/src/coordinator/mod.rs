@@ -28,6 +28,7 @@ pub mod backend;
 pub mod flow;
 pub mod loop_offload;
 pub mod pipeline;
+pub mod power;
 pub mod report_json;
 pub mod verify;
 
@@ -46,9 +47,10 @@ use crate::transform::{InterfacePolicy, PlannedReplacement, Reconciliation};
 
 pub use backend::{ArbitrationOutcome, Backend, BackendPolicy};
 pub use pipeline::{
-    Arbitrated, Candidate, Discovered, OffloadError, OffloadRequest, Parsed, Placed, Reconciled,
-    Stage, StageObserver, Verified,
+    Arbitrated, Candidate, Discovered, OffloadError, OffloadRequest, Parsed, Placed, PowerScored,
+    Reconciled, Stage, StageObserver, Verified,
 };
+pub use power::{PowerModel, PowerOutcome, PowerPolicy};
 pub use verify::{
     MeasuredPattern, PatternExecutor, PatternSpec, ResultProbe, SearchOutcome, SerialExecutor,
     VerifyConfig, VerifyContext, VerifyPlan,
@@ -127,6 +129,12 @@ pub struct Coordinator {
     pub backend_policy: BackendPolicy,
     /// FPGA device model the arbitration evaluates IP cores against.
     pub device: crate::fpga::Device,
+    /// How arbitration weighs power (CLI `--power-policy`): the default
+    /// `perf` decides on time alone, exactly as before the power stage.
+    pub power_policy: PowerPolicy,
+    /// Per-device wattage models (CPU baseline, GPU, FPGA) the power
+    /// stage scores candidates against, registered alongside `device`.
+    pub power_model: PowerModel,
     /// Pattern executor the Verify stage measures with. `None` means the
     /// serial default (one engine, patterns back to back); the service
     /// tier and CLI `--verify-parallel` install a pooled executor that
@@ -146,6 +154,8 @@ impl Coordinator {
             verify: VerifyConfig::default(),
             backend_policy: BackendPolicy::Auto,
             device: crate::fpga::ARRIA10_GX,
+            power_policy: PowerPolicy::default(),
+            power_model: PowerModel::builtin(),
             executor: None,
         })
     }
@@ -253,6 +263,28 @@ impl Coordinator {
                     b.gpu_device_secs
                 )),
             );
+        }
+        if let Some(p) = &arb.power {
+            let _ = writeln!(
+                out,
+                "power arbitration (--power-policy {}, gpu {:.0} W / fpga {:.0} W per instance):",
+                p.policy.render(),
+                p.gpu_watts,
+                p.fpga_watts,
+            );
+            for b in &p.blocks {
+                let j = |v: Option<f64>| match v {
+                    Some(j) => format!("{:.2} mJ", j * 1e3),
+                    None => "-".to_string(),
+                };
+                let _ = writeln!(
+                    out,
+                    "  block {:<24} gpu {}  fpga {}",
+                    b.label,
+                    j(b.gpu_energy_j),
+                    j(b.fpga_energy_j),
+                );
+            }
         }
         let _ = writeln!(
             out,

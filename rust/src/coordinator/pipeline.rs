@@ -12,7 +12,8 @@
 //!   interface policy, verification settings, backend target, FPGA device
 //!   model).
 //! * Typed stage artifacts — [`Parsed`] → [`Discovered`] → [`Reconciled`]
-//!   → [`Verified`] → [`Arbitrated`] → [`Placed`]. Each is a plain value
+//!   → [`Verified`] → [`PowerScored`] → [`Arbitrated`] → [`Placed`]. Each
+//!   is a plain value
 //!   you can inspect, serialize ([`Parsed::to_json_string`] etc.), and
 //!   resume from ([`Parsed::from_json_str`] etc.): deserialize a stage on
 //!   another process — or under a different policy — and advance it from
@@ -55,6 +56,7 @@ use crate::transform::{self, reconcile, signature_of, InterfacePolicy, PlannedRe
 
 use super::backend::{self, Backend, BackendPolicy};
 use super::flow;
+use super::power::{self, PowerModel, PowerPolicy};
 use super::report_json;
 use super::verify::{self, PatternExecutor, SearchOutcome, SerialExecutor, VerifyConfig};
 use super::{Coordinator, DiscoveredBlock, DiscoveryPath, OffloadReport};
@@ -73,6 +75,9 @@ pub enum Stage {
     Reconcile,
     /// Step 3: measured pattern search in the verification environment.
     Verify,
+    /// Power scoring: energy/performance-per-watt of every surviving
+    /// measured pattern under the wattage models (arXiv:2110.11520).
+    PowerScore,
     /// Step 3b: CPU/GPU/FPGA backend arbitration.
     Arbitrate,
     /// Steps 4–5: resource sizing + placement.
@@ -81,11 +86,12 @@ pub enum Stage {
 
 impl Stage {
     /// Every stage, in execution order.
-    pub const ALL: [Stage; 6] = [
+    pub const ALL: [Stage; 7] = [
         Stage::Parse,
         Stage::Discover,
         Stage::Reconcile,
         Stage::Verify,
+        Stage::PowerScore,
         Stage::Arbitrate,
         Stage::Place,
     ];
@@ -97,6 +103,7 @@ impl Stage {
             Stage::Discover => "discover",
             Stage::Reconcile => "reconcile",
             Stage::Verify => "verify",
+            Stage::PowerScore => "power-score",
             Stage::Arbitrate => "arbitrate",
             Stage::Place => "place",
         }
@@ -109,8 +116,9 @@ impl Stage {
             Stage::Discover => 1,
             Stage::Reconcile => 2,
             Stage::Verify => 3,
-            Stage::Arbitrate => 4,
-            Stage::Place => 5,
+            Stage::PowerScore => 4,
+            Stage::Arbitrate => 5,
+            Stage::Place => 6,
         }
     }
 }
@@ -162,7 +170,18 @@ pub enum OffloadError {
         /// What went wrong.
         message: String,
     },
-    /// Step 3b arbitration failed; the verified artifact survives.
+    /// Power scoring failed (an invalid wattage model); the verified
+    /// artifact survives. The built-in model is always valid — this fires
+    /// only for caller-supplied models.
+    PowerScoring {
+        /// The successful Step-3 artifact.
+        verified: Box<Verified>,
+        /// What went wrong.
+        message: String,
+    },
+    /// Step 3b arbitration failed; the verified artifact survives (the
+    /// power scores are derived from it in microseconds, so the variant
+    /// carries the measured artifact rather than the scored wrapper).
     Arbitrate {
         /// The successful Step-3 artifact.
         verified: Box<Verified>,
@@ -186,6 +205,7 @@ impl OffloadError {
             OffloadError::Discovery { .. } => Stage::Discover,
             OffloadError::Reconcile { .. } => Stage::Reconcile,
             OffloadError::Verify { .. } => Stage::Verify,
+            OffloadError::PowerScoring { .. } => Stage::PowerScore,
             OffloadError::Arbitrate { .. } => Stage::Arbitrate,
             OffloadError::Placement { .. } => Stage::Place,
         }
@@ -198,6 +218,7 @@ impl OffloadError {
             | OffloadError::Discovery { message, .. }
             | OffloadError::Reconcile { message, .. }
             | OffloadError::Verify { message, .. }
+            | OffloadError::PowerScoring { message, .. }
             | OffloadError::Arbitrate { message, .. }
             | OffloadError::Placement { message, .. } => message,
         }
@@ -257,6 +278,11 @@ pub struct OffloadRequest {
     pub backend_policy: BackendPolicy,
     /// FPGA device model the arbitration evaluates IP cores against.
     pub device: fpga::Device,
+    /// How arbitration weighs power (CLI `--power-policy`).
+    pub power_policy: PowerPolicy,
+    /// Per-device wattage models the power stage scores against,
+    /// registered alongside the FPGA device model.
+    pub power_model: PowerModel,
     observer: Option<Arc<dyn StageObserver>>,
     executor: Option<Rc<dyn PatternExecutor>>,
 }
@@ -274,6 +300,8 @@ impl OffloadRequest {
             verify: c.verify.clone(),
             backend_policy: c.backend_policy,
             device: c.device,
+            power_policy: c.power_policy,
+            power_model: c.power_model.clone(),
             observer: None,
             executor: c.executor.clone(),
         }
@@ -316,6 +344,19 @@ impl OffloadRequest {
     /// Override the FPGA device model.
     pub fn with_device(mut self, device: fpga::Device) -> Self {
         self.device = device;
+        self
+    }
+
+    /// Override the power policy arbitration weighs backends under
+    /// (CLI `--power-policy`).
+    pub fn with_power_policy(mut self, policy: PowerPolicy) -> Self {
+        self.power_policy = policy;
+        self
+    }
+
+    /// Override the per-device wattage models.
+    pub fn with_power_model(mut self, model: PowerModel) -> Self {
+        self.power_model = model;
         self
     }
 
@@ -387,6 +428,8 @@ pub const STAGE_DISCOVERED_FORMAT: &str = "fbo-stage-discovered-v1";
 pub const STAGE_RECONCILED_FORMAT: &str = "fbo-stage-reconciled-v1";
 /// Format tag of a serialized [`Verified`] artifact.
 pub const STAGE_VERIFIED_FORMAT: &str = "fbo-stage-verified-v1";
+/// Format tag of a serialized [`PowerScored`] artifact.
+pub const STAGE_POWER_SCORED_FORMAT: &str = "fbo-stage-power-scored-v1";
 /// Format tag of a serialized [`Arbitrated`] artifact.
 pub const STAGE_ARBITRATED_FORMAT: &str = "fbo-stage-arbitrated-v1";
 /// Format tag of a serialized [`Placed`] artifact.
@@ -683,39 +726,47 @@ pub struct Verified {
 }
 
 impl Verified {
-    /// Step 3b: arbitrate CPU/GPU/FPGA per block against the measured
-    /// search results, and emit the winning transformed source.
-    pub fn arbitrate(&self, req: &OffloadRequest) -> std::result::Result<Arbitrated, OffloadError> {
+    /// Validate the wattage model, score the outcome, and report the
+    /// stage to the observer — shared by [`Verified::power_score`] (which
+    /// materializes the artifact) and [`Verified::arbitrate`] (which
+    /// scores transiently, avoiding an extra artifact clone).
+    fn score_outcome(
+        &self,
+        req: &OffloadRequest,
+    ) -> std::result::Result<(power::PowerOutcome, Duration), OffloadError> {
         let t0 = Instant::now();
-        let go = || -> Result<(backend::ArbitrationOutcome, String)> {
-            let accepted = self.reconciled.accepted();
-            let arbitration = backend::arbitrate(
-                &req.db,
-                req.backend_policy,
-                req.device,
-                backend::NARROW_MIN_SCORE,
-                &accepted,
-                &self.outcome,
-            )?;
-            // Emit the winning transformed source (on the *user's* program,
-            // not the linked one — what the paper hands back for deployment).
-            let winning: Vec<PlannedReplacement> = accepted
-                .iter()
-                .zip(&self.outcome.best_enabled)
-                .filter(|(_, &on)| on)
-                .map(|(p, _)| p.clone())
-                .collect();
-            let transformed =
-                transform::apply(&self.reconciled.discovered.parsed.program, &winning)?;
-            Ok((arbitration, parser::print_program(&transformed)))
-        };
-        let (arbitration, transformed_source) = go().map_err(|e| OffloadError::Arbitrate {
+        req.power_model.validate().map_err(|e| OffloadError::PowerScoring {
             verified: Box::new(self.clone()),
             message: format!("{e:#}"),
         })?;
+        let scores = power::score(&req.power_model, req.power_policy, &self.outcome);
         let wall = t0.elapsed();
-        req.observe(Stage::Arbitrate, wall);
-        Ok(Arbitrated { verified: self.clone(), arbitration, transformed_source, wall })
+        req.observe(Stage::PowerScore, wall);
+        Ok((scores, wall))
+    }
+
+    /// Power scoring: price every surviving measured pattern in modeled
+    /// joules and performance-per-watt under the request's wattage models
+    /// (arXiv:2110.11520). Infallible with the built-in model; a
+    /// caller-supplied model with non-finite or non-positive wattages
+    /// fails here, carrying this artifact.
+    pub fn power_score(
+        &self,
+        req: &OffloadRequest,
+    ) -> std::result::Result<PowerScored, OffloadError> {
+        let (scores, wall) = self.score_outcome(req)?;
+        Ok(PowerScored { verified: self.clone(), scores, wall })
+    }
+
+    /// Step 3b through the power stage: score, then arbitrate. Kept as the
+    /// one-call path so `Coordinator::offload` (and saved `Verified`
+    /// artifacts) advance without naming the intermediate stage; drive
+    /// [`Verified::power_score`] explicitly to inspect or serialize it.
+    /// Scores transiently, so this path still costs one artifact clone
+    /// per call — the same as arbitration before the power stage existed.
+    pub fn arbitrate(&self, req: &OffloadRequest) -> std::result::Result<Arbitrated, OffloadError> {
+        let (scores, _) = self.score_outcome(req)?;
+        arbitrate_scored(self, &scores, req)
     }
 
     /// Serialize to the canonical JSON value.
@@ -747,6 +798,113 @@ impl Verified {
     pub fn from_json_str(s: &str) -> Result<Verified> {
         Self::from_json(&json::parse(s)?)
     }
+}
+
+/// Power-stage artifact: every surviving measured pattern scored on
+/// modeled energy and performance-per-watt, between [`Verified`] and
+/// [`Arbitrated`]. Like every stage artifact it serializes and resumes:
+/// the service caches it under the power-tier fingerprint, so a
+/// `--target` change replays the scores and only re-arbitrates, while a
+/// `--power-policy` change re-scores from the cached [`Verified`]
+/// without re-measuring.
+#[derive(Debug, Clone)]
+pub struct PowerScored {
+    /// The Step-3 artifact this stage advanced from.
+    pub verified: Verified,
+    /// Energy / performance-per-watt scores of the baseline and every
+    /// measured pattern.
+    pub scores: power::PowerOutcome,
+    /// Wall-clock this stage took.
+    pub wall: Duration,
+}
+
+impl PowerScored {
+    /// Step 3b: arbitrate CPU/GPU/FPGA per block against the measured
+    /// search results — weighing time or joules per the power policy the
+    /// scores carry — and emit the winning transformed source.
+    pub fn arbitrate(&self, req: &OffloadRequest) -> std::result::Result<Arbitrated, OffloadError> {
+        arbitrate_scored(&self.verified, &self.scores, req)
+    }
+
+    /// Serialize to the canonical JSON value.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str(STAGE_POWER_SCORED_FORMAT)),
+            ("verified", self.verified.to_json()),
+            ("scores", power::outcome_to_json(&self.scores)),
+            ("wall_ns", report_json::duration_to_json(self.wall)),
+        ])
+    }
+
+    /// Decode from a JSON value.
+    pub fn from_json(v: &Json) -> Result<PowerScored> {
+        check_format(v, STAGE_POWER_SCORED_FORMAT)?;
+        Ok(PowerScored {
+            verified: Verified::from_json(v.get("verified")?)?,
+            scores: power::outcome_from_json(v.get("scores")?)?,
+            wall: report_json::duration_from_json(v.get("wall_ns")?)?,
+        })
+    }
+
+    /// Serialize to the canonical pretty-printed string.
+    pub fn to_json_string(&self) -> String {
+        json::to_string_pretty(&self.to_json())
+    }
+
+    /// Decode from the string form.
+    pub fn from_json_str(s: &str) -> Result<PowerScored> {
+        Self::from_json(&json::parse(s)?)
+    }
+}
+
+/// The shared Step-3b body behind [`Verified::arbitrate`] and
+/// [`PowerScored::arbitrate`]: run the backend arbitration, then emit the
+/// winning transformed source.
+fn arbitrate_scored(
+    verified: &Verified,
+    scores: &power::PowerOutcome,
+    req: &OffloadRequest,
+) -> std::result::Result<Arbitrated, OffloadError> {
+    let t0 = Instant::now();
+    let go = || -> Result<(backend::ArbitrationOutcome, String)> {
+        let accepted = verified.reconciled.accepted();
+        let arbitration = backend::arbitrate(
+            &req.db,
+            req.backend_policy,
+            req.device,
+            backend::NARROW_MIN_SCORE,
+            &accepted,
+            &verified.outcome,
+            scores,
+        )?;
+        // Emit the winning transformed source (on the *user's* program,
+        // not the linked one — what the paper hands back for deployment).
+        // Under a non-default power policy a time-winning block the
+        // arbitration sent back to the CPU (energy loser, or capped out)
+        // must not stay replaced: the emitted deployment has to match the
+        // recorded decision. Under the default `perf` policy a winning
+        // block always holds an accelerator, so the filter is inert.
+        let winning: Vec<PlannedReplacement> = accepted
+            .iter()
+            .enumerate()
+            .zip(&verified.outcome.best_enabled)
+            .filter(|((i, _), &on)| {
+                on && (scores.policy.is_default()
+                    || arbitration.blocks[*i].backend != Backend::Cpu)
+            })
+            .map(|((_, p), _)| p.clone())
+            .collect();
+        let transformed =
+            transform::apply(&verified.reconciled.discovered.parsed.program, &winning)?;
+        Ok((arbitration, parser::print_program(&transformed)))
+    };
+    let (arbitration, transformed_source) = go().map_err(|e| OffloadError::Arbitrate {
+        verified: Box::new(verified.clone()),
+        message: format!("{e:#}"),
+    })?;
+    let wall = t0.elapsed();
+    req.observe(Stage::Arbitrate, wall);
+    Ok(Arbitrated { verified: verified.clone(), arbitration, transformed_source, wall })
 }
 
 /// Stage-3b artifact: the backend decision plus the winning transformed
@@ -795,13 +953,16 @@ impl Arbitrated {
     ) -> std::result::Result<Placed, OffloadError> {
         let t0 = Instant::now();
         let go = || -> Result<Placed> {
-            let times = flow::BackendTimes {
-                gpu_secs: self.arbitration.gpu_request_secs,
-                fpga_secs: self.arbitration.fpga_request_secs,
-            };
+            let times = flow::BackendTimes::from_arbitration(&self.arbitration);
             if times.gpu_secs.is_none() && times.fpga_secs.is_none() {
+                // No accelerator deployment on offer: the service runs the
+                // all-CPU baseline, so size from the *baseline* time. When
+                // nothing offloaded this equals best_time (the search
+                // keeps the baseline as best); when a power policy
+                // excluded every accelerator, best_time would be the
+                // accelerated pattern the deployment cannot actually run.
                 let plan =
-                    flow::plan_resources(self.verified.outcome.best_time.secs(), requirements)?;
+                    flow::plan_resources(self.verified.outcome.baseline.secs(), requirements)?;
                 let p = flow::plan_placement(&plan, requirements, locations)?;
                 Ok(Placed {
                     backend: Backend::Cpu,
@@ -1034,11 +1195,14 @@ mod tests {
 
     #[test]
     fn stage_enum_is_ordered_and_named() {
-        assert_eq!(Stage::ALL.len(), 6);
+        assert_eq!(Stage::ALL.len(), 7);
         for (i, s) in Stage::ALL.iter().enumerate() {
             assert_eq!(s.index(), i);
         }
         assert_eq!(Stage::Verify.as_str(), "verify");
+        assert_eq!(Stage::PowerScore.as_str(), "power-score");
+        assert!(Stage::PowerScore.index() > Stage::Verify.index());
+        assert!(Stage::PowerScore.index() < Stage::Arbitrate.index());
     }
 
     #[test]

@@ -1,0 +1,619 @@
+//! Power model for the power-aware arbitration stage.
+//!
+//! The source paper motivates GPU/FPGA offloading with power efficiency
+//! relative to CPUs, and its companion power study (Yamato, *Power Saving
+//! Evaluation with Automatic Offloading*, arXiv:2110.11520) makes the
+//! selection criterion explicit: automatic offloading should place a
+//! block where its **performance-per-watt** is best, measured as the
+//! ratio of baseline CPU energy to offloaded energy for the same work.
+//! This module supplies the wattage models and energy arithmetic the
+//! pipeline's `PowerScore` stage (between `Verified` and `Arbitrated`)
+//! and the Step-3b arbitration consume:
+//!
+//! * [`DevicePower`] / [`PowerModel`] — per-device wattage models (CPU
+//!   baseline, GPU, FPGA), registered alongside the FPGA device model on
+//!   the coordinator and the service config;
+//! * [`PowerPolicy`] — the CLI `--power-policy` knob: `perf` (default,
+//!   byte-identical to time-only arbitration), `perf-per-watt` (energy
+//!   decides), `cap:<watts>` (backends over the cap are excluded);
+//! * [`EnergyEstimate`] / [`PowerOutcome`] — the scored result: energy =
+//!   watts × measured `exec_secs`, plus idle and transfer overheads, for
+//!   the all-CPU baseline and every surviving measured pattern.
+//!
+//! Energy figures are *modeled*, the same substitution discipline as the
+//! simulated HLS chain (DESIGN.md "Substitutions"): measured seconds are
+//! real, watts come from the device model. Relative comparisons (the
+//! paper's power-efficiency ratios) carry over; absolute joules are not
+//! lab measurements.
+
+use anyhow::{bail, Result};
+
+use crate::patterndb::json::Json;
+
+use super::backend::Backend;
+use super::verify::{DeviceTraffic, SearchOutcome};
+
+/// Wattage model of one device class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DevicePower {
+    /// Device name (diagnostics and fingerprints).
+    pub name: String,
+    /// Draw while idle but powered (W).
+    pub idle_watts: f64,
+    /// Draw while executing a block (W).
+    pub active_watts: f64,
+    /// Additional draw while moving data over PCIe (W); zero for the
+    /// host CPU, which has no staging phase.
+    pub transfer_watts: f64,
+}
+
+/// Per-device wattage models the power stage scores against — registered
+/// alongside the FPGA device model on the coordinator / service config,
+/// and folded into the power-tier cache fingerprint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerModel {
+    /// The all-CPU baseline host.
+    pub cpu: DevicePower,
+    /// The measured PJRT ("GPU") path.
+    pub gpu: DevicePower,
+    /// The modeled FPGA path.
+    pub fpga: DevicePower,
+}
+
+impl PowerModel {
+    /// Built-in model calibrated to the paper's hardware class: a
+    /// Xeon-class verification host, the GeForce GTX 1050 Ti (75 W TDP)
+    /// standing behind the measured PJRT path, and the Arria10 PAC card
+    /// (≈40 W under load — the power asymmetry arXiv:2110.11520 measures).
+    pub fn builtin() -> PowerModel {
+        PowerModel {
+            cpu: DevicePower {
+                name: "Xeon-class host".to_string(),
+                idle_watts: 15.0,
+                active_watts: 65.0,
+                transfer_watts: 0.0,
+            },
+            gpu: DevicePower {
+                name: "GeForce GTX 1050 Ti".to_string(),
+                idle_watts: 8.0,
+                active_watts: 75.0,
+                transfer_watts: 10.0,
+            },
+            fpga: DevicePower {
+                name: "Intel PAC Arria10 GX".to_string(),
+                idle_watts: 12.0,
+                active_watts: 40.0,
+                transfer_watts: 8.0,
+            },
+        }
+    }
+
+    /// The wattage model of one backend.
+    pub fn for_backend(&self, backend: Backend) -> &DevicePower {
+        match backend {
+            Backend::Cpu => &self.cpu,
+            Backend::Gpu => &self.gpu,
+            Backend::Fpga => &self.fpga,
+        }
+    }
+
+    /// Stable digest blob for the cache fingerprints (name + the three
+    /// wattages per device, in fixed order).
+    pub fn fingerprint_blob(&self) -> String {
+        let one = |d: &DevicePower| {
+            format!("{}/{}/{}/{}", d.name, d.idle_watts, d.active_watts, d.transfer_watts)
+        };
+        format!("cpu:{}|gpu:{}|fpga:{}", one(&self.cpu), one(&self.gpu), one(&self.fpga))
+    }
+
+    /// Every wattage must be finite and non-negative, and active draws
+    /// strictly positive (energy ratios divide by them).
+    pub fn validate(&self) -> Result<()> {
+        for d in [&self.cpu, &self.gpu, &self.fpga] {
+            let all = [d.idle_watts, d.active_watts, d.transfer_watts];
+            if all.iter().any(|w| !w.is_finite() || *w < 0.0) || d.active_watts <= 0.0 {
+                bail!(
+                    "power model for {:?} needs finite non-negative wattages \
+                     and a positive active draw",
+                    d.name
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// How arbitration weighs power (CLI `--power-policy`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum PowerPolicy {
+    /// Time decides, exactly as before this stage existed. The default:
+    /// decisions and cached report bytes are identical to a pipeline
+    /// without power scoring.
+    #[default]
+    Perf,
+    /// Performance-per-watt decides: a backend wins a block when it costs
+    /// less energy for the same work (arXiv:2110.11520's selection rule).
+    PerfPerWatt,
+    /// Hard wattage cap: backends whose modeled active draw exceeds the
+    /// cap are excluded; time decides among the rest (CPU always remains
+    /// as the fallback — the work has to run somewhere).
+    Cap(f64),
+}
+
+impl PowerPolicy {
+    /// Canonical rendering (CLI and cache fingerprint): `perf`,
+    /// `perf-per-watt`, or `cap:<watts>`.
+    pub fn render(&self) -> String {
+        match self {
+            PowerPolicy::Perf => "perf".to_string(),
+            PowerPolicy::PerfPerWatt => "perf-per-watt".to_string(),
+            PowerPolicy::Cap(w) => format!("cap:{w}"),
+        }
+    }
+
+    /// Inverse of [`PowerPolicy::render`].
+    pub fn parse(s: &str) -> Result<Self> {
+        if let Some(w) = s.strip_prefix("cap:") {
+            let watts: f64 = w
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--power-policy cap expects a number, got {w:?}"))?;
+            if !watts.is_finite() || watts <= 0.0 {
+                bail!("--power-policy cap expects a positive wattage, got {w:?}");
+            }
+            return Ok(PowerPolicy::Cap(watts));
+        }
+        Ok(match s {
+            "perf" => PowerPolicy::Perf,
+            "perf-per-watt" => PowerPolicy::PerfPerWatt,
+            other => bail!("unknown --power-policy {other:?} (perf|perf-per-watt|cap:<watts>)"),
+        })
+    }
+
+    /// True for the default (`perf`) policy, which must leave decisions,
+    /// report bytes, and cache fingerprints untouched.
+    pub fn is_default(&self) -> bool {
+        matches!(self, PowerPolicy::Perf)
+    }
+}
+
+/// Modeled energy of one pattern run on one backend.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyEstimate {
+    /// Average draw across the run (W).
+    pub watts: f64,
+    /// Energy per run (J): watts × measured seconds, idle and transfer
+    /// overheads included.
+    pub energy_j: f64,
+    /// Power-efficiency ratio vs the all-CPU baseline — baseline joules
+    /// over this run's joules (arXiv:2110.11520's metric; >1 means the
+    /// offload saves energy for the same work).
+    pub efficiency: f64,
+    /// Performance-per-watt: the pattern's speedup divided by its average
+    /// draw (runs/s/W, normalized to the baseline's runtime).
+    pub perf_per_watt: f64,
+}
+
+/// Power scores of one measured pattern (one surviving candidate block).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockPowerScore {
+    /// Pattern label (matches `SearchOutcome::tried`).
+    pub label: String,
+    /// Modeled energy of the measured pattern run. `None` when the
+    /// pattern never dispatched (nothing to attribute device energy to).
+    pub gpu: Option<EnergyEstimate>,
+}
+
+/// The `PowerScore` stage result: every surviving measured pattern scored
+/// on performance-per-watt against the all-CPU baseline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerOutcome {
+    /// Policy the downstream arbitration will weigh power under.
+    pub policy: PowerPolicy,
+    /// Wattage models the scores were computed from.
+    pub model: PowerModel,
+    /// Energy of one all-CPU baseline run.
+    pub baseline: EnergyEstimate,
+    /// Per-pattern scores, aligned with `SearchOutcome::tried`.
+    pub blocks: Vec<BlockPowerScore>,
+}
+
+/// Modeled device-side energy of one block execution: active draw over
+/// the executing seconds plus transfer draw over the PCIe-staging
+/// seconds. Used symmetrically for the measured GPU seconds and the
+/// modeled FPGA estimate.
+pub fn device_energy(device: &DevicePower, exec_secs: f64, transfer_secs: f64) -> f64 {
+    device.active_watts * exec_secs + device.transfer_watts * transfer_secs
+}
+
+/// PCIe-staging seconds implied by a pattern's observed per-run traffic.
+pub fn transfer_secs(traffic: &DeviceTraffic) -> f64 {
+    (traffic.bytes_in + traffic.bytes_out) as f64 / crate::fpga::PCIE_BYTES_PER_SEC
+}
+
+/// Modeled energy of one whole pattern run: the host draws its active
+/// wattage for the non-device portion, the accelerator draws its active
+/// wattage for `device_secs` (plus transfer draw for the staging time)
+/// and idles for the host portion.
+pub fn pattern_energy(
+    model: &PowerModel,
+    device: &DevicePower,
+    pattern_secs: f64,
+    device_secs: f64,
+    traffic: &DeviceTraffic,
+) -> f64 {
+    let host_secs = (pattern_secs - device_secs).max(0.0);
+    model.cpu.active_watts * host_secs
+        + device.idle_watts * host_secs
+        + device_energy(device, device_secs, transfer_secs(traffic))
+}
+
+fn estimate(
+    baseline_j: f64,
+    baseline_secs: f64,
+    pattern_secs: f64,
+    energy_j: f64,
+) -> EnergyEstimate {
+    let secs = pattern_secs.max(1e-12);
+    let watts = energy_j / secs;
+    EnergyEstimate {
+        watts,
+        energy_j,
+        efficiency: baseline_j / energy_j.max(1e-12),
+        perf_per_watt: (baseline_secs / secs) / watts.max(1e-12),
+    }
+}
+
+/// Score a measured search outcome: the all-CPU baseline plus every tried
+/// pattern, each as modeled joules per run and performance-per-watt. The
+/// `policy` is carried through for the arbitration stage; scoring itself
+/// is policy-independent.
+pub fn score(model: &PowerModel, policy: PowerPolicy, outcome: &SearchOutcome) -> PowerOutcome {
+    let baseline_secs = outcome.baseline.secs();
+    let baseline_j = model.cpu.active_watts * baseline_secs;
+    let baseline = estimate(baseline_j, baseline_secs, baseline_secs, baseline_j);
+    let blocks = outcome
+        .tried
+        .iter()
+        .map(|p| BlockPowerScore {
+            label: p.label.clone(),
+            gpu: (p.traffic.dispatches > 0).then(|| {
+                let secs = p.time.secs();
+                let j = pattern_energy(
+                    model,
+                    &model.gpu,
+                    secs,
+                    p.traffic.device_secs,
+                    &p.traffic,
+                );
+                estimate(baseline_j, baseline_secs, secs, j)
+            }),
+        })
+        .collect();
+    PowerOutcome { policy, model: model.clone(), baseline, blocks }
+}
+
+// ------------------------------------------------- arbitration residue
+
+/// Per-block energy record the arbitration writes into the (v3) report
+/// when a non-default power policy decided backends.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockEnergy {
+    /// Site label of the block (matches the arbitration blocks).
+    pub label: String,
+    /// Modeled joules per run of the block on the measured GPU path
+    /// (`None` when the pattern never dispatched).
+    pub gpu_energy_j: Option<f64>,
+    /// Modeled joules per run of the block on the FPGA estimate (`None`
+    /// without a pre-check-passing IP core).
+    pub fpga_energy_j: Option<f64>,
+}
+
+/// The power residue of one arbitration run under a non-default policy:
+/// which policy decided, the deployment draw per backend instance, and
+/// the per-block energies the decision compared. Serialized into the v3
+/// report; absent (and the report stays v2) under the default `perf`
+/// policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerDecision {
+    /// The non-default policy that decided.
+    pub policy: PowerPolicy,
+    /// Modeled draw of one GPU deployment instance (W).
+    pub gpu_watts: f64,
+    /// Modeled draw of one FPGA deployment instance (W).
+    pub fpga_watts: f64,
+    /// Per-block energy comparisons, aligned with the arbitration blocks.
+    pub blocks: Vec<BlockEnergy>,
+}
+
+// ----------------------------------------------------------- JSON codec
+
+fn opt_num_to_json(v: Option<f64>) -> Json {
+    v.map(Json::num).unwrap_or(Json::Null)
+}
+
+fn device_power_to_json(d: &DevicePower) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&d.name)),
+        ("idle_watts", Json::num(d.idle_watts)),
+        ("active_watts", Json::num(d.active_watts)),
+        ("transfer_watts", Json::num(d.transfer_watts)),
+    ])
+}
+
+fn device_power_from_json(v: &Json) -> Result<DevicePower> {
+    Ok(DevicePower {
+        name: v.get("name")?.as_str()?.to_string(),
+        idle_watts: v.get("idle_watts")?.as_f64()?,
+        active_watts: v.get("active_watts")?.as_f64()?,
+        transfer_watts: v.get("transfer_watts")?.as_f64()?,
+    })
+}
+
+/// Serialize a wattage model (stage artifacts and the v3 report).
+pub fn model_to_json(m: &PowerModel) -> Json {
+    Json::obj(vec![
+        ("cpu", device_power_to_json(&m.cpu)),
+        ("gpu", device_power_to_json(&m.gpu)),
+        ("fpga", device_power_to_json(&m.fpga)),
+    ])
+}
+
+/// Inverse of [`model_to_json`].
+pub fn model_from_json(v: &Json) -> Result<PowerModel> {
+    Ok(PowerModel {
+        cpu: device_power_from_json(v.get("cpu")?)?,
+        gpu: device_power_from_json(v.get("gpu")?)?,
+        fpga: device_power_from_json(v.get("fpga")?)?,
+    })
+}
+
+fn energy_to_json(e: &EnergyEstimate) -> Json {
+    Json::obj(vec![
+        ("watts", Json::num(e.watts)),
+        ("energy_j", Json::num(e.energy_j)),
+        ("efficiency", Json::num(e.efficiency)),
+        ("perf_per_watt", Json::num(e.perf_per_watt)),
+    ])
+}
+
+fn energy_from_json(v: &Json) -> Result<EnergyEstimate> {
+    Ok(EnergyEstimate {
+        watts: v.get("watts")?.as_f64()?,
+        energy_j: v.get("energy_j")?.as_f64()?,
+        efficiency: v.get("efficiency")?.as_f64()?,
+        perf_per_watt: v.get("perf_per_watt")?.as_f64()?,
+    })
+}
+
+/// Serialize a stage outcome (the `PowerScored` artifact payload).
+pub fn outcome_to_json(o: &PowerOutcome) -> Json {
+    Json::obj(vec![
+        ("policy", Json::str(&o.policy.render())),
+        ("model", model_to_json(&o.model)),
+        ("baseline", energy_to_json(&o.baseline)),
+        (
+            "blocks",
+            Json::Arr(
+                o.blocks
+                    .iter()
+                    .map(|b| {
+                        Json::obj(vec![
+                            ("label", Json::str(&b.label)),
+                            (
+                                "gpu",
+                                b.gpu.as_ref().map(energy_to_json).unwrap_or(Json::Null),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Inverse of [`outcome_to_json`].
+pub fn outcome_from_json(v: &Json) -> Result<PowerOutcome> {
+    Ok(PowerOutcome {
+        policy: PowerPolicy::parse(v.get("policy")?.as_str()?)?,
+        model: model_from_json(v.get("model")?)?,
+        baseline: energy_from_json(v.get("baseline")?)?,
+        blocks: v
+            .get("blocks")?
+            .as_arr()?
+            .iter()
+            .map(|b| {
+                Ok(BlockPowerScore {
+                    label: b.get("label")?.as_str()?.to_string(),
+                    gpu: b.opt("gpu").map(energy_from_json).transpose()?,
+                })
+            })
+            .collect::<Result<_>>()?,
+    })
+}
+
+/// Serialize the arbitration's power residue (v3 report section).
+pub fn decision_to_json(d: &PowerDecision) -> Json {
+    Json::obj(vec![
+        ("policy", Json::str(&d.policy.render())),
+        ("gpu_watts", Json::num(d.gpu_watts)),
+        ("fpga_watts", Json::num(d.fpga_watts)),
+        (
+            "blocks",
+            Json::Arr(
+                d.blocks
+                    .iter()
+                    .map(|b| {
+                        Json::obj(vec![
+                            ("label", Json::str(&b.label)),
+                            ("gpu_energy_j", opt_num_to_json(b.gpu_energy_j)),
+                            ("fpga_energy_j", opt_num_to_json(b.fpga_energy_j)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Inverse of [`decision_to_json`].
+pub fn decision_from_json(v: &Json) -> Result<PowerDecision> {
+    let opt_num = |b: &Json, key: &str| -> Result<Option<f64>> {
+        b.opt(key).map(|n| n.as_f64()).transpose()
+    };
+    Ok(PowerDecision {
+        policy: PowerPolicy::parse(v.get("policy")?.as_str()?)?,
+        gpu_watts: v.get("gpu_watts")?.as_f64()?,
+        fpga_watts: v.get("fpga_watts")?.as_f64()?,
+        blocks: v
+            .get("blocks")?
+            .as_arr()?
+            .iter()
+            .map(|b| {
+                Ok(BlockEnergy {
+                    label: b.get("label")?.as_str()?.to_string(),
+                    gpu_energy_j: opt_num(b, "gpu_energy_j")?,
+                    fpga_energy_j: opt_num(b, "fpga_energy_j")?,
+                })
+            })
+            .collect::<Result<_>>()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::verify::PatternResult;
+    use crate::metrics::Measurement;
+    use crate::patterndb::json;
+    use std::time::Duration;
+
+    fn outcome(pattern_us: u64, device_secs: f64) -> SearchOutcome {
+        let m = |label: &str, us: u64| Measurement {
+            label: label.to_string(),
+            median: Duration::from_micros(us),
+            min: Duration::from_micros(us),
+            max: Duration::from_micros(us),
+            reps: 1,
+        };
+        SearchOutcome {
+            baseline: m("all-CPU", 100_000),
+            tried: vec![PatternResult {
+                enabled: vec![true],
+                label: "only:call:fft2d".into(),
+                time: m("only:call:fft2d", pattern_us),
+                speedup: 100_000.0 / pattern_us as f64,
+                output_ok: true,
+                traffic: DeviceTraffic {
+                    bytes_in: 1 << 20,
+                    bytes_out: 1 << 20,
+                    dispatches: 1,
+                    device_secs,
+                },
+            }],
+            best_enabled: vec![true],
+            best_time: m("only:call:fft2d", pattern_us),
+            best_speedup: 100_000.0 / pattern_us as f64,
+        }
+    }
+
+    #[test]
+    fn policy_renders_and_parses() {
+        for p in [PowerPolicy::Perf, PowerPolicy::PerfPerWatt, PowerPolicy::Cap(47.5)] {
+            assert_eq!(PowerPolicy::parse(&p.render()).unwrap(), p);
+        }
+        assert!(PowerPolicy::Perf.is_default());
+        assert!(!PowerPolicy::PerfPerWatt.is_default());
+        assert!(PowerPolicy::parse("cap:0").is_err(), "cap must be positive");
+        assert!(PowerPolicy::parse("cap:-3").is_err());
+        assert!(PowerPolicy::parse("cap:watts").is_err());
+        assert!(PowerPolicy::parse("speed").is_err());
+    }
+
+    #[test]
+    fn builtin_model_validates_and_orders_draws() {
+        let m = PowerModel::builtin();
+        m.validate().unwrap();
+        // The power asymmetry the paper measures: FPGA draws far less than
+        // the GPU under load; the host sits in between.
+        assert!(m.fpga.active_watts < m.cpu.active_watts);
+        assert!(m.cpu.active_watts < m.gpu.active_watts);
+        let mut bad = m.clone();
+        bad.gpu.active_watts = 0.0;
+        assert!(bad.validate().is_err());
+        let mut neg = PowerModel::builtin();
+        neg.fpga.idle_watts = -1.0;
+        assert!(neg.validate().is_err());
+    }
+
+    #[test]
+    fn fingerprint_blob_tracks_every_wattage() {
+        let base = PowerModel::builtin().fingerprint_blob();
+        let mut m = PowerModel::builtin();
+        m.fpga.active_watts += 1.0;
+        assert_ne!(m.fingerprint_blob(), base);
+        assert_eq!(PowerModel::builtin().fingerprint_blob(), base, "deterministic");
+    }
+
+    #[test]
+    fn scoring_prices_energy_and_efficiency() {
+        let model = PowerModel::builtin();
+        // 100 ms baseline, 2 ms pattern with 1 ms on the device: a huge
+        // speedup must also be a huge efficiency gain.
+        let o = outcome(2_000, 0.001);
+        let scored = score(&model, PowerPolicy::PerfPerWatt, &o);
+        assert_eq!(scored.baseline.efficiency, 1.0);
+        assert!((scored.baseline.watts - model.cpu.active_watts).abs() < 1e-9);
+        let gpu = scored.blocks[0].gpu.as_ref().unwrap();
+        assert!(gpu.energy_j < scored.baseline.energy_j);
+        assert!(gpu.efficiency > 10.0, "efficiency {}", gpu.efficiency);
+        assert!(gpu.perf_per_watt > scored.baseline.perf_per_watt);
+
+        // A pattern *slower* than the baseline burns more joules than it.
+        let slow = score(&model, PowerPolicy::Perf, &outcome(200_000, 0.15));
+        let gpu = slow.blocks[0].gpu.as_ref().unwrap();
+        assert!(gpu.efficiency < 1.0, "efficiency {}", gpu.efficiency);
+    }
+
+    #[test]
+    fn undispatched_patterns_have_no_gpu_score() {
+        let model = PowerModel::builtin();
+        let mut o = outcome(2_000, 0.001);
+        o.tried[0].traffic = DeviceTraffic::default();
+        let scored = score(&model, PowerPolicy::Perf, &o);
+        assert!(scored.blocks[0].gpu.is_none());
+    }
+
+    #[test]
+    fn outcome_codec_round_trips() {
+        let scored = score(
+            &PowerModel::builtin(),
+            PowerPolicy::Cap(50.0),
+            &outcome(2_000, 0.001),
+        );
+        let s = json::to_string_pretty(&outcome_to_json(&scored));
+        let back = outcome_from_json(&json::parse(&s).unwrap()).unwrap();
+        assert_eq!(back, scored);
+        assert_eq!(json::to_string_pretty(&outcome_to_json(&back)), s, "byte-stable");
+    }
+
+    #[test]
+    fn decision_codec_round_trips() {
+        let d = PowerDecision {
+            policy: PowerPolicy::PerfPerWatt,
+            gpu_watts: 75.0,
+            fpga_watts: 40.0,
+            blocks: vec![
+                BlockEnergy {
+                    label: "call:fft2d".into(),
+                    gpu_energy_j: Some(0.75),
+                    fpga_energy_j: Some(0.0025),
+                },
+                BlockEnergy { label: "func:mm".into(), gpu_energy_j: None, fpga_energy_j: None },
+            ],
+        };
+        let s = json::to_string_pretty(&decision_to_json(&d));
+        let back = decision_from_json(&json::parse(&s).unwrap()).unwrap();
+        assert_eq!(back, d);
+        assert_eq!(json::to_string_pretty(&decision_to_json(&back)), s);
+    }
+}

@@ -21,6 +21,7 @@ use anyhow::{bail, Result};
 use crate::coordinator::backend::{
     ArbitrationOutcome, Backend, BackendPolicy, BlockArbitration, DeviceModel, FpgaEstimate,
 };
+use crate::coordinator::power;
 use crate::coordinator::verify::{DeviceTraffic, PatternResult, SearchOutcome};
 use crate::coordinator::{DiscoveredBlock, DiscoveryPath, OffloadReport};
 use crate::fpga::ResourceEstimate;
@@ -29,10 +30,23 @@ use crate::patterndb::json::{self, Json};
 use crate::patterndb::{repl_from_json, repl_to_json};
 use crate::transform::{PlannedReplacement, Reconciliation, Site};
 
-/// Format tag written into every serialized report. v2 added the backend
-/// arbitration section (`backend`, `arbitration`) and per-pattern device
-/// traffic.
+/// Format tag of a report arbitrated under the default (`perf`) power
+/// policy. v2 added the backend arbitration section (`backend`,
+/// `arbitration`) and per-pattern device traffic. A report whose
+/// arbitration carries a power residue (non-default `--power-policy`)
+/// serializes as [`REPORT_FORMAT_V3`] instead; emitting v2 bytes for the
+/// default keeps every pre-power cached decision byte-identical on
+/// replay.
 pub const REPORT_FORMAT: &str = "fbo-offload-report-v2";
+
+/// Format tag of a report whose arbitration ran under a non-default
+/// `--power-policy`: the arbitration section additionally carries the
+/// `power` residue (policy, per-instance deployment watts, per-block
+/// energy comparisons). v3 documents **must** carry that section and
+/// v2/v1 documents must not — the format tag and the payload shape agree
+/// by construction, so re-encoding any decoded report reproduces its
+/// canonical bytes.
+pub const REPORT_FORMAT_V3: &str = "fbo-offload-report-v3";
 
 /// The previous report format: no `backend`/`arbitration` sections and no
 /// per-pattern device traffic. v1 reports still **decode** (the archived
@@ -45,10 +59,13 @@ pub const REPORT_FORMAT: &str = "fbo-offload-report-v2";
 /// replay.
 pub const REPORT_FORMAT_V1: &str = "fbo-offload-report-v1";
 
-/// Serialize a report to the canonical JSON value.
+/// Serialize a report to the canonical JSON value (v2, or v3 when the
+/// arbitration carries a power residue — see [`REPORT_FORMAT_V3`]).
 pub fn report_to_json(r: &OffloadReport) -> Json {
+    let format =
+        if r.arbitration.power.is_some() { REPORT_FORMAT_V3 } else { REPORT_FORMAT };
     Json::obj(vec![
-        ("format", Json::str(REPORT_FORMAT)),
+        ("format", Json::str(format)),
         ("entry", Json::str(&r.entry)),
         (
             "external_callees",
@@ -70,23 +87,33 @@ pub fn report_to_string(r: &OffloadReport) -> String {
     json::to_string_pretty(&report_to_json(r))
 }
 
-/// Deserialize a report from a JSON value (v2, or v1 upgraded on the fly
-/// — see [`REPORT_FORMAT_V1`]).
+/// Deserialize a report from a JSON value (v3, v2, or v1 upgraded on the
+/// fly — see [`REPORT_FORMAT_V1`]).
 pub fn report_from_json(v: &Json) -> Result<OffloadReport> {
     let format = v.get("format")?.as_str()?;
-    let v1 = match format {
-        REPORT_FORMAT => false,
-        REPORT_FORMAT_V1 => true,
+    let (v1, v3) = match format {
+        REPORT_FORMAT => (false, false),
+        REPORT_FORMAT_V3 => (false, true),
+        REPORT_FORMAT_V1 => (true, false),
         other => bail!(
             "unsupported offload-report format {other:?} \
-             (want {REPORT_FORMAT:?} or {REPORT_FORMAT_V1:?})"
+             (want {REPORT_FORMAT_V3:?}, {REPORT_FORMAT:?}, or {REPORT_FORMAT_V1:?})"
         ),
     };
     let outcome = outcome_from_json(v.get("outcome")?, v1)?;
     let arbitration = if v1 {
         v1_arbitration(&outcome)
     } else {
-        arbitration_from_json(v.get("arbitration")?)?
+        let arbitration = arbitration_from_json(v.get("arbitration")?)?;
+        // Tag ↔ payload agreement keeps the canonical re-encode stable:
+        // a decoded report always serializes back to its own format.
+        if arbitration.power.is_some() != v3 {
+            bail!(
+                "corrupt report: format {format:?} disagrees with the presence \
+                 of the arbitration power section"
+            );
+        }
+        arbitration
     };
     let report = OffloadReport {
         entry: v.get("entry")?.as_str()?.to_string(),
@@ -142,6 +169,7 @@ fn v1_arbitration(outcome: &SearchOutcome) -> ArbitrationOutcome {
         simulated_hours: 0.0,
         gpu_request_secs: offloads.then(|| outcome.best_time.secs()),
         fpga_request_secs: None,
+        power: None,
     }
 }
 
@@ -422,7 +450,7 @@ fn block_arbitration_from_json(v: &Json) -> Result<BlockArbitration> {
 }
 
 pub(crate) fn arbitration_to_json(a: &ArbitrationOutcome) -> Json {
-    Json::obj(vec![
+    let mut pairs = vec![
         ("policy", Json::str(a.policy.as_str())),
         ("device", device_to_json(&a.device)),
         ("blocks", Json::Arr(a.blocks.iter().map(block_arbitration_to_json).collect())),
@@ -430,7 +458,14 @@ pub(crate) fn arbitration_to_json(a: &ArbitrationOutcome) -> Json {
         ("simulated_hours", Json::num(a.simulated_hours)),
         ("gpu_request_secs", opt_num_to_json(a.gpu_request_secs)),
         ("fpga_request_secs", opt_num_to_json(a.fpga_request_secs)),
-    ])
+    ];
+    // The power residue only exists under a non-default --power-policy —
+    // a default (`perf`) arbitration emits exactly the v2 key set, so its
+    // bytes stay identical to pre-power reports.
+    if let Some(p) = &a.power {
+        pairs.push(("power", power::decision_to_json(p)));
+    }
+    Json::obj(pairs)
 }
 
 pub(crate) fn arbitration_from_json(v: &Json) -> Result<ArbitrationOutcome> {
@@ -447,6 +482,7 @@ pub(crate) fn arbitration_from_json(v: &Json) -> Result<ArbitrationOutcome> {
         simulated_hours: v.get("simulated_hours")?.as_f64()?,
         gpu_request_secs: opt_num_from_json(v, "gpu_request_secs")?,
         fpga_request_secs: opt_num_from_json(v, "fpga_request_secs")?,
+        power: v.opt("power").map(power::decision_from_json).transpose()?,
     })
 }
 
@@ -603,6 +639,7 @@ mod tests {
                 simulated_hours: 3.27,
                 gpu_request_secs: Some(1.2e-4),
                 fpga_request_secs: Some(8.75e-5),
+                power: None,
             },
             transformed_source: "#include <math.h>\nint main() {\n    return 0;\n}\n".into(),
             search_wall: Duration::from_millis(47),
@@ -663,6 +700,51 @@ mod tests {
     fn rejects_other_formats() {
         assert!(report_from_str(r#"{"format": "something-else"}"#).is_err());
         assert!(report_from_str("not json").is_err());
+    }
+
+    #[test]
+    fn power_residue_upgrades_the_report_to_v3() {
+        use crate::coordinator::power::{BlockEnergy, PowerDecision, PowerPolicy};
+
+        // The default report is v2 with no power section at all.
+        let perf = sample_report();
+        let perf_text = report_to_string(&perf);
+        assert!(perf_text.contains(REPORT_FORMAT));
+        assert!(!perf_text.contains("\"power\""), "{perf_text}");
+
+        // A non-default power policy lifts the format to v3 and records
+        // the per-block energies; the codec stays byte-stable.
+        let mut powered = sample_report();
+        powered.arbitration.power = Some(PowerDecision {
+            policy: PowerPolicy::PerfPerWatt,
+            gpu_watts: 75.0,
+            fpga_watts: 40.0,
+            blocks: vec![
+                BlockEnergy {
+                    label: "call:fft2d".into(),
+                    gpu_energy_j: Some(7.125e-3),
+                    fpga_energy_j: Some(2.5e-3),
+                },
+                BlockEnergy {
+                    label: "func:my_decomp".into(),
+                    gpu_energy_j: None,
+                    fpga_energy_j: None,
+                },
+            ],
+        });
+        let text = report_to_string(&powered);
+        assert!(text.contains(REPORT_FORMAT_V3));
+        assert!(text.contains("\"power\""));
+        assert!(text.contains("fpga_energy_j"));
+        let back = report_from_str(&text).unwrap();
+        assert_eq!(back.arbitration, powered.arbitration);
+        assert_eq!(report_to_string(&back), text, "v3 must be byte-stable");
+
+        // Tag ↔ payload agreement is enforced both ways.
+        let tag_without_power = perf_text.replace(REPORT_FORMAT, REPORT_FORMAT_V3);
+        assert!(report_from_str(&tag_without_power).is_err());
+        let power_without_tag = text.replace(REPORT_FORMAT_V3, REPORT_FORMAT);
+        assert!(report_from_str(&power_without_tag).is_err());
     }
 
     #[test]

@@ -22,7 +22,7 @@ use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
 
-use fbo::coordinator::{apps, flow, loop_offload, BackendPolicy, Coordinator};
+use fbo::coordinator::{apps, flow, loop_offload, BackendPolicy, Coordinator, PowerPolicy, Stage};
 use fbo::ga::GaConfig;
 use fbo::metrics;
 use fbo::patterndb::PatternDb;
@@ -101,6 +101,7 @@ fn coordinator_from(args: &Args, verify_pool: bool) -> Result<(Coordinator, Opti
     };
     c.verify.reps = args.flag_usize("reps", 3)?;
     c.backend_policy = BackendPolicy::parse(&args.flag("target", "auto"))?;
+    c.power_policy = PowerPolicy::parse(&args.flag("power-policy", "perf"))?;
     let verify_parallel = args.flag_usize("verify-parallel", 1)?;
     let pool = if verify_pool && verify_parallel > 1 {
         let pool = MeasurePool::start(&dir, verify_parallel - 1)?;
@@ -156,12 +157,29 @@ fn cmd_offload(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Observer backing the `fbo stages` table: records each stage's
+/// wall-clock as the pipeline reports it.
+#[derive(Default)]
+struct StageWalls(std::sync::Mutex<Vec<Option<std::time::Duration>>>);
+
+impl fbo::coordinator::StageObserver for StageWalls {
+    fn stage_completed(&self, stage: Stage, wall: std::time::Duration) {
+        let mut walls = self.0.lock().expect("stage walls lock");
+        if walls.is_empty() {
+            walls.resize(Stage::ALL.len(), None);
+        }
+        walls[stage.index()] = Some(wall);
+    }
+}
+
 fn cmd_stages(args: &Args) -> Result<()> {
     let path = args.positional.first().context("usage: fbo stages <file.c> [--dump DIR]")?;
     let src = read_source(path)?;
     let entry = args.flag("entry", "main");
     let (c, _measure_pool) = coordinator_from(args, true)?;
-    let req = c.request(&src, &entry);
+    let walls = std::sync::Arc::new(StageWalls::default());
+    let observer: std::sync::Arc<dyn fbo::coordinator::StageObserver> = walls.clone();
+    let req = c.request(&src, &entry).with_observer(observer);
 
     let dump_dir = match args.flags.get("dump") {
         // The arg parser stores the sentinel "true" for a valueless flag;
@@ -174,69 +192,109 @@ fn cmd_stages(args: &Args) -> Result<()> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating stage dump dir {}", dir.display()))?;
     }
+    // Dumped artifacts are announced eagerly, so a mid-pipeline failure
+    // still tells the user which stage artifacts landed on disk.
     let dump = |stage: &str, payload: String| -> Result<()> {
         if let Some(dir) = &dump_dir {
             let p = dir.join(format!("{stage}.json"));
             std::fs::write(&p, payload).with_context(|| format!("writing {}", p.display()))?;
-            println!("             artifact -> {}", p.display());
+            println!("artifact -> {}", p.display());
         }
         Ok(())
     };
-    let wall = |d: std::time::Duration| format!("{:>10}", metrics::fmt_duration(d));
 
-    let parsed = req.parse()?;
-    println!(
-        "parse      {}  entry {} ({} top-level items)",
-        wall(parsed.wall),
-        parsed.entry,
-        parsed.program.items.len()
-    );
-    dump("parsed", parsed.to_json_string())?;
+    // Advance the pipeline, keeping one result line per stage; the table
+    // below prints every stage in the fixed `Stage::ALL` order with its
+    // observer-reported latency, so CI logs diff cleanly run to run — and
+    // it prints even when a stage fails, showing how far the run got.
+    let mut results: Vec<String> = vec!["-".to_string(); Stage::ALL.len()];
+    let mut candidate_lines: Vec<String> = Vec::new();
 
-    let discovered = parsed.discover(&req)?;
-    println!(
-        "discover   {}  {} external callee(s), {} candidate block(s)",
-        wall(discovered.wall),
-        discovered.external_callees.len(),
-        discovered.candidates.len()
-    );
-    for cand in &discovered.candidates {
-        println!("             {} via {:?}", cand.site.label(), cand.via);
+    let mut advance = || -> Result<fbo::coordinator::Arbitrated> {
+        let parsed = req.parse()?;
+        results[Stage::Parse.index()] =
+            format!("entry {} ({} top-level items)", parsed.entry, parsed.program.items.len());
+        dump("parsed", parsed.to_json_string())?;
+
+        let discovered = parsed.discover(&req)?;
+        results[Stage::Discover.index()] = format!(
+            "{} external callee(s), {} candidate block(s)",
+            discovered.external_callees.len(),
+            discovered.candidates.len()
+        );
+        for cand in &discovered.candidates {
+            candidate_lines.push(format!("candidate {} via {:?}", cand.site.label(), cand.via));
+        }
+        dump("discovered", discovered.to_json_string())?;
+
+        let reconciled = discovered.reconcile(&req)?;
+        let accepted = reconciled.blocks.iter().filter(|b| b.accepted()).count();
+        results[Stage::Reconcile.index()] =
+            format!("{} accepted, {} rejected", accepted, reconciled.blocks.len() - accepted);
+        dump("reconciled", reconciled.to_json_string())?;
+
+        let verified = reconciled.verify(&req)?;
+        results[Stage::Verify.index()] = format!(
+            "{} pattern(s) measured, best speedup {}",
+            verified.outcome.tried.len(),
+            metrics::fmt_speedup(verified.outcome.best_speedup)
+        );
+        dump("verified", verified.to_json_string())?;
+
+        let scored = verified.power_score(&req)?;
+        let best_efficiency = scored
+            .scores
+            .blocks
+            .iter()
+            .filter_map(|b| b.gpu.as_ref().map(|e| e.efficiency))
+            .fold(f64::NAN, f64::max);
+        results[Stage::PowerScore.index()] = format!(
+            "{} pattern(s) priced under {}, best efficiency {}",
+            scored.scores.blocks.len(),
+            scored.scores.policy.render(),
+            if best_efficiency.is_nan() {
+                "-".to_string()
+            } else {
+                format!("{best_efficiency:.1}x")
+            }
+        );
+        dump("power_scored", scored.to_json_string())?;
+
+        let arbitrated = scored.arbitrate(&req)?;
+        results[Stage::Arbitrate.index()] = format!(
+            "backend {} ({} simulated toolchain)",
+            arbitrated.arbitration.backend.as_str(),
+            metrics::fmt_hours(arbitrated.arbitration.simulated_hours)
+        );
+        dump("arbitrated", arbitrated.to_json_string())?;
+
+        results[Stage::Place.index()] =
+            "(not run here; `fbo flow` places the decision)".to_string();
+        Ok(arbitrated)
+    };
+    let outcome = advance();
+
+    let walls = walls.0.lock().expect("stage walls lock");
+    let mut table = metrics::Table::new(&["stage", "wall", "result"]);
+    for stage in Stage::ALL {
+        let wall = walls
+            .get(stage.index())
+            .copied()
+            .flatten()
+            .map(metrics::fmt_duration)
+            .unwrap_or_else(|| "-".to_string());
+        table.row(&[stage.as_str().to_string(), wall, results[stage.index()].clone()]);
     }
-    dump("discovered", discovered.to_json_string())?;
+    print!("{}", table.render());
+    for line in &candidate_lines {
+        println!("{line}");
+    }
 
-    let reconciled = discovered.reconcile(&req)?;
-    let accepted = reconciled.blocks.iter().filter(|b| b.accepted()).count();
-    println!(
-        "reconcile  {}  {} accepted, {} rejected",
-        wall(reconciled.wall),
-        accepted,
-        reconciled.blocks.len() - accepted
-    );
-    dump("reconciled", reconciled.to_json_string())?;
-
-    let verified = reconciled.verify(&req)?;
-    println!(
-        "verify     {}  {} pattern(s) measured, best speedup {}",
-        wall(verified.wall),
-        verified.outcome.tried.len(),
-        metrics::fmt_speedup(verified.outcome.best_speedup)
-    );
-    dump("verified", verified.to_json_string())?;
-
-    let arbitrated = verified.arbitrate(&req)?;
-    println!(
-        "arbitrate  {}  backend {} ({} simulated toolchain)",
-        wall(arbitrated.wall),
-        arbitrated.arbitration.backend.as_str(),
-        metrics::fmt_hours(arbitrated.arbitration.simulated_hours)
-    );
-    dump("arbitrated", arbitrated.to_json_string())?;
-
+    let arbitrated = outcome?;
     let report = arbitrated.report();
     println!(
-        "total      {}  (resume any stage from its dumped artifact; `fbo flow` places it)",
-        wall(report.search_wall)
+        "total {} (resume any stage from its dumped artifact)",
+        metrics::fmt_duration(report.search_wall)
     );
     Ok(())
 }
@@ -305,6 +363,7 @@ fn cmd_flow(args: &Args) -> Result<()> {
             fpgas: 1,
             cost_per_hour: 0.9,
             fpga_cost_per_hour: 0.35,
+            energy_cost_per_kwh: 0.30,
             latency_ms: 3.0,
         },
         flow::Location {
@@ -313,6 +372,7 @@ fn cmd_flow(args: &Args) -> Result<()> {
             fpgas: 4,
             cost_per_hour: 0.5,
             fpga_cost_per_hour: 0.2,
+            energy_cost_per_kwh: 0.12,
             latency_ms: 12.0,
         },
         flow::Location {
@@ -321,6 +381,7 @@ fn cmd_flow(args: &Args) -> Result<()> {
             fpgas: 32,
             cost_per_hour: 0.3,
             fpga_cost_per_hour: 0.12,
+            energy_cost_per_kwh: 0.08,
             latency_ms: 45.0,
         },
     ];
@@ -369,6 +430,7 @@ fn service_from(args: &Args) -> Result<OffloadService> {
     };
     cfg.verify.reps = args.flag_usize("reps", 3)?;
     cfg.backend_policy = BackendPolicy::parse(&args.flag("target", "auto"))?;
+    cfg.power_policy = PowerPolicy::parse(&args.flag("power-policy", "perf"))?;
     cfg.verify_parallel = args.flag_usize("verify-parallel", 1)?;
     OffloadService::start(cfg)
 }
@@ -513,22 +575,24 @@ fn usage() -> &'static str {
      commands:\n\
        analyze   <file.c>                 Step 1-2 analysis report\n\
        offload   <file.c> [--entry main] [--artifacts DIR] [--policy approve|reject]\n\
-                 [--target gpu|fpga|auto] [--reps N] [--verify-parallel N]\n\
-                 [--out transformed.c]\n\
+                 [--target gpu|fpga|auto] [--power-policy perf|perf-per-watt|cap:<watts>]\n\
+                 [--reps N] [--verify-parallel N] [--out transformed.c]\n\
        stages    <file.c> [--entry main] [--dump DIR] [--policy approve|reject]\n\
-                 [--target gpu|fpga|auto] [--reps N] [--verify-parallel N]\n\
-                 run the pipeline stage by stage, printing per-stage\n\
-                 artifacts + timings (--dump writes the JSON artifacts)\n\
+                 [--target gpu|fpga|auto] [--power-policy ...] [--reps N]\n\
+                 [--verify-parallel N]\n\
+                 run the pipeline stage by stage, printing a fixed-order\n\
+                 per-stage table (--dump writes the JSON artifacts,\n\
+                 including power_scored.json)\n\
        ga        <file.c> [--pop 12] [--gens 10] [--entry main]\n\
-       flow      <file.c> [--rps 50] [--target gpu|fpga|auto]\n\
+       flow      <file.c> [--rps 50] [--target gpu|fpga|auto] [--power-policy ...]\n\
                  full Steps 1-7 (Step 5 places on the arbitrated backend)\n\
        batch     <file.c...> [--entry main] [--jobs N] [--artifacts DIR]\n\
                  [--cache DIR] [--no-cache-persist] [--reps N]\n\
-                 [--target gpu|fpga|auto] [--verify-parallel N]\n\
+                 [--target gpu|fpga|auto] [--power-policy ...] [--verify-parallel N]\n\
                  offload many files through the service worker pool +\n\
                  persistent decision cache\n\
        serve     [--jobs N] [--artifacts DIR] [--cache DIR]\n\
-                 [--target gpu|fpga|auto] [--verify-parallel N]\n\
+                 [--target gpu|fpga|auto] [--power-policy ...] [--verify-parallel N]\n\
                  long-running service; reads \"<file.c> [entry]\" lines\n\
                  from stdin, prints one decision per line + stats on EOF\n\
        gen-apps  [--n 256] [--dir apps]\n\
@@ -538,7 +602,12 @@ fn usage() -> &'static str {
      --verify-parallel N measures up to N independent offload patterns of\n\
      one Step-3 search concurrently (N-1 sibling PJRT engines for\n\
      offload/stages; the pool's idle workers for batch/serve). The\n\
-     decision is identical to a serial search, only faster.\n"
+     decision is identical to a serial search, only faster.\n\
+     \n\
+     --power-policy picks how Step-3b weighs power (arXiv:2110.11520):\n\
+     perf (default) decides on time alone and is byte-identical to a\n\
+     pipeline without power scoring; perf-per-watt decides on modeled\n\
+     joules per run; cap:<watts> excludes backends drawing above the cap.\n"
 }
 
 fn main() -> ExitCode {

@@ -12,12 +12,14 @@
 //! * **entry point** — the same source offloaded from a different entry is
 //!   a different decision;
 //! * **decision fingerprint** — the service digests the pattern DB, the
-//!   AOT artifact contents, its policy/verification settings, and the
-//!   backend-arbitration inputs (`--target` policy + FPGA device model)
-//!   into this component (see `service::pool`), so any DB change (new
-//!   replacement, edited usage recipe), regenerated artifacts, config
-//!   change (`--policy`, `--reps`), backend retarget, or device-model
-//!   change invalidates every previously verified decision.
+//!   AOT artifact contents, its policy/verification settings, the power
+//!   inputs (`--power-policy` + wattage models, when non-default), and
+//!   the backend-arbitration inputs (`--target` policy + FPGA device
+//!   model) into this component (see `service::pool`), so any DB change
+//!   (new replacement, edited usage recipe), regenerated artifacts,
+//!   config change (`--policy`, `--reps`), power-policy change, backend
+//!   retarget, or device-model change invalidates every previously
+//!   verified decision.
 //!
 //! Values are canonical [`crate::coordinator::report_json`] strings, held
 //! in memory and (optionally) persisted one JSON file per entry so

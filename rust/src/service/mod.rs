@@ -17,11 +17,13 @@
 //!   verified [`crate::coordinator::OffloadReport`] byte-identically,
 //!   with no pattern search and no measurement. Entries persist as JSON
 //!   next to the artifacts dir and survive restarts. Caching is
-//!   **stage-granular**: the pipeline's `Reconciled` and `Verified` stage
-//!   artifacts are cached under their own narrower fingerprints, so a
-//!   full-decision miss resumes from the deepest still-valid stage (a
-//!   verify-settings change replays discovery; a backend retarget replays
-//!   the verified measurements and only re-arbitrates).
+//!   **stage-granular**: the pipeline's `Reconciled`, `Verified`, and
+//!   `PowerScored` stage artifacts are cached under their own narrower
+//!   fingerprints, so a full-decision miss resumes from the deepest
+//!   still-valid stage (a verify-settings change replays discovery; a
+//!   `--power-policy` change replays the verified measurements without
+//!   re-measuring; a backend retarget replays the power scores and only
+//!   re-arbitrates).
 //! * [`pool`] — a **worker pool** running one [`crate::coordinator::Coordinator`]
 //!   per thread (the PJRT runtime is deliberately single-threaded state:
 //!   `Rc`/`RefCell`), fed by per-worker queues sharded on the cache key

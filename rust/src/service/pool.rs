@@ -17,13 +17,17 @@
 //! twice for one key.
 //!
 //! Caching is **stage-granular**: besides full decisions, workers persist
-//! the pipeline's `Reconciled` and `Verified` stage artifacts under
-//! per-stage fingerprints (`StageFingerprints`). A full-decision miss
-//! resumes from the deepest valid stage instead of starting over — a
-//! `--reps` change replays discovery from the cache and only re-measures;
-//! a `--target` or FPGA-device change replays the verified measurements
-//! and only re-arbitrates. Workers install a [`StageObserver`] so the
-//! service counts per-stage latency ([`StatsSnapshot::stages`]).
+//! the pipeline's `Reconciled`, `Verified`, and `PowerScored` stage
+//! artifacts under per-stage fingerprints (`StageFingerprints`). A
+//! full-decision miss resumes from the deepest valid stage instead of
+//! starting over — a `--reps` change replays discovery from the cache and
+//! only re-measures; a `--power-policy` change replays the verified
+//! measurements and only re-scores + re-arbitrates; a `--target` or
+//! FPGA-device change replays the power scores (or, under the default
+//! `perf` configuration, the verified measurements — the inert default
+//! scores are recomputed rather than persisted) and only re-arbitrates.
+//! Workers install a [`StageObserver`] so the service counts per-stage
+//! latency ([`StatsSnapshot::stages`]).
 //!
 //! With `verify_parallel > 1`, the Verify stage's independent pattern
 //! measurements are fanned out across the pool: **measurement sub-jobs**
@@ -45,8 +49,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::{
-    report_json, BackendPolicy, Coordinator, OffloadError, OffloadReport, Reconciled, Stage,
-    StageObserver, Verified, VerifyConfig,
+    report_json, BackendPolicy, Coordinator, OffloadError, OffloadReport, PowerModel, PowerPolicy,
+    PowerScored, Reconciled, Stage, StageObserver, Verified, VerifyConfig,
 };
 use crate::fpga;
 use crate::metrics;
@@ -88,6 +92,15 @@ pub struct ServiceConfig {
     /// retargeting the deployment (different card, different fmax)
     /// invalidates every previously verified decision.
     pub device: fpga::Device,
+    /// How arbitration weighs power (CLI `--power-policy`). Part of the
+    /// power-tier fingerprint: changing it re-scores and re-arbitrates
+    /// from the cached `Verified` artifact without re-measuring. The
+    /// default (`perf`) contributes nothing to the decision fingerprint,
+    /// so pre-power v2 cache entries still replay byte-identically.
+    pub power_policy: PowerPolicy,
+    /// Per-device wattage models the power stage scores against;
+    /// fingerprinted alongside the policy.
+    pub power_model: PowerModel,
     /// Patterns measured concurrently inside one Step-3 search (CLI
     /// `--verify-parallel`). `1` (the default) measures serially; above 1,
     /// independent pattern measurements fan out across the pool's idle
@@ -112,6 +125,8 @@ impl ServiceConfig {
             similarity_threshold: crate::similarity::DEFAULT_THRESHOLD,
             backend_policy: BackendPolicy::Auto,
             device: fpga::ARRIA10_GX,
+            power_policy: PowerPolicy::default(),
+            power_model: PowerModel::builtin(),
             verify_parallel: 1,
         }
     }
@@ -144,10 +159,12 @@ pub struct CompletedJob {
     /// measurement ran for this job).
     pub from_cache: bool,
     /// Deepest pipeline stage replayed from the per-stage cache:
-    /// `Some(Stage::Verify)` means a cached `Verified` artifact was resumed
-    /// (only arbitration re-ran), `Some(Stage::Reconcile)` means discovery
-    /// replayed while verification re-ran. `None` when the pipeline ran
-    /// from scratch — or never ran at all (`from_cache`).
+    /// `Some(Stage::PowerScore)` means a cached `PowerScored` artifact was
+    /// resumed (only arbitration re-ran), `Some(Stage::Verify)` means the
+    /// measurements replayed while power scoring + arbitration re-ran,
+    /// `Some(Stage::Reconcile)` means discovery replayed while
+    /// verification re-ran. `None` when the pipeline ran from scratch —
+    /// or never ran at all (`from_cache`).
     pub resumed_from: Option<Stage>,
     /// Submit-to-completion wall clock.
     pub wall: Duration,
@@ -300,6 +317,7 @@ struct Counters {
     cache_misses: AtomicU64,
     reconciled_hits: AtomicU64,
     verified_hits: AtomicU64,
+    power_hits: AtomicU64,
     latencies_ns: Mutex<LatencyRing>,
 }
 
@@ -307,8 +325,8 @@ struct Counters {
 /// from every worker.
 #[derive(Default)]
 struct StageLatencies {
-    total_ns: [AtomicU64; 6],
-    count: [AtomicU64; 6],
+    total_ns: [AtomicU64; 7],
+    count: [AtomicU64; 7],
 }
 
 impl StageObserver for StageLatencies {
@@ -323,6 +341,12 @@ struct Shared {
     cache: DecisionCache,
     /// Per-stage cache-key components — see [`decision_fingerprint`].
     fingerprints: StageFingerprints,
+    /// Persist/resume the `PowerScored` tier. Off under the default
+    /// power configuration: the inert `perf` scores recompute from a
+    /// replayed `Verified` in microseconds, and the artifact embeds the
+    /// full verified payload — caching it would double per-job cache
+    /// storage to save nothing.
+    persist_power_tier: bool,
     counters: Counters,
     latencies: Arc<StageLatencies>,
     /// Parallel-vs-serial pattern-measurement counters, shared by every
@@ -330,12 +354,13 @@ struct Shared {
     measure_stats: Arc<ExecStats>,
 }
 
-/// The three cache-key fingerprints, one per cached pipeline prefix. Each
+/// The four cache-key fingerprints, one per cached pipeline prefix. Each
 /// digests exactly the inputs that can change that prefix's output, so a
 /// config change invalidates the stages it affects and *only* those: a
 /// `--reps` change re-verifies but replays discovery from the cache; a
-/// `--target` or device change re-arbitrates but replays the verified
-/// measurements.
+/// `--power-policy` change re-scores from the cached `Verified` without
+/// re-measuring; a `--target` or device change re-arbitrates but replays
+/// the power scores.
 struct StageFingerprints {
     /// Keys `Reconciled` artifacts: pattern DB + interface policy +
     /// similarity threshold (the Parse/Discover/Reconcile inputs).
@@ -343,8 +368,14 @@ struct StageFingerprints {
     /// Keys `Verified` artifacts: `discovery` plus the AOT artifact
     /// contents and the verification settings (the Verify inputs).
     verify: String,
-    /// Keys full decisions: `verify` plus the backend policy and FPGA
-    /// device model (the Arbitrate inputs).
+    /// Keys `PowerScored` artifacts: `verify` plus the power policy and
+    /// wattage models (the PowerScore inputs).
+    power: String,
+    /// Keys full decisions: the power tier plus the backend policy and
+    /// FPGA device model (the Arbitrate inputs). Under the default power
+    /// configuration this chains directly off `verify`, reproducing the
+    /// pre-power fingerprint so existing v2 cache entries keep replaying
+    /// byte-identically.
     decision: String,
 }
 
@@ -383,18 +414,45 @@ fn verify_fingerprint(cfg: &ServiceConfig) -> String {
     ))
 }
 
-/// Digest of the full decision *environment*: the verify fingerprint plus
-/// the backend policy and FPGA device model the Step-3b arbitration
-/// targets. Any input changing misses the full-decision cache — a report
-/// verified under `--policy reject` must never be replayed for a
-/// `--policy approve` request, and a decision arbitrated for one FPGA
+/// True when the power configuration is the inert default (`perf` policy
+/// over the built-in wattage models): scoring then changes no decision
+/// and no report byte, so it must change no fingerprint either.
+fn power_is_default(cfg: &ServiceConfig) -> bool {
+    cfg.power_policy.is_default() && cfg.power_model == PowerModel::builtin()
+}
+
+/// Digest of the PowerScore environment: the verify fingerprint plus the
+/// power policy and the wattage models. Always distinct from the verify
+/// fingerprint (the `power|` prefix), so `PowerScored` entries never
+/// collide with `Verified` entries for the same source.
+fn power_fingerprint(cfg: &ServiceConfig) -> String {
+    fnv_hex(&format!(
+        "power|{}|policy:{}|model:{}",
+        verify_fingerprint(cfg),
+        cfg.power_policy.render(),
+        cfg.power_model.fingerprint_blob(),
+    ))
+}
+
+/// Digest of the full decision *environment*: the deepest upstream
+/// fingerprint plus the backend policy and FPGA device model the Step-3b
+/// arbitration targets. Any input changing misses the full-decision cache
+/// — a report verified under `--policy reject` must never be replayed for
+/// a `--policy approve` request, and a decision arbitrated for one FPGA
 /// card must re-arbitrate when the deployment retargets another — while
 /// the per-stage entries keyed by the narrower fingerprints above still
 /// replay whatever prefix remains valid.
+///
+/// Under the **default** power configuration the chain deliberately skips
+/// the power tier and hashes exactly the pre-power formula: `perf`
+/// decisions are byte-identical to decisions made before the power stage
+/// existed, so the cache entries they wrote must keep replaying.
 fn decision_fingerprint(cfg: &ServiceConfig) -> String {
+    let upstream =
+        if power_is_default(cfg) { verify_fingerprint(cfg) } else { power_fingerprint(cfg) };
     fnv_hex(&format!(
         "decide|{}|target:{}|device:{}/{}/{}/{}/{}",
-        verify_fingerprint(cfg),
+        upstream,
         cfg.backend_policy.as_str(),
         cfg.device.name,
         cfg.device.alms,
@@ -408,6 +466,7 @@ fn stage_fingerprints(cfg: &ServiceConfig) -> StageFingerprints {
     StageFingerprints {
         discovery: discovery_fingerprint(cfg),
         verify: verify_fingerprint(cfg),
+        power: power_fingerprint(cfg),
         decision: decision_fingerprint(cfg),
     }
 }
@@ -537,9 +596,13 @@ pub struct StatsSnapshot {
     /// `--reps` change or regenerated artifacts).
     pub reconciled_replays: u64,
     /// Full-decision misses that resumed from a cached `Verified`
-    /// artifact: only arbitration re-ran (e.g. after a `--target` or
-    /// device-model change).
+    /// artifact: power scoring and arbitration re-ran, no re-measurement
+    /// (e.g. after a `--power-policy` change).
     pub verified_replays: u64,
+    /// Full-decision misses that resumed from a cached `PowerScored`
+    /// artifact: only arbitration re-ran (e.g. after a `--target` or
+    /// device-model change under a non-default power policy).
+    pub power_replays: u64,
     /// Cache entries currently held — full decisions *and* per-stage
     /// artifacts (a scratch pipeline run writes one of each tier).
     pub cache_entries: u64,
@@ -586,10 +649,10 @@ impl StatsSnapshot {
             fmt(self.latency_p50),
             fmt(self.latency_p95),
         );
-        if self.reconciled_replays + self.verified_replays > 0 {
+        if self.reconciled_replays + self.verified_replays + self.power_replays > 0 {
             line.push_str(&format!(
-                " | stage replays: {} reconciled, {} verified",
-                self.reconciled_replays, self.verified_replays
+                " | stage replays: {} reconciled, {} verified, {} power-scored",
+                self.reconciled_replays, self.verified_replays, self.power_replays
             ));
         }
         if self.patterns_parallel + self.patterns_serial > 0 {
@@ -642,6 +705,7 @@ impl OffloadService {
         let shared = Arc::new(Shared {
             cache,
             fingerprints: stage_fingerprints(&cfg),
+            persist_power_tier: !power_is_default(&cfg),
             counters: Counters::default(),
             latencies: Arc::new(StageLatencies::default()),
             measure_stats: Arc::new(ExecStats::default()),
@@ -779,6 +843,7 @@ impl OffloadService {
             cache_misses: c.cache_misses.load(Ordering::Relaxed),
             reconciled_replays: c.reconciled_hits.load(Ordering::Relaxed),
             verified_replays: c.verified_hits.load(Ordering::Relaxed),
+            power_replays: c.power_hits.load(Ordering::Relaxed),
             cache_entries: self.shared.cache.len() as u64,
             patterns_parallel: self.shared.measure_stats.fanned_out.load(Ordering::Relaxed),
             patterns_serial: self.shared.measure_stats.local.load(Ordering::Relaxed),
@@ -851,6 +916,8 @@ fn worker_main(
             c.similarity_threshold = cfg.similarity_threshold;
             c.backend_policy = cfg.backend_policy;
             c.device = cfg.device;
+            c.power_policy = cfg.power_policy;
+            c.power_model = cfg.power_model.clone();
             // Fan independent pattern measurements out to the sibling
             // workers when configured; with `verify_parallel == 1` the
             // executor measures everything locally (and still feeds the
@@ -916,24 +983,31 @@ fn run_job(c: &Coordinator, shared: &Shared, job: &Job) -> Result<CompletedJob> 
     // Resume from the deepest valid per-stage entry. The stage keys share
     // the job's (source, entry) components but use the narrower
     // per-prefix fingerprints, so a config change invalidates exactly the
-    // stages it affects: a full-decision miss can still replay discovery
-    // (and even verification) from a previous run.
+    // stages it affects: a full-decision miss can still replay discovery,
+    // verification, or even the power scores from a previous run.
     let reconciled_key = job.key.with_fingerprint(&shared.fingerprints.discovery);
     let verified_key = job.key.with_fingerprint(&shared.fingerprints.verify);
+    let power_key = job.key.with_fingerprint(&shared.fingerprints.power);
 
     let mut resumed_from = None;
-    let verified = match shared.try_stage(&verified_key, Verified::from_json_str, "verified") {
-        Some(v) => {
-            shared.counters.verified_hits.fetch_add(1, Ordering::Relaxed);
-            resumed_from = Some(Stage::Verify);
-            v
-        }
-        None => {
-            let reconciled =
-                match shared.try_stage(&reconciled_key, Reconciled::from_json_str, "reconciled") {
+    // Obtain the Verified artifact: replay the deepest valid stage entry
+    // or run the missing prefix (persisting what it produced).
+    let resume_verified = |resumed_from: &mut Option<Stage>| -> Result<Verified> {
+        match shared.try_stage(&verified_key, Verified::from_json_str, "verified") {
+            Some(v) => {
+                shared.counters.verified_hits.fetch_add(1, Ordering::Relaxed);
+                *resumed_from = Some(Stage::Verify);
+                Ok(v)
+            }
+            None => {
+                let reconciled = match shared.try_stage(
+                    &reconciled_key,
+                    Reconciled::from_json_str,
+                    "reconciled",
+                ) {
                     Some(r) => {
                         shared.counters.reconciled_hits.fetch_add(1, Ordering::Relaxed);
-                        resumed_from = Some(Stage::Reconcile);
+                        *resumed_from = Some(Stage::Reconcile);
                         r
                     }
                     None => {
@@ -942,12 +1016,35 @@ fn run_job(c: &Coordinator, shared: &Shared, job: &Job) -> Result<CompletedJob> 
                         r
                     }
                 };
-            let v = reconciled.verify(&req)?;
-            shared.persist_stage(&verified_key, &v.to_json_string());
-            v
+                let v = reconciled.verify(&req)?;
+                shared.persist_stage(&verified_key, &v.to_json_string());
+                Ok(v)
+            }
         }
     };
-    let report = verified.arbitrate(&req)?.report();
+
+    // The power tier is only consulted/persisted under a non-default
+    // power configuration — the default `perf` scores are inert, so that
+    // path arbitrates straight off the Verified artifact (one clone, the
+    // pre-power cost) instead of materializing a throwaway PowerScored.
+    let report = if shared.persist_power_tier {
+        let scored =
+            match shared.try_stage(&power_key, PowerScored::from_json_str, "power-scored") {
+                Some(p) => {
+                    shared.counters.power_hits.fetch_add(1, Ordering::Relaxed);
+                    resumed_from = Some(Stage::PowerScore);
+                    p
+                }
+                None => {
+                    let p = resume_verified(&mut resumed_from)?.power_score(&req)?;
+                    shared.persist_stage(&power_key, &p.to_json_string());
+                    p
+                }
+            };
+        scored.arbitrate(&req)?.report()
+    } else {
+        resume_verified(&mut resumed_from)?.arbitrate(&req)?.report()
+    };
 
     let report_json: Arc<str> = Arc::from(report_json::report_to_string(&report));
     // The verified decision is the product; failing to persist it degrades
@@ -1022,6 +1119,7 @@ mod tests {
             cache_misses: 0,
             reconciled_replays: 0,
             verified_replays: 0,
+            power_replays: 0,
             cache_entries: 0,
             patterns_parallel: 0,
             patterns_serial: 0,
@@ -1072,12 +1170,32 @@ mod tests {
         assert_ne!(fp.decision, base.decision);
 
         // A backend retarget invalidates only the decision: verified
-        // measurements replay, arbitration re-runs.
+        // measurements (and power scores) replay, arbitration re-runs.
         let mut target = cfg.clone();
         target.backend_policy = BackendPolicy::Fpga;
         let fp = stage_fingerprints(&target);
         assert_eq!(fp.discovery, base.discovery);
         assert_eq!(fp.verify, base.verify);
+        assert_eq!(fp.power, base.power);
+        assert_ne!(fp.decision, base.decision);
+
+        // A power-policy change invalidates the power tier and the
+        // decision, but the verified measurements replay: no re-measuring
+        // for a wattage question.
+        let mut ppw = cfg.clone();
+        ppw.power_policy = PowerPolicy::PerfPerWatt;
+        let fp = stage_fingerprints(&ppw);
+        assert_eq!(fp.discovery, base.discovery);
+        assert_eq!(fp.verify, base.verify);
+        assert_ne!(fp.power, base.power);
+        assert_ne!(fp.decision, base.decision);
+
+        // So does editing the wattage model itself.
+        let mut model = cfg.clone();
+        model.power_model.fpga.active_watts += 5.0;
+        let fp = stage_fingerprints(&model);
+        assert_eq!(fp.verify, base.verify);
+        assert_ne!(fp.power, base.power);
         assert_ne!(fp.decision, base.decision);
 
         // An interface-policy change invalidates everything.
@@ -1086,6 +1204,38 @@ mod tests {
         let fp = stage_fingerprints(&policy);
         assert_ne!(fp.discovery, base.discovery);
         assert_ne!(fp.verify, base.verify);
+        assert_ne!(fp.power, base.power);
         assert_ne!(fp.decision, base.decision);
+    }
+
+    #[test]
+    fn default_power_config_reproduces_the_pre_power_decision_fingerprint() {
+        // The byte-identical-replay contract across the power PR: under
+        // the default (`perf` + built-in model) configuration the decision
+        // fingerprint hashes exactly the pre-power formula, chaining off
+        // the verify tier, so v2 cache entries written before the power
+        // stage existed still replay. (The power *tier* key is distinct —
+        // `PowerScored` entries can never collide with `Verified` ones.)
+        let cfg = ServiceConfig::new("some/artifacts");
+        assert!(power_is_default(&cfg));
+        let pre_power = fnv_hex(&format!(
+            "decide|{}|target:{}|device:{}/{}/{}/{}/{}",
+            verify_fingerprint(&cfg),
+            cfg.backend_policy.as_str(),
+            cfg.device.name,
+            cfg.device.alms,
+            cfg.device.dsps,
+            cfg.device.m20ks,
+            cfg.device.fmax,
+        ));
+        assert_eq!(decision_fingerprint(&cfg), pre_power);
+        let fp = stage_fingerprints(&cfg);
+        assert_ne!(fp.power, fp.verify, "power tier must key its own entries");
+
+        // Any non-default power input leaves the compatibility path.
+        let mut ppw = cfg.clone();
+        ppw.power_policy = PowerPolicy::Cap(50.0);
+        assert!(!power_is_default(&ppw));
+        assert_ne!(decision_fingerprint(&ppw), pre_power);
     }
 }

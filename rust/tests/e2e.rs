@@ -101,6 +101,7 @@ fn full_environment_adaptation_flow() {
         fpgas: 8,
         cost_per_hour: 0.5,
         fpga_cost_per_hour: 0.2,
+        energy_cost_per_kwh: 0.12,
         latency_ms: 10.0,
     }];
     let placement = flow::plan_placement(&plan, &req, &locations).unwrap();

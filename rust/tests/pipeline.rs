@@ -109,7 +109,13 @@ fn every_stage_artifact_serializes_and_resumes() {
     let verified2 = Verified::from_json_str(&saved).unwrap();
     assert_eq!(verified2.to_json_string(), saved, "stage codec must be byte-stable");
 
-    let arbitrated = verified2.arbitrate(&req).unwrap();
+    let scored = verified2.power_score(&req).unwrap();
+    let saved_scores = scored.to_json_string();
+    let scored2 = fbo::coordinator::PowerScored::from_json_str(&saved_scores).unwrap();
+    assert_eq!(scored2.to_json_string(), saved_scores, "power stage codec must be byte-stable");
+    assert_eq!(scored2.scores.blocks.len(), verified.outcome.tried.len());
+
+    let arbitrated = scored2.arbitrate(&req).unwrap();
     let arbitrated2 =
         fbo::coordinator::Arbitrated::from_json_str(&arbitrated.to_json_string()).unwrap();
     assert_eq!(arbitrated2.transformed_source, arbitrated.transformed_source);
@@ -152,6 +158,63 @@ fn resuming_a_verified_artifact_under_a_new_target_changes_the_outcome() {
     );
 }
 
+#[test]
+fn resuming_a_verified_artifact_under_a_power_policy_scores_without_remeasuring() {
+    use fbo::coordinator::{PowerModel, PowerPolicy};
+
+    let c = coordinator();
+    let src = apps::fft_app_lib(64);
+    let req = c.request(&src, "main");
+    let saved = req
+        .parse()
+        .unwrap()
+        .discover(&req)
+        .unwrap()
+        .reconcile(&req)
+        .unwrap()
+        .verify(&req)
+        .unwrap()
+        .to_json_string();
+
+    // Default power policy: no power residue, the report serializes as v2
+    // with no power section — byte-compatible with pre-power decisions.
+    let perf = Verified::from_json_str(&saved).unwrap().arbitrate(&req).unwrap();
+    assert!(perf.arbitration.power.is_none());
+    let perf_json = fbo::coordinator::report_json::report_to_string(&perf.report());
+    assert!(perf_json.contains("fbo-offload-report-v2"), "{perf_json}");
+    assert!(!perf_json.contains("\"power\""));
+
+    // perf-per-watt on the same saved measurements: the power stage scores
+    // (no re-measurement — the artifact is all it reads) and the v3 report
+    // records per-block energy.
+    let ppw_req = c.request(&src, "main").with_power_policy(PowerPolicy::PerfPerWatt);
+    let scored = Verified::from_json_str(&saved).unwrap().power_score(&ppw_req).unwrap();
+    assert!(
+        scored.scores.blocks.iter().any(|b| b.gpu.is_some()),
+        "the measured fft pattern must be scored"
+    );
+    let powered = scored.arbitrate(&ppw_req).unwrap();
+    let residue = powered.arbitration.power.as_ref().expect("power residue");
+    assert!(residue.blocks.iter().any(|b| b.gpu_energy_j.is_some()));
+    let powered_json = fbo::coordinator::report_json::report_to_string(&powered.report());
+    assert!(powered_json.contains("fbo-offload-report-v3"), "{powered_json}");
+    assert!(powered_json.contains("gpu_energy_j"));
+
+    // An invalid caller-supplied wattage model fails in the PowerScore
+    // stage, carrying the verified artifact.
+    let mut bad_model = PowerModel::builtin();
+    bad_model.gpu.active_watts = -1.0;
+    let bad_req = c.request(&src, "main").with_power_model(bad_model);
+    let err = Verified::from_json_str(&saved).unwrap().power_score(&bad_req).unwrap_err();
+    assert_eq!(err.stage(), Stage::PowerScore);
+    match err {
+        OffloadError::PowerScoring { verified, .. } => {
+            assert!(!verified.outcome.tried.is_empty(), "partial artifact must survive");
+        }
+        other => panic!("wrong variant: {other}"),
+    }
+}
+
 // ----------------------------------------------------------- observers
 
 #[derive(Default)]
@@ -175,7 +238,14 @@ fn observer_sees_every_stage_in_order() {
     let stages: Vec<Stage> = recorder.0.lock().unwrap().iter().map(|(s, _)| *s).collect();
     assert_eq!(
         stages,
-        vec![Stage::Parse, Stage::Discover, Stage::Reconcile, Stage::Verify, Stage::Arbitrate]
+        vec![
+            Stage::Parse,
+            Stage::Discover,
+            Stage::Reconcile,
+            Stage::Verify,
+            Stage::PowerScore,
+            Stage::Arbitrate
+        ]
     );
 }
 
@@ -246,6 +316,7 @@ fn place_stage_consumes_the_arbitrated_times() {
         fpgas: 8,
         cost_per_hour: 0.5,
         fpga_cost_per_hour: 0.2,
+        energy_cost_per_kwh: 0.12,
         latency_ms: 10.0,
     }];
     let placed = arbitrated.place(&req, &requirements, &locations).unwrap();

@@ -4,6 +4,7 @@
 //! the invariant the decision cache's byte-identical replay rests on.
 
 use fbo::coordinator::{report_json, Backend, BackendPolicy};
+use fbo::patterndb::json::{self, Json};
 use fbo::transform::Reconciliation;
 
 const V1_FIXTURE: &str = include_str!("fixtures/report_v1.json");
@@ -58,4 +59,43 @@ fn committed_v2_fixture_round_trips_byte_identically() {
     // ...and the committed fixture is already in canonical form (modulo
     // the file's trailing newline), so one round trip is byte-identical.
     assert_eq!(reencoded, V2_FIXTURE.trim_end(), "v2 fixture must round-trip byte-identically");
+}
+
+#[test]
+fn v3_documents_decode_and_are_a_codec_fixed_point() {
+    // Shape a v3 document from the committed v2 fixture: bump the format
+    // tag and graft a power residue into the arbitration section — the
+    // two changes a non-default --power-policy makes to the wire format.
+    let mut top = json::parse(V2_FIXTURE).unwrap().as_obj().unwrap().clone();
+    top.insert("format".to_string(), Json::str("fbo-offload-report-v3"));
+    let power = Json::obj(vec![
+        ("policy", Json::str("perf-per-watt")),
+        ("gpu_watts", Json::num(75.0)),
+        ("fpga_watts", Json::num(40.0)),
+        (
+            "blocks",
+            Json::Arr(vec![Json::obj(vec![
+                ("label", Json::str("call:fft2d")),
+                ("gpu_energy_j", Json::num(0.0075)),
+                ("fpga_energy_j", Json::num(0.0025)),
+            ])]),
+        ),
+    ]);
+    if let Some(Json::Obj(arb)) = top.get_mut("arbitration") {
+        arb.insert("power".to_string(), power);
+    } else {
+        panic!("v2 fixture must carry an arbitration section");
+    }
+    let v3_text = json::to_string_pretty(&Json::Obj(top));
+
+    let report = report_json::report_from_str(&v3_text).expect("v3 documents must decode");
+    let residue = report.arbitration.power.as_ref().expect("power residue");
+    assert_eq!(residue.gpu_watts, 75.0);
+    assert_eq!(residue.blocks[0].fpga_energy_j, Some(0.0025));
+    // The canonical re-encode keeps the v3 tag and is a codec fixed point.
+    let reencoded = report_json::report_to_string(&report);
+    assert!(reencoded.contains(report_json::REPORT_FORMAT_V3));
+    assert_eq!(reencoded, v3_text, "canonically-built v3 must round-trip byte-identically");
+    let twice = report_json::report_to_string(&report_json::report_from_str(&reencoded).unwrap());
+    assert_eq!(twice, reencoded);
 }

@@ -183,7 +183,7 @@ fn verify_policy_change_replays_discovery_and_retarget_replays_verification() {
         assert_eq!(stats.reconciled_replays, 0);
         assert_eq!(stats.verified_replays, 0);
         // The observer-backed stage counters saw the whole pipeline run.
-        for stage in ["parse", "discover", "reconcile", "verify", "arbitrate"] {
+        for stage in ["parse", "discover", "reconcile", "verify", "power-score", "arbitrate"] {
             let s = stats.stages.iter().find(|s| s.stage == stage).unwrap();
             assert_eq!(s.count, 1, "{stage} must have run exactly once");
         }
@@ -214,7 +214,10 @@ fn verify_policy_change_replays_discovery_and_retarget_replays_verification() {
     }
 
     // A backend retarget keeps the verified measurements and only
-    // re-arbitrates.
+    // re-arbitrates. Under the default (`perf`) power configuration the
+    // inert power scores are recomputed, not persisted, so the resume
+    // point is the Verified tier (the power-tier resume is exercised by
+    // `power_policy_change_replays_verification_and_perf_replays_v2_entries`).
     {
         let mut retarget = cfg.clone();
         retarget.backend_policy = BackendPolicy::Gpu;
@@ -224,9 +227,11 @@ fn verify_policy_change_replays_discovery_and_retarget_replays_verification() {
         assert_eq!(done.resumed_from, Some(Stage::Verify), "measurements must replay");
         assert_eq!(done.report.backend(), Backend::Gpu);
         let stats = service.stats();
+        assert_eq!(stats.power_replays, 0);
         assert_eq!(stats.verified_replays, 1);
         assert_eq!(stats.reconciled_replays, 0);
         assert_eq!(stats.stages.iter().find(|s| s.stage == "verify").unwrap().count, 0);
+        assert_eq!(stats.stages.iter().find(|s| s.stage == "power-score").unwrap().count, 1);
         assert_eq!(stats.stages.iter().find(|s| s.stage == "arbitrate").unwrap().count, 1);
     }
 
@@ -237,6 +242,85 @@ fn verify_policy_change_replays_discovery_and_retarget_replays_verification() {
         let done = service.submit(&src, "main").wait().unwrap();
         assert!(done.from_cache);
         assert_eq!(done.resumed_from, None);
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ------------------------------------------------- power-tier stage cache
+
+#[test]
+fn power_policy_change_replays_verification_and_perf_replays_v2_entries() {
+    use fbo::coordinator::PowerPolicy;
+
+    let (cfg, dir) = test_config("powercache");
+    let src = apps::fft_app_lib(64);
+
+    // Scratch run under the default (`perf`) power policy: the decision
+    // persists as a v2 report with no power section — byte-for-byte what
+    // a pre-power pipeline would have cached.
+    let perf_json = {
+        let service = OffloadService::start(cfg.clone()).unwrap();
+        let first = service.submit(&src, "main").wait().unwrap();
+        assert!(!first.from_cache);
+        assert!(first.report_json.contains("fbo-offload-report-v2"));
+        assert!(!first.report_json.contains("\"power\""));
+        first.report_json
+    };
+
+    // Changing --power-policy resumes from the cached `Verified` artifact:
+    // the measurements replay, power scoring + arbitration re-run, and no
+    // verify stage executes (nothing is re-measured).
+    {
+        let mut ppw = cfg.clone();
+        ppw.power_policy = PowerPolicy::PerfPerWatt;
+        let service = OffloadService::start(ppw).unwrap();
+        let done = service.submit(&src, "main").wait().unwrap();
+        assert!(!done.from_cache, "--power-policy change must re-arbitrate");
+        assert_eq!(done.resumed_from, Some(Stage::Verify), "measurements must replay");
+        let stats = service.stats();
+        assert_eq!(stats.verified_replays, 1);
+        assert_eq!(stats.power_replays, 0);
+        assert_eq!(
+            stats.stages.iter().find(|s| s.stage == "verify").unwrap().count,
+            0,
+            "no re-measurement for a wattage question"
+        );
+        assert_eq!(stats.stages.iter().find(|s| s.stage == "power-score").unwrap().count, 1);
+        // The non-default policy produces the v3 report with energies.
+        assert!(done.report_json.contains("fbo-offload-report-v3"));
+        assert!(done.report_json.contains("gpu_energy_j"));
+        assert!(done.report.arbitration.power.is_some());
+        // Same measured outcome behind both decisions.
+        let perf_report = report_json::report_from_str(&perf_json).unwrap();
+        assert_eq!(
+            perf_report.outcome.best_speedup,
+            done.report.outcome.best_speedup
+        );
+    }
+
+    // A second perf-per-watt service start resumes deeper still: the
+    // PowerScored artifact itself replays, so only arbitration runs.
+    {
+        let mut ppw = cfg.clone();
+        ppw.power_policy = PowerPolicy::PerfPerWatt;
+        ppw.backend_policy = BackendPolicy::Gpu;
+        let service = OffloadService::start(ppw).unwrap();
+        let done = service.submit(&src, "main").wait().unwrap();
+        assert!(!done.from_cache);
+        assert_eq!(done.resumed_from, Some(Stage::PowerScore));
+        assert_eq!(service.stats().power_replays, 1);
+    }
+
+    // Back on the default policy, the original v2 entry replays
+    // byte-identically: the default decision fingerprint is the pre-power
+    // formula, so `perf` keeps serving decisions cached before (and
+    // without) the power stage.
+    {
+        let service = OffloadService::start(cfg).unwrap();
+        let done = service.submit(&src, "main").wait().unwrap();
+        assert!(done.from_cache, "perf must replay the v2 entry");
+        assert_eq!(done.report_json, perf_json, "byte-identical replay");
     }
 
     std::fs::remove_dir_all(&dir).ok();
@@ -268,7 +352,8 @@ fn failures_are_contained() {
     assert_eq!(stats.completed, 1);
     // Failed decisions are never cached. The one successful pipeline run
     // writes three entries: the full decision plus the Reconciled and
-    // Verified stage artifacts it can later resume from.
+    // Verified stage artifacts it can later resume from (the inert
+    // default power scores are recomputed, never persisted).
     assert_eq!(stats.cache_entries, 3);
 
     std::fs::remove_dir_all(&dir).ok();
