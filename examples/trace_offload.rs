@@ -1,0 +1,71 @@
+//! Trace one full offload end to end: run the sensor-fusion app through
+//! the pipeline under a [`fbo::telemetry::TraceObserver`], then export
+//! the trace twice — canonical JSONL (the `--trace-out` wire format) and
+//! Chrome `trace_event` JSON you can open directly in Perfetto.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example trace_offload
+//! ```
+//!
+//! Load the printed `.trace.json` at <https://ui.perfetto.dev> (or
+//! `chrome://tracing`): the six pipeline stages render as spans on one
+//! track, with every pattern measurement, power score, and arbitration
+//! verdict as instant markers inside them.
+
+use std::sync::Arc;
+
+use fbo::coordinator::{apps, Coordinator};
+use fbo::telemetry::{TraceEvent, TraceObserver, TraceRecorder, DEFAULT_RING_CAPACITY};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let out_dir =
+        std::env::temp_dir().join(format!("fbo-trace-example-{}", std::process::id()));
+    std::fs::create_dir_all(&out_dir)?;
+    let jsonl_path = out_dir.join("offload.trace.jsonl");
+    let chrome_path = out_dir.join("offload.trace.json");
+
+    let mut c = Coordinator::open(&artifacts)?;
+    c.verify.reps = 1;
+    let src = apps::sensor_fusion_app(64);
+
+    // Every record is mirrored to the JSONL sink as it happens — exactly
+    // what `fbo offload --trace-out FILE` does.
+    let recorder = Arc::new(TraceRecorder::with_sink(DEFAULT_RING_CAPACITY, &jsonl_path)?);
+    let obs = Arc::new(TraceObserver::begin(&recorder, "main"));
+    let report = c.request(&src, "main").with_observer(obs.clone()).run()?;
+    obs.complete(false, true);
+    recorder.flush()?;
+
+    println!(
+        "offloaded sensor_fusion: best speedup {} via {}",
+        fbo::metrics::fmt_speedup(report.best_speedup()),
+        report.backend().as_str(),
+    );
+
+    let records = recorder.records();
+    let spans = records
+        .iter()
+        .filter(|r| matches!(r.event, TraceEvent::StageCompleted { .. }))
+        .count();
+    let patterns = records
+        .iter()
+        .filter(|r| matches!(r.event, TraceEvent::PatternMeasured { .. }))
+        .count();
+    let verdicts = records
+        .iter()
+        .filter(|r| matches!(r.event, TraceEvent::ArbitrationVerdict { .. }))
+        .count();
+    println!(
+        "trace {}: {} records ({spans} stage spans, {patterns} pattern measurements, \
+         {verdicts} verdicts)",
+        obs.trace_id(),
+        records.len(),
+    );
+
+    std::fs::write(&chrome_path, recorder.chrome_trace())?;
+    println!("JSONL trace:  {}", jsonl_path.display());
+    println!("Chrome trace: {}", chrome_path.display());
+    println!("open the Chrome trace at https://ui.perfetto.dev (or chrome://tracing)");
+    Ok(())
+}

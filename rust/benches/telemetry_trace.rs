@@ -1,0 +1,124 @@
+//! Bench gate: telemetry passivity and trace validity.
+//!
+//! Fresh pipeline runs are wall-clock-measured and therefore never
+//! byte-identical to each other, so the passivity invariant is gated the
+//! way the cache makes it real: an **untraced** service verifies the
+//! sensor-fusion app, then a **traced** service on the same cache dir
+//! must replay that decision byte-for-byte (telemetry shifts no
+//! fingerprint). A separately traced fresh run produces the full span
+//! trace, whose JSONL sink must round-trip line-by-line and whose Chrome
+//! export must parse with one `"X"` span per pipeline stage.
+//!
+//! Run: `cargo bench --bench telemetry_trace` (`-- --test` for the CI
+//! smoke pass). Records: `BENCH_telemetry.json` at the repo root.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use fbo::coordinator::apps;
+use fbo::metrics::fmt_duration;
+use fbo::patterndb::json::{self, Json};
+use fbo::service::{OffloadService, ServiceConfig};
+use fbo::telemetry::TraceRecord;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn config(artifacts: &Path, cache_dir: &Path) -> ServiceConfig {
+    let mut cfg = ServiceConfig::new(artifacts);
+    cfg.cache_dir = Some(cache_dir.to_path_buf());
+    cfg.workers = 1;
+    cfg.verify.reps = 1;
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    let _smoke = std::env::args().any(|a| a == "--test");
+    let n = env_usize("FBO_N", 64);
+
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let tmp = std::env::temp_dir().join(format!("fbo-bench-telemetry-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp)?;
+    let replay_cache = tmp.join("cache-replay");
+    let fresh_cache = tmp.join("cache-fresh");
+    let src = apps::sensor_fusion_app(n);
+
+    println!("== telemetry trace gate: sensor_fusion, n={n} ==");
+
+    // Untraced fresh run: the reference decision bytes.
+    let service = OffloadService::start(config(&artifacts, &replay_cache))?;
+    service.cache().clear()?;
+    let t0 = Instant::now();
+    let untraced = service.submit(&src, "main").wait()?;
+    let untraced_wall = t0.elapsed();
+    assert!(!untraced.from_cache);
+    service.shutdown();
+    println!("untraced fresh: {}", fmt_duration(untraced_wall));
+
+    // Traced fresh run on a cold cache: full span trace into the sink.
+    let mut cfg = config(&artifacts, &fresh_cache);
+    cfg.telemetry.trace_out = Some(tmp.join("fresh.trace.jsonl"));
+    let service = OffloadService::start(cfg)?;
+    service.cache().clear()?;
+    let t0 = Instant::now();
+    let traced = service.submit(&src, "main").wait()?;
+    let traced_wall = t0.elapsed();
+    assert!(!traced.from_cache);
+    let recorder = service.recorder().clone();
+    service.shutdown();
+    println!("traced fresh:   {}", fmt_duration(traced_wall));
+
+    // Every sink line must decode and re-encode byte-identically.
+    let sink = std::fs::read_to_string(tmp.join("fresh.trace.jsonl"))?;
+    let mut sink_records = 0usize;
+    for line in sink.lines() {
+        let rec = TraceRecord::from_jsonl_line(line)?;
+        assert_eq!(rec.to_jsonl_line(), line, "JSONL round-trip must be byte-identical");
+        sink_records += 1;
+    }
+    assert_eq!(recorder.dropped(), 0, "ring must hold the whole single-job trace");
+    assert_eq!(sink_records, recorder.len(), "sink must mirror the ring");
+
+    // The Chrome export parses, and carries one "X" span per stage.
+    let chrome = json::parse(&recorder.chrome_trace())?;
+    let events = match chrome.get("traceEvents")? {
+        Json::Arr(events) => events,
+        other => anyhow::bail!("traceEvents must be an array, got {other:?}"),
+    };
+    let spans = events
+        .iter()
+        .filter(|e| matches!(e.get("ph"), Ok(Json::Str(ph)) if ph == "X"))
+        .count();
+    assert_eq!(spans, 6, "one complete span per pipeline stage");
+
+    // Passivity: the traced service replays the untraced decision
+    // byte-for-byte — telemetry config is outside every fingerprint.
+    let mut cfg = config(&artifacts, &replay_cache);
+    cfg.telemetry.trace_out = Some(tmp.join("replay.trace.jsonl"));
+    let service = OffloadService::start(cfg)?;
+    let replayed = service.submit(&src, "main").wait()?;
+    assert!(replayed.from_cache, "telemetry must not shift any cache fingerprint");
+    let byte_identical = replayed.report_json == untraced.report_json;
+    assert!(byte_identical, "traced replay must be byte-identical to the untraced decision");
+    service.shutdown();
+    println!("replay under tracing: byte-identical ({} trace records)", sink_records);
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("telemetry_trace")),
+        ("n", Json::num(n as f64)),
+        ("untraced_secs", Json::num(untraced_wall.as_secs_f64())),
+        ("traced_secs", Json::num(traced_wall.as_secs_f64())),
+        ("trace_records", Json::num(sink_records as f64)),
+        ("spans", Json::num(spans as f64)),
+        ("byte_identical", Json::Bool(byte_identical)),
+    ]);
+    let bench_path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_telemetry.json");
+    std::fs::write(&bench_path, json::to_string_pretty(&out))?;
+    println!("recorded {}", bench_path.display());
+
+    std::fs::remove_dir_all(&tmp).ok();
+    Ok(())
+}

@@ -35,6 +35,7 @@ use crate::analysis;
 use crate::fpga::{self, HlsCompiler, KernelSpec, ResourceEstimate};
 use crate::parser::{self, StmtKind};
 use crate::patterndb::{PassModel, PatternDb};
+use crate::telemetry::TraceEvent;
 use crate::transform::{glue, PlannedReplacement};
 
 use super::power::{self, PowerOutcome, PowerPolicy};
@@ -507,6 +508,59 @@ pub fn arbitrate(
         fpga_request_secs,
         power: power_decision,
     })
+}
+
+/// Structured telemetry events of one arbitration: a verdict per block
+/// naming the winner, the closest losing backend, and the seconds between
+/// them. Built lazily by the pipeline only when a
+/// [`crate::coordinator::StageObserver`] is installed.
+pub fn arbitration_events(outcome: &ArbitrationOutcome) -> Vec<TraceEvent> {
+    outcome
+        .blocks
+        .iter()
+        .map(|b| {
+            let gpu = b.gpu_secs;
+            let fpga = b
+                .fpga
+                .as_ref()
+                .filter(|f| f.precheck_ok && !f.narrowed_out)
+                .map(|f| f.est_secs);
+            // The loser is the best backend the winner displaced; its
+            // seconds (when it had any) set the margin.
+            let (loser, loser_secs): (&str, Option<f64>) = match b.backend {
+                Backend::Gpu => match fpga {
+                    Some(f) => ("fpga", Some(f)),
+                    None => ("cpu", None),
+                },
+                Backend::Fpga => match gpu {
+                    Some(g) => ("gpu", Some(g)),
+                    None => ("cpu", None),
+                },
+                Backend::Cpu => match (gpu, fpga) {
+                    (Some(g), Some(f)) if f < g => ("fpga", Some(f)),
+                    (Some(g), _) => ("gpu", Some(g)),
+                    (None, Some(f)) => ("fpga", Some(f)),
+                    (None, None) => ("none", None),
+                },
+            };
+            let winner_secs = match b.backend {
+                Backend::Gpu => gpu,
+                Backend::Fpga => fpga,
+                Backend::Cpu => None,
+            };
+            let margin_secs = match (winner_secs, loser_secs) {
+                (Some(w), Some(l)) => (l - w).abs(),
+                _ => 0.0,
+            };
+            TraceEvent::ArbitrationVerdict {
+                label: b.label.clone(),
+                winner: b.backend.as_str().to_string(),
+                loser: loser.to_string(),
+                margin_secs,
+                policy: outcome.policy.as_str().to_string(),
+            }
+        })
+        .collect()
 }
 
 /// Evaluate one IP core: narrowing, pre-check, timing model. Bails (fail

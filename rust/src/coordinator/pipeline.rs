@@ -52,6 +52,7 @@ use crate::patterndb::{
 };
 use crate::runtime::Engine;
 use crate::similarity;
+use crate::telemetry::TraceEvent;
 use crate::transform::{self, reconcile, signature_of, InterfacePolicy, PlannedReplacement, Site};
 
 use super::backend::{self, Backend, BackendPolicy};
@@ -109,6 +110,14 @@ impl Stage {
         }
     }
 
+    /// Inverse of [`Stage::as_str`] (trace decoding and CLI).
+    pub fn parse(s: &str) -> Result<Stage> {
+        Stage::ALL
+            .into_iter()
+            .find(|stage| stage.as_str() == s)
+            .ok_or_else(|| anyhow::anyhow!("unknown stage {s:?}"))
+    }
+
     /// Position in [`Stage::ALL`] (stable index for per-stage counters).
     pub fn index(self) -> usize {
         match self {
@@ -128,6 +137,14 @@ impl Stage {
 pub trait StageObserver: Send + Sync {
     /// One stage finished successfully after `wall` of work.
     fn stage_completed(&self, stage: Stage, wall: Duration);
+
+    /// One structured telemetry event fired from inside a stage (pattern
+    /// measurements, power scores, arbitration verdicts). Default: ignore
+    /// — observers that only track stage latency need not care, and the
+    /// pipeline builds the events only when an observer is installed.
+    fn stage_event(&self, event: &TraceEvent) {
+        let _ = event;
+    }
 }
 
 // ---------------------------------------------------------------- errors
@@ -380,6 +397,17 @@ impl OffloadRequest {
     fn observe(&self, stage: Stage, wall: Duration) {
         if let Some(o) = &self.observer {
             o.stage_completed(stage, wall);
+        }
+    }
+
+    /// Feed structured telemetry events to the observer. Takes a closure
+    /// so untraced runs never build the event vector at all — telemetry
+    /// is strictly passive and must cost nothing when off.
+    fn observe_events(&self, events: impl FnOnce() -> Vec<TraceEvent>) {
+        if let Some(o) = &self.observer {
+            for event in events() {
+                o.stage_event(&event);
+            }
         }
     }
 
@@ -671,6 +699,7 @@ impl Reconciled {
             message: format!("{e:#}"),
         })?;
         let wall = t0.elapsed();
+        req.observe_events(|| verify::measurement_events(&outcome));
         req.observe(Stage::Verify, wall);
         Ok(Verified { reconciled: self.clone(), outcome, wall })
     }
@@ -741,6 +770,7 @@ impl Verified {
         })?;
         let scores = power::score(&req.power_model, req.power_policy, &self.outcome);
         let wall = t0.elapsed();
+        req.observe_events(|| power::power_events(&scores));
         req.observe(Stage::PowerScore, wall);
         Ok((scores, wall))
     }
@@ -903,6 +933,7 @@ fn arbitrate_scored(
         message: format!("{e:#}"),
     })?;
     let wall = t0.elapsed();
+    req.observe_events(|| backend::arbitration_events(&arbitration));
     req.observe(Stage::Arbitrate, wall);
     Ok(Arbitrated { verified: verified.clone(), arbitration, transformed_source, wall })
 }
@@ -1201,6 +1232,10 @@ mod tests {
         }
         assert_eq!(Stage::Verify.as_str(), "verify");
         assert_eq!(Stage::PowerScore.as_str(), "power-score");
+        for s in Stage::ALL {
+            assert_eq!(Stage::parse(s.as_str()).unwrap(), s, "parse inverts as_str");
+        }
+        assert!(Stage::parse("compile").is_err());
         assert!(Stage::PowerScore.index() > Stage::Verify.index());
         assert!(Stage::PowerScore.index() < Stage::Arbitrate.index());
     }

@@ -29,6 +29,7 @@
 use anyhow::{bail, Result};
 
 use crate::patterndb::json::Json;
+use crate::telemetry::TraceEvent;
 
 use super::backend::Backend;
 use super::verify::{DeviceTraffic, SearchOutcome};
@@ -290,6 +291,24 @@ pub fn score(model: &PowerModel, policy: PowerPolicy, outcome: &SearchOutcome) -
         })
         .collect();
     PowerOutcome { policy, model: model.clone(), baseline, blocks }
+}
+
+/// Structured telemetry events of one `PowerScore` stage: the all-CPU
+/// baseline energy first, then every scored pattern that dispatched.
+/// Built lazily by the pipeline only when a
+/// [`crate::coordinator::StageObserver`] is installed.
+pub fn power_events(scores: &PowerOutcome) -> Vec<TraceEvent> {
+    let one = |label: &str, e: &EnergyEstimate| TraceEvent::PowerScored {
+        label: label.to_string(),
+        watts: e.watts,
+        joules: e.energy_j,
+        efficiency: e.efficiency,
+    };
+    let mut out = vec![one("all-CPU", &scores.baseline)];
+    out.extend(
+        scores.blocks.iter().filter_map(|b| b.gpu.as_ref().map(|e| one(&b.label, e))),
+    );
+    out
 }
 
 // ------------------------------------------------- arbitration residue

@@ -33,6 +33,7 @@ use crate::interp::{ExternalFn, Interp, Value};
 use crate::metrics::{measure, Measurement};
 use crate::parser::Program;
 use crate::runtime::Engine;
+use crate::telemetry::TraceEvent;
 use crate::transform::{self, glue, PlannedReplacement};
 
 /// Verification-run configuration.
@@ -159,6 +160,33 @@ pub struct SearchOutcome {
     pub best_time: Measurement,
     /// Speedup of the winning pattern over the baseline.
     pub best_speedup: f64,
+}
+
+/// Structured telemetry events of one Step-3 search: the all-CPU
+/// baseline measurement first (no device traffic by construction), then
+/// every tried pattern in plan order. Built lazily by the pipeline only
+/// when a [`crate::coordinator::StageObserver`] is installed.
+pub fn measurement_events(outcome: &SearchOutcome) -> Vec<TraceEvent> {
+    // Labels come from the pattern, not the measurement: a failed
+    // pattern's `time` is a baseline clone, but its *label* carries the
+    // failure text.
+    let one = |label: &str, m: &Measurement, traffic: &DeviceTraffic| {
+        TraceEvent::PatternMeasured {
+            label: label.to_string(),
+            reps: m.reps as u64,
+            median_ns: m.median.as_nanos() as u64,
+            min_ns: m.min.as_nanos() as u64,
+            max_ns: m.max.as_nanos() as u64,
+            bytes_in: traffic.bytes_in,
+            bytes_out: traffic.bytes_out,
+            dispatches: traffic.dispatches,
+            device_secs: traffic.device_secs,
+        }
+    };
+    let mut out =
+        vec![one(&outcome.baseline.label, &outcome.baseline, &DeviceTraffic::default())];
+    out.extend(outcome.tried.iter().map(|p| one(&p.label, &p.time, &p.traffic)));
+    out
 }
 
 /// Everything a [`PatternExecutor`] needs to measure patterns of one

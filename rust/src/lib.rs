@@ -26,6 +26,13 @@
 //!   pre-check that narrows candidates before the hours-long compile
 //!   (DESIGN.md "Backend arbitration").
 //!
+//! * **Telemetry** — the [`telemetry`] module makes the pipeline's own
+//!   behavior observable without changing it: per-request trace spans
+//!   and structured events (measurements, verdicts, cache probes) behind
+//!   the [`coordinator::StageObserver`] seam, a JSONL sink + Chrome
+//!   `trace_event` exporter, and a Prometheus-rendered metrics registry
+//!   the service exposes via `fbo serve --metrics-addr` / `fbo stats`.
+//!
 //! * **Staged pipeline API** — [`coordinator::pipeline`] is the public
 //!   shape of the flow: [`coordinator::Coordinator::request`] builds an
 //!   [`coordinator::OffloadRequest`] that advances through typed stage
@@ -52,6 +59,7 @@ pub mod patterndb;
 pub mod runtime;
 pub mod service;
 pub mod similarity;
+pub mod telemetry;
 pub mod transform;
 
 /// Crate-wide result type (anyhow-backed).

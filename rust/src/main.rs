@@ -8,6 +8,7 @@
 //! fbo flow      <file.c>                         Steps 1-7 incl. sizing/placement
 //! fbo batch     <files...> [--jobs N]            service pool + decision cache
 //! fbo serve     [--jobs N]                       long-running service on stdin
+//! fbo stats     [files...] [--format text|prom|json]  service counters
 //! fbo gen-apps  [--n 256] [--dir apps]           materialize evaluation apps
 //! fbo gen-db    [--out patterndb.json]           dump the built-in pattern DB
 //! fbo artifacts [--dir artifacts]                list loaded PJRT artifacts
@@ -19,14 +20,16 @@
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::process::ExitCode;
+use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use fbo::coordinator::{apps, flow, loop_offload, BackendPolicy, Coordinator, PowerPolicy, Stage};
 use fbo::ga::GaConfig;
 use fbo::metrics;
 use fbo::patterndb::PatternDb;
 use fbo::service::{MeasurePool, OffloadService, ServiceConfig};
+use fbo::telemetry::{MetricsServer, TraceObserver, TraceRecorder, DEFAULT_RING_CAPACITY};
 use fbo::transform::InterfacePolicy;
 use fbo::{analysis, parser, runtime};
 
@@ -82,6 +85,17 @@ impl Args {
 
 fn read_source(path: &str) -> Result<String> {
     std::fs::read_to_string(path).with_context(|| format!("reading {path}"))
+}
+
+/// `--trace-out FILE`: the JSONL trace sink shared by offload, stages,
+/// batch, and serve. The arg parser stores the sentinel "true" for a
+/// valueless flag; never mistake it for a file actually called "true".
+fn trace_out_path(args: &Args) -> Result<Option<PathBuf>> {
+    match args.flags.get("trace-out") {
+        Some(v) if v == "true" => bail!("--trace-out expects a file path"),
+        Some(v) => Ok(Some(PathBuf::from(v))),
+        None => Ok(None),
+    }
 }
 
 /// Build a coordinator from the shared CLI flags. With `verify_pool`
@@ -148,7 +162,18 @@ fn cmd_offload(args: &Args) -> Result<()> {
     let src = read_source(path)?;
     let entry = args.flag("entry", "main");
     let (c, _measure_pool) = coordinator_from(args, true)?;
-    let report = c.offload(&src, &entry)?;
+    let report = match trace_out_path(args)? {
+        Some(out) => {
+            let recorder = Arc::new(TraceRecorder::with_sink(DEFAULT_RING_CAPACITY, &out)?);
+            let obs = Arc::new(TraceObserver::begin(&recorder, &entry));
+            let result = c.request(&src, &entry).with_observer(obs.clone()).run();
+            obs.complete(false, result.is_ok());
+            recorder.flush()?;
+            eprintln!("trace: {} event(s) -> {}", recorder.records().len(), out.display());
+            result?
+        }
+        None => c.offload(&src, &entry)?,
+    };
     print!("{}", c.render_report(&report));
     if let Some(out) = args.flags.get("out") {
         std::fs::write(out, &report.transformed_source)?;
@@ -177,8 +202,23 @@ fn cmd_stages(args: &Args) -> Result<()> {
     let src = read_source(path)?;
     let entry = args.flag("entry", "main");
     let (c, _measure_pool) = coordinator_from(args, true)?;
-    let walls = std::sync::Arc::new(StageWalls::default());
-    let observer: std::sync::Arc<dyn fbo::coordinator::StageObserver> = walls.clone();
+    let walls = Arc::new(StageWalls::default());
+    // With --trace-out, the trace observer wraps the walls observer (it
+    // chains stage completions through), so the table and the trace see
+    // identical timings.
+    let trace = match trace_out_path(args)? {
+        Some(out) => {
+            let recorder = Arc::new(TraceRecorder::with_sink(DEFAULT_RING_CAPACITY, &out)?);
+            let obs =
+                Arc::new(TraceObserver::begin(&recorder, &entry).with_chain(walls.clone()));
+            Some((obs, recorder, out))
+        }
+        None => None,
+    };
+    let observer: Arc<dyn fbo::coordinator::StageObserver> = match &trace {
+        Some((obs, _, _)) => obs.clone(),
+        None => walls.clone(),
+    };
     let req = c.request(&src, &entry).with_observer(observer);
 
     let dump_dir = match args.flags.get("dump") {
@@ -273,6 +313,11 @@ fn cmd_stages(args: &Args) -> Result<()> {
         Ok(arbitrated)
     };
     let outcome = advance();
+    if let Some((obs, recorder, out)) = &trace {
+        obs.complete(false, outcome.is_ok());
+        recorder.flush()?;
+        eprintln!("trace: {} event(s) -> {}", recorder.records().len(), out.display());
+    }
 
     let walls = walls.0.lock().expect("stage walls lock");
     let mut table = metrics::Table::new(&["stage", "wall", "result"]);
@@ -432,6 +477,7 @@ fn service_from(args: &Args) -> Result<OffloadService> {
     cfg.backend_policy = BackendPolicy::parse(&args.flag("target", "auto"))?;
     cfg.power_policy = PowerPolicy::parse(&args.flag("power-policy", "perf"))?;
     cfg.verify_parallel = args.flag_usize("verify-parallel", 1)?;
+    cfg.telemetry.trace_out = trace_out_path(args)?;
     OffloadService::start(cfg)
 }
 
@@ -480,6 +526,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(dir) = service.cache().dir() {
         eprintln!("decision cache: {} ({} entries)", dir.display(), service.cache().len());
     }
+    // --metrics-addr HOST:PORT: live Prometheus exposition over the
+    // service's registry ("/metrics"). The handle is Send + Sync, so the
+    // accept loop reads counters while workers run.
+    let metrics_server = match args.flags.get("metrics-addr") {
+        Some(v) if v == "true" => bail!("--metrics-addr expects HOST:PORT"),
+        Some(addr) => {
+            let handle = service.metrics();
+            let server = MetricsServer::start(addr, move || handle.render_prometheus())?;
+            eprintln!("metrics: http://{}/metrics", server.addr());
+            Some(server)
+        }
+        None => None,
+    };
+    // --stats-every N: print a counters snapshot to stderr every N
+    // seconds while serving.
+    let stats_every = args.flag_usize("stats-every", 0)?;
+    let ticker = if stats_every > 0 {
+        let handle = service.metrics();
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let flag = stop.clone();
+        let period = std::time::Duration::from_secs(stats_every as u64);
+        let thread = std::thread::spawn(move || {
+            let mut last = std::time::Instant::now();
+            // Poll in short steps so shutdown never waits a full period.
+            while !flag.load(std::sync::atomic::Ordering::Relaxed) {
+                std::thread::sleep(std::time::Duration::from_millis(200));
+                if last.elapsed() >= period {
+                    last = std::time::Instant::now();
+                    eprintln!("{}", handle.snapshot().render());
+                }
+            }
+        });
+        Some((stop, thread))
+    } else {
+        None
+    };
     eprintln!(
         "serving offload requests from stdin, one per line: <file.c> [entry]  (Ctrl-D to stop)"
     );
@@ -522,14 +604,61 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     drop(done_tx); // EOF: let the printer drain and finish
-    let printed_failures = printer.join().unwrap_or_else(|_| {
-        eprintln!("fbo serve: printer thread panicked; some results were lost");
-        1
-    });
+    let printer_result = printer.join();
+    if let Some((stop, thread)) = ticker {
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        let _ = thread.join();
+    }
+    if let Some(server) = metrics_server {
+        server.stop();
+    }
+    // A printer panic means completed results were dropped on the floor:
+    // propagate it as a hard failure instead of undercounting failures.
+    let printed_failures = printer_result
+        .map_err(|_| anyhow!("serve printer thread panicked; completed results were dropped"))?;
     let failed = printed_failures + read_failures;
     println!("{}", service.stats().render());
     if failed > 0 {
         bail!("{failed} request(s) failed");
+    }
+    Ok(())
+}
+
+/// `fbo stats`: run an optional batch of files through a service, then
+/// print its counters in one of three formats. `text` is the multi-line
+/// human rendering, `prom` the Prometheus text exposition the
+/// `--metrics-addr` endpoint serves, `json` a canonical JSON document
+/// (`fbo-stats-v1`).
+fn cmd_stats(args: &Args) -> Result<()> {
+    let format = args.flag("format", "text");
+    if !matches!(format.as_str(), "text" | "prom" | "json") {
+        bail!("unknown --format {format:?} (text|prom|json)");
+    }
+    let entry = args.flag("entry", "main");
+    let service = service_from(args)?;
+    if !args.positional.is_empty() {
+        let jobs: Vec<(String, String)> = args
+            .positional
+            .iter()
+            .map(|p| Ok((read_source(p)?, entry.clone())))
+            .collect::<Result<_>>()?;
+        for (path, result) in args.positional.iter().zip(service.run_batch(&jobs)) {
+            match result {
+                Ok(done) => eprintln!(
+                    "{path}: {} on {}{}",
+                    metrics::fmt_speedup(done.report.best_speedup()),
+                    done.report.backend().as_str(),
+                    if done.from_cache { "  [cached decision]" } else { "" },
+                ),
+                Err(e) => eprintln!("{path}: error: {e:#}"),
+            }
+        }
+    }
+    let handle = service.metrics();
+    match format.as_str() {
+        "text" => println!("{}", handle.snapshot().render_full()),
+        "prom" => print!("{}", handle.render_prometheus()),
+        _ => println!("{}", handle.snapshot().to_json().to_string_pretty()),
     }
     Ok(())
 }
@@ -576,10 +705,11 @@ fn usage() -> &'static str {
        analyze   <file.c>                 Step 1-2 analysis report\n\
        offload   <file.c> [--entry main] [--artifacts DIR] [--policy approve|reject]\n\
                  [--target gpu|fpga|auto] [--power-policy perf|perf-per-watt|cap:<watts>]\n\
-                 [--reps N] [--verify-parallel N] [--out transformed.c]\n\
+                 [--reps N] [--verify-parallel N] [--trace-out FILE]\n\
+                 [--out transformed.c]\n\
        stages    <file.c> [--entry main] [--dump DIR] [--policy approve|reject]\n\
                  [--target gpu|fpga|auto] [--power-policy ...] [--reps N]\n\
-                 [--verify-parallel N]\n\
+                 [--verify-parallel N] [--trace-out FILE]\n\
                  run the pipeline stage by stage, printing a fixed-order\n\
                  per-stage table (--dump writes the JSON artifacts,\n\
                  including power_scored.json)\n\
@@ -589,15 +719,27 @@ fn usage() -> &'static str {
        batch     <file.c...> [--entry main] [--jobs N] [--artifacts DIR]\n\
                  [--cache DIR] [--no-cache-persist] [--reps N]\n\
                  [--target gpu|fpga|auto] [--power-policy ...] [--verify-parallel N]\n\
+                 [--trace-out FILE]\n\
                  offload many files through the service worker pool +\n\
                  persistent decision cache\n\
        serve     [--jobs N] [--artifacts DIR] [--cache DIR]\n\
                  [--target gpu|fpga|auto] [--power-policy ...] [--verify-parallel N]\n\
+                 [--trace-out FILE] [--metrics-addr HOST:PORT] [--stats-every N]\n\
                  long-running service; reads \"<file.c> [entry]\" lines\n\
-                 from stdin, prints one decision per line + stats on EOF\n\
+                 from stdin, prints one decision per line + stats on EOF;\n\
+                 --metrics-addr serves Prometheus metrics at /metrics and\n\
+                 --stats-every prints a counters snapshot every N seconds\n\
+       stats     [file.c...] [--format text|prom|json] [--jobs N] [--cache DIR] [...]\n\
+                 run an optional batch, then print the service counters\n\
+                 (text: human; prom: Prometheus exposition; json: fbo-stats-v1)\n\
        gen-apps  [--n 256] [--dir apps]\n\
        gen-db    [--out patterndb.json]\n\
        artifacts [--dir artifacts]\n\
+     \n\
+     --trace-out FILE writes one JSON object per telemetry event (trace\n\
+     spans, pattern measurements, arbitration verdicts, cache probes) to\n\
+     FILE. Tracing is passive: the decisions and reports of a traced run\n\
+     are byte-identical to an untraced one.\n\
      \n\
      --verify-parallel N measures up to N independent offload patterns of\n\
      one Step-3 search concurrently (N-1 sibling PJRT engines for\n\
@@ -631,6 +773,7 @@ fn main() -> ExitCode {
         "flow" => cmd_flow(&args),
         "batch" => cmd_batch(&args),
         "serve" => cmd_serve(&args),
+        "stats" => cmd_stats(&args),
         "gen-apps" => cmd_gen_apps(&args),
         "gen-db" => cmd_gen_db(&args),
         "artifacts" => cmd_artifacts(&args),

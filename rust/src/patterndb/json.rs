@@ -92,6 +92,16 @@ impl Json {
     pub fn num(v: impl Into<f64>) -> Json {
         Json::Num(v.into())
     }
+
+    /// Method form of [`to_string_pretty`].
+    pub fn to_string_pretty(&self) -> String {
+        to_string_pretty(self)
+    }
+
+    /// Method form of [`to_string_compact`].
+    pub fn to_string_compact(&self) -> String {
+        to_string_compact(self)
+    }
 }
 
 // ---------------------------------------------------------------- parsing
@@ -306,17 +316,59 @@ pub fn to_string_pretty(v: &Json) -> String {
     out
 }
 
+/// Serialize without any whitespace (stable ordering). One value fits on
+/// one line, which is what the telemetry JSONL sink needs: one record per
+/// line, canonical byte-for-byte across runs.
+pub fn to_string_compact(v: &Json) -> String {
+    let mut out = String::new();
+    write_compact(v, &mut out);
+    out
+}
+
+fn write_num(n: f64, out: &mut String) {
+    if n.fract() == 0.0 && n.abs() < 9e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{n}");
+    }
+}
+
+fn write_compact(v: &Json, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Num(n) => write_num(*n, out),
+        Json::Str(s) => write_string(s, out),
+        Json::Arr(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_compact(item, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(m) => {
+            out.push('{');
+            for (i, (k, val)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_string(k, out);
+                out.push(':');
+                write_compact(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
 fn write_value(v: &Json, indent: usize, out: &mut String) {
     match v {
         Json::Null => out.push_str("null"),
         Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-        Json::Num(n) => {
-            if n.fract() == 0.0 && n.abs() < 9e15 {
-                let _ = write!(out, "{}", *n as i64);
-            } else {
-                let _ = write!(out, "{n}");
-            }
-        }
+        Json::Num(n) => write_num(*n, out),
         Json::Str(s) => write_string(s, out),
         Json::Arr(items) => {
             if items.is_empty() {
@@ -435,6 +487,18 @@ mod tests {
         assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
         assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
         assert_ne!(fnv1a64(b"abc"), fnv1a64(b"abd"));
+    }
+
+    #[test]
+    fn compact_form_is_whitespace_free_and_round_trips() {
+        let v = parse(r#"{"z": 1, "a": [1.5, -0.25, true, null], "s": "x y"}"#).unwrap();
+        let compact = to_string_compact(&v);
+        // No structural whitespace (the only spaces live inside "x y").
+        assert_eq!(compact, r#"{"a":[1.5,-0.25,true,null],"s":"x y","z":1}"#);
+        assert_eq!(parse(&compact).unwrap(), v);
+        // Compact and pretty agree on number formatting.
+        assert_eq!(to_string_compact(&Json::Num(3.0)), "3");
+        assert_eq!(to_string_compact(&Json::Num(0.125)), "0.125");
     }
 
     #[test]

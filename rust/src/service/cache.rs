@@ -89,6 +89,20 @@ impl CacheKey {
     }
 }
 
+/// Monotonic traffic counters of one [`DecisionCache`] — the telemetry
+/// registry's `fbo_cache_*` series read them. Counting is the cache's
+/// only side effect of being observed; lookups and inserts behave
+/// identically with or without anyone reading these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    /// Total lookups served (hits + misses).
+    pub lookups: u64,
+    /// Lookups that found an entry.
+    pub hits: u64,
+    /// Entries stored (re-inserts of the same key included).
+    pub inserts: u64,
+}
+
 /// Thread-safe decision store: in-memory map + optional JSON-per-entry
 /// persistence directory. Values are `Arc<str>` so a warm hit hands out
 /// the serialized report with an O(1) clone instead of copying multi-KB
@@ -97,12 +111,22 @@ pub struct DecisionCache {
     dir: Option<PathBuf>,
     entries: Mutex<HashMap<CacheKey, Arc<str>>>,
     tmp_seq: AtomicU64,
+    lookups: AtomicU64,
+    hits: AtomicU64,
+    inserts: AtomicU64,
 }
 
 impl DecisionCache {
     /// A purely in-memory cache (tests, ephemeral runs).
     pub fn in_memory() -> Self {
-        DecisionCache { dir: None, entries: Mutex::new(HashMap::new()), tmp_seq: AtomicU64::new(0) }
+        DecisionCache {
+            dir: None,
+            entries: Mutex::new(HashMap::new()),
+            tmp_seq: AtomicU64::new(0),
+            lookups: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+        }
     }
 
     /// Open (creating if needed) a persistent cache directory and load
@@ -127,6 +151,9 @@ impl DecisionCache {
             dir: Some(dir.to_path_buf()),
             entries: Mutex::new(entries),
             tmp_seq: AtomicU64::new(0),
+            lookups: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
         })
     }
 
@@ -147,7 +174,21 @@ impl DecisionCache {
 
     /// Fetch the serialized report for a key, if present (O(1) `Arc` clone).
     pub fn lookup(&self, key: &CacheKey) -> Option<Arc<str>> {
-        self.entries.lock().expect("decision cache lock").get(key).cloned()
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        let found = self.entries.lock().expect("decision cache lock").get(key).cloned();
+        if found.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        found
+    }
+
+    /// Snapshot of the monotonic traffic counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            lookups: self.lookups.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+        }
     }
 
     /// Store a serialized decision under a key (persisting it if the cache
@@ -158,6 +199,7 @@ impl DecisionCache {
     /// updated first — a failed disk write degrades persistence, never
     /// in-process serving.
     pub fn insert(&self, key: &CacheKey, report_json: &str) -> Result<()> {
+        self.inserts.fetch_add(1, Ordering::Relaxed);
         self.entries
             .lock()
             .expect("decision cache lock")
@@ -269,8 +311,11 @@ mod tests {
         c.insert(&k, r#"{"x": 1}"#).unwrap();
         assert_eq!(&*c.lookup(&k).unwrap(), r#"{"x": 1}"#);
         assert_eq!(c.len(), 1);
+        // Traffic counters saw the miss, the hit, and the insert.
+        assert_eq!(c.stats(), CacheStats { lookups: 2, hits: 1, inserts: 1 });
         c.clear().unwrap();
         assert!(c.is_empty());
+        assert_eq!(c.stats().inserts, 1, "clear drops entries, not counters");
     }
 
     #[test]

@@ -43,6 +43,15 @@
 //!   decisions are byte-identical, and neither invalidates the other's
 //!   cache entries.
 //!
+//! The pool is fully instrumented by [`crate::telemetry`]: every job id
+//! doubles as a trace id (stage spans, pattern measurements, verdicts,
+//! cache probes, resume markers), every counter lives in a metrics
+//! registry, and [`MetricsHandle`] exposes Prometheus rendering plus
+//! stats snapshots from any thread. Telemetry is passive — the
+//! [`crate::telemetry::TelemetryConfig`] is excluded from every cache
+//! fingerprint, so traced and untraced runs replay each other's
+//! decisions byte-identically.
+//!
 //! Pipeline failures cross the service boundary as the structured
 //! [`crate::coordinator::OffloadError`], so callers can route on the
 //! failing stage:
@@ -77,6 +86,9 @@ pub mod cache;
 pub mod pool;
 pub mod verify_exec;
 
-pub use cache::{CacheKey, DecisionCache, DECISION_FORMAT};
-pub use pool::{CompletedJob, JobHandle, OffloadService, ServiceConfig, StageStat, StatsSnapshot};
+pub use cache::{CacheKey, CacheStats, DecisionCache, DECISION_FORMAT};
+pub use pool::{
+    CompletedJob, JobHandle, MetricsHandle, OffloadService, ServiceConfig, StageStat,
+    StatsSnapshot, WorkerStat,
+};
 pub use verify_exec::{MeasurePool, PooledExecutor};

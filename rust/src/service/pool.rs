@@ -36,13 +36,23 @@
 //! [`super::verify_exec`]). The executor choice is deliberately *not*
 //! part of any cache fingerprint — serial and pooled searches reduce to
 //! the same outcome, so their cached decisions are byte-identical.
+//!
+//! **Telemetry**: every job id doubles as its trace id on the service's
+//! [`TraceRecorder`] — stage spans, pattern measurements, power scores,
+//! arbitration verdicts, cache-tier probes, resume markers, and
+//! measurement fan-outs are recorded per job — and every counter behind
+//! [`StatsSnapshot`] lives in the service's metrics [`Registry`]
+//! (rendered by [`MetricsHandle::render_prometheus`]). Telemetry is
+//! strictly passive: [`TelemetryConfig`] is excluded from every cache
+//! fingerprint, so traced and untraced runs replay each other's
+//! decisions byte-identically.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -54,12 +64,15 @@ use crate::coordinator::{
 };
 use crate::fpga;
 use crate::metrics;
-use crate::patterndb::json::fnv1a64;
+use crate::patterndb::json::{fnv1a64, Json};
 use crate::patterndb::PatternDb;
+use crate::telemetry::{
+    Counter, Gauge, Histogram, Registry, TelemetryConfig, TraceEvent, TraceRecorder,
+};
 use crate::transform::InterfacePolicy;
 
 use super::cache::{CacheKey, DecisionCache};
-use super::verify_exec::{self, ExecStats, MeasureJob, MeasureTx, PooledExecutor};
+use super::verify_exec::{self, DispatchSink, ExecStats, MeasureJob, MeasureTx, PooledExecutor};
 
 /// Service construction parameters.
 #[derive(Clone)]
@@ -109,6 +122,11 @@ pub struct ServiceConfig {
     /// its outcome, so serial and pooled decisions replay each other
     /// byte-identically.
     pub verify_parallel: usize,
+    /// Trace/metrics settings (CLI `--trace-out`). Deliberately **not**
+    /// part of any cache fingerprint: telemetry observes runs, it never
+    /// decides them, so traced and untraced services replay each other's
+    /// cached decisions byte-identically.
+    pub telemetry: TelemetryConfig,
 }
 
 impl ServiceConfig {
@@ -128,6 +146,7 @@ impl ServiceConfig {
             power_policy: PowerPolicy::default(),
             power_model: PowerModel::builtin(),
             verify_parallel: 1,
+            telemetry: TelemetryConfig::default(),
         }
     }
 
@@ -286,47 +305,91 @@ impl WorkerQueue {
     }
 }
 
-/// Latency samples kept for the percentile counters: a sliding window so a
-/// long-running `serve` process stays O(1) in memory no matter how many
-/// jobs it has answered.
-const LATENCY_WINDOW: usize = 4096;
-
-#[derive(Default)]
-struct LatencyRing {
-    buf: Vec<u64>,
-    next: usize,
+/// Registry-backed service counters. Each handle is an `Arc` into the
+/// service's shared [`Registry`], so the same numbers feed `stats()`
+/// snapshots and the Prometheus exposition without double bookkeeping.
+/// Completion latency lives in a log-linear histogram — O(1) memory for a
+/// long-running `serve` process, and the percentile estimates no longer
+/// require cloning and sorting a sample window on every snapshot.
+struct Counters {
+    submitted: Arc<Counter>,
+    completed: Arc<Counter>,
+    failed: Arc<Counter>,
+    cache_hits: Arc<Counter>,
+    cache_misses: Arc<Counter>,
+    reconciled_hits: Arc<Counter>,
+    verified_hits: Arc<Counter>,
+    power_hits: Arc<Counter>,
+    dropped_results: Arc<Counter>,
+    queue_depth: Arc<Gauge>,
+    job_seconds: Arc<Histogram>,
 }
 
-impl LatencyRing {
-    fn record(&mut self, ns: u64) {
-        if self.buf.len() < LATENCY_WINDOW {
-            self.buf.push(ns);
-        } else {
-            self.buf[self.next] = ns; // overwrite the oldest sample
-            self.next = (self.next + 1) % LATENCY_WINDOW;
+impl Counters {
+    fn register(reg: &Registry) -> Counters {
+        let lookups = |result: &str, tier: &str| {
+            reg.counter(
+                "fbo_cache_lookups_total",
+                "Cache outcomes by tier: full-decision probes and per-stage resume hits.",
+                &[("result", result), ("tier", tier)],
+            )
+        };
+        Counters {
+            submitted: reg.counter("fbo_jobs_submitted_total", "Offload jobs accepted.", &[]),
+            completed: reg.counter(
+                "fbo_jobs_completed_total",
+                "Offload jobs completed successfully.",
+                &[],
+            ),
+            failed: reg.counter("fbo_jobs_failed_total", "Offload jobs failed.", &[]),
+            cache_hits: lookups("hit", "decision"),
+            cache_misses: lookups("miss", "decision"),
+            reconciled_hits: lookups("hit", "reconciled"),
+            verified_hits: lookups("hit", "verified"),
+            power_hits: lookups("hit", "power-scored"),
+            dropped_results: reg.counter(
+                "fbo_results_dropped_total",
+                "Completed results whose submitter stopped waiting.",
+                &[],
+            ),
+            queue_depth: reg.gauge(
+                "fbo_queue_depth",
+                "Decision jobs currently queued or running.",
+                &[],
+            ),
+            job_seconds: reg.histogram(
+                "fbo_job_seconds",
+                "Submit-to-completion latency of successful jobs.",
+                &[],
+            ),
         }
     }
 }
 
-#[derive(Default)]
-struct Counters {
-    submitted: AtomicU64,
-    completed: AtomicU64,
-    failed: AtomicU64,
-    cache_hits: AtomicU64,
-    cache_misses: AtomicU64,
-    reconciled_hits: AtomicU64,
-    verified_hits: AtomicU64,
-    power_hits: AtomicU64,
-    latencies_ns: Mutex<LatencyRing>,
-}
-
-/// Per-stage latency totals, fed by the pipeline's [`StageObserver`] hook
-/// from every worker.
-#[derive(Default)]
+/// Per-stage latency totals and histograms, fed by the pipeline's
+/// [`StageObserver`] hook from every worker.
 struct StageLatencies {
     total_ns: [AtomicU64; 7],
     count: [AtomicU64; 7],
+    /// `fbo_stage_seconds{stage=...}` histograms, index-aligned with
+    /// [`Stage::ALL`].
+    hists: Vec<Arc<Histogram>>,
+}
+
+impl StageLatencies {
+    fn register(reg: &Registry) -> StageLatencies {
+        let hists = Stage::ALL
+            .iter()
+            .map(|s| {
+                reg.histogram(
+                    "fbo_stage_seconds",
+                    "Wall-clock seconds spent in each pipeline stage.",
+                    &[("stage", s.as_str())],
+                )
+            })
+            .collect();
+        StageLatencies { total_ns: Default::default(), count: Default::default(), hists }
+    }
 }
 
 impl StageObserver for StageLatencies {
@@ -334,7 +397,40 @@ impl StageObserver for StageLatencies {
         let i = stage.index();
         self.total_ns[i].fetch_add(wall.as_nanos() as u64, Ordering::Relaxed);
         self.count[i].fetch_add(1, Ordering::Relaxed);
+        self.hists[i].record(wall);
     }
+}
+
+/// Per-job observer installed for every pipeline run: forwards stage
+/// completions to the service-wide latency counters and mirrors every
+/// span and structured event onto the trace recorder under the job's
+/// trace id (a job's id *is* its trace id).
+struct JobObserver {
+    trace: u64,
+    recorder: Arc<TraceRecorder>,
+    latencies: Arc<StageLatencies>,
+}
+
+impl StageObserver for JobObserver {
+    fn stage_completed(&self, stage: Stage, wall: Duration) {
+        self.latencies.stage_completed(stage, wall);
+        self.recorder.record(
+            self.trace,
+            TraceEvent::StageCompleted { stage, wall_ns: wall.as_nanos() as u64 },
+        );
+    }
+
+    fn stage_event(&self, event: &TraceEvent) {
+        self.recorder.record(self.trace, event.clone());
+    }
+}
+
+/// Per-worker utilization counters behind the
+/// `fbo_worker_utilization_ratio{worker=...}` gauges.
+struct WorkerTelemetry {
+    jobs: AtomicU64,
+    busy_ns: AtomicU64,
+    util: Arc<Gauge>,
 }
 
 struct Shared {
@@ -352,6 +448,19 @@ struct Shared {
     /// Parallel-vs-serial pattern-measurement counters, shared by every
     /// worker's pooled executor.
     measure_stats: Arc<ExecStats>,
+    /// Trace recorder every job's spans and events land on (ring buffer,
+    /// plus the JSONL sink when `--trace-out` is configured).
+    recorder: Arc<TraceRecorder>,
+    /// Metrics registry behind [`Counters`]/[`StageLatencies`]; rendered
+    /// by [`MetricsHandle::render_prometheus`].
+    registry: Arc<Registry>,
+    /// Per-worker busy/job counters, index-aligned with the worker pool.
+    workers_tm: Vec<WorkerTelemetry>,
+    /// `fbo_cache_entries`, refreshed on every exposition/snapshot.
+    cache_entries_gauge: Arc<Gauge>,
+    /// `fbo_uptime_seconds`, refreshed on every exposition/snapshot.
+    uptime_gauge: Arc<Gauge>,
+    started: Instant,
 }
 
 /// The four cache-key fingerprints, one per cached pipeline prefix. Each
@@ -499,19 +608,100 @@ fn artifacts_fingerprint(dir: &Path) -> String {
 }
 
 impl Shared {
-    fn record_outcome(&self, result: &Result<CompletedJob>) {
+    /// Count a finished job and close its trace with a
+    /// `request-completed` event.
+    fn record_completion(&self, id: u64, result: &Result<CompletedJob>) {
         match result {
             Ok(done) => {
-                self.counters.completed.fetch_add(1, Ordering::Relaxed);
-                self.counters
-                    .latencies_ns
-                    .lock()
-                    .expect("latency lock")
-                    .record(done.wall.as_nanos() as u64);
+                self.counters.completed.inc();
+                self.counters.job_seconds.record(done.wall);
+                self.recorder.record(
+                    id,
+                    TraceEvent::RequestCompleted { from_cache: done.from_cache, ok: true },
+                );
             }
             Err(_) => {
-                self.counters.failed.fetch_add(1, Ordering::Relaxed);
+                self.counters.failed.inc();
+                self.recorder
+                    .record(id, TraceEvent::RequestCompleted { from_cache: false, ok: false });
             }
+        }
+    }
+
+    /// Charge `busy` wall-clock (and, for decision jobs, one job) to a
+    /// worker's utilization counters.
+    fn note_worker_busy(&self, index: usize, busy: Duration, decision: bool) {
+        if let Some(w) = self.workers_tm.get(index) {
+            w.busy_ns.fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
+            if decision {
+                w.jobs.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Recompute the sampled gauges (cache size, uptime, worker
+    /// utilization) so an exposition or snapshot reads current values.
+    fn refresh_gauges(&self) {
+        self.cache_entries_gauge.set(self.cache.len() as f64);
+        let uptime = self.started.elapsed().as_secs_f64();
+        self.uptime_gauge.set(uptime);
+        for w in &self.workers_tm {
+            let busy = Duration::from_nanos(w.busy_ns.load(Ordering::Relaxed)).as_secs_f64();
+            w.util.set(busy / uptime.max(1e-9));
+        }
+    }
+
+    /// Point-in-time counters; backs both [`OffloadService::stats`] and
+    /// [`MetricsHandle::snapshot`].
+    fn snapshot(&self) -> StatsSnapshot {
+        let c = &self.counters;
+        let lat = &self.latencies;
+        let stages = Stage::ALL
+            .iter()
+            .map(|s| {
+                let i = s.index();
+                StageStat {
+                    stage: s.as_str(),
+                    count: lat.count[i].load(Ordering::Relaxed),
+                    total: Duration::from_nanos(lat.total_ns[i].load(Ordering::Relaxed)),
+                    p50: lat.hists[i].quantile(0.5),
+                    p95: lat.hists[i].quantile(0.95),
+                }
+            })
+            .collect();
+        let uptime = self.started.elapsed();
+        let workers = self
+            .workers_tm
+            .iter()
+            .enumerate()
+            .map(|(i, w)| {
+                let busy = Duration::from_nanos(w.busy_ns.load(Ordering::Relaxed));
+                WorkerStat {
+                    worker: i,
+                    jobs: w.jobs.load(Ordering::Relaxed),
+                    busy,
+                    utilization: busy.as_secs_f64() / uptime.as_secs_f64().max(1e-9),
+                }
+            })
+            .collect();
+        StatsSnapshot {
+            submitted: c.submitted.get(),
+            completed: c.completed.get(),
+            failed: c.failed.get(),
+            cache_hits: c.cache_hits.get(),
+            cache_misses: c.cache_misses.get(),
+            reconciled_replays: c.reconciled_hits.get(),
+            verified_replays: c.verified_hits.get(),
+            power_replays: c.power_hits.get(),
+            cache_entries: self.cache.len() as u64,
+            patterns_parallel: self.measure_stats.fanned_out.load(Ordering::Relaxed),
+            patterns_serial: self.measure_stats.local.load(Ordering::Relaxed),
+            dropped_results: c.dropped_results.get(),
+            queue_depth: c.queue_depth.get().max(0.0) as u64,
+            latency_p50: c.job_seconds.quantile(0.5),
+            latency_p95: c.job_seconds.quantile(0.95),
+            stages,
+            workers,
         }
     }
 
@@ -526,10 +716,15 @@ impl Shared {
         entry: &str,
         started: Instant,
     ) -> Option<CompletedJob> {
-        let bytes: Arc<str> = self.cache.lookup(key)?;
+        let bytes = self.cache.lookup(key);
+        self.recorder.record(
+            id,
+            TraceEvent::CacheProbe { tier: "decision".to_string(), hit: bytes.is_some() },
+        );
+        let bytes: Arc<str> = bytes?;
         match report_json::report_from_str(&bytes) {
             Ok(report) => {
-                self.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
+                self.counters.cache_hits.inc();
                 Some(CompletedJob {
                     id,
                     key: key.clone(),
@@ -554,8 +749,17 @@ impl Shared {
     /// Per-stage cache probe: `None` means "recompute the stage" — either
     /// a genuine miss or an undecodable entry (a damaged stage file costs
     /// one recomputation, which overwrites it, never fails the key).
-    fn try_stage<T>(&self, key: &CacheKey, decode: fn(&str) -> Result<T>, what: &str) -> Option<T> {
-        let bytes = self.cache.lookup(key)?;
+    fn try_stage<T>(
+        &self,
+        trace: u64,
+        key: &CacheKey,
+        decode: fn(&str) -> Result<T>,
+        what: &str,
+    ) -> Option<T> {
+        let bytes = self.cache.lookup(key);
+        self.recorder
+            .record(trace, TraceEvent::CacheProbe { tier: what.to_string(), hit: bytes.is_some() });
+        let bytes = bytes?;
         match decode(&bytes) {
             Ok(artifact) => Some(artifact),
             Err(e) => {
@@ -577,8 +781,10 @@ impl Shared {
     }
 }
 
-/// Point-in-time service counters. Latency percentiles are computed over
-/// a sliding window of the most recent 4096 completed jobs.
+/// Point-in-time service counters. Latency percentiles are estimated
+/// from the service's log-linear histograms (nearest-rank on bucket
+/// upper bounds: at most one sub-bucket of error, ≤ 25% relative),
+/// which keeps a long-running `serve` process O(1) in memory.
 #[derive(Debug, Clone)]
 pub struct StatsSnapshot {
     /// Jobs accepted.
@@ -612,13 +818,21 @@ pub struct StatsSnapshot {
     /// Pattern measurements run inline on the verifying worker's own
     /// engine (every measurement, when `verify_parallel` is 1).
     pub patterns_serial: u64,
-    /// Median completion latency over the sliding window.
+    /// Completed results whose submitter dropped the [`JobHandle`]
+    /// before the worker replied.
+    pub dropped_results: u64,
+    /// Decision jobs currently queued or running.
+    pub queue_depth: u64,
+    /// Median completion latency (histogram estimate).
     pub latency_p50: Option<Duration>,
-    /// 95th-percentile completion latency over the sliding window.
+    /// 95th-percentile completion latency (histogram estimate).
     pub latency_p95: Option<Duration>,
     /// Per-stage latency totals across every pipeline stage the service
     /// ran (replayed stages don't re-run, so they don't count here).
     pub stages: Vec<StageStat>,
+    /// Per-worker job counts and utilization, index-aligned with the
+    /// worker pool.
+    pub workers: Vec<WorkerStat>,
 }
 
 /// Aggregate latency of one pipeline stage across a service's lifetime.
@@ -630,6 +844,23 @@ pub struct StageStat {
     pub count: u64,
     /// Total wall-clock spent in the stage.
     pub total: Duration,
+    /// Median stage latency (histogram estimate).
+    pub p50: Option<Duration>,
+    /// 95th-percentile stage latency (histogram estimate).
+    pub p95: Option<Duration>,
+}
+
+/// One worker's share of the service's load.
+#[derive(Debug, Clone)]
+pub struct WorkerStat {
+    /// Worker index (thread `fbo-worker-{worker}`).
+    pub worker: usize,
+    /// Decision jobs this worker ran.
+    pub jobs: u64,
+    /// Wall-clock spent on jobs (decision + measurement sub-jobs).
+    pub busy: Duration,
+    /// `busy` over service uptime.
+    pub utilization: f64,
 }
 
 impl StatsSnapshot {
@@ -677,7 +908,101 @@ impl StatsSnapshot {
         if !ran.is_empty() {
             line.push_str(&format!(" | stage mean: {}", ran.join(", ")));
         }
+        if self.queue_depth > 0 || self.dropped_results > 0 {
+            line.push_str(&format!(
+                " | queue depth {}, {} dropped results",
+                self.queue_depth, self.dropped_results
+            ));
+        }
         line
+    }
+
+    /// Multi-line human rendering (CLI `stats --format text`): the
+    /// one-line summary plus per-stage percentiles and per-worker
+    /// utilization.
+    pub fn render_full(&self) -> String {
+        let fmt =
+            |d: Option<Duration>| d.map(metrics::fmt_duration).unwrap_or_else(|| "-".to_string());
+        let mut out = self.render();
+        for s in self.stages.iter().filter(|s| s.count > 0) {
+            out.push_str(&format!(
+                "\n  stage {:<11} {:>4} runs, total {}, p50 {}, p95 {}",
+                s.stage,
+                s.count,
+                metrics::fmt_duration(s.total),
+                fmt(s.p50),
+                fmt(s.p95),
+            ));
+        }
+        for w in &self.workers {
+            out.push_str(&format!(
+                "\n  worker {} {} jobs, busy {}, utilization {:.1}%",
+                w.worker,
+                w.jobs,
+                metrics::fmt_duration(w.busy),
+                w.utilization * 100.0,
+            ));
+        }
+        out
+    }
+
+    /// Canonical JSON rendering (CLI `stats --format json`), format tag
+    /// `fbo-stats-v1`.
+    pub fn to_json(&self) -> Json {
+        let count = |n: u64| Json::num(n as f64);
+        let dur = |d: Duration| Json::num(d.as_secs_f64());
+        let opt_dur = |d: Option<Duration>| d.map(dur).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("format", Json::str("fbo-stats-v1")),
+            ("submitted", count(self.submitted)),
+            ("completed", count(self.completed)),
+            ("failed", count(self.failed)),
+            ("cache_hits", count(self.cache_hits)),
+            ("cache_misses", count(self.cache_misses)),
+            ("reconciled_replays", count(self.reconciled_replays)),
+            ("verified_replays", count(self.verified_replays)),
+            ("power_replays", count(self.power_replays)),
+            ("cache_entries", count(self.cache_entries)),
+            ("patterns_parallel", count(self.patterns_parallel)),
+            ("patterns_serial", count(self.patterns_serial)),
+            ("dropped_results", count(self.dropped_results)),
+            ("queue_depth", count(self.queue_depth)),
+            ("latency_p50_secs", opt_dur(self.latency_p50)),
+            ("latency_p95_secs", opt_dur(self.latency_p95)),
+            (
+                "stages",
+                Json::Arr(
+                    self.stages
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("stage", Json::str(s.stage)),
+                                ("count", count(s.count)),
+                                ("total_secs", dur(s.total)),
+                                ("p50_secs", opt_dur(s.p50)),
+                                ("p95_secs", opt_dur(s.p95)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "workers",
+                Json::Arr(
+                    self.workers
+                        .iter()
+                        .map(|w| {
+                            Json::obj(vec![
+                                ("worker", count(w.worker as u64)),
+                                ("jobs", count(w.jobs)),
+                                ("busy_secs", dur(w.busy)),
+                                ("utilization", Json::num(w.utilization)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
     }
 }
 
@@ -702,13 +1027,44 @@ impl OffloadService {
             Some(dir) => DecisionCache::open(&dir)?,
             None => DecisionCache::in_memory(),
         };
+        let registry = Arc::new(Registry::new());
+        let recorder = Arc::new(match &cfg.telemetry.trace_out {
+            Some(path) => TraceRecorder::with_sink(cfg.telemetry.ring_capacity, path)
+                .context("opening trace sink")?,
+            None => TraceRecorder::new(cfg.telemetry.ring_capacity),
+        });
+        let workers_tm = (0..cfg.workers)
+            .map(|i| WorkerTelemetry {
+                jobs: AtomicU64::new(0),
+                busy_ns: AtomicU64::new(0),
+                util: registry.gauge(
+                    "fbo_worker_utilization_ratio",
+                    "Fraction of service uptime each worker spent on jobs.",
+                    &[("worker", &i.to_string())],
+                ),
+            })
+            .collect();
         let shared = Arc::new(Shared {
             cache,
             fingerprints: stage_fingerprints(&cfg),
             persist_power_tier: !power_is_default(&cfg),
-            counters: Counters::default(),
-            latencies: Arc::new(StageLatencies::default()),
+            counters: Counters::register(&registry),
+            latencies: Arc::new(StageLatencies::register(&registry)),
             measure_stats: Arc::new(ExecStats::default()),
+            recorder,
+            workers_tm,
+            cache_entries_gauge: registry.gauge(
+                "fbo_cache_entries",
+                "Cache entries held (full decisions plus stage artifacts).",
+                &[],
+            ),
+            uptime_gauge: registry.gauge(
+                "fbo_uptime_seconds",
+                "Seconds since the service started.",
+                &[],
+            ),
+            registry,
+            started: Instant::now(),
         });
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let nworkers = cfg.workers;
@@ -764,7 +1120,10 @@ impl OffloadService {
     /// source) resolves the handle without touching the queue.
     pub fn submit(&self, src: &str, entry: &str) -> JobHandle {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.shared.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        self.shared.counters.submitted.inc();
+        // The request-started event fires before key computation so even
+        // unparseable submissions leave a complete trace.
+        self.shared.recorder.record(id, TraceEvent::RequestStarted { entry: entry.to_string() });
         let started = Instant::now();
 
         let key = match CacheKey::compute(src, entry, &self.shared.fingerprints.decision) {
@@ -803,7 +1162,10 @@ impl OffloadService {
             reply: reply_tx,
         };
         match txs[shard].send(WorkerMsg::Decision(job)) {
-            Ok(()) => JobHandle { id, state: HandleState::Pending(reply_rx) },
+            Ok(()) => {
+                self.shared.counters.queue_depth.add(1.0);
+                JobHandle { id, state: HandleState::Pending(reply_rx) }
+            }
             Err(_) => self.ready_handle(id, Err(anyhow!("offload service is shut down"))),
         }
     }
@@ -821,36 +1183,20 @@ impl OffloadService {
 
     /// Current counters (jobs, cache traffic, latency percentiles).
     pub fn stats(&self) -> StatsSnapshot {
-        let c = &self.shared.counters;
-        let durations: Vec<Duration> = {
-            let ring = c.latencies_ns.lock().expect("latency lock");
-            ring.buf.iter().map(|&n| Duration::from_nanos(n)).collect()
-        };
-        let lat = &self.shared.latencies;
-        let stages = Stage::ALL
-            .iter()
-            .map(|s| StageStat {
-                stage: s.as_str(),
-                count: lat.count[s.index()].load(Ordering::Relaxed),
-                total: Duration::from_nanos(lat.total_ns[s.index()].load(Ordering::Relaxed)),
-            })
-            .collect();
-        StatsSnapshot {
-            submitted: c.submitted.load(Ordering::Relaxed),
-            completed: c.completed.load(Ordering::Relaxed),
-            failed: c.failed.load(Ordering::Relaxed),
-            cache_hits: c.cache_hits.load(Ordering::Relaxed),
-            cache_misses: c.cache_misses.load(Ordering::Relaxed),
-            reconciled_replays: c.reconciled_hits.load(Ordering::Relaxed),
-            verified_replays: c.verified_hits.load(Ordering::Relaxed),
-            power_replays: c.power_hits.load(Ordering::Relaxed),
-            cache_entries: self.shared.cache.len() as u64,
-            patterns_parallel: self.shared.measure_stats.fanned_out.load(Ordering::Relaxed),
-            patterns_serial: self.shared.measure_stats.local.load(Ordering::Relaxed),
-            latency_p50: metrics::percentile(&durations, 50.0),
-            latency_p95: metrics::percentile(&durations, 95.0),
-            stages,
-        }
+        self.shared.snapshot()
+    }
+
+    /// A `Send + Sync` view of this service's telemetry: Prometheus
+    /// rendering for a scrape endpoint and stats snapshots for periodic
+    /// printers. The handle keeps the shared state alive, so it stays
+    /// valid across (and after) the service's own shutdown.
+    pub fn metrics(&self) -> MetricsHandle {
+        MetricsHandle { shared: self.shared.clone() }
+    }
+
+    /// The trace recorder every job's spans and events land on.
+    pub fn recorder(&self) -> &Arc<TraceRecorder> {
+        &self.shared.recorder
     }
 
     /// The decision cache (benches clear it to measure cold starts).
@@ -870,7 +1216,7 @@ impl OffloadService {
     }
 
     fn ready_handle(&self, id: u64, result: Result<CompletedJob>) -> JobHandle {
-        self.shared.record_outcome(&result);
+        self.shared.record_completion(id, &result);
         JobHandle { id, state: HandleState::Ready(result) }
     }
 
@@ -887,6 +1233,35 @@ impl OffloadService {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        // Workers are gone; flush whatever the trace sink still buffers.
+        if let Err(e) = self.shared.recorder.flush() {
+            eprintln!("fbo service: failed to flush trace sink: {e:#}");
+        }
+    }
+}
+
+/// Cloneable, thread-safe view of a running service's telemetry.
+///
+/// [`OffloadService`] itself is deliberately not `Sync` (each worker owns
+/// a thread-bound engine); this handle carries only the `Send + Sync`
+/// shared state, so the metrics HTTP endpoint and the periodic stats
+/// printer can read from other threads while the service runs.
+#[derive(Clone)]
+pub struct MetricsHandle {
+    shared: Arc<Shared>,
+}
+
+impl MetricsHandle {
+    /// Render the Prometheus text exposition (version 0.0.4), refreshing
+    /// the sampled gauges first.
+    pub fn render_prometheus(&self) -> String {
+        self.shared.refresh_gauges();
+        self.shared.registry.render()
+    }
+
+    /// Point-in-time counters — same data as [`OffloadService::stats`].
+    pub fn snapshot(&self) -> StatsSnapshot {
+        self.shared.snapshot()
     }
 }
 
@@ -908,6 +1283,9 @@ fn worker_main(
     // executor, which services measurement sub-jobs while it waits on
     // siblings mid-verify.
     let queue = Rc::new(RefCell::new(WorkerQueue::new(rx)));
+    // Names the trace of the decision job this worker is currently
+    // running (0 = idle), so the executor's fan-out events land on it.
+    let current_trace = Rc::new(Cell::new(0u64));
     // Built on this thread, never crosses it (PJRT state is not Send).
     let coordinator = match Coordinator::open(&cfg.artifacts) {
         Ok(mut c) => {
@@ -938,6 +1316,10 @@ fn worker_main(
                 cfg.verify_parallel.max(1),
                 Some(queue.clone()),
                 shared.measure_stats.clone(),
+                Some(DispatchSink {
+                    recorder: shared.recorder.clone(),
+                    trace: current_trace.clone(),
+                }),
             )));
             c.db = cfg.db;
             let _ = ready.send(Ok(()));
@@ -958,12 +1340,21 @@ fn worker_main(
             // arm only keeps the match exhaustive.
             None | Some(WorkerMsg::Shutdown) => break,
             Some(WorkerMsg::Measure(job)) => {
+                let t0 = Instant::now();
                 verify_exec::run_measure_job(&coordinator.engine, job);
+                shared.note_worker_busy(index, t0.elapsed(), false);
             }
             Some(WorkerMsg::Decision(job)) => {
+                shared.counters.queue_depth.add(-1.0);
+                let t0 = Instant::now();
+                current_trace.set(job.id);
                 let result = run_job(&coordinator, &shared, &job);
-                shared.record_outcome(&result);
-                let _ = job.reply.send(result);
+                current_trace.set(0);
+                shared.note_worker_busy(index, t0.elapsed(), true);
+                shared.record_completion(job.id, &result);
+                if job.reply.send(result).is_err() {
+                    shared.counters.dropped_results.inc();
+                }
             }
         }
     }
@@ -975,9 +1366,13 @@ fn run_job(c: &Coordinator, shared: &Shared, job: &Job) -> Result<CompletedJob> 
     if let Some(done) = shared.try_cached(job.id, &job.key, &job.entry, job.submitted_at) {
         return Ok(done);
     }
-    shared.counters.cache_misses.fetch_add(1, Ordering::Relaxed);
+    shared.counters.cache_misses.inc();
 
-    let observer: Arc<dyn StageObserver> = shared.latencies.clone();
+    let observer: Arc<dyn StageObserver> = Arc::new(JobObserver {
+        trace: job.id,
+        recorder: shared.recorder.clone(),
+        latencies: shared.latencies.clone(),
+    });
     let req = c.request(&job.src, &job.entry).with_observer(observer);
 
     // Resume from the deepest valid per-stage entry. The stage keys share
@@ -993,20 +1388,21 @@ fn run_job(c: &Coordinator, shared: &Shared, job: &Job) -> Result<CompletedJob> 
     // Obtain the Verified artifact: replay the deepest valid stage entry
     // or run the missing prefix (persisting what it produced).
     let resume_verified = |resumed_from: &mut Option<Stage>| -> Result<Verified> {
-        match shared.try_stage(&verified_key, Verified::from_json_str, "verified") {
+        match shared.try_stage(job.id, &verified_key, Verified::from_json_str, "verified") {
             Some(v) => {
-                shared.counters.verified_hits.fetch_add(1, Ordering::Relaxed);
+                shared.counters.verified_hits.inc();
                 *resumed_from = Some(Stage::Verify);
                 Ok(v)
             }
             None => {
                 let reconciled = match shared.try_stage(
+                    job.id,
                     &reconciled_key,
                     Reconciled::from_json_str,
                     "reconciled",
                 ) {
                     Some(r) => {
-                        shared.counters.reconciled_hits.fetch_add(1, Ordering::Relaxed);
+                        shared.counters.reconciled_hits.inc();
                         *resumed_from = Some(Stage::Reconcile);
                         r
                     }
@@ -1029,9 +1425,9 @@ fn run_job(c: &Coordinator, shared: &Shared, job: &Job) -> Result<CompletedJob> 
     // pre-power cost) instead of materializing a throwaway PowerScored.
     let report = if shared.persist_power_tier {
         let scored =
-            match shared.try_stage(&power_key, PowerScored::from_json_str, "power-scored") {
+            match shared.try_stage(job.id, &power_key, PowerScored::from_json_str, "power-scored") {
                 Some(p) => {
-                    shared.counters.power_hits.fetch_add(1, Ordering::Relaxed);
+                    shared.counters.power_hits.inc();
                     resumed_from = Some(Stage::PowerScore);
                     p
                 }
@@ -1051,6 +1447,9 @@ fn run_job(c: &Coordinator, shared: &Shared, job: &Job) -> Result<CompletedJob> 
     // the cache (and is reported), but must not fail the job.
     if let Err(e) = shared.cache.insert(&job.key, &report_json) {
         eprintln!("fbo service: failed to persist decision {}: {e:#}", job.key.file_stem());
+    }
+    if let Some(stage) = resumed_from {
+        shared.recorder.record(job.id, TraceEvent::Resumed { from: stage });
     }
     Ok(CompletedJob {
         id: job.id,
@@ -1123,19 +1522,32 @@ mod tests {
             cache_entries: 0,
             patterns_parallel: 0,
             patterns_serial: 0,
+            dropped_results: 0,
+            queue_depth: 0,
             latency_p50: None,
             latency_p95: None,
             stages: Vec::new(),
+            workers: Vec::new(),
         };
         let line = s.render();
         assert!(line.contains("0 submitted"));
         assert!(line.contains("p50 -"));
         assert!(!line.contains("stage"), "idle services render no stage segments: {line}");
         assert!(!line.contains("verify patterns"), "{line}");
+        assert!(!line.contains("queue depth"), "{line}");
+        assert_eq!(s.render_full(), line, "nothing ran, nothing to expand");
         let mut busy = s;
         busy.patterns_parallel = 4;
         busy.patterns_serial = 2;
-        assert!(busy.render().contains("verify patterns: 4 parallel, 2 serial"));
+        busy.queue_depth = 3;
+        busy.dropped_results = 1;
+        let line = busy.render();
+        assert!(line.contains("verify patterns: 4 parallel, 2 serial"));
+        assert!(line.contains("queue depth 3, 1 dropped results"));
+        let json = busy.to_json().to_string_compact();
+        assert!(json.contains("\"format\":\"fbo-stats-v1\""), "{json}");
+        assert!(json.contains("\"queue_depth\":3"), "{json}");
+        assert!(json.contains("\"latency_p50_secs\":null"), "{json}");
     }
 
     #[test]
@@ -1151,6 +1563,23 @@ mod tests {
         let fp = stage_fingerprints(&pooled);
         assert_eq!(fp.discovery, base.discovery);
         assert_eq!(fp.verify, base.verify);
+        assert_eq!(fp.decision, base.decision);
+    }
+
+    #[test]
+    fn telemetry_config_never_touches_the_fingerprints() {
+        // Telemetry observes runs, it never decides them: a traced
+        // service must replay untraced decisions byte-identically (and
+        // vice versa), so no fingerprint may fold the telemetry config in.
+        let cfg = ServiceConfig::new("some/artifacts");
+        let base = stage_fingerprints(&cfg);
+        let mut traced = cfg.clone();
+        traced.telemetry.trace_out = Some(PathBuf::from("/tmp/offload.trace.jsonl"));
+        traced.telemetry.ring_capacity = 7;
+        let fp = stage_fingerprints(&traced);
+        assert_eq!(fp.discovery, base.discovery);
+        assert_eq!(fp.verify, base.verify);
+        assert_eq!(fp.power, base.power);
         assert_eq!(fp.decision, base.decision);
     }
 

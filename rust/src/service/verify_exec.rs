@@ -32,7 +32,7 @@
 //! disappears without replying (service shutdown mid-search), the reply
 //! channel disconnects and the remaining patterns are measured locally.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
@@ -47,6 +47,7 @@ use crate::coordinator::verify::{self, MeasuredPattern, PatternSpec, VerifyConte
 use crate::coordinator::{PatternExecutor, VerifyConfig};
 use crate::parser::Program;
 use crate::runtime::Engine;
+use crate::telemetry::{TraceEvent, TraceRecorder};
 use crate::transform::PlannedReplacement;
 
 /// One pattern-measurement sub-job shipped to a sibling worker. The
@@ -137,6 +138,24 @@ pub(crate) struct ExecStats {
     pub(crate) local: AtomicU64,
 }
 
+/// Telemetry tap of one decision worker's executor: a shared cell names
+/// the trace the worker is currently running a job for (0 = none), and
+/// every measurement batch records one fan-out event under it. Strictly
+/// passive — it observes how the batch was dealt, never changes it.
+pub(crate) struct DispatchSink {
+    pub(crate) recorder: Arc<TraceRecorder>,
+    pub(crate) trace: Rc<Cell<u64>>,
+}
+
+impl DispatchSink {
+    fn record(&self, fanned: u64, local: u64) {
+        let trace = self.trace.get();
+        if trace != 0 {
+            self.recorder.record(trace, TraceEvent::MeasureDispatch { fanned, local });
+        }
+    }
+}
+
 /// A [`PatternExecutor`] that fans independent pattern measurements out
 /// across sibling engines, keeping the requesting thread's engine busy
 /// with its own share. Built by the service pool (one per decision
@@ -151,6 +170,8 @@ pub struct PooledExecutor {
     /// mutually-fanning workers cannot deadlock. `None` outside the pool.
     queue: Option<Rc<RefCell<super::pool::WorkerQueue>>>,
     stats: Arc<ExecStats>,
+    /// Trace tap for fan-out events. `None` outside the service pool.
+    sink: Option<DispatchSink>,
 }
 
 impl PooledExecutor {
@@ -160,8 +181,9 @@ impl PooledExecutor {
         max_inflight: usize,
         queue: Option<Rc<RefCell<super::pool::WorkerQueue>>>,
         stats: Arc<ExecStats>,
+        sink: Option<DispatchSink>,
     ) -> PooledExecutor {
-        PooledExecutor { engine, siblings, max_inflight, queue, stats }
+        PooledExecutor { engine, siblings, max_inflight, queue, stats, sink }
     }
 
     /// Patterns measured concurrently at most (the local engine plus the
@@ -193,6 +215,9 @@ impl PatternExecutor for PooledExecutor {
         let width = self.width();
         if n <= 1 || width <= 1 {
             self.stats.local.fetch_add(n as u64, Ordering::Relaxed);
+            if let Some(s) = &self.sink {
+                s.record(0, n as u64);
+            }
             return specs.iter().map(|s| self.measure_local(ctx, s)).collect();
         }
 
@@ -231,6 +256,7 @@ impl PatternExecutor for PooledExecutor {
         drop(reply_tx);
         self.stats.fanned_out.fetch_add(outstanding as u64, Ordering::Relaxed);
         self.stats.local.fetch_add((n - outstanding) as u64, Ordering::Relaxed);
+        let mut fanned = outstanding as u64;
 
         let mut results: Vec<Option<Result<MeasuredPattern>>> =
             specs.iter().map(|_| None).collect();
@@ -293,8 +319,12 @@ impl PatternExecutor for PooledExecutor {
                     *slot = Some(self.measure_local(ctx, &specs[i]));
                     self.stats.fanned_out.fetch_sub(1, Ordering::Relaxed);
                     self.stats.local.fetch_add(1, Ordering::Relaxed);
+                    fanned -= 1;
                 }
             }
+        }
+        if let Some(s) = &self.sink {
+            s.record(fanned, n as u64 - fanned);
         }
         results.into_iter().map(|r| r.expect("every planned pattern has a result")).collect()
     }
@@ -366,6 +396,7 @@ impl MeasurePool {
             max_inflight,
             None,
             Arc::new(ExecStats::default()),
+            None,
         )
     }
 

@@ -1,0 +1,143 @@
+//! Live exposition: a minimal HTTP server for the Prometheus text format.
+//!
+//! `fbo serve --metrics-addr HOST:PORT` starts one [`MetricsServer`] next
+//! to the worker pool; every `GET /metrics` (or `/`) renders the service
+//! registry on demand. No external HTTP crate — the exposition format
+//! needs exactly one response shape, so a hand-rolled request loop keeps
+//! the build offline (DESIGN.md "Substitutions").
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+/// A background thread serving Prometheus text exposition over HTTP/1.1.
+///
+/// The listener is non-blocking and polled, so [`MetricsServer::stop`]
+/// (and `Drop`) shut it down within one poll interval without needing a
+/// wake-up connection.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9090`, port 0 for ephemeral) and
+    /// serve `render()` on every scrape.
+    pub fn start(
+        addr: &str,
+        render: impl Fn() -> String + Send + 'static,
+    ) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding metrics listener on {addr}"))?;
+        let local = listener.local_addr().context("reading metrics listener address")?;
+        listener.set_nonblocking(true).context("metrics listener nonblocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = stop.clone();
+        let handle = thread::Builder::new()
+            .name("fbo-metrics".to_string())
+            .spawn(move || {
+                while !stop_flag.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((conn, _)) => handle_conn(conn, &render),
+                        Err(_) => thread::sleep(Duration::from_millis(25)),
+                    }
+                }
+            })
+            .context("spawning metrics server thread")?;
+        Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the server and join its thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_conn(mut conn: TcpStream, render: &(impl Fn() -> String + Send + 'static)) {
+    // Accepted sockets can inherit the listener's non-blocking mode on
+    // some platforms; force blocking with a bounded read timeout.
+    let _ = conn.set_nonblocking(false);
+    let _ = conn.set_read_timeout(Some(Duration::from_secs(2)));
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 1024];
+    loop {
+        match conn.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 8192 {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let request = String::from_utf8_lossy(&buf);
+    let path = request.split_whitespace().nth(1).unwrap_or("");
+    let (status, body) = if path == "/metrics" || path == "/" {
+        ("200 OK", render())
+    } else {
+        ("404 Not Found", "not found\n".to_string())
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\n\
+         Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = conn.write_all(response.as_bytes());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scrape(addr: SocketAddr, path: &str) -> String {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        write!(conn, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        let _ = conn.read_to_string(&mut out);
+        out
+    }
+
+    #[test]
+    fn serves_metrics_and_404s_everything_else() {
+        let server =
+            MetricsServer::start("127.0.0.1:0", || "fbo_up 1\n".to_string()).unwrap();
+        let ok = scrape(server.addr(), "/metrics");
+        assert!(ok.starts_with("HTTP/1.1 200 OK"), "{ok}");
+        assert!(ok.contains("text/plain; version=0.0.4"), "{ok}");
+        assert!(ok.contains("fbo_up 1"), "{ok}");
+        let root = scrape(server.addr(), "/");
+        assert!(root.contains("fbo_up 1"), "{root}");
+        let missing = scrape(server.addr(), "/nope");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+        server.stop();
+    }
+}

@@ -1,0 +1,402 @@
+//! Metrics registry: counters, gauges, log-linear histograms, and
+//! Prometheus text exposition (format 0.0.4).
+//!
+//! The service pool registers its counters here instead of hand-rolling
+//! them: per-stage and end-to-end latencies land in [`Histogram`]s (fixed
+//! memory, lock-free recording — replacing the clone-and-sort percentile
+//! path for service snapshots), cache probes land in labeled counter
+//! families, and `fbo serve --metrics-addr` / `fbo stats --format prom`
+//! render the whole registry with [`Registry::render`].
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time gauge (an `f64` that can move both ways).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// Set the value.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    /// Add a (possibly negative) delta.
+    pub fn add(&self, delta: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + delta).to_bits();
+            match self.0.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
+    }
+}
+
+/// Bucket upper bounds: octaves of 2 from 1 µs-ish (2¹⁰ ns) to ≈4.6 min
+/// (2³⁸ ns), each octave split into 4 linear sub-buckets. Strictly
+/// increasing; an implicit overflow (`+Inf`) bucket catches the rest.
+fn bucket_bounds() -> Vec<u64> {
+    let mut bounds = vec![1u64 << 10];
+    for octave in 10..38 {
+        let base = 1u64 << octave;
+        for step in 1..=4u64 {
+            bounds.push(base + (base / 4) * step);
+        }
+    }
+    bounds
+}
+
+/// Log-linear latency histogram over nanosecond samples.
+///
+/// Recording is lock-free and O(log buckets); memory is fixed (113
+/// bounds + overflow) regardless of sample count — this is what backs
+/// the service latency percentiles instead of cloning and sorting the
+/// full sample vector on every snapshot. Quantiles are read from the
+/// bucket upper bound, so their error is at most one sub-bucket (≤ 25%
+/// relative — plenty for operational p50/p95, not for benchmarking;
+/// bench-side code keeps exact [`crate::metrics::percentile`]).
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<u64>,
+    counts: Vec<AtomicU64>,
+    sum_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram with the standard latency bounds.
+    pub fn new() -> Histogram {
+        let bounds = bucket_bounds();
+        let counts = (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect();
+        Histogram { bounds, counts, sum_ns: AtomicU64::new(0) }
+    }
+
+    /// Record one duration.
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    /// Record one nanosecond sample.
+    pub fn record_ns(&self, ns: u64) {
+        let idx = self.bounds.partition_point(|&b| b < ns);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of all recorded samples.
+    pub fn sum(&self) -> Duration {
+        Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed))
+    }
+
+    /// Nearest-rank quantile (`q` in 0..=1), read from the bucket upper
+    /// bound. `None` when nothing was recorded. Overflow samples report
+    /// the largest finite bound.
+    pub fn quantile(&self, q: f64) -> Option<Duration> {
+        let total = self.count();
+        if total == 0 {
+            return None;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            if cum >= rank {
+                let bound = self.bounds.get(i).or_else(|| self.bounds.last());
+                return bound.map(|&ns| Duration::from_nanos(ns));
+            }
+        }
+        None
+    }
+
+    /// `(upper_bound_ns, cumulative_count)` per non-empty bucket, in
+    /// order; `None` bound marks the overflow (`+Inf`) bucket.
+    pub fn cumulative(&self) -> Vec<(Option<u64>, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            let n = c.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
+            }
+            cum += n;
+            out.push((self.bounds.get(i).copied(), cum));
+        }
+        out
+    }
+}
+
+#[derive(Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+struct Family {
+    help: String,
+    kind: &'static str,
+    metrics: BTreeMap<String, Metric>,
+}
+
+/// A registry of metric families, each a set of label-distinguished
+/// series. Registration is idempotent: asking for the same
+/// (name, labels) again returns the existing handle, so every part of
+/// the service can `counter(...)` its way to a shared series.
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+fn render_labels(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let mut sorted: Vec<&(&str, &str)> = labels.iter().collect();
+    sorted.sort();
+    let parts: Vec<String> = sorted.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+    format!("{{{}}}", parts.join(","))
+}
+
+fn with_le(labels: &str, le: &str) -> String {
+    if labels.is_empty() {
+        format!("{{le=\"{le}\"}}")
+    } else {
+        format!("{},le=\"{le}\"}}", &labels[..labels.len() - 1])
+    }
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn slot(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Metric,
+    ) -> Metric {
+        let mut families = self.families.lock().unwrap();
+        let family = families.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind: "",
+            metrics: BTreeMap::new(),
+        });
+        let metric =
+            family.metrics.entry(render_labels(labels)).or_insert_with(make).clone();
+        if family.kind.is_empty() {
+            family.kind = metric.kind();
+        }
+        assert_eq!(
+            family.kind,
+            metric.kind(),
+            "metric family {name:?} registered with conflicting kinds"
+        );
+        metric
+    }
+
+    /// Get or create a counter series. Panics if `name` already holds a
+    /// family of a different kind.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        match self.slot(name, help, labels, || Metric::Counter(Arc::new(Counter::default()))) {
+            Metric::Counter(c) => c,
+            _ => unreachable!("kind checked in slot"),
+        }
+    }
+
+    /// Get or create a gauge series. Panics if `name` already holds a
+    /// family of a different kind.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        match self.slot(name, help, labels, || Metric::Gauge(Arc::new(Gauge::default()))) {
+            Metric::Gauge(g) => g,
+            _ => unreachable!("kind checked in slot"),
+        }
+    }
+
+    /// Get or create a histogram series. Panics if `name` already holds
+    /// a family of a different kind.
+    pub fn histogram(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+        match self.slot(name, help, labels, || Metric::Histogram(Arc::new(Histogram::new()))) {
+            Metric::Histogram(h) => h,
+            _ => unreachable!("kind checked in slot"),
+        }
+    }
+
+    /// Render every family in the Prometheus text exposition format
+    /// (0.0.4). Histogram `le` bounds and sums are in **seconds**, per
+    /// convention; only non-empty buckets are emitted (plus `+Inf`).
+    pub fn render(&self) -> String {
+        let families = self.families.lock().unwrap();
+        let mut out = String::new();
+        for (name, fam) in families.iter() {
+            let _ = writeln!(out, "# HELP {name} {}", fam.help);
+            let _ = writeln!(out, "# TYPE {name} {}", fam.kind);
+            for (labels, metric) in &fam.metrics {
+                match metric {
+                    Metric::Counter(c) => {
+                        let _ = writeln!(out, "{name}{labels} {}", c.get());
+                    }
+                    Metric::Gauge(g) => {
+                        let _ = writeln!(out, "{name}{labels} {}", g.get());
+                    }
+                    Metric::Histogram(h) => {
+                        for (bound, cum) in h.cumulative() {
+                            if let Some(ns) = bound {
+                                let le = format!("{}", ns as f64 / 1e9);
+                                let _ =
+                                    writeln!(out, "{name}_bucket{} {cum}", with_le(labels, &le));
+                            }
+                        }
+                        let total = h.count();
+                        let _ =
+                            writeln!(out, "{name}_bucket{} {total}", with_le(labels, "+Inf"));
+                        let _ = writeln!(
+                            out,
+                            "{name}_sum{labels} {}",
+                            h.sum().as_nanos() as f64 / 1e9
+                        );
+                        let _ = writeln!(out, "{name}_count{labels} {total}");
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::default();
+        assert_eq!(g.get(), 0.0);
+        g.set(2.5);
+        g.add(-1.0);
+        assert!((g.get() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_bounds_are_strictly_increasing() {
+        let bounds = bucket_bounds();
+        assert_eq!(bounds.len(), 113);
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(bounds[0], 1024);
+        assert_eq!(*bounds.last().unwrap(), 1u64 << 38);
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_the_samples() {
+        let h = Histogram::new();
+        assert!(h.quantile(0.5).is_none(), "empty histogram has no quantiles");
+        for ms in [1u64, 2, 3, 4, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), Duration::from_millis(110));
+        let p50 = h.quantile(0.5).unwrap();
+        // The true median is 3 ms; the bucketed answer must be within one
+        // sub-bucket (25%) above it and never below the sample.
+        assert!(p50 >= Duration::from_millis(3), "p50 {p50:?}");
+        assert!(p50 <= Duration::from_micros(3_750), "p50 {p50:?}");
+        let p95 = h.quantile(0.95).unwrap();
+        assert!(p95 >= Duration::from_millis(100), "p95 {p95:?}");
+        assert!(p95 <= Duration::from_millis(125), "p95 {p95:?}");
+        // Overflow samples clamp to the largest finite bound.
+        h.record(Duration::from_secs(3600));
+        assert_eq!(h.quantile(1.0).unwrap(), Duration::from_nanos(1 << 38));
+    }
+
+    #[test]
+    fn registry_is_idempotent_and_shares_series() {
+        let r = Registry::new();
+        let a = r.counter("fbo_jobs_total", "jobs", &[]);
+        let b = r.counter("fbo_jobs_total", "jobs", &[]);
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2, "same (name, labels) is the same series");
+        let hit = r.counter("fbo_cache_total", "probes", &[("result", "hit")]);
+        let miss = r.counter("fbo_cache_total", "probes", &[("result", "miss")]);
+        hit.inc();
+        assert_eq!(miss.get(), 0, "distinct labels are distinct series");
+    }
+
+    #[test]
+    fn render_emits_prometheus_text_format() {
+        let r = Registry::new();
+        r.counter("fbo_jobs_total", "Jobs completed.", &[]).add(3);
+        r.gauge("fbo_queue_depth", "Queue depth.", &[]).set(2.0);
+        let h = r.histogram("fbo_job_seconds", "Job latency.", &[("stage", "verify")]);
+        h.record(Duration::from_millis(2));
+        let text = r.render();
+        assert!(text.contains("# HELP fbo_jobs_total Jobs completed."), "{text}");
+        assert!(text.contains("# TYPE fbo_jobs_total counter"), "{text}");
+        assert!(text.contains("fbo_jobs_total 3"), "{text}");
+        assert!(text.contains("fbo_queue_depth 2"), "{text}");
+        assert!(text.contains("# TYPE fbo_job_seconds histogram"), "{text}");
+        assert!(text.contains("fbo_job_seconds_bucket{stage=\"verify\",le=\""), "{text}");
+        assert!(text.contains("fbo_job_seconds_bucket{stage=\"verify\",le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("fbo_job_seconds_count{stage=\"verify\"} 1"), "{text}");
+        // Labels render sorted by key, so series names are canonical.
+        assert_eq!(render_labels(&[("tier", "decision"), ("result", "hit")]),
+            "{result=\"hit\",tier=\"decision\"}");
+    }
+}

@@ -1,0 +1,64 @@
+//! End-to-end offload **telemetry**: trace spans, a metrics registry,
+//! and live service exposition.
+//!
+//! The paper's method is measurement-driven end to end — Step 3 times
+//! every candidate pattern, Step 3b arbitrates on measured seconds, and
+//! Step 6 performs operational verification before handing the offloaded
+//! app over (arXiv:2005.04174; the function-block proposal
+//! arXiv:2004.09883 makes the operational check explicit). This module
+//! is the substrate that makes the pipeline's *own* behavior observable
+//! the same way:
+//!
+//! * [`trace`] — every `OffloadRequest` gets a **trace id**, every stage
+//!   a **span**, and structured instant events record each pattern
+//!   measurement, power score, arbitration verdict, cache-tier probe,
+//!   stage resume, and measurement fan-out. The [`TraceRecorder`] keeps a
+//!   bounded ring, mirrors records to a JSONL sink (`--trace-out FILE`),
+//!   and exports Chrome `trace_event` JSON for `chrome://tracing` /
+//!   Perfetto.
+//! * [`metrics`] — counters, gauges, and log-linear [`Histogram`]s with
+//!   Prometheus text exposition; the service pool registers its job,
+//!   cache-tier, queue-depth, worker-utilization, and per-stage latency
+//!   series here.
+//! * [`export`] — the `fbo serve --metrics-addr HOST:PORT` scrape
+//!   endpoint.
+//!
+//! **Passivity invariant**: telemetry observes, it never decides. A
+//! traced run's decisions, transformed source, and report JSON are
+//! byte-identical to an untraced run, and [`TelemetryConfig`] is
+//! deliberately excluded from every cache fingerprint (like
+//! `verify_parallel`: it changes how the run is *watched*, never what it
+//! computes). Tests and the `telemetry_trace` bench gate assert this.
+
+pub mod export;
+pub mod metrics;
+pub mod trace;
+
+use std::path::PathBuf;
+
+pub use export::MetricsServer;
+pub use metrics::{Counter, Gauge, Histogram, Registry};
+pub use trace::{TraceEvent, TraceObserver, TraceRecord, TraceRecorder};
+
+/// Default [`TraceRecorder`] ring capacity (records kept in memory).
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// Telemetry settings on a service config.
+///
+/// Strictly passive: this struct is excluded from every cache
+/// fingerprint, so toggling tracing never invalidates (or forks) cached
+/// decisions — asserted by the service pool's fingerprint tests.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TelemetryConfig {
+    /// JSONL sink every trace record is mirrored to (`--trace-out`);
+    /// `None` keeps records in the in-memory ring only.
+    pub trace_out: Option<PathBuf>,
+    /// Ring-buffer capacity of the service's [`TraceRecorder`].
+    pub ring_capacity: usize,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { trace_out: None, ring_capacity: DEFAULT_RING_CAPACITY }
+    }
+}

@@ -1,0 +1,664 @@
+//! Trace model and recorder: structured events, spans, and exporters.
+//!
+//! Every pipeline run is a **trace** (one id per `OffloadRequest` /
+//! service job); every completed stage is a **span** (a
+//! [`TraceEvent::StageCompleted`] record carrying the stage wall-clock);
+//! everything else the pipeline decides — pattern measurements, power
+//! scores, arbitration verdicts, cache probes, stage resumes, measurement
+//! fan-out — is an instant event. Records are kept in a bounded ring
+//! buffer, optionally mirrored line-by-line to a JSONL sink
+//! (`--trace-out`), and exported to the Chrome `trace_event` format so a
+//! run opens directly in `chrome://tracing` / Perfetto.
+//!
+//! The JSONL codec is canonical: objects serialize with sorted keys and
+//! no whitespace ([`crate::patterndb::json::to_string_compact`]), so a
+//! record round-trips byte-identically — the golden fixture under
+//! `tests/fixtures/` pins the schema.
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{Stage, StageObserver};
+use crate::patterndb::json::{self, Json};
+
+/// One structured telemetry event. The `"event"` JSON field is the
+/// discriminator; every variant serializes flat (no nesting) so lines
+/// stay grep-able and schema-stable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// A pipeline run began for `entry`.
+    RequestStarted {
+        /// Entry-point function name of the request.
+        entry: String,
+    },
+    /// One pipeline stage completed: a span of `wall_ns` ending at the
+    /// record's `ts_ns`.
+    StageCompleted {
+        /// Which stage completed.
+        stage: Stage,
+        /// Stage wall-clock in nanoseconds.
+        wall_ns: u64,
+    },
+    /// Step 3 measured one candidate pattern (the baseline included).
+    PatternMeasured {
+        /// Pattern label (`all-CPU`, `only:<site>`, `combined-winners`).
+        label: String,
+        /// Repetitions measured.
+        reps: u64,
+        /// Median wall-clock across reps (ns).
+        median_ns: u64,
+        /// Fastest rep (ns).
+        min_ns: u64,
+        /// Slowest rep (ns).
+        max_ns: u64,
+        /// Bytes staged to the device per run.
+        bytes_in: u64,
+        /// Bytes read back from the device per run.
+        bytes_out: u64,
+        /// Device dispatches per run.
+        dispatches: u64,
+        /// Seconds spent on the device per run.
+        device_secs: f64,
+    },
+    /// The power stage scored one pattern (or the all-CPU baseline).
+    PowerScored {
+        /// Pattern label (`all-CPU` for the baseline row).
+        label: String,
+        /// Average modeled draw across the run (W).
+        watts: f64,
+        /// Modeled energy per run (J).
+        joules: f64,
+        /// Energy-efficiency ratio vs the all-CPU baseline.
+        efficiency: f64,
+    },
+    /// Step-3b arbitration decided one block.
+    ArbitrationVerdict {
+        /// Site label of the block.
+        label: String,
+        /// Winning backend name (`cpu`, `gpu`, `fpga`).
+        winner: String,
+        /// Closest losing backend (`none` when nothing competed).
+        loser: String,
+        /// Seconds between the loser's and winner's candidate times
+        /// (0 when the two are not directly comparable).
+        margin_secs: f64,
+        /// Backend policy the arbitration ran under.
+        policy: String,
+    },
+    /// The service probed one cache tier for a job.
+    CacheProbe {
+        /// Tier name: `decision`, `verified`, `reconciled`, or
+        /// `power-scored`.
+        tier: String,
+        /// Whether the probe hit.
+        hit: bool,
+    },
+    /// A job resumed from a cached stage artifact: every stage up to and
+    /// including `from` was skipped, so the trace carries spans only for
+    /// the re-run stages.
+    Resumed {
+        /// Deepest cached stage the job resumed from.
+        from: Stage,
+    },
+    /// The pooled verify executor dealt one measurement batch.
+    MeasureDispatch {
+        /// Measurements fanned out to idle sibling engines.
+        fanned: u64,
+        /// Measurements run on the local engine.
+        local: u64,
+    },
+    /// A pipeline run finished.
+    RequestCompleted {
+        /// Whether the result came from the decision cache.
+        from_cache: bool,
+        /// Whether the run succeeded.
+        ok: bool,
+    },
+}
+
+impl TraceEvent {
+    /// Canonical event name — the JSONL `"event"` discriminator.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEvent::RequestStarted { .. } => "request-started",
+            TraceEvent::StageCompleted { .. } => "stage",
+            TraceEvent::PatternMeasured { .. } => "pattern",
+            TraceEvent::PowerScored { .. } => "power",
+            TraceEvent::ArbitrationVerdict { .. } => "verdict",
+            TraceEvent::CacheProbe { .. } => "cache",
+            TraceEvent::Resumed { .. } => "resumed",
+            TraceEvent::MeasureDispatch { .. } => "dispatch",
+            TraceEvent::RequestCompleted { .. } => "request-completed",
+        }
+    }
+}
+
+/// One recorded telemetry event: the event payload plus the common
+/// envelope every record carries (trace id, per-recorder sequence number,
+/// nanoseconds since the recorder's epoch).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    /// Trace (request/job) id the event belongs to.
+    pub trace: u64,
+    /// Monotonic sequence number across the whole recorder.
+    pub seq: u64,
+    /// Nanoseconds since the recorder was created.
+    pub ts_ns: u64,
+    /// The event payload.
+    pub event: TraceEvent,
+}
+
+fn as_bool(v: &Json) -> Result<bool> {
+    match v {
+        Json::Bool(b) => Ok(*b),
+        other => bail!("expected JSON bool, got {other:?}"),
+    }
+}
+
+fn get_u64(v: &Json, key: &str) -> Result<u64> {
+    Ok(v.get(key)?.as_f64()? as u64)
+}
+
+fn get_f64(v: &Json, key: &str) -> Result<f64> {
+    v.get(key)?.as_f64()
+}
+
+fn get_str(v: &Json, key: &str) -> Result<String> {
+    Ok(v.get(key)?.as_str()?.to_string())
+}
+
+fn get_bool(v: &Json, key: &str) -> Result<bool> {
+    as_bool(v.get(key)?)
+}
+
+impl TraceRecord {
+    /// Serialize to the canonical (flat) JSON value.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("event", Json::str(self.event.name())),
+            ("trace", Json::num(self.trace as f64)),
+            ("seq", Json::num(self.seq as f64)),
+            ("ts_ns", Json::num(self.ts_ns as f64)),
+        ];
+        match &self.event {
+            TraceEvent::RequestStarted { entry } => {
+                pairs.push(("entry", Json::str(entry)));
+            }
+            TraceEvent::StageCompleted { stage, wall_ns } => {
+                pairs.push(("stage", Json::str(stage.as_str())));
+                pairs.push(("wall_ns", Json::num(*wall_ns as f64)));
+            }
+            TraceEvent::PatternMeasured {
+                label,
+                reps,
+                median_ns,
+                min_ns,
+                max_ns,
+                bytes_in,
+                bytes_out,
+                dispatches,
+                device_secs,
+            } => {
+                pairs.push(("label", Json::str(label)));
+                pairs.push(("reps", Json::num(*reps as f64)));
+                pairs.push(("median_ns", Json::num(*median_ns as f64)));
+                pairs.push(("min_ns", Json::num(*min_ns as f64)));
+                pairs.push(("max_ns", Json::num(*max_ns as f64)));
+                pairs.push(("bytes_in", Json::num(*bytes_in as f64)));
+                pairs.push(("bytes_out", Json::num(*bytes_out as f64)));
+                pairs.push(("dispatches", Json::num(*dispatches as f64)));
+                pairs.push(("device_secs", Json::num(*device_secs)));
+            }
+            TraceEvent::PowerScored { label, watts, joules, efficiency } => {
+                pairs.push(("label", Json::str(label)));
+                pairs.push(("watts", Json::num(*watts)));
+                pairs.push(("joules", Json::num(*joules)));
+                pairs.push(("efficiency", Json::num(*efficiency)));
+            }
+            TraceEvent::ArbitrationVerdict { label, winner, loser, margin_secs, policy } => {
+                pairs.push(("label", Json::str(label)));
+                pairs.push(("winner", Json::str(winner)));
+                pairs.push(("loser", Json::str(loser)));
+                pairs.push(("margin_secs", Json::num(*margin_secs)));
+                pairs.push(("policy", Json::str(policy)));
+            }
+            TraceEvent::CacheProbe { tier, hit } => {
+                pairs.push(("tier", Json::str(tier)));
+                pairs.push(("hit", Json::Bool(*hit)));
+            }
+            TraceEvent::Resumed { from } => {
+                pairs.push(("from", Json::str(from.as_str())));
+            }
+            TraceEvent::MeasureDispatch { fanned, local } => {
+                pairs.push(("fanned", Json::num(*fanned as f64)));
+                pairs.push(("local", Json::num(*local as f64)));
+            }
+            TraceEvent::RequestCompleted { from_cache, ok } => {
+                pairs.push(("from_cache", Json::Bool(*from_cache)));
+                pairs.push(("ok", Json::Bool(*ok)));
+            }
+        }
+        Json::obj(pairs)
+    }
+
+    /// Decode from a JSON value (inverse of [`TraceRecord::to_json`]).
+    pub fn from_json(v: &Json) -> Result<TraceRecord> {
+        let name = v.get("event")?.as_str()?.to_string();
+        let event = match name.as_str() {
+            "request-started" => TraceEvent::RequestStarted { entry: get_str(v, "entry")? },
+            "stage" => TraceEvent::StageCompleted {
+                stage: Stage::parse(v.get("stage")?.as_str()?)?,
+                wall_ns: get_u64(v, "wall_ns")?,
+            },
+            "pattern" => TraceEvent::PatternMeasured {
+                label: get_str(v, "label")?,
+                reps: get_u64(v, "reps")?,
+                median_ns: get_u64(v, "median_ns")?,
+                min_ns: get_u64(v, "min_ns")?,
+                max_ns: get_u64(v, "max_ns")?,
+                bytes_in: get_u64(v, "bytes_in")?,
+                bytes_out: get_u64(v, "bytes_out")?,
+                dispatches: get_u64(v, "dispatches")?,
+                device_secs: get_f64(v, "device_secs")?,
+            },
+            "power" => TraceEvent::PowerScored {
+                label: get_str(v, "label")?,
+                watts: get_f64(v, "watts")?,
+                joules: get_f64(v, "joules")?,
+                efficiency: get_f64(v, "efficiency")?,
+            },
+            "verdict" => TraceEvent::ArbitrationVerdict {
+                label: get_str(v, "label")?,
+                winner: get_str(v, "winner")?,
+                loser: get_str(v, "loser")?,
+                margin_secs: get_f64(v, "margin_secs")?,
+                policy: get_str(v, "policy")?,
+            },
+            "cache" => TraceEvent::CacheProbe {
+                tier: get_str(v, "tier")?,
+                hit: get_bool(v, "hit")?,
+            },
+            "resumed" => TraceEvent::Resumed { from: Stage::parse(v.get("from")?.as_str()?)? },
+            "dispatch" => TraceEvent::MeasureDispatch {
+                fanned: get_u64(v, "fanned")?,
+                local: get_u64(v, "local")?,
+            },
+            "request-completed" => TraceEvent::RequestCompleted {
+                from_cache: get_bool(v, "from_cache")?,
+                ok: get_bool(v, "ok")?,
+            },
+            other => bail!("unknown trace event {other:?}"),
+        };
+        Ok(TraceRecord {
+            trace: get_u64(v, "trace")?,
+            seq: get_u64(v, "seq")?,
+            ts_ns: get_u64(v, "ts_ns")?,
+            event,
+        })
+    }
+
+    /// Serialize to one canonical JSONL line (no trailing newline).
+    pub fn to_jsonl_line(&self) -> String {
+        json::to_string_compact(&self.to_json())
+    }
+
+    /// Decode one JSONL line (inverse of [`TraceRecord::to_jsonl_line`]).
+    pub fn from_jsonl_line(line: &str) -> Result<TraceRecord> {
+        Self::from_json(&json::parse(line.trim_end())?)
+    }
+}
+
+struct RecorderState {
+    ring: VecDeque<TraceRecord>,
+    seq: u64,
+    dropped: u64,
+    sink: Option<BufWriter<File>>,
+    sink_errors: u64,
+}
+
+/// Bounded, thread-safe telemetry recorder: a ring buffer of the most
+/// recent records, an optional JSONL sink every record is mirrored to,
+/// and a Chrome `trace_event` exporter.
+///
+/// Recording never fails and never blocks the pipeline on I/O errors —
+/// sink failures are counted ([`TraceRecorder::sink_errors`]) and
+/// otherwise ignored. Telemetry must stay strictly passive.
+pub struct TraceRecorder {
+    capacity: usize,
+    epoch: Instant,
+    state: Mutex<RecorderState>,
+    next_trace: AtomicU64,
+}
+
+impl TraceRecorder {
+    /// In-memory recorder keeping at most `capacity` records (clamped to
+    /// at least 1).
+    pub fn new(capacity: usize) -> TraceRecorder {
+        TraceRecorder {
+            capacity: capacity.max(1),
+            epoch: Instant::now(),
+            state: Mutex::new(RecorderState {
+                ring: VecDeque::new(),
+                seq: 0,
+                dropped: 0,
+                sink: None,
+                sink_errors: 0,
+            }),
+            next_trace: AtomicU64::new(0),
+        }
+    }
+
+    /// Recorder that additionally appends every record as one JSONL line
+    /// to `path` (truncating any previous file).
+    pub fn with_sink(capacity: usize, path: &Path) -> Result<TraceRecorder> {
+        let file = File::create(path)
+            .with_context(|| format!("creating trace sink {}", path.display()))?;
+        let recorder = TraceRecorder::new(capacity);
+        recorder.state.lock().unwrap().sink = Some(BufWriter::new(file));
+        Ok(recorder)
+    }
+
+    /// Allocate the next trace id (ids start at 1).
+    pub fn begin_trace(&self) -> u64 {
+        self.next_trace.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Record one event under `trace`, stamping the sequence number and
+    /// timestamp. Infallible by contract.
+    pub fn record(&self, trace: u64, event: TraceEvent) {
+        let ts_ns = self.epoch.elapsed().as_nanos() as u64;
+        let mut st = self.state.lock().unwrap();
+        st.seq += 1;
+        let rec = TraceRecord { trace, seq: st.seq, ts_ns, event };
+        if let Some(sink) = &mut st.sink {
+            if writeln!(sink, "{}", rec.to_jsonl_line()).is_err() {
+                st.sink_errors += 1;
+            }
+        }
+        st.ring.push_back(rec);
+        if st.ring.len() > self.capacity {
+            st.ring.pop_front();
+            st.dropped += 1;
+        }
+    }
+
+    /// Snapshot of the retained records, oldest first.
+    pub fn records(&self) -> Vec<TraceRecord> {
+        self.state.lock().unwrap().ring.iter().cloned().collect()
+    }
+
+    /// Number of retained records.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().ring.len()
+    }
+
+    /// True when nothing was recorded (or everything was evicted).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Records evicted from the ring because the capacity was exceeded
+    /// (the JSONL sink, when present, still has them).
+    pub fn dropped(&self) -> u64 {
+        self.state.lock().unwrap().dropped
+    }
+
+    /// Failed sink writes (the pipeline was never disturbed by them).
+    pub fn sink_errors(&self) -> u64 {
+        self.state.lock().unwrap().sink_errors
+    }
+
+    /// Flush the JSONL sink, if any.
+    pub fn flush(&self) -> Result<()> {
+        if let Some(sink) = &mut self.state.lock().unwrap().sink {
+            sink.flush().context("flushing trace sink")?;
+        }
+        Ok(())
+    }
+
+    /// Export the retained records as a Chrome `trace_event` JSON
+    /// document (open in `chrome://tracing` or <https://ui.perfetto.dev>).
+    /// Stage spans become complete (`"X"`) events; everything else
+    /// becomes a thread-scoped instant with the record's fields as args.
+    /// Each trace id renders as its own track (`tid`).
+    pub fn chrome_trace(&self) -> String {
+        let events: Vec<Json> = self
+            .records()
+            .iter()
+            .map(|r| {
+                let mut args = match r.to_json() {
+                    Json::Obj(m) => m,
+                    _ => unreachable!("records serialize as objects"),
+                };
+                for k in ["event", "seq", "trace", "ts_ns"] {
+                    args.remove(k);
+                }
+                let (name, ph, ts_us, dur_us) = match &r.event {
+                    TraceEvent::StageCompleted { stage, wall_ns } => (
+                        stage.as_str(),
+                        "X",
+                        r.ts_ns.saturating_sub(*wall_ns) / 1_000,
+                        Some(*wall_ns / 1_000),
+                    ),
+                    e => (e.name(), "i", r.ts_ns / 1_000, None),
+                };
+                let mut pairs = vec![
+                    ("name", Json::str(name)),
+                    ("cat", Json::str("fbo")),
+                    ("ph", Json::str(ph)),
+                    ("ts", Json::num(ts_us as f64)),
+                    ("pid", Json::num(1.0)),
+                    ("tid", Json::num(r.trace as f64)),
+                    ("args", Json::Obj(args)),
+                ];
+                if let Some(d) = dur_us {
+                    pairs.push(("dur", Json::num(d as f64)));
+                }
+                if ph == "i" {
+                    pairs.push(("s", Json::str("t")));
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        json::to_string_pretty(&Json::obj(vec![("traceEvents", Json::Arr(events))]))
+    }
+}
+
+/// A [`StageObserver`] that records everything the pipeline reports into
+/// a [`TraceRecorder`] under one trace id, optionally forwarding to a
+/// chained observer (so existing latency counters keep working).
+pub struct TraceObserver {
+    recorder: Arc<TraceRecorder>,
+    trace: u64,
+    chain: Option<Arc<dyn StageObserver>>,
+}
+
+impl TraceObserver {
+    /// Start a new trace on `recorder` and emit its
+    /// [`TraceEvent::RequestStarted`] record.
+    pub fn begin(recorder: &Arc<TraceRecorder>, entry: &str) -> TraceObserver {
+        let trace = recorder.begin_trace();
+        recorder.record(trace, TraceEvent::RequestStarted { entry: entry.to_string() });
+        TraceObserver { recorder: recorder.clone(), trace, chain: None }
+    }
+
+    /// Forward every observation to `chain` after recording it.
+    pub fn with_chain(mut self, chain: Arc<dyn StageObserver>) -> TraceObserver {
+        self.chain = Some(chain);
+        self
+    }
+
+    /// The trace id this observer records under.
+    pub fn trace_id(&self) -> u64 {
+        self.trace
+    }
+
+    /// Emit the closing [`TraceEvent::RequestCompleted`] record.
+    pub fn complete(&self, from_cache: bool, ok: bool) {
+        self.recorder.record(self.trace, TraceEvent::RequestCompleted { from_cache, ok });
+    }
+}
+
+impl StageObserver for TraceObserver {
+    fn stage_completed(&self, stage: Stage, wall: Duration) {
+        self.recorder.record(
+            self.trace,
+            TraceEvent::StageCompleted { stage, wall_ns: wall.as_nanos() as u64 },
+        );
+        if let Some(c) = &self.chain {
+            c.stage_completed(stage, wall);
+        }
+    }
+
+    fn stage_event(&self, event: &TraceEvent) {
+        self.recorder.record(self.trace, event.clone());
+        if let Some(c) = &self.chain {
+            c.stage_event(event);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::RequestStarted { entry: "main".into() },
+            TraceEvent::StageCompleted { stage: Stage::Verify, wall_ns: 48_000 },
+            TraceEvent::PatternMeasured {
+                label: "only:call:fft2d".into(),
+                reps: 3,
+                median_ns: 90_000,
+                min_ns: 88_000,
+                max_ns: 91_000,
+                bytes_in: 32_768,
+                bytes_out: 16_384,
+                dispatches: 4,
+                device_secs: 0.25,
+            },
+            TraceEvent::PowerScored {
+                label: "only:call:fft2d".into(),
+                watts: 70.5,
+                joules: 0.125,
+                efficiency: 3.5,
+            },
+            TraceEvent::ArbitrationVerdict {
+                label: "only:call:fft2d".into(),
+                winner: "gpu".into(),
+                loser: "fpga".into(),
+                margin_secs: 0.0125,
+                policy: "auto".into(),
+            },
+            TraceEvent::CacheProbe { tier: "decision".into(), hit: false },
+            TraceEvent::Resumed { from: Stage::Verify },
+            TraceEvent::MeasureDispatch { fanned: 3, local: 2 },
+            TraceEvent::RequestCompleted { from_cache: false, ok: true },
+        ]
+    }
+
+    #[test]
+    fn every_event_round_trips_through_jsonl() {
+        for (i, event) in sample_events().into_iter().enumerate() {
+            let rec = TraceRecord { trace: 7, seq: i as u64 + 1, ts_ns: 123_456, event };
+            let line = rec.to_jsonl_line();
+            assert!(!line.contains('\n'), "one line per record: {line}");
+            let back = TraceRecord::from_jsonl_line(&line).unwrap();
+            assert_eq!(back, rec);
+            assert_eq!(back.to_jsonl_line(), line, "codec must be byte-stable");
+        }
+    }
+
+    #[test]
+    fn unknown_event_names_are_rejected() {
+        assert!(TraceRecord::from_jsonl_line(
+            r#"{"event":"mystery","seq":1,"trace":1,"ts_ns":0}"#
+        )
+        .is_err());
+        assert!(TraceRecord::from_jsonl_line("not json").is_err());
+    }
+
+    #[test]
+    fn recorder_stamps_sequence_and_bounds_the_ring() {
+        let rec = TraceRecorder::new(3);
+        let t = rec.begin_trace();
+        assert_eq!(t, 1);
+        for _ in 0..5 {
+            rec.record(t, TraceEvent::CacheProbe { tier: "decision".into(), hit: true });
+        }
+        assert_eq!(rec.len(), 3, "ring capacity");
+        assert_eq!(rec.dropped(), 2);
+        let records = rec.records();
+        // The oldest two were evicted; sequence numbers keep counting.
+        assert_eq!(records.iter().map(|r| r.seq).collect::<Vec<_>>(), vec![3, 4, 5]);
+        assert!(records.windows(2).all(|w| w[0].ts_ns <= w[1].ts_ns));
+        assert_eq!(rec.begin_trace(), 2, "trace ids are sequential");
+    }
+
+    #[test]
+    fn chrome_trace_renders_spans_and_instants() {
+        let rec = TraceRecorder::new(64);
+        let t = rec.begin_trace();
+        rec.record(t, TraceEvent::StageCompleted { stage: Stage::Parse, wall_ns: 2_000 });
+        rec.record(t, TraceEvent::CacheProbe { tier: "decision".into(), hit: false });
+        let doc = json::parse(&rec.chrome_trace()).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].get("name").unwrap().as_str().unwrap(), "parse");
+        assert_eq!(events[0].get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(events[0].get("dur").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(events[1].get("ph").unwrap().as_str().unwrap(), "i");
+        assert_eq!(
+            events[1].get("args").unwrap().get("tier").unwrap().as_str().unwrap(),
+            "decision"
+        );
+    }
+
+    #[test]
+    fn sink_mirrors_every_record() {
+        let path = std::env::temp_dir()
+            .join(format!("fbo-tracetest-{}.jsonl", std::process::id()));
+        let rec = TraceRecorder::with_sink(2, &path).unwrap();
+        let t = rec.begin_trace();
+        for _ in 0..4 {
+            rec.record(t, TraceEvent::CacheProbe { tier: "verified".into(), hit: true });
+        }
+        rec.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4, "sink keeps evicted records too");
+        for line in lines {
+            TraceRecord::from_jsonl_line(line).unwrap();
+        }
+        assert_eq!(rec.sink_errors(), 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn observer_records_completions_events_and_chains() {
+        use std::sync::atomic::AtomicUsize;
+        struct CountingObserver(AtomicUsize);
+        impl StageObserver for CountingObserver {
+            fn stage_completed(&self, _stage: Stage, _wall: Duration) {
+                self.0.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let recorder = Arc::new(TraceRecorder::new(64));
+        let chained = Arc::new(CountingObserver(AtomicUsize::new(0)));
+        let obs = TraceObserver::begin(&recorder, "main").with_chain(chained.clone());
+        obs.stage_completed(Stage::Parse, Duration::from_micros(5));
+        obs.stage_event(&TraceEvent::CacheProbe { tier: "decision".into(), hit: false });
+        obs.complete(false, true);
+        assert_eq!(chained.0.load(Ordering::Relaxed), 1, "chain saw the span");
+        let kinds: Vec<&str> = recorder.records().iter().map(|r| r.event.name()).collect();
+        assert_eq!(kinds, vec!["request-started", "stage", "cache", "request-completed"]);
+        assert!(recorder.records().iter().all(|r| r.trace == obs.trace_id()));
+    }
+}

@@ -1,0 +1,288 @@
+//! Integration tests for the telemetry subsystem: the golden JSONL
+//! schema, trace semantics of a full pipeline run and of cache-resumed
+//! jobs, the passivity invariant (traced services replay untraced
+//! decisions byte-identically), and the Prometheus scrape endpoint.
+
+use std::io::{Read as _, Write as _};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fbo::coordinator::{apps, BackendPolicy, Coordinator, PowerPolicy, Stage};
+use fbo::service::{OffloadService, ServiceConfig};
+use fbo::telemetry::{MetricsServer, TraceEvent, TraceObserver, TraceRecord, TraceRecorder};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Per-test config with an isolated cache dir under the temp root.
+fn test_config(tag: &str) -> (ServiceConfig, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("fbo-telemetrytest-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = ServiceConfig::new(artifacts_dir());
+    cfg.cache_dir = Some(dir.clone());
+    cfg.workers = 2;
+    cfg.verify.reps = 1;
+    (cfg, dir)
+}
+
+/// Stage names of the spans in `records`, in recording order.
+fn span_names(records: &[TraceRecord]) -> Vec<&'static str> {
+    records
+        .iter()
+        .filter_map(|r| match &r.event {
+            TraceEvent::StageCompleted { stage, .. } => Some(stage.as_str()),
+            _ => None,
+        })
+        .collect()
+}
+
+// ------------------------------------------------------- golden schema
+
+/// The JSONL wire format is pinned by a fixture: every line must decode,
+/// re-encode byte-identically, and carry the expected discriminator. A
+/// failure here means the schema changed and downstream consumers
+/// (scripts tailing `--trace-out` files) would break.
+#[test]
+fn golden_jsonl_schema_is_stable() {
+    let fixture = include_str!("fixtures/trace_golden.jsonl");
+    let mut names = Vec::new();
+    for line in fixture.lines() {
+        let rec = TraceRecord::from_jsonl_line(line).expect(line);
+        assert_eq!(rec.to_jsonl_line(), line, "round-trip must be byte-identical");
+        names.push(rec.event.name());
+    }
+    assert_eq!(
+        names,
+        [
+            "request-started",
+            "cache",
+            "stage",
+            "pattern",
+            "power",
+            "verdict",
+            "resumed",
+            "dispatch",
+            "request-completed",
+        ],
+        "fixture must exercise every event variant"
+    );
+}
+
+// ------------------------------------------------------ CLI-style trace
+
+#[test]
+fn cli_trace_carries_spans_and_decision_events() {
+    let mut c = Coordinator::open(&artifacts_dir()).unwrap();
+    c.verify.reps = 1;
+    let src = apps::matmul_app(64);
+
+    let recorder = Arc::new(TraceRecorder::new(4096));
+    let obs = Arc::new(TraceObserver::begin(&recorder, "main"));
+    let report = c.request(&src, "main").with_observer(obs.clone()).run().unwrap();
+    obs.complete(false, true);
+
+    let records = recorder.records();
+    assert!(records.iter().all(|r| r.trace == obs.trace_id()));
+    let seqs: Vec<u64> = records.iter().map(|r| r.seq).collect();
+    assert!(seqs.windows(2).all(|w| w[0] < w[1]), "seq must be monotonic: {seqs:?}");
+
+    // One span per pipeline stage, in pipeline order.
+    assert_eq!(
+        span_names(&records),
+        ["parse", "discover", "reconcile", "verify", "power-score", "arbitrate"]
+    );
+
+    // Step 3 reported every measurement: the all-CPU baseline first, then
+    // one event per tried pattern.
+    let patterns: Vec<&str> = records
+        .iter()
+        .filter_map(|r| match &r.event {
+            TraceEvent::PatternMeasured { label, .. } => Some(label.as_str()),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(patterns.first(), Some(&"all-CPU"));
+    assert_eq!(patterns.len(), 1 + report.outcome.tried.len());
+
+    // Step 3b reported its verdicts and the power stage its scores.
+    assert!(records.iter().any(|r| matches!(
+        &r.event,
+        TraceEvent::ArbitrationVerdict { policy, .. } if policy == "auto"
+    )));
+    assert!(records.iter().any(|r| matches!(&r.event, TraceEvent::PowerScored { .. })));
+
+    // The request envelope brackets everything.
+    assert_eq!(records.first().unwrap().event.name(), "request-started");
+    assert_eq!(records.last().unwrap().event.name(), "request-completed");
+}
+
+// ------------------------------------------------------------ passivity
+
+/// Two fresh pipeline runs are never byte-identical (measurements are
+/// real wall-clock), so passivity is asserted the way it matters in
+/// operation: telemetry config shifts no fingerprint, hence a traced
+/// service replays an untraced service's decision byte-for-byte.
+#[test]
+fn traced_service_replays_untraced_decisions_byte_identically() {
+    let (mut cfg, dir) = test_config("passive");
+    let src = apps::lu_app_lib(64);
+
+    let untraced_json = {
+        let service = OffloadService::start(cfg.clone()).unwrap();
+        let done = service.submit(&src, "main").wait().unwrap();
+        assert!(!done.from_cache);
+        done.report_json
+    };
+
+    let trace_path = dir.join("trace.jsonl");
+    cfg.telemetry.trace_out = Some(trace_path.clone());
+    let service = OffloadService::start(cfg).unwrap();
+    let done = service.submit(&src, "main").wait().unwrap();
+    assert!(done.from_cache, "telemetry must not shift any fingerprint");
+    assert_eq!(done.report_json, untraced_json, "byte-identical replay under tracing");
+
+    let records = service.recorder().records();
+    assert!(records.iter().any(|r| matches!(
+        &r.event,
+        TraceEvent::CacheProbe { tier, hit: true } if tier == "decision"
+    )));
+    assert!(records
+        .iter()
+        .any(|r| r.event == TraceEvent::RequestCompleted { from_cache: true, ok: true }));
+
+    // The sink mirrors the ring line-for-line and every line decodes.
+    let recorder = service.recorder().clone();
+    service.shutdown();
+    assert_eq!(recorder.dropped(), 0);
+    assert_eq!(recorder.sink_errors(), 0);
+    let sink = std::fs::read_to_string(&trace_path).unwrap();
+    let lines: Vec<&str> = sink.lines().collect();
+    assert_eq!(lines.len(), recorder.len());
+    for line in lines {
+        TraceRecord::from_jsonl_line(line).expect(line);
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------- resume semantics
+
+/// A job resumed from a cached stage artifact traces spans only for the
+/// stages it actually re-ran, plus an explicit `resumed` marker naming
+/// the tier it resumed from.
+#[test]
+fn resumed_jobs_trace_only_the_rerun_stages() {
+    let (cfg, dir) = test_config("resume");
+    let src = apps::fft_app_lib(64);
+
+    // Scratch run populates the decision and stage caches.
+    {
+        let service = OffloadService::start(cfg.clone()).unwrap();
+        assert!(!service.submit(&src, "main").wait().unwrap().from_cache);
+    }
+
+    // A power-policy change resumes from the Verified artifact: the trace
+    // carries spans only for power-score + arbitrate, never verify.
+    {
+        let mut ppw = cfg.clone();
+        ppw.power_policy = PowerPolicy::PerfPerWatt;
+        let service = OffloadService::start(ppw).unwrap();
+        let done = service.submit(&src, "main").wait().unwrap();
+        assert_eq!(done.resumed_from, Some(Stage::Verify));
+
+        let records: Vec<TraceRecord> = service
+            .recorder()
+            .records()
+            .into_iter()
+            .filter(|r| r.trace == done.id)
+            .collect();
+        assert_eq!(span_names(&records), ["power-score", "arbitrate"]);
+        assert!(records.iter().any(|r| r.event == TraceEvent::Resumed { from: Stage::Verify }));
+        assert!(records.iter().any(|r| matches!(
+            &r.event,
+            TraceEvent::CacheProbe { tier, hit: false } if tier == "decision"
+        )));
+        assert!(records.iter().any(|r| matches!(
+            &r.event,
+            TraceEvent::CacheProbe { tier, hit: true } if tier == "verified"
+        )));
+        service.shutdown();
+    }
+
+    // Deeper still: with the PowerScored artifact now persisted, a
+    // backend retarget re-runs (and traces) arbitration alone.
+    {
+        let mut ppw = cfg;
+        ppw.power_policy = PowerPolicy::PerfPerWatt;
+        ppw.backend_policy = BackendPolicy::Gpu;
+        let service = OffloadService::start(ppw).unwrap();
+        let done = service.submit(&src, "main").wait().unwrap();
+        assert_eq!(done.resumed_from, Some(Stage::PowerScore));
+
+        let records: Vec<TraceRecord> = service
+            .recorder()
+            .records()
+            .into_iter()
+            .filter(|r| r.trace == done.id)
+            .collect();
+        assert_eq!(span_names(&records), ["arbitrate"]);
+        assert!(records
+            .iter()
+            .any(|r| r.event == TraceEvent::Resumed { from: Stage::PowerScore }));
+        service.shutdown();
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ------------------------------------------------------ scrape endpoint
+
+fn http_get(addr: std::net::SocketAddr, path: &str) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: fbo\r\nConnection: close\r\n\r\n").unwrap();
+    let mut response = String::new();
+    stream.read_to_string(&mut response).unwrap();
+    response
+}
+
+#[test]
+fn metrics_endpoint_serves_prometheus_counters() {
+    let (cfg, dir) = test_config("prom");
+    let service = OffloadService::start(cfg).unwrap();
+
+    // Two identical jobs: the pipeline runs once, the second replays from
+    // the decision tier (identical keys serialize on one worker queue).
+    let src = apps::lu_app_lib(64);
+    let jobs = vec![(src.clone(), "main".to_string()), (src, "main".to_string())];
+    for result in service.run_batch(&jobs) {
+        result.unwrap();
+    }
+
+    let handle = service.metrics();
+    let server = MetricsServer::start("127.0.0.1:0", move || handle.render_prometheus()).unwrap();
+
+    let response = http_get(server.addr(), "/metrics");
+    assert!(response.starts_with("HTTP/1.1 200 OK"), "{response}");
+    assert!(response.contains("text/plain; version=0.0.4"), "{response}");
+    assert!(response.contains("fbo_jobs_completed_total 2"), "{response}");
+    assert!(
+        response.contains("fbo_cache_lookups_total{result=\"hit\",tier=\"decision\"} 1"),
+        "{response}"
+    );
+    assert!(
+        response.contains("fbo_cache_lookups_total{result=\"miss\",tier=\"decision\"} 1"),
+        "{response}"
+    );
+    assert!(response.contains("fbo_stage_seconds_count{stage=\"verify\"} 1"), "{response}");
+    assert!(response.contains("fbo_stage_seconds_bucket{stage=\"verify\",le=\""), "{response}");
+    assert!(response.contains("fbo_job_seconds_count 2"), "{response}");
+
+    let missing = http_get(server.addr(), "/nope");
+    assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+
+    server.stop();
+    service.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
