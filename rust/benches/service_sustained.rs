@@ -1,0 +1,261 @@
+//! Bench: sustained open-loop load against the admission-controlled
+//! service with a cache budget pinned *below* the working set.
+//!
+//! Arrivals are open-loop (a fixed inter-arrival clock, not request →
+//! response → request), drawn from a churning key population larger than
+//! the cache budget admits, so the run continuously exercises all three
+//! production mechanisms at once: tier-aware eviction (every gc
+//! checkpoint must land at or under budget), admission control (the
+//! arrival rate outruns the verify rate, so the bounded queues must
+//! shed), and byte-identical replay for whatever survives.
+//!
+//! Always asserted, smoke or not: cache bytes <= budget at every gc
+//! checkpoint, `submitted == completed + failed + shed`, `failed == 0`,
+//! at least one shed, and byte-identical replay after eviction pressure.
+//! The wall-clock thesis (cache hits are much faster than verification)
+//! is skipped in smoke mode where timings prove nothing.
+//!
+//! Run: `cargo bench --bench service_sustained`
+//! Records: `BENCH_sustained.json` at the repo root.
+
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use fbo::coordinator::apps;
+use fbo::ga::rng::Rng;
+use fbo::metrics::{percentile, Table};
+use fbo::patterndb::json::{self, Json};
+use fbo::service::{CacheBudget, JobHandle, JobRejected, OffloadService, ServiceConfig};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+enum Outcome {
+    Done { latency: Duration, from_cache: bool },
+    Shed,
+    Failed,
+}
+
+const COLLECTORS: usize = 4;
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--test");
+    let n = env_usize("FBO_N", 64);
+    let workers = env_usize("FBO_JOBS", 2);
+    let keys = env_usize("FBO_SUSTAIN_KEYS", if smoke { 6 } else { 24 });
+    let arrivals = env_usize("FBO_SUSTAIN_ARRIVALS", if smoke { 40 } else { 400 });
+    let interval_ms = env_usize("FBO_SUSTAIN_INTERVAL_MS", if smoke { 5 } else { 10 }) as u64;
+    let checkpoint_every = env_usize("FBO_SUSTAIN_CHECKPOINT", 25);
+
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let cache_dir =
+        std::env::temp_dir().join(format!("fbo-bench-sustained-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cache_dir);
+
+    let mut cfg = ServiceConfig::new(artifacts);
+    cfg.cache_dir = Some(cache_dir.clone());
+    cfg.workers = workers;
+    cfg.verify.reps = 1;
+    cfg.admission.queue_limit = 4;
+
+    // Churning key population over one prebuilt kernel set: each unused
+    // trailing function shifts the AST hash (a distinct cache key) while
+    // the offloadable blocks keep using the size-`n` artifacts.
+    let base = apps::matmul_app(n);
+    let population: Vec<String> =
+        (0..keys).map(|i| format!("{base}\nint churn_{i}() {{ return {i}; }}\n")).collect();
+
+    println!("== sustained load: {arrivals} arrivals / {keys} keys, {workers} workers ==");
+    let service = OffloadService::start(cfg)?;
+    service.cache().clear()?; // guaranteed cold across bench re-runs
+
+    // Warm phase: verify a seed subset to size the working set, then pin
+    // the budget below it so the sustained phase runs under standing
+    // eviction pressure.
+    let seeds = 3.min(keys);
+    let seed_jobs: Vec<(String, String)> =
+        population.iter().take(seeds).map(|s| (s.clone(), "main".to_string())).collect();
+    for r in service.run_batch(&seed_jobs) {
+        r?;
+    }
+    let per_key = service.cache().usage().bytes / seeds as u64;
+    let working_set = per_key * keys as u64;
+    let budget = CacheBudget { max_bytes: Some((working_set / 2).max(per_key)), max_entries: None };
+    service.cache().set_budget(budget);
+    service.cache().gc(budget, false)?;
+    println!(
+        "working set ~{working_set} bytes over {keys} keys; budget {} bytes",
+        budget.max_bytes.unwrap()
+    );
+
+    // Collector threads await responses off the arrival thread, so a slow
+    // job never paces the arrival clock (that is what makes it open-loop).
+    let outcomes: Arc<Mutex<Vec<Outcome>>> = Arc::new(Mutex::new(Vec::new()));
+    let (tx, rx) = mpsc::channel::<(Instant, JobHandle)>();
+    let rx = Arc::new(Mutex::new(rx));
+    let collectors: Vec<_> = (0..COLLECTORS)
+        .map(|_| {
+            let rx = Arc::clone(&rx);
+            let outcomes = Arc::clone(&outcomes);
+            std::thread::spawn(move || loop {
+                let msg = rx.lock().expect("collector rx lock").recv();
+                let Ok((t0, handle)) = msg else { break };
+                let outcome = match handle.wait() {
+                    Ok(done) => {
+                        Outcome::Done { latency: t0.elapsed(), from_cache: done.from_cache }
+                    }
+                    Err(e) if e.downcast_ref::<JobRejected>().is_some() => Outcome::Shed,
+                    Err(_) => Outcome::Failed,
+                };
+                outcomes.lock().expect("collector outcome lock").push(outcome);
+            })
+        })
+        .collect();
+
+    // Sustained phase: open-loop arrivals with periodic gc checkpoints.
+    let mut rng = Rng::new(0x5eed);
+    let clients = ["alpha", "beta", "gamma"];
+    let mut checkpoints = 0usize;
+    let t_start = Instant::now();
+    for i in 0..arrivals {
+        let key = rng.below(keys);
+        let t0 = Instant::now();
+        let handle = service.submit_as(&population[key], "main", clients[i % clients.len()]);
+        tx.send((t0, handle)).expect("collector thread alive");
+        if (i + 1) % checkpoint_every == 0 {
+            let out = service.cache().gc(budget, false)?;
+            assert!(
+                out.bytes_after <= budget.max_bytes.unwrap(),
+                "budget invariant violated at checkpoint: {} bytes > {:?}",
+                out.bytes_after,
+                budget
+            );
+            checkpoints += 1;
+        }
+        std::thread::sleep(Duration::from_millis(interval_ms));
+    }
+    drop(tx);
+    for c in collectors {
+        c.join().expect("collector thread");
+    }
+    let wall = t_start.elapsed();
+
+    // Replay contract under eviction: whatever the budget evicted, the
+    // next verification of a key must replay byte-identically afterwards.
+    let probe = service.submit_as(&population[0], "main", "replay-probe").wait()?;
+    let replay = service.submit_as(&population[0], "main", "replay-probe").wait()?;
+    assert!(replay.from_cache, "second probe must replay from the cache");
+    assert_eq!(
+        replay.report_json, probe.report_json,
+        "byte-identical replay under eviction pressure"
+    );
+
+    // Accounting invariant: shed is its own outcome, nothing is lost and
+    // nothing is double-counted.
+    let stats = service.stats();
+    assert_eq!(
+        stats.submitted,
+        stats.completed + stats.failed + stats.jobs_shed,
+        "submitted must equal completed + failed + shed after drain"
+    );
+    assert_eq!(stats.failed, 0, "sustained load must not fail jobs");
+    assert!(stats.jobs_shed >= 1, "open-loop arrivals above the verify rate must shed");
+
+    let outcomes =
+        Arc::try_unwrap(outcomes).ok().expect("collectors joined").into_inner().expect("lock");
+    let mut latencies: Vec<Duration> = Vec::new();
+    let mut hit_lat: Vec<Duration> = Vec::new();
+    let mut miss_lat: Vec<Duration> = Vec::new();
+    let (mut done_ct, mut shed_ct, mut failed_ct) = (0u64, 0u64, 0u64);
+    for o in &outcomes {
+        match o {
+            Outcome::Done { latency, from_cache } => {
+                done_ct += 1;
+                latencies.push(*latency);
+                if *from_cache {
+                    hit_lat.push(*latency);
+                } else {
+                    miss_lat.push(*latency);
+                }
+            }
+            Outcome::Shed => shed_ct += 1,
+            Outcome::Failed => failed_ct += 1,
+        }
+    }
+    assert_eq!(done_ct + shed_ct + failed_ct, arrivals as u64);
+    assert_eq!(failed_ct, 0);
+
+    let p50 = percentile(&latencies, 50.0).unwrap_or_default();
+    let p99 = percentile(&latencies, 99.0).unwrap_or_default();
+    let p999 = percentile(&latencies, 99.9).unwrap_or_default();
+    let shed_rate = shed_ct as f64 / arrivals as f64;
+    let probes = stats.cache_hits + stats.cache_misses;
+    let hit_rate = stats.cache_hits as f64 / probes.max(1) as f64;
+    let usage = service.cache().usage();
+    let evictions = service.cache().stats().evictions_total();
+
+    let lat_row = format!("{:.1}ms / {:.1}ms / {:.1}ms", ms(p50), ms(p99), ms(p999));
+    let bytes_row = format!("{} ({})", usage.bytes, budget.max_bytes.unwrap());
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["arrivals".into(), format!("{arrivals} over {:.2}s", wall.as_secs_f64())]);
+    t.row(&["completed / shed".into(), format!("{done_ct} / {shed_ct}")]);
+    t.row(&["latency p50/p99/p999".into(), lat_row]);
+    t.row(&["shed rate".into(), format!("{:.1}%", shed_rate * 100.0)]);
+    t.row(&["cache hit rate".into(), format!("{:.1}%", hit_rate * 100.0)]);
+    t.row(&["cache bytes (budget)".into(), bytes_row]);
+    t.row(&["evictions / gc checkpoints".into(), format!("{evictions} / {checkpoints}")]);
+    print!("{}", t.render());
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("service_sustained")),
+        ("n", Json::num(n as f64)),
+        ("workers", Json::num(workers as f64)),
+        ("keys", Json::num(keys as f64)),
+        ("arrivals", Json::num(arrivals as f64)),
+        ("interval_ms", Json::num(interval_ms as f64)),
+        ("wall_secs", Json::num(wall.as_secs_f64())),
+        ("submitted", Json::num(stats.submitted as f64)),
+        ("completed", Json::num(stats.completed as f64)),
+        ("shed", Json::num(stats.jobs_shed as f64)),
+        ("failed", Json::num(stats.failed as f64)),
+        ("shed_rate", Json::num(shed_rate)),
+        ("cache_hit_rate", Json::num(hit_rate)),
+        ("latency_p50_secs", Json::num(p50.as_secs_f64())),
+        ("latency_p99_secs", Json::num(p99.as_secs_f64())),
+        ("latency_p999_secs", Json::num(p999.as_secs_f64())),
+        ("budget_bytes", Json::num(budget.max_bytes.unwrap() as f64)),
+        ("working_set_bytes", Json::num(working_set as f64)),
+        ("cache_bytes_final", Json::num(usage.bytes as f64)),
+        ("cache_entries_final", Json::num(usage.entries as f64)),
+        ("evictions_total", Json::num(evictions as f64)),
+        ("gc_checkpoints", Json::num(checkpoints as f64)),
+        ("byte_identical_replay", Json::Bool(true)),
+        ("budget_violations", Json::num(0.0)),
+    ]);
+    let bench_path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_sustained.json");
+    std::fs::write(&bench_path, json::to_string_pretty(&out))?;
+    println!("recorded {}", bench_path.display());
+
+    service.shutdown();
+    std::fs::remove_dir_all(&cache_dir).ok();
+
+    // Wall-clock thesis — skipped in smoke mode, where timings on a noisy
+    // shared runner prove nothing (the invariants above still held).
+    if !smoke {
+        let hit_p50 = percentile(&hit_lat, 50.0).unwrap_or_default().as_secs_f64();
+        let miss_p50 = percentile(&miss_lat, 50.0).unwrap_or_default().as_secs_f64().max(1e-9);
+        assert!(
+            !hit_lat.is_empty() && hit_p50 * 5.0 <= miss_p50,
+            "cache hits must be >=5x faster than verification \
+             (hit p50 {hit_p50:.4}s vs miss p50 {miss_p50:.4}s)"
+        );
+    }
+    Ok(())
+}
+
+fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}

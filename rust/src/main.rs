@@ -9,6 +9,7 @@
 //! fbo batch     <files...> [--jobs N]            service pool + decision cache
 //! fbo serve     [--jobs N]                       long-running service on stdin
 //! fbo stats     [files...] [--format text|prom|json]  service counters
+//! fbo cache     <gc|stats> [--max-bytes N]       decision-cache maintenance
 //! fbo gen-apps  [--n 256] [--dir apps]           materialize evaluation apps
 //! fbo gen-db    [--out patterndb.json]           dump the built-in pattern DB
 //! fbo artifacts [--dir artifacts]                list loaded PJRT artifacts
@@ -18,7 +19,7 @@
 //! DESIGN.md).
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 use std::sync::Arc;
 
@@ -28,7 +29,10 @@ use fbo::coordinator::{apps, flow, loop_offload, BackendPolicy, Coordinator, Pow
 use fbo::ga::GaConfig;
 use fbo::metrics;
 use fbo::patterndb::PatternDb;
-use fbo::service::{MeasurePool, OffloadService, ServiceConfig};
+use fbo::service::{
+    parse_byte_size, AdmissionConfig, CacheBudget, CacheTier, DecisionCache, MeasurePool,
+    OffloadService, ServiceConfig,
+};
 use fbo::telemetry::{MetricsServer, TraceObserver, TraceRecorder, DEFAULT_RING_CAPACITY};
 use fbo::transform::InterfacePolicy;
 use fbo::{analysis, parser, runtime};
@@ -40,7 +44,7 @@ struct Args {
 
 /// Flags that never take a value — without this list the generic rule
 /// below would swallow the following argument as the flag's "value".
-const BOOLEAN_FLAGS: &[&str] = &["no-cache-persist"];
+const BOOLEAN_FLAGS: &[&str] = &["no-cache-persist", "dry-run"];
 
 impl Args {
     fn parse(argv: &[String]) -> Result<Self> {
@@ -81,6 +85,29 @@ impl Args {
             Some(v) => v.parse().with_context(|| format!("--{name} expects a number")),
         }
     }
+
+    fn flag_f64(&self, name: &str) -> Result<Option<f64>> {
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).with_context(|| format!("--{name} expects a number")),
+        }
+    }
+}
+
+/// `--cache-max-bytes SIZE` / `--cache-max-entries N` (and the `fbo
+/// cache` spellings `--max-bytes` / `--max-entries`): the standing cache
+/// budget. Sizes accept binary suffixes (`64m`, `2g`).
+fn budget_from(args: &Args, bytes_flag: &str, entries_flag: &str) -> Result<CacheBudget> {
+    let max_bytes = match args.flags.get(bytes_flag) {
+        None => None,
+        Some(v) if v == "true" => bail!("--{bytes_flag} expects a size (e.g. 64m)"),
+        Some(v) => Some(parse_byte_size(v)?),
+    };
+    let max_entries = match args.flag_usize(entries_flag, 0)? {
+        0 => None,
+        n => Some(n),
+    };
+    Ok(CacheBudget { max_bytes, max_entries })
 }
 
 fn read_source(path: &str) -> Result<String> {
@@ -478,6 +505,12 @@ fn service_from(args: &Args) -> Result<OffloadService> {
     cfg.power_policy = PowerPolicy::parse(&args.flag("power-policy", "perf"))?;
     cfg.verify_parallel = args.flag_usize("verify-parallel", 1)?;
     cfg.telemetry.trace_out = trace_out_path(args)?;
+    cfg.admission = AdmissionConfig {
+        queue_limit: args.flag_usize("queue-limit", 0)?,
+        rate_per_client: args.flag_f64("rate-limit")?,
+        burst: args.flag_f64("burst")?.unwrap_or(1.0),
+    };
+    cfg.cache_budget = budget_from(args, "cache-max-bytes", "cache-max-entries")?;
     OffloadService::start(cfg)
 }
 
@@ -663,6 +696,87 @@ fn cmd_stats(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Cache-store resolution shared by `fbo cache gc|stats`: `--cache DIR`
+/// wins, else the service default (`decision_cache/` next to the
+/// artifacts dir — the same rule `ServiceConfig` applies).
+fn cache_dir_from(args: &Args) -> PathBuf {
+    match args.flags.get("cache") {
+        Some(dir) => PathBuf::from(dir),
+        None => {
+            let artifacts = PathBuf::from(args.flag("artifacts", "artifacts"));
+            artifacts.parent().unwrap_or_else(|| Path::new(".")).join("decision_cache")
+        }
+    }
+}
+
+fn fmt_bytes(b: u64) -> String {
+    match b {
+        0..=1023 => format!("{b} B"),
+        1024..=1048575 => format!("{:.1} KiB", b as f64 / 1024.0),
+        1048576..=1073741823 => format!("{:.1} MiB", b as f64 / 1048576.0),
+        _ => format!("{:.2} GiB", b as f64 / 1073741824.0),
+    }
+}
+
+/// `fbo cache stats|gc`: offline maintenance of a decision-cache
+/// directory. `stats` prints per-tier occupancy; `gc` evicts down to a
+/// budget (`--max-bytes`/`--max-entries`) in tier-priority-then-LRU
+/// order, or previews the eviction with `--dry-run`.
+fn cmd_cache(args: &Args) -> Result<()> {
+    const USAGE: &str = "usage: fbo cache <stats|gc> [--cache DIR] [--artifacts DIR] \
+                         [--max-bytes SIZE] [--max-entries N] [--dry-run]";
+    let dir = cache_dir_from(args);
+    let cache = DecisionCache::open(&dir)?;
+    let usage = cache.usage();
+    match args.positional.first().map(String::as_str) {
+        Some("stats") => {
+            println!("cache: {}", dir.display());
+            let mut table = metrics::Table::new(&["tier", "entries", "bytes"]);
+            for tier in CacheTier::ALL {
+                table.row(&[
+                    tier.as_str().to_string(),
+                    usage.tier_entries[tier.rank()].to_string(),
+                    fmt_bytes(usage.tier_bytes[tier.rank()]),
+                ]);
+            }
+            table.row(&["total".to_string(), usage.entries.to_string(), fmt_bytes(usage.bytes)]);
+            print!("{}", table.render());
+            let corrupt = cache.stats().corrupt;
+            if corrupt > 0 {
+                println!("{corrupt} corrupt file(s) detected (each will recompute on use)");
+            }
+            Ok(())
+        }
+        Some("gc") => {
+            let budget = budget_from(args, "max-bytes", "max-entries")?;
+            if budget.is_unlimited() {
+                bail!("cache gc needs a budget: --max-bytes SIZE and/or --max-entries N");
+            }
+            let dry_run = args.flag("dry-run", "false") == "true";
+            let outcome = cache.gc(budget, dry_run)?;
+            let verb = if dry_run { "would evict" } else { "evicted" };
+            for e in &outcome.evicted {
+                println!(
+                    "{verb} {} ({}, {})",
+                    e.key.file_stem(),
+                    e.tier.as_str(),
+                    fmt_bytes(e.bytes)
+                );
+            }
+            println!(
+                "{}: {} entries / {} -> {} entries / {}",
+                if dry_run { "dry run" } else { "gc" },
+                outcome.entries_before,
+                fmt_bytes(outcome.bytes_before),
+                outcome.entries_after,
+                fmt_bytes(outcome.bytes_after),
+            );
+            Ok(())
+        }
+        _ => bail!(USAGE),
+    }
+}
+
 fn cmd_gen_apps(args: &Args) -> Result<()> {
     let n = args.flag_usize("n", 256)?;
     let dir = PathBuf::from(args.flag("dir", "apps"));
@@ -719,12 +833,14 @@ fn usage() -> &'static str {
        batch     <file.c...> [--entry main] [--jobs N] [--artifacts DIR]\n\
                  [--cache DIR] [--no-cache-persist] [--reps N]\n\
                  [--target gpu|fpga|auto] [--power-policy ...] [--verify-parallel N]\n\
-                 [--trace-out FILE]\n\
+                 [--trace-out FILE] [--cache-max-bytes SIZE] [--cache-max-entries N]\n\
                  offload many files through the service worker pool +\n\
                  persistent decision cache\n\
        serve     [--jobs N] [--artifacts DIR] [--cache DIR]\n\
                  [--target gpu|fpga|auto] [--power-policy ...] [--verify-parallel N]\n\
                  [--trace-out FILE] [--metrics-addr HOST:PORT] [--stats-every N]\n\
+                 [--queue-limit N] [--rate-limit R] [--burst B]\n\
+                 [--cache-max-bytes SIZE] [--cache-max-entries N]\n\
                  long-running service; reads \"<file.c> [entry]\" lines\n\
                  from stdin, prints one decision per line + stats on EOF;\n\
                  --metrics-addr serves Prometheus metrics at /metrics and\n\
@@ -732,6 +848,12 @@ fn usage() -> &'static str {
        stats     [file.c...] [--format text|prom|json] [--jobs N] [--cache DIR] [...]\n\
                  run an optional batch, then print the service counters\n\
                  (text: human; prom: Prometheus exposition; json: fbo-stats-v1)\n\
+       cache     <stats|gc> [--cache DIR] [--artifacts DIR]\n\
+                 [--max-bytes SIZE] [--max-entries N] [--dry-run]\n\
+                 offline decision-cache maintenance: stats prints per-tier\n\
+                 occupancy; gc evicts down to the budget in tier-priority-\n\
+                 then-LRU order (reconciled evicts first, verified last);\n\
+                 --dry-run previews without deleting; SIZE accepts k/m/g\n\
        gen-apps  [--n 256] [--dir apps]\n\
        gen-db    [--out patterndb.json]\n\
        artifacts [--dir artifacts]\n\
@@ -749,7 +871,16 @@ fn usage() -> &'static str {
      --power-policy picks how Step-3b weighs power (arXiv:2110.11520):\n\
      perf (default) decides on time alone and is byte-identical to a\n\
      pipeline without power scoring; perf-per-watt decides on modeled\n\
-     joules per run; cap:<watts> excludes backends drawing above the cap.\n"
+     joules per run; cap:<watts> excludes backends drawing above the cap.\n\
+     \n\
+     --queue-limit N bounds each worker queue, --rate-limit R meters each\n\
+     client to R jobs/second (--burst B tokens of headroom): over-limit\n\
+     submits fail fast with a structured rejection (and a retry hint)\n\
+     instead of queueing without bound. --cache-max-bytes/--cache-max-\n\
+     entries set a standing cache budget, enforced at startup and after\n\
+     every insert with tier-aware LRU eviction. Like telemetry, none of\n\
+     these flags changes any decision: throttled, budgeted, and unbounded\n\
+     services replay each other's cached decisions byte-identically.\n"
 }
 
 fn main() -> ExitCode {
@@ -774,6 +905,7 @@ fn main() -> ExitCode {
         "batch" => cmd_batch(&args),
         "serve" => cmd_serve(&args),
         "stats" => cmd_stats(&args),
+        "cache" => cmd_cache(&args),
         "gen-apps" => cmd_gen_apps(&args),
         "gen-db" => cmd_gen_db(&args),
         "artifacts" => cmd_artifacts(&args),

@@ -1,4 +1,4 @@
-//! Content-addressed decision cache.
+//! Content-addressed decision cache with tier-aware, size-bounded eviction.
 //!
 //! The pipeline's output for a given (source, entry, pattern DB) is a
 //! *verified decision*: which blocks to offload and the measured evidence.
@@ -26,19 +26,242 @@
 //! decisions survive restarts. Because both the report codec and this
 //! module print through the canonical JSON writer, a warm read returns
 //! **byte-identical** output to the freshly computed serialization.
+//!
+//! # Eviction
+//!
+//! Entries carry a [`CacheTier`] recording what they cost to recompute.
+//! When a [`CacheBudget`] is set (or [`DecisionCache::gc`] is called), the
+//! cache evicts in *tier priority then LRU* order: reconciled artifacts
+//! (milliseconds of static analysis) go first, then power scores
+//! (arithmetic over existing measurements), then full decisions
+//! (re-arbitration over cached verified evidence), and verified
+//! measurements — the tier that embodies real benchmark time — go last.
+//!
+//! # Crash consistency
+//!
+//! Entry files are the *authoritative* store: each is published with a
+//! tmp-file + atomic rename, so a reader (or a crash) never observes a
+//! torn entry. The on-disk index (`index.json`) is an *advisory* sidecar
+//! persisting LRU recency across restarts; it is also written atomically,
+//! and [`DecisionCache::open`] reconciles it against the files that
+//! actually exist: index rows pointing at deleted files are dropped,
+//! files missing from the index load with the oldest possible recency.
+//! A crash at any point between eviction steps therefore costs at most
+//! stale recency — never a corrupted surviving entry.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::parser;
 use crate::patterndb::json::{self, fnv1a64, Json};
+use crate::telemetry::metrics::{Counter, Gauge};
+use crate::telemetry::trace::{TraceEvent, TraceRecorder};
 
 /// Format tag of a persisted cache entry.
 pub const DECISION_FORMAT: &str = "fbo-decision-v1";
+
+/// Format tag of the persisted recency index.
+pub const INDEX_FORMAT: &str = "fbo-cache-index-v1";
+
+/// File name of the recency index inside a cache directory. Entry files
+/// are 16-hex stems, so the name can never collide with an entry.
+pub const INDEX_FILE: &str = "index.json";
+
+/// Number of cache tiers (the length of [`CacheTier::ALL`]).
+pub const TIER_COUNT: usize = 4;
+
+/// What a cached artifact costs to recompute — the eviction priority.
+///
+/// Declaration order *is* eviction order: `Reconciled` is dropped first,
+/// `Verified` last. The ordering mirrors the recompute cost ladder: a
+/// reconciliation is a static-analysis pass, a power score is arithmetic
+/// over existing measurements, a decision is re-arbitration over cached
+/// verified evidence, and a verified artifact embodies real measurement
+/// wall-clock that cannot be recovered any cheaper than re-benchmarking.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum CacheTier {
+    /// Pattern-discovery + reconciliation output (cheapest to redo).
+    Reconciled,
+    /// Power-scored measurement set (arithmetic over verified evidence).
+    PowerScored,
+    /// Full arbitrated decision (re-derivable from verified evidence).
+    Decision,
+    /// Verified measurement evidence (hours of virtual benchmark time).
+    Verified,
+}
+
+impl CacheTier {
+    /// All tiers, in eviction-priority order (first evicted → last).
+    pub const ALL: [CacheTier; TIER_COUNT] =
+        [CacheTier::Reconciled, CacheTier::PowerScored, CacheTier::Decision, CacheTier::Verified];
+
+    /// Position in the eviction order: 0 = evicted first.
+    pub fn rank(self) -> usize {
+        match self {
+            CacheTier::Reconciled => 0,
+            CacheTier::PowerScored => 1,
+            CacheTier::Decision => 2,
+            CacheTier::Verified => 3,
+        }
+    }
+
+    /// Stable wire name — matches the `tier` label of the service's
+    /// `CacheProbe` trace events and the `fbo_cache_*` metric labels.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CacheTier::Reconciled => "reconciled",
+            CacheTier::PowerScored => "power-scored",
+            CacheTier::Decision => "decision",
+            CacheTier::Verified => "verified",
+        }
+    }
+
+    /// Inverse of [`CacheTier::as_str`].
+    pub fn parse(s: &str) -> Option<CacheTier> {
+        CacheTier::ALL.into_iter().find(|t| t.as_str() == s)
+    }
+}
+
+/// Size limits for a [`DecisionCache`]. `None` fields are unlimited; the
+/// default budget is fully unlimited (the pre-eviction behavior).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheBudget {
+    /// Max total payload bytes kept after enforcement.
+    pub max_bytes: Option<u64>,
+    /// Max entry count kept after enforcement.
+    pub max_entries: Option<usize>,
+}
+
+impl CacheBudget {
+    /// No limits — eviction never triggers.
+    pub fn unlimited() -> CacheBudget {
+        CacheBudget::default()
+    }
+
+    /// True when neither limit is set.
+    pub fn is_unlimited(&self) -> bool {
+        self.max_bytes.is_none() && self.max_entries.is_none()
+    }
+
+    /// True when the given usage is within both limits.
+    pub fn admits(&self, bytes: u64, entries: usize) -> bool {
+        bytes <= self.max_bytes.unwrap_or(u64::MAX)
+            && entries <= self.max_entries.unwrap_or(usize::MAX)
+    }
+}
+
+/// Parse a human byte size: a plain integer, optionally suffixed with
+/// `k`/`kb`, `m`/`mb`, or `g`/`gb` (powers of 1024, case-insensitive).
+/// Used by `fbo cache gc --max-bytes` and the service budget flags.
+pub fn parse_byte_size(s: &str) -> Result<u64> {
+    let t = s.trim().to_ascii_lowercase();
+    let (digits, mult) = if let Some(d) = t.strip_suffix("kb").or_else(|| t.strip_suffix('k')) {
+        (d, 1u64 << 10)
+    } else if let Some(d) = t.strip_suffix("mb").or_else(|| t.strip_suffix('m')) {
+        (d, 1u64 << 20)
+    } else if let Some(d) = t.strip_suffix("gb").or_else(|| t.strip_suffix('g')) {
+        (d, 1u64 << 30)
+    } else {
+        (t.as_str(), 1u64)
+    };
+    let n: u64 = digits
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("invalid byte size {s:?} (expected e.g. 4096, 64k, 10m, 1g)"))?;
+    n.checked_mul(mult).ok_or_else(|| anyhow!("byte size {s:?} overflows"))
+}
+
+/// Monotonic traffic counters of one [`DecisionCache`] — the telemetry
+/// registry's `fbo_cache_*` series read them. Counting is the cache's
+/// only side effect of being observed; lookups and inserts behave
+/// identically with or without anyone reading these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    /// Total lookups served (hits + misses).
+    pub lookups: u64,
+    /// Lookups that found an entry.
+    pub hits: u64,
+    /// Entries stored (re-inserts of the same key included).
+    pub inserts: u64,
+    /// Evictions per tier, indexed by [`CacheTier::rank`].
+    pub evictions: [u64; TIER_COUNT],
+    /// Corrupt entries (or indexes) detected — files that claim to be
+    /// ours (or are unreadable as JSON at all) but cannot be loaded.
+    pub corrupt: u64,
+}
+
+impl CacheStats {
+    /// Total evictions across all tiers.
+    pub fn evictions_total(&self) -> u64 {
+        self.evictions.iter().sum()
+    }
+}
+
+/// Point-in-time occupancy of a [`DecisionCache`], taken under the map
+/// lock so bytes/entries are mutually consistent (unlike counter reads,
+/// which can interleave with a concurrent insert).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheUsage {
+    /// Total payload bytes currently held.
+    pub bytes: u64,
+    /// Total entries currently held.
+    pub entries: usize,
+    /// Payload bytes per tier, indexed by [`CacheTier::rank`].
+    pub tier_bytes: [u64; TIER_COUNT],
+    /// Entry counts per tier, indexed by [`CacheTier::rank`].
+    pub tier_entries: [usize; TIER_COUNT],
+}
+
+/// One entry removed (or, in a dry run, *selected* for removal) by
+/// [`DecisionCache::gc`] or budget enforcement.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EvictedEntry {
+    /// The evicted key.
+    pub key: CacheKey,
+    /// Its tier at eviction time.
+    pub tier: CacheTier,
+    /// Its payload size.
+    pub bytes: u64,
+}
+
+/// Outcome of one [`DecisionCache::gc`] pass.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GcOutcome {
+    /// True when nothing was actually removed (`--dry-run`).
+    pub dry_run: bool,
+    /// Payload bytes before the pass.
+    pub bytes_before: u64,
+    /// Payload bytes after the pass (equals `bytes_before` on dry runs).
+    pub bytes_after: u64,
+    /// Entry count before the pass.
+    pub entries_before: usize,
+    /// Entry count after the pass.
+    pub entries_after: usize,
+    /// Entries removed (or selected), in eviction order: tier priority
+    /// first ([`CacheTier::rank`] ascending), least-recently-used first
+    /// within a tier.
+    pub evicted: Vec<EvictedEntry>,
+}
+
+/// Registry-backed instruments a service attaches to its cache so
+/// eviction, corruption, and occupancy surface in `/metrics` and the
+/// trace stream. Constructed by `service::pool` from its [`crate::telemetry::metrics::Registry`];
+/// the cache's own atomic counters in [`CacheStats`] work with or
+/// without an attachment.
+pub struct CacheTelemetry {
+    /// `fbo_cache_evictions_total{tier=...}`, indexed by [`CacheTier::rank`].
+    pub evictions: [Arc<Counter>; TIER_COUNT],
+    /// `fbo_cache_corrupt_total`.
+    pub corrupt: Arc<Counter>,
+    /// `fbo_cache_bytes` gauge.
+    pub bytes: Arc<Gauge>,
+    /// Destination for warn-level `cache-corrupt` trace events.
+    pub recorder: Arc<TraceRecorder>,
+}
 
 /// Content-addressed key of one offload decision.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -89,72 +312,122 @@ impl CacheKey {
     }
 }
 
-/// Monotonic traffic counters of one [`DecisionCache`] — the telemetry
-/// registry's `fbo_cache_*` series read them. Counting is the cache's
-/// only side effect of being observed; lookups and inserts behave
-/// identically with or without anyone reading these.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub struct CacheStats {
-    /// Total lookups served (hits + misses).
-    pub lookups: u64,
-    /// Lookups that found an entry.
-    pub hits: u64,
-    /// Entries stored (re-inserts of the same key included).
-    pub inserts: u64,
+struct Entry {
+    payload: Arc<str>,
+    tier: CacheTier,
+    /// Logical LRU clock stamp: larger = used more recently. Stamps come
+    /// from one monotonic counter shared by inserts and lookups, so they
+    /// are unique and eviction within a tier has a total order.
+    last_used: u64,
+}
+
+struct CacheState {
+    entries: HashMap<CacheKey, Entry>,
+    /// Running sum of payload lengths — kept exact by insert/evict so
+    /// budget checks never rescan the map.
+    bytes: u64,
 }
 
 /// Thread-safe decision store: in-memory map + optional JSON-per-entry
 /// persistence directory. Values are `Arc<str>` so a warm hit hands out
 /// the serialized report with an O(1) clone instead of copying multi-KB
 /// JSON under the map lock.
+///
+/// Lock order (when both are needed): the state lock is taken before the
+/// telemetry lock, never the reverse.
 pub struct DecisionCache {
     dir: Option<PathBuf>,
-    entries: Mutex<HashMap<CacheKey, Arc<str>>>,
+    state: Mutex<CacheState>,
+    budget: Mutex<CacheBudget>,
+    telemetry: Mutex<Option<CacheTelemetry>>,
+    /// Corruption seen before a [`CacheTelemetry`] was attached (e.g.
+    /// during `open`); drained into the attachment so nothing is lost.
+    pending_corrupt: Mutex<Vec<(String, String)>>,
+    use_seq: AtomicU64,
     tmp_seq: AtomicU64,
     lookups: AtomicU64,
     hits: AtomicU64,
     inserts: AtomicU64,
+    evictions: [AtomicU64; TIER_COUNT],
+    corrupt: AtomicU64,
 }
 
 impl DecisionCache {
-    /// A purely in-memory cache (tests, ephemeral runs).
-    pub fn in_memory() -> Self {
+    fn new_inner(dir: Option<PathBuf>) -> Self {
         DecisionCache {
-            dir: None,
-            entries: Mutex::new(HashMap::new()),
+            dir,
+            state: Mutex::new(CacheState { entries: HashMap::new(), bytes: 0 }),
+            budget: Mutex::new(CacheBudget::unlimited()),
+            telemetry: Mutex::new(None),
+            pending_corrupt: Mutex::new(Vec::new()),
+            use_seq: AtomicU64::new(1),
             tmp_seq: AtomicU64::new(0),
             lookups: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             inserts: AtomicU64::new(0),
+            evictions: Default::default(),
+            corrupt: AtomicU64::new(0),
         }
     }
 
+    /// A purely in-memory cache (tests, ephemeral runs).
+    pub fn in_memory() -> Self {
+        DecisionCache::new_inner(None)
+    }
+
     /// Open (creating if needed) a persistent cache directory and load
-    /// every existing entry. Corrupt or foreign files are skipped — a
-    /// damaged entry costs one re-verification, never a failed start.
+    /// every existing entry. Corrupt files are skipped *and counted*
+    /// (see [`CacheStats::corrupt`]) — a damaged entry costs one
+    /// re-verification, never a failed start; foreign `.json` files that
+    /// don't claim our format tag are skipped silently. Recency is
+    /// restored from the advisory index when present: index rows whose
+    /// file no longer exists are dropped, files the index doesn't know
+    /// load as least-recently-used. Entries written before tiers existed
+    /// (no `tier` field) load as [`CacheTier::Decision`].
     pub fn open(dir: &Path) -> Result<Self> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating decision cache dir {}", dir.display()))?;
-        let mut entries = HashMap::new();
-        for e in std::fs::read_dir(dir)
-            .with_context(|| format!("reading decision cache dir {}", dir.display()))?
-        {
-            let path = e?.path();
-            if path.extension().and_then(|x| x.to_str()) != Some("json") {
-                continue;
+        let cache = DecisionCache::new_inner(Some(dir.to_path_buf()));
+        let recency = match read_index(dir) {
+            Ok(map) => map,
+            Err(e) => {
+                cache.note_corrupt(
+                    &dir.join(INDEX_FILE).display().to_string(),
+                    &format!("unreadable cache index (recency reset): {e}"),
+                );
+                HashMap::new()
             }
-            if let Ok((key, report)) = load_entry(&path) {
-                entries.insert(key, report);
+        };
+        let mut max_stamp = 0u64;
+        {
+            let mut st = cache.state.lock().expect("decision cache lock");
+            for e in std::fs::read_dir(dir)
+                .with_context(|| format!("reading decision cache dir {}", dir.display()))?
+            {
+                let path = e?.path();
+                if path.extension().and_then(|x| x.to_str()) != Some("json") {
+                    continue;
+                }
+                if path.file_name().and_then(|x| x.to_str()) == Some(INDEX_FILE) {
+                    continue;
+                }
+                match classify_entry(&path) {
+                    Loaded::Ours { key, payload, tier } => {
+                        let stamp =
+                            recency.get(&key.file_stem()).copied().unwrap_or_default();
+                        max_stamp = max_stamp.max(stamp);
+                        st.bytes += payload.len() as u64;
+                        st.entries.insert(key, Entry { payload, tier, last_used: stamp });
+                    }
+                    Loaded::Foreign => {}
+                    Loaded::Corrupt(why) => {
+                        cache.note_corrupt(&path.display().to_string(), &why);
+                    }
+                }
             }
         }
-        Ok(DecisionCache {
-            dir: Some(dir.to_path_buf()),
-            entries: Mutex::new(entries),
-            tmp_seq: AtomicU64::new(0),
-            lookups: AtomicU64::new(0),
-            hits: AtomicU64::new(0),
-            inserts: AtomicU64::new(0),
-        })
+        cache.use_seq.store(max_stamp + 1, Ordering::Relaxed);
+        Ok(cache)
     }
 
     /// The persistence directory, if any.
@@ -164,7 +437,7 @@ impl DecisionCache {
 
     /// Number of cached decisions.
     pub fn len(&self) -> usize {
-        self.entries.lock().expect("decision cache lock").len()
+        self.state.lock().expect("decision cache lock").entries.len()
     }
 
     /// True when no decisions are cached.
@@ -172,14 +445,52 @@ impl DecisionCache {
         self.len() == 0
     }
 
-    /// Fetch the serialized report for a key, if present (O(1) `Arc` clone).
+    /// The standing budget enforced after every insert.
+    pub fn budget(&self) -> CacheBudget {
+        *self.budget.lock().expect("cache budget lock")
+    }
+
+    /// Set the standing budget. Enforcement happens on the *next* insert;
+    /// call [`DecisionCache::gc`] to apply it immediately.
+    pub fn set_budget(&self, budget: CacheBudget) {
+        *self.budget.lock().expect("cache budget lock") = budget;
+    }
+
+    /// Attach registry-backed instruments (idempotent in effect: the
+    /// service attaches once at startup). Corruption seen before the
+    /// attachment — typically during [`DecisionCache::open`] — is drained
+    /// into the counters and trace stream so startup rot is visible too.
+    pub fn attach_telemetry(&self, telemetry: CacheTelemetry) {
+        // Lock order: state before telemetry (usage read releases the
+        // state lock before the telemetry lock is taken).
+        let usage = self.usage();
+        let pending: Vec<(String, String)> =
+            std::mem::take(&mut *self.pending_corrupt.lock().expect("cache corrupt lock"));
+        for (what, why) in &pending {
+            telemetry.corrupt.inc();
+            telemetry
+                .recorder
+                .record(0, TraceEvent::CacheCorrupt { path: what.clone(), detail: why.clone() });
+        }
+        telemetry.bytes.set(usage.bytes as f64);
+        for (rank, c) in telemetry.evictions.iter().enumerate() {
+            c.add(self.evictions[rank].load(Ordering::Relaxed));
+        }
+        *self.telemetry.lock().expect("cache telemetry lock") = Some(telemetry);
+    }
+
+    /// Fetch the serialized report for a key, if present (O(1) `Arc`
+    /// clone). A hit refreshes the entry's LRU recency.
     pub fn lookup(&self, key: &CacheKey) -> Option<Arc<str>> {
         self.lookups.fetch_add(1, Ordering::Relaxed);
-        let found = self.entries.lock().expect("decision cache lock").get(key).cloned();
-        if found.is_some() {
+        let mut st = self.state.lock().expect("decision cache lock");
+        if let Some(e) = st.entries.get_mut(key) {
+            e.last_used = self.use_seq.fetch_add(1, Ordering::Relaxed);
             self.hits.fetch_add(1, Ordering::Relaxed);
+            Some(e.payload.clone())
+        } else {
+            None
         }
-        found
     }
 
     /// Snapshot of the monotonic traffic counters.
@@ -188,85 +499,369 @@ impl DecisionCache {
             lookups: self.lookups.load(Ordering::Relaxed),
             hits: self.hits.load(Ordering::Relaxed),
             inserts: self.inserts.load(Ordering::Relaxed),
+            evictions: [
+                self.evictions[0].load(Ordering::Relaxed),
+                self.evictions[1].load(Ordering::Relaxed),
+                self.evictions[2].load(Ordering::Relaxed),
+                self.evictions[3].load(Ordering::Relaxed),
+            ],
+            corrupt: self.corrupt.load(Ordering::Relaxed),
         }
     }
 
-    /// Store a serialized decision under a key (persisting it if the cache
-    /// is disk-backed). `report_json` must be a canonical serialization —
-    /// a full report or a pipeline stage artifact (the service caches
-    /// both); the write is tmp-file + rename so concurrent readers
-    /// of the directory never observe a torn entry. The in-memory map is
-    /// updated first — a failed disk write degrades persistence, never
-    /// in-process serving.
-    pub fn insert(&self, key: &CacheKey, report_json: &str) -> Result<()> {
-        self.inserts.fetch_add(1, Ordering::Relaxed);
-        self.entries
-            .lock()
-            .expect("decision cache lock")
-            .insert(key.clone(), Arc::from(report_json));
-        if let Some(dir) = &self.dir {
-            let report = json::parse(report_json)
-                .context("decision cache insert: report must be valid JSON")?;
-            let wrapper = Json::obj(vec![
-                ("format", Json::str(DECISION_FORMAT)),
-                ("source_hash", Json::str(&key.source_hash)),
-                ("entry", Json::str(&key.entry)),
-                ("db_fingerprint", Json::str(&key.db_fingerprint)),
-                ("report", report),
-            ]);
-            let stem = key.file_stem();
-            let seq = self.tmp_seq.fetch_add(1, Ordering::Relaxed);
-            let tmp = dir.join(format!(".{stem}.{}.{seq}.tmp", std::process::id()));
-            let path = dir.join(format!("{stem}.json"));
-            std::fs::write(&tmp, json::to_string_pretty(&wrapper))
-                .with_context(|| format!("writing decision entry {}", tmp.display()))?;
-            std::fs::rename(&tmp, &path)
-                .with_context(|| format!("publishing decision entry {}", path.display()))?;
+    /// Consistent occupancy snapshot (bytes and entries, total and per
+    /// tier), taken under the map lock. Between two observations the
+    /// cache never exceeds its budget *as seen through this method* —
+    /// budget enforcement runs inside the same lock as the insert that
+    /// could breach it.
+    pub fn usage(&self) -> CacheUsage {
+        let st = self.state.lock().expect("decision cache lock");
+        let mut u = CacheUsage {
+            bytes: st.bytes,
+            entries: st.entries.len(),
+            ..CacheUsage::default()
+        };
+        for e in st.entries.values() {
+            u.tier_bytes[e.tier.rank()] += e.payload.len() as u64;
+            u.tier_entries[e.tier.rank()] += 1;
         }
+        u
+    }
+
+    /// Store a full-decision entry ([`CacheTier::Decision`]) — see
+    /// [`DecisionCache::insert_tier`].
+    pub fn insert(&self, key: &CacheKey, report_json: &str) -> Result<()> {
+        self.insert_tier(key, CacheTier::Decision, report_json)
+    }
+
+    /// Store a serialized artifact under a key and tier (persisting it if
+    /// the cache is disk-backed). `report_json` must be a canonical
+    /// serialization — a full report or a pipeline stage artifact (the
+    /// service caches both); the write is tmp-file + rename so concurrent
+    /// readers of the directory never observe a torn entry. The in-memory
+    /// map is updated first — a failed disk write degrades persistence,
+    /// never in-process serving. If a standing [`CacheBudget`] is set,
+    /// it is enforced before returning: the call may evict other entries
+    /// (or, when the budget is smaller than this single artifact, the
+    /// just-inserted one — the budget invariant always wins).
+    pub fn insert_tier(&self, key: &CacheKey, tier: CacheTier, report_json: &str) -> Result<()> {
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+        let mut st = self.state.lock().expect("decision cache lock");
+        let payload: Arc<str> = Arc::from(report_json);
+        let stamp = self.use_seq.fetch_add(1, Ordering::Relaxed);
+        st.bytes += payload.len() as u64;
+        if let Some(old) =
+            st.entries.insert(key.clone(), Entry { payload, tier, last_used: stamp })
+        {
+            st.bytes -= old.payload.len() as u64;
+        }
+        if let Some(dir) = &self.dir {
+            self.write_entry_file(dir, key, tier, report_json)?;
+        }
+        let budget = self.budget();
+        if !budget.admits(st.bytes, st.entries.len()) {
+            self.evict_to_budget(&mut st, budget);
+        }
+        if self.dir.is_some() {
+            self.write_index_locked(&st)?;
+        }
+        self.publish_bytes(st.bytes);
         Ok(())
+    }
+
+    /// Evict down to `budget` in tier-priority-then-LRU order. With
+    /// `dry_run`, report what *would* be evicted without removing
+    /// anything. Eviction removes each victim's entry file before the
+    /// index is rewritten; because surviving files are never touched and
+    /// both the files and the index are written atomically, a crash
+    /// between any two steps leaves at worst a stale index row (dropped
+    /// on the next open) — never a corrupted survivor.
+    pub fn gc(&self, budget: CacheBudget, dry_run: bool) -> Result<GcOutcome> {
+        let mut st = self.state.lock().expect("decision cache lock");
+        let bytes_before = st.bytes;
+        let entries_before = st.entries.len();
+        let evicted = if dry_run {
+            select_victims(&st, budget)
+                .into_iter()
+                .map(|key| {
+                    let e = &st.entries[&key];
+                    EvictedEntry { tier: e.tier, bytes: e.payload.len() as u64, key }
+                })
+                .collect()
+        } else {
+            let evicted = self.evict_to_budget(&mut st, budget);
+            if self.dir.is_some() {
+                self.write_index_locked(&st)?;
+            }
+            evicted
+        };
+        self.publish_bytes(st.bytes);
+        Ok(GcOutcome {
+            dry_run,
+            bytes_before,
+            bytes_after: st.bytes,
+            entries_before,
+            entries_after: st.entries.len(),
+            evicted,
+        })
     }
 
     /// Drop every cached decision (memory and disk). Used by benches to
     /// build a guaranteed-cold cache. Only files that actually parse as
     /// [`DECISION_FORMAT`] entries are removed — foreign `.json` files
     /// that `open` deliberately skips are left alone, mirroring that
-    /// tolerance on the write side. A *corrupt* entry of our own is
-    /// indistinguishable from a foreign file and is also left behind;
-    /// that is harmless — `open` skips it and the next verification of
-    /// its key overwrites it via the tmp-file + rename in `insert`.
+    /// tolerance on the write side. A *corrupt* file is also left behind
+    /// but is **counted** (`fbo_cache_corrupt_total` plus a warn-level
+    /// `cache-corrupt` trace event) so rot is visible to operators; the
+    /// next verification of its key overwrites it via the tmp-file +
+    /// rename in [`DecisionCache::insert_tier`].
     pub fn clear(&self) -> Result<()> {
-        self.entries.lock().expect("decision cache lock").clear();
+        let mut st = self.state.lock().expect("decision cache lock");
+        st.entries.clear();
+        st.bytes = 0;
         if let Some(dir) = &self.dir {
             for e in std::fs::read_dir(dir)? {
                 let path = e?.path();
                 if path.extension().and_then(|x| x.to_str()) != Some("json") {
                     continue;
                 }
-                if load_entry(&path).is_ok() {
-                    std::fs::remove_file(&path)
-                        .with_context(|| format!("removing {}", path.display()))?;
+                if path.file_name().and_then(|x| x.to_str()) == Some(INDEX_FILE) {
+                    continue;
+                }
+                match classify_entry(&path) {
+                    Loaded::Ours { .. } => {
+                        std::fs::remove_file(&path)
+                            .with_context(|| format!("removing {}", path.display()))?;
+                    }
+                    Loaded::Foreign => {}
+                    Loaded::Corrupt(why) => {
+                        self.note_corrupt(&path.display().to_string(), &why);
+                    }
                 }
             }
+            self.write_index_locked(&st)?;
         }
+        self.publish_bytes(st.bytes);
         Ok(())
+    }
+
+    /// Remove victims until `budget` is satisfied; the caller holds the
+    /// state lock and rewrites the index afterwards.
+    fn evict_to_budget(&self, st: &mut CacheState, budget: CacheBudget) -> Vec<EvictedEntry> {
+        let victims = select_victims(st, budget);
+        let mut evicted = Vec::with_capacity(victims.len());
+        for key in victims {
+            let e = st.entries.remove(&key).expect("selected victim must exist");
+            st.bytes -= e.payload.len() as u64;
+            if let Some(dir) = &self.dir {
+                // A missing file is exactly the post-state eviction wants;
+                // other errors (permissions) leave an orphan that the next
+                // open re-adopts — safe either way, so neither is fatal.
+                let _ = std::fs::remove_file(dir.join(format!("{}.json", key.file_stem())));
+            }
+            self.note_eviction(e.tier);
+            evicted.push(EvictedEntry { key, tier: e.tier, bytes: e.payload.len() as u64 });
+        }
+        evicted
+    }
+
+    fn write_entry_file(
+        &self,
+        dir: &Path,
+        key: &CacheKey,
+        tier: CacheTier,
+        report_json: &str,
+    ) -> Result<()> {
+        let report = json::parse(report_json)
+            .context("decision cache insert: report must be valid JSON")?;
+        let wrapper = Json::obj(vec![
+            ("format", Json::str(DECISION_FORMAT)),
+            ("source_hash", Json::str(&key.source_hash)),
+            ("entry", Json::str(&key.entry)),
+            ("db_fingerprint", Json::str(&key.db_fingerprint)),
+            ("tier", Json::str(tier.as_str())),
+            ("report", report),
+        ]);
+        let stem = key.file_stem();
+        let path = dir.join(format!("{stem}.json"));
+        self.publish_atomic(dir, &stem, &path, &json::to_string_pretty(&wrapper))
+    }
+
+    fn write_index_locked(&self, st: &CacheState) -> Result<()> {
+        let dir = self.dir.as_ref().expect("index write requires a directory");
+        let mut rows: Vec<(String, &Entry)> =
+            st.entries.iter().map(|(k, e)| (k.file_stem(), e)).collect();
+        rows.sort_by(|a, b| a.0.cmp(&b.0));
+        let entries = rows
+            .into_iter()
+            .map(|(stem, e)| {
+                Json::obj(vec![
+                    ("stem", Json::str(stem)),
+                    ("tier", Json::str(e.tier.as_str())),
+                    ("last_used", Json::num(e.last_used as f64)),
+                    ("bytes", Json::num(e.payload.len() as f64)),
+                ])
+            })
+            .collect();
+        let index = Json::obj(vec![
+            ("format", Json::str(INDEX_FORMAT)),
+            ("entries", Json::Arr(entries)),
+        ]);
+        let path = dir.join(INDEX_FILE);
+        self.publish_atomic(dir, "index", &path, &json::to_string_pretty(&index))
+    }
+
+    /// Tmp-file + rename publication — the only way bytes reach the
+    /// cache directory, so readers never observe a torn file.
+    fn publish_atomic(&self, dir: &Path, stem: &str, path: &Path, body: &str) -> Result<()> {
+        let seq = self.tmp_seq.fetch_add(1, Ordering::Relaxed);
+        let tmp = dir.join(format!(".{stem}.{}.{seq}.tmp", std::process::id()));
+        std::fs::write(&tmp, body)
+            .with_context(|| format!("writing cache file {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("publishing cache file {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Count a corrupt artifact and surface it: warn on stderr, bump
+    /// `fbo_cache_corrupt_total`, and emit a `cache-corrupt` trace event
+    /// (buffered until a [`CacheTelemetry`] is attached).
+    fn note_corrupt(&self, what: &str, why: &str) {
+        self.corrupt.fetch_add(1, Ordering::Relaxed);
+        eprintln!("[fbo] warning: corrupt cache artifact {what}: {why}");
+        {
+            let tel = self.telemetry.lock().expect("cache telemetry lock");
+            if let Some(t) = &*tel {
+                t.corrupt.inc();
+                t.recorder.record(
+                    0,
+                    TraceEvent::CacheCorrupt { path: what.to_string(), detail: why.to_string() },
+                );
+                return;
+            }
+        }
+        self.pending_corrupt
+            .lock()
+            .expect("cache corrupt lock")
+            .push((what.to_string(), why.to_string()));
+    }
+
+    fn note_eviction(&self, tier: CacheTier) {
+        self.evictions[tier.rank()].fetch_add(1, Ordering::Relaxed);
+        if let Some(t) = &*self.telemetry.lock().expect("cache telemetry lock") {
+            t.evictions[tier.rank()].inc();
+        }
+    }
+
+    fn publish_bytes(&self, bytes: u64) {
+        if let Some(t) = &*self.telemetry.lock().expect("cache telemetry lock") {
+            t.bytes.set(bytes as f64);
+        }
     }
 }
 
-fn load_entry(path: &Path) -> Result<(CacheKey, Arc<str>)> {
-    let src = std::fs::read_to_string(path)?;
-    let v = json::parse(&src)?;
-    if v.get("format")?.as_str()? != DECISION_FORMAT {
-        bail!("not a decision entry");
+/// Victim keys for bringing `st` within `budget`, in eviction order:
+/// tier priority ascending ([`CacheTier::rank`]), then least recently
+/// used first. Stops as soon as both limits are satisfied.
+fn select_victims(st: &CacheState, budget: CacheBudget) -> Vec<CacheKey> {
+    if budget.admits(st.bytes, st.entries.len()) {
+        return Vec::new();
     }
+    let mut order: Vec<(usize, u64, u64, CacheKey)> = st
+        .entries
+        .iter()
+        .map(|(k, e)| (e.tier.rank(), e.last_used, e.payload.len() as u64, k.clone()))
+        .collect();
+    order.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+    let mut bytes = st.bytes;
+    let mut count = st.entries.len();
+    let mut victims = Vec::new();
+    for (_, _, size, key) in order {
+        if budget.admits(bytes, count) {
+            break;
+        }
+        bytes -= size;
+        count -= 1;
+        victims.push(key);
+    }
+    victims
+}
+
+enum Loaded {
+    Ours { key: CacheKey, payload: Arc<str>, tier: CacheTier },
+    Foreign,
+    Corrupt(String),
+}
+
+/// Classify one `.json` file in the cache directory. *Foreign* files —
+/// valid JSON that doesn't carry our format tag — are tolerated silently
+/// (operators park notes next to entries; `clear` spares them). A file
+/// that is not valid JSON at all, or that claims [`DECISION_FORMAT`] but
+/// can't be loaded, is *corrupt*: it degrades to a cache miss and is
+/// counted so rot is visible.
+fn classify_entry(path: &Path) -> Loaded {
+    let src = match std::fs::read_to_string(path) {
+        Ok(s) => s,
+        Err(e) => return Loaded::Corrupt(format!("unreadable: {e}")),
+    };
+    let v = match json::parse(&src) {
+        Ok(v) => v,
+        Err(e) => return Loaded::Corrupt(format!("invalid JSON: {e}")),
+    };
+    match v.opt("format").and_then(|f| f.as_str().ok()) {
+        Some(DECISION_FORMAT) => {}
+        _ => return Loaded::Foreign,
+    }
+    match parse_ours(&v) {
+        Ok(loaded) => loaded,
+        Err(e) => Loaded::Corrupt(format!("malformed entry: {e:#}")),
+    }
+}
+
+fn parse_ours(v: &Json) -> Result<Loaded> {
     let key = CacheKey {
         source_hash: v.get("source_hash")?.as_str()?.to_string(),
         entry: v.get("entry")?.as_str()?.to_string(),
         db_fingerprint: v.get("db_fingerprint")?.as_str()?.to_string(),
     };
+    // Entries written before tiers existed carry no tier field: they are
+    // full decisions (stage artifacts gained persistence together with
+    // tiers), so Decision is the faithful default.
+    let tier = match v.opt("tier") {
+        None => CacheTier::Decision,
+        Some(t) => {
+            let name = t.as_str()?;
+            CacheTier::parse(name).ok_or_else(|| anyhow!("unknown cache tier {name:?}"))?
+        }
+    };
     // Re-print the report subtree standalone: the canonical writer
     // reproduces exactly the bytes `insert` was given.
-    let report = json::to_string_pretty(v.get("report")?);
-    Ok((key, Arc::from(report)))
+    let payload: Arc<str> = Arc::from(json::to_string_pretty(v.get("report")?));
+    Ok(Loaded::Ours { key, payload, tier })
+}
+
+/// Recency map (`file stem -> last_used`) from the advisory index, or an
+/// error when the index exists but cannot be read (corrupt index: the
+/// caller counts it and proceeds with recency reset — entry files are
+/// authoritative, so no payload is ever lost to a bad index).
+fn read_index(dir: &Path) -> Result<HashMap<String, u64>> {
+    let path = dir.join(INDEX_FILE);
+    let src = match std::fs::read_to_string(&path) {
+        Ok(s) => s,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(HashMap::new()),
+        Err(e) => bail!("unreadable index: {e}"),
+    };
+    let v = json::parse(&src).context("index is not valid JSON")?;
+    if v.get("format")?.as_str()? != INDEX_FORMAT {
+        bail!("not a cache index");
+    }
+    let mut recency = HashMap::new();
+    for row in v.get("entries")?.as_arr()? {
+        let stem = row.get("stem")?.as_str()?.to_string();
+        let last_used = row.get("last_used")?.as_f64()? as u64;
+        recency.insert(stem, last_used);
+    }
+    Ok(recency)
 }
 
 #[cfg(test)]
@@ -274,6 +869,14 @@ mod tests {
     use super::*;
 
     const FP: &str = "00000000deadbeef";
+
+    fn key(tag: u32) -> CacheKey {
+        CacheKey {
+            source_hash: format!("{tag:016x}"),
+            entry: "main".to_string(),
+            db_fingerprint: FP.to_string(),
+        }
+    }
 
     #[test]
     fn key_is_insensitive_to_whitespace_and_comments() {
@@ -304,6 +907,29 @@ mod tests {
     }
 
     #[test]
+    fn tier_names_round_trip_and_order() {
+        for t in CacheTier::ALL {
+            assert_eq!(CacheTier::parse(t.as_str()), Some(t));
+        }
+        assert_eq!(CacheTier::parse("bogus"), None);
+        // Eviction priority: cheap-to-recompute first, verified last.
+        assert!(CacheTier::Reconciled < CacheTier::PowerScored);
+        assert!(CacheTier::PowerScored < CacheTier::Decision);
+        assert!(CacheTier::Decision < CacheTier::Verified);
+    }
+
+    #[test]
+    fn byte_sizes_parse() {
+        assert_eq!(parse_byte_size("4096").unwrap(), 4096);
+        assert_eq!(parse_byte_size("64k").unwrap(), 64 << 10);
+        assert_eq!(parse_byte_size("64KB").unwrap(), 64 << 10);
+        assert_eq!(parse_byte_size("10m").unwrap(), 10 << 20);
+        assert_eq!(parse_byte_size("1g").unwrap(), 1 << 30);
+        assert!(parse_byte_size("ten").is_err());
+        assert!(parse_byte_size("1t").is_err());
+    }
+
+    #[test]
     fn in_memory_insert_lookup() {
         let c = DecisionCache::in_memory();
         let k = CacheKey::compute("int main() { return 0; }", "main", FP).unwrap();
@@ -312,10 +938,92 @@ mod tests {
         assert_eq!(&*c.lookup(&k).unwrap(), r#"{"x": 1}"#);
         assert_eq!(c.len(), 1);
         // Traffic counters saw the miss, the hit, and the insert.
-        assert_eq!(c.stats(), CacheStats { lookups: 2, hits: 1, inserts: 1 });
+        assert_eq!(
+            c.stats(),
+            CacheStats { lookups: 2, hits: 1, inserts: 1, ..CacheStats::default() }
+        );
         c.clear().unwrap();
         assert!(c.is_empty());
         assert_eq!(c.stats().inserts, 1, "clear drops entries, not counters");
+    }
+
+    #[test]
+    fn eviction_prefers_cheap_tiers_then_lru() {
+        let c = DecisionCache::in_memory();
+        // Two entries per tier; payloads are 10 bytes each.
+        let body = r#"{"x": 111}"#;
+        let mut tags = 0u32;
+        let mut keys = Vec::new();
+        for tier in CacheTier::ALL {
+            for _ in 0..2 {
+                let k = key(tags);
+                tags += 1;
+                c.insert_tier(&k, tier, body).unwrap();
+                keys.push((k, tier));
+            }
+        }
+        // Touch the FIRST entry of every tier: the untouched second entry
+        // becomes the LRU victim within its tier.
+        for (k, _) in keys.iter().step_by(2) {
+            assert!(c.lookup(k).is_some());
+        }
+        let before = c.usage();
+        assert_eq!(before.entries, 8);
+        // Budget for 5 entries: evicts 3 in order reconciled(LRU),
+        // reconciled(touched), power-scored(LRU).
+        let out =
+            c.gc(CacheBudget { max_bytes: None, max_entries: Some(5) }, false).unwrap();
+        assert_eq!(out.entries_before, 8);
+        assert_eq!(out.entries_after, 5);
+        let evicted: Vec<(CacheKey, CacheTier)> =
+            out.evicted.iter().map(|e| (e.key.clone(), e.tier)).collect();
+        assert_eq!(
+            evicted,
+            vec![
+                (keys[1].0.clone(), CacheTier::Reconciled),
+                (keys[0].0.clone(), CacheTier::Reconciled),
+                (keys[3].0.clone(), CacheTier::PowerScored),
+            ]
+        );
+        // Verified entries are never evicted while cheaper tiers remain.
+        assert!(c.lookup(&keys[6].0).is_some());
+        assert!(c.lookup(&keys[7].0).is_some());
+        assert_eq!(c.stats().evictions, [2, 1, 0, 0]);
+    }
+
+    #[test]
+    fn standing_budget_enforced_on_insert() {
+        let c = DecisionCache::in_memory();
+        c.set_budget(CacheBudget { max_bytes: Some(25), max_entries: None });
+        let body = r#"{"x": 111}"#; // 10 canonical bytes
+        c.insert_tier(&key(1), CacheTier::Verified, body).unwrap();
+        c.insert_tier(&key(2), CacheTier::Verified, body).unwrap();
+        assert_eq!(c.usage().bytes, 20);
+        // Third insert breaches 25 bytes: the LRU verified entry goes.
+        c.insert_tier(&key(3), CacheTier::Verified, body).unwrap();
+        let u = c.usage();
+        assert!(u.bytes <= 25, "budget must hold after insert, got {}", u.bytes);
+        assert_eq!(u.entries, 2);
+        assert!(c.lookup(&key(1)).is_none(), "oldest entry evicted");
+        assert!(c.lookup(&key(3)).is_some(), "newest entry kept");
+    }
+
+    #[test]
+    fn gc_dry_run_reports_without_deleting() {
+        let dir = std::env::temp_dir().join(format!("fbo-cachedry-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = DecisionCache::open(&dir).unwrap();
+        c.insert_tier(&key(1), CacheTier::Reconciled, r#"{"x": 1}"#).unwrap();
+        c.insert_tier(&key(2), CacheTier::Verified, r#"{"x": 2}"#).unwrap();
+        let out = c.gc(CacheBudget { max_bytes: None, max_entries: Some(1) }, true).unwrap();
+        assert!(out.dry_run);
+        assert_eq!(out.evicted.len(), 1);
+        assert_eq!(out.evicted[0].tier, CacheTier::Reconciled);
+        assert_eq!(out.entries_after, 2, "dry run must not evict");
+        assert_eq!(c.len(), 2);
+        assert!(dir.join(format!("{}.json", key(1).file_stem())).exists());
+        assert_eq!(c.stats().evictions_total(), 0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -332,10 +1040,58 @@ mod tests {
         let c = DecisionCache::open(&dir).unwrap();
         assert_eq!(c.len(), 1);
         assert_eq!(&*c.lookup(&k).unwrap(), body, "reloaded entry must be byte-identical");
-        // Corrupt files are skipped, not fatal.
+        // Corrupt files are skipped — and now counted — not fatal.
         std::fs::write(dir.join("junk.json"), "{ not json").unwrap();
         let c = DecisionCache::open(&dir).unwrap();
         assert_eq!(c.len(), 1);
+        assert_eq!(c.stats().corrupt, 1, "invalid-JSON file must be counted");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recency_survives_reopen_via_index() {
+        let dir = std::env::temp_dir().join(format!("fbo-cachelru-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let c = DecisionCache::open(&dir).unwrap();
+            c.insert_tier(&key(1), CacheTier::Verified, r#"{"x": 1}"#).unwrap();
+            c.insert_tier(&key(2), CacheTier::Verified, r#"{"x": 2}"#).unwrap();
+            // key(1) is older by insertion but freshly used: the index
+            // must persist that, so after reopen key(2) is the victim.
+            assert!(c.lookup(&key(1)).is_some());
+        }
+        let c = DecisionCache::open(&dir).unwrap();
+        let out = c.gc(CacheBudget { max_bytes: None, max_entries: Some(1) }, false).unwrap();
+        assert_eq!(out.evicted.len(), 1);
+        assert_eq!(out.evicted[0].key, key(2), "LRU order must survive reopen");
+        assert!(c.lookup(&key(1)).is_some());
+        assert!(!dir.join(format!("{}.json", key(2).file_stem())).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tier_less_legacy_entries_load_as_decisions() {
+        let dir = std::env::temp_dir().join(format!("fbo-cachelegacy-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let k = key(9);
+        // A pre-tier entry: same wrapper, no "tier" field, no index.
+        let wrapper = Json::obj(vec![
+            ("format", Json::str(DECISION_FORMAT)),
+            ("source_hash", Json::str(&k.source_hash)),
+            ("entry", Json::str(&k.entry)),
+            ("db_fingerprint", Json::str(&k.db_fingerprint)),
+            ("report", json::parse(r#"{"x": 1}"#).unwrap()),
+        ]);
+        std::fs::write(
+            dir.join(format!("{}.json", k.file_stem())),
+            json::to_string_pretty(&wrapper),
+        )
+        .unwrap();
+        let c = DecisionCache::open(&dir).unwrap();
+        assert_eq!(c.stats().corrupt, 0);
+        assert!(c.lookup(&k).is_some());
+        assert_eq!(c.usage().tier_entries[CacheTier::Decision.rank()], 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -361,6 +1117,7 @@ mod tests {
             !dir.join(format!("{}.json", k.file_stem())).exists(),
             "our entry must be removed"
         );
+        assert_eq!(c.stats().corrupt, 0, "foreign files are tolerated, not corrupt");
         // Reopening sees the same world clear() left behind: no entries.
         let c = DecisionCache::open(&dir).unwrap();
         assert!(c.is_empty());

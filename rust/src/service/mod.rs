@@ -23,7 +23,11 @@
 //!   still-valid stage (a verify-settings change replays discovery; a
 //!   `--power-policy` change replays the verified measurements without
 //!   re-measuring; a backend retarget replays the power scores and only
-//!   re-arbitrates).
+//!   re-arbitrates). The store is **size-bounded**: a standing
+//!   [`CacheBudget`] (bytes and/or entries) is enforced after every
+//!   insert with tier-aware LRU eviction — cheap-to-recompute tiers go
+//!   first, `verified` measurements last — and `fbo cache gc` / `fbo
+//!   cache stats` manage the store offline.
 //! * [`pool`] — a **worker pool** running one [`crate::coordinator::Coordinator`]
 //!   per thread (the PJRT runtime is deliberately single-threaded state:
 //!   `Rc`/`RefCell`), fed by per-worker queues sharded on the cache key
@@ -31,7 +35,11 @@
 //!   for one key), with submit/await and batch APIs plus per-service
 //!   counters (jobs, cache hits/misses, stage replays, per-stage latency
 //!   via the pipeline's [`crate::coordinator::StageObserver`] hook, and
-//!   p50/p95 latency).
+//!   p50/p95 latency). The pool **sheds load** instead of queueing
+//!   without bound: per-client token buckets and bounded per-worker
+//!   queues ([`AdmissionConfig`]) reject over-limit submits with a
+//!   structured [`JobRejected`], and shutdown is drain-then-stop
+//!   ([`OffloadService::begin_shutdown`]).
 //! * [`verify_exec`] — **parallel pattern-search verification**: with
 //!   `verify_parallel > 1` the independent pattern measurements of one
 //!   Step-3 search fan out across the pool's idle sibling engines
@@ -86,9 +94,12 @@ pub mod cache;
 pub mod pool;
 pub mod verify_exec;
 
-pub use cache::{CacheKey, CacheStats, DecisionCache, DECISION_FORMAT};
+pub use cache::{
+    parse_byte_size, CacheBudget, CacheKey, CacheStats, CacheTelemetry, CacheTier, CacheUsage,
+    DecisionCache, EvictedEntry, GcOutcome, DECISION_FORMAT, TIER_COUNT,
+};
 pub use pool::{
-    CompletedJob, JobHandle, MetricsHandle, OffloadService, ServiceConfig, StageStat,
-    StatsSnapshot, WorkerStat,
+    AdmissionConfig, CompletedJob, JobHandle, JobRejected, MetricsHandle, OffloadService,
+    ServiceConfig, ShedReason, StageStat, StatsSnapshot, WorkerStat,
 };
 pub use verify_exec::{MeasurePool, PooledExecutor};

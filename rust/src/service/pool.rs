@@ -37,6 +37,19 @@
 //! part of any cache fingerprint — serial and pooled searches reduce to
 //! the same outcome, so their cached decisions are byte-identical.
 //!
+//! **Admission control**: the service front-end sheds load instead of
+//! queueing without bound. Each client is metered by a token bucket
+//! ([`AdmissionConfig::rate_per_client`]) and each worker queue is
+//! bounded ([`AdmissionConfig::queue_limit`]); a submit that would
+//! breach either limit resolves immediately with a structured
+//! [`JobRejected`] carrying the observed queue depth and a retry hint,
+//! counted in `fbo_jobs_shed_total{reason}`. Shutdown is drain-then-stop:
+//! [`OffloadService::begin_shutdown`] stops admission (subsequent
+//! submits shed with [`ShedReason::ShuttingDown`]) while jobs already
+//! queued complete normally — the shutdown marker sits behind them in
+//! FIFO order — and anything that races past the marker is rejected
+//! explicitly rather than dropped.
+//!
 //! **Telemetry**: every job id doubles as its trace id on the service's
 //! [`TraceRecorder`] — stage spans, pattern measurements, power scores,
 //! arbitration verdicts, cache-tier probes, resume markers, and
@@ -48,11 +61,11 @@
 //! decisions byte-identically.
 
 use std::cell::{Cell, RefCell};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -71,8 +84,100 @@ use crate::telemetry::{
 };
 use crate::transform::InterfacePolicy;
 
-use super::cache::{CacheKey, DecisionCache};
+use super::cache::{CacheBudget, CacheKey, CacheTelemetry, CacheTier, DecisionCache};
 use super::verify_exec::{self, DispatchSink, ExecStats, MeasureJob, MeasureTx, PooledExecutor};
+
+/// Admission-control settings: how the service sheds load instead of
+/// queueing without bound. The default admits everything (the
+/// pre-admission behavior) — production deployments bound both knobs.
+///
+/// Deliberately **not** part of any cache fingerprint: admission decides
+/// *whether* a job runs, never what its decision is, so differently
+/// throttled services replay each other's cached decisions
+/// byte-identically.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdmissionConfig {
+    /// Max decision jobs queued-or-running per worker before submits
+    /// shed with [`ShedReason::QueueFull`]. `0` = unbounded.
+    pub queue_limit: usize,
+    /// Sustained per-client admission rate in jobs/second, enforced by a
+    /// token bucket per client id. `None` = unlimited.
+    pub rate_per_client: Option<f64>,
+    /// Token-bucket capacity: how many jobs a client may burst above the
+    /// sustained rate. Clamped to at least 1.
+    pub burst: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { queue_limit: 0, rate_per_client: None, burst: 1.0 }
+    }
+}
+
+/// Why a submit was shed (the `reason` label of `fbo_jobs_shed_total`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShedReason {
+    /// The target worker's queue was at [`AdmissionConfig::queue_limit`].
+    QueueFull,
+    /// The client's token bucket was empty.
+    RateLimited,
+    /// The service is draining ([`OffloadService::begin_shutdown`]).
+    ShuttingDown,
+}
+
+impl ShedReason {
+    /// All reasons, index-aligned with the service's shed counters.
+    pub const ALL: [ShedReason; 3] =
+        [ShedReason::QueueFull, ShedReason::RateLimited, ShedReason::ShuttingDown];
+
+    /// Stable wire name (metric label value).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue-full",
+            ShedReason::RateLimited => "rate-limited",
+            ShedReason::ShuttingDown => "shutting-down",
+        }
+    }
+
+    fn rank(self) -> usize {
+        match self {
+            ShedReason::QueueFull => 0,
+            ShedReason::RateLimited => 1,
+            ShedReason::ShuttingDown => 2,
+        }
+    }
+}
+
+/// Structured shed response: the submit was rejected by admission
+/// control, not failed by the pipeline. Callers distinguish sheds from
+/// real failures with `err.downcast_ref::<JobRejected>()` and can back
+/// off for `retry_after` before resubmitting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRejected {
+    /// Which limit rejected the job.
+    pub reason: ShedReason,
+    /// Decision jobs queued-or-running on the rejecting queue at shed
+    /// time (service-wide depth for rate-limit and shutdown sheds).
+    pub queue_depth: u64,
+    /// Suggested back-off before resubmitting: token-accrual time for
+    /// rate-limit sheds, estimated queue-drain time for queue-full sheds,
+    /// zero when the service is shutting down (retrying cannot help).
+    pub retry_after: Duration,
+}
+
+impl std::fmt::Display for JobRejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "job rejected ({}): queue depth {}, retry after {:.3}s",
+            self.reason.as_str(),
+            self.queue_depth,
+            self.retry_after.as_secs_f64(),
+        )
+    }
+}
+
+impl std::error::Error for JobRejected {}
 
 /// Service construction parameters.
 #[derive(Clone)]
@@ -127,6 +232,15 @@ pub struct ServiceConfig {
     /// decides them, so traced and untraced services replay each other's
     /// cached decisions byte-identically.
     pub telemetry: TelemetryConfig,
+    /// Load-shedding limits (CLI `--queue-limit`, `--rate-limit`,
+    /// `--burst`). Like telemetry, never fingerprinted.
+    pub admission: AdmissionConfig,
+    /// Standing cache size budget (CLI `--cache-max-bytes`,
+    /// `--cache-max-entries`), enforced at startup over pre-existing
+    /// entries and after every insert with tier-aware LRU eviction
+    /// (see [`super::cache`]). Never fingerprinted: eviction changes
+    /// what is *cached*, never what a decision *is*.
+    pub cache_budget: CacheBudget,
 }
 
 impl ServiceConfig {
@@ -147,6 +261,8 @@ impl ServiceConfig {
             power_model: PowerModel::builtin(),
             verify_parallel: 1,
             telemetry: TelemetryConfig::default(),
+            admission: AdmissionConfig::default(),
+            cache_budget: CacheBudget::unlimited(),
         }
     }
 
@@ -305,6 +421,11 @@ impl WorkerQueue {
     }
 }
 
+/// Help string for `fbo_cache_corrupt_total` — one constant because the
+/// counter is registered from two sites (service counters and the
+/// cache's [`CacheTelemetry`]) that must resolve to the same instrument.
+const CORRUPT_HELP: &str = "Corrupt cache artifacts detected (each degrades to a miss).";
+
 /// Registry-backed service counters. Each handle is an `Arc` into the
 /// service's shared [`Registry`], so the same numbers feed `stats()`
 /// snapshots and the Prometheus exposition without double bookkeeping.
@@ -321,6 +442,13 @@ struct Counters {
     verified_hits: Arc<Counter>,
     power_hits: Arc<Counter>,
     dropped_results: Arc<Counter>,
+    /// `fbo_jobs_shed_total{reason=...}`, index-aligned with
+    /// [`ShedReason::ALL`].
+    shed: [Arc<Counter>; 3],
+    /// `fbo_cache_corrupt_total` — shared with the cache's attached
+    /// [`CacheTelemetry`], so file-level rot (found at open/clear) and
+    /// decode-level rot (found at replay) land on one series.
+    cache_corrupt: Arc<Counter>,
     queue_depth: Arc<Gauge>,
     job_seconds: Arc<Histogram>,
 }
@@ -352,6 +480,14 @@ impl Counters {
                 "Completed results whose submitter stopped waiting.",
                 &[],
             ),
+            shed: ShedReason::ALL.map(|r| {
+                reg.counter(
+                    "fbo_jobs_shed_total",
+                    "Submits rejected by admission control, by reason.",
+                    &[("reason", r.as_str())],
+                )
+            }),
+            cache_corrupt: reg.counter("fbo_cache_corrupt_total", CORRUPT_HELP, &[]),
             queue_depth: reg.gauge(
                 "fbo_queue_depth",
                 "Decision jobs currently queued or running.",
@@ -433,8 +569,25 @@ struct WorkerTelemetry {
     util: Arc<Gauge>,
 }
 
+/// One client's token bucket (see [`AdmissionConfig::rate_per_client`]).
+struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+}
+
 struct Shared {
     cache: DecisionCache,
+    /// Load-shedding limits, fixed at startup.
+    admission: AdmissionConfig,
+    /// Flipped by [`OffloadService::begin_shutdown`]: subsequent submits
+    /// shed with [`ShedReason::ShuttingDown`] while queued jobs drain.
+    draining: AtomicBool,
+    /// Decision jobs queued-or-running per worker queue, index-aligned
+    /// with the pool; the bound [`AdmissionConfig::queue_limit`] checks
+    /// against. (The `fbo_queue_depth` gauge is the sum.)
+    shard_depth: Vec<AtomicU64>,
+    /// Per-client token buckets, lazily created on first submit.
+    buckets: Mutex<HashMap<String, TokenBucket>>,
     /// Per-stage cache-key components — see [`decision_fingerprint`].
     fingerprints: StageFingerprints,
     /// Persist/resume the `PowerScored` tier. Off under the default
@@ -458,6 +611,10 @@ struct Shared {
     workers_tm: Vec<WorkerTelemetry>,
     /// `fbo_cache_entries`, refreshed on every exposition/snapshot.
     cache_entries_gauge: Arc<Gauge>,
+    /// `fbo_cache_bytes` — the cache updates it on every mutation via its
+    /// attached [`CacheTelemetry`]; refreshed here too so an exposition
+    /// after an external `fbo cache gc` reads current occupancy.
+    cache_bytes_gauge: Arc<Gauge>,
     /// `fbo_uptime_seconds`, refreshed on every exposition/snapshot.
     uptime_gauge: Arc<Gauge>,
     started: Instant,
@@ -639,10 +796,73 @@ impl Shared {
         }
     }
 
+    /// Admit or rate-limit one submit from `client`. `Err` carries the
+    /// back-off until the bucket accrues the next token.
+    fn admit_client(&self, client: &str) -> std::result::Result<(), Duration> {
+        let Some(rate) = self.admission.rate_per_client else {
+            return Ok(());
+        };
+        if rate <= 0.0 {
+            // A zero rate admits nothing; the hint is arbitrary but finite.
+            return Err(Duration::from_secs(1));
+        }
+        let burst = self.admission.burst.max(1.0);
+        let now = Instant::now();
+        let mut buckets = self.buckets.lock().expect("admission bucket lock");
+        let b = buckets
+            .entry(client.to_string())
+            .or_insert(TokenBucket { tokens: burst, last: now });
+        b.tokens = (b.tokens + now.duration_since(b.last).as_secs_f64() * rate).min(burst);
+        b.last = now;
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            Ok(())
+        } else {
+            Err(Duration::from_secs_f64((1.0 - b.tokens) / rate))
+        }
+    }
+
+    /// Estimated drain time of a queue `depth` jobs deep: mean completed
+    /// job latency (1s before any completion) times the depth, clamped to
+    /// a sane retry window.
+    fn retry_hint(&self, depth: u64) -> Duration {
+        let h = &self.counters.job_seconds;
+        let mean = if h.count() > 0 { h.sum().as_secs_f64() / h.count() as f64 } else { 1.0 };
+        let hint = mean * depth.max(1) as f64;
+        Duration::from_secs_f64(hint.clamp(0.1, 60.0))
+    }
+
+    /// Count one shed and close its trace. The job never entered a
+    /// queue, so it is neither completed nor failed — shed is its own
+    /// outcome (`submitted == completed + failed + shed + in-flight`).
+    fn record_shed(&self, id: u64, rejected: &JobRejected) {
+        self.counters.shed[rejected.reason.rank()].inc();
+        self.recorder.record(id, TraceEvent::RequestCompleted { from_cache: false, ok: false });
+    }
+
+    /// Count a corrupt (undecodable) cache entry discovered at replay
+    /// time: warn, bump `fbo_cache_corrupt_total`, and emit the
+    /// warn-level `cache-corrupt` trace event under the job's trace.
+    fn note_corrupt_entry(&self, trace: u64, key: &CacheKey, what: &str, err: &anyhow::Error) {
+        eprintln!(
+            "fbo service: ignoring undecodable {what} cache entry {} ({err:#}); recomputing",
+            key.file_stem()
+        );
+        self.counters.cache_corrupt.inc();
+        self.recorder.record(
+            trace,
+            TraceEvent::CacheCorrupt {
+                path: format!("{}.json", key.file_stem()),
+                detail: format!("undecodable {what} entry: {err:#}"),
+            },
+        );
+    }
+
     /// Recompute the sampled gauges (cache size, uptime, worker
     /// utilization) so an exposition or snapshot reads current values.
     fn refresh_gauges(&self) {
         self.cache_entries_gauge.set(self.cache.len() as f64);
+        self.cache_bytes_gauge.set(self.cache.usage().bytes as f64);
         let uptime = self.started.elapsed().as_secs_f64();
         self.uptime_gauge.set(uptime);
         for w in &self.workers_tm {
@@ -684,16 +904,21 @@ impl Shared {
                 }
             })
             .collect();
+        let cache_usage = self.cache.usage();
         StatsSnapshot {
             submitted: c.submitted.get(),
             completed: c.completed.get(),
             failed: c.failed.get(),
+            jobs_shed: c.shed.iter().map(|s| s.get()).sum(),
             cache_hits: c.cache_hits.get(),
             cache_misses: c.cache_misses.get(),
             reconciled_replays: c.reconciled_hits.get(),
             verified_replays: c.verified_hits.get(),
             power_replays: c.power_hits.get(),
-            cache_entries: self.cache.len() as u64,
+            cache_entries: cache_usage.entries as u64,
+            cache_bytes: cache_usage.bytes,
+            cache_evictions: self.cache.stats().evictions_total(),
+            cache_corrupt: c.cache_corrupt.get(),
             patterns_parallel: self.measure_stats.fanned_out.load(Ordering::Relaxed),
             patterns_serial: self.measure_stats.local.load(Ordering::Relaxed),
             dropped_results: c.dropped_results.get(),
@@ -737,10 +962,7 @@ impl Shared {
                 })
             }
             Err(e) => {
-                eprintln!(
-                    "fbo service: ignoring undecodable cache entry {} ({e:#}); re-verifying",
-                    key.file_stem()
-                );
+                self.note_corrupt_entry(id, key, "decision", &e);
                 None
             }
         }
@@ -763,19 +985,17 @@ impl Shared {
         match decode(&bytes) {
             Ok(artifact) => Some(artifact),
             Err(e) => {
-                eprintln!(
-                    "fbo service: ignoring undecodable {what} stage entry {} ({e:#}); recomputing",
-                    key.file_stem()
-                );
+                self.note_corrupt_entry(trace, key, what, &e);
                 None
             }
         }
     }
 
-    /// Persist a stage artifact. Stage entries are a cache warm-up, not
-    /// the product: failing to write one degrades resume, never the job.
-    fn persist_stage(&self, key: &CacheKey, payload: &str) {
-        if let Err(e) = self.cache.insert(key, payload) {
+    /// Persist a stage artifact under its cache tier. Stage entries are a
+    /// cache warm-up, not the product: failing to write one degrades
+    /// resume, never the job.
+    fn persist_stage(&self, key: &CacheKey, tier: CacheTier, payload: &str) {
+        if let Err(e) = self.cache.insert_tier(key, tier, payload) {
             eprintln!("fbo service: failed to persist stage entry {}: {e:#}", key.file_stem());
         }
     }
@@ -793,6 +1013,9 @@ pub struct StatsSnapshot {
     pub completed: u64,
     /// Jobs failed (bad source, missing entry, pipeline error).
     pub failed: u64,
+    /// Submits rejected by admission control ([`JobRejected`]): neither
+    /// completed nor failed — shed before any work ran.
+    pub jobs_shed: u64,
     /// Jobs answered from the decision cache.
     pub cache_hits: u64,
     /// Jobs that ran (at least part of) the pipeline.
@@ -812,6 +1035,12 @@ pub struct StatsSnapshot {
     /// Cache entries currently held — full decisions *and* per-stage
     /// artifacts (a scratch pipeline run writes one of each tier).
     pub cache_entries: u64,
+    /// Total cache payload bytes currently held (`fbo_cache_bytes`).
+    pub cache_bytes: u64,
+    /// Entries evicted by tier-aware LRU budget enforcement, all tiers.
+    pub cache_evictions: u64,
+    /// Corrupt cache artifacts detected (`fbo_cache_corrupt_total`).
+    pub cache_corrupt: u64,
     /// Pattern measurements fanned out to an idle sibling worker's engine
     /// (only nonzero with `verify_parallel > 1`).
     pub patterns_parallel: u64,
@@ -908,6 +1137,15 @@ impl StatsSnapshot {
         if !ran.is_empty() {
             line.push_str(&format!(" | stage mean: {}", ran.join(", ")));
         }
+        if self.jobs_shed > 0 {
+            line.push_str(&format!(" | {} shed", self.jobs_shed));
+        }
+        if self.cache_evictions > 0 || self.cache_corrupt > 0 {
+            line.push_str(&format!(
+                " | cache: {} evicted, {} corrupt",
+                self.cache_evictions, self.cache_corrupt
+            ));
+        }
         if self.queue_depth > 0 || self.dropped_results > 0 {
             line.push_str(&format!(
                 " | queue depth {}, {} dropped results",
@@ -957,12 +1195,16 @@ impl StatsSnapshot {
             ("submitted", count(self.submitted)),
             ("completed", count(self.completed)),
             ("failed", count(self.failed)),
+            ("jobs_shed", count(self.jobs_shed)),
             ("cache_hits", count(self.cache_hits)),
             ("cache_misses", count(self.cache_misses)),
             ("reconciled_replays", count(self.reconciled_replays)),
             ("verified_replays", count(self.verified_replays)),
             ("power_replays", count(self.power_replays)),
             ("cache_entries", count(self.cache_entries)),
+            ("cache_bytes", count(self.cache_bytes)),
+            ("cache_evictions", count(self.cache_evictions)),
+            ("cache_corrupt", count(self.cache_corrupt)),
             ("patterns_parallel", count(self.patterns_parallel)),
             ("patterns_serial", count(self.patterns_serial)),
             ("dropped_results", count(self.dropped_results)),
@@ -1033,6 +1275,30 @@ impl OffloadService {
                 .context("opening trace sink")?,
             None => TraceRecorder::new(cfg.telemetry.ring_capacity),
         });
+        let cache_bytes_gauge = registry.gauge(
+            "fbo_cache_bytes",
+            "Total payload bytes held by the decision cache.",
+            &[],
+        );
+        cache.attach_telemetry(CacheTelemetry {
+            evictions: CacheTier::ALL.map(|t| {
+                registry.counter(
+                    "fbo_cache_evictions_total",
+                    "Entries evicted by tier-aware LRU budget enforcement, by tier.",
+                    &[("tier", t.as_str())],
+                )
+            }),
+            corrupt: registry.counter("fbo_cache_corrupt_total", CORRUPT_HELP, &[]),
+            bytes: cache_bytes_gauge.clone(),
+            recorder: recorder.clone(),
+        });
+        // The standing budget applies to pre-existing entries too: a
+        // restart under a tighter budget trims the inherited cache before
+        // serving (and every insert re-enforces it afterward).
+        cache.set_budget(cfg.cache_budget);
+        if !cfg.cache_budget.is_unlimited() {
+            cache.gc(cfg.cache_budget, false).context("startup cache gc")?;
+        }
         let workers_tm = (0..cfg.workers)
             .map(|i| WorkerTelemetry {
                 jobs: AtomicU64::new(0),
@@ -1046,6 +1312,10 @@ impl OffloadService {
             .collect();
         let shared = Arc::new(Shared {
             cache,
+            admission: cfg.admission,
+            draining: AtomicBool::new(false),
+            shard_depth: (0..cfg.workers).map(|_| AtomicU64::new(0)).collect(),
+            buckets: Mutex::new(HashMap::new()),
             fingerprints: stage_fingerprints(&cfg),
             persist_power_tier: !power_is_default(&cfg),
             counters: Counters::register(&registry),
@@ -1058,6 +1328,7 @@ impl OffloadService {
                 "Cache entries held (full decisions plus stage artifacts).",
                 &[],
             ),
+            cache_bytes_gauge,
             uptime_gauge: registry.gauge(
                 "fbo_uptime_seconds",
                 "Seconds since the service started.",
@@ -1116,15 +1387,35 @@ impl OffloadService {
         Self::start(ServiceConfig::new(artifacts))
     }
 
-    /// Submit one job. Returns immediately; a cache hit (or an unparseable
-    /// source) resolves the handle without touching the queue.
+    /// Submit one job as the anonymous `"default"` client. Returns
+    /// immediately; a cache hit (or an unparseable source) resolves the
+    /// handle without touching the queue.
     pub fn submit(&self, src: &str, entry: &str) -> JobHandle {
+        self.submit_as(src, entry, "default")
+    }
+
+    /// Submit one job attributed to `client` for per-client rate
+    /// limiting. Admission runs before any pipeline work: a draining
+    /// service, an empty token bucket, or a full target queue resolves
+    /// the handle immediately with a [`JobRejected`] (recoverable via
+    /// `err.downcast_ref::<JobRejected>()`). Cache hits bypass the queue
+    /// bound — replaying a decision costs no worker time — but not the
+    /// rate limit or the drain check.
+    pub fn submit_as(&self, src: &str, entry: &str, client: &str) -> JobHandle {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.shared.counters.submitted.inc();
         // The request-started event fires before key computation so even
-        // unparseable submissions leave a complete trace.
+        // unparseable and shed submissions leave a complete trace.
         self.shared.recorder.record(id, TraceEvent::RequestStarted { entry: entry.to_string() });
         let started = Instant::now();
+
+        let service_depth = self.shared.counters.queue_depth.get().max(0.0) as u64;
+        if self.shared.draining.load(Ordering::SeqCst) || self.txs.is_none() {
+            return self.shed_handle(id, ShedReason::ShuttingDown, service_depth, Duration::ZERO);
+        }
+        if let Err(retry_after) = self.shared.admit_client(client) {
+            return self.shed_handle(id, ShedReason::RateLimited, service_depth, retry_after);
+        }
 
         let key = match CacheKey::compute(src, entry, &self.shared.fingerprints.decision) {
             Ok(k) => k,
@@ -1150,9 +1441,24 @@ impl OffloadService {
         // queued duplicate replays the first one's decision instead of
         // re-running the pipeline.
         let Some(txs) = &self.txs else {
-            return self.ready_handle(id, Err(anyhow!("offload service is shut down")));
+            return self.shed_handle(id, ShedReason::ShuttingDown, service_depth, Duration::ZERO);
         };
         let shard = (fnv1a64(key.file_stem().as_bytes()) % txs.len() as u64) as usize;
+        // Bound the target queue. `fetch_update` makes the
+        // check-and-increment atomic against concurrent submitters (the
+        // worker's decrement can only free room, never oversubscribe).
+        let limit = self.shared.admission.queue_limit;
+        let admitted =
+            self.shared.shard_depth[shard].fetch_update(Ordering::SeqCst, Ordering::SeqCst, |d| {
+                if limit > 0 && d >= limit as u64 {
+                    None
+                } else {
+                    Some(d + 1)
+                }
+            });
+        if let Err(d) = admitted {
+            return self.shed_handle(id, ShedReason::QueueFull, d, self.shared.retry_hint(d));
+        }
         let job = Job {
             id,
             src: src.to_string(),
@@ -1166,7 +1472,10 @@ impl OffloadService {
                 self.shared.counters.queue_depth.add(1.0);
                 JobHandle { id, state: HandleState::Pending(reply_rx) }
             }
-            Err(_) => self.ready_handle(id, Err(anyhow!("offload service is shut down"))),
+            Err(_) => {
+                self.shared.shard_depth[shard].fetch_sub(1, Ordering::SeqCst);
+                self.shed_handle(id, ShedReason::ShuttingDown, service_depth, Duration::ZERO)
+            }
         }
     }
 
@@ -1210,6 +1519,24 @@ impl OffloadService {
         &self.shared.fingerprints.decision
     }
 
+    /// Begin drain-then-stop shutdown without blocking: admission closes
+    /// immediately (subsequent submits shed with
+    /// [`ShedReason::ShuttingDown`]) and a shutdown marker is queued
+    /// behind every already-admitted job, which completes normally.
+    /// Idempotent; [`OffloadService::shutdown`] (or drop) still joins the
+    /// workers.
+    pub fn begin_shutdown(&self) {
+        // `swap` makes concurrent callers race safely: exactly one sends
+        // the markers.
+        if !self.shared.draining.swap(true, Ordering::SeqCst) {
+            if let Some(txs) = &self.txs {
+                for tx in txs {
+                    let _ = tx.send(WorkerMsg::Shutdown);
+                }
+            }
+        }
+    }
+
     /// Drain the queue and join every worker.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
@@ -1220,16 +1547,28 @@ impl OffloadService {
         JobHandle { id, state: HandleState::Ready(result) }
     }
 
+    /// Resolve a submit that admission rejected: count the shed, close
+    /// the trace, and hand back a ready handle carrying the structured
+    /// [`JobRejected`].
+    fn shed_handle(
+        &self,
+        id: u64,
+        reason: ShedReason,
+        queue_depth: u64,
+        retry_after: Duration,
+    ) -> JobHandle {
+        let rejected = JobRejected { reason, queue_depth, retry_after };
+        self.shared.record_shed(id, &rejected);
+        JobHandle { id, state: HandleState::Ready(Err(anyhow::Error::new(rejected))) }
+    }
+
     fn shutdown_inner(&mut self) {
         // Workers hold clones of each other's senders (measurement
         // fan-out), so closing the service's own senders is not enough to
         // disconnect the queues: tell each worker explicitly. Queued jobs
         // drain first — the marker sits behind them in FIFO order.
-        if let Some(txs) = self.txs.take() {
-            for tx in &txs {
-                let _ = tx.send(WorkerMsg::Shutdown);
-            }
-        }
+        self.begin_shutdown();
+        self.txs.take();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -1346,6 +1685,7 @@ fn worker_main(
             }
             Some(WorkerMsg::Decision(job)) => {
                 shared.counters.queue_depth.add(-1.0);
+                shared.shard_depth[index].fetch_sub(1, Ordering::SeqCst);
                 let t0 = Instant::now();
                 current_trace.set(job.id);
                 let result = run_job(&coordinator, &shared, &job);
@@ -1356,6 +1696,35 @@ fn worker_main(
                     shared.counters.dropped_results.inc();
                 }
             }
+        }
+    }
+    // Drain-then-stop postlude: queued jobs completed above (the marker
+    // sat behind them in FIFO order), but a submit can race the marker
+    // onto the queue. Reject those explicitly — a structured
+    // `JobRejected` beats a dropped reply channel — and drop any stray
+    // measurement sub-jobs (their fan-out coordinator sees the
+    // disconnect and falls back to measuring locally).
+    loop {
+        let msg = {
+            let mut q = queue.borrow_mut();
+            q.deferred.pop_front().map(WorkerMsg::Decision).or_else(|| q.rx.try_recv().ok())
+        };
+        match msg {
+            None => break,
+            Some(WorkerMsg::Decision(job)) => {
+                shared.counters.queue_depth.add(-1.0);
+                shared.shard_depth[index].fetch_sub(1, Ordering::SeqCst);
+                let rejected = JobRejected {
+                    reason: ShedReason::ShuttingDown,
+                    queue_depth: 0,
+                    retry_after: Duration::ZERO,
+                };
+                shared.record_shed(job.id, &rejected);
+                if job.reply.send(Err(anyhow::Error::new(rejected))).is_err() {
+                    shared.counters.dropped_results.inc();
+                }
+            }
+            Some(WorkerMsg::Measure(_)) | Some(WorkerMsg::Shutdown) => {}
         }
     }
 }
@@ -1408,12 +1777,16 @@ fn run_job(c: &Coordinator, shared: &Shared, job: &Job) -> Result<CompletedJob> 
                     }
                     None => {
                         let r = req.parse()?.discover(&req)?.reconcile(&req)?;
-                        shared.persist_stage(&reconciled_key, &r.to_json_string());
+                        shared.persist_stage(
+                            &reconciled_key,
+                            CacheTier::Reconciled,
+                            &r.to_json_string(),
+                        );
                         r
                     }
                 };
                 let v = reconciled.verify(&req)?;
-                shared.persist_stage(&verified_key, &v.to_json_string());
+                shared.persist_stage(&verified_key, CacheTier::Verified, &v.to_json_string());
                 Ok(v)
             }
         }
@@ -1433,7 +1806,7 @@ fn run_job(c: &Coordinator, shared: &Shared, job: &Job) -> Result<CompletedJob> 
                 }
                 None => {
                     let p = resume_verified(&mut resumed_from)?.power_score(&req)?;
-                    shared.persist_stage(&power_key, &p.to_json_string());
+                    shared.persist_stage(&power_key, CacheTier::PowerScored, &p.to_json_string());
                     p
                 }
             };
@@ -1514,12 +1887,16 @@ mod tests {
             submitted: 0,
             completed: 0,
             failed: 0,
+            jobs_shed: 0,
             cache_hits: 0,
             cache_misses: 0,
             reconciled_replays: 0,
             verified_replays: 0,
             power_replays: 0,
             cache_entries: 0,
+            cache_bytes: 0,
+            cache_evictions: 0,
+            cache_corrupt: 0,
             patterns_parallel: 0,
             patterns_serial: 0,
             dropped_results: 0,
@@ -1581,6 +1958,49 @@ mod tests {
         assert_eq!(fp.verify, base.verify);
         assert_eq!(fp.power, base.power);
         assert_eq!(fp.decision, base.decision);
+    }
+
+    #[test]
+    fn admission_and_budget_never_touch_the_fingerprints() {
+        // Admission decides *whether* a job runs and the budget decides
+        // what stays *cached*; neither changes what a decision *is*, so a
+        // throttled, budget-bounded service must replay an unbounded
+        // service's decisions byte-identically (and vice versa).
+        let cfg = ServiceConfig::new("some/artifacts");
+        let base = stage_fingerprints(&cfg);
+        let mut bounded = cfg.clone();
+        bounded.admission =
+            AdmissionConfig { queue_limit: 2, rate_per_client: Some(10.0), burst: 5.0 };
+        bounded.cache_budget = CacheBudget { max_bytes: Some(4096), max_entries: Some(8) };
+        let fp = stage_fingerprints(&bounded);
+        assert_eq!(fp.discovery, base.discovery);
+        assert_eq!(fp.verify, base.verify);
+        assert_eq!(fp.power, base.power);
+        assert_eq!(fp.decision, base.decision);
+    }
+
+    #[test]
+    fn shed_reasons_have_stable_wire_names() {
+        assert_eq!(
+            ShedReason::ALL.map(ShedReason::as_str),
+            ["queue-full", "rate-limited", "shutting-down"]
+        );
+        for (i, r) in ShedReason::ALL.iter().enumerate() {
+            assert_eq!(r.rank(), i, "ranks must align with ALL (shed counter indexing)");
+        }
+        let rejected = JobRejected {
+            reason: ShedReason::QueueFull,
+            queue_depth: 7,
+            retry_after: Duration::from_millis(250),
+        };
+        assert_eq!(
+            format!("{rejected}"),
+            "job rejected (queue-full): queue depth 7, retry after 0.250s"
+        );
+        // Sheds surface through anyhow; callers must be able to get the
+        // structured rejection back out.
+        let err = anyhow::Error::new(rejected.clone());
+        assert_eq!(err.downcast_ref::<JobRejected>(), Some(&rejected));
     }
 
     #[test]

@@ -100,6 +100,18 @@ pub enum TraceEvent {
         /// Whether the probe hit.
         hit: bool,
     },
+    /// A corrupt cache artifact was detected (warn level): a file that
+    /// claims the decision-cache format but cannot be loaded, or is not
+    /// valid JSON at all. The entry degrades to a cache miss; this event
+    /// (and `fbo_cache_corrupt_total`) make the rot visible instead of
+    /// silently ignored. Recorded under trace id 0 — corruption belongs
+    /// to the store, not to any one request.
+    CacheCorrupt {
+        /// Path of the offending file.
+        path: String,
+        /// Why it failed to load.
+        detail: String,
+    },
     /// A job resumed from a cached stage artifact: every stage up to and
     /// including `from` was skipped, so the trace carries spans only for
     /// the re-run stages.
@@ -133,6 +145,7 @@ impl TraceEvent {
             TraceEvent::PowerScored { .. } => "power",
             TraceEvent::ArbitrationVerdict { .. } => "verdict",
             TraceEvent::CacheProbe { .. } => "cache",
+            TraceEvent::CacheCorrupt { .. } => "cache-corrupt",
             TraceEvent::Resumed { .. } => "resumed",
             TraceEvent::MeasureDispatch { .. } => "dispatch",
             TraceEvent::RequestCompleted { .. } => "request-completed",
@@ -233,6 +246,10 @@ impl TraceRecord {
                 pairs.push(("tier", Json::str(tier)));
                 pairs.push(("hit", Json::Bool(*hit)));
             }
+            TraceEvent::CacheCorrupt { path, detail } => {
+                pairs.push(("path", Json::str(path)));
+                pairs.push(("detail", Json::str(detail)));
+            }
             TraceEvent::Resumed { from } => {
                 pairs.push(("from", Json::str(from.as_str())));
             }
@@ -284,6 +301,10 @@ impl TraceRecord {
             "cache" => TraceEvent::CacheProbe {
                 tier: get_str(v, "tier")?,
                 hit: get_bool(v, "hit")?,
+            },
+            "cache-corrupt" => TraceEvent::CacheCorrupt {
+                path: get_str(v, "path")?,
+                detail: get_str(v, "detail")?,
             },
             "resumed" => TraceEvent::Resumed { from: Stage::parse(v.get("from")?.as_str()?)? },
             "dispatch" => TraceEvent::MeasureDispatch {
@@ -558,6 +579,10 @@ mod tests {
                 policy: "auto".into(),
             },
             TraceEvent::CacheProbe { tier: "decision".into(), hit: false },
+            TraceEvent::CacheCorrupt {
+                path: "decision_cache/00ff.json".into(),
+                detail: "invalid JSON: unexpected end of input".into(),
+            },
             TraceEvent::Resumed { from: Stage::Verify },
             TraceEvent::MeasureDispatch { fanned: 3, local: 2 },
             TraceEvent::RequestCompleted { from_cache: false, ok: true },

@@ -1,0 +1,284 @@
+//! Fault-injection tests for the decision cache's crash-consistency
+//! story: every way an on-disk entry (or the advisory index) can rot —
+//! truncation, garbage bytes, malformed-but-ours JSON, stale index rows,
+//! a crash between eviction steps — must degrade to a *counted* cache
+//! miss and a recompute. Never a panic, never a failed open, and never a
+//! survivor that replays anything but the exact bytes it was given.
+
+use std::path::PathBuf;
+
+use fbo::coordinator::apps;
+use fbo::patterndb::json;
+use fbo::service::{
+    CacheBudget, CacheKey, CacheTier, DecisionCache, OffloadService, ServiceConfig,
+    DECISION_FORMAT,
+};
+use fbo::telemetry::TraceEvent;
+
+const FP: &str = "00000000deadbeef";
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Fresh scratch cache directory, isolated per test and per process.
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fbo-faulttest-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn key(tag: u32) -> CacheKey {
+    CacheKey {
+        source_hash: format!("{tag:016x}"),
+        entry: "main".to_string(),
+        db_fingerprint: FP.to_string(),
+    }
+}
+
+/// Canonical form of a JSON payload — the exact bytes the pipeline's
+/// report codec would produce, so byte-identity assertions are honest.
+fn canon(raw: &str) -> String {
+    json::to_string_pretty(&json::parse(raw).expect("test payload must be valid JSON"))
+}
+
+/// A hand-forged entry file claiming our format tag. Used to build the
+/// malformed-but-ours corner of the fault matrix.
+fn forged(source_hash: &str, tier: &str) -> String {
+    format!(
+        "{{\"format\": \"{DECISION_FORMAT}\", \"source_hash\": \"{source_hash}\", \
+         \"entry\": \"main\", \"db_fingerprint\": \"{FP}\", \"tier\": \"{tier}\", \
+         \"report\": {{\"x\": 1}}}}"
+    )
+}
+
+// --------------------------------------------------------- fault matrix
+
+/// Every class of on-disk rot loads as zero entries plus one counted
+/// corruption — never a panic, never a failed `open`, and the damaged
+/// file is left in place for inspection.
+#[test]
+fn fault_matrix_degrades_to_counted_misses() {
+    let cases: Vec<(&str, String)> = vec![
+        ("not-json", "\u{0}\u{1} definitely not json".to_string()),
+        ("truncated-ours", format!("{{\"format\": \"{DECISION_FORMAT}\", \"source_hash\": \"00")),
+        ("unknown-tier", forged("aaaaaaaaaaaaaaaa", "volcanic")),
+        (
+            "missing-report",
+            format!(
+                "{{\"format\": \"{DECISION_FORMAT}\", \"source_hash\": \"b\", \
+                 \"entry\": \"main\", \"db_fingerprint\": \"{FP}\"}}"
+            ),
+        ),
+        (
+            "non-string-key-field",
+            format!("{{\"format\": \"{DECISION_FORMAT}\", \"source_hash\": 17}}"),
+        ),
+    ];
+    for (tag, body) in cases {
+        let dir = temp_dir(&format!("matrix-{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("0badc0de0badc0de.json");
+        std::fs::write(&path, body).unwrap();
+
+        let cache =
+            DecisionCache::open(&dir).unwrap_or_else(|e| panic!("{tag}: open failed {e:#}"));
+        assert_eq!(cache.len(), 0, "{tag}: corrupt file must not load");
+        assert_eq!(cache.stats().corrupt, 1, "{tag}: corruption must be counted");
+        assert!(cache.lookup(&key(0)).is_none(), "{tag}");
+        assert!(path.exists(), "{tag}: corrupt files are left in place for inspection");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Rot degrades exactly one key: the next verification overwrites the
+/// damaged file via tmp-file + rename and the entry replays again.
+#[test]
+fn truncated_entry_recovers_on_reinsert() {
+    let dir = temp_dir("truncate-recover");
+    let k = key(1);
+    let payload = canon(r#"{"verdict": "gpu", "speedup": 3.25}"#);
+    {
+        let cache = DecisionCache::open(&dir).unwrap();
+        cache.insert_tier(&k, CacheTier::Verified, &payload).unwrap();
+    }
+    let path = dir.join(format!("{}.json", k.file_stem()));
+    let full = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+
+    let cache = DecisionCache::open(&dir).unwrap();
+    assert_eq!(cache.stats().corrupt, 1);
+    assert!(cache.lookup(&k).is_none(), "truncated entry must be a miss");
+
+    cache.insert_tier(&k, CacheTier::Verified, &payload).unwrap();
+    let reopened = DecisionCache::open(&dir).unwrap();
+    assert_eq!(reopened.stats().corrupt, 0, "reinsert must heal the file");
+    assert_eq!(reopened.lookup(&k).as_deref(), Some(payload.as_str()), "byte-identical replay");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Foreign `.json` files (no format tag) are tolerated silently: not
+/// loaded, not counted as corruption, and spared by `clear`.
+#[test]
+fn foreign_json_is_spared_and_not_counted() {
+    let dir = temp_dir("foreign");
+    std::fs::create_dir_all(&dir).unwrap();
+    let notes = dir.join("notes.json");
+    std::fs::write(&notes, "{\"note\": \"operator parking space\"}").unwrap();
+
+    let cache = DecisionCache::open(&dir).unwrap();
+    cache.insert_tier(&key(2), CacheTier::Decision, &canon(r#"{"d": 2}"#)).unwrap();
+    assert_eq!(cache.len(), 1);
+    assert_eq!(cache.stats().corrupt, 0, "foreign files are not corruption");
+
+    cache.clear().unwrap();
+    assert_eq!(cache.len(), 0);
+    assert!(notes.exists(), "clear must spare foreign files");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ------------------------------------------------- index vs entry files
+
+/// The index is advisory: a row pointing at a file that no longer exists
+/// (e.g. an operator deleted it by hand) is dropped on open without
+/// being counted as corruption, and survivors replay byte-identically.
+#[test]
+fn index_rows_for_deleted_files_are_dropped() {
+    let dir = temp_dir("stale-index");
+    let survivor_payload = canon(r#"{"kept": true, "cost": 12.5}"#);
+    {
+        let cache = DecisionCache::open(&dir).unwrap();
+        cache.insert_tier(&key(1), CacheTier::Verified, &survivor_payload).unwrap();
+        cache.insert_tier(&key(2), CacheTier::Decision, &canon(r#"{"kept": false}"#)).unwrap();
+    }
+    std::fs::remove_file(dir.join(format!("{}.json", key(2).file_stem()))).unwrap();
+
+    let cache = DecisionCache::open(&dir).unwrap();
+    assert_eq!(cache.len(), 1);
+    assert_eq!(cache.stats().corrupt, 0, "a stale index row is recovery, not corruption");
+    assert!(cache.lookup(&key(2)).is_none());
+    assert_eq!(cache.lookup(&key(1)).as_deref(), Some(survivor_payload.as_str()));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A destroyed index costs recency only: every entry file still loads
+/// byte-identically (files are authoritative), the bad index is counted,
+/// and tier priority still orders the next eviction correctly.
+#[test]
+fn corrupt_index_resets_recency_but_loses_no_payload() {
+    let dir = temp_dir("bad-index");
+    let payloads = [
+        (key(1), CacheTier::Reconciled, canon(r#"{"stage": "reconciled"}"#)),
+        (key(2), CacheTier::Decision, canon(r#"{"stage": "decision"}"#)),
+        (key(3), CacheTier::Verified, canon(r#"{"stage": "verified"}"#)),
+    ];
+    {
+        let cache = DecisionCache::open(&dir).unwrap();
+        for (k, tier, p) in &payloads {
+            cache.insert_tier(k, *tier, p).unwrap();
+        }
+    }
+    std::fs::write(dir.join("index.json"), "!!! not an index !!!").unwrap();
+
+    let cache = DecisionCache::open(&dir).unwrap();
+    assert_eq!(cache.len(), 3, "entry files are authoritative");
+    assert_eq!(cache.stats().corrupt, 1, "the unreadable index is counted");
+    for (k, _, p) in &payloads {
+        assert_eq!(cache.lookup(k).as_deref(), Some(p.as_str()), "byte-identical after reset");
+    }
+
+    // Recency is gone but tier priority still holds: shrinking to one
+    // entry evicts reconciled and decision, never the verified evidence.
+    let out = cache.gc(CacheBudget { max_bytes: None, max_entries: Some(1) }, false).unwrap();
+    assert_eq!(out.entries_after, 1);
+    assert_eq!(
+        out.evicted.iter().map(|e| e.tier).collect::<Vec<_>>(),
+        [CacheTier::Reconciled, CacheTier::Decision]
+    );
+    assert!(cache.lookup(&key(3)).is_some(), "verified evidence survives");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Crash simulation for the eviction sequence (remove victim file, then
+/// rewrite index): dying between the two steps leaves a stale index row
+/// and possibly an orphaned tmp file from an interrupted publish. Both
+/// must cost nothing — survivors load untouched and byte-identical.
+#[test]
+fn crash_between_eviction_steps_costs_only_stale_index() {
+    let dir = temp_dir("crash-evict");
+    let survivor = canon(r#"{"measured": [1.5, 2.25], "winner": "fpga"}"#);
+    {
+        let cache = DecisionCache::open(&dir).unwrap();
+        cache.insert_tier(&key(1), CacheTier::Reconciled, &canon(r#"{"cheap": 1}"#)).unwrap();
+        cache.insert_tier(&key(2), CacheTier::Verified, &survivor).unwrap();
+    }
+    // The crash point: eviction removed the victim's file but died before
+    // publishing the updated index (and mid-publish of some other write,
+    // leaving a tmp file behind).
+    std::fs::remove_file(dir.join(format!("{}.json", key(1).file_stem()))).unwrap();
+    std::fs::write(dir.join(".deadbeef00000000.999.0.tmp"), "{\"half\": ").unwrap();
+
+    let cache = DecisionCache::open(&dir).unwrap();
+    assert_eq!(cache.len(), 1, "tmp files and stale rows must not load");
+    assert_eq!(cache.stats().corrupt, 0);
+    assert_eq!(cache.lookup(&key(2)).as_deref(), Some(survivor.as_str()));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ------------------------------------------------- end-to-end recovery
+
+/// Full service loop: rot every persisted artifact of a completed job,
+/// restart, and the service recomputes from scratch (counting and
+/// tracing each corrupt file), then replays the recomputed decision
+/// byte-identically.
+#[test]
+fn service_recovers_from_on_disk_rot_by_recomputing() {
+    let cache_dir = temp_dir("service");
+    let mut cfg = ServiceConfig::new(artifacts_dir());
+    cfg.cache_dir = Some(cache_dir.clone());
+    cfg.workers = 1;
+    cfg.verify.reps = 1;
+    let src = apps::matmul_app(64);
+
+    {
+        let service = OffloadService::start(cfg.clone()).unwrap();
+        assert!(!service.submit(&src, "main").wait().unwrap().from_cache);
+        service.shutdown();
+    }
+
+    // Truncate every persisted artifact (decision + stage tiers).
+    let mut rotted = 0u64;
+    for e in std::fs::read_dir(&cache_dir).unwrap() {
+        let path = e.unwrap().path();
+        if path.extension().and_then(|x| x.to_str()) != Some("json")
+            || path.file_name().and_then(|x| x.to_str()) == Some("index.json")
+        {
+            continue;
+        }
+        let body = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &body[..body.len() / 3]).unwrap();
+        rotted += 1;
+    }
+    assert!(rotted >= 3, "expected decision + stage artifacts on disk, found {rotted}");
+
+    let service = OffloadService::start(cfg).unwrap();
+    let recomputed = service.submit(&src, "main").wait().unwrap();
+    assert!(!recomputed.from_cache, "rotted entries must degrade to a miss");
+    assert_eq!(recomputed.resumed_from, None, "every stage artifact was rotted");
+
+    let snap = service.stats();
+    assert_eq!(snap.cache_corrupt, rotted, "each rotted file counted exactly once");
+    let corrupt_events = service
+        .recorder()
+        .records()
+        .iter()
+        .filter(|r| matches!(&r.event, TraceEvent::CacheCorrupt { .. }))
+        .count() as u64;
+    assert_eq!(corrupt_events, rotted, "each rotted file traced exactly once");
+
+    let replay = service.submit(&src, "main").wait().unwrap();
+    assert!(replay.from_cache);
+    assert_eq!(replay.report_json, recomputed.report_json, "byte-identical replay after recovery");
+    service.shutdown();
+    std::fs::remove_dir_all(&cache_dir).ok();
+}

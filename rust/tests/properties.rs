@@ -301,6 +301,174 @@ fn prop_json_roundtrip() {
 }
 
 // ------------------------------------------------------------------
+// Decision-cache eviction invariants (model-based).
+// ------------------------------------------------------------------
+
+fn cache_key(tag: usize) -> fbo::service::CacheKey {
+    fbo::service::CacheKey {
+        source_hash: format!("{tag:016x}"),
+        entry: "main".to_string(),
+        db_fingerprint: "00000000deadbeef".to_string(),
+    }
+}
+
+/// Canonical JSON payload of a tunable size — the exact bytes a warm
+/// disk read must hand back.
+fn cache_payload(tag: usize, pad: usize) -> String {
+    use fbo::patterndb::json::{to_string_pretty, Json};
+    to_string_pretty(&Json::obj(vec![
+        ("tag", Json::num(tag as f64)),
+        ("pad", Json::str("x".repeat(pad))),
+    ]))
+}
+
+/// Model-based check of the eviction engine: random inserts, lookups,
+/// and gc passes against a reference model that tracks (tier, payload,
+/// recency). After every gc the real evictions must match the model's
+/// tier-priority-then-LRU prediction exactly, usage must satisfy the
+/// budget, and after the run every survivor must replay byte-identically
+/// through a fresh `open` of the same directory.
+#[test]
+fn prop_cache_gc_matches_tier_then_lru_model() {
+    use fbo::service::{CacheBudget, CacheTier, DecisionCache};
+    use std::collections::HashMap;
+
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed);
+        let dir =
+            std::env::temp_dir().join(format!("fbo-proptest-gc-{seed}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = DecisionCache::open(&dir).unwrap();
+
+        // Model: tag -> (tier, payload, last_used). Stamps mirror the
+        // cache's single monotonic clock: inserts and lookup *hits* tick
+        // it, misses and gc passes do not.
+        let mut model: HashMap<usize, (CacheTier, String, u64)> = HashMap::new();
+        let mut clock = 1u64;
+        for step in 0..50 {
+            match rng.below(8) {
+                0..=4 => {
+                    let tag = rng.below(10);
+                    let tier = CacheTier::ALL[rng.below(4)];
+                    let p = cache_payload(tag, rng.below(200));
+                    cache.insert_tier(&cache_key(tag), tier, &p).unwrap();
+                    model.insert(tag, (tier, p, clock));
+                    clock += 1;
+                }
+                5 | 6 => {
+                    let tag = rng.below(10);
+                    let got = cache.lookup(&cache_key(tag));
+                    match model.get_mut(&tag) {
+                        Some(e) => {
+                            assert_eq!(got.as_deref(), Some(e.1.as_str()), "seed {seed}");
+                            e.2 = clock;
+                            clock += 1;
+                        }
+                        None => assert!(got.is_none(), "seed {seed} step {step}"),
+                    }
+                }
+                _ => {
+                    let budget = CacheBudget {
+                        max_bytes: Some(rng.below(2000) as u64),
+                        max_entries: Some(1 + rng.below(8)),
+                    };
+                    let dry = rng.bool_with(0.25);
+                    let out = cache.gc(budget, dry).unwrap();
+
+                    // The model's prediction: tier rank ascending, then
+                    // least-recently-used, dropped until the budget admits.
+                    let mut order: Vec<(usize, u64, usize, u64)> = model
+                        .iter()
+                        .map(|(tag, (tier, p, used))| (tier.rank(), *used, *tag, p.len() as u64))
+                        .collect();
+                    order.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+                    let mut bytes: u64 = model.values().map(|(_, p, _)| p.len() as u64).sum();
+                    let mut count = model.len();
+                    let mut expected = Vec::new();
+                    for (_, _, tag, size) in order {
+                        if budget.admits(bytes, count) {
+                            break;
+                        }
+                        bytes -= size;
+                        count -= 1;
+                        expected.push(tag);
+                    }
+
+                    let got: Vec<usize> = out
+                        .evicted
+                        .iter()
+                        .map(|e| {
+                            usize::from_str_radix(&e.key.source_hash, 16)
+                                .expect("test keys encode their tag")
+                        })
+                        .collect();
+                    assert_eq!(got, expected, "seed {seed} step {step}: eviction order");
+                    if dry {
+                        assert_eq!(out.bytes_after, out.bytes_before, "seed {seed}: dry run");
+                        assert_eq!(cache.len(), model.len(), "seed {seed}: dry run evicted");
+                    } else {
+                        for tag in expected {
+                            model.remove(&tag);
+                        }
+                        let u = cache.usage();
+                        assert!(
+                            budget.admits(u.bytes, u.entries),
+                            "seed {seed} step {step}: usage {u:?} exceeds {budget:?}"
+                        );
+                        assert_eq!(u.bytes, bytes, "seed {seed} step {step}: byte accounting");
+                        assert_eq!(u.entries, model.len(), "seed {seed} step {step}");
+                    }
+                }
+            }
+        }
+
+        // Crash-consistency epilogue: a fresh open of the same directory
+        // sees exactly the survivors, each byte-identical.
+        drop(cache);
+        let reopened = DecisionCache::open(&dir).unwrap();
+        assert_eq!(reopened.stats().corrupt, 0, "seed {seed}: gc must never corrupt");
+        assert_eq!(reopened.len(), model.len(), "seed {seed}: survivors after reopen");
+        for (tag, (_, p, _)) in &model {
+            assert_eq!(
+                reopened.lookup(&cache_key(*tag)).as_deref(),
+                Some(p.as_str()),
+                "seed {seed}: survivor must replay byte-identically"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// A standing budget is an invariant, not a goal: after *every* insert
+/// the cache's own usage snapshot satisfies it, whatever the insert
+/// sizes and tiers.
+#[test]
+fn prop_standing_budget_holds_after_every_insert() {
+    use fbo::service::{CacheBudget, CacheTier, DecisionCache};
+
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed);
+        let cache = DecisionCache::in_memory();
+        let budget = CacheBudget {
+            max_bytes: Some((200 + rng.below(1500)) as u64),
+            max_entries: Some(1 + rng.below(6)),
+        };
+        cache.set_budget(budget);
+        for step in 0..30 {
+            let tag = rng.below(12);
+            let tier = CacheTier::ALL[rng.below(4)];
+            let p = cache_payload(tag, rng.below(400));
+            cache.insert_tier(&cache_key(tag), tier, &p).unwrap();
+            let u = cache.usage();
+            assert!(
+                budget.admits(u.bytes, u.entries),
+                "seed {seed} step {step}: usage {u:?} exceeds standing {budget:?}"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------------
 // Interpreter value coercion invariants.
 // ------------------------------------------------------------------
 

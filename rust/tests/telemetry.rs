@@ -65,6 +65,7 @@ fn golden_jsonl_schema_is_stable() {
             "resumed",
             "dispatch",
             "request-completed",
+            "cache-corrupt",
         ],
         "fixture must exercise every event variant"
     );
