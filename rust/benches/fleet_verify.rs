@@ -1,0 +1,162 @@
+//! Bench: serial vs pooled vs distributed-fleet pattern verification.
+//!
+//! The paper's verification step measures every candidate pattern on one
+//! machine; `verify_parallel` already fans patterns across sibling
+//! engines in-process. The fleet tier takes the same step across process
+//! (and, in production, machine) boundaries: this bench spawns two
+//! `fbo worker --stdio` child processes, deals the sensor-fusion app's
+//! measurement batches to them over the `fbo-fleet-v1` wire protocol,
+//! and asserts the *decision* is byte-identical to the serial run — the
+//! fleet buys wall-clock and capacity, never a different answer.
+//!
+//! Run: `cargo bench --bench fleet_verify` (add `-- --test` for the CI
+//! smoke mode: 1 rep, no wall-clock assertion — timing on shared runners
+//! is noise).
+//! Records: `BENCH_fleet.json` at the repo root.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use fbo::coordinator::{apps, Coordinator, OffloadReport, SerialExecutor};
+use fbo::fleet::{FleetEndpoint, FleetExecutor, FleetRegistry};
+use fbo::metrics::Table;
+use fbo::patterndb::json::{self, Json};
+use fbo::service::MeasurePool;
+
+const FLEET_WORKERS: usize = 2;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn pattern_labels(r: &OffloadReport) -> Vec<String> {
+    r.outcome.tried.iter().map(|p| p.label.clone()).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--test");
+    let n = env_usize("FBO_N", 64);
+    let reps = env_usize("FBO_REPS", if smoke { 1 } else { 3 });
+    let parallel = env_usize("FBO_VERIFY_PARALLEL", 4).max(2);
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let src = apps::sensor_fusion_app(n);
+
+    println!(
+        "== fleet verify: sensor-fusion app (3 blocks) at n={n}, reps={reps}, \
+         {FLEET_WORKERS} stdio workers =="
+    );
+
+    // Serial: one engine, patterns back to back. Warm once so artifact
+    // compiles (cached in the engine) are not billed to any executor.
+    let mut serial = Coordinator::open(&artifacts)?;
+    serial.verify.reps = reps;
+    let _ = serial.offload(&src, "main")?;
+    let t0 = Instant::now();
+    let serial_report = serial.offload(&src, "main")?;
+    let serial_secs = t0.elapsed().as_secs_f64();
+
+    // Pooled: in-process measure-only siblings (the `--verify-parallel`
+    // tier the fleet falls back to).
+    let mut pooled = Coordinator::open(&artifacts)?;
+    pooled.verify.reps = reps;
+    let pool = MeasurePool::start(&artifacts, parallel - 1)?;
+    pooled.executor = Some(Rc::new(pool.executor(pooled.engine.clone(), parallel)));
+    let _ = pooled.offload(&src, "main")?;
+    let t0 = Instant::now();
+    let pooled_report = pooled.offload(&src, "main")?;
+    let pooled_secs = t0.elapsed().as_secs_f64();
+
+    // Fleet: two spawned `fbo worker --stdio` children, one engine each,
+    // fed whole measurement batches over length-prefixed JSON frames.
+    let endpoint = format!(
+        "stdio:{} worker --stdio --artifacts {}",
+        env!("CARGO_BIN_EXE_fbo"),
+        artifacts.display()
+    );
+    let endpoints: Vec<FleetEndpoint> = (0..FLEET_WORKERS)
+        .map(|_| FleetEndpoint::parse(&endpoint))
+        .collect::<anyhow::Result<_>>()?;
+    let mut fleeted = Coordinator::open(&artifacts)?;
+    fleeted.verify.reps = reps;
+    let registry = FleetRegistry::connect(&endpoints);
+    anyhow::ensure!(
+        registry.live_count() == FLEET_WORKERS,
+        "fleet workers failed to start: {:?}",
+        registry.rejected()
+    );
+    let fallback = Rc::new(SerialExecutor::new(fleeted.engine.clone()));
+    let exec = Rc::new(FleetExecutor::new(registry, fallback));
+    fleeted.executor = Some(exec.clone());
+    let _ = fleeted.offload(&src, "main")?; // warm the children's engines
+    let t0 = Instant::now();
+    let fleet_report = fleeted.offload(&src, "main")?;
+    let fleet_secs = t0.elapsed().as_secs_f64();
+    let (remote, local, redeals) =
+        (exec.stats().remote(), exec.stats().local(), exec.stats().redeals());
+
+    // The determinism contract, across all three executors.
+    let identical = serial_report.outcome.best_enabled == pooled_report.outcome.best_enabled
+        && serial_report.outcome.best_enabled == fleet_report.outcome.best_enabled
+        && pattern_labels(&serial_report) == pattern_labels(&pooled_report)
+        && pattern_labels(&serial_report) == pattern_labels(&fleet_report);
+    assert!(
+        identical,
+        "serial/pooled/fleet must pick the same pattern: {:?} vs {:?} vs {:?}",
+        serial_report.outcome.best_enabled,
+        pooled_report.outcome.best_enabled,
+        fleet_report.outcome.best_enabled
+    );
+    assert!(remote > 0, "the fleet run must measure patterns remotely");
+
+    let mut table = Table::new(&["executor", "wall (s)", "patterns", "best speedup"]);
+    for (name, secs, report) in [
+        ("serial", serial_secs, &serial_report),
+        ("pooled", pooled_secs, &pooled_report),
+        ("fleet(2 stdio)", fleet_secs, &fleet_report),
+    ] {
+        table.row(&[
+            name.to_string(),
+            format!("{secs:.3}"),
+            report.outcome.tried.len().to_string(),
+            format!("{:.1}", report.best_speedup()),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("fleet measurements: {remote} remote, {local} local, {redeals} re-deals");
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("fleet_verify")),
+        ("n", Json::num(n as f64)),
+        ("reps", Json::num(reps as f64)),
+        ("fleet_workers", Json::num(FLEET_WORKERS as f64)),
+        ("transport", Json::str("stdio")),
+        (
+            "patterns",
+            Json::Arr(pattern_labels(&serial_report).iter().map(Json::str).collect()),
+        ),
+        ("serial_secs", Json::num(serial_secs)),
+        ("pooled_secs", Json::num(pooled_secs)),
+        ("fleet_secs", Json::num(fleet_secs)),
+        ("remote_measurements", Json::num(remote as f64)),
+        ("local_measurements", Json::num(local as f64)),
+        ("redeals", Json::num(redeals as f64)),
+        ("best_speedup", Json::num(serial_report.best_speedup())),
+        ("decisions_identical", Json::Bool(identical)),
+    ]);
+    let bench_path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_fleet.json");
+    std::fs::write(&bench_path, json::to_string_pretty(&out))?;
+    println!("recorded {}", bench_path.display());
+
+    // Smoke mode skips the wall-clock thesis: 1-rep timings on a noisy
+    // shared runner prove nothing, and child processes cold-compile.
+    if !smoke {
+        assert!(
+            fleet_secs < serial_secs,
+            "fleet verify ({fleet_secs:.3}s) must beat serial ({serial_secs:.3}s)"
+        );
+    }
+    Ok(())
+}

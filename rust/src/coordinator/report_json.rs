@@ -190,7 +190,7 @@ pub(crate) fn duration_from_json(v: &Json) -> Result<Duration> {
     Ok(Duration::from_nanos(v.as_f64()? as u64))
 }
 
-fn measurement_to_json(m: &Measurement) -> Json {
+pub(crate) fn measurement_to_json(m: &Measurement) -> Json {
     Json::obj(vec![
         ("label", Json::str(&m.label)),
         ("median_ns", duration_to_json(m.median)),
@@ -200,7 +200,7 @@ fn measurement_to_json(m: &Measurement) -> Json {
     ])
 }
 
-fn measurement_from_json(v: &Json) -> Result<Measurement> {
+pub(crate) fn measurement_from_json(v: &Json) -> Result<Measurement> {
     Ok(Measurement {
         label: v.get("label")?.as_str()?.to_string(),
         median: duration_from_json(v.get("median_ns")?)?,
@@ -310,7 +310,27 @@ pub(crate) fn block_from_json(v: &Json) -> Result<DiscoveredBlock> {
     })
 }
 
-fn traffic_to_json(t: &DeviceTraffic) -> Json {
+/// Nested [`PlannedReplacement`] codec — the shape the fleet wire protocol
+/// ships reconciled blocks in (the stage-artifact block codec above stays
+/// flat for format stability).
+pub(crate) fn plan_to_json(p: &PlannedReplacement) -> Json {
+    Json::obj(vec![
+        ("site", site_to_json(&p.site)),
+        ("replacement", repl_to_json(&p.replacement)),
+        ("reconciliation", reconciliation_to_json(&p.reconciliation)),
+    ])
+}
+
+/// Inverse of [`plan_to_json`].
+pub(crate) fn plan_from_json(v: &Json) -> Result<PlannedReplacement> {
+    Ok(PlannedReplacement {
+        site: site_from_json(v.get("site")?)?,
+        replacement: repl_from_json(v.get("replacement")?)?,
+        reconciliation: reconciliation_from_json(v.get("reconciliation")?)?,
+    })
+}
+
+pub(crate) fn traffic_to_json(t: &DeviceTraffic) -> Json {
     Json::obj(vec![
         ("bytes_in", Json::num(t.bytes_in as f64)),
         ("bytes_out", Json::num(t.bytes_out as f64)),
@@ -319,7 +339,7 @@ fn traffic_to_json(t: &DeviceTraffic) -> Json {
     ])
 }
 
-fn traffic_from_json(v: &Json) -> Result<DeviceTraffic> {
+pub(crate) fn traffic_from_json(v: &Json) -> Result<DeviceTraffic> {
     Ok(DeviceTraffic {
         bytes_in: v.get("bytes_in")?.as_f64()? as u64,
         bytes_out: v.get("bytes_out")?.as_f64()? as u64,

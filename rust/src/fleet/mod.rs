@@ -1,0 +1,149 @@
+//! Distributed **measurement fleet**: remote verify workers behind a
+//! capability-aware scheduler.
+//!
+//! The paper's dominant cost is Step-3 verification — compiling and
+//! measuring candidate patterns on real GPU/FPGA hardware — and the
+//! companion proposal (arXiv:2004.09883) assumes a *verification
+//! environment* of many heterogeneous boxes, not one machine. PR 4's
+//! plan/measure/reduce split already made every pattern measurement a
+//! self-contained, serializable job; this module adds the missing
+//! subsystem around it:
+//!
+//! * [`wire`] — the `fbo-fleet-v1` frame protocol: versioned,
+//!   length-prefixed canonical-JSON frames (`hello`, `measure-batch`,
+//!   `measure-result`, `heartbeat`, `drain`, `bye`) running unchanged
+//!   over JSON-over-TCP and over a spawned child's stdio pipe.
+//! * [`worker`] — the remote end (`fbo worker --listen ADDR | --stdio`):
+//!   hosts a PJRT engine (plus optional measure-only siblings via
+//!   [`crate::service::MeasurePool`]) and announces capability tags
+//!   (gpu/fpga, device model, max in-flight) in its hello frame.
+//! * [`registry`] — live worker bookkeeping: one connection thread per
+//!   worker, hello/version validation, liveness flags, and the
+//!   drain-then-stop shutdown that mirrors the service pool's.
+//! * [`scheduler`] — [`scheduler::FleetExecutor`], a
+//!   [`crate::coordinator::PatternExecutor`] that partitions a verify
+//!   plan's independent measurements across live workers by capability
+//!   and estimated cost, reduces index-aligned, and handles the failure
+//!   matrix: worker death mid-batch re-deals to survivors, a timeout
+//!   retries with jittered backoff, and a pattern no worker can measure
+//!   falls back to the local executor. Decisions stay byte-identical to
+//!   [`crate::coordinator::SerialExecutor`] — the fleet buys wall-clock,
+//!   never a different answer.
+//!
+//! The fleet is **fingerprint-passive**: like `verify_parallel`, the
+//! `--fleet` endpoint list is excluded from every cache fingerprint, so
+//! fleet-verified and locally-verified decisions replay each other's
+//! cache entries byte-identically.
+
+use std::time::Duration;
+
+pub mod registry;
+pub mod scheduler;
+pub mod wire;
+pub mod worker;
+
+pub use registry::{FleetEndpoint, FleetRegistry, FleetWorker};
+pub use scheduler::{FleetExecutor, FleetStats, FleetTelemetry};
+pub use wire::{Capabilities, Frame, WireBatch, WireOutcome, PROTOCOL};
+pub use worker::WorkerHost;
+
+/// Jittered exponential backoff, shared by the fleet scheduler's re-deal
+/// retries and the `fbo batch` client's retry-after handling.
+///
+/// The delay for attempt *k* is `min(cap, base * 2^k)` scaled by a
+/// deterministic jitter in `[0.5, 1.0)` derived from the seed — callers
+/// pass a per-job seed so concurrent clients spread out instead of
+/// retrying in lockstep, while tests stay reproducible.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    seed: u64,
+    attempt: u32,
+}
+
+impl Backoff {
+    /// Backoff starting at `base`, doubling per attempt, capped at `cap`.
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Backoff {
+        Backoff { base, cap, seed, attempt: 0 }
+    }
+
+    /// Attempts taken so far (i.e. how many delays were handed out).
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// The next delay: exponential, capped, jittered. Advances the
+    /// attempt counter.
+    pub fn next_delay(&mut self) -> Duration {
+        let exp = self
+            .base
+            .checked_mul(1u32.checked_shl(self.attempt).unwrap_or(u32::MAX))
+            .map_or(self.cap, |d| d.min(self.cap));
+        self.attempt = self.attempt.saturating_add(1);
+        jitter(exp, self.seed, self.attempt)
+    }
+
+    /// The next delay, floored at a server-provided `retry_after` hint —
+    /// the `fbo batch` client honors [`crate::service::JobRejected`]'s
+    /// hint while still spreading concurrent retries with jitter.
+    pub fn next_delay_after(&mut self, retry_after: Duration) -> Duration {
+        self.next_delay().max(retry_after)
+    }
+
+    /// Reset the attempt counter (after a successful call).
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+/// Scale `d` by a deterministic factor in `[0.5, 1.0)` keyed on
+/// `(seed, attempt)`.
+fn jitter(d: Duration, seed: u64, attempt: u32) -> Duration {
+    let mut key = [0u8; 12];
+    key[..8].copy_from_slice(&seed.to_le_bytes());
+    key[8..].copy_from_slice(&attempt.to_le_bytes());
+    let h = crate::patterndb::json::fnv1a64(&key);
+    let frac = 0.5 + (h % 1_000_000) as f64 / 2_000_000.0;
+    d.mul_f64(frac)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_exponentially_and_caps() {
+        let mut b = Backoff::new(Duration::from_millis(100), Duration::from_secs(2), 1);
+        let delays: Vec<Duration> = (0..8).map(|_| b.next_delay()).collect();
+        // Jitter scales into [0.5, 1.0), so each delay is at least half
+        // its un-jittered envelope and below the envelope itself.
+        for (i, d) in delays.iter().enumerate() {
+            let envelope =
+                Duration::from_millis(100 * (1u64 << i.min(5))).min(Duration::from_secs(2));
+            assert!(*d >= envelope / 2, "attempt {i}: {d:?} under half of {envelope:?}");
+            assert!(*d <= envelope, "attempt {i}: {d:?} over {envelope:?}");
+        }
+        assert!(delays[7] <= Duration::from_secs(2));
+        assert_eq!(b.attempts(), 8);
+        b.reset();
+        assert_eq!(b.attempts(), 0);
+    }
+
+    #[test]
+    fn backoff_is_deterministic_per_seed_and_jittered_across_seeds() {
+        let delays = |seed: u64| -> Vec<Duration> {
+            let mut b = Backoff::new(Duration::from_millis(50), Duration::from_secs(1), seed);
+            (0..4).map(|_| b.next_delay()).collect()
+        };
+        assert_eq!(delays(7), delays(7), "same seed must reproduce");
+        assert_ne!(delays(7), delays(8), "different seeds must spread out");
+    }
+
+    #[test]
+    fn retry_after_hint_is_a_floor() {
+        let mut b = Backoff::new(Duration::from_millis(1), Duration::from_millis(8), 3);
+        let hint = Duration::from_millis(250);
+        assert!(b.next_delay_after(hint) >= hint);
+    }
+}

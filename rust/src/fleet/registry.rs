@@ -1,0 +1,440 @@
+//! The worker registry: live fleet membership and per-worker transport.
+//!
+//! The registry owns one **connection thread** per worker. The scheduler
+//! never touches a socket: it hands a batch to a worker's thread over a
+//! channel and waits (with a deadline) on a per-batch reply channel, so
+//! worker death and slowness surface as channel events the scheduler can
+//! act on — re-deal, retry, or fall back — without any transport
+//! knowledge. A worker that breaks its connection (EOF, garbage frame,
+//! short result) is marked dead and never dealt to again; the rest of
+//! the registry is unaffected.
+//!
+//! Endpoints come in two transports sharing one codec:
+//!
+//! * `host:port` — JSON-over-TCP to a running `fbo worker --listen`;
+//! * `stdio:<command ...>` — spawn the command (typically `fbo worker
+//!   --stdio`) as a child and speak frames over its stdio pipe.
+//!
+//! Shutdown mirrors the service pool's drain-then-stop: the registry
+//! sends `drain`, the worker finishes in-flight work and replies `bye`,
+//! and only then does the connection thread exit (and a spawned child
+//! get reaped).
+
+use std::cell::Cell;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::wire::{read_frame, write_frame, Capabilities, Frame, WireBatch, WireOutcome, PROTOCOL};
+
+/// How long a TCP connect / hello handshake may take before the endpoint
+/// is rejected at registry construction.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// One parsed `--fleet` endpoint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FleetEndpoint {
+    /// JSON-over-TCP to `host:port`.
+    Tcp(String),
+    /// Spawn `command` and speak frames over its stdio pipe.
+    Stdio(Vec<String>),
+}
+
+impl FleetEndpoint {
+    /// Parse one endpoint string: `host:port`, or `stdio:<command ...>`
+    /// (whitespace-separated argv).
+    pub fn parse(s: &str) -> Result<FleetEndpoint> {
+        if let Some(cmd) = s.strip_prefix("stdio:") {
+            let argv: Vec<String> = cmd.split_whitespace().map(str::to_string).collect();
+            if argv.is_empty() {
+                bail!("empty stdio fleet endpoint");
+            }
+            return Ok(FleetEndpoint::Stdio(argv));
+        }
+        if s.contains(':') {
+            return Ok(FleetEndpoint::Tcp(s.to_string()));
+        }
+        bail!("fleet endpoint {s:?} is neither host:port nor stdio:<command>")
+    }
+
+    /// Parse a comma-separated `--fleet` list.
+    pub fn parse_list(s: &str) -> Result<Vec<FleetEndpoint>> {
+        s.split(',')
+            .map(str::trim)
+            .filter(|e| !e.is_empty())
+            .map(FleetEndpoint::parse)
+            .collect()
+    }
+
+    /// Stable display label (worker name in stats, metrics, and traces).
+    pub fn label(&self) -> String {
+        match self {
+            FleetEndpoint::Tcp(addr) => format!("tcp:{addr}"),
+            FleetEndpoint::Stdio(argv) => format!("stdio:{}", argv[0]),
+        }
+    }
+
+    /// Render back to the `--fleet` argument form that parses to this
+    /// endpoint (the service config carries endpoints as these strings).
+    pub fn as_arg(&self) -> String {
+        match self {
+            FleetEndpoint::Tcp(addr) => addr.clone(),
+            FleetEndpoint::Stdio(argv) => format!("stdio:{}", argv.join(" ")),
+        }
+    }
+}
+
+/// A command to a worker's connection thread.
+pub(crate) enum WorkerCmd {
+    /// Exchange one measure batch; the reply goes to `reply`.
+    Batch {
+        /// Correlation id (unique per registry).
+        id: u64,
+        /// The batch to ship.
+        batch: WireBatch,
+        /// Where the outcome lands. A dropped receiver (scheduler timed
+        /// out and moved on) is fine — the send is best-effort.
+        reply: mpsc::Sender<Result<Vec<WireOutcome>>>,
+    },
+    /// Drain and close the connection.
+    Drain,
+}
+
+/// One live (or dead) fleet worker as the scheduler sees it. The
+/// liveness and busy flags are shared with the connection thread; the
+/// scheduler itself is single-threaded per search.
+pub struct FleetWorker {
+    name: String,
+    caps: Capabilities,
+    alive: Arc<AtomicBool>,
+    busy: Arc<AtomicBool>,
+    tx: mpsc::Sender<WorkerCmd>,
+}
+
+impl FleetWorker {
+    /// Display name (`tcp:host:port` / `stdio:command`, suffixed with an
+    /// index when the same endpoint appears twice).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Capabilities the worker announced in its hello frame.
+    pub fn caps(&self) -> &Capabilities {
+        &self.caps
+    }
+
+    /// False once the worker's connection broke; a dead worker is never
+    /// dealt to again.
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Relaxed)
+    }
+
+    /// True while a batch is in flight on this worker's connection —
+    /// including a batch the scheduler already timed out on (the
+    /// connection thread stays busy until the worker replies or dies).
+    pub fn is_busy(&self) -> bool {
+        self.busy.load(Ordering::Relaxed)
+    }
+
+    /// Ship a batch to the connection thread; the returned receiver
+    /// yields the outcome (or disconnects if the worker is gone).
+    pub(crate) fn dispatch(
+        &self,
+        id: u64,
+        batch: WireBatch,
+    ) -> mpsc::Receiver<Result<Vec<WireOutcome>>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.busy.store(true, Ordering::Relaxed);
+        if self.tx.send(WorkerCmd::Batch { id, batch, reply: reply_tx }).is_err() {
+            // The connection thread is gone; the dropped sender makes the
+            // receiver report Disconnected, which the scheduler treats as
+            // worker death.
+            self.alive.store(false, Ordering::Relaxed);
+        }
+        reply_rx
+    }
+}
+
+/// The connection thread's end of one worker link.
+struct Link {
+    reader: Box<dyn BufRead + Send>,
+    writer: Box<dyn Write + Send>,
+    /// A handle to the TCP stream (to clear the handshake read timeout);
+    /// stdio links have none.
+    stream: Option<TcpStream>,
+    /// The spawned child for stdio endpoints, reaped at drain.
+    child: Option<Child>,
+}
+
+/// The live fleet: one [`FleetWorker`] per successfully-handshaken
+/// endpoint, plus the reasons any endpoint was rejected. Dropping the
+/// registry drains every worker (drain-then-stop) and joins the
+/// connection threads.
+pub struct FleetRegistry {
+    workers: Vec<FleetWorker>,
+    rejected: Vec<String>,
+    threads: Vec<JoinHandle<()>>,
+    next_batch: Cell<u64>,
+}
+
+impl FleetRegistry {
+    /// Connect to every endpoint and validate each hello frame. An
+    /// endpoint that cannot connect, speaks the wrong protocol version,
+    /// or opens with anything but a hello is **rejected** (recorded in
+    /// [`FleetRegistry::rejected`]) without failing the others — an
+    /// empty registry simply means every measurement falls back to the
+    /// local executor.
+    pub fn connect(endpoints: &[FleetEndpoint]) -> FleetRegistry {
+        let mut reg = FleetRegistry {
+            workers: Vec::new(),
+            rejected: Vec::new(),
+            threads: Vec::new(),
+            next_batch: Cell::new(0),
+        };
+        for (i, ep) in endpoints.iter().enumerate() {
+            let name = format!("{}#{i}", ep.label());
+            match handshake(ep) {
+                Ok((link, caps)) => {
+                    let alive = Arc::new(AtomicBool::new(true));
+                    let busy = Arc::new(AtomicBool::new(false));
+                    let (tx, rx) = mpsc::channel();
+                    let thread_alive = alive.clone();
+                    let thread_busy = busy.clone();
+                    match std::thread::Builder::new()
+                        .name(format!("fbo-fleet-{i}"))
+                        .spawn(move || link_main(link, rx, thread_alive, thread_busy))
+                    {
+                        Ok(handle) => {
+                            reg.threads.push(handle);
+                            reg.workers.push(FleetWorker { name, caps, alive, busy, tx });
+                        }
+                        Err(e) => reg.rejected.push(format!("{name}: spawning link thread: {e}")),
+                    }
+                }
+                Err(e) => reg.rejected.push(format!("{name}: {e:#}")),
+            }
+        }
+        reg
+    }
+
+    /// Every registered worker, dead ones included (stable order).
+    pub fn workers(&self) -> &[FleetWorker] {
+        &self.workers
+    }
+
+    /// Workers still alive.
+    pub fn live(&self) -> Vec<&FleetWorker> {
+        self.workers.iter().filter(|w| w.is_alive()).collect()
+    }
+
+    /// Number of workers still alive.
+    pub fn live_count(&self) -> usize {
+        self.workers.iter().filter(|w| w.is_alive()).count()
+    }
+
+    /// Why endpoints were rejected at connect time (version mismatches,
+    /// connect failures), in endpoint order.
+    pub fn rejected(&self) -> &[String] {
+        &self.rejected
+    }
+
+    /// Allocate the next batch correlation id.
+    pub(crate) fn next_batch_id(&self) -> u64 {
+        let id = self.next_batch.get() + 1;
+        self.next_batch.set(id);
+        id
+    }
+
+    /// Drain-then-stop: tell every connection thread to finish its
+    /// in-flight batch, send `drain`, await `bye`, and exit. Joins the
+    /// threads (and reaps spawned children). Idempotent.
+    pub fn drain(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(WorkerCmd::Drain);
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        for w in &self.workers {
+            w.alive.store(false, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Drop for FleetRegistry {
+    fn drop(&mut self) {
+        self.drain();
+    }
+}
+
+/// Open the transport and validate the worker's hello frame.
+fn handshake(ep: &FleetEndpoint) -> Result<(Link, Capabilities)> {
+    let mut link = open_link(ep)?;
+    let hello = read_frame(&mut link.reader).context("reading the hello frame")?;
+    match hello {
+        Frame::Hello { protocol, caps } if protocol == PROTOCOL => {
+            // The handshake is bounded; steady-state reads block until
+            // the scheduler-side batch deadline decides otherwise.
+            if let Some(stream) = &link.stream {
+                stream.set_read_timeout(None).ok();
+            }
+            Ok((link, caps))
+        }
+        Frame::Hello { protocol, .. } => {
+            let _ = write_frame(&mut link.writer, &Frame::Bye);
+            bail!("worker speaks protocol {protocol:?}, this scheduler wants {PROTOCOL:?}")
+        }
+        other => bail!("worker opened with a {} frame instead of hello", other.name()),
+    }
+}
+
+fn open_link(ep: &FleetEndpoint) -> Result<Link> {
+    match ep {
+        FleetEndpoint::Tcp(addr) => {
+            let sock = addr
+                .to_socket_addrs()
+                .with_context(|| format!("resolving fleet endpoint {addr:?}"))?
+                .next()
+                .ok_or_else(|| anyhow!("fleet endpoint {addr:?} resolved to no address"))?;
+            let stream = TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT)
+                .with_context(|| format!("connecting to fleet worker {addr}"))?;
+            stream.set_nodelay(true).ok();
+            // Bound the handshake; cleared after the hello frame lands.
+            stream.set_read_timeout(Some(CONNECT_TIMEOUT)).ok();
+            let reader = BufReader::new(stream.try_clone().context("cloning the stream")?);
+            let handle = stream.try_clone().context("cloning the stream")?;
+            Ok(Link {
+                reader: Box::new(reader),
+                writer: Box::new(stream),
+                stream: Some(handle),
+                child: None,
+            })
+        }
+        FleetEndpoint::Stdio(argv) => {
+            let mut child = Command::new(&argv[0])
+                .args(&argv[1..])
+                .stdin(Stdio::piped())
+                .stdout(Stdio::piped())
+                .spawn()
+                .with_context(|| format!("spawning fleet worker {:?}", argv[0]))?;
+            let stdin = child.stdin.take().expect("piped stdin");
+            let stdout = child.stdout.take().expect("piped stdout");
+            Ok(Link {
+                reader: Box::new(BufReader::new(stdout)),
+                writer: Box::new(stdin),
+                stream: None,
+                child: Some(child),
+            })
+        }
+    }
+}
+
+/// One worker's connection thread: exchange batches serially, mark the
+/// worker dead on any wire error, drain on command.
+fn link_main(
+    mut link: Link,
+    rx: mpsc::Receiver<WorkerCmd>,
+    alive: Arc<AtomicBool>,
+    busy: Arc<AtomicBool>,
+) {
+    let mut clean = true;
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            WorkerCmd::Batch { id, batch, reply } => {
+                let outcome = exchange(&mut link, id, &batch);
+                let broke = outcome.is_err();
+                busy.store(false, Ordering::Relaxed);
+                let _ = reply.send(outcome);
+                if broke {
+                    alive.store(false, Ordering::Relaxed);
+                    clean = false;
+                    break;
+                }
+            }
+            WorkerCmd::Drain => break,
+        }
+    }
+    if clean {
+        // Drain-then-stop: mirror the pool's shutdown so the worker can
+        // exit (or serve its next scheduler) cleanly.
+        let _ = write_frame(&mut link.writer, &Frame::Drain);
+        loop {
+            match read_frame(&mut link.reader) {
+                Ok(Frame::Bye) | Err(_) => break,
+                Ok(_) => continue,
+            }
+        }
+    }
+    alive.store(false, Ordering::Relaxed);
+    if let Some(mut child) = link.child {
+        let _ = child.wait();
+    }
+}
+
+/// Ship one batch and read frames until its result arrives. Stale
+/// results (from a batch the scheduler abandoned) and heartbeats are
+/// skipped; anything else desynchronizes the connection.
+fn exchange(link: &mut Link, id: u64, batch: &WireBatch) -> Result<Vec<WireOutcome>> {
+    write_frame(&mut link.writer, &Frame::MeasureBatch { id, batch: batch.clone() })?;
+    loop {
+        match read_frame(&mut link.reader)? {
+            Frame::MeasureResult { id: got, results } if got == id => {
+                if results.len() != batch.specs.len() {
+                    bail!(
+                        "worker returned {} results for {} planned patterns",
+                        results.len(),
+                        batch.specs.len()
+                    );
+                }
+                return Ok(results);
+            }
+            Frame::MeasureResult { .. } | Frame::Heartbeat { .. } => continue,
+            other => bail!("unexpected {} frame while awaiting batch {id}", other.name()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_parsing_covers_both_transports() {
+        assert_eq!(
+            FleetEndpoint::parse("worker1:7070").unwrap(),
+            FleetEndpoint::Tcp("worker1:7070".to_string())
+        );
+        let stdio = FleetEndpoint::parse("stdio:fbo worker --stdio").unwrap();
+        assert_eq!(
+            stdio,
+            FleetEndpoint::Stdio(vec![
+                "fbo".to_string(),
+                "worker".to_string(),
+                "--stdio".to_string()
+            ])
+        );
+        assert_eq!(stdio.label(), "stdio:fbo");
+        assert_eq!(FleetEndpoint::parse(&stdio.as_arg()).unwrap(), stdio, "as_arg round-trips");
+        assert!(FleetEndpoint::parse("no-port").is_err());
+        assert!(FleetEndpoint::parse("stdio:").is_err());
+        let list = FleetEndpoint::parse_list("a:1, b:2 ,").unwrap();
+        assert_eq!(list.len(), 2);
+        assert_eq!(list[1], FleetEndpoint::Tcp("b:2".to_string()));
+    }
+
+    #[test]
+    fn unreachable_endpoints_are_rejected_not_fatal() {
+        // Port 1 on localhost is essentially never listening; the
+        // registry must record the rejection and stay usable.
+        let reg = FleetRegistry::connect(&[FleetEndpoint::Tcp("127.0.0.1:1".to_string())]);
+        assert_eq!(reg.live_count(), 0);
+        assert_eq!(reg.rejected().len(), 1);
+        assert!(reg.rejected()[0].starts_with("tcp:127.0.0.1:1#0"), "{:?}", reg.rejected());
+    }
+}

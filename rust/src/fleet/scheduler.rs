@@ -1,0 +1,470 @@
+//! The fleet scheduler: a [`PatternExecutor`] that deals a verify plan's
+//! independent measurements across live workers.
+//!
+//! Scheduling is deterministic and capability-aware. Each pattern's
+//! *need* is the union of its enabled blocks' target kinds (a GPU-library
+//! block needs `gpu`, an FPGA IP-core block needs `fpga`; the all-CPU
+//! baseline needs nothing), and a pattern is only dealt to a worker whose
+//! announced capabilities cover that need. Within the capable set the
+//! deal is greedy longest-processing-time: patterns sorted by estimated
+//! cost (fewer offloaded blocks run longer on the interpreter) land on
+//! the worker with the least accumulated cost, so a 2-worker fleet splits
+//! a phase-1 sweep roughly evenly instead of round-robining the slow
+//! all-CPU-ish patterns onto one box.
+//!
+//! The failure matrix, in order of detection:
+//!
+//! * **no live workers** — every pattern measures on the local fallback
+//!   executor (the fleet degrades to exactly the non-fleet behavior);
+//! * **no capable worker for a pattern** — that pattern measures locally
+//!   in the same round, concurrently with the remote batches;
+//! * **worker death mid-batch** — its patterns re-deal to the survivors
+//!   after a jittered backoff;
+//! * **batch timeout** — the worker is left marked busy (its connection
+//!   thread keeps waiting; a late reply just clears the flag) and the
+//!   batch re-deals elsewhere;
+//! * **retries exhausted** — whatever is still unmeasured falls back to
+//!   the local executor.
+//!
+//! Whatever the path, the outcome vector stays index-aligned with the
+//! specs and each outcome is byte-identical to what
+//! [`crate::coordinator::SerialExecutor`] would produce — including
+//! failed measurements, whose wire error text reconstructs the same
+//! resolved label.
+
+use std::cell::Cell;
+use std::rc::Rc;
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::verify::{MeasuredPattern, PatternSpec, VerifyContext};
+use crate::coordinator::PatternExecutor;
+use crate::parser;
+use crate::patterndb::json::fnv1a64;
+use crate::patterndb::TargetKind;
+use crate::telemetry::{Registry, TraceEvent, TraceRecorder};
+use crate::transform::PlannedReplacement;
+
+use super::registry::{FleetRegistry, FleetWorker};
+use super::wire::{Capabilities, WireBatch, WireOutcome};
+use super::Backoff;
+
+/// Default per-round deadline for a remote batch. Measurement batches
+/// run whole programs repeatedly, so the default is generous; tighten it
+/// with [`FleetExecutor::with_timeout`] (tests use tens of milliseconds).
+const DEFAULT_BATCH_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// Re-deal rounds after the first before the remainder falls back to the
+/// local executor.
+const DEFAULT_MAX_RETRIES: u32 = 2;
+
+/// Backoff envelope between re-deal rounds.
+const REDEAL_BACKOFF_BASE: Duration = Duration::from_millis(50);
+const REDEAL_BACKOFF_CAP: Duration = Duration::from_secs(2);
+
+/// Counters the fleet executor keeps about its own scheduling (distinct
+/// from wire-level telemetry): where patterns were measured and how often
+/// a round had to be re-dealt.
+#[derive(Debug, Default)]
+pub struct FleetStats {
+    remote: Cell<u64>,
+    local: Cell<u64>,
+    redeals: Cell<u64>,
+}
+
+impl FleetStats {
+    /// Patterns whose measurement came back from a fleet worker.
+    pub fn remote(&self) -> u64 {
+        self.remote.get()
+    }
+
+    /// Patterns measured by the local fallback executor (no capable or
+    /// live worker, or retries exhausted).
+    pub fn local(&self) -> u64 {
+        self.local.get()
+    }
+
+    /// Rounds that re-dealt patterns after a worker death or timeout.
+    pub fn redeals(&self) -> u64 {
+        self.redeals.get()
+    }
+
+    fn bump(cell: &Cell<u64>, n: u64) {
+        cell.set(cell.get() + n);
+    }
+}
+
+/// Fleet observability hooks: per-worker batch counters and dispatch
+/// spans. Wired by the service (`--serve`) and the CLI when telemetry is
+/// on; the executor works fine without it.
+pub struct FleetTelemetry {
+    metrics: Arc<Registry>,
+    recorder: Arc<TraceRecorder>,
+    /// Trace id of the request currently verifying (0 = none) — the same
+    /// cell the pool's dispatch sink reads, so fleet spans land on the
+    /// right request trace.
+    trace: Rc<Cell<u64>>,
+}
+
+impl FleetTelemetry {
+    /// Hooks writing into `metrics` and recording spans on `recorder`
+    /// under whatever trace id `trace` holds at dispatch time.
+    pub fn new(
+        metrics: Arc<Registry>,
+        recorder: Arc<TraceRecorder>,
+        trace: Rc<Cell<u64>>,
+    ) -> FleetTelemetry {
+        FleetTelemetry { metrics, recorder, trace }
+    }
+
+    fn workers(&self, live: usize) {
+        self.metrics.gauge("fbo_fleet_workers", "Live fleet workers.", &[]).set(live as f64);
+    }
+
+    fn batch(&self, worker: &str, patterns: usize, wall: Duration, outcome: &str) {
+        self.metrics
+            .counter(
+                "fbo_fleet_batches_total",
+                "Fleet measure batches by worker and outcome.",
+                &[("worker", worker), ("outcome", outcome)],
+            )
+            .inc();
+        let trace = self.trace.get();
+        if trace != 0 {
+            self.recorder.record(
+                trace,
+                TraceEvent::FleetBatch {
+                    worker: worker.to_string(),
+                    patterns: patterns as u64,
+                    wall_ns: wall.as_nanos() as u64,
+                    outcome: outcome.to_string(),
+                },
+            );
+        }
+    }
+
+    fn redeal(&self) {
+        self.metrics
+            .counter(
+                "fbo_fleet_redeals_total",
+                "Fleet batch re-deals after a worker death or timeout.",
+                &[],
+            )
+            .inc();
+    }
+}
+
+/// A [`PatternExecutor`] that measures over the fleet, falling back to a
+/// local executor whenever the fleet cannot answer. Owns the registry —
+/// dropping the executor drains every worker.
+pub struct FleetExecutor {
+    registry: FleetRegistry,
+    fallback: Rc<dyn PatternExecutor>,
+    timeout: Duration,
+    max_retries: u32,
+    stats: FleetStats,
+    telemetry: Option<FleetTelemetry>,
+}
+
+impl FleetExecutor {
+    /// A fleet executor over `registry`, measuring locally on `fallback`
+    /// whenever a pattern cannot (or should not) go remote.
+    pub fn new(registry: FleetRegistry, fallback: Rc<dyn PatternExecutor>) -> FleetExecutor {
+        FleetExecutor {
+            registry,
+            fallback,
+            timeout: DEFAULT_BATCH_TIMEOUT,
+            max_retries: DEFAULT_MAX_RETRIES,
+            stats: FleetStats::default(),
+            telemetry: None,
+        }
+    }
+
+    /// Override the per-round batch deadline (tests shrink it to force
+    /// the timeout path).
+    pub fn with_timeout(mut self, timeout: Duration) -> FleetExecutor {
+        self.timeout = timeout;
+        self
+    }
+
+    /// Attach metrics + trace hooks.
+    pub fn with_telemetry(mut self, telemetry: FleetTelemetry) -> FleetExecutor {
+        self.telemetry = Some(telemetry);
+        self
+    }
+
+    /// Scheduling counters accumulated so far.
+    pub fn stats(&self) -> &FleetStats {
+        &self.stats
+    }
+
+    /// The worker registry this executor deals over.
+    pub fn registry(&self) -> &FleetRegistry {
+        &self.registry
+    }
+
+    fn measure_local(
+        &self,
+        ctx: &VerifyContext<'_>,
+        specs: &[PatternSpec],
+        indices: &[usize],
+        results: &mut [Option<Result<MeasuredPattern>>],
+    ) {
+        let subset: Vec<PatternSpec> = indices.iter().map(|&i| specs[i].clone()).collect();
+        let outcomes = self.fallback.measure(ctx, &subset);
+        FleetStats::bump(&self.stats.local, indices.len() as u64);
+        for (&i, outcome) in indices.iter().zip(outcomes) {
+            results[i] = Some(outcome);
+        }
+    }
+}
+
+impl PatternExecutor for FleetExecutor {
+    fn measure(
+        &self,
+        ctx: &VerifyContext<'_>,
+        specs: &[PatternSpec],
+    ) -> Vec<Result<MeasuredPattern>> {
+        let mut results: Vec<Option<Result<MeasuredPattern>>> =
+            (0..specs.len()).map(|_| None).collect();
+        if self.registry.live_count() == 0 {
+            self.measure_local(ctx, specs, &(0..specs.len()).collect::<Vec<_>>(), &mut results);
+            return unwrap_all(results);
+        }
+        if let Some(t) = &self.telemetry {
+            t.workers(self.registry.live_count());
+        }
+        let source = parser::print_program(ctx.prog);
+        let mut pending: Vec<usize> = (0..specs.len()).collect();
+        let mut backoff =
+            Backoff::new(REDEAL_BACKOFF_BASE, REDEAL_BACKOFF_CAP, fnv1a64(ctx.entry.as_bytes()));
+        loop {
+            let available: Vec<&FleetWorker> = self
+                .registry
+                .workers()
+                .iter()
+                .filter(|w| w.is_alive() && !w.is_busy())
+                .collect();
+            if available.is_empty() {
+                self.measure_local(ctx, specs, &pending, &mut results);
+                break;
+            }
+            let (deal, local) = deal_round(specs, &pending, &available, ctx.blocks);
+            let mut inflight = Vec::new();
+            for (wi, indices) in deal {
+                let batch = WireBatch {
+                    source: source.clone(),
+                    entry: ctx.entry.to_string(),
+                    blocks: ctx.blocks.to_vec(),
+                    cfg: ctx.cfg.clone(),
+                    specs: indices.iter().map(|&i| specs[i].clone()).collect(),
+                };
+                let id = self.registry.next_batch_id();
+                let rx = available[wi].dispatch(id, batch);
+                inflight.push((available[wi], indices, rx, Instant::now()));
+            }
+            // Patterns no capable worker can take measure locally while
+            // the remote batches run.
+            if !local.is_empty() {
+                self.measure_local(ctx, specs, &local, &mut results);
+            }
+            let deadline = Instant::now() + self.timeout;
+            let mut retry = Vec::new();
+            for (worker, indices, rx, started) in inflight {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(remaining) {
+                    Ok(Ok(outcomes)) => {
+                        // The registry validated the alignment already.
+                        for (&i, outcome) in indices.iter().zip(outcomes) {
+                            results[i] = Some(outcome.into_result());
+                        }
+                        FleetStats::bump(&self.stats.remote, indices.len() as u64);
+                        if let Some(t) = &self.telemetry {
+                            t.batch(worker.name(), indices.len(), started.elapsed(), "ok");
+                        }
+                    }
+                    Ok(Err(_)) | Err(RecvTimeoutError::Disconnected) => {
+                        eprintln!("fleet: worker {} lost mid-batch, re-dealing", worker.name());
+                        retry.extend(indices);
+                        if let Some(t) = &self.telemetry {
+                            t.batch(worker.name(), 0, started.elapsed(), "error");
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        // The connection thread keeps waiting and keeps
+                        // the worker marked busy; a late reply merely
+                        // clears the flag.
+                        eprintln!(
+                            "fleet: worker {} missed the {:?} batch deadline, re-dealing",
+                            worker.name(),
+                            self.timeout
+                        );
+                        retry.extend(indices);
+                        if let Some(t) = &self.telemetry {
+                            t.batch(worker.name(), 0, started.elapsed(), "timeout");
+                        }
+                    }
+                }
+            }
+            if let Some(t) = &self.telemetry {
+                t.workers(self.registry.live_count());
+            }
+            pending = retry;
+            if pending.is_empty() {
+                break;
+            }
+            FleetStats::bump(&self.stats.redeals, 1);
+            if let Some(t) = &self.telemetry {
+                t.redeal();
+            }
+            if backoff.attempts() >= self.max_retries || self.registry.live_count() == 0 {
+                self.measure_local(ctx, specs, &pending, &mut results);
+                break;
+            }
+            std::thread::sleep(backoff.next_delay());
+        }
+        unwrap_all(results)
+    }
+
+    fn name(&self) -> &'static str {
+        "fleet"
+    }
+}
+
+fn unwrap_all(results: Vec<Option<Result<MeasuredPattern>>>) -> Vec<Result<MeasuredPattern>> {
+    results
+        .into_iter()
+        .map(|r| r.expect("every planned pattern resolves remotely or locally"))
+        .collect()
+}
+
+/// The capability a pattern needs: the union of its enabled blocks'
+/// target kinds.
+fn needs(spec: &PatternSpec, blocks: &[PlannedReplacement]) -> (bool, bool) {
+    let mut gpu = false;
+    let mut fpga = false;
+    for (block, &on) in blocks.iter().zip(&spec.enabled) {
+        if on {
+            match block.replacement.kind {
+                TargetKind::GpuLibrary => gpu = true,
+                TargetKind::FpgaIpCore => fpga = true,
+            }
+        }
+    }
+    (gpu, fpga)
+}
+
+fn capable(caps: &Capabilities, need: (bool, bool)) -> bool {
+    (!need.0 || caps.gpu) && (!need.1 || caps.fpga)
+}
+
+/// Estimated relative cost of measuring a pattern: every block left on
+/// the interpreter costs, so the all-CPU baseline is the most expensive
+/// and the everything-offloaded pattern the cheapest. The absolute scale
+/// is irrelevant — only the ordering feeds the deal.
+fn cost(spec: &PatternSpec, blocks: &[PlannedReplacement]) -> u64 {
+    let enabled = spec.enabled.iter().filter(|&&on| on).count() as u64;
+    blocks.len() as u64 + 1 - enabled.min(blocks.len() as u64)
+}
+
+/// Deal `pending` across `workers` greedily by descending cost (LPT):
+/// each pattern lands on the capable worker with the least accumulated
+/// cost. Patterns with no capable worker land in the local list. Both
+/// the order sort and the tie-breaks are deterministic.
+fn deal_round(
+    specs: &[PatternSpec],
+    pending: &[usize],
+    workers: &[&FleetWorker],
+    blocks: &[PlannedReplacement],
+) -> (Vec<(usize, Vec<usize>)>, Vec<usize>) {
+    let mut order: Vec<usize> = pending.to_vec();
+    order.sort_by_key(|&i| (std::cmp::Reverse(cost(&specs[i], blocks)), i));
+    let mut loads: Vec<u64> = vec![0; workers.len()];
+    let mut assigned: Vec<Vec<usize>> = vec![Vec::new(); workers.len()];
+    let mut local = Vec::new();
+    for i in order {
+        let need = needs(&specs[i], blocks);
+        let pick = (0..workers.len())
+            .filter(|&w| capable(workers[w].caps(), need))
+            .min_by_key(|&w| (loads[w], w));
+        match pick {
+            Some(w) => {
+                loads[w] += cost(&specs[i], blocks);
+                assigned[w].push(i);
+            }
+            None => local.push(i),
+        }
+    }
+    // Batch order must follow spec order so outcomes map back by zip.
+    let deal = assigned
+        .into_iter()
+        .enumerate()
+        .filter(|(_, idx)| !idx.is_empty())
+        .map(|(w, mut idx)| {
+            idx.sort_unstable();
+            (w, idx)
+        })
+        .collect();
+    local.sort_unstable();
+    (deal, local)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::patterndb::{Replacement, Signature, TargetKind};
+    use crate::transform::{Reconciliation, Site};
+
+    fn block(kind: TargetKind) -> PlannedReplacement {
+        PlannedReplacement {
+            site: Site::LibraryCall { callee: "fft".to_string() },
+            replacement: Replacement {
+                name: "fft".to_string(),
+                kind,
+                artifact: "fft".to_string(),
+                signature: Signature::new(&[("a", "float[]")], "float[]"),
+                usage: String::new(),
+                opencl_code: None,
+                pass_model: None,
+                description: String::new(),
+            },
+            reconciliation: Reconciliation::Exact,
+        }
+    }
+
+    fn spec(enabled: Vec<bool>) -> PatternSpec {
+        let label = format!("spec-{enabled:?}");
+        PatternSpec { enabled, label }
+    }
+
+    #[test]
+    fn needs_unions_enabled_block_kinds() {
+        let blocks = vec![block(TargetKind::GpuLibrary), block(TargetKind::FpgaIpCore)];
+        assert_eq!(needs(&spec(vec![false, false]), &blocks), (false, false));
+        assert_eq!(needs(&spec(vec![true, false]), &blocks), (true, false));
+        assert_eq!(needs(&spec(vec![false, true]), &blocks), (false, true));
+        assert_eq!(needs(&spec(vec![true, true]), &blocks), (true, true));
+    }
+
+    #[test]
+    fn capability_covering_is_per_need() {
+        let gpu_only = Capabilities { gpu: true, fpga: false, ..Capabilities::default() };
+        assert!(capable(&gpu_only, (false, false)), "baseline runs anywhere");
+        assert!(capable(&gpu_only, (true, false)));
+        assert!(!capable(&gpu_only, (false, true)));
+        assert!(!capable(&gpu_only, (true, true)));
+    }
+
+    #[test]
+    fn cost_ranks_the_baseline_most_expensive() {
+        let blocks = vec![block(TargetKind::GpuLibrary), block(TargetKind::GpuLibrary)];
+        let baseline = cost(&spec(vec![false, false]), &blocks);
+        let one = cost(&spec(vec![true, false]), &blocks);
+        let both = cost(&spec(vec![true, true]), &blocks);
+        assert!(baseline > one, "{baseline} vs {one}");
+        assert!(one > both, "{one} vs {both}");
+    }
+}

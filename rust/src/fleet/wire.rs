@@ -1,0 +1,513 @@
+//! The `fbo-fleet-v1` wire protocol: versioned, length-prefixed,
+//! canonical-JSON frames.
+//!
+//! Every frame is encoded as
+//!
+//! ```text
+//! <payload byte length, ASCII decimal>\n
+//! <payload: one-line canonical JSON>\n
+//! ```
+//!
+//! The payload is [`crate::patterndb::json::to_string_compact`] output —
+//! sorted keys, no whitespace — so a frame round-trips byte-identically
+//! and the golden fixture under `tests/fixtures/` pins the schema. The
+//! codec is transport-agnostic: the same [`read_frame`] / [`write_frame`]
+//! pair runs over a TCP stream and over a spawned child's stdio pipe.
+//!
+//! Conversation shape (scheduler = client, worker = server):
+//!
+//! | frame            | direction           | meaning                                      |
+//! |------------------|---------------------|----------------------------------------------|
+//! | `hello`          | worker -> scheduler | first frame: protocol version + capabilities |
+//! | `measure-batch`  | scheduler -> worker | measure these specs, reply under the same id |
+//! | `measure-result` | worker -> scheduler | index-aligned outcomes of batch `id`         |
+//! | `heartbeat`      | either              | liveness probe; the peer echoes the seq      |
+//! | `drain`          | scheduler -> worker | finish in-flight work, reply `bye`, close    |
+//! | `bye`            | either              | final frame before closing the transport     |
+//!
+//! A version mismatch is detected on the `hello` frame and rejected by
+//! the registry before any work is dealt; a malformed frame is a
+//! connection-fatal error on whichever side reads it (never a crash).
+
+use std::io::{BufRead, Write};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::report_json::{
+    measurement_from_json, measurement_to_json, plan_from_json, plan_to_json, traffic_from_json,
+    traffic_to_json,
+};
+use crate::coordinator::verify::{MeasuredPattern, PatternSpec, ResultProbe};
+use crate::coordinator::VerifyConfig;
+use crate::patterndb::json::{self, Json};
+use crate::transform::PlannedReplacement;
+
+/// Protocol identifier carried by every [`Frame::Hello`]; bump on any
+/// incompatible schema change.
+pub const PROTOCOL: &str = "fbo-fleet-v1";
+
+/// Upper bound on one frame's payload, guarding the reader against a
+/// garbage length prefix allocating unbounded memory.
+pub const MAX_FRAME_BYTES: usize = 64 * 1024 * 1024;
+
+/// What a worker can measure, announced in its [`Frame::Hello`]. The
+/// scheduler only deals a pattern to a worker whose capabilities cover
+/// every enabled block of the pattern.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Capabilities {
+    /// Worker can measure GPU-library replacements (PJRT artifacts).
+    pub gpu: bool,
+    /// Worker can measure FPGA IP-core replacements.
+    pub fpga: bool,
+    /// Device model string (informational; surfaces in stats and logs).
+    pub device: String,
+    /// Patterns the worker measures concurrently (its engine plus
+    /// measure-only siblings).
+    pub max_inflight: usize,
+}
+
+impl Default for Capabilities {
+    fn default() -> Self {
+        Capabilities { gpu: true, fpga: true, device: "pjrt-cpu".to_string(), max_inflight: 1 }
+    }
+}
+
+/// One self-contained measurement batch: everything a worker needs to
+/// re-create the [`crate::coordinator::VerifyContext`] and run
+/// [`crate::coordinator::verify::measure_spec`] — the library-linked
+/// program source, the entry point, the reconciled block list, the
+/// measurement settings, and the pattern specs to measure.
+#[derive(Debug, Clone)]
+pub struct WireBatch {
+    /// Printed form of the library-linked program (re-parsed remotely).
+    pub source: String,
+    /// Entry-point function name.
+    pub entry: String,
+    /// Accepted replacement plans, in block order.
+    pub blocks: Vec<PlannedReplacement>,
+    /// Measurement settings (reps, warmup, fuel, tolerance).
+    pub cfg: VerifyConfig,
+    /// The patterns to measure, in batch order.
+    pub specs: Vec<PatternSpec>,
+}
+
+/// One pattern's outcome inside a [`Frame::MeasureResult`], index-aligned
+/// with the batch's specs.
+#[derive(Debug, Clone)]
+pub enum WireOutcome {
+    /// The pattern measured successfully.
+    Ok(MeasuredPattern),
+    /// The measurement failed on the worker.
+    Err {
+        /// Top-level error text, mirroring what a local executor's error
+        /// would display — the resolved pattern label stays identical to
+        /// the serial executor's.
+        message: String,
+        /// Full error context chain, for logs only.
+        detail: String,
+    },
+}
+
+/// One protocol frame. See the module docs for the conversation shape.
+#[derive(Debug, Clone)]
+pub enum Frame {
+    /// First frame a worker sends on any transport: its protocol version
+    /// and capabilities.
+    Hello {
+        /// Protocol identifier; must equal [`PROTOCOL`].
+        protocol: String,
+        /// What this worker can measure.
+        caps: Capabilities,
+    },
+    /// Scheduler -> worker: measure `batch`, reply with a
+    /// [`Frame::MeasureResult`] carrying the same id.
+    MeasureBatch {
+        /// Correlation id echoed by the result frame.
+        id: u64,
+        /// The self-contained measurement batch.
+        batch: WireBatch,
+    },
+    /// Worker -> scheduler: outcomes of batch `id`, index-aligned with
+    /// the batch's specs.
+    MeasureResult {
+        /// Correlation id of the batch these results answer.
+        id: u64,
+        /// One outcome per spec, in spec order.
+        results: Vec<WireOutcome>,
+    },
+    /// Liveness probe; the receiving side echoes the same seq back.
+    Heartbeat {
+        /// Probe sequence number, echoed verbatim.
+        seq: u64,
+    },
+    /// Scheduler -> worker: finish in-flight work, reply [`Frame::Bye`],
+    /// then close — the fleet mirror of the pool's drain-then-stop.
+    Drain,
+    /// Final frame either side sends before closing the transport.
+    Bye,
+}
+
+impl Frame {
+    /// Canonical frame name — the JSON `"frame"` discriminator.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "hello",
+            Frame::MeasureBatch { .. } => "measure-batch",
+            Frame::MeasureResult { .. } => "measure-result",
+            Frame::Heartbeat { .. } => "heartbeat",
+            Frame::Drain => "drain",
+            Frame::Bye => "bye",
+        }
+    }
+
+    /// Serialize to the canonical JSON payload value.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![("frame", Json::str(self.name()))];
+        match self {
+            Frame::Hello { protocol, caps } => {
+                pairs.push(("protocol", Json::str(protocol)));
+                pairs.push(("gpu", Json::Bool(caps.gpu)));
+                pairs.push(("fpga", Json::Bool(caps.fpga)));
+                pairs.push(("device", Json::str(&caps.device)));
+                pairs.push(("max_inflight", Json::num(caps.max_inflight as f64)));
+            }
+            Frame::MeasureBatch { id, batch } => {
+                pairs.push(("id", Json::num(*id as f64)));
+                pairs.push(("source", Json::str(&batch.source)));
+                pairs.push(("entry", Json::str(&batch.entry)));
+                pairs.push(("blocks", Json::Arr(batch.blocks.iter().map(plan_to_json).collect())));
+                pairs.push(("reps", Json::num(batch.cfg.reps as f64)));
+                pairs.push(("warmup", Json::num(batch.cfg.warmup as f64)));
+                pairs.push(("fuel", Json::num(batch.cfg.fuel as f64)));
+                pairs.push(("tolerance", Json::num(batch.cfg.tolerance)));
+                pairs.push(("specs", Json::Arr(batch.specs.iter().map(spec_to_json).collect())));
+            }
+            Frame::MeasureResult { id, results } => {
+                pairs.push(("id", Json::num(*id as f64)));
+                pairs.push(("results", Json::Arr(results.iter().map(outcome_to_json).collect())));
+            }
+            Frame::Heartbeat { seq } => {
+                pairs.push(("seq", Json::num(*seq as f64)));
+            }
+            Frame::Drain | Frame::Bye => {}
+        }
+        Json::obj(pairs)
+    }
+
+    /// Decode from a JSON payload value (inverse of [`Frame::to_json`]).
+    pub fn from_json(v: &Json) -> Result<Frame> {
+        Ok(match v.get("frame")?.as_str()? {
+            "hello" => Frame::Hello {
+                protocol: v.get("protocol")?.as_str()?.to_string(),
+                caps: Capabilities {
+                    gpu: as_bool(v.get("gpu")?)?,
+                    fpga: as_bool(v.get("fpga")?)?,
+                    device: v.get("device")?.as_str()?.to_string(),
+                    max_inflight: v.get("max_inflight")?.as_usize()?,
+                },
+            },
+            "measure-batch" => Frame::MeasureBatch {
+                id: v.get("id")?.as_f64()? as u64,
+                batch: WireBatch {
+                    source: v.get("source")?.as_str()?.to_string(),
+                    entry: v.get("entry")?.as_str()?.to_string(),
+                    blocks: v
+                        .get("blocks")?
+                        .as_arr()?
+                        .iter()
+                        .map(plan_from_json)
+                        .collect::<Result<_>>()?,
+                    cfg: VerifyConfig {
+                        reps: v.get("reps")?.as_usize()?,
+                        warmup: v.get("warmup")?.as_usize()?,
+                        fuel: v.get("fuel")?.as_f64()? as u64,
+                        tolerance: v.get("tolerance")?.as_f64()?,
+                    },
+                    specs: v
+                        .get("specs")?
+                        .as_arr()?
+                        .iter()
+                        .map(spec_from_json)
+                        .collect::<Result<_>>()?,
+                },
+            },
+            "measure-result" => Frame::MeasureResult {
+                id: v.get("id")?.as_f64()? as u64,
+                results: v
+                    .get("results")?
+                    .as_arr()?
+                    .iter()
+                    .map(outcome_from_json)
+                    .collect::<Result<_>>()?,
+            },
+            "heartbeat" => Frame::Heartbeat { seq: v.get("seq")?.as_f64()? as u64 },
+            "drain" => Frame::Drain,
+            "bye" => Frame::Bye,
+            other => bail!("unknown fleet frame {other:?}"),
+        })
+    }
+}
+
+fn as_bool(v: &Json) -> Result<bool> {
+    match v {
+        Json::Bool(b) => Ok(*b),
+        other => bail!("expected JSON bool, got {other:?}"),
+    }
+}
+
+fn spec_to_json(s: &PatternSpec) -> Json {
+    Json::obj(vec![
+        ("enabled", Json::Arr(s.enabled.iter().map(|&b| Json::Bool(b)).collect())),
+        ("label", Json::str(&s.label)),
+    ])
+}
+
+fn spec_from_json(v: &Json) -> Result<PatternSpec> {
+    Ok(PatternSpec {
+        enabled: v.get("enabled")?.as_arr()?.iter().map(as_bool).collect::<Result<_>>()?,
+        label: v.get("label")?.as_str()?.to_string(),
+    })
+}
+
+/// Intern a wire type name against the interpreter's known result type
+/// names — [`ResultProbe::type_name`] is `&'static str`, so the decode
+/// side must map onto the same statics the local executor would produce.
+fn intern_type_name(s: &str) -> Result<&'static str> {
+    Ok(match s {
+        "int" => "int",
+        "float" => "float",
+        "array" => "array",
+        "struct" => "struct",
+        "string" => "string",
+        "void" => "void",
+        other => bail!("unknown result type name {other:?}"),
+    })
+}
+
+fn measured_to_json(m: &MeasuredPattern) -> Json {
+    Json::obj(vec![
+        ("time", measurement_to_json(&m.time)),
+        ("num", m.probe.num.map(Json::num).unwrap_or(Json::Null)),
+        ("type", Json::str(m.probe.type_name)),
+        ("output", Json::str(&m.output)),
+        ("traffic", traffic_to_json(&m.traffic)),
+    ])
+}
+
+fn measured_from_json(v: &Json) -> Result<MeasuredPattern> {
+    Ok(MeasuredPattern {
+        time: measurement_from_json(v.get("time")?)?,
+        probe: ResultProbe {
+            num: v.opt("num").map(|n| n.as_f64()).transpose()?,
+            type_name: intern_type_name(v.get("type")?.as_str()?)?,
+        },
+        output: v.get("output")?.as_str()?.to_string(),
+        traffic: traffic_from_json(v.get("traffic")?)?,
+    })
+}
+
+fn outcome_to_json(o: &WireOutcome) -> Json {
+    match o {
+        WireOutcome::Ok(m) => Json::obj(vec![("ok", measured_to_json(m))]),
+        WireOutcome::Err { message, detail } => Json::obj(vec![(
+            "err",
+            Json::obj(vec![("message", Json::str(message)), ("detail", Json::str(detail))]),
+        )]),
+    }
+}
+
+fn outcome_from_json(v: &Json) -> Result<WireOutcome> {
+    if let Some(ok) = v.opt("ok") {
+        return Ok(WireOutcome::Ok(measured_from_json(ok)?));
+    }
+    let err = v.get("err")?;
+    Ok(WireOutcome::Err {
+        message: err.get("message")?.as_str()?.to_string(),
+        detail: err.get("detail")?.as_str()?.to_string(),
+    })
+}
+
+impl WireOutcome {
+    /// Digest a local measurement result for the wire.
+    pub fn of(result: &Result<MeasuredPattern>) -> WireOutcome {
+        match result {
+            Ok(m) => WireOutcome::Ok(m.clone()),
+            Err(e) => WireOutcome::Err { message: format!("{e}"), detail: format!("{e:#}") },
+        }
+    }
+
+    /// Reconstruct the local measurement result. The error carries only
+    /// the worker's top-level message, so the search resolves a remotely
+    /// failed pattern to the exact label a local executor would produce.
+    pub fn into_result(self) -> Result<MeasuredPattern> {
+        match self {
+            WireOutcome::Ok(m) => Ok(m),
+            WireOutcome::Err { message, .. } => Err(anyhow!(message)),
+        }
+    }
+}
+
+/// Write one length-prefixed frame and flush the transport.
+pub fn write_frame(w: &mut dyn Write, frame: &Frame) -> Result<()> {
+    let payload = json::to_string_compact(&frame.to_json());
+    w.write_all(format!("{}\n", payload.len()).as_bytes())
+        .and_then(|()| w.write_all(payload.as_bytes()))
+        .and_then(|()| w.write_all(b"\n"))
+        .and_then(|()| w.flush())
+        .with_context(|| format!("writing {} frame", frame.name()))?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame. EOF before the length line, a
+/// non-decimal length, an oversized length, a truncated payload, or a
+/// payload that is not a valid frame are all errors — the connection is
+/// out of sync and must be dropped (never retried on the same stream).
+pub fn read_frame(r: &mut dyn BufRead) -> Result<Frame> {
+    let mut line = String::new();
+    let n = r.read_line(&mut line).context("reading frame length")?;
+    if n == 0 {
+        bail!("connection closed before a frame length");
+    }
+    let text = line.trim_end_matches('\n');
+    let len: usize = text
+        .parse()
+        .ok()
+        .filter(|_| !text.is_empty() && text.bytes().all(|b| b.is_ascii_digit()))
+        .ok_or_else(|| anyhow!("malformed frame length {text:?}"))?;
+    if len > MAX_FRAME_BYTES {
+        bail!("frame of {len} bytes exceeds the {MAX_FRAME_BYTES}-byte limit");
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf).context("reading frame payload")?;
+    let mut nl = [0u8; 1];
+    r.read_exact(&mut nl).context("reading frame terminator")?;
+    if nl[0] != b'\n' {
+        bail!("frame payload not terminated by a newline");
+    }
+    let payload = std::str::from_utf8(&buf).context("frame payload is not UTF-8")?;
+    Frame::from_json(&json::parse(payload).context("parsing frame payload")?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+    use std::time::Duration;
+
+    fn sample_frames() -> Vec<Frame> {
+        vec![
+            Frame::Hello {
+                protocol: PROTOCOL.to_string(),
+                caps: Capabilities {
+                    gpu: true,
+                    fpga: false,
+                    device: "pjrt-cpu".to_string(),
+                    max_inflight: 2,
+                },
+            },
+            Frame::MeasureBatch {
+                id: 1,
+                batch: WireBatch {
+                    source: "int main() { return 0; }".to_string(),
+                    entry: "main".to_string(),
+                    blocks: vec![],
+                    cfg: VerifyConfig {
+                        reps: 1,
+                        warmup: 0,
+                        fuel: 1_000_000,
+                        tolerance: 0.01,
+                    },
+                    specs: vec![PatternSpec { enabled: vec![], label: "all-CPU".to_string() }],
+                },
+            },
+            Frame::MeasureResult {
+                id: 1,
+                results: vec![
+                    WireOutcome::Ok(MeasuredPattern {
+                        time: crate::metrics::Measurement {
+                            label: "all-CPU".to_string(),
+                            median: Duration::from_nanos(90_000),
+                            min: Duration::from_nanos(88_000),
+                            max: Duration::from_nanos(91_000),
+                            reps: 1,
+                        },
+                        probe: ResultProbe { num: Some(42.0), type_name: "float" },
+                        output: "ok\n".to_string(),
+                        traffic: Default::default(),
+                    }),
+                    WireOutcome::Err {
+                        message: "no run completed".to_string(),
+                        detail: "no run completed: fuel exhausted".to_string(),
+                    },
+                ],
+            },
+            Frame::Heartbeat { seq: 7 },
+            Frame::Drain,
+            Frame::Bye,
+        ]
+    }
+
+    #[test]
+    fn every_frame_round_trips_byte_identically() {
+        for frame in sample_frames() {
+            let mut bytes = Vec::new();
+            write_frame(&mut bytes, &frame).unwrap();
+            let mut reader = BufReader::new(bytes.as_slice());
+            let back = read_frame(&mut reader).unwrap();
+            assert_eq!(back.name(), frame.name());
+            let mut again = Vec::new();
+            write_frame(&mut again, &back).unwrap();
+            assert_eq!(again, bytes, "codec must be byte-stable for {}", frame.name());
+        }
+    }
+
+    #[test]
+    fn a_stream_of_frames_reads_in_order() {
+        let frames = sample_frames();
+        let mut bytes = Vec::new();
+        for f in &frames {
+            write_frame(&mut bytes, f).unwrap();
+        }
+        let mut reader = BufReader::new(bytes.as_slice());
+        for f in &frames {
+            assert_eq!(read_frame(&mut reader).unwrap().name(), f.name());
+        }
+        let err = read_frame(&mut reader).unwrap_err();
+        assert!(format!("{err}").contains("closed"), "{err}");
+    }
+
+    #[test]
+    fn garbage_is_rejected_not_misread() {
+        for garbage in [
+            "not a length\n",
+            "-5\n",
+            "18\nshort\n",
+            "3\nabc!", // missing terminator
+            "2\n{}\n", // valid JSON, not a frame
+        ] {
+            let mut reader = BufReader::new(garbage.as_bytes());
+            assert!(read_frame(&mut reader).is_err(), "garbage accepted: {garbage:?}");
+        }
+        let huge = format!("{}\n", MAX_FRAME_BYTES + 1);
+        let mut reader = BufReader::new(huge.as_bytes());
+        let err = read_frame(&mut reader).unwrap_err();
+        assert!(format!("{err}").contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn failed_outcomes_keep_the_local_error_text() {
+        let err: Result<MeasuredPattern> =
+            Err(anyhow!("inner cause").context("measuring only:call:fft2d"));
+        let wire = WireOutcome::of(&err);
+        let back = wire.into_result().unwrap_err();
+        // Labels resolved from this error must match the local executor's,
+        // which formats with `{e}` (top-level message only).
+        assert_eq!(format!("{back}"), "measuring only:call:fft2d");
+    }
+
+    #[test]
+    fn unknown_result_type_names_are_rejected() {
+        assert!(intern_type_name("float").is_ok());
+        assert!(intern_type_name("quaternion").is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! The fleet worker: a measurement box behind the wire protocol.
+//!
+//! A worker hosts one PJRT engine (plus `max_inflight - 1` measure-only
+//! sibling engines via [`MeasurePool`] when capabilities allow more than
+//! one in-flight pattern) and speaks `fbo-fleet-v1` over whatever
+//! transport the CLI selected: a TCP listener (`fbo worker --listen
+//! ADDR`) or its own stdio pipe (`fbo worker --stdio`, for
+//! spawned-child fleets). The protocol logic is transport-agnostic —
+//! [`WorkerHost::serve_connection`] takes any `BufRead`/`Write` pair, so
+//! tests drive it over in-process sockets.
+//!
+//! A batch is executed with the same machinery a local verify run uses:
+//! the shipped source is re-parsed, a [`VerifyContext`] is rebuilt, and
+//! every spec runs through the exact `measure_spec` path a
+//! [`crate::coordinator::SerialExecutor`] would take — which is what
+//! keeps fleet decisions byte-identical to local ones.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::verify::VerifyContext;
+use crate::coordinator::{PatternExecutor, SerialExecutor};
+use crate::parser;
+use crate::runtime::Engine;
+use crate::service::MeasurePool;
+
+use super::wire::{read_frame, write_frame, Capabilities, Frame, WireBatch, WireOutcome, PROTOCOL};
+
+/// One worker process: an engine (plus optional measure-only siblings)
+/// and the capabilities it announces. Reusable across connections — the
+/// engine and its artifact compile cache persist between schedulers.
+pub struct WorkerHost {
+    caps: Capabilities,
+    executor: Box<dyn PatternExecutor>,
+    /// Keeps the sibling engines alive; the executor only holds senders.
+    _pool: Option<MeasurePool>,
+}
+
+impl WorkerHost {
+    /// Open the engine(s) over an artifact directory. With
+    /// `caps.max_inflight > 1` a [`MeasurePool`] of sibling engines is
+    /// started so one batch's patterns measure concurrently.
+    pub fn open(artifacts: &Path, caps: Capabilities) -> Result<WorkerHost> {
+        let engine = Engine::open(artifacts)?;
+        let (executor, pool): (Box<dyn PatternExecutor>, Option<MeasurePool>) =
+            if caps.max_inflight > 1 {
+                let pool = MeasurePool::start(artifacts, caps.max_inflight - 1)?;
+                (Box::new(pool.executor(engine, caps.max_inflight)), Some(pool))
+            } else {
+                (Box::new(SerialExecutor::new(engine)), None)
+            };
+        Ok(WorkerHost { caps, executor, _pool: pool })
+    }
+
+    /// The capabilities this worker announces in its hello frame.
+    pub fn caps(&self) -> &Capabilities {
+        &self.caps
+    }
+
+    /// Measure one wire batch, producing index-aligned outcomes. A batch
+    /// whose source does not parse fails every spec with that error —
+    /// alignment with the scheduler's plan is preserved no matter what.
+    pub fn measure_batch(&self, batch: &WireBatch) -> Vec<WireOutcome> {
+        let prog = match parser::parse(&batch.source) {
+            Ok(p) => p,
+            Err(e) => {
+                let err = e.context("parsing the shipped program source");
+                let outcome = WireOutcome::Err {
+                    message: format!("{err}"),
+                    detail: format!("{err:#}"),
+                };
+                return batch.specs.iter().map(|_| outcome.clone()).collect();
+            }
+        };
+        let ctx = VerifyContext {
+            prog: &prog,
+            entry: &batch.entry,
+            blocks: &batch.blocks,
+            cfg: &batch.cfg,
+        };
+        self.executor.measure(&ctx, &batch.specs).iter().map(WireOutcome::of).collect()
+    }
+
+    /// Serve one scheduler connection: send the hello frame, then answer
+    /// measure batches and heartbeats until the scheduler drains or says
+    /// bye. Returns `Ok` on a clean close, `Err` when the connection
+    /// broke or desynchronized (a garbage frame); either way the host
+    /// stays usable for the next connection.
+    pub fn serve_connection(&self, r: &mut dyn BufRead, w: &mut dyn Write) -> Result<()> {
+        write_frame(w, &Frame::Hello { protocol: PROTOCOL.to_string(), caps: self.caps.clone() })?;
+        loop {
+            match read_frame(r)? {
+                Frame::MeasureBatch { id, batch } => {
+                    let results = self.measure_batch(&batch);
+                    write_frame(w, &Frame::MeasureResult { id, results })?;
+                }
+                Frame::Heartbeat { seq } => write_frame(w, &Frame::Heartbeat { seq })?,
+                Frame::Drain => {
+                    write_frame(w, &Frame::Bye)?;
+                    return Ok(());
+                }
+                Frame::Bye => return Ok(()),
+                other => bail!("unexpected {} frame from the scheduler", other.name()),
+            }
+        }
+    }
+
+    /// Serve the worker's own stdio pipe (the `fbo worker --stdio`
+    /// transport): frames on stdin/stdout, logs on stderr. Returns when
+    /// the scheduler drains, says bye, or closes the pipe.
+    pub fn serve_stdio(&self) -> Result<()> {
+        let stdin = std::io::stdin();
+        let stdout = std::io::stdout();
+        let mut reader = BufReader::new(stdin.lock());
+        let mut writer = stdout.lock();
+        self.serve_connection(&mut reader, &mut writer)
+    }
+
+    /// Serve a TCP listener (`fbo worker --listen ADDR`): schedulers are
+    /// served one connection at a time — the engine is deliberately
+    /// single-threaded state, and the fleet model is one front-end
+    /// driving many workers, not many front-ends sharing one worker. A
+    /// connection that errors is logged to stderr and the loop accepts
+    /// the next one.
+    pub fn serve_listener(&self, listener: &TcpListener) -> Result<()> {
+        loop {
+            let (stream, peer) = listener.accept().context("accepting a fleet connection")?;
+            stream.set_nodelay(true).ok();
+            let mut reader =
+                BufReader::new(stream.try_clone().context("cloning the connection stream")?);
+            let mut writer = stream;
+            if let Err(e) = self.serve_connection(&mut reader, &mut writer) {
+                eprintln!("fleet worker: connection from {peer} ended: {e:#}");
+            }
+        }
+    }
+}

@@ -33,6 +33,14 @@
 //!   `trace_event` exporter, and a Prometheus-rendered metrics registry
 //!   the service exposes via `fbo serve --metrics-addr` / `fbo stats`.
 //!
+//! * **Measurement fleet** — the [`fleet`] module distributes Step-3
+//!   verification across remote worker processes (`fbo worker`): a
+//!   versioned canonical-JSON wire protocol over TCP or spawned-child
+//!   stdio, a capability-aware scheduler that deals a verify plan's
+//!   independent measurements by estimated cost, and a failure matrix
+//!   (death, timeout, no capable worker) that always falls back to the
+//!   local executor — decisions stay byte-identical to serial verify.
+//!
 //! * **Staged pipeline API** — [`coordinator::pipeline`] is the public
 //!   shape of the flow: [`coordinator::Coordinator::request`] builds an
 //!   [`coordinator::OffloadRequest`] that advances through typed stage
@@ -50,6 +58,7 @@
 
 pub mod analysis;
 pub mod coordinator;
+pub mod fleet;
 pub mod fpga;
 pub mod ga;
 pub mod interp;

@@ -10,6 +10,7 @@
 //! fbo serve     [--jobs N]                       long-running service on stdin
 //! fbo stats     [files...] [--format text|prom|json]  service counters
 //! fbo cache     <gc|stats> [--max-bytes N]       decision-cache maintenance
+//! fbo worker    --listen ADDR | --stdio          fleet measurement worker
 //! fbo gen-apps  [--n 256] [--dir apps]           materialize evaluation apps
 //! fbo gen-db    [--out patterndb.json]           dump the built-in pattern DB
 //! fbo artifacts [--dir artifacts]                list loaded PJRT artifacts
@@ -25,13 +26,17 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use fbo::coordinator::{apps, flow, loop_offload, BackendPolicy, Coordinator, PowerPolicy, Stage};
+use fbo::coordinator::{
+    apps, flow, loop_offload, BackendPolicy, Coordinator, PatternExecutor, PowerPolicy,
+    SerialExecutor, Stage,
+};
+use fbo::fleet::{Backoff, Capabilities, FleetEndpoint, FleetExecutor, FleetRegistry, WorkerHost};
 use fbo::ga::GaConfig;
 use fbo::metrics;
 use fbo::patterndb::PatternDb;
 use fbo::service::{
-    parse_byte_size, AdmissionConfig, CacheBudget, CacheTier, DecisionCache, MeasurePool,
-    OffloadService, ServiceConfig,
+    parse_byte_size, AdmissionConfig, CacheBudget, CacheTier, DecisionCache, JobRejected,
+    MeasurePool, OffloadService, ServiceConfig, ShedReason,
 };
 use fbo::telemetry::{MetricsServer, TraceObserver, TraceRecorder, DEFAULT_RING_CAPACITY};
 use fbo::transform::InterfacePolicy;
@@ -44,7 +49,7 @@ struct Args {
 
 /// Flags that never take a value — without this list the generic rule
 /// below would swallow the following argument as the flag's "value".
-const BOOLEAN_FLAGS: &[&str] = &["no-cache-persist", "dry-run"];
+const BOOLEAN_FLAGS: &[&str] = &["no-cache-persist", "dry-run", "stdio"];
 
 impl Args {
     fn parse(argv: &[String]) -> Result<Self> {
@@ -152,7 +157,37 @@ fn coordinator_from(args: &Args, verify_pool: bool) -> Result<(Coordinator, Opti
     } else {
         None
     };
+    // --fleet: wrap whatever local executor the flags built (pooled or
+    // serial) as the fallback of a fleet executor. Like the pool, the
+    // fleet only changes where measurements run, never what they decide.
+    if verify_pool {
+        if let Some(endpoints) = fleet_endpoints(args)? {
+            let fallback: std::rc::Rc<dyn PatternExecutor> = match c.executor.take() {
+                Some(executor) => executor,
+                None => std::rc::Rc::new(SerialExecutor::new(c.engine.clone())),
+            };
+            let registry = FleetRegistry::connect(&endpoints);
+            for reason in registry.rejected() {
+                eprintln!("fleet: rejected {reason}");
+            }
+            eprintln!("fleet: {} of {} worker(s) live", registry.live_count(), endpoints.len());
+            c.executor = Some(std::rc::Rc::new(FleetExecutor::new(registry, fallback)));
+        }
+    }
     Ok((c, pool))
+}
+
+/// `--fleet worker1:7070,stdio:fbo worker --stdio,...`: the endpoint
+/// list shared by offload/stages (coordinator executor) and batch/serve
+/// (service config). Parsed eagerly so a typo fails before any work.
+fn fleet_endpoints(args: &Args) -> Result<Option<Vec<FleetEndpoint>>> {
+    match args.flags.get("fleet") {
+        Some(v) if v == "true" => {
+            bail!("--fleet expects a comma-separated endpoint list (host:port or stdio:<command>)")
+        }
+        Some(v) => Ok(Some(FleetEndpoint::parse_list(v)?)),
+        None => Ok(None),
+    }
 }
 
 fn cmd_analyze(args: &Args) -> Result<()> {
@@ -224,7 +259,42 @@ impl fbo::coordinator::StageObserver for StageWalls {
     }
 }
 
+/// `fbo stages --resume DIR/verified.json`: re-enter the pipeline from a
+/// saved Verify-stage artifact — the expensive measurements are reused
+/// and only power scoring + arbitration re-run, under whatever
+/// `--target` / `--power-policy` this invocation carries.
+fn cmd_stages_resume(args: &Args, artifact: &str) -> Result<()> {
+    let payload = std::fs::read_to_string(artifact)
+        .with_context(|| format!("reading stage artifact {artifact}"))?;
+    let verified = fbo::coordinator::Verified::from_json_str(&payload)
+        .with_context(|| format!("loading verified stage artifact {artifact}"))?;
+    // No verify pool: the Verify stage is exactly what resume skips.
+    let (c, _measure_pool) = coordinator_from(args, false)?;
+    let parsed = &verified.reconciled.discovered.parsed;
+    let req = c.request(&parsed.source, &parsed.entry);
+    println!(
+        "resumed from {artifact}: {} pattern(s) reused; re-running power-score + arbitrate",
+        verified.outcome.tried.len()
+    );
+    let scored = verified.power_score(&req)?;
+    let arbitrated = scored.arbitrate(&req)?;
+    let report = arbitrated.report();
+    print!("{}", c.render_report(&report));
+    if let Some(out) = args.flags.get("out") {
+        std::fs::write(out, &report.transformed_source)?;
+        println!("transformed source written to {out}");
+    }
+    Ok(())
+}
+
 fn cmd_stages(args: &Args) -> Result<()> {
+    match args.flags.get("resume") {
+        Some(v) if v == "true" => {
+            bail!("--resume expects a stage artifact path (DIR/verified.json)")
+        }
+        Some(artifact) => return cmd_stages_resume(args, artifact),
+        None => {}
+    }
     let path = args.positional.first().context("usage: fbo stages <file.c> [--dump DIR]")?;
     let src = read_source(path)?;
     let entry = args.flag("entry", "main");
@@ -504,6 +574,11 @@ fn service_from(args: &Args) -> Result<OffloadService> {
     cfg.backend_policy = BackendPolicy::parse(&args.flag("target", "auto"))?;
     cfg.power_policy = PowerPolicy::parse(&args.flag("power-policy", "perf"))?;
     cfg.verify_parallel = args.flag_usize("verify-parallel", 1)?;
+    if let Some(endpoints) = fleet_endpoints(args)? {
+        // Validated above; the config carries the raw strings so the
+        // service workers re-parse and connect themselves.
+        cfg.fleet = endpoints.iter().map(FleetEndpoint::as_arg).collect();
+    }
     cfg.telemetry.trace_out = trace_out_path(args)?;
     cfg.admission = AdmissionConfig {
         queue_limit: args.flag_usize("queue-limit", 0)?,
@@ -524,21 +599,79 @@ fn print_completed(label: &str, done: &fbo::service::CompletedJob) {
     );
 }
 
+/// A rejection the client should back off and retry: the service shed
+/// the job for load (queue full / rate limited), not because it is
+/// shutting down or the job itself failed. Returns the server's
+/// retry-after hint.
+fn retryable_rejection(e: &anyhow::Error) -> Option<std::time::Duration> {
+    let rejected = e.downcast_ref::<JobRejected>()?;
+    match rejected.reason {
+        ShedReason::QueueFull | ShedReason::RateLimited => Some(rejected.retry_after),
+        ShedReason::ShuttingDown => None,
+    }
+}
+
 fn cmd_batch(args: &Args) -> Result<()> {
     if args.positional.is_empty() {
         bail!("usage: fbo batch <file.c...> [--entry main] [--jobs N] [--cache DIR]");
     }
     let entry = args.flag("entry", "main");
+    let max_retries = args.flag_usize("retries", 4)? as u32;
     let service = service_from(args)?;
-    let jobs: Vec<(String, String)> = args
-        .positional
-        .iter()
-        .map(|p| Ok((read_source(p)?, entry.clone())))
-        .collect::<Result<_>>()?;
-    let handles = service.submit_batch(&jobs);
+    let sources: Vec<String> =
+        args.positional.iter().map(|p| read_source(p)).collect::<Result<_>>()?;
+    let n = sources.len();
+    // Admission rejections (queue full, rate limited) are retried with a
+    // jittered exponential backoff floored at the service's retry-after
+    // hint; per-job seeds keep concurrent clients from retrying in
+    // lockstep. Rounds keep the whole remaining set in flight together,
+    // so retries still overlap across the worker pool.
+    let mut outcomes: Vec<Option<std::result::Result<fbo::service::CompletedJob, anyhow::Error>>> =
+        (0..n).map(|_| None).collect();
+    let mut backoffs: Vec<Backoff> = (0..n)
+        .map(|i| {
+            Backoff::new(
+                std::time::Duration::from_millis(100),
+                std::time::Duration::from_secs(5),
+                i as u64,
+            )
+        })
+        .collect();
+    let mut pending: Vec<usize> = (0..n).collect();
+    loop {
+        let jobs: Vec<(String, String)> =
+            pending.iter().map(|&i| (sources[i].clone(), entry.clone())).collect();
+        let handles = service.submit_batch(&jobs);
+        let mut retry = Vec::new();
+        let mut pause = std::time::Duration::ZERO;
+        for (&i, handle) in pending.iter().zip(handles) {
+            match handle.wait() {
+                Ok(done) => outcomes[i] = Some(Ok(done)),
+                Err(e) => match retryable_rejection(&e) {
+                    Some(hint) if backoffs[i].attempts() < max_retries => {
+                        let delay = backoffs[i].next_delay_after(hint);
+                        eprintln!(
+                            "{}: {e} (retry {} in {:.2}s)",
+                            args.positional[i],
+                            backoffs[i].attempts(),
+                            delay.as_secs_f64()
+                        );
+                        pause = pause.max(delay);
+                        retry.push(i);
+                    }
+                    _ => outcomes[i] = Some(Err(e)),
+                },
+            }
+        }
+        if retry.is_empty() {
+            break;
+        }
+        std::thread::sleep(pause);
+        pending = retry;
+    }
     let mut failures = 0usize;
-    for (path, handle) in args.positional.iter().zip(handles) {
-        match handle.wait() {
+    for (path, outcome) in args.positional.iter().zip(outcomes) {
+        match outcome.expect("every job resolves or fails") {
             Ok(done) => print_completed(path, &done),
             Err(e) => {
                 failures += 1;
@@ -655,6 +788,51 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bail!("{failed} request(s) failed");
     }
     Ok(())
+}
+
+/// `fbo worker`: host a measurement fleet worker. `--listen ADDR`
+/// serves the `fbo-fleet-v1` protocol over TCP; `--stdio` serves the
+/// worker's own stdin/stdout (for schedulers that spawn their fleet as
+/// child processes). `--caps`, `--device`, and `--max-inflight` shape
+/// the capabilities the worker announces in its hello frame.
+fn cmd_worker(args: &Args) -> Result<()> {
+    const USAGE: &str = "usage: fbo worker --listen HOST:PORT | --stdio [--artifacts DIR] \
+                         [--caps gpu,fpga] [--device NAME] [--max-inflight N]";
+    let (mut gpu, mut fpga) = (false, false);
+    for tag in args.flag("caps", "gpu,fpga").split(',') {
+        match tag.trim() {
+            "gpu" => gpu = true,
+            "fpga" => fpga = true,
+            "" => {}
+            other => bail!("unknown --caps tag {other:?} (gpu|fpga)"),
+        }
+    }
+    let caps = Capabilities {
+        gpu,
+        fpga,
+        device: args.flag("device", "pjrt-cpu"),
+        max_inflight: args.flag_usize("max-inflight", 1)?.max(1),
+    };
+    let dir = PathBuf::from(args.flag("artifacts", "artifacts"));
+    let host = WorkerHost::open(&dir, caps)?;
+    let stdio = args.flag("stdio", "false") == "true";
+    match args.flags.get("listen") {
+        Some(v) if v == "true" => bail!("--listen expects HOST:PORT"),
+        Some(_) if stdio => bail!("{USAGE} (pick one transport, not both)"),
+        Some(addr) => {
+            let listener = std::net::TcpListener::bind(addr)
+                .with_context(|| format!("binding fleet worker listener on {addr}"))?;
+            eprintln!(
+                "fleet worker: listening on {} (device {}, max-inflight {})",
+                listener.local_addr()?,
+                host.caps().device,
+                host.caps().max_inflight
+            );
+            host.serve_listener(&listener)
+        }
+        None if stdio => host.serve_stdio(),
+        None => bail!(USAGE),
+    }
 }
 
 /// `fbo stats`: run an optional batch of files through a service, then
@@ -819,25 +997,31 @@ fn usage() -> &'static str {
        analyze   <file.c>                 Step 1-2 analysis report\n\
        offload   <file.c> [--entry main] [--artifacts DIR] [--policy approve|reject]\n\
                  [--target gpu|fpga|auto] [--power-policy perf|perf-per-watt|cap:<watts>]\n\
-                 [--reps N] [--verify-parallel N] [--trace-out FILE]\n\
+                 [--reps N] [--verify-parallel N] [--fleet LIST] [--trace-out FILE]\n\
                  [--out transformed.c]\n\
        stages    <file.c> [--entry main] [--dump DIR] [--policy approve|reject]\n\
                  [--target gpu|fpga|auto] [--power-policy ...] [--reps N]\n\
-                 [--verify-parallel N] [--trace-out FILE]\n\
+                 [--verify-parallel N] [--fleet LIST] [--trace-out FILE]\n\
                  run the pipeline stage by stage, printing a fixed-order\n\
                  per-stage table (--dump writes the JSON artifacts,\n\
                  including power_scored.json)\n\
+       stages    --resume DIR/verified.json [--target ...] [--power-policy ...]\n\
+                 re-enter from a dumped Verify artifact: measurements are\n\
+                 reused, only power-score + arbitrate re-run\n\
        ga        <file.c> [--pop 12] [--gens 10] [--entry main]\n\
        flow      <file.c> [--rps 50] [--target gpu|fpga|auto] [--power-policy ...]\n\
                  full Steps 1-7 (Step 5 places on the arbitrated backend)\n\
        batch     <file.c...> [--entry main] [--jobs N] [--artifacts DIR]\n\
                  [--cache DIR] [--no-cache-persist] [--reps N]\n\
                  [--target gpu|fpga|auto] [--power-policy ...] [--verify-parallel N]\n\
+                 [--fleet LIST] [--retries N]\n\
                  [--trace-out FILE] [--cache-max-bytes SIZE] [--cache-max-entries N]\n\
                  offload many files through the service worker pool +\n\
-                 persistent decision cache\n\
+                 persistent decision cache; admission rejections retry\n\
+                 with jittered backoff honoring the retry-after hint\n\
        serve     [--jobs N] [--artifacts DIR] [--cache DIR]\n\
                  [--target gpu|fpga|auto] [--power-policy ...] [--verify-parallel N]\n\
+                 [--fleet LIST]\n\
                  [--trace-out FILE] [--metrics-addr HOST:PORT] [--stats-every N]\n\
                  [--queue-limit N] [--rate-limit R] [--burst B]\n\
                  [--cache-max-bytes SIZE] [--cache-max-entries N]\n\
@@ -854,6 +1038,10 @@ fn usage() -> &'static str {
                  occupancy; gc evicts down to the budget in tier-priority-\n\
                  then-LRU order (reconciled evicts first, verified last);\n\
                  --dry-run previews without deleting; SIZE accepts k/m/g\n\
+       worker    --listen HOST:PORT | --stdio [--artifacts DIR]\n\
+                 [--caps gpu,fpga] [--device NAME] [--max-inflight N]\n\
+                 host a fleet measurement worker speaking fbo-fleet-v1\n\
+                 over TCP (--listen) or its own stdio pipe (--stdio)\n\
        gen-apps  [--n 256] [--dir apps]\n\
        gen-db    [--out patterndb.json]\n\
        artifacts [--dir artifacts]\n\
@@ -867,6 +1055,13 @@ fn usage() -> &'static str {
      one Step-3 search concurrently (N-1 sibling PJRT engines for\n\
      offload/stages; the pool's idle workers for batch/serve). The\n\
      decision is identical to a serial search, only faster.\n\
+     \n\
+     --fleet LIST deals the independent Step-3 measurements across remote\n\
+     worker processes (comma-separated: host:port for a running\n\
+     `fbo worker --listen`, or stdio:<command> to spawn one). Patterns a\n\
+     worker cannot take (capabilities, death, timeout) fall back to the\n\
+     local executor; like --verify-parallel, the decision is identical to\n\
+     a serial search, only faster.\n\
      \n\
      --power-policy picks how Step-3b weighs power (arXiv:2110.11520):\n\
      perf (default) decides on time alone and is byte-identical to a\n\
@@ -906,6 +1101,7 @@ fn main() -> ExitCode {
         "serve" => cmd_serve(&args),
         "stats" => cmd_stats(&args),
         "cache" => cmd_cache(&args),
+        "worker" => cmd_worker(&args),
         "gen-apps" => cmd_gen_apps(&args),
         "gen-db" => cmd_gen_db(&args),
         "artifacts" => cmd_artifacts(&args),

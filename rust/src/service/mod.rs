@@ -49,7 +49,11 @@
 //!   dedicated measure-only siblings for CLI runs without a service. The
 //!   executor never changes the search *outcome* — serial and pooled
 //!   decisions are byte-identical, and neither invalidates the other's
-//!   cache entries.
+//!   cache entries. With `--fleet`, the pooled executor is wrapped by a
+//!   [`crate::fleet::FleetExecutor`] that ships whole measurement
+//!   batches to remote workers (other machines, other processes) and
+//!   falls back to the local pool on any fleet failure — the same
+//!   outcome-passivity contract, extended across machines.
 //!
 //! The pool is fully instrumented by [`crate::telemetry`]: every job id
 //! doubles as a trace id (stage spans, pattern measurements, verdicts,

@@ -72,9 +72,10 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::{
-    report_json, BackendPolicy, Coordinator, OffloadError, OffloadReport, PowerModel, PowerPolicy,
-    PowerScored, Reconciled, Stage, StageObserver, Verified, VerifyConfig,
+    report_json, BackendPolicy, Coordinator, OffloadError, OffloadReport, PatternExecutor,
+    PowerModel, PowerPolicy, PowerScored, Reconciled, Stage, StageObserver, Verified, VerifyConfig,
 };
+use crate::fleet::{FleetEndpoint, FleetExecutor, FleetRegistry, FleetTelemetry};
 use crate::fpga;
 use crate::metrics;
 use crate::patterndb::json::{fnv1a64, Json};
@@ -227,6 +228,14 @@ pub struct ServiceConfig {
     /// its outcome, so serial and pooled decisions replay each other
     /// byte-identically.
     pub verify_parallel: usize,
+    /// Fleet worker endpoints (CLI `--fleet`), each a `host:port` TCP
+    /// address or a `stdio:<command>` child spec (see
+    /// [`crate::fleet::FleetEndpoint`]). Empty (the default) keeps every
+    /// measurement on the local pool. Deliberately **not** part of any
+    /// cache fingerprint: the fleet changes *where* measurements run,
+    /// never their outcome, so fleet-backed and local services replay
+    /// each other's cached decisions byte-identically.
+    pub fleet: Vec<String>,
     /// Trace/metrics settings (CLI `--trace-out`). Deliberately **not**
     /// part of any cache fingerprint: telemetry observes runs, it never
     /// decides them, so traced and untraced services replay each other's
@@ -260,6 +269,7 @@ impl ServiceConfig {
             power_policy: PowerPolicy::default(),
             power_model: PowerModel::builtin(),
             verify_parallel: 1,
+            fleet: Vec::new(),
             telemetry: TelemetryConfig::default(),
             admission: AdmissionConfig::default(),
             cache_budget: CacheBudget::unlimited(),
@@ -565,6 +575,11 @@ impl StageObserver for JobObserver {
 /// `fbo_worker_utilization_ratio{worker=...}` gauges.
 struct WorkerTelemetry {
     jobs: AtomicU64,
+    /// Measurement sub-jobs fanned to this worker by a sibling's pooled
+    /// executor — counted separately so the decision-job `jobs` column
+    /// stays comparable across pool sizes while the fan-out work this
+    /// worker absorbed is still visible per worker.
+    measure_jobs: AtomicU64,
     busy_ns: AtomicU64,
     util: Arc<Gauge>,
 }
@@ -785,13 +800,15 @@ impl Shared {
         }
     }
 
-    /// Charge `busy` wall-clock (and, for decision jobs, one job) to a
-    /// worker's utilization counters.
+    /// Charge `busy` wall-clock (and one decision job or one measurement
+    /// sub-job) to a worker's utilization counters.
     fn note_worker_busy(&self, index: usize, busy: Duration, decision: bool) {
         if let Some(w) = self.workers_tm.get(index) {
             w.busy_ns.fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
             if decision {
                 w.jobs.fetch_add(1, Ordering::Relaxed);
+            } else {
+                w.measure_jobs.fetch_add(1, Ordering::Relaxed);
             }
         }
     }
@@ -899,6 +916,7 @@ impl Shared {
                 WorkerStat {
                     worker: i,
                     jobs: w.jobs.load(Ordering::Relaxed),
+                    measure_jobs: w.measure_jobs.load(Ordering::Relaxed),
                     busy,
                     utilization: busy.as_secs_f64() / uptime.as_secs_f64().max(1e-9),
                 }
@@ -1086,6 +1104,9 @@ pub struct WorkerStat {
     pub worker: usize,
     /// Decision jobs this worker ran.
     pub jobs: u64,
+    /// Measurement sub-jobs fanned to this worker by a sibling's
+    /// `verify_parallel` search (zero when `verify_parallel` is 1).
+    pub measure_jobs: u64,
     /// Wall-clock spent on jobs (decision + measurement sub-jobs).
     pub busy: Duration,
     /// `busy` over service uptime.
@@ -1174,9 +1195,10 @@ impl StatsSnapshot {
         }
         for w in &self.workers {
             out.push_str(&format!(
-                "\n  worker {} {} jobs, busy {}, utilization {:.1}%",
+                "\n  worker {} {} jobs + {} measure sub-jobs, busy {}, utilization {:.1}%",
                 w.worker,
                 w.jobs,
+                w.measure_jobs,
                 metrics::fmt_duration(w.busy),
                 w.utilization * 100.0,
             ));
@@ -1237,6 +1259,7 @@ impl StatsSnapshot {
                             Json::obj(vec![
                                 ("worker", count(w.worker as u64)),
                                 ("jobs", count(w.jobs)),
+                                ("measure_jobs", count(w.measure_jobs)),
                                 ("busy_secs", dur(w.busy)),
                                 ("utilization", Json::num(w.utilization)),
                             ])
@@ -1302,6 +1325,7 @@ impl OffloadService {
         let workers_tm = (0..cfg.workers)
             .map(|i| WorkerTelemetry {
                 jobs: AtomicU64::new(0),
+                measure_jobs: AtomicU64::new(0),
                 busy_ns: AtomicU64::new(0),
                 util: registry.gauge(
                     "fbo_worker_utilization_ratio",
@@ -1660,6 +1684,35 @@ fn worker_main(
                     trace: current_trace.clone(),
                 }),
             )));
+            // With `--fleet`, wrap the pooled executor in a fleet
+            // scheduler: capable patterns ship to remote measurement
+            // workers, everything else — and every fleet failure — falls
+            // back to the executor above, so decisions stay
+            // byte-identical with or without a fleet. Each service
+            // worker holds its own connections (TCP sessions or spawned
+            // children), mirroring the one-engine-per-thread model.
+            if !cfg.fleet.is_empty() {
+                let mut endpoints = Vec::new();
+                for spec in &cfg.fleet {
+                    match FleetEndpoint::parse(spec) {
+                        Ok(e) => endpoints.push(e),
+                        Err(e) => eprintln!("fleet: ignoring endpoint {spec:?}: {e:#}"),
+                    }
+                }
+                let fleet = FleetRegistry::connect(&endpoints);
+                for r in fleet.rejected() {
+                    eprintln!("fleet: {r}");
+                }
+                let fallback: Rc<dyn PatternExecutor> =
+                    c.executor.take().expect("pooled executor installed above");
+                let telemetry = FleetTelemetry::new(
+                    shared.registry.clone(),
+                    shared.recorder.clone(),
+                    current_trace.clone(),
+                );
+                c.executor =
+                    Some(Rc::new(FleetExecutor::new(fleet, fallback).with_telemetry(telemetry)));
+            }
             c.db = cfg.db;
             let _ = ready.send(Ok(()));
             c
@@ -1977,6 +2030,76 @@ mod tests {
         assert_eq!(fp.verify, base.verify);
         assert_eq!(fp.power, base.power);
         assert_eq!(fp.decision, base.decision);
+    }
+
+    #[test]
+    fn fleet_config_never_touches_the_fingerprints() {
+        // The fleet changes *where* measurements run, never their
+        // outcome: a decision verified locally must replay
+        // byte-identically for a fleet-backed request (and vice versa),
+        // so no fingerprint may fold the endpoint list in.
+        let cfg = ServiceConfig::new("some/artifacts");
+        let base = stage_fingerprints(&cfg);
+        let mut fleeted = cfg.clone();
+        fleeted.fleet = vec!["worker1:7070".into(), "stdio:fbo worker --stdio".into()];
+        let fp = stage_fingerprints(&fleeted);
+        assert_eq!(fp.discovery, base.discovery);
+        assert_eq!(fp.verify, base.verify);
+        assert_eq!(fp.power, base.power);
+        assert_eq!(fp.decision, base.decision);
+    }
+
+    #[test]
+    fn worker_table_renders_measure_sub_jobs() {
+        // The worker table must account for fan-out consistently: a
+        // worker that only absorbed measurement sub-jobs still shows its
+        // work (and its busy time), without inflating the decision-job
+        // column that `submitted == completed + failed + shed` audits
+        // against.
+        let mut s = StatsSnapshot {
+            submitted: 0,
+            completed: 0,
+            failed: 0,
+            jobs_shed: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            reconciled_replays: 0,
+            verified_replays: 0,
+            power_replays: 0,
+            cache_entries: 0,
+            cache_bytes: 0,
+            cache_evictions: 0,
+            cache_corrupt: 0,
+            patterns_parallel: 0,
+            patterns_serial: 0,
+            dropped_results: 0,
+            queue_depth: 0,
+            latency_p50: None,
+            latency_p95: None,
+            stages: Vec::new(),
+            workers: Vec::new(),
+        };
+        s.workers = vec![
+            WorkerStat {
+                worker: 0,
+                jobs: 2,
+                measure_jobs: 0,
+                busy: Duration::from_secs(3),
+                utilization: 0.5,
+            },
+            WorkerStat {
+                worker: 1,
+                jobs: 0,
+                measure_jobs: 5,
+                busy: Duration::from_secs(1),
+                utilization: 0.25,
+            },
+        ];
+        let full = s.render_full();
+        assert!(full.contains("worker 0 2 jobs + 0 measure sub-jobs"), "{full}");
+        assert!(full.contains("worker 1 0 jobs + 5 measure sub-jobs"), "{full}");
+        let json = s.to_json().to_string_compact();
+        assert!(json.contains("\"measure_jobs\":5"), "{json}");
     }
 
     #[test]

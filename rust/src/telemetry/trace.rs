@@ -126,6 +126,19 @@ pub enum TraceEvent {
         /// Measurements run on the local engine.
         local: u64,
     },
+    /// The fleet scheduler finished one remote measure batch (span of
+    /// `wall_ns` ending at the record's `ts_ns`).
+    FleetBatch {
+        /// Worker name (`tcp:host:port#i` / `stdio:prog#i`).
+        worker: String,
+        /// Patterns whose outcomes the batch delivered (0 on error or
+        /// timeout).
+        patterns: u64,
+        /// Dispatch-to-outcome wall-clock in nanoseconds.
+        wall_ns: u64,
+        /// `ok`, `error` (worker died mid-batch), or `timeout`.
+        outcome: String,
+    },
     /// A pipeline run finished.
     RequestCompleted {
         /// Whether the result came from the decision cache.
@@ -148,6 +161,7 @@ impl TraceEvent {
             TraceEvent::CacheCorrupt { .. } => "cache-corrupt",
             TraceEvent::Resumed { .. } => "resumed",
             TraceEvent::MeasureDispatch { .. } => "dispatch",
+            TraceEvent::FleetBatch { .. } => "fleet",
             TraceEvent::RequestCompleted { .. } => "request-completed",
         }
     }
@@ -257,6 +271,12 @@ impl TraceRecord {
                 pairs.push(("fanned", Json::num(*fanned as f64)));
                 pairs.push(("local", Json::num(*local as f64)));
             }
+            TraceEvent::FleetBatch { worker, patterns, wall_ns, outcome } => {
+                pairs.push(("worker", Json::str(worker)));
+                pairs.push(("patterns", Json::num(*patterns as f64)));
+                pairs.push(("wall_ns", Json::num(*wall_ns as f64)));
+                pairs.push(("outcome", Json::str(outcome)));
+            }
             TraceEvent::RequestCompleted { from_cache, ok } => {
                 pairs.push(("from_cache", Json::Bool(*from_cache)));
                 pairs.push(("ok", Json::Bool(*ok)));
@@ -310,6 +330,12 @@ impl TraceRecord {
             "dispatch" => TraceEvent::MeasureDispatch {
                 fanned: get_u64(v, "fanned")?,
                 local: get_u64(v, "local")?,
+            },
+            "fleet" => TraceEvent::FleetBatch {
+                worker: get_str(v, "worker")?,
+                patterns: get_u64(v, "patterns")?,
+                wall_ns: get_u64(v, "wall_ns")?,
+                outcome: get_str(v, "outcome")?,
             },
             "request-completed" => TraceEvent::RequestCompleted {
                 from_cache: get_bool(v, "from_cache")?,
@@ -585,6 +611,12 @@ mod tests {
             },
             TraceEvent::Resumed { from: Stage::Verify },
             TraceEvent::MeasureDispatch { fanned: 3, local: 2 },
+            TraceEvent::FleetBatch {
+                worker: "tcp:worker1:7070#0".into(),
+                patterns: 4,
+                wall_ns: 96_000,
+                outcome: "ok".into(),
+            },
             TraceEvent::RequestCompleted { from_cache: false, ok: true },
         ]
     }

@@ -1,0 +1,326 @@
+//! Integration tests for the measurement fleet: the golden wire fixture,
+//! the failure matrix (worker death mid-batch, version mismatch, garbage
+//! frames, capability gaps, drain-then-stop), and the equivalence
+//! contract — fleet-verified decisions match serial ones and replay each
+//! other's cache entries byte-identically.
+
+use std::io::{BufReader, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::thread::JoinHandle;
+
+use fbo::coordinator::{apps, Coordinator, OffloadReport, SerialExecutor};
+use fbo::fleet::wire::{read_frame, write_frame};
+use fbo::fleet::{Capabilities, FleetEndpoint, FleetExecutor, FleetRegistry, Frame, WorkerHost};
+use fbo::service::{OffloadService, ServiceConfig};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// A real fleet worker serving one TCP connection on an ephemeral port.
+/// The engine opens inside the thread (PJRT state never crosses threads);
+/// the listener binds here so a registry can connect before the worker
+/// reaches `accept`.
+fn spawn_worker(caps: Capabilities) -> (SocketAddr, JoinHandle<anyhow::Result<()>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let handle = std::thread::spawn(move || {
+        let host = WorkerHost::open(&artifacts_dir(), caps)?;
+        let (stream, _) = listener.accept()?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = stream;
+        host.serve_connection(&mut reader, &mut writer)
+    });
+    (addr, handle)
+}
+
+/// A scripted fake worker for fault injection: the closure gets the
+/// accepted connection and does whatever damage the test needs.
+fn spawn_fake_worker<F>(script: F) -> (SocketAddr, JoinHandle<()>)
+where
+    F: FnOnce(BufReader<TcpStream>, TcpStream) + Send + 'static,
+{
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let handle = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        script(reader, stream);
+    });
+    (addr, handle)
+}
+
+fn tcp(addr: SocketAddr) -> FleetEndpoint {
+    FleetEndpoint::Tcp(addr.to_string())
+}
+
+/// Run one offload through a fleet executor over `registry`, returning
+/// the report and the executor (for its stats).
+fn offload_via_fleet(
+    c: &Coordinator,
+    registry: FleetRegistry,
+    src: &str,
+) -> (OffloadReport, Rc<FleetExecutor>) {
+    let fallback = Rc::new(SerialExecutor::new(c.engine.clone()));
+    let exec = Rc::new(FleetExecutor::new(registry, fallback));
+    let report = c.request(src, "main").with_executor(exec.clone()).run();
+    (report.unwrap(), exec)
+}
+
+// -------------------------------------------------------- golden fixture
+
+/// The wire format is pinned by a fixture: every frame must decode and
+/// re-encode byte-identically. A failure here means `fbo-fleet-v1`
+/// changed shape and mixed-version fleets would desynchronize — bump the
+/// protocol constant instead.
+#[test]
+fn golden_wire_fixture_is_stable() {
+    let fixture: &[u8] = include_bytes!("fixtures/fleet_golden.txt");
+    let mut reader = BufReader::new(fixture);
+    let mut rewritten: Vec<u8> = Vec::new();
+    let mut names = Vec::new();
+    while rewritten.len() < fixture.len() {
+        let frame = read_frame(&mut reader).expect("fixture frame must decode");
+        names.push(frame.name());
+        write_frame(&mut rewritten, &frame).unwrap();
+    }
+    assert_eq!(
+        names,
+        ["hello", "measure-batch", "measure-result", "heartbeat", "drain", "bye"],
+        "fixture must exercise every frame kind"
+    );
+    assert_eq!(rewritten, fixture, "round-trip must be byte-identical");
+}
+
+// ----------------------------------------------------------- equivalence
+
+#[test]
+fn two_tcp_workers_match_the_serial_decision() {
+    let (addr_a, worker_a) = spawn_worker(Capabilities::default());
+    let (addr_b, worker_b) = spawn_worker(Capabilities::default());
+
+    let mut c = Coordinator::open(&artifacts_dir()).unwrap();
+    c.verify.reps = 1;
+    let src = apps::sensor_fusion_app(64);
+    let serial = c.request(&src, "main").run().unwrap();
+
+    let registry = FleetRegistry::connect(&[tcp(addr_a), tcp(addr_b)]);
+    assert_eq!(registry.live_count(), 2, "{:?}", registry.rejected());
+    let (fleet, exec) = offload_via_fleet(&c, registry, &src);
+
+    // The fleet buys wall-clock, never a different answer: same winning
+    // pattern, same backend verdict, same pattern labels in order.
+    assert_eq!(fleet.outcome.best_enabled, serial.outcome.best_enabled);
+    assert_eq!(fleet.backend(), serial.backend());
+    let labels = |r: &OffloadReport| -> Vec<String> {
+        r.outcome.tried.iter().map(|p| p.label.clone()).collect()
+    };
+    assert_eq!(labels(&fleet), labels(&serial));
+    assert!(exec.stats().remote() > 0, "patterns must have measured remotely");
+    assert_eq!(exec.stats().redeals(), 0);
+
+    // Dropping the executor drains the registry; both workers see the
+    // drain frame and exit their connection loop cleanly.
+    drop(exec);
+    worker_a.join().unwrap().unwrap();
+    worker_b.join().unwrap().unwrap();
+}
+
+// --------------------------------------------------------- failure matrix
+
+#[test]
+fn worker_death_mid_batch_redeals_to_the_survivor() {
+    // Worker A handshakes fine, then dies the moment a batch arrives.
+    let (addr_a, fake) = spawn_fake_worker(|mut reader, mut stream| {
+        write_frame(
+            &mut stream,
+            &Frame::Hello {
+                protocol: fbo::fleet::PROTOCOL.to_string(),
+                caps: Capabilities::default(),
+            },
+        )
+        .unwrap();
+        let _ = read_frame(&mut reader); // the measure-batch
+        // Dropping both halves closes the connection mid-batch.
+    });
+    let (addr_b, survivor) = spawn_worker(Capabilities::default());
+
+    let mut c = Coordinator::open(&artifacts_dir()).unwrap();
+    c.verify.reps = 1;
+    let src = apps::matmul_app(64);
+    let serial = c.request(&src, "main").run().unwrap();
+
+    let registry = FleetRegistry::connect(&[tcp(addr_a), tcp(addr_b)]);
+    assert_eq!(registry.live_count(), 2, "{:?}", registry.rejected());
+    let (fleet, exec) = offload_via_fleet(&c, registry, &src);
+
+    assert_eq!(fleet.outcome.best_enabled, serial.outcome.best_enabled);
+    assert!(exec.stats().redeals() >= 1, "the dead worker's batch must re-deal");
+    let reg = exec.registry();
+    assert_eq!(reg.live_count(), 1, "the dead worker stays dead");
+    assert!(!reg.workers()[0].is_alive());
+    assert!(reg.workers()[1].is_alive());
+
+    drop(exec);
+    fake.join().unwrap();
+    survivor.join().unwrap().unwrap();
+}
+
+#[test]
+fn version_mismatch_is_rejected_at_connect() {
+    let (addr, fake) = spawn_fake_worker(|mut reader, mut stream| {
+        write_frame(
+            &mut stream,
+            &Frame::Hello { protocol: "fbo-fleet-v0".to_string(), caps: Capabilities::default() },
+        )
+        .unwrap();
+        // The registry answers a version mismatch with bye, then closes.
+        assert!(matches!(read_frame(&mut reader), Ok(Frame::Bye)));
+    });
+
+    let registry = FleetRegistry::connect(&[tcp(addr)]);
+    assert_eq!(registry.live_count(), 0);
+    assert_eq!(registry.rejected().len(), 1);
+    assert!(
+        registry.rejected()[0].contains("speaks protocol \"fbo-fleet-v0\""),
+        "{:?}",
+        registry.rejected()
+    );
+    fake.join().unwrap();
+}
+
+#[test]
+fn garbage_frames_kill_one_worker_not_the_registry() {
+    // Worker A handshakes fine, then answers its first batch with bytes
+    // that are not a frame.
+    let (addr_a, fake) = spawn_fake_worker(|mut reader, mut stream| {
+        write_frame(
+            &mut stream,
+            &Frame::Hello {
+                protocol: fbo::fleet::PROTOCOL.to_string(),
+                caps: Capabilities::default(),
+            },
+        )
+        .unwrap();
+        let _ = read_frame(&mut reader); // the measure-batch
+        stream.write_all(b"%%% this is not a frame %%%\n").unwrap();
+        let _ = stream.flush();
+    });
+    let (addr_b, survivor) = spawn_worker(Capabilities::default());
+
+    let mut c = Coordinator::open(&artifacts_dir()).unwrap();
+    c.verify.reps = 1;
+    let src = apps::fft_app_lib(64);
+    let serial = c.request(&src, "main").run().unwrap();
+
+    let registry = FleetRegistry::connect(&[tcp(addr_a), tcp(addr_b)]);
+    assert_eq!(registry.live_count(), 2, "{:?}", registry.rejected());
+    let (fleet, exec) = offload_via_fleet(&c, registry, &src);
+
+    // The desynchronized connection is dropped and its batch re-dealt;
+    // the decision is unaffected.
+    assert_eq!(fleet.outcome.best_enabled, serial.outcome.best_enabled);
+    assert!(exec.stats().redeals() >= 1);
+    assert_eq!(exec.registry().live_count(), 1);
+
+    drop(exec);
+    fake.join().unwrap();
+    survivor.join().unwrap().unwrap();
+}
+
+#[test]
+fn capability_gaps_fall_back_to_the_local_executor() {
+    // A worker that can measure nothing offloaded: only the all-CPU
+    // baseline (which needs no capability) may be dealt to it; every
+    // GPU/FPGA pattern must measure locally, concurrently with it.
+    let caps = Capabilities { gpu: false, fpga: false, ..Capabilities::default() };
+    let (addr, worker) = spawn_worker(caps);
+
+    let mut c = Coordinator::open(&artifacts_dir()).unwrap();
+    c.verify.reps = 1;
+    let src = apps::matmul_app(64);
+    let serial = c.request(&src, "main").run().unwrap();
+
+    let registry = FleetRegistry::connect(&[tcp(addr)]);
+    assert_eq!(registry.live_count(), 1, "{:?}", registry.rejected());
+    let (fleet, exec) = offload_via_fleet(&c, registry, &src);
+
+    assert_eq!(fleet.outcome.best_enabled, serial.outcome.best_enabled);
+    assert!(exec.stats().local() >= 1, "offloaded patterns have no capable worker");
+    assert!(exec.stats().remote() >= 1, "the baseline still measures remotely");
+    assert_eq!(exec.stats().redeals(), 0, "a capability gap is not a failure");
+
+    drop(exec);
+    worker.join().unwrap().unwrap();
+}
+
+#[test]
+fn drain_then_stop_lets_workers_exit_cleanly() {
+    let (addr, worker) = spawn_worker(Capabilities::default());
+    let mut registry = FleetRegistry::connect(&[tcp(addr)]);
+    assert_eq!(registry.live_count(), 1, "{:?}", registry.rejected());
+
+    // Drain without ever dealing a batch: the worker still sees the
+    // drain frame, replies bye, and its serve loop returns Ok.
+    registry.drain();
+    assert_eq!(registry.live_count(), 0);
+    worker.join().unwrap().unwrap();
+
+    // Idempotent — a second drain (and the Drop impl after it) is a no-op.
+    registry.drain();
+}
+
+// ----------------------------------------------- stdio fleet, end to end
+
+fn stdio_endpoint() -> String {
+    format!(
+        "stdio:{} worker --stdio --artifacts {}",
+        env!("CARGO_BIN_EXE_fbo"),
+        artifacts_dir().display()
+    )
+}
+
+/// The bench-gated invariant, as a test: a service whose measurements ran
+/// on spawned child workers replays a locally-verified decision
+/// byte-identically, and a cold-cache fleet run lands on the same
+/// decision.
+#[test]
+fn stdio_fleet_replays_serial_decisions_byte_identically() {
+    let dir = std::env::temp_dir().join(format!("fbo-fleettest-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = ServiceConfig::new(artifacts_dir());
+    cfg.cache_dir = Some(dir.clone());
+    cfg.workers = 1;
+    cfg.verify.reps = 1;
+    let src = apps::lu_app_lib(64);
+
+    // Verify locally and cache the decision.
+    let serial = {
+        let service = OffloadService::start(cfg.clone()).unwrap();
+        let done = service.submit(&src, "main").wait().unwrap();
+        assert!(!done.from_cache);
+        done
+    };
+
+    // A two-child stdio fleet over the same cache: the endpoint list is
+    // not part of any fingerprint, so the local decision replays
+    // byte-identically without spinning up a single measurement.
+    let mut fleet_cfg = cfg.clone();
+    fleet_cfg.fleet = vec![stdio_endpoint(), stdio_endpoint()];
+    let service = OffloadService::start(fleet_cfg).unwrap();
+    let replayed = service.submit(&src, "main").wait().unwrap();
+    assert!(replayed.from_cache, "fleet config must not shift any fingerprint");
+    assert_eq!(replayed.report_json, serial.report_json, "byte-identical replay");
+
+    // Cold the cache and re-verify through the children: same decision.
+    service.cache().clear().unwrap();
+    let fresh = service.submit(&src, "main").wait().unwrap();
+    assert!(!fresh.from_cache);
+    assert_eq!(fresh.report.outcome.best_enabled, serial.report.outcome.best_enabled);
+    assert_eq!(fresh.report.backend(), serial.report.backend());
+
+    service.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

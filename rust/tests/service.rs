@@ -490,6 +490,41 @@ fn graceful_shutdown_drains_queued_work_and_sheds_new_submits() {
 }
 
 #[test]
+fn worker_table_accounts_for_measure_fan_out() {
+    let (mut cfg, dir) = test_config("workertable");
+    cfg.workers = 2;
+    cfg.verify_parallel = 2;
+    let service = OffloadService::start(cfg).unwrap();
+
+    // One decision job at a time: the verifying worker fans measurement
+    // sub-jobs to its idle sibling, which absorbs them at the top of its
+    // queue loop — the deterministic fan-out path.
+    let done = service.submit(&apps::sensor_fusion_app(64), "main").wait().unwrap();
+    assert!(!done.from_cache);
+
+    let stats = service.stats();
+    // The ledger invariant: every submit resolves as exactly one of
+    // completed / failed / shed.
+    assert_eq!(stats.submitted, stats.completed + stats.failed + stats.jobs_shed);
+    // The worker table's decision column sums to the jobs the pool ran;
+    // fanned measurement sub-jobs live in their own column, never
+    // inflating the decision count the ledger audits against.
+    let decisions: u64 = stats.workers.iter().map(|w| w.jobs).sum();
+    assert_eq!(decisions, stats.completed + stats.failed);
+    let absorbed: u64 = stats.workers.iter().map(|w| w.measure_jobs).sum();
+    assert!(absorbed > 0, "the idle sibling must absorb fanned sub-jobs: {}", stats.render_full());
+    assert_eq!(
+        absorbed, stats.patterns_parallel,
+        "every fanned pattern lands in exactly one sibling's measure column"
+    );
+    let full = stats.render_full();
+    assert!(full.contains("measure sub-jobs"), "{full}");
+
+    service.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn missing_artifacts_fail_at_startup() {
     let mut cfg = ServiceConfig::new("/nonexistent/fbo-artifacts");
     cfg.persist = false;

@@ -66,6 +66,7 @@ fn golden_jsonl_schema_is_stable() {
             "dispatch",
             "request-completed",
             "cache-corrupt",
+            "fleet",
         ],
         "fixture must exercise every event variant"
     );
