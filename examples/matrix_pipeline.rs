@@ -75,6 +75,7 @@ fn main() -> anyhow::Result<()> {
         target_rps: 200.0,
         max_latency_ms: 20.0,
         budget_per_month: 8000.0,
+        max_kwh_per_month: None,
     };
     let plan = flow::plan_resources(t_solve.as_secs_f64(), &req)?;
     println!(

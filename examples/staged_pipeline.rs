@@ -28,7 +28,21 @@ fn main() -> anyhow::Result<()> {
         discovered.candidates.len(),
         discovered.external_callees.len()
     );
-    let verified = discovered.reconcile(&request)?.verify(&request)?;
+    // The analytic estimate sits between reconciliation and measurement:
+    // every block is scored against the active device profiles before a
+    // single rep runs. Under the default `--prune-policy off` it is
+    // purely advisory — the measurements below are untouched by it.
+    let estimated = discovered.reconcile(&request)?.estimate(&request)?;
+    for block in &estimated.estimates.blocks {
+        println!(
+            "estimate: {} -> predicted {} at {:.2e}s (cpu {:.2e}s)",
+            block.label,
+            block.predicted_backend().as_str(),
+            block.predicted_secs(),
+            block.cpu_secs
+        );
+    }
+    let verified = estimated.verify(&request)?;
     println!(
         "verified: {} pattern(s) measured, best speedup {:.1} (wall {:?})",
         verified.outcome.tried.len(),

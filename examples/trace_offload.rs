@@ -8,7 +8,7 @@
 //! ```
 //!
 //! Load the printed `.trace.json` at <https://ui.perfetto.dev> (or
-//! `chrome://tracing`): the six pipeline stages render as spans on one
+//! `chrome://tracing`): the seven pipeline stages render as spans on one
 //! track, with every pattern measurement, power score, and arbitration
 //! verdict as instant markers inside them.
 

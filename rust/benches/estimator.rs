@@ -1,0 +1,180 @@
+//! Bench: analytic pre-arbitration estimation over the evaluation apps.
+//!
+//! For each app, the staged pipeline runs once in full; the same source
+//! is then re-offloaded under pruning policies, gating three invariants:
+//!
+//! 1. `--prune-policy off` (the default) — the byte-identity gate: the
+//!    report must serialize as v2 with no estimate section, and the
+//!    decision must be completely invariant to the loaded device profile
+//!    (an advisory estimate cannot influence an off-policy arbitration),
+//!    which is exactly the pre-estimate behavior;
+//! 2. `--prune-policy conservative:0.25` — the decision-agreement gate:
+//!    pruning may only withhold predicted-hopeless patterns from
+//!    measurement, so it must measure no more patterns than the full run
+//!    and land on the identical final decision;
+//! 3. the v4 estimate residue — per-block predicted-vs-measured error
+//!    and its MAPE (arXiv:2004.09883's sizing accuracy), recorded per
+//!    app for the trend line.
+//!
+//! Run: `cargo bench --bench estimator` (add `-- --test` for the CI
+//! smoke mode: 1 rep).
+//! Records: `BENCH_estimator.json` at the repo root.
+
+use std::path::PathBuf;
+
+use fbo::coordinator::{apps, Coordinator, ProfileRegistry, PrunePolicy};
+use fbo::metrics::Table;
+use fbo::patterndb::json::{self, Json};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--test");
+    let n = env_usize("FBO_N", 64);
+    let reps = env_usize("FBO_REPS", if smoke { 1 } else { 3 });
+
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut c = Coordinator::open(&artifacts)?;
+    c.verify.reps = reps;
+
+    println!("== analytic estimation: eval apps at n={n}, --target auto ==");
+    let mut table = Table::new(&[
+        "app",
+        "full backend",
+        "pruned backend",
+        "patterns full",
+        "patterns pruned",
+        "mape",
+    ]);
+    let mut rows = Vec::new();
+    let mut total_pruned = 0usize;
+    let mut mape_sum = 0.0f64;
+    let mut mape_count = 0usize;
+
+    for (name, src) in apps::all(n) {
+        let req = c.request(&src, "main");
+        let verified = req.parse()?.discover(&req)?.reconcile(&req)?.verify(&req)?;
+
+        // 1. Default off path: v2 bytes, no estimate residue.
+        let full = verified.arbitrate(&req)?;
+        let full_report = full.report();
+        let full_json = fbo::coordinator::report_json::report_to_string(&full_report);
+        assert!(
+            full_json.contains("fbo-offload-report-v2"),
+            "{name}: the default policy must emit v2 report bytes"
+        );
+        assert!(
+            !full_json.contains("\"estimate\""),
+            "{name}: the default policy must record no estimate section"
+        );
+
+        // Byte-identity gate: an off-policy arbitration is a *measurement*
+        // decision, so the device profile must be unable to influence any
+        // of it — same per-block backends, same overall backend, same
+        // request times — which is precisely the pre-estimate behavior.
+        let mut exotic = ProfileRegistry::builtin();
+        exotic.active_gpu = "Tesla V100".to_string();
+        let exotic_req = c.request(&src, "main").with_profiles(exotic);
+        let full_exotic = verified.arbitrate(&exotic_req)?;
+        assert_eq!(
+            full.arbitration.backend, full_exotic.arbitration.backend,
+            "{name}: off-policy decisions must be profile-independent"
+        );
+        assert_eq!(
+            full.arbitration.blocks, full_exotic.arbitration.blocks,
+            "{name}: off-policy per-block backends must be profile-independent"
+        );
+
+        // 2. Conservative pruning: full pipeline re-run so the estimate
+        // actually shapes the verify plan.
+        let mut pruning = Coordinator::open(&artifacts)?;
+        pruning.verify.reps = reps;
+        pruning.prune_policy = PrunePolicy::Conservative(0.25);
+        let pruned = pruning.offload(&src, "main")?;
+        assert!(
+            pruned.outcome.tried.len() <= full_report.outcome.tried.len(),
+            "{name}: pruning must never add measurements"
+        );
+        assert_eq!(
+            pruned.outcome.best_enabled, full_report.outcome.best_enabled,
+            "{name}: conservative pruning must keep the winning pattern"
+        );
+        assert_eq!(
+            pruned.arbitration.backend, full_report.arbitration.backend,
+            "{name}: conservative pruning must keep the arbitrated backend"
+        );
+        let saved =
+            full_report.outcome.tried.len() - pruned.outcome.tried.len();
+        total_pruned += saved;
+
+        // 3. The v4 residue: predicted-vs-measured error per block.
+        let residue = pruned
+            .arbitration
+            .estimate
+            .as_ref()
+            .expect("non-default policy must record the estimate residue");
+        let pruned_json = fbo::coordinator::report_json::report_to_string(&pruned);
+        assert!(
+            pruned_json.contains("fbo-offload-report-v4"),
+            "{name}: a non-default estimator config must emit the v4 report"
+        );
+        let mape = residue.mape;
+        if let Some(m) = mape {
+            assert!(m.is_finite() && m >= 0.0, "{name}: MAPE must be a finite ratio");
+            mape_sum += m;
+            mape_count += 1;
+        }
+
+        let fmt_mape = |v: Option<f64>| match v {
+            Some(m) => format!("{:.1}%", m * 100.0),
+            None => "-".to_string(),
+        };
+        table.row(&[
+            name.clone(),
+            full_report.arbitration.backend.as_str().to_string(),
+            pruned.arbitration.backend.as_str().to_string(),
+            full_report.outcome.tried.len().to_string(),
+            pruned.outcome.tried.len().to_string(),
+            fmt_mape(mape),
+        ]);
+        rows.push(Json::obj(vec![
+            ("app", Json::str(&name)),
+            ("full_backend", Json::str(full_report.arbitration.backend.as_str())),
+            ("pruned_backend", Json::str(pruned.arbitration.backend.as_str())),
+            ("full_patterns", Json::num(full_report.outcome.tried.len() as f64)),
+            ("pruned_patterns", Json::num(pruned.outcome.tried.len() as f64)),
+            ("patterns_saved", Json::num(saved as f64)),
+            ("decision_identical", Json::Bool(true)),
+            ("off_is_v2", Json::Bool(true)),
+            ("mape", mape.map(Json::num).unwrap_or(Json::Null)),
+            ("gpu_profile", Json::str(&residue.gpu_profile)),
+            ("fpga_profile", Json::str(&residue.fpga_profile)),
+        ]));
+    }
+    print!("{}", table.render());
+    println!("conservative pruning saved {total_pruned} measured pattern(s) across the apps");
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("estimator")),
+        ("n", Json::num(n as f64)),
+        ("reps", Json::num(reps as f64)),
+        ("apps", Json::Arr(rows)),
+        ("patterns_saved", Json::num(total_pruned as f64)),
+        (
+            "mape_mean",
+            if mape_count > 0 {
+                Json::num(mape_sum / mape_count as f64)
+            } else {
+                Json::Null
+            },
+        ),
+    ]);
+    let bench_path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_estimator.json");
+    std::fs::write(&bench_path, json::to_string_pretty(&out))?;
+    println!("recorded {}", bench_path.display());
+    Ok(())
+}

@@ -91,7 +91,7 @@ fn main() -> anyhow::Result<()> {
         .iter()
         .filter(|e| matches!(e.get("ph"), Ok(Json::Str(ph)) if ph == "X"))
         .count();
-    assert_eq!(spans, 6, "one complete span per pipeline stage");
+    assert_eq!(spans, 7, "one complete span per pipeline stage");
 
     // Passivity: the traced service replays the untraced decision
     // byte-for-byte — telemetry config is outside every fingerprint.

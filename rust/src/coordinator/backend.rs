@@ -217,6 +217,13 @@ pub struct ArbitrationOutcome {
     /// policy, keeping its report bytes identical to time-only
     /// arbitration.
     pub power: Option<power::PowerDecision>,
+    /// Analytic-estimator residue: per-block predicted-vs-measured error,
+    /// present exactly when a non-default estimator configuration shaped
+    /// the search (and then the report serializes as v4); `None` under
+    /// the default configuration, keeping its bytes unchanged. Attached
+    /// by the pipeline's arbitration step — [`arbitrate`] itself never
+    /// sets it.
+    pub estimate: Option<super::estimate::EstimateDecision>,
 }
 
 /// Default intensity-narrowing floor: a block must amortize the ≈3 h
@@ -507,6 +514,7 @@ pub fn arbitrate(
         gpu_request_secs,
         fpga_request_secs,
         power: power_decision,
+        estimate: None,
     })
 }
 

@@ -1,0 +1,902 @@
+//! Analytic pre-arbitration: score candidates before measuring them.
+//!
+//! The paper's Step 3 measures every candidate pattern on real hardware,
+//! which is why verification dominates wall-clock even fanned out across
+//! a fleet. The function-block proposal (arXiv:2004.09883) narrows
+//! candidates by *offload suitability* first; this module is that
+//! narrowing, run as the `Estimate` stage between `Discovered`
+//! (strictly, `Reconciled`) and `Verified`:
+//!
+//! * [`block_workload`] — static characterization of a DB-registered
+//!   block (flops, bytes, trip count, arithmetic intensity) from the
+//!   same CPU-implementation text the FPGA narrowing analyzes;
+//! * [`score`] — roofline estimates per block against the *active*
+//!   [`ProfileRegistry`] entries: GPU = intensity vs compute/bandwidth
+//!   ceilings + PCIe staging, FPGA = the streaming-pipeline arithmetic
+//!   the arbitration's HLS model uses (fill + trips/lanes cycles at
+//!   `fmax`);
+//! * [`PrunePolicy`] — the CLI `--prune-policy` knob deciding which
+//!   clearly-hopeless candidates skip measurement. The default `off`
+//!   leaves decisions, report bytes, and cache fingerprints exactly as
+//!   they were before this stage existed;
+//! * [`EstimateDecision`] — the v4-report residue comparing predicted
+//!   vs measured seconds per block, the evidence the estimator earns
+//!   trust with;
+//! * [`calibrate`] — fits per-profile `scale` factors from measured
+//!   reps (mined from past decisions in the cache), closing the loop.
+
+use anyhow::{bail, Result};
+
+use crate::analysis;
+use crate::parser;
+use crate::parser::ast::StmtKind;
+use crate::patterndb::json::Json;
+use crate::patterndb::{PassModel, PatternDb};
+use crate::telemetry::TraceEvent;
+use crate::transform::PlannedReplacement;
+
+use super::backend::{Backend, STREAM_LANES};
+use super::profile::{FpgaProfile, GpuProfile, ProfileRegistry};
+use super::verify::SearchOutcome;
+
+/// Nominal per-dimension problem size assumed when a block's loop bounds
+/// are symbolic (the bundled apps run n×n working sets; 64 is the
+/// evaluation size).
+pub const NOMINAL_N: u64 = 64;
+
+/// How the estimate prunes candidates before measurement
+/// (CLI `--prune-policy`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum PrunePolicy {
+    /// Estimate and report only — measure everything, exactly as before
+    /// this stage existed. The default: decisions, report bytes, and
+    /// cache fingerprints are byte-identical to a pipeline without
+    /// estimation.
+    #[default]
+    Off,
+    /// Prune a candidate only when its predicted best speedup, inflated
+    /// by the safety margin, still loses to the CPU baseline
+    /// (`speedup × (1 + margin) < 1`).
+    Conservative(f64),
+    /// Prune every candidate whose predicted best speedup is below 1.
+    Aggressive,
+}
+
+impl PrunePolicy {
+    /// Canonical rendering (CLI and cache fingerprint): `off`,
+    /// `conservative:<margin>`, or `aggressive`.
+    pub fn render(&self) -> String {
+        match self {
+            PrunePolicy::Off => "off".to_string(),
+            PrunePolicy::Conservative(m) => format!("conservative:{m}"),
+            PrunePolicy::Aggressive => "aggressive".to_string(),
+        }
+    }
+
+    /// Inverse of [`PrunePolicy::render`].
+    pub fn parse(s: &str) -> Result<Self> {
+        if let Some(m) = s.strip_prefix("conservative:") {
+            let margin: f64 = m.parse().map_err(|_| {
+                anyhow::anyhow!("--prune-policy conservative expects a number, got {m:?}")
+            })?;
+            if !margin.is_finite() || margin < 0.0 {
+                bail!("--prune-policy conservative expects a non-negative margin, got {m:?}");
+            }
+            return Ok(PrunePolicy::Conservative(margin));
+        }
+        Ok(match s {
+            "off" => PrunePolicy::Off,
+            "aggressive" => PrunePolicy::Aggressive,
+            other => {
+                bail!("unknown --prune-policy {other:?} (off|conservative:<margin>|aggressive)")
+            }
+        })
+    }
+
+    /// True for the default (`off`) policy, which must leave decisions,
+    /// report bytes, and cache fingerprints untouched.
+    pub fn is_default(&self) -> bool {
+        matches!(self, PrunePolicy::Off)
+    }
+
+    /// Does this policy prune a candidate whose predicted best speedup
+    /// is `best_speedup`?
+    pub fn prunes(&self, best_speedup: f64) -> bool {
+        match self {
+            PrunePolicy::Off => false,
+            PrunePolicy::Conservative(m) => best_speedup * (1.0 + m) < 1.0,
+            PrunePolicy::Aggressive => best_speedup < 1.0,
+        }
+    }
+}
+
+/// Static workload characterization of one DB-registered block.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Workload {
+    /// Modeled floating-point ops per run.
+    pub flops: f64,
+    /// Modeled bytes touched per run (array accesses × 4-byte elements,
+    /// the artifact element size).
+    pub bytes: f64,
+    /// Estimated iterations of the deepest loop nest per run.
+    pub iters: u64,
+    /// Depth of the deepest loop nest.
+    pub depth: u32,
+    /// Arithmetic-intensity score: innermost flops/byte ratio × trip
+    /// count — the same narrowing score the FPGA path ranks with.
+    pub intensity: f64,
+}
+
+/// Look up the CPU-implementation text of a DB block, the same way the
+/// arbitration's intensity narrowing does: comparison code first, then
+/// the library's registered CPU source.
+fn block_code<'a>(db: &'a PatternDb, artifact: &str) -> Option<&'a str> {
+    db.comparisons
+        .iter()
+        .find(|c| c.replacement.artifact == artifact)
+        .map(|c| c.code.as_str())
+        .or_else(|| {
+            db.libraries
+                .iter()
+                .find(|l| l.replacement.artifact == artifact)
+                .and_then(|l| l.cpu_impl.as_ref().map(|(code, _)| code.as_str()))
+        })
+}
+
+/// Characterize a DB-registered block statically: parse its CPU
+/// implementation, take the densest loop nest's per-iteration flop and
+/// memory counts, and scale by the nest's trip count ([`NOMINAL_N`] per
+/// level when bounds are symbolic). Unknown blocks get a zero workload
+/// (never estimated to win, never pruned).
+pub fn block_workload(db: &PatternDb, artifact: &str) -> Workload {
+    let Some(code) = block_code(db, artifact) else { return Workload::default() };
+    let Ok(prog) = parser::parse(code) else { return Workload::default() };
+    let a = analysis::analyze(&prog);
+    let depth = a.loops.iter().map(|l| l.depth + 1).max().unwrap_or(0) as u32;
+    let mut best = analysis::IntensityReport::default();
+    for f in prog.functions() {
+        let Some(body) = &f.body else { continue };
+        body.walk(&mut |s| {
+            if matches!(s.kind, StmtKind::For { .. }) {
+                let r = analysis::intensity_of_loop(s);
+                if r.score > best.score || (best.score == 0.0 && r.ratio > best.ratio) {
+                    best = r;
+                }
+            }
+        });
+    }
+    let iters = best.trips.unwrap_or_else(|| NOMINAL_N.saturating_pow(depth.max(1))).max(1);
+    Workload {
+        flops: best.flops_per_iter as f64 * iters as f64,
+        bytes: best.mem_per_iter as f64 * iters as f64 * 4.0,
+        iters,
+        depth,
+        intensity: best.ratio * iters as f64,
+    }
+}
+
+/// Roofline estimate of one block on one device profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceEstimate {
+    /// Profile the estimate was computed against.
+    pub profile: String,
+    /// Modeled on-device execution seconds per run.
+    pub exec_secs: f64,
+    /// Modeled PCIe staging seconds per run.
+    pub transfer_secs: f64,
+    /// Predicted speedup vs the modeled CPU baseline.
+    pub speedup: f64,
+}
+
+impl DeviceEstimate {
+    /// Total predicted wall seconds per run (execution + staging).
+    pub fn total_secs(&self) -> f64 {
+        self.exec_secs + self.transfer_secs
+    }
+}
+
+/// Analytic estimate of one candidate block across the active profiles.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockEstimate {
+    /// Site label of the block (matches the verify pattern labels).
+    pub label: String,
+    /// Artifact base name of the registered replacement.
+    pub artifact: String,
+    /// Static workload the estimates were derived from.
+    pub workload: Workload,
+    /// Modeled CPU-baseline seconds per run.
+    pub cpu_secs: f64,
+    /// Estimate on the active GPU profile.
+    pub gpu: Option<DeviceEstimate>,
+    /// Estimate on the active FPGA profile (`None` without a registered
+    /// IP core for the artifact).
+    pub fpga: Option<DeviceEstimate>,
+}
+
+impl BlockEstimate {
+    /// The better of the device estimates (higher predicted speedup).
+    pub fn best(&self) -> Option<&DeviceEstimate> {
+        match (&self.gpu, &self.fpga) {
+            (Some(g), Some(f)) => Some(if g.speedup >= f.speedup { g } else { f }),
+            (Some(g), None) => Some(g),
+            (None, Some(f)) => Some(f),
+            (None, None) => None,
+        }
+    }
+
+    /// Predicted best speedup vs the CPU baseline (0 with no device
+    /// estimate — such a block is never predicted to win, never pruned).
+    pub fn best_speedup(&self) -> f64 {
+        self.best().map(|d| d.speedup).unwrap_or(0.0)
+    }
+
+    /// Predicted wall seconds of the block's measured pattern: the best
+    /// device's total, or the modeled CPU seconds when nothing offloads.
+    /// This is the fleet scheduler's LPT cost hint.
+    pub fn predicted_secs(&self) -> f64 {
+        self.best().map(|d| d.total_secs()).unwrap_or(self.cpu_secs)
+    }
+
+    /// The backend the estimate predicts wins this block.
+    pub fn predicted_backend(&self) -> Backend {
+        match self.best() {
+            Some(d) if self.gpu.as_ref() == Some(d) || self.fpga.is_none() => Backend::Gpu,
+            Some(_) => Backend::Fpga,
+            None => Backend::Cpu,
+        }
+    }
+}
+
+/// The `Estimate` stage result: every accepted candidate scored against
+/// the active device profiles, plus the policy the verify plan will
+/// prune under.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EstimateOutcome {
+    /// Pruning policy in force downstream.
+    pub policy: PrunePolicy,
+    /// Active GPU profile name the scores were computed against.
+    pub gpu_profile: String,
+    /// Active FPGA profile name the scores were computed against.
+    pub fpga_profile: String,
+    /// Per-block estimates, aligned with the reconciled accepted blocks.
+    pub blocks: Vec<BlockEstimate>,
+}
+
+impl EstimateOutcome {
+    /// Which blocks the policy prunes from measurement, aligned with
+    /// `blocks`. All-false under the default `off` policy.
+    pub fn prune_mask(&self) -> Vec<bool> {
+        self.blocks.iter().map(|b| self.policy.prunes(b.best_speedup())).collect()
+    }
+
+    /// Per-block predicted wall seconds for the fleet scheduler's LPT
+    /// cost ordering, aligned with `blocks`.
+    pub fn cost_hints(&self) -> Vec<f64> {
+        self.blocks.iter().map(|b| b.predicted_secs()).collect()
+    }
+}
+
+fn cpu_secs(w: &Workload, reg: &ProfileRegistry) -> f64 {
+    (w.flops / reg.cpu.peak_flops()).max(w.bytes / (reg.cpu.mem_bw_bytes_per_sec * reg.cpu.scale))
+}
+
+fn gpu_estimate(w: &Workload, g: &GpuProfile, cpu: f64) -> DeviceEstimate {
+    // Roofline: the kernel is bounded by the compute ceiling or the
+    // memory ceiling, whichever binds. Working sets that spill the
+    // per-SM shared memory pay a second device-memory round trip (the
+    // coarse cost of not tiling).
+    let spill = if w.bytes / g.compute_units as f64 > g.shared_mem_bytes as f64 { 2.0 } else { 1.0 };
+    let exec = (w.flops / g.peak_flops())
+        .max(w.bytes * spill / (g.mem_bw_bytes_per_sec * g.scale))
+        + g.launch_latency_secs;
+    let transfer = w.bytes / g.pcie_bytes_per_sec;
+    DeviceEstimate {
+        profile: g.name.clone(),
+        exec_secs: exec,
+        transfer_secs: transfer,
+        speedup: cpu / (exec + transfer).max(1e-12),
+    }
+}
+
+fn fpga_estimate(
+    w: &Workload,
+    f: &FpgaProfile,
+    pass_model: Option<PassModel>,
+    cpu: f64,
+) -> DeviceEstimate {
+    // The streaming-model arithmetic the arbitration's HLS chain uses
+    // (fpga::modeled_exec_secs): pipeline fill + one trip per
+    // STREAM_LANES-wide beat of the working set, at the profile's fmax.
+    let n = (w.iters as f64).powf(1.0 / w.depth.max(1) as f64).round().max(1.0) as u64;
+    let passes = pass_model.unwrap_or(PassModel::Unit).passes(n);
+    let trips = (w.iters * passes + STREAM_LANES - 1) / STREAM_LANES;
+    let exec = (crate::fpga::PIPELINE_FILL_CYCLES + trips as f64) / (f.fmax * f.scale);
+    let transfer = w.bytes / f.pcie_bytes_per_sec;
+    DeviceEstimate {
+        profile: f.name.clone(),
+        exec_secs: exec,
+        transfer_secs: transfer,
+        speedup: cpu / (exec + transfer).max(1e-12),
+    }
+}
+
+/// Score every accepted candidate block against the registry's active
+/// profiles. Pure and hardware-free: inputs are the DB text, the
+/// profile figures, and the policy.
+pub fn score(
+    db: &PatternDb,
+    accepted: &[PlannedReplacement],
+    reg: &ProfileRegistry,
+    policy: PrunePolicy,
+) -> Result<EstimateOutcome> {
+    reg.validate()?;
+    let gpu = reg.gpu()?;
+    let fpga = reg.fpga()?;
+    let blocks = accepted
+        .iter()
+        .map(|plan| {
+            let artifact = plan.replacement.artifact.clone();
+            let w = block_workload(db, &artifact);
+            let cpu = cpu_secs(&w, reg);
+            let core = db.fpga_ip_cores.iter().find(|c| c.artifact == artifact);
+            BlockEstimate {
+                label: plan.site.label(),
+                gpu: (w.flops > 0.0).then(|| gpu_estimate(&w, gpu, cpu)),
+                fpga: core
+                    .filter(|_| w.flops > 0.0)
+                    .map(|c| fpga_estimate(&w, fpga, c.pass_model, cpu)),
+                artifact,
+                workload: w,
+                cpu_secs: cpu,
+            }
+        })
+        .collect();
+    Ok(EstimateOutcome {
+        policy,
+        gpu_profile: gpu.name.clone(),
+        fpga_profile: fpga.name.clone(),
+        blocks,
+    })
+}
+
+/// Structured telemetry events of one `Estimate` stage: one
+/// `estimator-scored` event per device estimate per block. Built lazily
+/// by the pipeline only when a [`crate::coordinator::StageObserver`] is
+/// installed.
+pub fn estimator_events(outcome: &EstimateOutcome) -> Vec<TraceEvent> {
+    let mut out = Vec::new();
+    for b in &outcome.blocks {
+        for (backend, d) in
+            [(Backend::Gpu, &b.gpu), (Backend::Fpga, &b.fpga)]
+        {
+            if let Some(d) = d {
+                out.push(TraceEvent::EstimatorScored {
+                    label: b.label.clone(),
+                    backend: backend.as_str().to_string(),
+                    predicted_secs: d.total_secs(),
+                    speedup: d.speedup,
+                    pruned: outcome.policy.prunes(b.best_speedup()),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------- arbitration residue
+
+/// Predicted-vs-measured record of one block (v4 report residue).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockPrediction {
+    /// Site label of the block.
+    pub label: String,
+    /// Backend the estimate predicted would win.
+    pub backend: Backend,
+    /// Predicted wall seconds of the block's measured pattern.
+    pub predicted_secs: f64,
+    /// Measured wall seconds of the matching pattern (`None` when the
+    /// pattern was pruned or failed — nothing to compare against).
+    pub measured_secs: Option<f64>,
+    /// Signed relative error `(predicted − measured) / measured`.
+    pub error: Option<f64>,
+}
+
+/// The estimate residue of one arbitration run under a non-default
+/// estimator configuration: which profiles scored, per-block
+/// predicted-vs-measured error, and the mean absolute percentage error.
+/// Serialized into the v4 report; absent (and the report stays v2/v3)
+/// under the default configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EstimateDecision {
+    /// Pruning policy that was in force.
+    pub policy: PrunePolicy,
+    /// Active GPU profile name.
+    pub gpu_profile: String,
+    /// Active FPGA profile name.
+    pub fpga_profile: String,
+    /// Per-block predicted-vs-measured records.
+    pub blocks: Vec<BlockPrediction>,
+    /// Mean absolute percentage error across blocks with a measurement.
+    pub mape: Option<f64>,
+}
+
+/// Join the estimate against the measured search outcome: each block's
+/// prediction meets its `only:{label}` measured pattern (pruned and
+/// failed patterns have no measurement to compare against).
+pub fn decision(est: &EstimateOutcome, search: &SearchOutcome) -> EstimateDecision {
+    let blocks: Vec<BlockPrediction> = est
+        .blocks
+        .iter()
+        .map(|b| {
+            let want = format!("only:{}", b.label);
+            let measured = search
+                .tried
+                .iter()
+                .find(|p| p.label == want && p.output_ok)
+                .map(|p| p.time.secs());
+            let predicted = b.predicted_secs();
+            BlockPrediction {
+                label: b.label.clone(),
+                backend: b.predicted_backend(),
+                predicted_secs: predicted,
+                measured_secs: measured,
+                error: measured.map(|m| (predicted - m) / m.max(1e-12)),
+            }
+        })
+        .collect();
+    let errs: Vec<f64> = blocks.iter().filter_map(|b| b.error).map(f64::abs).collect();
+    EstimateDecision {
+        policy: est.policy,
+        gpu_profile: est.gpu_profile.clone(),
+        fpga_profile: est.fpga_profile.clone(),
+        mape: (!errs.is_empty()).then(|| errs.iter().sum::<f64>() / errs.len() as f64),
+        blocks,
+    }
+}
+
+// ------------------------------------------------------------ calibration
+
+/// One predicted-vs-measured pair mined from a past decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CalibrationSample {
+    /// Backend the prediction targeted.
+    pub backend: Backend,
+    /// Predicted wall seconds at the time of the decision.
+    pub predicted_secs: f64,
+    /// Measured wall seconds the cache recorded.
+    pub measured_secs: f64,
+}
+
+/// What a calibration pass did to the registry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationReport {
+    /// Samples that informed the GPU scale.
+    pub gpu_samples: usize,
+    /// Samples that informed the FPGA scale.
+    pub fpga_samples: usize,
+    /// New scale on the active GPU profile.
+    pub gpu_scale: f64,
+    /// New scale on the active FPGA profile.
+    pub fpga_scale: f64,
+}
+
+/// Extract calibration samples from a past decision's estimate residue.
+pub fn samples_from_decision(d: &EstimateDecision) -> Vec<CalibrationSample> {
+    d.blocks
+        .iter()
+        .filter_map(|b| {
+            b.measured_secs.map(|m| CalibrationSample {
+                backend: b.backend,
+                predicted_secs: b.predicted_secs,
+                measured_secs: m,
+            })
+        })
+        .filter(|s| s.predicted_secs > 0.0 && s.measured_secs > 0.0)
+        .collect()
+}
+
+/// Median of predicted/measured ratios — robust against the odd outlier
+/// rep the mean would chase.
+fn median_ratio(samples: &[&CalibrationSample]) -> Option<f64> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut ratios: Vec<f64> =
+        samples.iter().map(|s| s.predicted_secs / s.measured_secs).collect();
+    ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Some(ratios[ratios.len() / 2])
+}
+
+/// Bounds on a fitted scale: calibration refines a profile, it must not
+/// be able to invert one.
+const SCALE_BOUNDS: (f64, f64) = (0.05, 20.0);
+
+/// Fit the active profiles' scale factors from past measured reps: a
+/// profile that predicted k× too slow gets its modeled throughput scaled
+/// up by the median ratio (and vice versa), clamped to
+/// [`SCALE_BOUNDS`]. Returns what changed; profiles without samples keep
+/// their scale.
+pub fn calibrate(reg: &mut ProfileRegistry, samples: &[CalibrationSample]) -> Result<CalibrationReport> {
+    reg.validate()?;
+    let fit = |old: f64, med: Option<f64>| -> f64 {
+        med.map(|m| (old * m).clamp(SCALE_BOUNDS.0, SCALE_BOUNDS.1)).unwrap_or(old)
+    };
+    let gpu: Vec<&CalibrationSample> =
+        samples.iter().filter(|s| s.backend == Backend::Gpu).collect();
+    let fpga: Vec<&CalibrationSample> =
+        samples.iter().filter(|s| s.backend == Backend::Fpga).collect();
+    let (gm, fm) = (median_ratio(&gpu), median_ratio(&fpga));
+    let active_gpu = reg.active_gpu.clone();
+    let active_fpga = reg.active_fpga.clone();
+    let mut report = CalibrationReport {
+        gpu_samples: gpu.len(),
+        fpga_samples: fpga.len(),
+        gpu_scale: 1.0,
+        fpga_scale: 1.0,
+    };
+    for g in &mut reg.gpus {
+        if g.name == active_gpu {
+            g.scale = fit(g.scale, gm);
+            report.gpu_scale = g.scale;
+        }
+    }
+    for f in &mut reg.fpgas {
+        if f.name == active_fpga {
+            f.scale = fit(f.scale, fm);
+            report.fpga_scale = f.scale;
+        }
+    }
+    Ok(report)
+}
+
+// ----------------------------------------------------------- JSON codec
+
+fn device_estimate_to_json(d: &DeviceEstimate) -> Json {
+    Json::obj(vec![
+        ("profile", Json::str(&d.profile)),
+        ("exec_secs", Json::num(d.exec_secs)),
+        ("transfer_secs", Json::num(d.transfer_secs)),
+        ("speedup", Json::num(d.speedup)),
+    ])
+}
+
+fn device_estimate_from_json(v: &Json) -> Result<DeviceEstimate> {
+    Ok(DeviceEstimate {
+        profile: v.get("profile")?.as_str()?.to_string(),
+        exec_secs: v.get("exec_secs")?.as_f64()?,
+        transfer_secs: v.get("transfer_secs")?.as_f64()?,
+        speedup: v.get("speedup")?.as_f64()?,
+    })
+}
+
+fn workload_to_json(w: &Workload) -> Json {
+    Json::obj(vec![
+        ("flops", Json::num(w.flops)),
+        ("bytes", Json::num(w.bytes)),
+        ("iters", Json::num(w.iters as f64)),
+        ("depth", Json::num(w.depth as f64)),
+        ("intensity", Json::num(w.intensity)),
+    ])
+}
+
+fn workload_from_json(v: &Json) -> Result<Workload> {
+    Ok(Workload {
+        flops: v.get("flops")?.as_f64()?,
+        bytes: v.get("bytes")?.as_f64()?,
+        iters: v.get("iters")?.as_f64()? as u64,
+        depth: v.get("depth")?.as_f64()? as u32,
+        intensity: v.get("intensity")?.as_f64()?,
+    })
+}
+
+/// Serialize a stage outcome (the `Estimated` artifact payload).
+pub fn outcome_to_json(o: &EstimateOutcome) -> Json {
+    Json::obj(vec![
+        ("policy", Json::str(&o.policy.render())),
+        ("gpu_profile", Json::str(&o.gpu_profile)),
+        ("fpga_profile", Json::str(&o.fpga_profile)),
+        (
+            "blocks",
+            Json::Arr(
+                o.blocks
+                    .iter()
+                    .map(|b| {
+                        Json::obj(vec![
+                            ("label", Json::str(&b.label)),
+                            ("artifact", Json::str(&b.artifact)),
+                            ("workload", workload_to_json(&b.workload)),
+                            ("cpu_secs", Json::num(b.cpu_secs)),
+                            (
+                                "gpu",
+                                b.gpu.as_ref().map(device_estimate_to_json).unwrap_or(Json::Null),
+                            ),
+                            (
+                                "fpga",
+                                b.fpga.as_ref().map(device_estimate_to_json).unwrap_or(Json::Null),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Inverse of [`outcome_to_json`].
+pub fn outcome_from_json(v: &Json) -> Result<EstimateOutcome> {
+    Ok(EstimateOutcome {
+        policy: PrunePolicy::parse(v.get("policy")?.as_str()?)?,
+        gpu_profile: v.get("gpu_profile")?.as_str()?.to_string(),
+        fpga_profile: v.get("fpga_profile")?.as_str()?.to_string(),
+        blocks: v
+            .get("blocks")?
+            .as_arr()?
+            .iter()
+            .map(|b| {
+                Ok(BlockEstimate {
+                    label: b.get("label")?.as_str()?.to_string(),
+                    artifact: b.get("artifact")?.as_str()?.to_string(),
+                    workload: workload_from_json(b.get("workload")?)?,
+                    cpu_secs: b.get("cpu_secs")?.as_f64()?,
+                    gpu: b.opt("gpu").map(device_estimate_from_json).transpose()?,
+                    fpga: b.opt("fpga").map(device_estimate_from_json).transpose()?,
+                })
+            })
+            .collect::<Result<_>>()?,
+    })
+}
+
+/// Serialize the arbitration's estimate residue (v4 report section).
+pub fn decision_to_json(d: &EstimateDecision) -> Json {
+    Json::obj(vec![
+        ("policy", Json::str(&d.policy.render())),
+        ("gpu_profile", Json::str(&d.gpu_profile)),
+        ("fpga_profile", Json::str(&d.fpga_profile)),
+        ("mape", d.mape.map(Json::num).unwrap_or(Json::Null)),
+        (
+            "blocks",
+            Json::Arr(
+                d.blocks
+                    .iter()
+                    .map(|b| {
+                        Json::obj(vec![
+                            ("label", Json::str(&b.label)),
+                            ("backend", Json::str(b.backend.as_str())),
+                            ("predicted_secs", Json::num(b.predicted_secs)),
+                            (
+                                "measured_secs",
+                                b.measured_secs.map(Json::num).unwrap_or(Json::Null),
+                            ),
+                            ("error", b.error.map(Json::num).unwrap_or(Json::Null)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Inverse of [`decision_to_json`].
+pub fn decision_from_json(v: &Json) -> Result<EstimateDecision> {
+    let opt_num =
+        |b: &Json, key: &str| -> Result<Option<f64>> { b.opt(key).map(|n| n.as_f64()).transpose() };
+    Ok(EstimateDecision {
+        policy: PrunePolicy::parse(v.get("policy")?.as_str()?)?,
+        gpu_profile: v.get("gpu_profile")?.as_str()?.to_string(),
+        fpga_profile: v.get("fpga_profile")?.as_str()?.to_string(),
+        mape: opt_num(v, "mape")?,
+        blocks: v
+            .get("blocks")?
+            .as_arr()?
+            .iter()
+            .map(|b| {
+                Ok(BlockPrediction {
+                    label: b.get("label")?.as_str()?.to_string(),
+                    backend: Backend::parse(b.get("backend")?.as_str()?)?,
+                    predicted_secs: b.get("predicted_secs")?.as_f64()?,
+                    measured_secs: opt_num(b, "measured_secs")?,
+                    error: opt_num(b, "error")?,
+                })
+            })
+            .collect::<Result<_>>()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Measurement;
+    use crate::patterndb::json;
+    use crate::transform::{Reconciliation, Site};
+    use std::time::Duration;
+
+    fn accepted(db: &PatternDb) -> Vec<PlannedReplacement> {
+        vec![PlannedReplacement {
+            site: Site::LibraryCall { callee: "fft2d".into() },
+            replacement: db.libraries[0].replacement.clone(),
+            reconciliation: Reconciliation::Exact,
+        }]
+    }
+
+    #[test]
+    fn policy_renders_and_parses() {
+        for p in [PrunePolicy::Off, PrunePolicy::Conservative(0.5), PrunePolicy::Aggressive] {
+            assert_eq!(PrunePolicy::parse(&p.render()).unwrap(), p);
+        }
+        assert!(PrunePolicy::Off.is_default());
+        assert!(!PrunePolicy::Aggressive.is_default());
+        assert!(PrunePolicy::parse("conservative:-1").is_err());
+        assert!(PrunePolicy::parse("conservative:much").is_err());
+        assert!(PrunePolicy::parse("eager").is_err());
+    }
+
+    #[test]
+    fn policy_prunes_by_margin() {
+        assert!(!PrunePolicy::Off.prunes(0.01), "off never prunes");
+        assert!(PrunePolicy::Aggressive.prunes(0.99));
+        assert!(!PrunePolicy::Aggressive.prunes(1.01));
+        // conservative:1.0 keeps anything predicted within 2x of breaking
+        // even, prunes what loses even with the doubled benefit of doubt.
+        assert!(!PrunePolicy::Conservative(1.0).prunes(0.6));
+        assert!(PrunePolicy::Conservative(1.0).prunes(0.4));
+    }
+
+    #[test]
+    fn workload_characterizes_the_builtin_blocks() {
+        let db = PatternDb::builtin();
+        for artifact in ["fft2d", "matmul", "lu_factor"] {
+            let w = block_workload(&db, artifact);
+            assert!(w.flops > 0.0, "{artifact}: no flops");
+            assert!(w.bytes > 0.0, "{artifact}: no bytes");
+            assert!(w.depth >= 1 && w.iters >= 1, "{artifact}");
+            assert!(w.intensity > 0.0, "{artifact}");
+        }
+        assert_eq!(block_workload(&db, "unknown"), Workload::default());
+    }
+
+    #[test]
+    fn score_estimates_every_accepted_block() {
+        let db = PatternDb::builtin();
+        let reg = ProfileRegistry::builtin();
+        let out = score(&db, &accepted(&db), &reg, PrunePolicy::Off).unwrap();
+        assert_eq!(out.blocks.len(), 1);
+        let b = &out.blocks[0];
+        assert_eq!(b.label, "call:fft2d");
+        let gpu = b.gpu.as_ref().expect("GPU estimate");
+        assert!(gpu.exec_secs > 0.0 && gpu.speedup > 0.0);
+        assert_eq!(gpu.profile, "GeForce GTX 1050 Ti");
+        assert_eq!(out.prune_mask(), vec![false], "off never prunes");
+        assert_eq!(out.cost_hints().len(), 1);
+        assert!(out.cost_hints()[0] > 0.0);
+    }
+
+    #[test]
+    fn faster_profiles_predict_faster_blocks() {
+        let db = PatternDb::builtin();
+        let mut reg = ProfileRegistry::builtin();
+        let pascal = score(&db, &accepted(&db), &reg, PrunePolicy::Off).unwrap();
+        reg.active_gpu = "Tesla V100".into();
+        let volta = score(&db, &accepted(&db), &reg, PrunePolicy::Off).unwrap();
+        let (p, v) =
+            (pascal.blocks[0].gpu.as_ref().unwrap(), volta.blocks[0].gpu.as_ref().unwrap());
+        assert!(v.total_secs() < p.total_secs(), "Volta {v:?} vs Pascal {p:?}");
+    }
+
+    #[test]
+    fn decision_joins_predictions_with_measurements() {
+        let db = PatternDb::builtin();
+        let est =
+            score(&db, &accepted(&db), &ProfileRegistry::builtin(), PrunePolicy::Aggressive)
+                .unwrap();
+        let m = |label: &str, us: u64| Measurement {
+            label: label.to_string(),
+            median: Duration::from_micros(us),
+            min: Duration::from_micros(us),
+            max: Duration::from_micros(us),
+            reps: 1,
+        };
+        let search = SearchOutcome {
+            baseline: m("all-CPU", 100_000),
+            tried: vec![crate::coordinator::verify::PatternResult {
+                enabled: vec![true],
+                label: "only:call:fft2d".into(),
+                time: m("only:call:fft2d", 2_000),
+                speedup: 50.0,
+                output_ok: true,
+                traffic: Default::default(),
+            }],
+            best_enabled: vec![true],
+            best_time: m("only:call:fft2d", 2_000),
+            best_speedup: 50.0,
+        };
+        let d = decision(&est, &search);
+        assert_eq!(d.blocks.len(), 1);
+        let b = &d.blocks[0];
+        assert_eq!(b.measured_secs, Some(0.002));
+        let err = b.error.expect("error vs measurement");
+        assert!((err - (b.predicted_secs - 0.002) / 0.002).abs() < 1e-9);
+        assert_eq!(d.mape, Some(err.abs()));
+        // Samples mined from the residue feed calibration.
+        let samples = samples_from_decision(&d);
+        assert_eq!(samples.len(), 1);
+        assert_eq!(samples[0].measured_secs, 0.002);
+    }
+
+    #[test]
+    fn calibration_moves_scales_toward_measurements() {
+        let mut reg = ProfileRegistry::builtin();
+        // Predictions uniformly 4x slower than measured: the model
+        // underestimates the device, so its throughput scales up 4x.
+        let samples: Vec<CalibrationSample> = (0..5)
+            .map(|i| CalibrationSample {
+                backend: Backend::Gpu,
+                predicted_secs: 0.004 + i as f64 * 1e-6,
+                measured_secs: 0.001,
+            })
+            .collect();
+        let report = calibrate(&mut reg, &samples).unwrap();
+        assert_eq!(report.gpu_samples, 5);
+        assert!((report.gpu_scale - 4.0).abs() < 0.01, "scale {}", report.gpu_scale);
+        assert_eq!(reg.gpu().unwrap().scale, report.gpu_scale);
+        assert_eq!(reg.fpga().unwrap().scale, 1.0, "no FPGA samples, no change");
+        // Calibrated profiles predict faster, shrinking the error.
+        let db = PatternDb::builtin();
+        let planned = vec![PlannedReplacement {
+            site: Site::LibraryCall { callee: "fft2d".into() },
+            replacement: db.libraries[0].replacement.clone(),
+            reconciliation: Reconciliation::Exact,
+        }];
+        let before = score(&db, &planned, &ProfileRegistry::builtin(), PrunePolicy::Off).unwrap();
+        let after = score(&db, &planned, &reg, PrunePolicy::Off).unwrap();
+        assert!(
+            after.blocks[0].gpu.as_ref().unwrap().exec_secs
+                < before.blocks[0].gpu.as_ref().unwrap().exec_secs
+        );
+        // Clamped: absurd samples cannot invert the profile.
+        let absurd = vec![CalibrationSample {
+            backend: Backend::Gpu,
+            predicted_secs: 1e6,
+            measured_secs: 1e-9,
+        }];
+        let r = calibrate(&mut reg, &absurd).unwrap();
+        assert_eq!(r.gpu_scale, SCALE_BOUNDS.1);
+    }
+
+    #[test]
+    fn outcome_and_decision_codecs_round_trip_byte_stable() {
+        let db = PatternDb::builtin();
+        let est = score(&db, &accepted(&db), &ProfileRegistry::builtin(), PrunePolicy::Conservative(0.25))
+            .unwrap();
+        let s = json::to_string_pretty(&outcome_to_json(&est));
+        let back = outcome_from_json(&json::parse(&s).unwrap()).unwrap();
+        assert_eq!(back, est);
+        assert_eq!(json::to_string_pretty(&outcome_to_json(&back)), s, "byte-stable");
+
+        let d = EstimateDecision {
+            policy: PrunePolicy::Aggressive,
+            gpu_profile: "GeForce GTX 1050 Ti".into(),
+            fpga_profile: "Intel Arria10 GX 1150".into(),
+            mape: Some(0.4),
+            blocks: vec![
+                BlockPrediction {
+                    label: "call:fft2d".into(),
+                    backend: Backend::Gpu,
+                    predicted_secs: 0.0015,
+                    measured_secs: Some(0.002),
+                    error: Some(-0.25),
+                },
+                BlockPrediction {
+                    label: "func:mm".into(),
+                    backend: Backend::Cpu,
+                    predicted_secs: 0.1,
+                    measured_secs: None,
+                    error: None,
+                },
+            ],
+        };
+        let s = json::to_string_pretty(&decision_to_json(&d));
+        let back = decision_from_json(&json::parse(&s).unwrap()).unwrap();
+        assert_eq!(back, d);
+        assert_eq!(json::to_string_pretty(&decision_to_json(&back)), s);
+    }
+}

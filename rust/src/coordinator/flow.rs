@@ -12,7 +12,11 @@
 use anyhow::{bail, Result};
 
 use super::backend::Backend;
+use super::estimate::EstimateDecision;
 use super::OffloadReport;
+
+/// Billing (and energy-budget) hours in a month: 24 × 30.
+const HOURS_PER_MONTH: f64 = 24.0 * 30.0;
 
 /// A candidate deployment location (commercial environment).
 #[derive(Debug, Clone)]
@@ -67,6 +71,12 @@ pub struct Requirements {
     pub max_latency_ms: f64,
     /// Monthly budget cap ($).
     pub budget_per_month: f64,
+    /// Deployment-level energy budget: the most kWh the whole provisioned
+    /// fleet may draw per month (instances × watts/1000 × 720 h), `None`
+    /// for uncapped. Enforceable only for candidates whose arbitration
+    /// supplied per-instance watts (a non-default `--power-policy`);
+    /// backends with unknown draw are not excluded by the cap.
+    pub max_kwh_per_month: Option<f64>,
 }
 
 /// Step-4 output: how many accelerator instances to provision.
@@ -118,9 +128,40 @@ impl BackendTimes {
         }
     }
 
-    /// Extract the placement inputs from an offload report.
+    /// Extract the placement inputs from an offload report. When the
+    /// report carries an estimate residue (non-default estimator
+    /// configuration), a backend the measured search left unpriced
+    /// borrows the analytic prediction — see
+    /// [`BackendTimes::fill_from_estimate`].
     pub fn from_report(r: &OffloadReport) -> Self {
-        Self::from_arbitration(&r.arbitration)
+        let mut t = Self::from_arbitration(&r.arbitration);
+        if let Some(est) = &r.arbitration.estimate {
+            t.fill_from_estimate(est);
+        }
+        t
+    }
+
+    /// Fill per-backend request seconds the measurements left `None` from
+    /// the estimate residue: the backend's best (fastest) predicted
+    /// pattern seconds over the blocks the estimator scored for it.
+    /// Measured times always win over predicted ones — an estimate never
+    /// overrides a measurement, it only lets Step-5 price a placement the
+    /// search never measured (e.g. a pruned or pre-check-skipped FPGA
+    /// path).
+    pub fn fill_from_estimate(&mut self, est: &EstimateDecision) {
+        let predicted = |backend: Backend| -> Option<f64> {
+            est.blocks
+                .iter()
+                .filter(|b| b.backend == backend && b.predicted_secs > 0.0)
+                .map(|b| b.predicted_secs)
+                .min_by(f64::total_cmp)
+        };
+        if self.gpu_secs.is_none() {
+            self.gpu_secs = predicted(Backend::Gpu);
+        }
+        if self.fpga_secs.is_none() {
+            self.fpga_secs = predicted(Backend::Fpga);
+        }
     }
 
     /// Per-instance draw for one backend, when known.
@@ -173,7 +214,7 @@ pub fn plan_placement(
         if loc.gpus + loc.fpgas < plan.instances {
             continue;
         }
-        let monthly = loc.cost_per_hour * plan.instances as f64 * 24.0 * 30.0;
+        let monthly = loc.cost_per_hour * plan.instances as f64 * HOURS_PER_MONTH;
         if monthly > req.budget_per_month {
             continue;
         }
@@ -213,6 +254,14 @@ pub fn plan_backend_placement(
     for (backend, secs) in candidates {
         let Some(secs) = secs else { continue };
         let plan = plan_resources(secs, req)?;
+        // Deployment-level energy budget (location-independent): the
+        // whole provisioned fleet's monthly draw must fit the cap.
+        if let (Some(cap), Some(watts)) = (req.max_kwh_per_month, times.watts(backend)) {
+            let kwh = watts / 1000.0 * HOURS_PER_MONTH * plan.instances as f64;
+            if kwh > cap {
+                continue;
+            }
+        }
         for loc in locations {
             if loc.latency_ms > req.max_latency_ms {
                 continue;
@@ -220,12 +269,12 @@ pub fn plan_backend_placement(
             if loc.capacity(backend) < plan.instances {
                 continue;
             }
-            let hours = 24.0 * 30.0;
             let energy_hourly = times
                 .watts(backend)
                 .map(|w| w / 1000.0 * loc.energy_cost_per_kwh)
                 .unwrap_or(0.0);
-            let monthly = (loc.hourly(backend) + energy_hourly) * plan.instances as f64 * hours;
+            let monthly =
+                (loc.hourly(backend) + energy_hourly) * plan.instances as f64 * HOURS_PER_MONTH;
             if monthly > req.budget_per_month {
                 continue;
             }
@@ -306,7 +355,12 @@ mod tests {
     }
 
     fn req() -> Requirements {
-        Requirements { target_rps: 40.0, max_latency_ms: 20.0, budget_per_month: 5000.0 }
+        Requirements {
+            target_rps: 40.0,
+            max_latency_ms: 20.0,
+            budget_per_month: 5000.0,
+            max_kwh_per_month: None,
+        }
     }
 
     #[test]
@@ -402,6 +456,95 @@ mod tests {
         assert_eq!(p.backend, Backend::Fpga, "metered electricity flips it");
         // 4 instances × (0.21 + 0.040 × 1.0) $/h × 720 h.
         assert!((p.monthly_cost - 4.0 * 0.25 * 720.0).abs() < 1e-6, "{}", p.monthly_cost);
+    }
+
+    #[test]
+    fn kwh_budget_flips_the_backend_choice() {
+        // A flat-rate location (no metered electricity) where the GPU's
+        // instance price narrowly beats the FPGA's: uncapped, the GPU
+        // wins on price alone.
+        let locs = vec![Location {
+            name: "flat-dc".into(),
+            gpus: 8,
+            fpgas: 8,
+            cost_per_hour: 0.20,
+            fpga_cost_per_hour: 0.21,
+            energy_cost_per_kwh: 0.0,
+            latency_ms: 10.0,
+        }];
+        let times = BackendTimes {
+            gpu_secs: Some(0.1),
+            fpga_secs: Some(0.1),
+            gpu_watts: Some(75.0),
+            fpga_watts: Some(40.0),
+        };
+        let p = plan_backend_placement(&times, &req(), &locs).unwrap();
+        assert_eq!(p.backend, Backend::Gpu, "uncapped, instance price favors the GPU");
+
+        // Deployment energy budget: 4 GPU instances draw 4 × 0.075 kW ×
+        // 720 h = 216 kWh/month; 4 FPGAs draw 115.2. A 150 kWh cap
+        // excludes every GPU deal and ships the FPGAs despite the higher
+        // instance price.
+        let capped = Requirements { max_kwh_per_month: Some(150.0), ..req() };
+        let p = plan_backend_placement(&times, &capped, &locs).unwrap();
+        assert_eq!(p.backend, Backend::Fpga, "the kWh budget flips it");
+        assert!((p.monthly_cost - 4.0 * 0.21 * 720.0).abs() < 1e-6, "{}", p.monthly_cost);
+
+        // A cap even the FPGAs bust leaves nothing feasible.
+        let starved = Requirements { max_kwh_per_month: Some(100.0), ..req() };
+        assert!(plan_backend_placement(&times, &starved, &locs).is_err());
+    }
+
+    #[test]
+    fn estimate_fills_a_backend_the_measurements_left_unpriced() {
+        use crate::coordinator::estimate::{BlockPrediction, EstimateDecision, PrunePolicy};
+
+        // The search never measured an FPGA pattern (no pre-check-passing
+        // IP core in the measured set), but the estimator predicted one.
+        let mut times = BackendTimes { gpu_secs: Some(0.1), ..Default::default() };
+        let est = EstimateDecision {
+            policy: PrunePolicy::Aggressive,
+            gpu_profile: "GeForce GTX 1050 Ti".into(),
+            fpga_profile: "Arria 10 GX 1150".into(),
+            blocks: vec![
+                BlockPrediction {
+                    label: "call:fft2d".into(),
+                    backend: Backend::Fpga,
+                    predicted_secs: 0.25,
+                    measured_secs: None,
+                    error: None,
+                },
+                BlockPrediction {
+                    label: "call:conv".into(),
+                    backend: Backend::Fpga,
+                    predicted_secs: 0.2,
+                    measured_secs: None,
+                    error: None,
+                },
+                // A GPU prediction must NOT override the measured time.
+                BlockPrediction {
+                    label: "call:matmul".into(),
+                    backend: Backend::Gpu,
+                    predicted_secs: 0.5,
+                    measured_secs: Some(0.1),
+                    error: Some(4.0),
+                },
+            ],
+            mape: None,
+        };
+        times.fill_from_estimate(&est);
+        assert_eq!(times.gpu_secs, Some(0.1), "measured time survives");
+        assert_eq!(times.fpga_secs, Some(0.2), "fastest FPGA prediction fills the gap");
+
+        // The borrowed prediction makes an FPGA-only deployment plannable:
+        // strip FPGA capacity and GPU capacity in turn to see both paths.
+        let mut locs = locations();
+        for l in &mut locs {
+            l.gpus = 0;
+        }
+        let p = plan_backend_placement(&times, &req(), &locs).unwrap();
+        assert_eq!(p.backend, Backend::Fpga);
+        assert_eq!(p.plan.instances, 8, "sized from the predicted 0.2 s/request");
     }
 
     #[test]

@@ -15,7 +15,8 @@
 //!
 //! The pipeline itself is staged ([`pipeline`]): [`Coordinator::request`]
 //! builds an [`OffloadRequest`] that advances through typed artifacts
-//! (`Parsed → Discovered → Reconciled → Verified → Arbitrated → Placed`),
+//! (`Parsed → Discovered → Reconciled → Estimated → Verified → Arbitrated
+//! → Placed`),
 //! each inspectable, serializable, and resumable in isolation.
 //! [`Coordinator::offload`] is the thin compatibility wrapper that runs
 //! every stage in one call.
@@ -25,10 +26,12 @@
 
 pub mod apps;
 pub mod backend;
+pub mod estimate;
 pub mod flow;
 pub mod loop_offload;
 pub mod pipeline;
 pub mod power;
+pub mod profile;
 pub mod report_json;
 pub mod verify;
 
@@ -46,11 +49,13 @@ use crate::similarity;
 use crate::transform::{InterfacePolicy, PlannedReplacement, Reconciliation};
 
 pub use backend::{ArbitrationOutcome, Backend, BackendPolicy};
+pub use estimate::{EstimateDecision, EstimateOutcome, PrunePolicy};
 pub use pipeline::{
-    Arbitrated, Candidate, Discovered, OffloadError, OffloadRequest, Parsed, Placed, PowerScored,
-    Reconciled, Stage, StageObserver, Verified,
+    Arbitrated, Candidate, Discovered, Estimated, OffloadError, OffloadRequest, Parsed, Placed,
+    PowerScored, Reconciled, Stage, StageObserver, Verified,
 };
 pub use power::{PowerModel, PowerOutcome, PowerPolicy};
+pub use profile::ProfileRegistry;
 pub use verify::{
     MeasuredPattern, PatternExecutor, PatternSpec, ResultProbe, SearchOutcome, SerialExecutor,
     VerifyConfig, VerifyContext, VerifyPlan,
@@ -135,6 +140,14 @@ pub struct Coordinator {
     /// Per-device wattage models (CPU baseline, GPU, FPGA) the power
     /// stage scores candidates against, registered alongside `device`.
     pub power_model: PowerModel,
+    /// Device-profile registry the estimate stage scores candidates
+    /// against (CLI `--device-profile`): the built-in registry matches
+    /// the paper's measurement hardware.
+    pub profiles: ProfileRegistry,
+    /// How the analytic estimate prunes the verify plan (CLI
+    /// `--prune-policy`): the default `off` computes and traces estimates
+    /// but never changes what is measured.
+    pub prune_policy: PrunePolicy,
     /// Pattern executor the Verify stage measures with. `None` means the
     /// serial default (one engine, patterns back to back); the service
     /// tier and CLI `--verify-parallel` install a pooled executor that
@@ -156,6 +169,8 @@ impl Coordinator {
             device: crate::fpga::ARRIA10_GX,
             power_policy: PowerPolicy::default(),
             power_model: PowerModel::builtin(),
+            profiles: ProfileRegistry::builtin(),
+            prune_policy: PrunePolicy::default(),
             executor: None,
         })
     }
@@ -284,6 +299,37 @@ impl Coordinator {
                     j(b.gpu_energy_j),
                     j(b.fpga_energy_j),
                 );
+            }
+        }
+        if let Some(e) = &arb.estimate {
+            let _ = writeln!(
+                out,
+                "analytic estimate (--prune-policy {}, gpu {} / fpga {}):",
+                e.policy.render(),
+                e.gpu_profile,
+                e.fpga_profile,
+            );
+            for b in &e.blocks {
+                let measured = match b.measured_secs {
+                    Some(m) => crate::metrics::fmt_duration(Duration::from_secs_f64(m)),
+                    None => "-".to_string(),
+                };
+                let err = match b.error {
+                    Some(err) => format!("{:+.0}%", err * 100.0),
+                    None => "-".to_string(),
+                };
+                let _ = writeln!(
+                    out,
+                    "  block {:<24} {:<4} predicted {}  measured {}  error {}",
+                    b.label,
+                    b.backend.as_str(),
+                    crate::metrics::fmt_duration(Duration::from_secs_f64(b.predicted_secs)),
+                    measured,
+                    err,
+                );
+            }
+            if let Some(mape) = e.mape {
+                let _ = writeln!(out, "  estimator MAPE {:.0}%", mape * 100.0);
             }
         }
         let _ = writeln!(

@@ -12,8 +12,8 @@
 //!   interface policy, verification settings, backend target, FPGA device
 //!   model).
 //! * Typed stage artifacts — [`Parsed`] → [`Discovered`] → [`Reconciled`]
-//!   → [`Verified`] → [`PowerScored`] → [`Arbitrated`] → [`Placed`]. Each
-//!   is a plain value
+//!   → [`Estimated`] → [`Verified`] → [`PowerScored`] → [`Arbitrated`] →
+//!   [`Placed`]. Each is a plain value
 //!   you can inspect, serialize ([`Parsed::to_json_string`] etc.), and
 //!   resume from ([`Parsed::from_json_str`] etc.): deserialize a stage on
 //!   another process — or under a different policy — and advance it from
@@ -56,8 +56,10 @@ use crate::telemetry::TraceEvent;
 use crate::transform::{self, reconcile, signature_of, InterfacePolicy, PlannedReplacement, Site};
 
 use super::backend::{self, Backend, BackendPolicy};
+use super::estimate::{self, EstimateOutcome, PrunePolicy};
 use super::flow;
 use super::power::{self, PowerModel, PowerPolicy};
+use super::profile::ProfileRegistry;
 use super::report_json;
 use super::verify::{self, PatternExecutor, SearchOutcome, SerialExecutor, VerifyConfig};
 use super::{Coordinator, DiscoveredBlock, DiscoveryPath, OffloadReport};
@@ -74,6 +76,10 @@ pub enum Stage {
     Discover,
     /// C-1/C-2: reconcile block interfaces under the interface policy.
     Reconcile,
+    /// Analytic estimation: score every accepted candidate against the
+    /// device-profile registry before anything is measured
+    /// (arXiv:2004.09883's suitability narrowing).
+    Estimate,
     /// Step 3: measured pattern search in the verification environment.
     Verify,
     /// Power scoring: energy/performance-per-watt of every surviving
@@ -87,10 +93,11 @@ pub enum Stage {
 
 impl Stage {
     /// Every stage, in execution order.
-    pub const ALL: [Stage; 7] = [
+    pub const ALL: [Stage; 8] = [
         Stage::Parse,
         Stage::Discover,
         Stage::Reconcile,
+        Stage::Estimate,
         Stage::Verify,
         Stage::PowerScore,
         Stage::Arbitrate,
@@ -103,6 +110,7 @@ impl Stage {
             Stage::Parse => "parse",
             Stage::Discover => "discover",
             Stage::Reconcile => "reconcile",
+            Stage::Estimate => "estimate",
             Stage::Verify => "verify",
             Stage::PowerScore => "power-score",
             Stage::Arbitrate => "arbitrate",
@@ -124,10 +132,11 @@ impl Stage {
             Stage::Parse => 0,
             Stage::Discover => 1,
             Stage::Reconcile => 2,
-            Stage::Verify => 3,
-            Stage::PowerScore => 4,
-            Stage::Arbitrate => 5,
-            Stage::Place => 6,
+            Stage::Estimate => 3,
+            Stage::Verify => 4,
+            Stage::PowerScore => 5,
+            Stage::Arbitrate => 6,
+            Stage::Place => 7,
         }
     }
 }
@@ -180,6 +189,16 @@ pub enum OffloadError {
         /// What went wrong.
         message: String,
     },
+    /// Analytic estimation failed (an invalid profile registry); the
+    /// reconciled artifact — and through it the discovery — survives. The
+    /// built-in registry is always valid: this fires only for
+    /// caller-supplied `--device-profile` registries.
+    Estimating {
+        /// The successful reconciliation artifact.
+        reconciled: Box<Reconciled>,
+        /// What went wrong.
+        message: String,
+    },
     /// Step 3 verification failed; the reconciled artifact survives.
     Verify {
         /// The successful reconciliation artifact.
@@ -221,6 +240,7 @@ impl OffloadError {
             OffloadError::Parse { .. } => Stage::Parse,
             OffloadError::Discovery { .. } => Stage::Discover,
             OffloadError::Reconcile { .. } => Stage::Reconcile,
+            OffloadError::Estimating { .. } => Stage::Estimate,
             OffloadError::Verify { .. } => Stage::Verify,
             OffloadError::PowerScoring { .. } => Stage::PowerScore,
             OffloadError::Arbitrate { .. } => Stage::Arbitrate,
@@ -234,6 +254,7 @@ impl OffloadError {
             OffloadError::Parse { message, .. }
             | OffloadError::Discovery { message, .. }
             | OffloadError::Reconcile { message, .. }
+            | OffloadError::Estimating { message, .. }
             | OffloadError::Verify { message, .. }
             | OffloadError::PowerScoring { message, .. }
             | OffloadError::Arbitrate { message, .. }
@@ -300,8 +321,22 @@ pub struct OffloadRequest {
     /// Per-device wattage models the power stage scores against,
     /// registered alongside the FPGA device model.
     pub power_model: PowerModel,
+    /// Device-profile registry the estimate stage scores candidates
+    /// against (CLI `--device-profile`).
+    pub profiles: ProfileRegistry,
+    /// How the estimate prunes candidates before measurement
+    /// (CLI `--prune-policy`).
+    pub prune_policy: PrunePolicy,
     observer: Option<Arc<dyn StageObserver>>,
     executor: Option<Rc<dyn PatternExecutor>>,
+}
+
+/// True when the estimator configuration is the inert default: estimates
+/// are computed and traced, but nothing downstream — pruning, fleet cost
+/// hints, report residue, cache fingerprints — may depend on them.
+/// Decisions and bytes must match a pipeline without the stage.
+pub(crate) fn estimate_is_default(req: &OffloadRequest) -> bool {
+    req.prune_policy.is_default() && req.profiles == ProfileRegistry::builtin()
 }
 
 impl OffloadRequest {
@@ -319,6 +354,8 @@ impl OffloadRequest {
             device: c.device,
             power_policy: c.power_policy,
             power_model: c.power_model.clone(),
+            profiles: c.profiles.clone(),
+            prune_policy: c.prune_policy,
             observer: None,
             executor: c.executor.clone(),
         }
@@ -374,6 +411,20 @@ impl OffloadRequest {
     /// Override the per-device wattage models.
     pub fn with_power_model(mut self, model: PowerModel) -> Self {
         self.power_model = model;
+        self
+    }
+
+    /// Override the device-profile registry the estimate stage scores
+    /// against (CLI `--device-profile`).
+    pub fn with_profiles(mut self, profiles: ProfileRegistry) -> Self {
+        self.profiles = profiles;
+        self
+    }
+
+    /// Override the pruning policy the estimate applies to the verify
+    /// plan (CLI `--prune-policy`).
+    pub fn with_prune_policy(mut self, policy: PrunePolicy) -> Self {
+        self.prune_policy = policy;
         self
     }
 
@@ -440,6 +491,7 @@ impl OffloadRequest {
             .parse()?
             .discover(self)?
             .reconcile(self)?
+            .estimate(self)?
             .verify(self)?
             .arbitrate(self)?
             .report())
@@ -454,6 +506,8 @@ pub const STAGE_PARSED_FORMAT: &str = "fbo-stage-parsed-v1";
 pub const STAGE_DISCOVERED_FORMAT: &str = "fbo-stage-discovered-v1";
 /// Format tag of a serialized [`Reconciled`] artifact.
 pub const STAGE_RECONCILED_FORMAT: &str = "fbo-stage-reconciled-v1";
+/// Format tag of a serialized [`Estimated`] artifact.
+pub const STAGE_ESTIMATED_FORMAT: &str = "fbo-stage-estimated-v1";
 /// Format tag of a serialized [`Verified`] artifact.
 pub const STAGE_VERIFIED_FORMAT: &str = "fbo-stage-verified-v1";
 /// Format tag of a serialized [`PowerScored`] artifact.
@@ -668,40 +722,31 @@ impl Reconciled {
         self.blocks.iter().filter(|b| b.accepted()).map(|b| b.plan.clone()).collect()
     }
 
-    /// Step 3: link CPU library bodies, then run the measured pattern
-    /// search in the verification environment.
-    pub fn verify(&self, req: &OffloadRequest) -> std::result::Result<Verified, OffloadError> {
+    /// Analytic estimation: score every accepted candidate against the
+    /// request's device-profile registry before anything is measured
+    /// (arXiv:2004.09883's offload-suitability narrowing). Infallible with
+    /// the built-in registry; a caller-supplied `--device-profile`
+    /// registry that fails validation errors here, carrying this artifact.
+    pub fn estimate(&self, req: &OffloadRequest) -> std::result::Result<Estimated, OffloadError> {
         let t0 = Instant::now();
-        let search = || -> Result<SearchOutcome> {
-            let linked = link_cpu_libraries(&req.db, &self.discovered.parsed.program)?;
-            let accepted = self.accepted();
-            // The request's executor decides how the independent pattern
-            // measurements run (serial on this engine, or fanned out by
-            // the service pool) — never what the outcome is.
-            let serial;
-            let executor: &dyn PatternExecutor = match &req.executor {
-                Some(e) => e.as_ref(),
-                None => {
-                    serial = SerialExecutor::new(req.engine.clone());
-                    &serial
-                }
-            };
-            verify::search_patterns_with(
-                &linked,
-                &self.discovered.parsed.entry,
-                &accepted,
-                &req.verify,
-                executor,
-            )
-        };
-        let outcome = search().map_err(|e| OffloadError::Verify {
-            reconciled: Box::new(self.clone()),
-            message: format!("{e:#}"),
-        })?;
+        let accepted = self.accepted();
+        let estimates = estimate::score(&req.db, &accepted, &req.profiles, req.prune_policy)
+            .map_err(|e| OffloadError::Estimating {
+                reconciled: Box::new(self.clone()),
+                message: format!("{e:#}"),
+            })?;
         let wall = t0.elapsed();
-        req.observe_events(|| verify::measurement_events(&outcome));
-        req.observe(Stage::Verify, wall);
-        Ok(Verified { reconciled: self.clone(), outcome, wall })
+        req.observe_events(|| estimate::estimator_events(&estimates));
+        req.observe(Stage::Estimate, wall);
+        Ok(Estimated { reconciled: self.clone(), estimates, wall })
+    }
+
+    /// Step 3 via the estimate stage: [`Reconciled::estimate`] always runs
+    /// first (the analytic stage is part of the pipeline proper), then the
+    /// measured search. Drive [`Reconciled::estimate`] explicitly to
+    /// inspect or serialize the intermediate artifact.
+    pub fn verify(&self, req: &OffloadRequest) -> std::result::Result<Verified, OffloadError> {
+        self.estimate(req)?.verify(req)
     }
 
     /// Serialize to the canonical JSON value.
@@ -743,6 +788,107 @@ impl Reconciled {
     }
 }
 
+/// Estimate-stage artifact: every accepted candidate scored analytically
+/// against the device-profile registry, between [`Reconciled`] and
+/// [`Verified`]. Nothing here touched hardware — the estimates come from
+/// the roofline/streaming models in [`super::estimate`] — which is exactly
+/// why the stage is cheap enough to always run: its scores gate the
+/// measured search only under a non-default `--prune-policy` or
+/// `--device-profile`.
+#[derive(Debug, Clone)]
+pub struct Estimated {
+    /// The reconciliation artifact this stage advanced from.
+    pub reconciled: Reconciled,
+    /// Analytic per-block estimates under the request's registry.
+    pub estimates: EstimateOutcome,
+    /// Wall-clock this stage took.
+    pub wall: Duration,
+}
+
+impl Estimated {
+    /// Step 3: link CPU library bodies, then run the measured pattern
+    /// search — consuming the estimate (prune mask + fleet cost hints)
+    /// only when the estimator configuration is non-default. Under the
+    /// default configuration the search, its outcome, and the resulting
+    /// [`Verified`] bytes are identical to a pipeline without this stage.
+    pub fn verify(&self, req: &OffloadRequest) -> std::result::Result<Verified, OffloadError> {
+        let t0 = Instant::now();
+        let default_estimate = estimate_is_default(req);
+        let search = || -> Result<SearchOutcome> {
+            let linked = link_cpu_libraries(&req.db, &self.reconciled.discovered.parsed.program)?;
+            let accepted = self.reconciled.accepted();
+            // The request's executor decides how the independent pattern
+            // measurements run (serial on this engine, or fanned out by
+            // the service pool) — never what the outcome is.
+            let serial;
+            let executor: &dyn PatternExecutor = match &req.executor {
+                Some(e) => e.as_ref(),
+                None => {
+                    serial = SerialExecutor::new(req.engine.clone());
+                    &serial
+                }
+            };
+            let (hints, pruned) = if default_estimate {
+                (Vec::new(), Vec::new())
+            } else {
+                (self.estimates.cost_hints(), self.estimates.prune_mask())
+            };
+            verify::search_patterns_full(
+                &linked,
+                &self.reconciled.discovered.parsed.entry,
+                &accepted,
+                &req.verify,
+                executor,
+                &hints,
+                &pruned,
+            )
+        };
+        let outcome = search().map_err(|e| OffloadError::Verify {
+            reconciled: Box::new(self.reconciled.clone()),
+            message: format!("{e:#}"),
+        })?;
+        let wall = t0.elapsed();
+        req.observe_events(|| verify::measurement_events(&outcome));
+        req.observe(Stage::Verify, wall);
+        Ok(Verified {
+            reconciled: self.reconciled.clone(),
+            outcome,
+            estimates: (!default_estimate).then(|| self.estimates.clone()),
+            wall,
+        })
+    }
+
+    /// Serialize to the canonical JSON value.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str(STAGE_ESTIMATED_FORMAT)),
+            ("reconciled", self.reconciled.to_json()),
+            ("estimates", estimate::outcome_to_json(&self.estimates)),
+            ("wall_ns", report_json::duration_to_json(self.wall)),
+        ])
+    }
+
+    /// Decode from a JSON value.
+    pub fn from_json(v: &Json) -> Result<Estimated> {
+        check_format(v, STAGE_ESTIMATED_FORMAT)?;
+        Ok(Estimated {
+            reconciled: Reconciled::from_json(v.get("reconciled")?)?,
+            estimates: estimate::outcome_from_json(v.get("estimates")?)?,
+            wall: report_json::duration_from_json(v.get("wall_ns")?)?,
+        })
+    }
+
+    /// Serialize to the canonical pretty-printed string.
+    pub fn to_json_string(&self) -> String {
+        json::to_string_pretty(&self.to_json())
+    }
+
+    /// Decode from the string form.
+    pub fn from_json_str(s: &str) -> Result<Estimated> {
+        Self::from_json(&json::parse(s)?)
+    }
+}
+
 /// Stage-3 artifact: the measured pattern-search outcome.
 #[derive(Debug, Clone)]
 pub struct Verified {
@@ -750,6 +896,11 @@ pub struct Verified {
     pub reconciled: Reconciled,
     /// Step-3 measured pattern-search outcome.
     pub outcome: SearchOutcome,
+    /// The analytic estimates the search consumed — `Some` only under a
+    /// non-default estimator configuration (so default-path bytes are
+    /// unchanged), carried forward for the v4 report's
+    /// predicted-vs-measured residue.
+    pub estimates: Option<EstimateOutcome>,
     /// Wall-clock this stage took.
     pub wall: Duration,
 }
@@ -799,14 +950,21 @@ impl Verified {
         arbitrate_scored(self, &scores, req)
     }
 
-    /// Serialize to the canonical JSON value.
+    /// Serialize to the canonical JSON value. The `estimates` key is
+    /// emitted only when the search consumed a non-default estimate —
+    /// default-configuration artifacts stay byte-identical to pipelines
+    /// without the estimate stage.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("format", Json::str(STAGE_VERIFIED_FORMAT)),
             ("reconciled", self.reconciled.to_json()),
             ("outcome", report_json::outcome_to_json(&self.outcome)),
             ("wall_ns", report_json::duration_to_json(self.wall)),
-        ])
+        ];
+        if let Some(est) = &self.estimates {
+            fields.push(("estimates", estimate::outcome_to_json(est)));
+        }
+        Json::obj(fields)
     }
 
     /// Decode from a JSON value.
@@ -815,6 +973,7 @@ impl Verified {
         Ok(Verified {
             reconciled: Reconciled::from_json(v.get("reconciled")?)?,
             outcome: report_json::outcome_from_json(v.get("outcome")?, false)?,
+            estimates: v.opt("estimates").map(estimate::outcome_from_json).transpose()?,
             wall: report_json::duration_from_json(v.get("wall_ns")?)?,
         })
     }
@@ -898,7 +1057,7 @@ fn arbitrate_scored(
     let t0 = Instant::now();
     let go = || -> Result<(backend::ArbitrationOutcome, String)> {
         let accepted = verified.reconciled.accepted();
-        let arbitration = backend::arbitrate(
+        let mut arbitration = backend::arbitrate(
             &req.db,
             req.backend_policy,
             req.device,
@@ -907,6 +1066,12 @@ fn arbitrate_scored(
             &verified.outcome,
             scores,
         )?;
+        // Join the analytic predictions against the measured search so
+        // the report carries per-block predicted-vs-measured error (the
+        // v4 residue). Present only under a non-default estimator
+        // configuration — the default report stays v2/v3.
+        arbitration.estimate =
+            verified.estimates.as_ref().map(|e| estimate::decision(e, &verified.outcome));
         // Emit the winning transformed source (on the *user's* program,
         // not the linked one — what the paper hands back for deployment).
         // Under a non-default power policy a time-winning block the
@@ -1226,16 +1391,19 @@ mod tests {
 
     #[test]
     fn stage_enum_is_ordered_and_named() {
-        assert_eq!(Stage::ALL.len(), 7);
+        assert_eq!(Stage::ALL.len(), 8);
         for (i, s) in Stage::ALL.iter().enumerate() {
             assert_eq!(s.index(), i);
         }
+        assert_eq!(Stage::Estimate.as_str(), "estimate");
         assert_eq!(Stage::Verify.as_str(), "verify");
         assert_eq!(Stage::PowerScore.as_str(), "power-score");
         for s in Stage::ALL {
             assert_eq!(Stage::parse(s.as_str()).unwrap(), s, "parse inverts as_str");
         }
         assert!(Stage::parse("compile").is_err());
+        assert!(Stage::Estimate.index() > Stage::Reconcile.index());
+        assert!(Stage::Estimate.index() < Stage::Verify.index());
         assert!(Stage::PowerScore.index() > Stage::Verify.index());
         assert!(Stage::PowerScore.index() < Stage::Arbitrate.index());
     }

@@ -1,0 +1,521 @@
+//! Device characteristics profiles for the analytic estimation stage.
+//!
+//! The function-block proposal (Yamato, *Proposal of Automatic Offloading
+//! Method in Mixed Offloading Destination Environment*, arXiv:2004.09883)
+//! narrows offload candidates by *suitability* before anything touches
+//! hardware, and per-architecture characteristics tables are the concrete
+//! shape that narrowing takes: compute units, shared memory, bandwidth,
+//! clock, and bus figures per device generation, feeding an analytic
+//! speedup estimate per candidate. This module is that table:
+//!
+//! * [`CpuProfile`] / [`GpuProfile`] / [`FpgaProfile`] — one entry per
+//!   device class, with the roofline inputs the estimator consumes;
+//! * [`ProfileRegistry`] — several GPU generations and FPGA families
+//!   (not one hard-coded card), plus which entry is *active*, i.e.
+//!   which device the verification environment actually has;
+//! * canonical-JSON codecs so a registry is loadable via
+//!   `--device-profile` and foldable into cache fingerprints;
+//! * per-profile calibration `scale` factors, fitted from past measured
+//!   reps by [`crate::coordinator::estimate::calibrate`].
+//!
+//! Like the wattage models (`power.rs`) and the HLS chain, profile
+//! figures are *modeled* substitutes for datasheet numbers: relative
+//! comparisons carry over, absolute seconds are earned through the
+//! predicted-vs-measured error reported per block.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::patterndb::json::{self, Json};
+
+/// Characteristics of the all-CPU baseline host.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CpuProfile {
+    /// Host name (diagnostics and fingerprints).
+    pub name: String,
+    /// Physical cores the interpreter baseline can draw on (the modeled
+    /// baseline is single-threaded; cores scale the roofline ceiling the
+    /// estimator compares devices against).
+    pub cores: u64,
+    /// Sustained core clock (Hz).
+    pub clock_hz: f64,
+    /// Floating-point ops retired per core per cycle.
+    pub flops_per_cycle: f64,
+    /// Sustained memory bandwidth (bytes/s).
+    pub mem_bw_bytes_per_sec: f64,
+    /// Calibration scale on the modeled throughput (1.0 = uncalibrated).
+    pub scale: f64,
+}
+
+impl CpuProfile {
+    /// Modeled peak floating-point throughput (flops/s), calibration
+    /// applied.
+    pub fn peak_flops(&self) -> f64 {
+        self.cores as f64 * self.flops_per_cycle * self.clock_hz * self.scale
+    }
+}
+
+/// Characteristics of one GPU generation (SNIPPETS snippet 3's
+/// `GPUCharacteristics`, trimmed to what the roofline estimate consumes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuProfile {
+    /// Card name (diagnostics, fingerprints, `active_gpu` key).
+    pub name: String,
+    /// Architecture generation (e.g. "Pascal", "Volta", "Ampere").
+    pub generation: String,
+    /// Streaming multiprocessors.
+    pub compute_units: u64,
+    /// CUDA-core lanes per SM.
+    pub cores_per_unit: u64,
+    /// Sustained SM clock (Hz).
+    pub clock_hz: f64,
+    /// Shared memory per SM (bytes) — bounds the tile sizes the kernel
+    /// strategy can assume; small shared memory discounts the roofline.
+    pub shared_mem_bytes: u64,
+    /// Device memory bandwidth (bytes/s).
+    pub mem_bw_bytes_per_sec: f64,
+    /// Host<->device PCIe bandwidth (bytes/s).
+    pub pcie_bytes_per_sec: f64,
+    /// Fixed kernel-launch overhead per offloaded run (s).
+    pub launch_latency_secs: f64,
+    /// Calibration scale on the modeled throughput (1.0 = uncalibrated).
+    pub scale: f64,
+}
+
+impl GpuProfile {
+    /// Modeled peak floating-point throughput (flops/s): units × lanes ×
+    /// 2 (FMA) × clock, calibration applied.
+    pub fn peak_flops(&self) -> f64 {
+        self.compute_units as f64 * self.cores_per_unit as f64 * 2.0 * self.clock_hz * self.scale
+    }
+}
+
+/// Characteristics of one FPGA family, mirroring the resource envelope
+/// of [`crate::fpga::Device`] plus the streaming-model inputs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FpgaProfile {
+    /// Card name (diagnostics, fingerprints, `active_fpga` key).
+    pub name: String,
+    /// Device family (e.g. "Arria10", "Stratix10").
+    pub family: String,
+    /// Adaptive logic modules available.
+    pub alms: u64,
+    /// DSP blocks available.
+    pub dsps: u64,
+    /// M20K BRAM blocks available.
+    pub m20ks: u64,
+    /// Achievable pipeline clock (Hz).
+    pub fmax: f64,
+    /// Host<->device PCIe bandwidth (bytes/s).
+    pub pcie_bytes_per_sec: f64,
+    /// Calibration scale on the modeled clock (1.0 = uncalibrated).
+    pub scale: f64,
+}
+
+/// The profile registry: every device generation the estimator knows
+/// about, plus which GPU and FPGA are *active* (present in the
+/// verification environment). Loadable via `--device-profile`; the
+/// built-in registry reproduces the paper's hardware plus newer
+/// generations so mixed-fleet placement has something to choose between.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileRegistry {
+    /// The all-CPU baseline host.
+    pub cpu: CpuProfile,
+    /// Known GPU generations.
+    pub gpus: Vec<GpuProfile>,
+    /// Known FPGA families.
+    pub fpgas: Vec<FpgaProfile>,
+    /// Name of the GPU actually behind the measured PJRT path.
+    pub active_gpu: String,
+    /// Name of the FPGA actually behind the modeled HLS path.
+    pub active_fpga: String,
+}
+
+impl ProfileRegistry {
+    /// Built-in registry: the paper's measurement hardware active (GTX
+    /// 1050 Ti + Arria10 PAC), with newer generations registered for
+    /// heterogeneous placement.
+    pub fn builtin() -> ProfileRegistry {
+        ProfileRegistry {
+            cpu: CpuProfile {
+                name: "Xeon-class host".to_string(),
+                cores: 8,
+                clock_hz: 2.4e9,
+                flops_per_cycle: 4.0,
+                mem_bw_bytes_per_sec: 40.0e9,
+                scale: 1.0,
+            },
+            gpus: vec![
+                GpuProfile {
+                    name: "GeForce GTX 1050 Ti".to_string(),
+                    generation: "Pascal".to_string(),
+                    compute_units: 6,
+                    cores_per_unit: 128,
+                    clock_hz: 1.39e9,
+                    shared_mem_bytes: 48 * 1024,
+                    mem_bw_bytes_per_sec: 112.0e9,
+                    pcie_bytes_per_sec: 6.0e9,
+                    launch_latency_secs: 10.0e-6,
+                    scale: 1.0,
+                },
+                GpuProfile {
+                    name: "Tesla V100".to_string(),
+                    generation: "Volta".to_string(),
+                    compute_units: 80,
+                    cores_per_unit: 64,
+                    clock_hz: 1.53e9,
+                    shared_mem_bytes: 96 * 1024,
+                    mem_bw_bytes_per_sec: 900.0e9,
+                    pcie_bytes_per_sec: 12.0e9,
+                    launch_latency_secs: 8.0e-6,
+                    scale: 1.0,
+                },
+                GpuProfile {
+                    name: "GeForce RTX 3080".to_string(),
+                    generation: "Ampere".to_string(),
+                    compute_units: 68,
+                    cores_per_unit: 128,
+                    clock_hz: 1.71e9,
+                    shared_mem_bytes: 128 * 1024,
+                    mem_bw_bytes_per_sec: 760.0e9,
+                    pcie_bytes_per_sec: 12.0e9,
+                    launch_latency_secs: 6.0e-6,
+                    scale: 1.0,
+                },
+            ],
+            fpgas: vec![
+                FpgaProfile {
+                    name: "Intel Arria10 GX 1150".to_string(),
+                    family: "Arria10".to_string(),
+                    alms: 427_200,
+                    dsps: 1_518,
+                    m20ks: 2_713,
+                    fmax: 240.0e6,
+                    pcie_bytes_per_sec: 6.0e9,
+                    scale: 1.0,
+                },
+                FpgaProfile {
+                    name: "Intel Stratix10 GX 2800".to_string(),
+                    family: "Stratix10".to_string(),
+                    alms: 933_120,
+                    dsps: 5_760,
+                    m20ks: 11_721,
+                    fmax: 300.0e6,
+                    pcie_bytes_per_sec: 12.0e9,
+                    scale: 1.0,
+                },
+            ],
+            active_gpu: "GeForce GTX 1050 Ti".to_string(),
+            active_fpga: "Intel Arria10 GX 1150".to_string(),
+        }
+    }
+
+    /// The active GPU profile (the one the measured PJRT path stands for).
+    pub fn gpu(&self) -> Result<&GpuProfile> {
+        self.gpus
+            .iter()
+            .find(|g| g.name == self.active_gpu)
+            .with_context(|| format!("active_gpu {:?} is not a registered profile", self.active_gpu))
+    }
+
+    /// The active FPGA profile (the one the modeled HLS path stands for).
+    pub fn fpga(&self) -> Result<&FpgaProfile> {
+        self.fpgas.iter().find(|f| f.name == self.active_fpga).with_context(|| {
+            format!("active_fpga {:?} is not a registered profile", self.active_fpga)
+        })
+    }
+
+    /// Every figure finite and positive, profile names unique, and both
+    /// actives resolving to registered entries.
+    pub fn validate(&self) -> Result<()> {
+        let pos = |v: f64, what: &str, name: &str| -> Result<()> {
+            if !v.is_finite() || v <= 0.0 {
+                bail!("device profile {name:?}: {what} must be finite and positive, got {v}");
+            }
+            Ok(())
+        };
+        let c = &self.cpu;
+        pos(c.clock_hz, "clock_hz", &c.name)?;
+        pos(c.flops_per_cycle, "flops_per_cycle", &c.name)?;
+        pos(c.mem_bw_bytes_per_sec, "mem_bw_bytes_per_sec", &c.name)?;
+        pos(c.scale, "scale", &c.name)?;
+        if c.cores == 0 {
+            bail!("device profile {:?}: cores must be positive", c.name);
+        }
+        if self.gpus.is_empty() || self.fpgas.is_empty() {
+            bail!("device profile registry needs at least one GPU and one FPGA entry");
+        }
+        for g in &self.gpus {
+            pos(g.clock_hz, "clock_hz", &g.name)?;
+            pos(g.mem_bw_bytes_per_sec, "mem_bw_bytes_per_sec", &g.name)?;
+            pos(g.pcie_bytes_per_sec, "pcie_bytes_per_sec", &g.name)?;
+            pos(g.scale, "scale", &g.name)?;
+            if g.compute_units == 0 || g.cores_per_unit == 0 || g.shared_mem_bytes == 0 {
+                bail!("device profile {:?}: zero-sized compute/shared-memory figures", g.name);
+            }
+            if !g.launch_latency_secs.is_finite() || g.launch_latency_secs < 0.0 {
+                bail!("device profile {:?}: launch latency must be non-negative", g.name);
+            }
+        }
+        for f in &self.fpgas {
+            pos(f.fmax, "fmax", &f.name)?;
+            pos(f.pcie_bytes_per_sec, "pcie_bytes_per_sec", &f.name)?;
+            pos(f.scale, "scale", &f.name)?;
+            if f.alms == 0 || f.dsps == 0 || f.m20ks == 0 {
+                bail!("device profile {:?}: zero-sized resource envelope", f.name);
+            }
+        }
+        let mut names: Vec<&str> = self
+            .gpus
+            .iter()
+            .map(|g| g.name.as_str())
+            .chain(self.fpgas.iter().map(|f| f.name.as_str()))
+            .collect();
+        names.sort_unstable();
+        if names.windows(2).any(|w| w[0] == w[1]) {
+            bail!("device profile names must be unique");
+        }
+        self.gpu()?;
+        self.fpga()?;
+        Ok(())
+    }
+
+    /// Stable digest blob for the cache fingerprints: every figure of
+    /// every profile plus the active selections, in fixed order.
+    pub fn fingerprint_blob(&self) -> String {
+        let c = &self.cpu;
+        let mut out = format!(
+            "cpu:{}/{}/{}/{}/{}/{}",
+            c.name, c.cores, c.clock_hz, c.flops_per_cycle, c.mem_bw_bytes_per_sec, c.scale
+        );
+        for g in &self.gpus {
+            out.push_str(&format!(
+                "|gpu:{}/{}/{}/{}/{}/{}/{}/{}/{}/{}",
+                g.name,
+                g.generation,
+                g.compute_units,
+                g.cores_per_unit,
+                g.clock_hz,
+                g.shared_mem_bytes,
+                g.mem_bw_bytes_per_sec,
+                g.pcie_bytes_per_sec,
+                g.launch_latency_secs,
+                g.scale
+            ));
+        }
+        for f in &self.fpgas {
+            out.push_str(&format!(
+                "|fpga:{}/{}/{}/{}/{}/{}/{}/{}",
+                f.name, f.family, f.alms, f.dsps, f.m20ks, f.fmax, f.pcie_bytes_per_sec, f.scale
+            ));
+        }
+        out.push_str(&format!("|active:{}/{}", self.active_gpu, self.active_fpga));
+        out
+    }
+
+    /// Load a registry from a `--device-profile` JSON file and validate it.
+    pub fn load(path: &Path) -> Result<ProfileRegistry> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading --device-profile {}", path.display()))?;
+        let reg = Self::from_json_str(&text)
+            .with_context(|| format!("parsing --device-profile {}", path.display()))?;
+        reg.validate()?;
+        Ok(reg)
+    }
+
+    /// Canonical pretty JSON of the registry (the `--device-profile`
+    /// on-disk format; also what `fbo calibrate` emits back).
+    pub fn to_json_string(&self) -> String {
+        json::to_string_pretty(&registry_to_json(self))
+    }
+
+    /// Inverse of [`ProfileRegistry::to_json_string`].
+    pub fn from_json_str(s: &str) -> Result<ProfileRegistry> {
+        registry_from_json(&json::parse(s)?)
+    }
+}
+
+// ----------------------------------------------------------- JSON codec
+
+fn cpu_to_json(c: &CpuProfile) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&c.name)),
+        ("cores", Json::num(c.cores as f64)),
+        ("clock_hz", Json::num(c.clock_hz)),
+        ("flops_per_cycle", Json::num(c.flops_per_cycle)),
+        ("mem_bw_bytes_per_sec", Json::num(c.mem_bw_bytes_per_sec)),
+        ("scale", Json::num(c.scale)),
+    ])
+}
+
+fn cpu_from_json(v: &Json) -> Result<CpuProfile> {
+    Ok(CpuProfile {
+        name: v.get("name")?.as_str()?.to_string(),
+        cores: v.get("cores")?.as_f64()? as u64,
+        clock_hz: v.get("clock_hz")?.as_f64()?,
+        flops_per_cycle: v.get("flops_per_cycle")?.as_f64()?,
+        mem_bw_bytes_per_sec: v.get("mem_bw_bytes_per_sec")?.as_f64()?,
+        scale: v.get("scale")?.as_f64()?,
+    })
+}
+
+fn gpu_to_json(g: &GpuProfile) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&g.name)),
+        ("generation", Json::str(&g.generation)),
+        ("compute_units", Json::num(g.compute_units as f64)),
+        ("cores_per_unit", Json::num(g.cores_per_unit as f64)),
+        ("clock_hz", Json::num(g.clock_hz)),
+        ("shared_mem_bytes", Json::num(g.shared_mem_bytes as f64)),
+        ("mem_bw_bytes_per_sec", Json::num(g.mem_bw_bytes_per_sec)),
+        ("pcie_bytes_per_sec", Json::num(g.pcie_bytes_per_sec)),
+        ("launch_latency_secs", Json::num(g.launch_latency_secs)),
+        ("scale", Json::num(g.scale)),
+    ])
+}
+
+fn gpu_from_json(v: &Json) -> Result<GpuProfile> {
+    Ok(GpuProfile {
+        name: v.get("name")?.as_str()?.to_string(),
+        generation: v.get("generation")?.as_str()?.to_string(),
+        compute_units: v.get("compute_units")?.as_f64()? as u64,
+        cores_per_unit: v.get("cores_per_unit")?.as_f64()? as u64,
+        clock_hz: v.get("clock_hz")?.as_f64()?,
+        shared_mem_bytes: v.get("shared_mem_bytes")?.as_f64()? as u64,
+        mem_bw_bytes_per_sec: v.get("mem_bw_bytes_per_sec")?.as_f64()?,
+        pcie_bytes_per_sec: v.get("pcie_bytes_per_sec")?.as_f64()?,
+        launch_latency_secs: v.get("launch_latency_secs")?.as_f64()?,
+        scale: v.get("scale")?.as_f64()?,
+    })
+}
+
+fn fpga_to_json(f: &FpgaProfile) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&f.name)),
+        ("family", Json::str(&f.family)),
+        ("alms", Json::num(f.alms as f64)),
+        ("dsps", Json::num(f.dsps as f64)),
+        ("m20ks", Json::num(f.m20ks as f64)),
+        ("fmax", Json::num(f.fmax)),
+        ("pcie_bytes_per_sec", Json::num(f.pcie_bytes_per_sec)),
+        ("scale", Json::num(f.scale)),
+    ])
+}
+
+fn fpga_from_json(v: &Json) -> Result<FpgaProfile> {
+    Ok(FpgaProfile {
+        name: v.get("name")?.as_str()?.to_string(),
+        family: v.get("family")?.as_str()?.to_string(),
+        alms: v.get("alms")?.as_f64()? as u64,
+        dsps: v.get("dsps")?.as_f64()? as u64,
+        m20ks: v.get("m20ks")?.as_f64()? as u64,
+        fmax: v.get("fmax")?.as_f64()?,
+        pcie_bytes_per_sec: v.get("pcie_bytes_per_sec")?.as_f64()?,
+        scale: v.get("scale")?.as_f64()?,
+    })
+}
+
+/// Serialize a registry (stage artifacts and the `--device-profile` file).
+pub fn registry_to_json(r: &ProfileRegistry) -> Json {
+    Json::obj(vec![
+        ("format", Json::str("fbo-device-profiles-v1")),
+        ("cpu", cpu_to_json(&r.cpu)),
+        ("gpus", Json::Arr(r.gpus.iter().map(gpu_to_json).collect())),
+        ("fpgas", Json::Arr(r.fpgas.iter().map(fpga_to_json).collect())),
+        ("active_gpu", Json::str(&r.active_gpu)),
+        ("active_fpga", Json::str(&r.active_fpga)),
+    ])
+}
+
+/// Inverse of [`registry_to_json`].
+pub fn registry_from_json(v: &Json) -> Result<ProfileRegistry> {
+    let format = v.get("format")?.as_str()?;
+    if format != "fbo-device-profiles-v1" {
+        bail!("unsupported device-profile format {format:?} (want fbo-device-profiles-v1)");
+    }
+    Ok(ProfileRegistry {
+        cpu: cpu_from_json(v.get("cpu")?)?,
+        gpus: v.get("gpus")?.as_arr()?.iter().map(gpu_from_json).collect::<Result<_>>()?,
+        fpgas: v.get("fpgas")?.as_arr()?.iter().map(fpga_from_json).collect::<Result<_>>()?,
+        active_gpu: v.get("active_gpu")?.as_str()?.to_string(),
+        active_fpga: v.get("active_fpga")?.as_str()?.to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_registry_validates_and_matches_the_papers_hardware() {
+        let r = ProfileRegistry::builtin();
+        r.validate().unwrap();
+        assert_eq!(r.gpu().unwrap().generation, "Pascal");
+        assert_eq!(r.fpga().unwrap().family, "Arria10");
+        // The active FPGA mirrors the arbitration's device model.
+        let f = r.fpga().unwrap();
+        assert_eq!(
+            (f.alms, f.dsps, f.m20ks),
+            (crate::fpga::ARRIA10_GX.alms, crate::fpga::ARRIA10_GX.dsps, crate::fpga::ARRIA10_GX.m20ks)
+        );
+        assert_eq!(f.fmax, crate::fpga::ARRIA10_GX.fmax);
+        assert!(r.gpus.len() >= 3 && r.fpgas.len() >= 2, "several generations");
+    }
+
+    #[test]
+    fn validation_rejects_broken_registries() {
+        let mut r = ProfileRegistry::builtin();
+        r.active_gpu = "missing".into();
+        assert!(r.validate().is_err());
+
+        let mut r = ProfileRegistry::builtin();
+        r.gpus[0].clock_hz = 0.0;
+        assert!(r.validate().is_err());
+
+        let mut r = ProfileRegistry::builtin();
+        r.fpgas[1].name = r.fpgas[0].name.clone();
+        assert!(r.validate().is_err(), "duplicate names");
+
+        let mut r = ProfileRegistry::builtin();
+        r.cpu.scale = f64::NAN;
+        assert!(r.validate().is_err());
+    }
+
+    #[test]
+    fn fingerprint_blob_tracks_every_figure() {
+        let base = ProfileRegistry::builtin().fingerprint_blob();
+        assert_eq!(ProfileRegistry::builtin().fingerprint_blob(), base, "deterministic");
+
+        let mut r = ProfileRegistry::builtin();
+        r.gpus[1].mem_bw_bytes_per_sec += 1.0;
+        assert_ne!(r.fingerprint_blob(), base);
+
+        let mut r = ProfileRegistry::builtin();
+        r.active_gpu = "Tesla V100".into();
+        assert_ne!(r.fingerprint_blob(), base);
+
+        let mut r = ProfileRegistry::builtin();
+        r.fpgas[0].scale = 1.25;
+        assert_ne!(r.fingerprint_blob(), base, "calibration is fingerprinted");
+    }
+
+    #[test]
+    fn registry_codec_round_trips_byte_stable() {
+        let r = ProfileRegistry::builtin();
+        let s = r.to_json_string();
+        let back = ProfileRegistry::from_json_str(&s).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(back.to_json_string(), s, "byte-stable");
+        assert!(ProfileRegistry::from_json_str("{\"format\": \"nope\"}").is_err());
+    }
+
+    #[test]
+    fn peak_flops_orders_the_generations() {
+        let r = ProfileRegistry::builtin();
+        let pascal = r.gpus[0].peak_flops();
+        let volta = r.gpus[1].peak_flops();
+        assert!(volta > pascal, "newer generation must model faster");
+        assert!(r.cpu.peak_flops() < pascal, "GPU ceiling above host");
+    }
+}

@@ -21,6 +21,7 @@ use anyhow::{bail, Result};
 use crate::coordinator::backend::{
     ArbitrationOutcome, Backend, BackendPolicy, BlockArbitration, DeviceModel, FpgaEstimate,
 };
+use crate::coordinator::estimate;
 use crate::coordinator::power;
 use crate::coordinator::verify::{DeviceTraffic, PatternResult, SearchOutcome};
 use crate::coordinator::{DiscoveredBlock, DiscoveryPath, OffloadReport};
@@ -48,6 +49,17 @@ pub const REPORT_FORMAT: &str = "fbo-offload-report-v2";
 /// canonical bytes.
 pub const REPORT_FORMAT_V3: &str = "fbo-offload-report-v3";
 
+/// Format tag of a report whose search was shaped by a non-default
+/// analytic-estimator configuration (`--prune-policy` / a custom
+/// `--device-profile` registry): the arbitration section additionally
+/// carries the `estimate` residue (per-block predicted-vs-measured error
+/// and the estimator MAPE). v4 documents **must** carry that section and
+/// earlier formats must not; the power residue remains optional inside a
+/// v4 document (a pruned search may or may not also weigh power).
+/// Default-configuration reports keep emitting v2/v3 bytes, so every
+/// cached pre-estimator decision replays byte-identically.
+pub const REPORT_FORMAT_V4: &str = "fbo-offload-report-v4";
+
 /// The previous report format: no `backend`/`arbitration` sections and no
 /// per-pattern device traffic. v1 reports still **decode** (the archived
 /// decisions of pre-arbitration deployments stay readable): traffic reads
@@ -59,11 +71,17 @@ pub const REPORT_FORMAT_V3: &str = "fbo-offload-report-v3";
 /// replay.
 pub const REPORT_FORMAT_V1: &str = "fbo-offload-report-v1";
 
-/// Serialize a report to the canonical JSON value (v2, or v3 when the
-/// arbitration carries a power residue — see [`REPORT_FORMAT_V3`]).
+/// Serialize a report to the canonical JSON value (v2; v3 when the
+/// arbitration carries a power residue; v4 when it carries an estimate
+/// residue — see [`REPORT_FORMAT_V3`] / [`REPORT_FORMAT_V4`]).
 pub fn report_to_json(r: &OffloadReport) -> Json {
-    let format =
-        if r.arbitration.power.is_some() { REPORT_FORMAT_V3 } else { REPORT_FORMAT };
+    let format = if r.arbitration.estimate.is_some() {
+        REPORT_FORMAT_V4
+    } else if r.arbitration.power.is_some() {
+        REPORT_FORMAT_V3
+    } else {
+        REPORT_FORMAT
+    };
     Json::obj(vec![
         ("format", Json::str(format)),
         ("entry", Json::str(&r.entry)),
@@ -87,17 +105,19 @@ pub fn report_to_string(r: &OffloadReport) -> String {
     json::to_string_pretty(&report_to_json(r))
 }
 
-/// Deserialize a report from a JSON value (v3, v2, or v1 upgraded on the
-/// fly — see [`REPORT_FORMAT_V1`]).
+/// Deserialize a report from a JSON value (v4, v3, v2, or v1 upgraded on
+/// the fly — see [`REPORT_FORMAT_V1`]).
 pub fn report_from_json(v: &Json) -> Result<OffloadReport> {
     let format = v.get("format")?.as_str()?;
-    let (v1, v3) = match format {
-        REPORT_FORMAT => (false, false),
-        REPORT_FORMAT_V3 => (false, true),
-        REPORT_FORMAT_V1 => (true, false),
+    let (v1, v3, v4) = match format {
+        REPORT_FORMAT => (false, false, false),
+        REPORT_FORMAT_V3 => (false, true, false),
+        REPORT_FORMAT_V4 => (false, false, true),
+        REPORT_FORMAT_V1 => (true, false, false),
         other => bail!(
             "unsupported offload-report format {other:?} \
-             (want {REPORT_FORMAT_V3:?}, {REPORT_FORMAT:?}, or {REPORT_FORMAT_V1:?})"
+             (want {REPORT_FORMAT_V4:?}, {REPORT_FORMAT_V3:?}, {REPORT_FORMAT:?}, \
+             or {REPORT_FORMAT_V1:?})"
         ),
     };
     let outcome = outcome_from_json(v.get("outcome")?, v1)?;
@@ -106,8 +126,16 @@ pub fn report_from_json(v: &Json) -> Result<OffloadReport> {
     } else {
         let arbitration = arbitration_from_json(v.get("arbitration")?)?;
         // Tag ↔ payload agreement keeps the canonical re-encode stable:
-        // a decoded report always serializes back to its own format.
-        if arbitration.power.is_some() != v3 {
+        // a decoded report always serializes back to its own format. The
+        // estimate residue is exactly the v4 marker; the power residue is
+        // mandatory for v3 and free to appear inside v4.
+        if arbitration.estimate.is_some() != v4 {
+            bail!(
+                "corrupt report: format {format:?} disagrees with the presence \
+                 of the arbitration estimate section"
+            );
+        }
+        if !v4 && arbitration.power.is_some() != v3 {
             bail!(
                 "corrupt report: format {format:?} disagrees with the presence \
                  of the arbitration power section"
@@ -170,6 +198,7 @@ fn v1_arbitration(outcome: &SearchOutcome) -> ArbitrationOutcome {
         gpu_request_secs: offloads.then(|| outcome.best_time.secs()),
         fpga_request_secs: None,
         power: None,
+        estimate: None,
     }
 }
 
@@ -485,6 +514,11 @@ pub(crate) fn arbitration_to_json(a: &ArbitrationOutcome) -> Json {
     if let Some(p) = &a.power {
         pairs.push(("power", power::decision_to_json(p)));
     }
+    // Likewise the estimate residue exists only under a non-default
+    // estimator configuration (the v4 marker).
+    if let Some(e) = &a.estimate {
+        pairs.push(("estimate", estimate::decision_to_json(e)));
+    }
     Json::obj(pairs)
 }
 
@@ -503,6 +537,7 @@ pub(crate) fn arbitration_from_json(v: &Json) -> Result<ArbitrationOutcome> {
         gpu_request_secs: opt_num_from_json(v, "gpu_request_secs")?,
         fpga_request_secs: opt_num_from_json(v, "fpga_request_secs")?,
         power: v.opt("power").map(power::decision_from_json).transpose()?,
+        estimate: v.opt("estimate").map(estimate::decision_from_json).transpose()?,
     })
 }
 
@@ -660,6 +695,7 @@ mod tests {
                 gpu_request_secs: Some(1.2e-4),
                 fpga_request_secs: Some(8.75e-5),
                 power: None,
+                estimate: None,
             },
             transformed_source: "#include <math.h>\nint main() {\n    return 0;\n}\n".into(),
             search_wall: Duration::from_millis(47),
@@ -765,6 +801,71 @@ mod tests {
         assert!(report_from_str(&tag_without_power).is_err());
         let power_without_tag = text.replace(REPORT_FORMAT_V3, REPORT_FORMAT);
         assert!(report_from_str(&power_without_tag).is_err());
+    }
+
+    #[test]
+    fn estimate_residue_upgrades_the_report_to_v4() {
+        use crate::coordinator::estimate::{BlockPrediction, EstimateDecision, PrunePolicy};
+
+        // The default report carries no estimate section at all.
+        let plain = sample_report();
+        let plain_text = report_to_string(&plain);
+        assert!(!plain_text.contains("\"estimate\""), "{plain_text}");
+
+        // A non-default estimator configuration lifts the format to v4
+        // and records per-block predicted-vs-measured error; the codec
+        // stays byte-stable.
+        let mut estimated = sample_report();
+        estimated.arbitration.estimate = Some(EstimateDecision {
+            policy: PrunePolicy::Conservative(0.5),
+            gpu_profile: "gtx-1050-ti".into(),
+            fpga_profile: "arria10-gx-1150".into(),
+            mape: Some(0.35),
+            blocks: vec![
+                BlockPrediction {
+                    label: "call:fft2d".into(),
+                    backend: Backend::Gpu,
+                    predicted_secs: 1.5e-4,
+                    measured_secs: Some(1.2e-4),
+                    error: Some(0.25),
+                },
+                BlockPrediction {
+                    label: "func:my_decomp".into(),
+                    backend: Backend::Cpu,
+                    predicted_secs: 2.0e-3,
+                    measured_secs: None,
+                    error: None,
+                },
+            ],
+        });
+        let text = report_to_string(&estimated);
+        assert!(text.contains(REPORT_FORMAT_V4));
+        assert!(text.contains("\"estimate\""));
+        assert!(text.contains("predicted_secs"));
+        let back = report_from_str(&text).unwrap();
+        assert_eq!(back.arbitration, estimated.arbitration);
+        assert_eq!(report_to_string(&back), text, "v4 must be byte-stable");
+
+        // Tag ↔ payload agreement is enforced both ways.
+        let tag_without_estimate = plain_text.replace(REPORT_FORMAT, REPORT_FORMAT_V4);
+        assert!(report_from_str(&tag_without_estimate).is_err());
+        let estimate_without_tag = text.replace(REPORT_FORMAT_V4, REPORT_FORMAT);
+        assert!(report_from_str(&estimate_without_tag).is_err());
+
+        // A v4 report may also carry the power residue: both survive.
+        let mut both = estimated.clone();
+        both.arbitration.power = Some(power::PowerDecision {
+            policy: power::PowerPolicy::PerfPerWatt,
+            gpu_watts: 75.0,
+            fpga_watts: 40.0,
+            blocks: Vec::new(),
+        });
+        let both_text = report_to_string(&both);
+        assert!(both_text.contains(REPORT_FORMAT_V4));
+        assert!(both_text.contains("\"power\""));
+        let both_back = report_from_str(&both_text).unwrap();
+        assert_eq!(both_back.arbitration, both.arbitration);
+        assert_eq!(report_to_string(&both_back), both_text);
     }
 
     #[test]

@@ -202,6 +202,12 @@ pub struct VerifyContext<'a> {
     pub blocks: &'a [PlannedReplacement],
     /// Measurement settings (reps, warmup, fuel, tolerance).
     pub cfg: &'a VerifyConfig,
+    /// Analytic per-block predicted wall seconds (index-aligned with
+    /// `blocks`), for executors that order work by expected cost — the
+    /// fleet scheduler's LPT partitioning. Empty under the default
+    /// estimator configuration: executors must fall back to their own
+    /// cost model, keeping default-path dispatch order unchanged.
+    pub cost_hints: &'a [f64],
 }
 
 /// Runs a batch of *independent* pattern measurements. Implementations
@@ -465,7 +471,8 @@ pub fn search_patterns(
 /// independent batches, have the executor measure them (serially or
 /// fanned out), and reduce deterministically. A baseline failure fails
 /// the search; any other pattern failure is recorded as a failed
-/// [`PatternResult`].
+/// [`PatternResult`]. Measures every planned pattern — the
+/// estimator-aware entry point is [`search_patterns_full`].
 pub fn search_patterns_with(
     prog: &Program,
     entry: &str,
@@ -473,7 +480,29 @@ pub fn search_patterns_with(
     cfg: &VerifyConfig,
     executor: &dyn PatternExecutor,
 ) -> Result<SearchOutcome> {
-    let ctx = VerifyContext { prog, entry, blocks, cfg };
+    search_patterns_full(prog, entry, blocks, cfg, executor, &[], &[])
+}
+
+/// [`search_patterns_with`] plus the analytic estimate's two outputs:
+/// `cost_hints` (per-block predicted seconds, handed to the executor via
+/// [`VerifyContext`] for cost-ordered dispatch) and `pruned` (per-block
+/// mask; `true` withholds the block's phase-1 pattern from measurement
+/// entirely, recording it as a pruned [`PatternResult`] — speedup 0,
+/// incorrect, the analytic verdict folded into the label — so `tried`
+/// stays index-aligned with the block list and a pruned block can never
+/// win or join the combined round). Both slices may be empty (the
+/// `--prune-policy off` default), in which case the search is exactly
+/// [`search_patterns_with`]'s.
+pub fn search_patterns_full(
+    prog: &Program,
+    entry: &str,
+    blocks: &[PlannedReplacement],
+    cfg: &VerifyConfig,
+    executor: &dyn PatternExecutor,
+    cost_hints: &[f64],
+    pruned: &[bool],
+) -> Result<SearchOutcome> {
+    let ctx = VerifyContext { prog, entry, blocks, cfg, cost_hints };
     let plan = VerifyPlan::new(blocks);
     // The baseline ships in the same batch as the phase-1 patterns so a
     // pooled executor can overlap it with them (it is the slowest
@@ -482,13 +511,23 @@ pub fn search_patterns_with(
     // per-block patterns were measured for nothing before the error
     // surfaces below.
     let phase1 = plan.phase1();
-    let mut measured = executor.measure(&ctx, &phase1);
-    if measured.len() != phase1.len() {
+    // Analytically-pruned blocks never reach the executor: their specs
+    // are withheld from the batch (the baseline, index 0, is never
+    // prunable) and resolved synthetically below.
+    let is_pruned = |block: usize| pruned.get(block).copied().unwrap_or(false);
+    let batch: Vec<PatternSpec> = phase1
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i == 0 || !is_pruned(i - 1))
+        .map(|(_, s)| s.clone())
+        .collect();
+    let mut measured = executor.measure(&ctx, &batch);
+    if measured.len() != batch.len() {
         bail!(
             "{} executor returned {} results for {} planned patterns",
             executor.name(),
             measured.len(),
-            phase1.len()
+            batch.len()
         );
     }
     let base = measured
@@ -497,11 +536,23 @@ pub fn search_patterns_with(
     let baseline = base.time.clone();
     let base_probe = base.probe.clone();
 
-    let mut tried: Vec<PatternResult> = phase1[1..]
-        .iter()
-        .zip(measured)
-        .map(|(spec, res)| plan.resolve(spec, res, &baseline, &base_probe, cfg.tolerance))
-        .collect();
+    let mut results = measured.into_iter();
+    let mut tried: Vec<PatternResult> = Vec::with_capacity(phase1.len() - 1);
+    for (block, spec) in phase1[1..].iter().enumerate() {
+        if is_pruned(block) {
+            tried.push(PatternResult {
+                enabled: spec.enabled.clone(),
+                label: format!("{} [pruned by estimate]", spec.label),
+                time: baseline.clone(),
+                speedup: 0.0,
+                output_ok: false,
+                traffic: DeviceTraffic::default(),
+            });
+        } else {
+            let res = results.next().expect("batch is aligned with the unpruned specs");
+            tried.push(plan.resolve(spec, res, &baseline, &base_probe, cfg.tolerance));
+        }
+    }
 
     if let Some(combined) = plan.phase2(&tried) {
         let res = executor
@@ -763,6 +814,71 @@ mod tests {
         assert!((out.best_speedup - 1.0).abs() < 1e-9);
         // The executor saw exactly one batch: the baseline alone.
         assert_eq!(*s.calls.borrow(), vec![vec!["all-CPU".to_string()]]);
+    }
+
+    #[test]
+    fn pruned_blocks_are_never_measured_and_never_win() {
+        // blk1 is pruned: it is never scripted, so reaching the executor
+        // would panic — the assertion on `calls` shows it never did.
+        let s = Scripted::new(&[("all-CPU", 100), ("only:call:blk0", 50)], &[], false);
+        let prog = crate::parser::parse("int main() { return 0; }").unwrap();
+        let blocks = fake_blocks(2);
+        let out = search_patterns_full(
+            &prog,
+            "main",
+            &blocks,
+            &VerifyConfig::default(),
+            &s,
+            &[0.05, 0.2],
+            &[false, true],
+        )
+        .unwrap();
+        assert_eq!(
+            *s.calls.borrow(),
+            vec![vec!["all-CPU".to_string(), "only:call:blk0".to_string()]]
+        );
+        assert_eq!(out.tried.len(), 2, "pruned block still recorded");
+        assert_eq!(out.tried[1].label, "only:call:blk1 [pruned by estimate]");
+        assert_eq!(out.tried[1].speedup, 0.0);
+        assert!(!out.tried[1].output_ok);
+        assert_eq!(out.tried[1].enabled, vec![false, true]);
+        assert_eq!(out.best_enabled, vec![true, false]);
+    }
+
+    #[test]
+    fn empty_hints_and_mask_reproduce_the_plain_search() {
+        let script: [(&str, u64); 4] = [
+            ("all-CPU", 100),
+            ("only:call:blk0", 50),
+            ("only:call:blk1", 60),
+            ("combined-winners", 30),
+        ];
+        let prog = crate::parser::parse("int main() { return 0; }").unwrap();
+        let blocks = fake_blocks(2);
+        let plain = search_patterns_with(
+            &prog,
+            "main",
+            &blocks,
+            &VerifyConfig::default(),
+            &Scripted::new(&script, &[], false),
+        )
+        .unwrap();
+        let full = search_patterns_full(
+            &prog,
+            "main",
+            &blocks,
+            &VerifyConfig::default(),
+            &Scripted::new(&script, &[], false),
+            &[],
+            &[],
+        )
+        .unwrap();
+        assert_eq!(plain.best_enabled, full.best_enabled);
+        assert_eq!(
+            plain.tried.iter().map(|p| &p.label).collect::<Vec<_>>(),
+            full.tried.iter().map(|p| &p.label).collect::<Vec<_>>()
+        );
+        assert_eq!(plain.best_time.median, full.best_time.median);
     }
 
     #[test]

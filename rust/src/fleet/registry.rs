@@ -6,8 +6,10 @@
 //! worker death and slowness surface as channel events the scheduler can
 //! act on — re-deal, retry, or fall back — without any transport
 //! knowledge. A worker that breaks its connection (EOF, garbage frame,
-//! short result) is marked dead and never dealt to again; the rest of
-//! the registry is unaffected.
+//! short result) is marked dead and never dealt to again — though a dead
+//! **TCP** endpoint gets a bounded number of backoff-gated re-dials on
+//! later batch deals ([`FleetRegistry::reconnect_dead`]); the rest of
+//! the registry is unaffected either way.
 //!
 //! Endpoints come in two transports sharing one codec:
 //!
@@ -20,7 +22,7 @@
 //! and only then does the connection thread exit (and a spawned child
 //! get reaped).
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::process::{Child, Command, Stdio};
@@ -31,11 +33,23 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::patterndb::json::fnv1a64;
+
 use super::wire::{read_frame, write_frame, Capabilities, Frame, WireBatch, WireOutcome, PROTOCOL};
+use super::Backoff;
 
 /// How long a TCP connect / hello handshake may take before the endpoint
 /// is rejected at registry construction.
 const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Re-dials a dead TCP endpoint gets (per death episode) before the
+/// registry gives up on the slot for good. A successful reconnection
+/// resets the budget.
+const MAX_RECONNECT_ATTEMPTS: u32 = 3;
+
+/// Backoff envelope between reconnection attempts to one endpoint.
+const RECONNECT_BACKOFF_BASE: Duration = Duration::from_millis(100);
+const RECONNECT_BACKOFF_CAP: Duration = Duration::from_secs(2);
 
 /// One parsed `--fleet` endpoint.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -112,9 +126,16 @@ pub(crate) enum WorkerCmd {
 pub struct FleetWorker {
     name: String,
     caps: Capabilities,
+    endpoint: FleetEndpoint,
     alive: Arc<AtomicBool>,
     busy: Arc<AtomicBool>,
-    tx: mpsc::Sender<WorkerCmd>,
+    /// Swapped for a fresh channel when a dead endpoint reconnects.
+    tx: RefCell<mpsc::Sender<WorkerCmd>>,
+    /// Re-dials spent on the current death episode.
+    reconnects: Cell<u32>,
+    /// Delay generator between re-dials, seeded per worker name so a
+    /// fleet of schedulers does not re-dial a shared box in lockstep.
+    backoff: RefCell<Backoff>,
 }
 
 impl FleetWorker {
@@ -151,7 +172,7 @@ impl FleetWorker {
     ) -> mpsc::Receiver<Result<Vec<WireOutcome>>> {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.busy.store(true, Ordering::Relaxed);
-        if self.tx.send(WorkerCmd::Batch { id, batch, reply: reply_tx }).is_err() {
+        if self.tx.borrow().send(WorkerCmd::Batch { id, batch, reply: reply_tx }).is_err() {
             // The connection thread is gone; the dropped sender makes the
             // receiver report Disconnected, which the scheduler treats as
             // worker death.
@@ -159,6 +180,29 @@ impl FleetWorker {
         }
         reply_rx
     }
+
+    /// A disconnected stand-in for scheduler unit tests: carries a name
+    /// and capabilities but no live transport (dispatching would surface
+    /// as worker death, exactly like a real dead worker).
+    #[cfg(test)]
+    pub(crate) fn stub(name: &str, caps: Capabilities) -> FleetWorker {
+        let (tx, _rx) = mpsc::channel();
+        FleetWorker {
+            name: name.to_string(),
+            caps,
+            endpoint: FleetEndpoint::Tcp(format!("{name}:0")),
+            alive: Arc::new(AtomicBool::new(true)),
+            busy: Arc::new(AtomicBool::new(false)),
+            tx: RefCell::new(tx),
+            reconnects: Cell::new(0),
+            backoff: RefCell::new(reconnect_backoff(name)),
+        }
+    }
+}
+
+/// The per-worker reconnection backoff, seeded on the worker name.
+fn reconnect_backoff(name: &str) -> Backoff {
+    Backoff::new(RECONNECT_BACKOFF_BASE, RECONNECT_BACKOFF_CAP, fnv1a64(name.as_bytes()))
 }
 
 /// The connection thread's end of one worker link.
@@ -179,7 +223,10 @@ struct Link {
 pub struct FleetRegistry {
     workers: Vec<FleetWorker>,
     rejected: Vec<String>,
-    threads: Vec<JoinHandle<()>>,
+    /// Connection threads, including exited ones for dead workers; a
+    /// reconnection pushes a fresh thread (hence the `RefCell` — revival
+    /// happens through the scheduler's shared reference).
+    threads: RefCell<Vec<JoinHandle<()>>>,
     next_batch: Cell<u64>,
 }
 
@@ -194,7 +241,7 @@ impl FleetRegistry {
         let mut reg = FleetRegistry {
             workers: Vec::new(),
             rejected: Vec::new(),
-            threads: Vec::new(),
+            threads: RefCell::new(Vec::new()),
             next_batch: Cell::new(0),
         };
         for (i, ep) in endpoints.iter().enumerate() {
@@ -211,8 +258,18 @@ impl FleetRegistry {
                         .spawn(move || link_main(link, rx, thread_alive, thread_busy))
                     {
                         Ok(handle) => {
-                            reg.threads.push(handle);
-                            reg.workers.push(FleetWorker { name, caps, alive, busy, tx });
+                            reg.threads.borrow_mut().push(handle);
+                            let backoff = RefCell::new(reconnect_backoff(&name));
+                            reg.workers.push(FleetWorker {
+                                name,
+                                caps,
+                                endpoint: ep.clone(),
+                                alive,
+                                busy,
+                                tx: RefCell::new(tx),
+                                reconnects: Cell::new(0),
+                                backoff,
+                            });
                         }
                         Err(e) => reg.rejected.push(format!("{name}: spawning link thread: {e}")),
                     }
@@ -221,6 +278,66 @@ impl FleetRegistry {
             }
         }
         reg
+    }
+
+    /// Re-dial every dead TCP worker whose reconnection budget is not
+    /// exhausted, sleeping the worker's jittered exponential backoff
+    /// before each dial. A revived worker keeps its slot (same name, same
+    /// announced capabilities — a box that comes back with *different*
+    /// capabilities is a different worker and is turned away); success
+    /// resets its budget and backoff for the next death episode. Stdio
+    /// workers are never revived — their child exited, and respawning is
+    /// the operator's call. `observe` sees every attempt as
+    /// `(worker, attempt, delay_ms, ok)`. Returns how many came back.
+    pub fn reconnect_dead(&self, mut observe: impl FnMut(&str, u64, u64, bool)) -> usize {
+        let mut revived = 0;
+        for w in &self.workers {
+            if w.is_alive()
+                || !matches!(w.endpoint, FleetEndpoint::Tcp(_))
+                || w.reconnects.get() >= MAX_RECONNECT_ATTEMPTS
+            {
+                continue;
+            }
+            let delay = w.backoff.borrow_mut().next_delay();
+            std::thread::sleep(delay);
+            let attempt = u64::from(w.reconnects.get()) + 1;
+            w.reconnects.set(w.reconnects.get() + 1);
+            let ok = match handshake(&w.endpoint) {
+                Ok((link, caps)) if caps == w.caps => {
+                    let (tx, rx) = mpsc::channel();
+                    let thread_alive = w.alive.clone();
+                    let thread_busy = w.busy.clone();
+                    w.busy.store(false, Ordering::Relaxed);
+                    match std::thread::Builder::new()
+                        .name(format!("{}-r{attempt}", w.name))
+                        .spawn(move || link_main(link, rx, thread_alive, thread_busy))
+                    {
+                        Ok(handle) => {
+                            self.threads.borrow_mut().push(handle);
+                            *w.tx.borrow_mut() = tx;
+                            w.alive.store(true, Ordering::Relaxed);
+                            true
+                        }
+                        Err(_) => false,
+                    }
+                }
+                Ok((mut link, _)) => {
+                    // The endpoint answers but announces different
+                    // capabilities: batches scheduled against the old
+                    // profile would mis-deal, so leave the slot dead.
+                    let _ = write_frame(&mut link.writer, &Frame::Bye);
+                    false
+                }
+                Err(_) => false,
+            };
+            observe(&w.name, attempt, delay.as_millis() as u64, ok);
+            if ok {
+                w.reconnects.set(0);
+                w.backoff.borrow_mut().reset();
+                revived += 1;
+            }
+        }
+        revived
     }
 
     /// Every registered worker, dead ones included (stable order).
@@ -256,9 +373,9 @@ impl FleetRegistry {
     /// threads (and reaps spawned children). Idempotent.
     pub fn drain(&mut self) {
         for w in &self.workers {
-            let _ = w.tx.send(WorkerCmd::Drain);
+            let _ = w.tx.borrow().send(WorkerCmd::Drain);
         }
-        for t in self.threads.drain(..) {
+        for t in self.threads.borrow_mut().drain(..) {
             let _ = t.join();
         }
         for w in &self.workers {

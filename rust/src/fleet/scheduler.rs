@@ -10,7 +10,11 @@
 //! cost (fewer offloaded blocks run longer on the interpreter) land on
 //! the worker with the least accumulated cost, so a 2-worker fleet splits
 //! a phase-1 sweep roughly evenly instead of round-robining the slow
-//! all-CPU-ish patterns onto one box.
+//! all-CPU-ish patterns onto one box. When the estimate stage supplied
+//! per-block cost hints ([`VerifyContext::cost_hints`]), the predicted
+//! device seconds refine that ordering among patterns with the same
+//! interpreter burden; without hints the deal reduces to exactly the
+//! block-count heuristic.
 //!
 //! The failure matrix, in order of detection:
 //!
@@ -19,7 +23,9 @@
 //! * **no capable worker for a pattern** — that pattern measures locally
 //!   in the same round, concurrently with the remote batches;
 //! * **worker death mid-batch** — its patterns re-deal to the survivors
-//!   after a jittered backoff;
+//!   after a jittered backoff, and the dead TCP endpoint is re-dialed on
+//!   the next batch deal (bounded attempts, jittered exponential delay,
+//!   one `fleet-reconnect` trace event per attempt);
 //! * **batch timeout** — the worker is left marked busy (its connection
 //!   thread keeps waiting; a late reply just clears the flag) and the
 //!   batch re-deals elsewhere;
@@ -155,6 +161,23 @@ impl FleetTelemetry {
             )
             .inc();
     }
+
+    fn reconnect(&self, worker: &str, attempt: u64, delay_ms: u64, ok: bool) {
+        self.metrics
+            .counter(
+                "fbo_fleet_reconnects_total",
+                "Fleet worker reconnection attempts by worker and outcome.",
+                &[("worker", worker), ("outcome", if ok { "ok" } else { "error" })],
+            )
+            .inc();
+        let trace = self.trace.get();
+        if trace != 0 {
+            self.recorder.record(
+                trace,
+                TraceEvent::FleetReconnect { worker: worker.to_string(), attempt, delay_ms, ok },
+            );
+        }
+    }
 }
 
 /// A [`PatternExecutor`] that measures over the fleet, falling back to a
@@ -230,6 +253,20 @@ impl PatternExecutor for FleetExecutor {
     ) -> Vec<Result<MeasuredPattern>> {
         let mut results: Vec<Option<Result<MeasuredPattern>>> =
             (0..specs.len()).map(|_| None).collect();
+        // Revive dead TCP endpoints before dealing: each re-dial is
+        // bounded and backoff-gated inside the registry, so a permanently
+        // gone box costs a bounded, spread-out stall and then goes quiet.
+        if self.registry.live_count() < self.registry.workers().len() {
+            self.registry.reconnect_dead(|worker, attempt, delay_ms, ok| {
+                eprintln!(
+                    "fleet: reconnect attempt {attempt} to {worker} after {delay_ms}ms: {}",
+                    if ok { "ok" } else { "failed" }
+                );
+                if let Some(t) = &self.telemetry {
+                    t.reconnect(worker, attempt, delay_ms, ok);
+                }
+            });
+        }
         if self.registry.live_count() == 0 {
             self.measure_local(ctx, specs, &(0..specs.len()).collect::<Vec<_>>(), &mut results);
             return unwrap_all(results);
@@ -252,7 +289,7 @@ impl PatternExecutor for FleetExecutor {
                 self.measure_local(ctx, specs, &pending, &mut results);
                 break;
             }
-            let (deal, local) = deal_round(specs, &pending, &available, ctx.blocks);
+            let (deal, local) = deal_round(specs, &pending, &available, ctx.blocks, ctx.cost_hints);
             let mut inflight = Vec::new();
             for (wi, indices) in deal {
                 let batch = WireBatch {
@@ -365,34 +402,55 @@ fn capable(caps: &Capabilities, need: (bool, bool)) -> bool {
 /// the interpreter costs, so the all-CPU baseline is the most expensive
 /// and the everything-offloaded pattern the cheapest. The absolute scale
 /// is irrelevant — only the ordering feeds the deal.
-fn cost(spec: &PatternSpec, blocks: &[PlannedReplacement]) -> u64 {
-    let enabled = spec.enabled.iter().filter(|&&on| on).count() as u64;
-    blocks.len() as u64 + 1 - enabled.min(blocks.len() as u64)
+///
+/// With estimator `hints` (per-block predicted device wall seconds,
+/// aligned with `blocks`), each offloaded block additionally contributes
+/// its predicted seconds. Interpreter-resident blocks are weighted so
+/// that one always outweighs the entire hint mass — the hints refine the
+/// ordering *within* the same interpreter burden, never against it. With
+/// empty hints this reduces to exactly `disabled + 1`, the pre-estimator
+/// integer formula, so unhinted fleets deal identically to before.
+fn cost(spec: &PatternSpec, blocks: &[PlannedReplacement], hints: &[f64]) -> f64 {
+    let scale: f64 = hints.iter().sum::<f64>() + 1.0;
+    let mut c = scale;
+    for (i, &on) in spec.enabled.iter().enumerate().take(blocks.len()) {
+        if on {
+            c += hints.get(i).copied().unwrap_or(0.0);
+        } else {
+            c += scale;
+        }
+    }
+    c
 }
 
 /// Deal `pending` across `workers` greedily by descending cost (LPT):
 /// each pattern lands on the capable worker with the least accumulated
 /// cost. Patterns with no capable worker land in the local list. Both
-/// the order sort and the tie-breaks are deterministic.
+/// the order sort and the tie-breaks are deterministic: descending cost
+/// with the spec index breaking ties, and the lowest-indexed least-loaded
+/// worker winning each pick.
 fn deal_round(
     specs: &[PatternSpec],
     pending: &[usize],
     workers: &[&FleetWorker],
     blocks: &[PlannedReplacement],
+    hints: &[f64],
 ) -> (Vec<(usize, Vec<usize>)>, Vec<usize>) {
     let mut order: Vec<usize> = pending.to_vec();
-    order.sort_by_key(|&i| (std::cmp::Reverse(cost(&specs[i], blocks)), i));
-    let mut loads: Vec<u64> = vec![0; workers.len()];
+    order.sort_by(|&a, &b| {
+        cost(&specs[b], blocks, hints).total_cmp(&cost(&specs[a], blocks, hints)).then(a.cmp(&b))
+    });
+    let mut loads: Vec<f64> = vec![0.0; workers.len()];
     let mut assigned: Vec<Vec<usize>> = vec![Vec::new(); workers.len()];
     let mut local = Vec::new();
     for i in order {
         let need = needs(&specs[i], blocks);
         let pick = (0..workers.len())
             .filter(|&w| capable(workers[w].caps(), need))
-            .min_by_key(|&w| (loads[w], w));
+            .min_by(|&a, &b| loads[a].total_cmp(&loads[b]).then(a.cmp(&b)));
         match pick {
             Some(w) => {
-                loads[w] += cost(&specs[i], blocks);
+                loads[w] += cost(&specs[i], blocks, hints);
                 assigned[w].push(i);
             }
             None => local.push(i),
@@ -461,10 +519,141 @@ mod tests {
     #[test]
     fn cost_ranks_the_baseline_most_expensive() {
         let blocks = vec![block(TargetKind::GpuLibrary), block(TargetKind::GpuLibrary)];
-        let baseline = cost(&spec(vec![false, false]), &blocks);
-        let one = cost(&spec(vec![true, false]), &blocks);
-        let both = cost(&spec(vec![true, true]), &blocks);
+        let baseline = cost(&spec(vec![false, false]), &blocks, &[]);
+        let one = cost(&spec(vec![true, false]), &blocks, &[]);
+        let both = cost(&spec(vec![true, true]), &blocks, &[]);
         assert!(baseline > one, "{baseline} vs {one}");
         assert!(one > both, "{one} vs {both}");
+    }
+
+    #[test]
+    fn unhinted_cost_reproduces_the_integer_formula() {
+        let blocks = vec![
+            block(TargetKind::GpuLibrary),
+            block(TargetKind::FpgaIpCore),
+            block(TargetKind::GpuLibrary),
+        ];
+        for enabled in [
+            vec![false, false, false],
+            vec![true, false, true],
+            vec![true, true, true],
+        ] {
+            let on = enabled.iter().filter(|&&b| b).count() as u64;
+            let expected = blocks.len() as u64 + 1 - on;
+            assert_eq!(cost(&spec(enabled), &blocks, &[]), expected as f64);
+        }
+    }
+
+    #[test]
+    fn hints_refine_but_never_outrank_interpreter_burden() {
+        let blocks = vec![block(TargetKind::GpuLibrary), block(TargetKind::GpuLibrary)];
+        // Second block predicted much slower on the device than the first.
+        let hints = [0.001, 0.9];
+        let baseline = cost(&spec(vec![false, false]), &blocks, &hints);
+        let slow = cost(&spec(vec![false, true]), &blocks, &hints);
+        let fast = cost(&spec(vec![true, false]), &blocks, &hints);
+        let both = cost(&spec(vec![true, true]), &blocks, &hints);
+        // Same interpreter burden: the hint decides the order.
+        assert!(slow > fast, "{slow} vs {fast}");
+        // Different interpreter burden: the hint never flips it.
+        assert!(baseline > slow, "{baseline} vs {slow}");
+        assert!(fast > both, "{fast} vs {both}");
+    }
+
+    /// All 2^n patterns over `blocks`, labeled like the verify planner.
+    fn sweep(n: usize) -> Vec<PatternSpec> {
+        (0..1usize << n)
+            .map(|bits| spec((0..n).map(|b| bits >> b & 1 == 1).collect()))
+            .collect()
+    }
+
+    fn stub_fleet() -> Vec<FleetWorker> {
+        vec![
+            FleetWorker::stub("gpu-0", Capabilities { gpu: true, fpga: false, ..Capabilities::default() }),
+            FleetWorker::stub("fpga-0", Capabilities { gpu: false, fpga: true, ..Capabilities::default() }),
+            FleetWorker::stub("both-0", Capabilities { gpu: true, fpga: true, ..Capabilities::default() }),
+        ]
+    }
+
+    /// Satellite property: the LPT deal is a pure function of the pending
+    /// *set* — any permutation of the pending order produces the identical
+    /// partition, because ordering is (cost, index) and the worker pick is
+    /// (load, index), both total.
+    #[test]
+    fn deal_is_deterministic_under_pending_permutation() {
+        let blocks = vec![
+            block(TargetKind::GpuLibrary),
+            block(TargetKind::FpgaIpCore),
+            block(TargetKind::GpuLibrary),
+        ];
+        let specs = sweep(blocks.len());
+        let owned = stub_fleet();
+        let workers: Vec<&FleetWorker> = owned.iter().collect();
+        for hints in [&[][..], &[0.25, 0.5, 0.125][..]] {
+            let canonical: Vec<usize> = (0..specs.len()).collect();
+            let baseline = deal_round(&specs, &canonical, &workers, &blocks, hints);
+            // Deterministic permutations: reversal, odd/even interleave,
+            // and every rotation of the canonical order.
+            let mut perms: Vec<Vec<usize>> = vec![canonical.iter().rev().copied().collect()];
+            perms.push(
+                canonical.iter().step_by(2).chain(canonical.iter().skip(1).step_by(2)).copied().collect(),
+            );
+            for r in 1..canonical.len() {
+                let mut rot = canonical.clone();
+                rot.rotate_left(r);
+                perms.push(rot);
+            }
+            for perm in perms {
+                let dealt = deal_round(&specs, &perm, &workers, &blocks, hints);
+                assert_eq!(dealt, baseline, "permutation {perm:?} changed the deal");
+            }
+        }
+    }
+
+    /// Satellite property: no pattern is ever dealt to a worker whose
+    /// capabilities do not cover its need, whatever the hint vector, and
+    /// patterns nobody covers land in the local list exactly once.
+    #[test]
+    fn deal_never_hands_a_pattern_to_an_incapable_worker() {
+        let blocks = vec![
+            block(TargetKind::GpuLibrary),
+            block(TargetKind::FpgaIpCore),
+            block(TargetKind::FpgaIpCore),
+        ];
+        let specs = sweep(blocks.len());
+        let pending: Vec<usize> = (0..specs.len()).collect();
+        // Fleets of every capability mix, including one with no FPGA box
+        // (FPGA-needing patterns must then fall back to the local list).
+        let cpu_only =
+            vec![FleetWorker::stub("cpu-0", Capabilities { gpu: false, fpga: false, ..Capabilities::default() })];
+        let gpu_only =
+            vec![FleetWorker::stub("gpu-0", Capabilities { gpu: true, fpga: false, ..Capabilities::default() })];
+        for owned in [stub_fleet(), gpu_only, cpu_only] {
+            let workers: Vec<&FleetWorker> = owned.iter().collect();
+            for hints in [&[][..], &[0.75, 0.0625, 0.333][..]] {
+                let (deal, local) = deal_round(&specs, &pending, &workers, &blocks, hints);
+                let mut seen = vec![0usize; specs.len()];
+                for (w, indices) in &deal {
+                    for &i in indices {
+                        seen[i] += 1;
+                        assert!(
+                            capable(workers[*w].caps(), needs(&specs[i], &blocks)),
+                            "pattern {} dealt to incapable worker {}",
+                            specs[i].label,
+                            workers[*w].name()
+                        );
+                    }
+                }
+                for &i in &local {
+                    seen[i] += 1;
+                    assert!(
+                        !workers.iter().any(|w| capable(w.caps(), needs(&specs[i], &blocks))),
+                        "pattern {} went local despite a capable worker",
+                        specs[i].label
+                    );
+                }
+                assert_eq!(seen, vec![1; specs.len()], "every pattern dealt exactly once");
+            }
+        }
     }
 }

@@ -80,6 +80,9 @@ impl WorkerHost {
             entry: &batch.entry,
             blocks: &batch.blocks,
             cfg: &batch.cfg,
+            // Cost hints order dispatch on the scheduler side and are not
+            // part of the frozen fbo-fleet-v1 wire batch.
+            cost_hints: &[],
         };
         self.executor.measure(&ctx, &batch.specs).iter().map(WireOutcome::of).collect()
     }

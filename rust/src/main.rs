@@ -28,7 +28,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use fbo::coordinator::{
     apps, flow, loop_offload, BackendPolicy, Coordinator, PatternExecutor, PowerPolicy,
-    SerialExecutor, Stage,
+    ProfileRegistry, PrunePolicy, SerialExecutor, Stage,
 };
 use fbo::fleet::{Backoff, Capabilities, FleetEndpoint, FleetExecutor, FleetRegistry, WorkerHost};
 use fbo::ga::GaConfig;
@@ -148,6 +148,8 @@ fn coordinator_from(args: &Args, verify_pool: bool) -> Result<(Coordinator, Opti
     c.verify.reps = args.flag_usize("reps", 3)?;
     c.backend_policy = BackendPolicy::parse(&args.flag("target", "auto"))?;
     c.power_policy = PowerPolicy::parse(&args.flag("power-policy", "perf"))?;
+    c.profiles = profiles_from(args)?;
+    c.prune_policy = PrunePolicy::parse(&args.flag("prune-policy", "off"))?;
     let verify_parallel = args.flag_usize("verify-parallel", 1)?;
     let pool = if verify_pool && verify_parallel > 1 {
         let pool = MeasurePool::start(&dir, verify_parallel - 1)?;
@@ -175,6 +177,19 @@ fn coordinator_from(args: &Args, verify_pool: bool) -> Result<(Coordinator, Opti
         }
     }
     Ok((c, pool))
+}
+
+/// `--device-profile FILE`: a device-profile registry JSON
+/// (`fbo-device-profiles-v1`) replacing the built-in GPU/FPGA profiles
+/// the estimate stage scores candidates against. The built-in registry
+/// (the paper's GTX 1050 Ti + Arria 10) is the fingerprint-passive
+/// default.
+fn profiles_from(args: &Args) -> Result<ProfileRegistry> {
+    match args.flags.get("device-profile") {
+        Some(v) if v == "true" => bail!("--device-profile expects a JSON file path"),
+        Some(path) => ProfileRegistry::load(Path::new(path)),
+        None => Ok(ProfileRegistry::builtin()),
+    }
 }
 
 /// `--fleet worker1:7070,stdio:fbo worker --stdio,...`: the endpoint
@@ -370,7 +385,19 @@ fn cmd_stages(args: &Args) -> Result<()> {
             format!("{} accepted, {} rejected", accepted, reconciled.blocks.len() - accepted);
         dump("reconciled", reconciled.to_json_string())?;
 
-        let verified = reconciled.verify(&req)?;
+        let estimated = reconciled.estimate(&req)?;
+        let pruned = estimated.estimates.prune_mask().iter().filter(|&&p| p).count();
+        results[Stage::Estimate.index()] = format!(
+            "{} block(s) scored vs {} + {}, {} pruned under {}",
+            estimated.estimates.blocks.len(),
+            estimated.estimates.gpu_profile,
+            estimated.estimates.fpga_profile,
+            pruned,
+            estimated.estimates.policy.render()
+        );
+        dump("estimated", estimated.to_json_string())?;
+
+        let verified = estimated.verify(&req)?;
         results[Stage::Verify.index()] = format!(
             "{} pattern(s) measured, best speedup {}",
             verified.outcome.tried.len(),
@@ -497,6 +524,9 @@ fn cmd_flow(args: &Args) -> Result<()> {
         target_rps: args.flag_usize("rps", 50)? as f64,
         max_latency_ms: 20.0,
         budget_per_month: 10_000.0,
+        // --max-kwh: deployment-level monthly energy budget; enforceable
+        // when a non-default --power-policy supplied per-instance watts.
+        max_kwh_per_month: args.flag_f64("max-kwh")?,
     };
     let locations = vec![
         flow::Location {
@@ -573,6 +603,8 @@ fn service_from(args: &Args) -> Result<OffloadService> {
     cfg.verify.reps = args.flag_usize("reps", 3)?;
     cfg.backend_policy = BackendPolicy::parse(&args.flag("target", "auto"))?;
     cfg.power_policy = PowerPolicy::parse(&args.flag("power-policy", "perf"))?;
+    cfg.profiles = profiles_from(args)?;
+    cfg.prune_policy = PrunePolicy::parse(&args.flag("prune-policy", "off"))?;
     cfg.verify_parallel = args.flag_usize("verify-parallel", 1)?;
     if let Some(endpoints) = fleet_endpoints(args)? {
         // Validated above; the config carries the raw strings so the
@@ -997,23 +1029,28 @@ fn usage() -> &'static str {
        analyze   <file.c>                 Step 1-2 analysis report\n\
        offload   <file.c> [--entry main] [--artifacts DIR] [--policy approve|reject]\n\
                  [--target gpu|fpga|auto] [--power-policy perf|perf-per-watt|cap:<watts>]\n\
+                 [--device-profile FILE] [--prune-policy off|conservative:<margin>|aggressive]\n\
                  [--reps N] [--verify-parallel N] [--fleet LIST] [--trace-out FILE]\n\
                  [--out transformed.c]\n\
        stages    <file.c> [--entry main] [--dump DIR] [--policy approve|reject]\n\
                  [--target gpu|fpga|auto] [--power-policy ...] [--reps N]\n\
+                 [--device-profile FILE] [--prune-policy ...]\n\
                  [--verify-parallel N] [--fleet LIST] [--trace-out FILE]\n\
                  run the pipeline stage by stage, printing a fixed-order\n\
                  per-stage table (--dump writes the JSON artifacts,\n\
-                 including power_scored.json)\n\
+                 including estimated.json and power_scored.json)\n\
        stages    --resume DIR/verified.json [--target ...] [--power-policy ...]\n\
                  re-enter from a dumped Verify artifact: measurements are\n\
                  reused, only power-score + arbitrate re-run\n\
        ga        <file.c> [--pop 12] [--gens 10] [--entry main]\n\
-       flow      <file.c> [--rps 50] [--target gpu|fpga|auto] [--power-policy ...]\n\
-                 full Steps 1-7 (Step 5 places on the arbitrated backend)\n\
+       flow      <file.c> [--rps 50] [--max-kwh KWH] [--target gpu|fpga|auto]\n\
+                 [--power-policy ...] [--device-profile FILE] [--prune-policy ...]\n\
+                 full Steps 1-7 (Step 5 places on the arbitrated backend;\n\
+                 --max-kwh caps the deployment's monthly energy draw)\n\
        batch     <file.c...> [--entry main] [--jobs N] [--artifacts DIR]\n\
                  [--cache DIR] [--no-cache-persist] [--reps N]\n\
                  [--target gpu|fpga|auto] [--power-policy ...] [--verify-parallel N]\n\
+                 [--device-profile FILE] [--prune-policy ...]\n\
                  [--fleet LIST] [--retries N]\n\
                  [--trace-out FILE] [--cache-max-bytes SIZE] [--cache-max-entries N]\n\
                  offload many files through the service worker pool +\n\
@@ -1021,7 +1058,7 @@ fn usage() -> &'static str {
                  with jittered backoff honoring the retry-after hint\n\
        serve     [--jobs N] [--artifacts DIR] [--cache DIR]\n\
                  [--target gpu|fpga|auto] [--power-policy ...] [--verify-parallel N]\n\
-                 [--fleet LIST]\n\
+                 [--device-profile FILE] [--prune-policy ...] [--fleet LIST]\n\
                  [--trace-out FILE] [--metrics-addr HOST:PORT] [--stats-every N]\n\
                  [--queue-limit N] [--rate-limit R] [--burst B]\n\
                  [--cache-max-bytes SIZE] [--cache-max-entries N]\n\
@@ -1067,6 +1104,16 @@ fn usage() -> &'static str {
      perf (default) decides on time alone and is byte-identical to a\n\
      pipeline without power scoring; perf-per-watt decides on modeled\n\
      joules per run; cap:<watts> excludes backends drawing above the cap.\n\
+     \n\
+     --device-profile FILE loads a device-profile registry (JSON,\n\
+     fbo-device-profiles-v1) for the analytic estimate stage, which\n\
+     scores every candidate block against GPU/FPGA rooflines before any\n\
+     measurement (arXiv:2004.09883's pre-verification sizing).\n\
+     --prune-policy decides what the estimate may do to the verify plan:\n\
+     off (default) is advisory only and byte-identical to a pipeline\n\
+     without the stage; conservative:<margin> skips measuring blocks the\n\
+     estimate predicts lose by more than the margin; aggressive skips\n\
+     every predicted-losing block.\n\
      \n\
      --queue-limit N bounds each worker queue, --rate-limit R meters each\n\
      client to R jobs/second (--burst B tokens of headroom): over-limit\n\

@@ -32,7 +32,8 @@
 //! Entries carry a [`CacheTier`] recording what they cost to recompute.
 //! When a [`CacheBudget`] is set (or [`DecisionCache::gc`] is called), the
 //! cache evicts in *tier priority then LRU* order: reconciled artifacts
-//! (milliseconds of static analysis) go first, then power scores
+//! (milliseconds of static analysis) go first, then analytic estimates
+//! (profile arithmetic over the reconciled blocks), then power scores
 //! (arithmetic over existing measurements), then full decisions
 //! (re-arbitration over cached verified evidence), and verified
 //! measurements — the tier that embodies real benchmark time — go last.
@@ -72,7 +73,7 @@ pub const INDEX_FORMAT: &str = "fbo-cache-index-v1";
 pub const INDEX_FILE: &str = "index.json";
 
 /// Number of cache tiers (the length of [`CacheTier::ALL`]).
-pub const TIER_COUNT: usize = 4;
+pub const TIER_COUNT: usize = 5;
 
 /// What a cached artifact costs to recompute — the eviction priority.
 ///
@@ -86,6 +87,9 @@ pub const TIER_COUNT: usize = 4;
 pub enum CacheTier {
     /// Pattern-discovery + reconciliation output (cheapest to redo).
     Reconciled,
+    /// Analytic device-profile estimates (arithmetic over the reconciled
+    /// blocks — no measurement evidence involved).
+    Estimated,
     /// Power-scored measurement set (arithmetic over verified evidence).
     PowerScored,
     /// Full arbitrated decision (re-derivable from verified evidence).
@@ -96,16 +100,22 @@ pub enum CacheTier {
 
 impl CacheTier {
     /// All tiers, in eviction-priority order (first evicted → last).
-    pub const ALL: [CacheTier; TIER_COUNT] =
-        [CacheTier::Reconciled, CacheTier::PowerScored, CacheTier::Decision, CacheTier::Verified];
+    pub const ALL: [CacheTier; TIER_COUNT] = [
+        CacheTier::Reconciled,
+        CacheTier::Estimated,
+        CacheTier::PowerScored,
+        CacheTier::Decision,
+        CacheTier::Verified,
+    ];
 
     /// Position in the eviction order: 0 = evicted first.
     pub fn rank(self) -> usize {
         match self {
             CacheTier::Reconciled => 0,
-            CacheTier::PowerScored => 1,
-            CacheTier::Decision => 2,
-            CacheTier::Verified => 3,
+            CacheTier::Estimated => 1,
+            CacheTier::PowerScored => 2,
+            CacheTier::Decision => 3,
+            CacheTier::Verified => 4,
         }
     }
 
@@ -114,6 +124,7 @@ impl CacheTier {
     pub fn as_str(self) -> &'static str {
         match self {
             CacheTier::Reconciled => "reconciled",
+            CacheTier::Estimated => "estimated",
             CacheTier::PowerScored => "power-scored",
             CacheTier::Decision => "decision",
             CacheTier::Verified => "verified",
@@ -504,6 +515,7 @@ impl DecisionCache {
                 self.evictions[1].load(Ordering::Relaxed),
                 self.evictions[2].load(Ordering::Relaxed),
                 self.evictions[3].load(Ordering::Relaxed),
+                self.evictions[4].load(Ordering::Relaxed),
             ],
             corrupt: self.corrupt.load(Ordering::Relaxed),
         }
@@ -913,7 +925,8 @@ mod tests {
         }
         assert_eq!(CacheTier::parse("bogus"), None);
         // Eviction priority: cheap-to-recompute first, verified last.
-        assert!(CacheTier::Reconciled < CacheTier::PowerScored);
+        assert!(CacheTier::Reconciled < CacheTier::Estimated);
+        assert!(CacheTier::Estimated < CacheTier::PowerScored);
         assert!(CacheTier::PowerScored < CacheTier::Decision);
         assert!(CacheTier::Decision < CacheTier::Verified);
     }
@@ -968,12 +981,13 @@ mod tests {
             assert!(c.lookup(k).is_some());
         }
         let before = c.usage();
-        assert_eq!(before.entries, 8);
-        // Budget for 5 entries: evicts 3 in order reconciled(LRU),
-        // reconciled(touched), power-scored(LRU).
+        assert_eq!(before.entries, 10);
+        // Budget for 5 entries: evicts 5 in order reconciled(LRU),
+        // reconciled(touched), estimated(LRU), estimated(touched),
+        // power-scored(LRU).
         let out =
             c.gc(CacheBudget { max_bytes: None, max_entries: Some(5) }, false).unwrap();
-        assert_eq!(out.entries_before, 8);
+        assert_eq!(out.entries_before, 10);
         assert_eq!(out.entries_after, 5);
         let evicted: Vec<(CacheKey, CacheTier)> =
             out.evicted.iter().map(|e| (e.key.clone(), e.tier)).collect();
@@ -982,13 +996,15 @@ mod tests {
             vec![
                 (keys[1].0.clone(), CacheTier::Reconciled),
                 (keys[0].0.clone(), CacheTier::Reconciled),
-                (keys[3].0.clone(), CacheTier::PowerScored),
+                (keys[3].0.clone(), CacheTier::Estimated),
+                (keys[2].0.clone(), CacheTier::Estimated),
+                (keys[5].0.clone(), CacheTier::PowerScored),
             ]
         );
         // Verified entries are never evicted while cheaper tiers remain.
-        assert!(c.lookup(&keys[6].0).is_some());
-        assert!(c.lookup(&keys[7].0).is_some());
-        assert_eq!(c.stats().evictions, [2, 1, 0, 0]);
+        assert!(c.lookup(&keys[8].0).is_some());
+        assert!(c.lookup(&keys[9].0).is_some());
+        assert_eq!(c.stats().evictions, [2, 2, 1, 0, 0]);
     }
 
     #[test]

@@ -17,15 +17,20 @@
 //! twice for one key.
 //!
 //! Caching is **stage-granular**: besides full decisions, workers persist
-//! the pipeline's `Reconciled`, `Verified`, and `PowerScored` stage
-//! artifacts under per-stage fingerprints (`StageFingerprints`). A
-//! full-decision miss resumes from the deepest valid stage instead of
-//! starting over — a `--reps` change replays discovery from the cache and
-//! only re-measures; a `--power-policy` change replays the verified
-//! measurements and only re-scores + re-arbitrates; a `--target` or
-//! FPGA-device change replays the power scores (or, under the default
-//! `perf` configuration, the verified measurements — the inert default
-//! scores are recomputed rather than persisted) and only re-arbitrates.
+//! the pipeline's `Reconciled`, `Estimated`, `Verified`, and
+//! `PowerScored` stage artifacts under per-stage fingerprints
+//! (`StageFingerprints`). A full-decision miss resumes from the deepest
+//! valid stage instead of starting over — a `--reps` change replays
+//! discovery from the cache and only re-measures; a `--power-policy`
+//! change replays the verified measurements and only re-scores +
+//! re-arbitrates; a `--target` or FPGA-device change replays the power
+//! scores (or, under the default `perf` configuration, the verified
+//! measurements — the inert default scores are recomputed rather than
+//! persisted) and only re-arbitrates; a `--device-profile` or
+//! `--prune-policy` change replays discovery and re-estimates +
+//! re-measures (the `Estimated` tier, like the power tier, is only
+//! persisted under a non-default estimator configuration — the default
+//! estimate decides nothing, so it is recomputed rather than stored).
 //! Workers install a [`StageObserver`] so the service counts per-stage
 //! latency ([`StatsSnapshot::stages`]).
 //!
@@ -72,8 +77,9 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::{
-    report_json, BackendPolicy, Coordinator, OffloadError, OffloadReport, PatternExecutor,
-    PowerModel, PowerPolicy, PowerScored, Reconciled, Stage, StageObserver, Verified, VerifyConfig,
+    report_json, BackendPolicy, Coordinator, Estimated, OffloadError, OffloadReport,
+    PatternExecutor, PowerModel, PowerPolicy, PowerScored, ProfileRegistry, PrunePolicy,
+    Reconciled, Stage, StageObserver, Verified, VerifyConfig,
 };
 use crate::fleet::{FleetEndpoint, FleetExecutor, FleetRegistry, FleetTelemetry};
 use crate::fpga;
@@ -220,6 +226,20 @@ pub struct ServiceConfig {
     /// Per-device wattage models the power stage scores against;
     /// fingerprinted alongside the policy.
     pub power_model: PowerModel,
+    /// Device profiles the analytic estimate stage scores against (CLI
+    /// `--device-profile`). Part of the estimate-tier fingerprint: a
+    /// profile change re-estimates and re-measures from the cached
+    /// `Reconciled` artifact. The built-in registry under the default
+    /// `--prune-policy off` contributes nothing to any downstream
+    /// fingerprint, so pre-estimator cache entries still replay
+    /// byte-identically.
+    pub profiles: ProfileRegistry,
+    /// How the Verify stage consumes the analytic estimate (CLI
+    /// `--prune-policy`): `off` (the default) measures every candidate,
+    /// `conservative:<margin>`/`aggressive` withhold analytically
+    /// hopeless candidates from measurement. Fingerprinted alongside the
+    /// profiles.
+    pub prune_policy: PrunePolicy,
     /// Patterns measured concurrently inside one Step-3 search (CLI
     /// `--verify-parallel`). `1` (the default) measures serially; above 1,
     /// independent pattern measurements fan out across the pool's idle
@@ -268,6 +288,8 @@ impl ServiceConfig {
             device: fpga::ARRIA10_GX,
             power_policy: PowerPolicy::default(),
             power_model: PowerModel::builtin(),
+            profiles: ProfileRegistry::builtin(),
+            prune_policy: PrunePolicy::default(),
             verify_parallel: 1,
             fleet: Vec::new(),
             telemetry: TelemetryConfig::default(),
@@ -307,9 +329,11 @@ pub struct CompletedJob {
     /// `Some(Stage::PowerScore)` means a cached `PowerScored` artifact was
     /// resumed (only arbitration re-ran), `Some(Stage::Verify)` means the
     /// measurements replayed while power scoring + arbitration re-ran,
-    /// `Some(Stage::Reconcile)` means discovery replayed while
-    /// verification re-ran. `None` when the pipeline ran from scratch —
-    /// or never ran at all (`from_cache`).
+    /// `Some(Stage::Estimate)` means discovery and the analytic estimate
+    /// replayed while verification re-ran (non-default estimator
+    /// configurations only), `Some(Stage::Reconcile)` means discovery
+    /// replayed while verification re-ran. `None` when the pipeline ran
+    /// from scratch — or never ran at all (`from_cache`).
     pub resumed_from: Option<Stage>,
     /// Submit-to-completion wall clock.
     pub wall: Duration,
@@ -449,6 +473,7 @@ struct Counters {
     cache_hits: Arc<Counter>,
     cache_misses: Arc<Counter>,
     reconciled_hits: Arc<Counter>,
+    estimated_hits: Arc<Counter>,
     verified_hits: Arc<Counter>,
     power_hits: Arc<Counter>,
     dropped_results: Arc<Counter>,
@@ -461,6 +486,11 @@ struct Counters {
     cache_corrupt: Arc<Counter>,
     queue_depth: Arc<Gauge>,
     job_seconds: Arc<Histogram>,
+    /// `fbo_estimator_error` — mean absolute percentage error of the
+    /// analytic estimator over the most recent completed job that
+    /// carried an estimate residue (non-default `--prune-policy` /
+    /// `--device-profile` runs only).
+    estimator_error: Arc<Gauge>,
 }
 
 impl Counters {
@@ -483,6 +513,7 @@ impl Counters {
             cache_hits: lookups("hit", "decision"),
             cache_misses: lookups("miss", "decision"),
             reconciled_hits: lookups("hit", "reconciled"),
+            estimated_hits: lookups("hit", "estimated"),
             verified_hits: lookups("hit", "verified"),
             power_hits: lookups("hit", "power-scored"),
             dropped_results: reg.counter(
@@ -508,6 +539,11 @@ impl Counters {
                 "Submit-to-completion latency of successful jobs.",
                 &[],
             ),
+            estimator_error: reg.gauge(
+                "fbo_estimator_error",
+                "Analytic-estimator MAPE over the last completed job with an estimate residue.",
+                &[],
+            ),
         }
     }
 }
@@ -515,8 +551,8 @@ impl Counters {
 /// Per-stage latency totals and histograms, fed by the pipeline's
 /// [`StageObserver`] hook from every worker.
 struct StageLatencies {
-    total_ns: [AtomicU64; 7],
-    count: [AtomicU64; 7],
+    total_ns: [AtomicU64; 8],
+    count: [AtomicU64; 8],
     /// `fbo_stage_seconds{stage=...}` histograms, index-aligned with
     /// [`Stage::ALL`].
     hists: Vec<Arc<Histogram>>,
@@ -611,6 +647,11 @@ struct Shared {
     /// full verified payload — caching it would double per-job cache
     /// storage to save nothing.
     persist_power_tier: bool,
+    /// Persist/resume the `Estimated` tier. Off under the default
+    /// estimator configuration: the inert default estimate recomputes
+    /// from a replayed `Reconciled` in microseconds and decides nothing,
+    /// so caching it would cost storage to save nothing.
+    persist_estimate_tier: bool,
     counters: Counters,
     latencies: Arc<StageLatencies>,
     /// Parallel-vs-serial pattern-measurement counters, shared by every
@@ -635,7 +676,7 @@ struct Shared {
     started: Instant,
 }
 
-/// The four cache-key fingerprints, one per cached pipeline prefix. Each
+/// The five cache-key fingerprints, one per cached pipeline prefix. Each
 /// digests exactly the inputs that can change that prefix's output, so a
 /// config change invalidates the stages it affects and *only* those: a
 /// `--reps` change re-verifies but replays discovery from the cache; a
@@ -646,8 +687,18 @@ struct StageFingerprints {
     /// Keys `Reconciled` artifacts: pattern DB + interface policy +
     /// similarity threshold (the Parse/Discover/Reconcile inputs).
     discovery: String,
-    /// Keys `Verified` artifacts: `discovery` plus the AOT artifact
-    /// contents and the verification settings (the Verify inputs).
+    /// Keys `Estimated` artifacts: `discovery` plus the device profiles
+    /// and the prune policy (the Estimate inputs).
+    estimate: String,
+    /// Keys `Verified` artifacts: the deepest upstream fingerprint plus
+    /// the AOT artifact contents and the verification settings (the
+    /// Verify inputs). Under the default estimator configuration
+    /// (`--prune-policy off` over the built-in profiles) this chains
+    /// directly off `discovery`, reproducing the pre-estimator
+    /// fingerprint so existing cache entries keep replaying; any
+    /// non-default estimate input chains `estimate` in — pruning changes
+    /// which patterns get measured, so it must invalidate the measured
+    /// evidence.
     verify: String,
     /// Keys `PowerScored` artifacts: `verify` plus the power policy and
     /// wattage models (the PowerScore inputs).
@@ -679,14 +730,50 @@ fn discovery_fingerprint(cfg: &ServiceConfig) -> String {
     ))
 }
 
-/// Digest of the Verify environment: the discovery fingerprint plus the
-/// AOT artifacts measurement runs against (`make artifacts` after a
-/// kernel edit must re-verify, never replay measurements taken against
-/// the old HLO) and the verification settings.
+/// True when the estimator configuration is the inert default
+/// (`--prune-policy off` over the built-in device profiles): the
+/// analytic estimate then decides nothing — no candidate is pruned, no
+/// cost hint reorders dispatch, no report byte changes — so it must
+/// change no fingerprint either.
+fn estimate_is_default(cfg: &ServiceConfig) -> bool {
+    cfg.prune_policy.is_default() && cfg.profiles == ProfileRegistry::builtin()
+}
+
+/// Digest of the Estimate environment: the discovery fingerprint plus
+/// the device-profile registry and the prune policy. Always distinct
+/// from the discovery fingerprint (the `estimate|` prefix), so
+/// `Estimated` entries never collide with `Reconciled` entries for the
+/// same source.
+fn estimate_fingerprint(cfg: &ServiceConfig) -> String {
+    fnv_hex(&format!(
+        "estimate|{}|profiles:{}|prune:{}",
+        discovery_fingerprint(cfg),
+        cfg.profiles.fingerprint_blob(),
+        cfg.prune_policy.render(),
+    ))
+}
+
+/// Digest of the Verify environment: the deepest upstream fingerprint
+/// plus the AOT artifacts measurement runs against (`make artifacts`
+/// after a kernel edit must re-verify, never replay measurements taken
+/// against the old HLO) and the verification settings.
+///
+/// Under the **default** estimator configuration the chain deliberately
+/// skips the estimate tier and hashes exactly the pre-estimator formula:
+/// `--prune-policy off` measurements are byte-identical to measurements
+/// taken before the estimate stage existed, so the cache entries they
+/// wrote must keep replaying. Any non-default profile or prune policy
+/// chains the estimate fingerprint in — pruning changes *which* patterns
+/// get measured, so it invalidates the measured evidence.
 fn verify_fingerprint(cfg: &ServiceConfig) -> String {
+    let upstream = if estimate_is_default(cfg) {
+        discovery_fingerprint(cfg)
+    } else {
+        estimate_fingerprint(cfg)
+    };
     fnv_hex(&format!(
         "verify|{}|artifacts:{}|reps:{}|warmup:{}|fuel:{}|tol:{}",
-        discovery_fingerprint(cfg),
+        upstream,
         artifacts_fingerprint(&cfg.artifacts),
         cfg.verify.reps,
         cfg.verify.warmup,
@@ -746,6 +833,7 @@ fn decision_fingerprint(cfg: &ServiceConfig) -> String {
 fn stage_fingerprints(cfg: &ServiceConfig) -> StageFingerprints {
     StageFingerprints {
         discovery: discovery_fingerprint(cfg),
+        estimate: estimate_fingerprint(cfg),
         verify: verify_fingerprint(cfg),
         power: power_fingerprint(cfg),
         decision: decision_fingerprint(cfg),
@@ -931,6 +1019,7 @@ impl Shared {
             cache_hits: c.cache_hits.get(),
             cache_misses: c.cache_misses.get(),
             reconciled_replays: c.reconciled_hits.get(),
+            estimated_replays: c.estimated_hits.get(),
             verified_replays: c.verified_hits.get(),
             power_replays: c.power_hits.get(),
             cache_entries: cache_usage.entries as u64,
@@ -1042,6 +1131,11 @@ pub struct StatsSnapshot {
     /// artifact: discovery replayed, verification re-ran (e.g. after a
     /// `--reps` change or regenerated artifacts).
     pub reconciled_replays: u64,
+    /// Full-decision misses that resumed from a cached `Estimated`
+    /// artifact: discovery and the analytic estimate replayed,
+    /// verification re-ran (non-default estimator configurations only —
+    /// e.g. after a `--reps` change under an active `--prune-policy`).
+    pub estimated_replays: u64,
     /// Full-decision misses that resumed from a cached `Verified`
     /// artifact: power scoring and arbitration re-ran, no re-measurement
     /// (e.g. after a `--power-policy` change).
@@ -1130,10 +1224,17 @@ impl StatsSnapshot {
             fmt(self.latency_p50),
             fmt(self.latency_p95),
         );
-        if self.reconciled_replays + self.verified_replays + self.power_replays > 0 {
+        let replays = self.reconciled_replays
+            + self.estimated_replays
+            + self.verified_replays
+            + self.power_replays;
+        if replays > 0 {
             line.push_str(&format!(
-                " | stage replays: {} reconciled, {} verified, {} power-scored",
-                self.reconciled_replays, self.verified_replays, self.power_replays
+                " | stage replays: {} reconciled, {} estimated, {} verified, {} power-scored",
+                self.reconciled_replays,
+                self.estimated_replays,
+                self.verified_replays,
+                self.power_replays
             ));
         }
         if self.patterns_parallel + self.patterns_serial > 0 {
@@ -1221,6 +1322,7 @@ impl StatsSnapshot {
             ("cache_hits", count(self.cache_hits)),
             ("cache_misses", count(self.cache_misses)),
             ("reconciled_replays", count(self.reconciled_replays)),
+            ("estimated_replays", count(self.estimated_replays)),
             ("verified_replays", count(self.verified_replays)),
             ("power_replays", count(self.power_replays)),
             ("cache_entries", count(self.cache_entries)),
@@ -1342,6 +1444,7 @@ impl OffloadService {
             buckets: Mutex::new(HashMap::new()),
             fingerprints: stage_fingerprints(&cfg),
             persist_power_tier: !power_is_default(&cfg),
+            persist_estimate_tier: !estimate_is_default(&cfg),
             counters: Counters::register(&registry),
             latencies: Arc::new(StageLatencies::register(&registry)),
             measure_stats: Arc::new(ExecStats::default()),
@@ -1659,6 +1762,8 @@ fn worker_main(
             c.device = cfg.device;
             c.power_policy = cfg.power_policy;
             c.power_model = cfg.power_model.clone();
+            c.profiles = cfg.profiles.clone();
+            c.prune_policy = cfg.prune_policy;
             // Fan independent pattern measurements out to the sibling
             // workers when configured; with `verify_parallel == 1` the
             // executor measures everything locally (and still feeds the
@@ -1803,6 +1908,7 @@ fn run_job(c: &Coordinator, shared: &Shared, job: &Job) -> Result<CompletedJob> 
     // stages it affects: a full-decision miss can still replay discovery,
     // verification, or even the power scores from a previous run.
     let reconciled_key = job.key.with_fingerprint(&shared.fingerprints.discovery);
+    let estimated_key = job.key.with_fingerprint(&shared.fingerprints.estimate);
     let verified_key = job.key.with_fingerprint(&shared.fingerprints.verify);
     let power_key = job.key.with_fingerprint(&shared.fingerprints.power);
 
@@ -1817,28 +1923,55 @@ fn run_job(c: &Coordinator, shared: &Shared, job: &Job) -> Result<CompletedJob> 
                 Ok(v)
             }
             None => {
-                let reconciled = match shared.try_stage(
-                    job.id,
-                    &reconciled_key,
-                    Reconciled::from_json_str,
-                    "reconciled",
-                ) {
-                    Some(r) => {
-                        shared.counters.reconciled_hits.inc();
-                        *resumed_from = Some(Stage::Reconcile);
-                        r
+                // The Estimated tier sits between Reconciled and
+                // Verified, but (like the power tier) only exists under a
+                // non-default estimator configuration — the default
+                // estimate decides nothing and is recomputed instead.
+                let estimated = if shared.persist_estimate_tier {
+                    shared.try_stage(job.id, &estimated_key, Estimated::from_json_str, "estimated")
+                } else {
+                    None
+                };
+                let estimated = match estimated {
+                    Some(e) => {
+                        shared.counters.estimated_hits.inc();
+                        *resumed_from = Some(Stage::Estimate);
+                        e
                     }
                     None => {
-                        let r = req.parse()?.discover(&req)?.reconcile(&req)?;
-                        shared.persist_stage(
+                        let reconciled = match shared.try_stage(
+                            job.id,
                             &reconciled_key,
-                            CacheTier::Reconciled,
-                            &r.to_json_string(),
-                        );
-                        r
+                            Reconciled::from_json_str,
+                            "reconciled",
+                        ) {
+                            Some(r) => {
+                                shared.counters.reconciled_hits.inc();
+                                *resumed_from = Some(Stage::Reconcile);
+                                r
+                            }
+                            None => {
+                                let r = req.parse()?.discover(&req)?.reconcile(&req)?;
+                                shared.persist_stage(
+                                    &reconciled_key,
+                                    CacheTier::Reconciled,
+                                    &r.to_json_string(),
+                                );
+                                r
+                            }
+                        };
+                        let e = reconciled.estimate(&req)?;
+                        if shared.persist_estimate_tier {
+                            shared.persist_stage(
+                                &estimated_key,
+                                CacheTier::Estimated,
+                                &e.to_json_string(),
+                            );
+                        }
+                        e
                     }
                 };
-                let v = reconciled.verify(&req)?;
+                let v = estimated.verify(&req)?;
                 shared.persist_stage(&verified_key, CacheTier::Verified, &v.to_json_string());
                 Ok(v)
             }
@@ -1867,6 +2000,12 @@ fn run_job(c: &Coordinator, shared: &Shared, job: &Job) -> Result<CompletedJob> 
     } else {
         resume_verified(&mut resumed_from)?.arbitrate(&req)?.report()
     };
+
+    // Surface the estimator's predicted-vs-measured error when the run
+    // carried an estimate residue (non-default estimator configurations).
+    if let Some(mape) = report.arbitration.estimate.as_ref().and_then(|e| e.mape) {
+        shared.counters.estimator_error.set(mape);
+    }
 
     let report_json: Arc<str> = Arc::from(report_json::report_to_string(&report));
     // The verified decision is the product; failing to persist it degrades
@@ -1944,6 +2083,7 @@ mod tests {
             cache_hits: 0,
             cache_misses: 0,
             reconciled_replays: 0,
+            estimated_replays: 0,
             verified_replays: 0,
             power_replays: 0,
             cache_entries: 0,
@@ -1992,6 +2132,7 @@ mod tests {
         pooled.verify_parallel = 4;
         let fp = stage_fingerprints(&pooled);
         assert_eq!(fp.discovery, base.discovery);
+        assert_eq!(fp.estimate, base.estimate);
         assert_eq!(fp.verify, base.verify);
         assert_eq!(fp.decision, base.decision);
     }
@@ -2008,6 +2149,7 @@ mod tests {
         traced.telemetry.ring_capacity = 7;
         let fp = stage_fingerprints(&traced);
         assert_eq!(fp.discovery, base.discovery);
+        assert_eq!(fp.estimate, base.estimate);
         assert_eq!(fp.verify, base.verify);
         assert_eq!(fp.power, base.power);
         assert_eq!(fp.decision, base.decision);
@@ -2027,6 +2169,7 @@ mod tests {
         bounded.cache_budget = CacheBudget { max_bytes: Some(4096), max_entries: Some(8) };
         let fp = stage_fingerprints(&bounded);
         assert_eq!(fp.discovery, base.discovery);
+        assert_eq!(fp.estimate, base.estimate);
         assert_eq!(fp.verify, base.verify);
         assert_eq!(fp.power, base.power);
         assert_eq!(fp.decision, base.decision);
@@ -2044,6 +2187,7 @@ mod tests {
         fleeted.fleet = vec!["worker1:7070".into(), "stdio:fbo worker --stdio".into()];
         let fp = stage_fingerprints(&fleeted);
         assert_eq!(fp.discovery, base.discovery);
+        assert_eq!(fp.estimate, base.estimate);
         assert_eq!(fp.verify, base.verify);
         assert_eq!(fp.power, base.power);
         assert_eq!(fp.decision, base.decision);
@@ -2064,6 +2208,7 @@ mod tests {
             cache_hits: 0,
             cache_misses: 0,
             reconciled_replays: 0,
+            estimated_replays: 0,
             verified_replays: 0,
             power_replays: 0,
             cache_entries: 0,
@@ -2138,6 +2283,7 @@ mod tests {
         reps.verify.reps += 1;
         let fp = stage_fingerprints(&reps);
         assert_eq!(fp.discovery, base.discovery);
+        assert_eq!(fp.estimate, base.estimate, "estimate sits upstream of verification settings");
         assert_ne!(fp.verify, base.verify);
         assert_ne!(fp.decision, base.decision);
 
@@ -2147,6 +2293,7 @@ mod tests {
         target.backend_policy = BackendPolicy::Fpga;
         let fp = stage_fingerprints(&target);
         assert_eq!(fp.discovery, base.discovery);
+        assert_eq!(fp.estimate, base.estimate);
         assert_eq!(fp.verify, base.verify);
         assert_eq!(fp.power, base.power);
         assert_ne!(fp.decision, base.decision);
@@ -2170,11 +2317,24 @@ mod tests {
         assert_ne!(fp.power, base.power);
         assert_ne!(fp.decision, base.decision);
 
+        // A prune-policy change invalidates the estimate tier and
+        // everything downstream of it — pruning changes which patterns
+        // get measured — while discovery still replays.
+        let mut pruned = cfg.clone();
+        pruned.prune_policy = PrunePolicy::Conservative(0.5);
+        let fp = stage_fingerprints(&pruned);
+        assert_eq!(fp.discovery, base.discovery);
+        assert_ne!(fp.estimate, base.estimate);
+        assert_ne!(fp.verify, base.verify);
+        assert_ne!(fp.power, base.power);
+        assert_ne!(fp.decision, base.decision);
+
         // An interface-policy change invalidates everything.
         let mut policy = cfg.clone();
         policy.policy = InterfacePolicy::AutoReject;
         let fp = stage_fingerprints(&policy);
         assert_ne!(fp.discovery, base.discovery);
+        assert_ne!(fp.estimate, base.estimate);
         assert_ne!(fp.verify, base.verify);
         assert_ne!(fp.power, base.power);
         assert_ne!(fp.decision, base.decision);
@@ -2209,5 +2369,48 @@ mod tests {
         ppw.power_policy = PowerPolicy::Cap(50.0);
         assert!(!power_is_default(&ppw));
         assert_ne!(decision_fingerprint(&ppw), pre_power);
+    }
+
+    #[test]
+    fn default_estimate_config_reproduces_the_pre_estimate_verify_fingerprint() {
+        // The byte-identical-replay contract across the estimator PR:
+        // under the default (`off` pruning + built-in profiles)
+        // configuration the verify fingerprint hashes exactly the
+        // pre-estimator formula, chaining off discovery, so verified
+        // artifacts and decisions written before the estimate stage
+        // existed still replay. (The estimate *tier* key is distinct —
+        // `Estimated` entries can never collide with `Reconciled` ones.)
+        let cfg = ServiceConfig::new("some/artifacts");
+        assert!(estimate_is_default(&cfg));
+        let pre_estimate = fnv_hex(&format!(
+            "verify|{}|artifacts:{}|reps:{}|warmup:{}|fuel:{}|tol:{}",
+            discovery_fingerprint(&cfg),
+            artifacts_fingerprint(&cfg.artifacts),
+            cfg.verify.reps,
+            cfg.verify.warmup,
+            cfg.verify.fuel,
+            cfg.verify.tolerance,
+        ));
+        assert_eq!(verify_fingerprint(&cfg), pre_estimate);
+        let fp = stage_fingerprints(&cfg);
+        assert_ne!(fp.estimate, fp.discovery, "estimate tier must key its own entries");
+
+        // Any non-default estimator input leaves the compatibility path:
+        // the verify chain re-anchors on the estimate fingerprint.
+        let mut pruned = cfg.clone();
+        pruned.prune_policy = PrunePolicy::Conservative(0.5);
+        assert!(!estimate_is_default(&pruned));
+        assert_ne!(verify_fingerprint(&pruned), pre_estimate);
+        assert_eq!(verify_fingerprint(&pruned), {
+            fnv_hex(&format!(
+                "verify|{}|artifacts:{}|reps:{}|warmup:{}|fuel:{}|tol:{}",
+                estimate_fingerprint(&pruned),
+                artifacts_fingerprint(&pruned.artifacts),
+                pruned.verify.reps,
+                pruned.verify.warmup,
+                pruned.verify.fuel,
+                pruned.verify.tolerance,
+            ))
+        });
     }
 }

@@ -81,6 +81,9 @@ pub(crate) fn run_measure_job(engine: &Rc<Engine>, job: MeasureJob) {
         entry: &job.entry,
         blocks: &job.blocks,
         cfg: &job.cfg,
+        // Hints order dispatch on the requesting side; a sub-job is one
+        // already-dealt spec, so they carry nothing here.
+        cost_hints: &[],
     };
     let result = verify::measure_spec(&ctx, &job.spec, engine);
     let _ = job.reply.send((job.index, result));

@@ -46,6 +46,21 @@ pub enum TraceEvent {
         /// Stage wall-clock in nanoseconds.
         wall_ns: u64,
     },
+    /// The analytic estimator scored one discovered candidate against
+    /// the active device profiles (before any measurement ran).
+    EstimatorScored {
+        /// Site label of the block (`call:fft2d`, `func:my_decomp`).
+        label: String,
+        /// Backend the estimate favors (`cpu`, `gpu`, `fpga`).
+        backend: String,
+        /// Predicted device wall-clock for the block (seconds).
+        predicted_secs: f64,
+        /// Predicted speedup over the CPU baseline for this block.
+        speedup: f64,
+        /// Whether the active prune policy withholds the block from
+        /// measurement.
+        pruned: bool,
+    },
     /// Step 3 measured one candidate pattern (the baseline included).
     PatternMeasured {
         /// Pattern label (`all-CPU`, `only:<site>`, `combined-winners`).
@@ -94,8 +109,8 @@ pub enum TraceEvent {
     },
     /// The service probed one cache tier for a job.
     CacheProbe {
-        /// Tier name: `decision`, `verified`, `reconciled`, or
-        /// `power-scored`.
+        /// Tier name: `decision`, `verified`, `reconciled`, `estimated`,
+        /// or `power-scored`.
         tier: String,
         /// Whether the probe hit.
         hit: bool,
@@ -139,6 +154,18 @@ pub enum TraceEvent {
         /// `ok`, `error` (worker died mid-batch), or `timeout`.
         outcome: String,
     },
+    /// The fleet scheduler attempted to re-dial a dead TCP worker before
+    /// dealing a batch (jittered exponential backoff, bounded attempts).
+    FleetReconnect {
+        /// Worker name (`tcp:host:port#i`).
+        worker: String,
+        /// 1-based re-dial attempt number for this outage.
+        attempt: u64,
+        /// Backoff delay slept before the attempt (milliseconds).
+        delay_ms: u64,
+        /// Whether the re-dial restored the worker.
+        ok: bool,
+    },
     /// A pipeline run finished.
     RequestCompleted {
         /// Whether the result came from the decision cache.
@@ -154,6 +181,7 @@ impl TraceEvent {
         match self {
             TraceEvent::RequestStarted { .. } => "request-started",
             TraceEvent::StageCompleted { .. } => "stage",
+            TraceEvent::EstimatorScored { .. } => "estimate",
             TraceEvent::PatternMeasured { .. } => "pattern",
             TraceEvent::PowerScored { .. } => "power",
             TraceEvent::ArbitrationVerdict { .. } => "verdict",
@@ -162,6 +190,7 @@ impl TraceEvent {
             TraceEvent::Resumed { .. } => "resumed",
             TraceEvent::MeasureDispatch { .. } => "dispatch",
             TraceEvent::FleetBatch { .. } => "fleet",
+            TraceEvent::FleetReconnect { .. } => "fleet-reconnect",
             TraceEvent::RequestCompleted { .. } => "request-completed",
         }
     }
@@ -222,6 +251,13 @@ impl TraceRecord {
                 pairs.push(("stage", Json::str(stage.as_str())));
                 pairs.push(("wall_ns", Json::num(*wall_ns as f64)));
             }
+            TraceEvent::EstimatorScored { label, backend, predicted_secs, speedup, pruned } => {
+                pairs.push(("label", Json::str(label)));
+                pairs.push(("backend", Json::str(backend)));
+                pairs.push(("predicted_secs", Json::num(*predicted_secs)));
+                pairs.push(("speedup", Json::num(*speedup)));
+                pairs.push(("pruned", Json::Bool(*pruned)));
+            }
             TraceEvent::PatternMeasured {
                 label,
                 reps,
@@ -277,6 +313,12 @@ impl TraceRecord {
                 pairs.push(("wall_ns", Json::num(*wall_ns as f64)));
                 pairs.push(("outcome", Json::str(outcome)));
             }
+            TraceEvent::FleetReconnect { worker, attempt, delay_ms, ok } => {
+                pairs.push(("worker", Json::str(worker)));
+                pairs.push(("attempt", Json::num(*attempt as f64)));
+                pairs.push(("delay_ms", Json::num(*delay_ms as f64)));
+                pairs.push(("ok", Json::Bool(*ok)));
+            }
             TraceEvent::RequestCompleted { from_cache, ok } => {
                 pairs.push(("from_cache", Json::Bool(*from_cache)));
                 pairs.push(("ok", Json::Bool(*ok)));
@@ -293,6 +335,13 @@ impl TraceRecord {
             "stage" => TraceEvent::StageCompleted {
                 stage: Stage::parse(v.get("stage")?.as_str()?)?,
                 wall_ns: get_u64(v, "wall_ns")?,
+            },
+            "estimate" => TraceEvent::EstimatorScored {
+                label: get_str(v, "label")?,
+                backend: get_str(v, "backend")?,
+                predicted_secs: get_f64(v, "predicted_secs")?,
+                speedup: get_f64(v, "speedup")?,
+                pruned: get_bool(v, "pruned")?,
             },
             "pattern" => TraceEvent::PatternMeasured {
                 label: get_str(v, "label")?,
@@ -336,6 +385,12 @@ impl TraceRecord {
                 patterns: get_u64(v, "patterns")?,
                 wall_ns: get_u64(v, "wall_ns")?,
                 outcome: get_str(v, "outcome")?,
+            },
+            "fleet-reconnect" => TraceEvent::FleetReconnect {
+                worker: get_str(v, "worker")?,
+                attempt: get_u64(v, "attempt")?,
+                delay_ms: get_u64(v, "delay_ms")?,
+                ok: get_bool(v, "ok")?,
             },
             "request-completed" => TraceEvent::RequestCompleted {
                 from_cache: get_bool(v, "from_cache")?,
@@ -580,6 +635,13 @@ mod tests {
         vec![
             TraceEvent::RequestStarted { entry: "main".into() },
             TraceEvent::StageCompleted { stage: Stage::Verify, wall_ns: 48_000 },
+            TraceEvent::EstimatorScored {
+                label: "call:fft2d".into(),
+                backend: "gpu".into(),
+                predicted_secs: 1.5e-4,
+                speedup: 3.25,
+                pruned: false,
+            },
             TraceEvent::PatternMeasured {
                 label: "only:call:fft2d".into(),
                 reps: 3,
@@ -616,6 +678,12 @@ mod tests {
                 patterns: 4,
                 wall_ns: 96_000,
                 outcome: "ok".into(),
+            },
+            TraceEvent::FleetReconnect {
+                worker: "tcp:worker1:7070#0".into(),
+                attempt: 2,
+                delay_ms: 400,
+                ok: true,
             },
             TraceEvent::RequestCompleted { from_cache: false, ok: true },
         ]

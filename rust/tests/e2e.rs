@@ -91,6 +91,7 @@ fn full_environment_adaptation_flow() {
         target_rps: 30.0,
         max_latency_ms: 20.0,
         budget_per_month: 10_000.0,
+        max_kwh_per_month: None,
     };
     let plan = flow::plan_resources(report.outcome.best_time.secs(), &req).unwrap();
     assert!(plan.instances >= 1);

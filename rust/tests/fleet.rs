@@ -169,6 +169,79 @@ fn worker_death_mid_batch_redeals_to_the_survivor() {
 }
 
 #[test]
+fn dead_tcp_worker_reconnects_on_a_later_deal() {
+    use std::cell::Cell;
+    use std::sync::Arc;
+
+    use fbo::fleet::FleetTelemetry;
+    use fbo::telemetry::{Registry, TraceEvent, TraceRecorder};
+
+    // One listener, two connections: the first handshakes and then hangs
+    // up on its first batch (worker death); the second — the scheduler's
+    // re-dial — lands on a real worker host that serves to completion.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let handle = std::thread::spawn(move || -> anyhow::Result<()> {
+        {
+            let (stream, _) = listener.accept()?;
+            let mut reader = BufReader::new(stream.try_clone()?);
+            let mut writer = stream;
+            write_frame(
+                &mut writer,
+                &Frame::Hello {
+                    protocol: fbo::fleet::PROTOCOL.to_string(),
+                    caps: Capabilities::default(),
+                },
+            )?;
+            let _ = read_frame(&mut reader); // the measure-batch
+        }
+        let host = WorkerHost::open(&artifacts_dir(), Capabilities::default())?;
+        let (stream, _) = listener.accept()?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = stream;
+        host.serve_connection(&mut reader, &mut writer)
+    });
+
+    let mut c = Coordinator::open(&artifacts_dir()).unwrap();
+    c.verify.reps = 1;
+    let src = apps::matmul_app(64);
+    let serial = c.request(&src, "main").run().unwrap();
+
+    let registry = FleetRegistry::connect(&[tcp(addr)]);
+    assert_eq!(registry.live_count(), 1, "{:?}", registry.rejected());
+    let metrics = Arc::new(Registry::new());
+    let recorder = Arc::new(TraceRecorder::new(1024));
+    let trace = Rc::new(Cell::new(7));
+    let fallback = Rc::new(SerialExecutor::new(c.engine.clone()));
+    let exec = Rc::new(
+        FleetExecutor::new(registry, fallback)
+            .with_telemetry(FleetTelemetry::new(metrics.clone(), recorder.clone(), trace)),
+    );
+
+    // First request: the worker dies mid-batch and the measurements fall
+    // back locally (or to the revived link, if the search deals again).
+    let first = c.request(&src, "main").with_executor(exec.clone()).run().unwrap();
+    assert_eq!(first.outcome.best_enabled, serial.outcome.best_enabled);
+
+    // Second request: the deal re-dials the endpoint, revives the slot,
+    // and measures remotely again.
+    let second = c.request(&src, "main").with_executor(exec.clone()).run().unwrap();
+    assert_eq!(second.outcome.best_enabled, serial.outcome.best_enabled);
+    assert_eq!(exec.registry().live_count(), 1, "the endpoint must be revived");
+    assert!(exec.stats().remote() > 0, "the revived worker measured patterns");
+    assert!(
+        recorder.records().iter().any(|r| matches!(
+            &r.event,
+            TraceEvent::FleetReconnect { ok: true, attempt, .. } if *attempt >= 1
+        )),
+        "a successful fleet-reconnect event must be traced"
+    );
+
+    drop(exec);
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
 fn version_mismatch_is_rejected_at_connect() {
     let (addr, fake) = spawn_fake_worker(|mut reader, mut stream| {
         write_frame(

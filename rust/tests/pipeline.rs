@@ -104,7 +104,17 @@ fn every_stage_artifact_serializes_and_resumes() {
         fbo::coordinator::Reconciled::from_json_str(&reconciled.to_json_string()).unwrap();
     assert_eq!(reconciled2.blocks.len(), reconciled.blocks.len());
 
-    let verified = reconciled2.verify(&req).unwrap();
+    let estimated = reconciled2.estimate(&req).unwrap();
+    let estimated2 =
+        fbo::coordinator::Estimated::from_json_str(&estimated.to_json_string()).unwrap();
+    assert_eq!(estimated2.estimates.blocks.len(), estimated.estimates.blocks.len());
+    assert_eq!(
+        estimated2.estimates.prune_mask(),
+        vec![false; estimated.estimates.blocks.len()],
+        "the default policy never prunes"
+    );
+
+    let verified = estimated2.verify(&req).unwrap();
     let saved = verified.to_json_string();
     let verified2 = Verified::from_json_str(&saved).unwrap();
     assert_eq!(verified2.to_json_string(), saved, "stage codec must be byte-stable");
@@ -215,6 +225,41 @@ fn resuming_a_verified_artifact_under_a_power_policy_scores_without_remeasuring(
     }
 }
 
+// ----------------------------------------------------------- estimation
+
+#[test]
+fn conservative_pruning_measures_no_more_patterns_and_keeps_the_decision() {
+    use fbo::coordinator::PrunePolicy;
+
+    let c = coordinator();
+    let src = apps::fft_app_lib(64);
+    let full = c.offload(&src, "main").unwrap();
+
+    let mut pruning = coordinator();
+    pruning.prune_policy = PrunePolicy::Conservative(0.5);
+    let pruned = pruning.offload(&src, "main").unwrap();
+
+    assert!(
+        pruned.outcome.tried.len() <= full.outcome.tried.len(),
+        "pruning must never add measurements"
+    );
+    assert_eq!(pruned.outcome.best_enabled, full.outcome.best_enabled);
+    assert_eq!(pruned.arbitration.backend, full.arbitration.backend);
+
+    // A non-default estimator config leaves a residue: the v4 report
+    // records the predictions next to what was measured...
+    let est = pruned.arbitration.estimate.as_ref().expect("estimate residue");
+    assert!(!est.blocks.is_empty());
+    let json = fbo::coordinator::report_json::report_to_string(&pruned);
+    assert!(json.contains("fbo-offload-report-v4"), "{json}");
+    assert!(json.contains("predicted_secs"));
+
+    // ...while the default path stays on the pre-estimate codec.
+    let full_json = fbo::coordinator::report_json::report_to_string(&full);
+    assert!(!full_json.contains("fbo-offload-report-v4"), "{full_json}");
+    assert!(full.arbitration.estimate.is_none());
+}
+
 // ----------------------------------------------------------- observers
 
 #[derive(Default)]
@@ -242,6 +287,7 @@ fn observer_sees_every_stage_in_order() {
             Stage::Parse,
             Stage::Discover,
             Stage::Reconcile,
+            Stage::Estimate,
             Stage::Verify,
             Stage::PowerScore,
             Stage::Arbitrate
@@ -309,6 +355,7 @@ fn place_stage_consumes_the_arbitrated_times() {
         target_rps: 30.0,
         max_latency_ms: 20.0,
         budget_per_month: 10_000.0,
+        max_kwh_per_month: None,
     };
     let locations = vec![flow::Location {
         name: "dc".into(),
@@ -330,6 +377,7 @@ fn place_stage_consumes_the_arbitrated_times() {
         target_rps: 30.0,
         max_latency_ms: 1.0,
         budget_per_month: 10_000.0,
+        max_kwh_per_month: None,
     };
     let err = arbitrated.place(&req, &impossible, &locations).unwrap_err();
     assert_eq!(err.stage(), Stage::Place);

@@ -349,7 +349,7 @@ fn prop_cache_gc_matches_tier_then_lru_model() {
             match rng.below(8) {
                 0..=4 => {
                     let tag = rng.below(10);
-                    let tier = CacheTier::ALL[rng.below(4)];
+                    let tier = CacheTier::ALL[rng.below(CacheTier::ALL.len())];
                     let p = cache_payload(tag, rng.below(200));
                     cache.insert_tier(&cache_key(tag), tier, &p).unwrap();
                     model.insert(tag, (tier, p, clock));
@@ -456,7 +456,7 @@ fn prop_standing_budget_holds_after_every_insert() {
         cache.set_budget(budget);
         for step in 0..30 {
             let tag = rng.below(12);
-            let tier = CacheTier::ALL[rng.below(4)];
+            let tier = CacheTier::ALL[rng.below(CacheTier::ALL.len())];
             let p = cache_payload(tag, rng.below(400));
             cache.insert_tier(&cache_key(tag), tier, &p).unwrap();
             let u = cache.usage();

@@ -1,7 +1,9 @@
 //! Report-JSON version compatibility: a committed v1 fixture (the
-//! pre-arbitration format) must still decode, and a v2 fixture must
+//! pre-arbitration format) must still decode, a v2 fixture must
 //! round-trip byte-identically through `coordinator/report_json.rs` —
-//! the invariant the decision cache's byte-identical replay rests on.
+//! the invariant the decision cache's byte-identical replay rests on —
+//! and synthesized v3 (power residue) and v4 (estimate residue)
+//! documents must decode and stay codec fixed points.
 
 use fbo::coordinator::{report_json, Backend, BackendPolicy};
 use fbo::patterndb::json::{self, Json};
@@ -96,6 +98,52 @@ fn v3_documents_decode_and_are_a_codec_fixed_point() {
     let reencoded = report_json::report_to_string(&report);
     assert!(reencoded.contains(report_json::REPORT_FORMAT_V3));
     assert_eq!(reencoded, v3_text, "canonically-built v3 must round-trip byte-identically");
+    let twice = report_json::report_to_string(&report_json::report_from_str(&reencoded).unwrap());
+    assert_eq!(twice, reencoded);
+}
+
+#[test]
+fn v4_documents_decode_and_are_a_codec_fixed_point() {
+    // Shape a v4 document from the committed v2 fixture: bump the format
+    // tag and graft an estimate residue into the arbitration section —
+    // the two changes a non-default estimator config makes to the wire
+    // format. v1-v3 documents never carry the section, so the older
+    // fixtures above double as the "absent estimate" decode cases.
+    let mut top = json::parse(V2_FIXTURE).unwrap().as_obj().unwrap().clone();
+    top.insert("format".to_string(), Json::str("fbo-offload-report-v4"));
+    let estimate = Json::obj(vec![
+        ("policy", Json::str("conservative:0.25")),
+        ("gpu_profile", Json::str("GeForce GTX 1050 Ti")),
+        ("fpga_profile", Json::str("Arria 10")),
+        ("mape", Json::num(0.18)),
+        (
+            "blocks",
+            Json::Arr(vec![Json::obj(vec![
+                ("label", Json::str("call:fft2d")),
+                ("backend", Json::str("fpga")),
+                ("predicted_secs", Json::num(0.0025)),
+                ("measured_secs", Json::num(0.003)),
+                ("error", Json::num(0.1666666667)),
+            ])]),
+        ),
+    ]);
+    if let Some(Json::Obj(arb)) = top.get_mut("arbitration") {
+        arb.insert("estimate".to_string(), estimate);
+    } else {
+        panic!("v2 fixture must carry an arbitration section");
+    }
+    let v4_text = json::to_string_pretty(&Json::Obj(top));
+
+    let report = report_json::report_from_str(&v4_text).expect("v4 documents must decode");
+    let residue = report.arbitration.estimate.as_ref().expect("estimate residue");
+    assert_eq!(residue.gpu_profile, "GeForce GTX 1050 Ti");
+    assert_eq!(residue.mape, Some(0.18));
+    assert_eq!(residue.blocks[0].predicted_secs, 0.0025);
+    assert_eq!(residue.blocks[0].measured_secs, Some(0.003));
+    // The canonical re-encode keeps the v4 tag and is a codec fixed point.
+    let reencoded = report_json::report_to_string(&report);
+    assert!(reencoded.contains(report_json::REPORT_FORMAT_V4));
+    assert_eq!(reencoded, v4_text, "canonically-built v4 must round-trip byte-identically");
     let twice = report_json::report_to_string(&report_json::report_from_str(&reencoded).unwrap());
     assert_eq!(twice, reencoded);
 }

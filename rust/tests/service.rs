@@ -184,7 +184,9 @@ fn verify_policy_change_replays_discovery_and_retarget_replays_verification() {
         assert_eq!(stats.reconciled_replays, 0);
         assert_eq!(stats.verified_replays, 0);
         // The observer-backed stage counters saw the whole pipeline run.
-        for stage in ["parse", "discover", "reconcile", "verify", "power-score", "arbitrate"] {
+        for stage in
+            ["parse", "discover", "reconcile", "estimate", "verify", "power-score", "arbitrate"]
+        {
             let s = stats.stages.iter().find(|s| s.stage == stage).unwrap();
             assert_eq!(s.count, 1, "{stage} must have run exactly once");
         }
@@ -212,6 +214,9 @@ fn verify_policy_change_replays_discovery_and_retarget_replays_verification() {
             assert_eq!(s.count, 0, "{stage} must have been replayed from cache");
         }
         assert_eq!(stats.stages.iter().find(|s| s.stage == "verify").unwrap().count, 1);
+        // The analytic estimate is recomputed ahead of the re-measurement
+        // (it is cheap and keyed upstream of the verify settings).
+        assert_eq!(stats.stages.iter().find(|s| s.stage == "estimate").unwrap().count, 1);
     }
 
     // A backend retarget keeps the verified measurements and only
@@ -232,6 +237,11 @@ fn verify_policy_change_replays_discovery_and_retarget_replays_verification() {
         assert_eq!(stats.verified_replays, 1);
         assert_eq!(stats.reconciled_replays, 0);
         assert_eq!(stats.stages.iter().find(|s| s.stage == "verify").unwrap().count, 0);
+        assert_eq!(
+            stats.stages.iter().find(|s| s.stage == "estimate").unwrap().count,
+            0,
+            "a retarget resumes downstream of the estimate"
+        );
         assert_eq!(stats.stages.iter().find(|s| s.stage == "power-score").unwrap().count, 1);
         assert_eq!(stats.stages.iter().find(|s| s.stage == "arbitrate").unwrap().count, 1);
     }

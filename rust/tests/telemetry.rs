@@ -67,6 +67,8 @@ fn golden_jsonl_schema_is_stable() {
             "request-completed",
             "cache-corrupt",
             "fleet",
+            "estimate",
+            "fleet-reconnect",
         ],
         "fixture must exercise every event variant"
     );
@@ -93,7 +95,7 @@ fn cli_trace_carries_spans_and_decision_events() {
     // One span per pipeline stage, in pipeline order.
     assert_eq!(
         span_names(&records),
-        ["parse", "discover", "reconcile", "verify", "power-score", "arbitrate"]
+        ["parse", "discover", "reconcile", "estimate", "verify", "power-score", "arbitrate"]
     );
 
     // Step 3 reported every measurement: the all-CPU baseline first, then
