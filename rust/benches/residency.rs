@@ -1,0 +1,151 @@
+//! Bench: device-resident data plane on the sensor-fusion pipeline.
+//!
+//! `sensor_fusion_app` chains fft2d -> matmul -> ludcmp with a genuine
+//! inter-block tensor handoff (fft2d's output spectrum is matmul's
+//! input), so it is the evaluation app residency exists for. Three runs
+//! gate three invariants:
+//!
+//! 1. round-trip baseline (`--resident-bytes 0`, the default) — no
+//!    residency section, no elided bytes: the pre-residency pipeline;
+//! 2. resident run (64 MiB budget) — the report upgrades to v5, the
+//!    handoff elides host<->device bytes (> 0), arbitration credits the
+//!    saved PCIe transfer time, and the paid byte total drops below the
+//!    round-trip baseline;
+//! 3. passivity — a zero-budget run on the engine the resident run
+//!    warmed decides identically to the fresh baseline and pays exactly
+//!    the same bytes (the plane uninstalls, nothing leaks).
+//!
+//! Run: `cargo bench --bench residency` (add `-- --test` for the CI
+//! smoke mode: 1 rep).
+//! Records: `BENCH_residency.json` at the repo root.
+
+use std::path::PathBuf;
+
+use fbo::coordinator::{apps, report_json, Coordinator, OffloadReport};
+use fbo::metrics::{fmt_bytes, Table};
+use fbo::patterndb::json::{self, Json};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn paid_bytes(r: &OffloadReport) -> u64 {
+    r.outcome.tried.iter().map(|p| p.traffic.bytes_in + p.traffic.bytes_out).sum()
+}
+
+fn elided_bytes(r: &OffloadReport) -> u64 {
+    r.outcome.tried.iter().map(|p| p.traffic.elided_in + p.traffic.elided_out).sum()
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--test");
+    let n = env_usize("FBO_N", 64);
+    let reps = env_usize("FBO_REPS", if smoke { 1 } else { 3 });
+    let budget = 64u64 << 20;
+
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let src = apps::sensor_fusion_app(n);
+    let mut c = Coordinator::open(&artifacts)?;
+    c.verify.reps = reps;
+
+    println!("== device residency: sensor_fusion_app at n={n} ==");
+
+    // 1. Round-trip baseline: the default pipeline stages every input in
+    // and reads every output back, and records no residency section.
+    let off = c.offload(&src, "main")?;
+    let off_json = report_json::report_to_string(&off);
+    assert!(
+        !off_json.contains("\"residency\""),
+        "the default (zero-budget) report must carry no residency section"
+    );
+    assert!(off.arbitration.residency.is_none(), "no plane, no residue");
+    assert_eq!(elided_bytes(&off), 0, "no plane, no elided traffic");
+
+    // 2. Resident run: the same coordinator under a nonzero budget.
+    c.resident_bytes = budget;
+    let resident = c.offload(&src, "main")?;
+    let resident_json = report_json::report_to_string(&resident);
+    assert!(
+        resident_json.contains("fbo-offload-report-v5"),
+        "a residency-shaped run must emit the v5 report"
+    );
+    let residue = resident
+        .arbitration
+        .residency
+        .as_ref()
+        .expect("a nonzero budget must attach the residency residue");
+    assert_eq!(residue.budget_bytes, budget);
+    let elided = elided_bytes(&resident);
+    assert!(elided > 0, "the fft2d->matmul handoff must elide transfers");
+    assert!(
+        residue.total_saved_transfer_secs > 0.0,
+        "arbitration must credit the saved PCIe transfer time"
+    );
+    assert!(
+        paid_bytes(&resident) < paid_bytes(&off),
+        "the resident path must pay fewer PCIe bytes than the round trip"
+    );
+
+    // 3. Passivity: zero budget on the warmed engine uninstalls the
+    // plane — same decision, same paid bytes as the fresh baseline.
+    c.resident_bytes = 0;
+    let off_again = c.offload(&src, "main")?;
+    assert!(off_again.arbitration.residency.is_none());
+    assert_eq!(
+        off_again.outcome.best_enabled, off.outcome.best_enabled,
+        "zero-budget decisions must match the pre-residency pipeline"
+    );
+    assert_eq!(off_again.arbitration.backend, off.arbitration.backend);
+    assert_eq!(elided_bytes(&off_again), 0, "the warmed engine must elide nothing at budget 0");
+    for (a, b) in off_again.outcome.tried.iter().zip(&off.outcome.tried) {
+        assert_eq!(
+            (a.traffic.bytes_in, a.traffic.bytes_out, a.traffic.dispatches),
+            (b.traffic.bytes_in, b.traffic.bytes_out, b.traffic.dispatches),
+            "{}: zero-budget traffic must be byte-identical to the baseline",
+            a.label
+        );
+    }
+
+    let mut table = Table::new(&["mode", "backend", "paid bytes", "elided bytes", "saved/run"]);
+    table.row(&[
+        "round-trip".to_string(),
+        off.arbitration.backend.as_str().to_string(),
+        fmt_bytes(paid_bytes(&off)),
+        fmt_bytes(0),
+        "-".to_string(),
+    ]);
+    table.row(&[
+        format!("resident ({})", fmt_bytes(budget)),
+        resident.arbitration.backend.as_str().to_string(),
+        fmt_bytes(paid_bytes(&resident)),
+        fmt_bytes(elided),
+        format!("{:.3}us", residue.total_saved_transfer_secs * 1e6),
+    ]);
+    print!("{}", table.render());
+    println!(
+        "residency elided {} of host<->device traffic ({} blocks credited)",
+        fmt_bytes(elided),
+        residue.blocks.len()
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("residency")),
+        ("app", Json::str("sensor_fusion_app")),
+        ("n", Json::num(n as f64)),
+        ("reps", Json::num(reps as f64)),
+        ("budget_bytes", Json::num(budget as f64)),
+        ("off_paid_bytes", Json::num(paid_bytes(&off) as f64)),
+        ("off_elided_bytes", Json::num(0.0)),
+        ("resident_paid_bytes", Json::num(paid_bytes(&resident) as f64)),
+        ("resident_elided_bytes", Json::num(elided as f64)),
+        ("saved_transfer_secs", Json::num(residue.total_saved_transfer_secs)),
+        ("credited_blocks", Json::num(residue.blocks.len() as f64)),
+        ("report_version_resident", Json::str("fbo-offload-report-v5")),
+        ("off_decision_identical", Json::Bool(true)),
+    ]);
+    let bench_path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_residency.json");
+    std::fs::write(&bench_path, json::to_string_pretty(&out))?;
+    println!("recorded {}", bench_path.display());
+    Ok(())
+}

@@ -33,6 +33,7 @@ pub mod pipeline;
 pub mod power;
 pub mod profile;
 pub mod report_json;
+pub mod residency;
 pub mod verify;
 
 use std::path::Path;
@@ -56,6 +57,7 @@ pub use pipeline::{
 };
 pub use power::{PowerModel, PowerOutcome, PowerPolicy};
 pub use profile::ProfileRegistry;
+pub use residency::{BlockResidency, ResidencyDecision};
 pub use verify::{
     MeasuredPattern, PatternExecutor, PatternSpec, ResultProbe, SearchOutcome, SerialExecutor,
     VerifyConfig, VerifyContext, VerifyPlan,
@@ -148,6 +150,14 @@ pub struct Coordinator {
     /// `--prune-policy`): the default `off` computes and traces estimates
     /// but never changes what is measured.
     pub prune_policy: PrunePolicy,
+    /// Resident-set byte budget for the device data plane (CLI
+    /// `--resident-bytes`). The default `0` leaves residency off — no
+    /// plane is installed and the pipeline is byte-identical to the
+    /// pre-residency one, decisions and cache fingerprints included. A
+    /// nonzero budget installs a [`crate::runtime::DataPlane`] on the
+    /// engine before Step 3 so adjacent offloaded blocks hand tensors
+    /// device-side and hot inputs stay pinned across service requests.
+    pub resident_bytes: u64,
     /// Pattern executor the Verify stage measures with. `None` means the
     /// serial default (one engine, patterns back to back); the service
     /// tier and CLI `--verify-parallel` install a pooled executor that
@@ -171,6 +181,7 @@ impl Coordinator {
             power_model: PowerModel::builtin(),
             profiles: ProfileRegistry::builtin(),
             prune_policy: PrunePolicy::default(),
+            resident_bytes: 0,
             executor: None,
         })
     }
@@ -332,6 +343,30 @@ impl Coordinator {
                 let _ = writeln!(out, "  estimator MAPE {:.0}%", mape * 100.0);
             }
         }
+        if let Some(res) = &arb.residency {
+            let _ = writeln!(
+                out,
+                "device residency (--resident-bytes {}):",
+                crate::metrics::fmt_bytes(res.budget_bytes),
+            );
+            for b in &res.blocks {
+                let _ = writeln!(
+                    out,
+                    "  block {:<24} elided {} in / {} out  saved {}",
+                    b.label,
+                    crate::metrics::fmt_bytes(b.elided_in),
+                    crate::metrics::fmt_bytes(b.elided_out),
+                    crate::metrics::fmt_duration(Duration::from_secs_f64(b.saved_transfer_secs)),
+                );
+            }
+            let _ = writeln!(
+                out,
+                "  total transfer credit {} per run",
+                crate::metrics::fmt_duration(Duration::from_secs_f64(
+                    res.total_saved_transfer_secs
+                )),
+            );
+        }
         let _ = writeln!(
             out,
             "chosen backend: {} ({} simulated toolchain time)",
@@ -455,6 +490,59 @@ mod tests {
         assert!(text.contains("chosen backend:"), "{text}");
         // matmul has no registered IP core: never FPGA.
         assert_ne!(r.backend(), Backend::Fpga);
+    }
+
+    #[test]
+    fn resident_budget_attaches_the_residency_residue_and_elides_traffic() {
+        let mut c = coord();
+        c.resident_bytes = 64 << 20;
+        let r = c.offload(&apps::sensor_fusion_app(64), "main").unwrap();
+        let res = r.arbitration.residency.as_ref().expect("nonzero budget must attach residue");
+        assert_eq!(res.budget_bytes, 64 << 20);
+        assert_eq!(res.blocks.len(), r.blocks.iter().filter(|b| b.accepted()).count());
+        // fft2d's spectrum feeds matmul and every rep re-touches the same
+        // frames: the plane must elide transfers somewhere.
+        let elided: u64 = res.blocks.iter().map(|b| b.elided_in + b.elided_out).sum();
+        assert!(elided > 0, "residency elided no bytes: {res:?}");
+        assert!(res.total_saved_transfer_secs > 0.0);
+        let text = c.render_report(&r);
+        assert!(text.contains("device residency"), "{text}");
+        assert!(text.contains("total transfer credit"), "{text}");
+        // Off by default: no residue, no section.
+        let c0 = coord();
+        let r0 = c0.offload(&apps::sensor_fusion_app(64), "main").unwrap();
+        assert!(r0.arbitration.residency.is_none());
+        assert!(!c0.render_report(&r0).contains("device residency"));
+    }
+
+    #[test]
+    fn zero_budget_is_passive_even_on_an_engine_warmed_by_a_resident_run() {
+        // PRs 5–9 discipline: the feature off must be byte-identical to a
+        // build without it. Measured medians are wall-clock and so not
+        // comparable across runs, but every byte *count* is deterministic
+        // — compare those, plus the decisions.
+        let mut c = coord();
+        c.resident_bytes = 16 << 20;
+        let _warm = c.offload(&apps::sensor_fusion_app(64), "main").unwrap();
+        assert!(c.engine.data_plane().is_some(), "resident run installs the plane");
+        c.resident_bytes = 0;
+        let off = c.offload(&apps::sensor_fusion_app(64), "main").unwrap();
+        assert!(c.engine.data_plane().is_none(), "zero budget uninstalls the plane");
+        assert!(off.arbitration.residency.is_none());
+
+        let fresh = coord().offload(&apps::sensor_fusion_app(64), "main").unwrap();
+        assert_eq!(off.outcome.best_enabled, fresh.outcome.best_enabled);
+        assert_eq!(off.outcome.tried.len(), fresh.outcome.tried.len());
+        for (a, b) in off.outcome.tried.iter().zip(&fresh.outcome.tried) {
+            assert_eq!(a.label, b.label);
+            assert_eq!((a.traffic.elided_in, a.traffic.elided_out), (0, 0), "{}", a.label);
+            assert_eq!(a.traffic.bytes_in, b.traffic.bytes_in, "{}", a.label);
+            assert_eq!(a.traffic.bytes_out, b.traffic.bytes_out, "{}", a.label);
+            assert_eq!(a.traffic.dispatches, b.traffic.dispatches, "{}", a.label);
+        }
+        for (a, b) in off.arbitration.blocks.iter().zip(&fresh.arbitration.blocks) {
+            assert_eq!(a.backend, b.backend, "{}", a.label);
+        }
     }
 
     #[test]

@@ -61,6 +61,7 @@ use super::flow;
 use super::power::{self, PowerModel, PowerPolicy};
 use super::profile::ProfileRegistry;
 use super::report_json;
+use super::residency;
 use super::verify::{self, PatternExecutor, SearchOutcome, SerialExecutor, VerifyConfig};
 use super::{Coordinator, DiscoveredBlock, DiscoveryPath, OffloadReport};
 
@@ -327,6 +328,12 @@ pub struct OffloadRequest {
     /// How the estimate prunes candidates before measurement
     /// (CLI `--prune-policy`).
     pub prune_policy: PrunePolicy,
+    /// Resident-set byte budget for the device data plane (CLI
+    /// `--resident-bytes`). `0` (the default) keeps residency off and the
+    /// pipeline byte-identical to the pre-residency one; a nonzero budget
+    /// installs a [`crate::runtime::DataPlane`] on the engine before
+    /// Step 3 and attaches the v5 residency residue to arbitration.
+    pub resident_bytes: u64,
     observer: Option<Arc<dyn StageObserver>>,
     executor: Option<Rc<dyn PatternExecutor>>,
 }
@@ -356,6 +363,7 @@ impl OffloadRequest {
             power_model: c.power_model.clone(),
             profiles: c.profiles.clone(),
             prune_policy: c.prune_policy,
+            resident_bytes: c.resident_bytes,
             observer: None,
             executor: c.executor.clone(),
         }
@@ -425,6 +433,13 @@ impl OffloadRequest {
     /// plan (CLI `--prune-policy`).
     pub fn with_prune_policy(mut self, policy: PrunePolicy) -> Self {
         self.prune_policy = policy;
+        self
+    }
+
+    /// Override the resident-set byte budget of the device data plane
+    /// (CLI `--resident-bytes`). `0` keeps residency off.
+    pub fn with_resident_bytes(mut self, budget: u64) -> Self {
+        self.resident_bytes = budget;
         self
     }
 
@@ -814,6 +829,24 @@ impl Estimated {
     pub fn verify(&self, req: &OffloadRequest) -> std::result::Result<Verified, OffloadError> {
         let t0 = Instant::now();
         let default_estimate = estimate_is_default(req);
+        if req.resident_bytes > 0 {
+            // Install (or re-budget) the device data plane before any
+            // measurement. Reinstalling only on a budget change keeps the
+            // resident set warm across service requests on the same
+            // engine — the whole point of pinning hot inputs.
+            let budget_differs = req
+                .engine
+                .data_plane()
+                .map_or(true, |p| p.budget() != req.resident_bytes);
+            if budget_differs {
+                let plane = Rc::new(crate::runtime::DataPlane::new(req.resident_bytes));
+                req.engine.install_data_plane(plane);
+            }
+        } else if req.engine.data_plane().is_some() {
+            // Passivity: a zero-budget request on an engine warmed by a
+            // resident one must measure the exact pre-residency traffic.
+            req.engine.uninstall_data_plane();
+        }
         let search = || -> Result<SearchOutcome> {
             let linked = link_cpu_libraries(&req.db, &self.reconciled.discovered.parsed.program)?;
             let accepted = self.reconciled.accepted();
@@ -1072,6 +1105,16 @@ fn arbitrate_scored(
         // configuration — the default report stays v2/v3.
         arbitration.estimate =
             verified.estimates.as_ref().map(|e| estimate::decision(e, &verified.outcome));
+        // Attach the residency residue (the v5 section) exactly when a
+        // nonzero budget installed a data plane — `--resident-bytes 0`
+        // leaves the report at its earlier version, byte-identical.
+        if req.resident_bytes > 0 {
+            arbitration.residency = Some(residency::decision(
+                req.resident_bytes,
+                &verified.outcome,
+                accepted.len(),
+            ));
+        }
         // Emit the winning transformed source (on the *user's* program,
         // not the linked one — what the paper hands back for deployment).
         // Under a non-default power policy a time-winning block the
@@ -1098,7 +1141,13 @@ fn arbitrate_scored(
         message: format!("{e:#}"),
     })?;
     let wall = t0.elapsed();
-    req.observe_events(|| backend::arbitration_events(&arbitration));
+    req.observe_events(|| {
+        let mut events = backend::arbitration_events(&arbitration);
+        if let Some(res) = &arbitration.residency {
+            events.extend(residency::residency_events(res));
+        }
+        events
+    });
     req.observe(Stage::Arbitrate, wall);
     Ok(Arbitrated { verified: verified.clone(), arbitration, transformed_source, wall })
 }

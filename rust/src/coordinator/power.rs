@@ -227,6 +227,9 @@ pub fn device_energy(device: &DevicePower, exec_secs: f64, transfer_secs: f64) -
 }
 
 /// PCIe-staging seconds implied by a pattern's observed per-run traffic.
+/// Counts *paid* bytes only — residency-elided bytes never enter, which is
+/// exactly how arbitration credits transfers the data plane saved (the
+/// residency residue prices the elided bytes with this same constant).
 pub fn transfer_secs(traffic: &DeviceTraffic) -> f64 {
     (traffic.bytes_in + traffic.bytes_out) as f64 / crate::fpga::PCIE_BYTES_PER_SEC
 }
@@ -527,6 +530,7 @@ mod tests {
                     bytes_out: 1 << 20,
                     dispatches: 1,
                     device_secs,
+                    ..Default::default()
                 },
             }],
             best_enabled: vec![true],

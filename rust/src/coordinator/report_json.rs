@@ -23,6 +23,7 @@ use crate::coordinator::backend::{
 };
 use crate::coordinator::estimate;
 use crate::coordinator::power;
+use crate::coordinator::residency;
 use crate::coordinator::verify::{DeviceTraffic, PatternResult, SearchOutcome};
 use crate::coordinator::{DiscoveredBlock, DiscoveryPath, OffloadReport};
 use crate::fpga::ResourceEstimate;
@@ -60,6 +61,17 @@ pub const REPORT_FORMAT_V3: &str = "fbo-offload-report-v3";
 /// cached pre-estimator decision replays byte-identically.
 pub const REPORT_FORMAT_V4: &str = "fbo-offload-report-v4";
 
+/// Format tag of a report whose pipeline ran with a device-resident data
+/// plane (`--resident-bytes > 0`): the arbitration section additionally
+/// carries the `residency` residue (per-block elided host<->device bytes
+/// and the PCIe transfer seconds they saved), and per-pattern traffic may
+/// carry `elided_in`/`elided_out` keys. v5 documents **must** carry that
+/// section and earlier formats must not; the power and estimate residues
+/// remain optional inside a v5 document. Residency-off reports keep
+/// emitting v2/v3/v4 bytes, so every cached pre-residency decision
+/// replays byte-identically.
+pub const REPORT_FORMAT_V5: &str = "fbo-offload-report-v5";
+
 /// The previous report format: no `backend`/`arbitration` sections and no
 /// per-pattern device traffic. v1 reports still **decode** (the archived
 /// decisions of pre-arbitration deployments stay readable): traffic reads
@@ -73,9 +85,12 @@ pub const REPORT_FORMAT_V1: &str = "fbo-offload-report-v1";
 
 /// Serialize a report to the canonical JSON value (v2; v3 when the
 /// arbitration carries a power residue; v4 when it carries an estimate
-/// residue — see [`REPORT_FORMAT_V3`] / [`REPORT_FORMAT_V4`]).
+/// residue; v5 when it carries a residency residue — see
+/// [`REPORT_FORMAT_V3`] / [`REPORT_FORMAT_V4`] / [`REPORT_FORMAT_V5`]).
 pub fn report_to_json(r: &OffloadReport) -> Json {
-    let format = if r.arbitration.estimate.is_some() {
+    let format = if r.arbitration.residency.is_some() {
+        REPORT_FORMAT_V5
+    } else if r.arbitration.estimate.is_some() {
         REPORT_FORMAT_V4
     } else if r.arbitration.power.is_some() {
         REPORT_FORMAT_V3
@@ -105,19 +120,20 @@ pub fn report_to_string(r: &OffloadReport) -> String {
     json::to_string_pretty(&report_to_json(r))
 }
 
-/// Deserialize a report from a JSON value (v4, v3, v2, or v1 upgraded on
-/// the fly — see [`REPORT_FORMAT_V1`]).
+/// Deserialize a report from a JSON value (v5, v4, v3, v2, or v1 upgraded
+/// on the fly — see [`REPORT_FORMAT_V1`]).
 pub fn report_from_json(v: &Json) -> Result<OffloadReport> {
     let format = v.get("format")?.as_str()?;
-    let (v1, v3, v4) = match format {
-        REPORT_FORMAT => (false, false, false),
-        REPORT_FORMAT_V3 => (false, true, false),
-        REPORT_FORMAT_V4 => (false, false, true),
-        REPORT_FORMAT_V1 => (true, false, false),
+    let (v1, v3, v4, v5) = match format {
+        REPORT_FORMAT => (false, false, false, false),
+        REPORT_FORMAT_V3 => (false, true, false, false),
+        REPORT_FORMAT_V4 => (false, false, true, false),
+        REPORT_FORMAT_V5 => (false, false, false, true),
+        REPORT_FORMAT_V1 => (true, false, false, false),
         other => bail!(
             "unsupported offload-report format {other:?} \
-             (want {REPORT_FORMAT_V4:?}, {REPORT_FORMAT_V3:?}, {REPORT_FORMAT:?}, \
-             or {REPORT_FORMAT_V1:?})"
+             (want {REPORT_FORMAT_V5:?}, {REPORT_FORMAT_V4:?}, {REPORT_FORMAT_V3:?}, \
+             {REPORT_FORMAT:?}, or {REPORT_FORMAT_V1:?})"
         ),
     };
     let outcome = outcome_from_json(v.get("outcome")?, v1)?;
@@ -126,16 +142,25 @@ pub fn report_from_json(v: &Json) -> Result<OffloadReport> {
     } else {
         let arbitration = arbitration_from_json(v.get("arbitration")?)?;
         // Tag ↔ payload agreement keeps the canonical re-encode stable:
-        // a decoded report always serializes back to its own format. The
-        // estimate residue is exactly the v4 marker; the power residue is
-        // mandatory for v3 and free to appear inside v4.
-        if arbitration.estimate.is_some() != v4 {
+        // a decoded report always serializes back to its own format. Each
+        // format's newest residue is its marker; older residues are
+        // mandatory markers only below the format that freed them — the
+        // residency residue is exactly the v5 marker, the estimate
+        // residue marks v4 (and is free inside v5), the power residue
+        // marks v3 (and is free inside v4/v5).
+        if arbitration.residency.is_some() != v5 {
+            bail!(
+                "corrupt report: format {format:?} disagrees with the presence \
+                 of the arbitration residency section"
+            );
+        }
+        if !v5 && arbitration.estimate.is_some() != v4 {
             bail!(
                 "corrupt report: format {format:?} disagrees with the presence \
                  of the arbitration estimate section"
             );
         }
-        if !v4 && arbitration.power.is_some() != v3 {
+        if !v5 && !v4 && arbitration.power.is_some() != v3 {
             bail!(
                 "corrupt report: format {format:?} disagrees with the presence \
                  of the arbitration power section"
@@ -199,6 +224,7 @@ fn v1_arbitration(outcome: &SearchOutcome) -> ArbitrationOutcome {
         fpga_request_secs: None,
         power: None,
         estimate: None,
+        residency: None,
     }
 }
 
@@ -360,20 +386,35 @@ pub(crate) fn plan_from_json(v: &Json) -> Result<PlannedReplacement> {
 }
 
 pub(crate) fn traffic_to_json(t: &DeviceTraffic) -> Json {
-    Json::obj(vec![
+    let mut pairs = vec![
         ("bytes_in", Json::num(t.bytes_in as f64)),
         ("bytes_out", Json::num(t.bytes_out as f64)),
         ("dispatches", Json::num(t.dispatches as f64)),
         ("device_secs", Json::num(t.device_secs)),
-    ])
+    ];
+    // Elided bytes exist only when a data plane elided something (a v5
+    // report); emitting the keys conditionally keeps every residency-off
+    // traffic section byte-identical to its v2-v4 form.
+    if t.elided_in > 0 {
+        pairs.push(("elided_in", Json::num(t.elided_in as f64)));
+    }
+    if t.elided_out > 0 {
+        pairs.push(("elided_out", Json::num(t.elided_out as f64)));
+    }
+    Json::obj(pairs)
 }
 
 pub(crate) fn traffic_from_json(v: &Json) -> Result<DeviceTraffic> {
+    let opt_bytes = |key: &str| -> Result<u64> {
+        Ok(v.opt(key).map(|n| n.as_f64()).transpose()?.unwrap_or(0.0) as u64)
+    };
     Ok(DeviceTraffic {
         bytes_in: v.get("bytes_in")?.as_f64()? as u64,
         bytes_out: v.get("bytes_out")?.as_f64()? as u64,
         dispatches: v.get("dispatches")?.as_f64()? as u64,
         device_secs: v.get("device_secs")?.as_f64()?,
+        elided_in: opt_bytes("elided_in")?,
+        elided_out: opt_bytes("elided_out")?,
     })
 }
 
@@ -519,6 +560,11 @@ pub(crate) fn arbitration_to_json(a: &ArbitrationOutcome) -> Json {
     if let Some(e) = &a.estimate {
         pairs.push(("estimate", estimate::decision_to_json(e)));
     }
+    // And the residency residue only under a nonzero `--resident-bytes`
+    // budget (the v5 marker).
+    if let Some(r) = &a.residency {
+        pairs.push(("residency", residency::decision_to_json(r)));
+    }
     Json::obj(pairs)
 }
 
@@ -538,6 +584,7 @@ pub(crate) fn arbitration_from_json(v: &Json) -> Result<ArbitrationOutcome> {
         fpga_request_secs: opt_num_from_json(v, "fpga_request_secs")?,
         power: v.opt("power").map(power::decision_from_json).transpose()?,
         estimate: v.opt("estimate").map(estimate::decision_from_json).transpose()?,
+        residency: v.opt("residency").map(residency::decision_from_json).transpose()?,
     })
 }
 
@@ -637,6 +684,7 @@ mod tests {
                             bytes_out: 32768,
                             dispatches: 1,
                             device_secs: 6.25e-5,
+                            ..Default::default()
                         },
                     },
                     PatternResult {
@@ -696,6 +744,7 @@ mod tests {
                 fpga_request_secs: Some(8.75e-5),
                 power: None,
                 estimate: None,
+                residency: None,
             },
             transformed_source: "#include <math.h>\nint main() {\n    return 0;\n}\n".into(),
             search_wall: Duration::from_millis(47),
@@ -866,6 +915,72 @@ mod tests {
         let both_back = report_from_str(&both_text).unwrap();
         assert_eq!(both_back.arbitration, both.arbitration);
         assert_eq!(report_to_string(&both_back), both_text);
+    }
+
+    #[test]
+    fn residency_residue_upgrades_the_report_to_v5() {
+        use crate::coordinator::residency::{BlockResidency, ResidencyDecision};
+
+        // The default report carries no residency section at all.
+        let plain = sample_report();
+        let plain_text = report_to_string(&plain);
+        assert!(!plain_text.contains("\"residency\""), "{plain_text}");
+        assert!(!plain_text.contains("elided_in"), "{plain_text}");
+
+        // A nonzero resident-bytes budget lifts the format to v5, records
+        // per-block elided traffic + the transfer credit, and the traffic
+        // sections gain their elided keys; the codec stays byte-stable.
+        let mut resident = sample_report();
+        resident.outcome.tried[0].traffic.elided_in = 16384;
+        resident.outcome.tried[0].traffic.elided_out = 32768;
+        resident.arbitration.residency = Some(ResidencyDecision {
+            budget_bytes: 64 << 20,
+            blocks: vec![BlockResidency {
+                label: "only:call:fft2d".into(),
+                elided_in: 16384,
+                elided_out: 32768,
+                saved_transfer_secs: 8.192e-6,
+            }],
+            total_saved_transfer_secs: 8.192e-6,
+        });
+        let text = report_to_string(&resident);
+        assert!(text.contains(REPORT_FORMAT_V5));
+        assert!(text.contains("\"residency\""));
+        assert!(text.contains("saved_transfer_secs"));
+        assert!(text.contains("\"elided_in\""));
+        let back = report_from_str(&text).unwrap();
+        assert_eq!(back.arbitration, resident.arbitration);
+        assert_eq!(back.outcome.tried[0].traffic, resident.outcome.tried[0].traffic);
+        assert_eq!(report_to_string(&back), text, "v5 must be byte-stable");
+
+        // Tag ↔ payload agreement is enforced both ways.
+        let tag_without_residency = plain_text.replace(REPORT_FORMAT, REPORT_FORMAT_V5);
+        assert!(report_from_str(&tag_without_residency).is_err());
+        let residency_without_tag = text.replace(REPORT_FORMAT_V5, REPORT_FORMAT);
+        assert!(report_from_str(&residency_without_tag).is_err());
+
+        // A v5 report may also carry the power and estimate residues.
+        use crate::coordinator::estimate::{EstimateDecision, PrunePolicy};
+        let mut all = resident.clone();
+        all.arbitration.power = Some(power::PowerDecision {
+            policy: power::PowerPolicy::PerfPerWatt,
+            gpu_watts: 75.0,
+            fpga_watts: 40.0,
+            blocks: Vec::new(),
+        });
+        all.arbitration.estimate = Some(EstimateDecision {
+            policy: PrunePolicy::Aggressive,
+            gpu_profile: "gtx-1050-ti".into(),
+            fpga_profile: "arria10-gx-1150".into(),
+            mape: None,
+            blocks: Vec::new(),
+        });
+        let all_text = report_to_string(&all);
+        assert!(all_text.contains(REPORT_FORMAT_V5));
+        assert!(all_text.contains("\"power\"") && all_text.contains("\"estimate\""));
+        let all_back = report_from_str(&all_text).unwrap();
+        assert_eq!(all_back.arbitration, all.arbitration);
+        assert_eq!(report_to_string(&all_back), all_text);
     }
 
     #[test]

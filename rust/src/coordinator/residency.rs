@@ -1,0 +1,219 @@
+//! Residency residue of one arbitration run (the v5 report section).
+//!
+//! When a device-resident data plane is active (`--resident-bytes > 0`),
+//! Step 3 measures each pattern's traffic split into paid and elided
+//! bytes ([`DeviceTraffic`]). This module turns that split into the
+//! arbitration-level claim the report carries: how many host<->device
+//! bytes the residency map elided per block, and how much PCIe staging
+//! time that saves — priced with the same
+//! [`crate::fpga::PCIE_BYTES_PER_SEC`] constant the power model already
+//! uses for paid transfers ([`crate::coordinator::power::transfer_secs`]),
+//! so the credit and the cost share one arithmetic.
+//!
+//! The residue is `None` (and the report stays at its pre-residency
+//! version) whenever the plane is off — the same passivity discipline as
+//! the power and estimate residues.
+
+use anyhow::Result;
+
+use crate::patterndb::json::Json;
+use crate::telemetry::TraceEvent;
+
+use super::verify::{DeviceTraffic, SearchOutcome};
+
+/// Per-block residency record, aligned with the arbitration blocks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockResidency {
+    /// Site label of the block (matches the arbitration blocks).
+    pub label: String,
+    /// Host -> device bytes per run elided by residency.
+    pub elided_in: u64,
+    /// Device -> host bytes per run elided by residency.
+    pub elided_out: u64,
+    /// PCIe staging seconds per run those elided bytes would have cost.
+    pub saved_transfer_secs: f64,
+}
+
+/// The residency residue of one arbitration run under a nonzero
+/// `--resident-bytes` budget: the budget, the per-block elided traffic,
+/// and the total transfer time credited. Serialized into the v5 report;
+/// absent (and the report keeps its earlier version) when the plane is
+/// off.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResidencyDecision {
+    /// The resident-set byte budget the plane spilled under.
+    pub budget_bytes: u64,
+    /// Per-block elided traffic, aligned with the arbitration blocks.
+    pub blocks: Vec<BlockResidency>,
+    /// Total PCIe staging seconds per run credited across all blocks.
+    pub total_saved_transfer_secs: f64,
+}
+
+/// PCIe staging seconds the elided bytes of one pattern's traffic would
+/// have cost — the flip side of [`crate::coordinator::power::transfer_secs`],
+/// same constant, elided bytes instead of paid ones.
+pub fn saved_transfer_secs(traffic: &DeviceTraffic) -> f64 {
+    (traffic.elided_in + traffic.elided_out) as f64 / crate::fpga::PCIE_BYTES_PER_SEC
+}
+
+/// Build the residue from a Step-3 search outcome: one record per
+/// phase-1 block pattern (the first `block_count` entries of `tried`,
+/// index-aligned with the block list by construction).
+pub fn decision(
+    budget_bytes: u64,
+    outcome: &SearchOutcome,
+    block_count: usize,
+) -> ResidencyDecision {
+    let blocks: Vec<BlockResidency> = outcome
+        .tried
+        .iter()
+        .take(block_count)
+        .map(|p| BlockResidency {
+            label: p.label.clone(),
+            elided_in: p.traffic.elided_in,
+            elided_out: p.traffic.elided_out,
+            saved_transfer_secs: saved_transfer_secs(&p.traffic),
+        })
+        .collect();
+    let total = blocks.iter().map(|b| b.saved_transfer_secs).sum();
+    ResidencyDecision { budget_bytes, blocks, total_saved_transfer_secs: total }
+}
+
+/// Telemetry events for one residency residue: one
+/// [`TraceEvent::ResidencyElided`] per block. Built only when an observer
+/// is installed (the pipeline wraps the call in its lazy event closure),
+/// and only when residency shaped the run — the events mirror the v5
+/// report section, so a zero-budget run emits nothing.
+pub fn residency_events(d: &ResidencyDecision) -> Vec<TraceEvent> {
+    d.blocks
+        .iter()
+        .map(|b| TraceEvent::ResidencyElided {
+            label: b.label.clone(),
+            elided_in: b.elided_in,
+            elided_out: b.elided_out,
+            saved_secs: b.saved_transfer_secs,
+        })
+        .collect()
+}
+
+// ----------------------------------------------------------- JSON codec
+
+/// Serialize the arbitration's residency residue (v5 report section).
+pub fn decision_to_json(d: &ResidencyDecision) -> Json {
+    Json::obj(vec![
+        ("budget_bytes", Json::num(d.budget_bytes as f64)),
+        (
+            "blocks",
+            Json::Arr(
+                d.blocks
+                    .iter()
+                    .map(|b| {
+                        Json::obj(vec![
+                            ("label", Json::str(&b.label)),
+                            ("elided_in", Json::num(b.elided_in as f64)),
+                            ("elided_out", Json::num(b.elided_out as f64)),
+                            ("saved_transfer_secs", Json::num(b.saved_transfer_secs)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("total_saved_transfer_secs", Json::num(d.total_saved_transfer_secs)),
+    ])
+}
+
+/// Inverse of [`decision_to_json`].
+pub fn decision_from_json(v: &Json) -> Result<ResidencyDecision> {
+    Ok(ResidencyDecision {
+        budget_bytes: v.get("budget_bytes")?.as_f64()? as u64,
+        blocks: v
+            .get("blocks")?
+            .as_arr()?
+            .iter()
+            .map(|b| {
+                Ok(BlockResidency {
+                    label: b.get("label")?.as_str()?.to_string(),
+                    elided_in: b.get("elided_in")?.as_f64()? as u64,
+                    elided_out: b.get("elided_out")?.as_f64()? as u64,
+                    saved_transfer_secs: b.get("saved_transfer_secs")?.as_f64()?,
+                })
+            })
+            .collect::<Result<_>>()?,
+        total_saved_transfer_secs: v.get("total_saved_transfer_secs")?.as_f64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::verify::PatternResult;
+    use crate::metrics::Measurement;
+    use crate::patterndb::json;
+    use std::time::Duration;
+
+    fn m(label: &str, us: u64) -> Measurement {
+        Measurement {
+            label: label.to_string(),
+            median: Duration::from_micros(us),
+            min: Duration::from_micros(us),
+            max: Duration::from_micros(us),
+            reps: 1,
+        }
+    }
+
+    fn outcome_with_elision() -> SearchOutcome {
+        let traffic = DeviceTraffic {
+            bytes_in: 1 << 20,
+            bytes_out: 1 << 19,
+            dispatches: 1,
+            device_secs: 0.001,
+            elided_in: 3 << 20,
+            elided_out: 1 << 20,
+        };
+        SearchOutcome {
+            baseline: m("all-CPU", 100_000),
+            tried: vec![PatternResult {
+                enabled: vec![true],
+                label: "only:call:fft2d".into(),
+                time: m("only:call:fft2d", 2_000),
+                speedup: 50.0,
+                output_ok: true,
+                traffic,
+            }],
+            best_enabled: vec![true],
+            best_time: m("only:call:fft2d", 2_000),
+            best_speedup: 50.0,
+        }
+    }
+
+    #[test]
+    fn credit_prices_elided_bytes_with_the_power_constant() {
+        let o = outcome_with_elision();
+        let d = decision(64 << 20, &o, 1);
+        assert_eq!(d.blocks.len(), 1);
+        let b = &d.blocks[0];
+        assert_eq!((b.elided_in, b.elided_out), (3 << 20, 1 << 20));
+        let want = ((3 << 20) as f64 + (1 << 20) as f64) / crate::fpga::PCIE_BYTES_PER_SEC;
+        assert!((b.saved_transfer_secs - want).abs() < 1e-15);
+        assert!((d.total_saved_transfer_secs - want).abs() < 1e-15);
+        // The credit is exactly what transfer_secs would have charged for
+        // those bytes had they been paid.
+        let as_paid = DeviceTraffic {
+            bytes_in: o.tried[0].traffic.elided_in,
+            bytes_out: o.tried[0].traffic.elided_out,
+            ..Default::default()
+        };
+        assert!(
+            (b.saved_transfer_secs - super::super::power::transfer_secs(&as_paid)).abs() < 1e-15
+        );
+    }
+
+    #[test]
+    fn decision_codec_round_trips() {
+        let d = decision(64 << 20, &outcome_with_elision(), 1);
+        let s = json::to_string_pretty(&decision_to_json(&d));
+        let back = decision_from_json(&json::parse(&s).unwrap()).unwrap();
+        assert_eq!(back, d);
+        assert_eq!(json::to_string_pretty(&decision_to_json(&back)), s, "byte-stable");
+    }
+}

@@ -72,6 +72,16 @@ pub struct DeviceTraffic {
     /// Measured wall-clock seconds inside the PJRT engine per run
     /// (staging + device execution + readback).
     pub device_secs: f64,
+    /// Host -> device bytes per run whose transfer was elided because the
+    /// value was already device-resident. Zero unless a
+    /// [`crate::runtime::DataPlane`] is installed (`--resident-bytes`);
+    /// `bytes_in` stays paid-only, so the PCIe arithmetic in
+    /// [`crate::coordinator::power::transfer_secs`] automatically credits
+    /// the savings.
+    pub elided_in: u64,
+    /// Device -> host bytes per run elided by residency (zero unless a
+    /// data plane is installed). Not included in `bytes_out`.
+    pub elided_out: u64,
 }
 
 /// One planned pattern measurement: which blocks to enable plus the
@@ -295,6 +305,10 @@ pub fn measure_pattern(
     let transformed = transform::apply(prog, &plans)?;
     let mut interp = Interp::new(&transformed)?;
     interp.fuel = cfg.fuel;
+    // Share the engine's data plane (if one is installed) so the bulk
+    // loop-offload path classifies its transfers against the same
+    // residency map as the PJRT dispatches. `None` by default.
+    interp.data_plane = engine.data_plane();
     let mut externals: Vec<(String, ExternalFn)> = Vec::with_capacity(plans.len());
     for p in &plans {
         let name = transform::dispatch_name(&p.replacement.artifact);
@@ -339,6 +353,8 @@ pub fn measure_pattern(
         bytes_out: (stats_after.bytes_out - stats_before.bytes_out) / runs,
         dispatches: (stats_after.executions - stats_before.executions) / runs,
         device_secs: (stats_after.exec_secs - stats_before.exec_secs) / runs as f64,
+        elided_in: (stats_after.elided_in - stats_before.elided_in) / runs,
+        elided_out: (stats_after.elided_out - stats_before.elided_out) / runs,
     };
     let v = last.ok_or_else(|| anyhow!("no measured run completed"))?;
     Ok(MeasuredPattern { time: m, probe: ResultProbe::of(&v), output: out_text, traffic })
@@ -521,15 +537,45 @@ pub fn search_patterns_full(
         .filter(|(i, _)| *i == 0 || !is_pruned(i - 1))
         .map(|(_, s)| s.clone())
         .collect();
-    let mut measured = executor.measure(&ctx, &batch);
-    if measured.len() != batch.len() {
+    // Estimate-ranked dispatch (ROADMAP PR-9 follow-on): when analytic
+    // cost hints exist, hand the executor the predicted-best (cheapest
+    // predicted seconds) pattern first so serial executors surface the
+    // likely winner early and early-exit heuristics become possible. The
+    // baseline keeps position 0, ties keep block order (stable sort), and
+    // results are un-permuted back into plan order below — the reduce is
+    // provably independent of the dispatch ranking. Empty hints (the
+    // default estimator configuration) leave the order untouched.
+    let unpruned: Vec<usize> = (0..blocks.len()).filter(|&b| !is_pruned(b)).collect();
+    let mut perm: Vec<usize> = (0..batch.len()).collect();
+    if !cost_hints.is_empty() {
+        let hint = |pos: usize| {
+            unpruned
+                .get(pos - 1)
+                .and_then(|&b| cost_hints.get(b))
+                .copied()
+                .unwrap_or(f64::INFINITY)
+        };
+        perm[1..].sort_by(|&a, &b| {
+            hint(a).partial_cmp(&hint(b)).unwrap_or(std::cmp::Ordering::Equal)
+        });
+    }
+    let dispatch: Vec<PatternSpec> = perm.iter().map(|&i| batch[i].clone()).collect();
+    let raw = executor.measure(&ctx, &dispatch);
+    if raw.len() != dispatch.len() {
         bail!(
             "{} executor returned {} results for {} planned patterns",
             executor.name(),
-            measured.len(),
-            batch.len()
+            raw.len(),
+            dispatch.len()
         );
     }
+    let mut aligned: Vec<Option<Result<MeasuredPattern>>> =
+        (0..raw.len()).map(|_| None).collect();
+    for (k, r) in raw.into_iter().enumerate() {
+        aligned[perm[k]] = Some(r);
+    }
+    let mut measured: Vec<Result<MeasuredPattern>> =
+        aligned.into_iter().map(|r| r.expect("permutation is a bijection")).collect();
     let base = measured
         .remove(0)
         .with_context(|| format!("measuring the all-CPU baseline of {entry:?}"))?;
@@ -879,6 +925,61 @@ mod tests {
             full.tried.iter().map(|p| &p.label).collect::<Vec<_>>()
         );
         assert_eq!(plain.best_time.median, full.best_time.median);
+    }
+
+    #[test]
+    fn cost_hints_rank_the_dispatch_and_leave_the_outcome_alone() {
+        let script: [(&str, u64); 5] = [
+            ("all-CPU", 100),
+            ("only:call:blk0", 50),
+            ("only:call:blk1", 60),
+            ("only:call:blk2", 90),
+            ("combined-winners", 30),
+        ];
+        let prog = crate::parser::parse("int main() { return 0; }").unwrap();
+        let blocks = fake_blocks(3);
+        // Predicted seconds rank blk1 < blk2 < blk0.
+        let ranked = Scripted::new(&script, &[], false);
+        let with_hints = search_patterns_full(
+            &prog,
+            "main",
+            &blocks,
+            &VerifyConfig::default(),
+            &ranked,
+            &[0.3, 0.1, 0.2],
+            &[],
+        )
+        .unwrap();
+        // The executor saw the baseline first, then the predicted-best
+        // pattern, then the rest in predicted order.
+        let dispatched: Vec<String> = ranked.calls.borrow()[0].clone();
+        assert_eq!(
+            dispatched,
+            ["all-CPU", "only:call:blk1", "only:call:blk2", "only:call:blk0"]
+                .map(String::from)
+                .to_vec()
+        );
+        // ...but the SearchOutcome is the plain (unranked) search's:
+        // `tried` in block order, same winner, same times.
+        let plain = search_patterns_with(
+            &prog,
+            "main",
+            &blocks,
+            &VerifyConfig::default(),
+            &Scripted::new(&script, &[], false),
+        )
+        .unwrap();
+        assert_eq!(with_hints.best_enabled, plain.best_enabled);
+        assert_eq!(
+            with_hints.tried.iter().map(|p| &p.label).collect::<Vec<_>>(),
+            plain.tried.iter().map(|p| &p.label).collect::<Vec<_>>()
+        );
+        assert_eq!(with_hints.best_time.median, plain.best_time.median);
+        // Per-pattern results landed back on the right blocks despite the
+        // permuted dispatch.
+        assert_eq!(with_hints.tried[0].time.median, Duration::from_millis(50));
+        assert_eq!(with_hints.tried[1].time.median, Duration::from_millis(60));
+        assert_eq!(with_hints.tried[2].time.median, Duration::from_millis(90));
     }
 
     #[test]

@@ -43,8 +43,12 @@ pub struct RunStats {
     pub external_calls: u64,
     /// Loops executed through the bulk (GPU-simulating) executor.
     pub bulk_loops: u64,
-    /// Bytes "transferred" to/from the simulated accelerator.
+    /// Bytes "transferred" to/from the simulated accelerator (paid only;
+    /// residency-elided bytes are counted separately).
     pub transfer_bytes: u64,
+    /// Bytes whose transfer was elided because the value was resident on
+    /// the device (zero unless a data plane is installed).
+    pub elided_transfer_bytes: u64,
 }
 
 /// The interpreter. One instance holds a parsed program plus the offload
@@ -62,6 +66,10 @@ pub struct Interp {
     pub output: String,
     /// Execution fuel; `run` fails when exhausted (guards runaway loops).
     pub fuel: u64,
+    /// Device-resident data plane shared with the engine; when installed,
+    /// the bulk executor classifies loop transfers as paid or elided.
+    /// Configuration, not run state: [`Interp::reset_run_state`] keeps it.
+    pub data_plane: Option<Rc<crate::runtime::DataPlane>>,
     scopes: Vec<HashMap<String, Value>>,
     globals: HashMap<String, Value>,
     loop_cache: HashMap<NodeId, Option<Rc<CompiledLoop>>>,
@@ -90,6 +98,7 @@ impl Interp {
             stats: RunStats::default(),
             output: String::new(),
             fuel: u64::MAX,
+            data_plane: None,
             scopes: Vec::new(),
             globals: HashMap::new(),
             loop_cache: HashMap::new(),

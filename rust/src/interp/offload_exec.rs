@@ -917,11 +917,39 @@ pub fn run_bulk(interp: &mut Interp, c: &CompiledLoop) -> Result<bool> {
         temps: vec![0.0; c.temps.len()],
         loop_vals: vec![0; c.n_vars],
     };
-    let bytes: u64 = dev.bufs.iter().map(|b| (b.len() * 8) as u64).sum();
-    interp.stats.transfer_bytes += bytes * 2; // in + out
+    match interp.data_plane.clone() {
+        None => {
+            let bytes: u64 = dev.bufs.iter().map(|b| (b.len() * 8) as u64).sum();
+            interp.stats.transfer_bytes += bytes * 2; // in + out
+        }
+        Some(plane) => {
+            // Residency-aware accounting: each staged buffer pays only if
+            // its value is not already resident on the device; the D2H
+            // half is classified after execution, below.
+            for buf in &dev.bufs {
+                let h = crate::runtime::BufferHandle::of_f64(buf);
+                if plane.stage_in(&h) {
+                    interp.stats.elided_transfer_bytes += h.bytes;
+                } else {
+                    interp.stats.transfer_bytes += h.bytes;
+                }
+            }
+        }
+    }
 
     // --- execute --------------------------------------------------------
     exec_body(&mut dev, &c.body)?;
+
+    if let Some(plane) = interp.data_plane.clone() {
+        for buf in &dev.bufs {
+            let h = crate::runtime::BufferHandle::of_f64(buf);
+            if plane.read_back(&h) {
+                interp.stats.elided_transfer_bytes += h.bytes;
+            } else {
+                interp.stats.transfer_bytes += h.bytes;
+            }
+        }
+    }
 
     // --- D2H transfer + write-back -------------------------------------
     for (slice, buf) in slices.iter().zip(&dev.bufs) {

@@ -10,6 +10,7 @@
 //! fbo serve     [--jobs N]                       long-running service on stdin
 //! fbo stats     [files...] [--format text|prom|json]  service counters
 //! fbo cache     <gc|stats> [--max-bytes N]       decision-cache maintenance
+//! fbo calibrate [--cache DIR] [--write-profile F]  fit profiles from the cache
 //! fbo worker    --listen ADDR | --stdio          fleet measurement worker
 //! fbo gen-apps  [--n 256] [--dir apps]           materialize evaluation apps
 //! fbo gen-db    [--out patterndb.json]           dump the built-in pattern DB
@@ -27,8 +28,8 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Context, Result};
 
 use fbo::coordinator::{
-    apps, flow, loop_offload, BackendPolicy, Coordinator, PatternExecutor, PowerPolicy,
-    ProfileRegistry, PrunePolicy, SerialExecutor, Stage,
+    apps, estimate, flow, loop_offload, report_json, BackendPolicy, Coordinator, PatternExecutor,
+    PowerPolicy, ProfileRegistry, PrunePolicy, SerialExecutor, Stage,
 };
 use fbo::fleet::{Backoff, Capabilities, FleetEndpoint, FleetExecutor, FleetRegistry, WorkerHost};
 use fbo::ga::GaConfig;
@@ -130,6 +131,82 @@ fn trace_out_path(args: &Args) -> Result<Option<PathBuf>> {
     }
 }
 
+/// The pipeline-shaping flags shared verbatim by `offload`, `stages`,
+/// `batch`, and `serve` (and, where they apply, `flow`, `ga`, and
+/// `stats`): parsed once here, applied to a [`Coordinator`]
+/// (single-process commands) or a [`ServiceConfig`] (pooled commands).
+/// One parse site means the four entry points cannot drift apart flag by
+/// flag — a knob added here reaches all of them, with identical defaults
+/// and identical error messages.
+struct PipelineOpts {
+    policy: InterfacePolicy,
+    reps: usize,
+    backend_policy: BackendPolicy,
+    power_policy: PowerPolicy,
+    profiles: ProfileRegistry,
+    prune_policy: PrunePolicy,
+    resident_bytes: u64,
+    verify_parallel: usize,
+    fleet: Option<Vec<FleetEndpoint>>,
+    trace_out: Option<PathBuf>,
+}
+
+impl PipelineOpts {
+    fn parse(args: &Args) -> Result<Self> {
+        let policy = match args.flag("policy", "approve").as_str() {
+            "approve" => InterfacePolicy::AutoApprove,
+            "reject" => InterfacePolicy::AutoReject,
+            other => bail!("unknown --policy {other:?} (approve|reject)"),
+        };
+        // --resident-bytes SIZE: device data-plane budget (0 = off, the
+        // fingerprint-passive default). Binary suffixes as elsewhere.
+        let resident_bytes = match args.flags.get("resident-bytes") {
+            None => 0,
+            Some(v) if v == "true" => bail!("--resident-bytes expects a size (e.g. 64m, 0 = off)"),
+            Some(v) => parse_byte_size(v)?,
+        };
+        Ok(PipelineOpts {
+            policy,
+            reps: args.flag_usize("reps", 3)?,
+            backend_policy: BackendPolicy::parse(&args.flag("target", "auto"))?,
+            power_policy: PowerPolicy::parse(&args.flag("power-policy", "perf"))?,
+            profiles: profiles_from(args)?,
+            prune_policy: PrunePolicy::parse(&args.flag("prune-policy", "off"))?,
+            resident_bytes,
+            verify_parallel: args.flag_usize("verify-parallel", 1)?,
+            fleet: fleet_endpoints(args)?,
+            trace_out: trace_out_path(args)?,
+        })
+    }
+
+    fn apply_to_coordinator(&self, c: &mut Coordinator) {
+        c.policy = self.policy.clone();
+        c.verify.reps = self.reps;
+        c.backend_policy = self.backend_policy;
+        c.power_policy = self.power_policy;
+        c.profiles = self.profiles.clone();
+        c.prune_policy = self.prune_policy;
+        c.resident_bytes = self.resident_bytes;
+    }
+
+    fn apply_to_service(&self, cfg: &mut ServiceConfig) {
+        cfg.policy = self.policy.clone();
+        cfg.verify.reps = self.reps;
+        cfg.backend_policy = self.backend_policy;
+        cfg.power_policy = self.power_policy;
+        cfg.profiles = self.profiles.clone();
+        cfg.prune_policy = self.prune_policy;
+        cfg.resident_bytes = self.resident_bytes;
+        cfg.verify_parallel = self.verify_parallel;
+        if let Some(endpoints) = &self.fleet {
+            // Validated at parse time; the config carries the raw strings
+            // so the service workers re-parse and connect themselves.
+            cfg.fleet = endpoints.iter().map(FleetEndpoint::as_arg).collect();
+        }
+        cfg.telemetry.trace_out = self.trace_out.clone();
+    }
+}
+
 /// Build a coordinator from the shared CLI flags. With `verify_pool`
 /// set and `--verify-parallel N` (N > 1), also starts a pool of N-1
 /// measure-only workers and installs the pooled executor, so the Verify
@@ -138,23 +215,14 @@ fn trace_out_path(args: &Args) -> Result<Option<PathBuf>> {
 /// never reach the Verify stage (`ga`) pass `verify_pool: false` so the
 /// flag cannot spawn engines that would sit idle.
 fn coordinator_from(args: &Args, verify_pool: bool) -> Result<(Coordinator, Option<MeasurePool>)> {
+    let opts = PipelineOpts::parse(args)?;
     let dir = PathBuf::from(args.flag("artifacts", "artifacts"));
     let mut c = Coordinator::open(&dir)?;
-    c.policy = match args.flag("policy", "approve").as_str() {
-        "approve" => InterfacePolicy::AutoApprove,
-        "reject" => InterfacePolicy::AutoReject,
-        other => bail!("unknown --policy {other:?} (approve|reject)"),
-    };
-    c.verify.reps = args.flag_usize("reps", 3)?;
-    c.backend_policy = BackendPolicy::parse(&args.flag("target", "auto"))?;
-    c.power_policy = PowerPolicy::parse(&args.flag("power-policy", "perf"))?;
-    c.profiles = profiles_from(args)?;
-    c.prune_policy = PrunePolicy::parse(&args.flag("prune-policy", "off"))?;
-    let verify_parallel = args.flag_usize("verify-parallel", 1)?;
-    let pool = if verify_pool && verify_parallel > 1 {
-        let pool = MeasurePool::start(&dir, verify_parallel - 1)?;
+    opts.apply_to_coordinator(&mut c);
+    let pool = if verify_pool && opts.verify_parallel > 1 {
+        let pool = MeasurePool::start(&dir, opts.verify_parallel - 1)?;
         c.executor =
-            Some(std::rc::Rc::new(pool.executor(c.engine.clone(), verify_parallel)));
+            Some(std::rc::Rc::new(pool.executor(c.engine.clone(), opts.verify_parallel)));
         Some(pool)
     } else {
         None
@@ -163,12 +231,12 @@ fn coordinator_from(args: &Args, verify_pool: bool) -> Result<(Coordinator, Opti
     // serial) as the fallback of a fleet executor. Like the pool, the
     // fleet only changes where measurements run, never what they decide.
     if verify_pool {
-        if let Some(endpoints) = fleet_endpoints(args)? {
+        if let Some(endpoints) = &opts.fleet {
             let fallback: std::rc::Rc<dyn PatternExecutor> = match c.executor.take() {
                 Some(executor) => executor,
                 None => std::rc::Rc::new(SerialExecutor::new(c.engine.clone())),
             };
-            let registry = FleetRegistry::connect(&endpoints);
+            let registry = FleetRegistry::connect(endpoints);
             for reason in registry.rejected() {
                 eprintln!("fleet: rejected {reason}");
             }
@@ -587,7 +655,9 @@ fn cmd_flow(args: &Args) -> Result<()> {
 }
 
 fn service_from(args: &Args) -> Result<OffloadService> {
+    let opts = PipelineOpts::parse(args)?;
     let mut cfg = ServiceConfig::new(PathBuf::from(args.flag("artifacts", "artifacts")));
+    opts.apply_to_service(&mut cfg);
     cfg.workers = args.flag_usize("jobs", 2)?;
     if let Some(dir) = args.flags.get("cache") {
         cfg.cache_dir = Some(PathBuf::from(dir));
@@ -595,23 +665,6 @@ fn service_from(args: &Args) -> Result<OffloadService> {
     if args.flag("no-cache-persist", "false") == "true" {
         cfg.persist = false;
     }
-    cfg.policy = match args.flag("policy", "approve").as_str() {
-        "approve" => InterfacePolicy::AutoApprove,
-        "reject" => InterfacePolicy::AutoReject,
-        other => bail!("unknown --policy {other:?} (approve|reject)"),
-    };
-    cfg.verify.reps = args.flag_usize("reps", 3)?;
-    cfg.backend_policy = BackendPolicy::parse(&args.flag("target", "auto"))?;
-    cfg.power_policy = PowerPolicy::parse(&args.flag("power-policy", "perf"))?;
-    cfg.profiles = profiles_from(args)?;
-    cfg.prune_policy = PrunePolicy::parse(&args.flag("prune-policy", "off"))?;
-    cfg.verify_parallel = args.flag_usize("verify-parallel", 1)?;
-    if let Some(endpoints) = fleet_endpoints(args)? {
-        // Validated above; the config carries the raw strings so the
-        // service workers re-parse and connect themselves.
-        cfg.fleet = endpoints.iter().map(FleetEndpoint::as_arg).collect();
-    }
-    cfg.telemetry.trace_out = trace_out_path(args)?;
     cfg.admission = AdmissionConfig {
         queue_limit: args.flag_usize("queue-limit", 0)?,
         rate_per_client: args.flag_f64("rate-limit")?,
@@ -987,6 +1040,62 @@ fn cmd_cache(args: &Args) -> Result<()> {
     }
 }
 
+/// `fbo calibrate`: fit per-profile estimator scale factors from the
+/// decision cache. Every cached full decision whose report carries an
+/// estimate residue (v4+) contributes its predicted-vs-measured pairs;
+/// the fitted registry can be written back out with `--write-profile`
+/// and fed to later runs via `--device-profile`.
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let dir = cache_dir_from(args);
+    let cache = DecisionCache::open(&dir)?;
+    let mut samples = Vec::new();
+    let mut decisions = 0usize;
+    let mut with_estimate = 0usize;
+    for (_key, tier, payload) in cache.entries_snapshot() {
+        if tier != CacheTier::Decision {
+            continue;
+        }
+        // Corrupt or foreign payloads never abort a calibration pass.
+        let Ok(report) = report_json::report_from_str(&payload) else {
+            continue;
+        };
+        decisions += 1;
+        if let Some(est) = &report.arbitration.estimate {
+            with_estimate += 1;
+            samples.extend(estimate::samples_from_decision(est));
+        }
+    }
+    if samples.is_empty() {
+        bail!(
+            "no calibration samples in {} ({decisions} cached decision(s), {with_estimate} \
+             with an estimate residue); run offloads through `fbo batch`/`fbo serve` with a \
+             non-default --prune-policy or --device-profile so reports carry estimates",
+            dir.display()
+        );
+    }
+    let mut reg = profiles_from(args)?;
+    let fit = estimate::calibrate(&mut reg, &samples)?;
+    println!("calibrated from {} sample(s) in {}:", samples.len(), dir.display());
+    println!(
+        "  gpu  profile {:<20} scale {:.3}  ({} sample(s))",
+        reg.active_gpu, fit.gpu_scale, fit.gpu_samples
+    );
+    println!(
+        "  fpga profile {:<20} scale {:.3}  ({} sample(s))",
+        reg.active_fpga, fit.fpga_scale, fit.fpga_samples
+    );
+    match args.flags.get("write-profile") {
+        None => {}
+        Some(v) if v == "true" => bail!("--write-profile expects a file path"),
+        Some(path) => {
+            std::fs::write(path, reg.to_json_string())
+                .with_context(|| format!("writing fitted registry to {path}"))?;
+            println!("fitted registry written to {path}");
+        }
+    }
+    Ok(())
+}
+
 fn cmd_gen_apps(args: &Args) -> Result<()> {
     let n = args.flag_usize("n", 256)?;
     let dir = PathBuf::from(args.flag("dir", "apps"));
@@ -1031,11 +1140,12 @@ fn usage() -> &'static str {
                  [--target gpu|fpga|auto] [--power-policy perf|perf-per-watt|cap:<watts>]\n\
                  [--device-profile FILE] [--prune-policy off|conservative:<margin>|aggressive]\n\
                  [--reps N] [--verify-parallel N] [--fleet LIST] [--trace-out FILE]\n\
-                 [--out transformed.c]\n\
+                 [--resident-bytes SIZE] [--out transformed.c]\n\
        stages    <file.c> [--entry main] [--dump DIR] [--policy approve|reject]\n\
                  [--target gpu|fpga|auto] [--power-policy ...] [--reps N]\n\
                  [--device-profile FILE] [--prune-policy ...]\n\
                  [--verify-parallel N] [--fleet LIST] [--trace-out FILE]\n\
+                 [--resident-bytes SIZE]\n\
                  run the pipeline stage by stage, printing a fixed-order\n\
                  per-stage table (--dump writes the JSON artifacts,\n\
                  including estimated.json and power_scored.json)\n\
@@ -1051,7 +1161,7 @@ fn usage() -> &'static str {
                  [--cache DIR] [--no-cache-persist] [--reps N]\n\
                  [--target gpu|fpga|auto] [--power-policy ...] [--verify-parallel N]\n\
                  [--device-profile FILE] [--prune-policy ...]\n\
-                 [--fleet LIST] [--retries N]\n\
+                 [--fleet LIST] [--retries N] [--resident-bytes SIZE]\n\
                  [--trace-out FILE] [--cache-max-bytes SIZE] [--cache-max-entries N]\n\
                  offload many files through the service worker pool +\n\
                  persistent decision cache; admission rejections retry\n\
@@ -1059,6 +1169,7 @@ fn usage() -> &'static str {
        serve     [--jobs N] [--artifacts DIR] [--cache DIR]\n\
                  [--target gpu|fpga|auto] [--power-policy ...] [--verify-parallel N]\n\
                  [--device-profile FILE] [--prune-policy ...] [--fleet LIST]\n\
+                 [--resident-bytes SIZE]\n\
                  [--trace-out FILE] [--metrics-addr HOST:PORT] [--stats-every N]\n\
                  [--queue-limit N] [--rate-limit R] [--burst B]\n\
                  [--cache-max-bytes SIZE] [--cache-max-entries N]\n\
@@ -1075,6 +1186,12 @@ fn usage() -> &'static str {
                  occupancy; gc evicts down to the budget in tier-priority-\n\
                  then-LRU order (reconciled evicts first, verified last);\n\
                  --dry-run previews without deleting; SIZE accepts k/m/g\n\
+       calibrate [--cache DIR] [--artifacts DIR] [--device-profile FILE]\n\
+                 [--write-profile FILE]\n\
+                 fit estimator scale factors from the decision cache:\n\
+                 every cached decision with an estimate residue donates\n\
+                 its predicted-vs-measured pairs; --write-profile saves\n\
+                 the fitted registry for later --device-profile runs\n\
        worker    --listen HOST:PORT | --stdio [--artifacts DIR]\n\
                  [--caps gpu,fpga] [--device NAME] [--max-inflight N]\n\
                  host a fleet measurement worker speaking fbo-fleet-v1\n\
@@ -1115,6 +1232,15 @@ fn usage() -> &'static str {
      estimate predicts lose by more than the margin; aggressive skips\n\
      every predicted-losing block.\n\
      \n\
+     --resident-bytes SIZE gives Step-3 measurement a device-resident\n\
+     data plane with SIZE bytes of buffer budget (k/m/g suffixes):\n\
+     tensors handed between adjacent offloaded blocks stay on the device\n\
+     and repeated inputs skip their host->device staging, with LRU spill\n\
+     of unpinned buffers past the budget. Reports gain a v5 residency\n\
+     section crediting the elided PCIe transfers. Off (0) by default and\n\
+     fingerprint-passive: a zero-budget run is byte-identical end to end\n\
+     to a pipeline without the data plane.\n\
+     \n\
      --queue-limit N bounds each worker queue, --rate-limit R meters each\n\
      client to R jobs/second (--burst B tokens of headroom): over-limit\n\
      submits fail fast with a structured rejection (and a retry hint)\n\
@@ -1148,6 +1274,7 @@ fn main() -> ExitCode {
         "serve" => cmd_serve(&args),
         "stats" => cmd_stats(&args),
         "cache" => cmd_cache(&args),
+        "calibrate" => cmd_calibrate(&args),
         "worker" => cmd_worker(&args),
         "gen-apps" => cmd_gen_apps(&args),
         "gen-db" => cmd_gen_db(&args),

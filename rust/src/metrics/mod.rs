@@ -159,6 +159,22 @@ pub fn fmt_hours(h: f64) -> String {
     }
 }
 
+/// Human-friendly byte count (B/KiB/MiB/GiB), for traffic and residency
+/// budgets in reports.
+pub fn fmt_bytes(b: u64) -> String {
+    const KIB: f64 = 1024.0;
+    let b = b as f64;
+    if b < KIB {
+        format!("{b:.0}B")
+    } else if b < KIB * KIB {
+        format!("{:.1}KiB", b / KIB)
+    } else if b < KIB * KIB * KIB {
+        format!("{:.1}MiB", b / (KIB * KIB))
+    } else {
+        format!("{:.2}GiB", b / (KIB * KIB * KIB))
+    }
+}
+
 /// Format a speedup factor the way the paper's Fig. 5 does (2 significant
 /// figures, no decimals above 10).
 pub fn fmt_speedup(x: f64) -> String {
@@ -183,6 +199,14 @@ mod tests {
         assert_eq!(m.reps, 5);
         assert!(m.median >= Duration::from_micros(100));
         assert!(m.min <= m.median && m.median <= m.max);
+    }
+
+    #[test]
+    fn byte_counts_pick_the_natural_unit() {
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2048), "2.0KiB");
+        assert_eq!(fmt_bytes(64 << 20), "64.0MiB");
+        assert_eq!(fmt_bytes(3 << 30), "3.00GiB");
     }
 
     #[test]

@@ -16,6 +16,10 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::patterndb::json::{self, Json};
 
+pub mod data_plane;
+
+pub use data_plane::{BufferHandle, DataPlane, ResidencyStats};
+
 /// Shape+dtype of one artifact input/output (dtype is always f32 at this
 /// boundary; complex data travels as split re/im planes).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -64,6 +68,13 @@ pub struct EngineStats {
     pub bytes_out: u64,
     /// Artifacts compiled (first dispatch of each; cached after).
     pub compiles: u64,
+    /// Host -> device bytes whose transfer was elided because the value was
+    /// already resident on the device (zero unless a [`DataPlane`] is
+    /// installed). Not included in `bytes_in`, which stays paid-only.
+    pub elided_in: u64,
+    /// Device -> host bytes elided by residency (zero unless a [`DataPlane`]
+    /// is installed). Not included in `bytes_out`.
+    pub elided_out: u64,
     /// Wall-clock seconds spent inside [`Engine::execute`] after the
     /// artifact lookup: host staging + device execution + readback. This is
     /// the measured "GPU time" of the PJRT-as-GPU substitution; the
@@ -79,6 +90,7 @@ pub struct Engine {
     compiled: RefCell<HashMap<String, Rc<LoadedArtifact>>>,
     /// Execution statistics (dispatches, bytes, measured seconds).
     pub stats: RefCell<EngineStats>,
+    plane: RefCell<Option<Rc<DataPlane>>>,
 }
 
 impl Engine {
@@ -117,7 +129,31 @@ impl Engine {
             metas,
             compiled: RefCell::new(HashMap::new()),
             stats: RefCell::new(EngineStats::default()),
+            plane: RefCell::new(None),
         }))
+    }
+
+    /// Install a device-resident data plane. Every subsequent
+    /// [`Engine::execute`] classifies its transfers as paid or elided
+    /// against the plane's residency map; the plane persists across
+    /// requests (hot inputs stay resident in the worker pool) until
+    /// replaced. No plane is installed by default, in which case byte
+    /// accounting is identical to a build without residency.
+    pub fn install_data_plane(&self, plane: Rc<DataPlane>) {
+        *self.plane.borrow_mut() = Some(plane);
+    }
+
+    /// The installed data plane, if any.
+    pub fn data_plane(&self) -> Option<Rc<DataPlane>> {
+        self.plane.borrow().clone()
+    }
+
+    /// Remove the data plane, returning byte accounting to the exact
+    /// pre-residency arithmetic. A later `--resident-bytes 0` request on
+    /// an engine warmed by a resident one must observe byte-identical
+    /// traffic to a fresh engine.
+    pub fn uninstall_data_plane(&self) {
+        *self.plane.borrow_mut() = None;
     }
 
     /// Artifact names available in the manifest.
@@ -194,9 +230,24 @@ impl Engine {
             literals.push(lit);
         }
         {
+            let plane = self.plane.borrow();
             let mut st = self.stats.borrow_mut();
             st.executions += 1;
-            st.bytes_in += inputs.iter().map(|b| (b.len() * 4) as u64).sum::<u64>();
+            match plane.as_deref() {
+                None => {
+                    st.bytes_in += inputs.iter().map(|b| (b.len() * 4) as u64).sum::<u64>();
+                }
+                Some(p) => {
+                    for buf in inputs {
+                        let h = BufferHandle::of_f32(buf);
+                        if p.stage_in(&h) {
+                            st.elided_in += h.bytes;
+                        } else {
+                            st.bytes_in += h.bytes;
+                        }
+                    }
+                }
+            }
         }
         let result = art
             .exe
@@ -223,7 +274,18 @@ impl Engine {
             if v.len() != spec.elems() {
                 bail!("{name}: output length {} != shape {:?}", v.len(), spec.shape);
             }
-            self.stats.borrow_mut().bytes_out += (v.len() * 4) as u64;
+            match self.plane.borrow().as_deref() {
+                None => self.stats.borrow_mut().bytes_out += (v.len() * 4) as u64,
+                Some(p) => {
+                    let h = BufferHandle::of_f32(&v);
+                    let mut st = self.stats.borrow_mut();
+                    if p.read_back(&h) {
+                        st.elided_out += h.bytes;
+                    } else {
+                        st.bytes_out += h.bytes;
+                    }
+                }
+            }
             out.push(v);
         }
         self.stats.borrow_mut().exec_secs += t0.elapsed().as_secs_f64();
@@ -354,5 +416,34 @@ mod tests {
         assert_eq!(st.compiles, 1); // compiled once, cached after
         assert!(st.bytes_in > 0 && st.bytes_out > 0);
         assert!(st.exec_secs > 0.0, "dispatch wall-clock must accumulate");
+        assert_eq!(st.elided_in, 0, "no plane installed -> nothing elided");
+        assert_eq!(st.elided_out, 0);
+    }
+
+    #[test]
+    fn installed_plane_splits_paid_and_elided_bytes() {
+        let e = engine();
+        let n = 64;
+        let a = vec![1f32; n * n];
+        let buf_bytes = (n * n * 4) as u64;
+        e.install_data_plane(Rc::new(DataPlane::new(64 << 20)));
+        // First dispatch pays both inputs (identical buffers share one
+        // handle: the second operand of the same dispatch is already
+        // resident once the first is staged).
+        e.execute("matmul_n64", &[a.clone(), a.clone()]).unwrap();
+        let first = e.stats.borrow().clone();
+        assert_eq!(first.bytes_in, buf_bytes, "one paid staging of the shared value");
+        assert_eq!(first.elided_in, buf_bytes, "duplicate operand elided");
+        // Second identical dispatch: inputs fully resident, nothing paid in.
+        e.execute("matmul_n64", &[a.clone(), a]).unwrap();
+        let second = e.stats.borrow().clone();
+        assert_eq!(second.bytes_in, first.bytes_in, "warm inputs pay nothing");
+        assert_eq!(second.elided_in, first.elided_in + 2 * buf_bytes);
+        // The repeated output is elided on the second readback.
+        assert_eq!(second.bytes_out, first.bytes_out);
+        assert!(second.elided_out > first.elided_out);
+        let plane = e.data_plane().expect("plane installed");
+        let s = plane.stats();
+        assert!(s.hits >= 3 && s.resident_bytes > 0);
     }
 }

@@ -540,6 +540,19 @@ impl DecisionCache {
         u
     }
 
+    /// Snapshot of every entry: key, tier, and payload, in no particular
+    /// order. `fbo calibrate` walks this to fit device-profile scale
+    /// factors against the cached decisions' predicted-vs-measured
+    /// residues. Payloads are `Arc<str>` clones (O(1) each); the map lock
+    /// is held only for the copy-out, so a concurrent insert at worst
+    /// misses the snapshot. Recency is deliberately *not* refreshed —
+    /// enumeration is an audit, not a use, and must not perturb LRU
+    /// eviction order.
+    pub fn entries_snapshot(&self) -> Vec<(CacheKey, CacheTier, Arc<str>)> {
+        let st = self.state.lock().expect("decision cache lock");
+        st.entries.iter().map(|(k, e)| (k.clone(), e.tier, e.payload.clone())).collect()
+    }
+
     /// Store a full-decision entry ([`CacheTier::Decision`]) — see
     /// [`DecisionCache::insert_tier`].
     pub fn insert(&self, key: &CacheKey, report_json: &str) -> Result<()> {
@@ -1005,6 +1018,24 @@ mod tests {
         assert!(c.lookup(&keys[8].0).is_some());
         assert!(c.lookup(&keys[9].0).is_some());
         assert_eq!(c.stats().evictions, [2, 2, 1, 0, 0]);
+    }
+
+    #[test]
+    fn snapshot_enumerates_without_touching_recency() {
+        let c = DecisionCache::in_memory();
+        c.insert_tier(&key(1), CacheTier::Decision, r#"{"x": 1}"#).unwrap();
+        c.insert_tier(&key(2), CacheTier::Verified, r#"{"x": 2}"#).unwrap();
+        let mut snap = c.entries_snapshot();
+        snap.sort_by(|a, b| a.0.source_hash.cmp(&b.0.source_hash));
+        assert_eq!(snap.len(), 2);
+        assert_eq!((&snap[0].0, snap[0].1), (&key(1), CacheTier::Decision));
+        assert_eq!(&*snap[0].2, r#"{"x": 1}"#);
+        assert_eq!(snap[1].1, CacheTier::Verified);
+        // Enumeration must not count as use: key(1) is still the LRU
+        // victim even after the snapshot walked it.
+        let out = c.gc(CacheBudget { max_bytes: None, max_entries: Some(1) }, true).unwrap();
+        assert_eq!(out.evicted[0].key, key(1));
+        assert_eq!(c.stats().lookups, 0, "snapshot is not a lookup");
     }
 
     #[test]

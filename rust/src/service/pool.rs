@@ -240,6 +240,14 @@ pub struct ServiceConfig {
     /// hopeless candidates from measurement. Fingerprinted alongside the
     /// profiles.
     pub prune_policy: PrunePolicy,
+    /// Resident-set byte budget of the device data plane (CLI
+    /// `--resident-bytes`). `0` (the default) keeps residency off. Part
+    /// of the verify-tier fingerprint **only when nonzero**: a budget
+    /// changes what Step 3 observes (the paid/elided traffic split) and
+    /// upgrades the report to v5, so resident decisions never replay for
+    /// non-resident requests — while the default `0` contributes nothing
+    /// and pre-residency cache entries still replay byte-identically.
+    pub resident_bytes: u64,
     /// Patterns measured concurrently inside one Step-3 search (CLI
     /// `--verify-parallel`). `1` (the default) measures serially; above 1,
     /// independent pattern measurements fan out across the pool's idle
@@ -290,6 +298,7 @@ impl ServiceConfig {
             power_model: PowerModel::builtin(),
             profiles: ProfileRegistry::builtin(),
             prune_policy: PrunePolicy::default(),
+            resident_bytes: 0,
             verify_parallel: 1,
             fleet: Vec::new(),
             telemetry: TelemetryConfig::default(),
@@ -491,6 +500,13 @@ struct Counters {
     /// carried an estimate residue (non-default `--prune-policy` /
     /// `--device-profile` runs only).
     estimator_error: Arc<Gauge>,
+    /// `fbo_residency_elided_bytes_total` — host<->device bytes the
+    /// resident data plane elided, summed across completed jobs. Moves
+    /// only under a nonzero `--resident-bytes` budget.
+    residency_elided_bytes: Arc<Counter>,
+    /// `fbo_residency_saved_seconds` — modeled PCIe seconds per run the
+    /// last residency-shaped job saved (its v5 transfer credit).
+    residency_saved_secs: Arc<Gauge>,
 }
 
 impl Counters {
@@ -542,6 +558,16 @@ impl Counters {
             estimator_error: reg.gauge(
                 "fbo_estimator_error",
                 "Analytic-estimator MAPE over the last completed job with an estimate residue.",
+                &[],
+            ),
+            residency_elided_bytes: reg.counter(
+                "fbo_residency_elided_bytes_total",
+                "Host<->device bytes elided by the resident data plane.",
+                &[],
+            ),
+            residency_saved_secs: reg.gauge(
+                "fbo_residency_saved_seconds",
+                "PCIe seconds per run saved by the last residency-shaped job.",
                 &[],
             ),
         }
@@ -765,13 +791,20 @@ fn estimate_fingerprint(cfg: &ServiceConfig) -> String {
 /// wrote must keep replaying. Any non-default profile or prune policy
 /// chains the estimate fingerprint in — pruning changes *which* patterns
 /// get measured, so it invalidates the measured evidence.
+///
+/// A nonzero `--resident-bytes` budget appends a `|resident:<budget>`
+/// segment: residency changes what Step 3 observes (the paid/elided
+/// traffic split, and the v5 report residue downstream), so resident
+/// measurements must never replay for non-resident requests or for a
+/// different budget. The default `0` appends nothing — the pre-residency
+/// formula, so existing cache entries keep replaying byte-identically.
 fn verify_fingerprint(cfg: &ServiceConfig) -> String {
     let upstream = if estimate_is_default(cfg) {
         discovery_fingerprint(cfg)
     } else {
         estimate_fingerprint(cfg)
     };
-    fnv_hex(&format!(
+    let mut blob = format!(
         "verify|{}|artifacts:{}|reps:{}|warmup:{}|fuel:{}|tol:{}",
         upstream,
         artifacts_fingerprint(&cfg.artifacts),
@@ -779,7 +812,11 @@ fn verify_fingerprint(cfg: &ServiceConfig) -> String {
         cfg.verify.warmup,
         cfg.verify.fuel,
         cfg.verify.tolerance,
-    ))
+    );
+    if cfg.resident_bytes > 0 {
+        blob.push_str(&format!("|resident:{}", cfg.resident_bytes));
+    }
+    fnv_hex(&blob)
 }
 
 /// True when the power configuration is the inert default (`perf` policy
@@ -1764,6 +1801,7 @@ fn worker_main(
             c.power_model = cfg.power_model.clone();
             c.profiles = cfg.profiles.clone();
             c.prune_policy = cfg.prune_policy;
+            c.resident_bytes = cfg.resident_bytes;
             // Fan independent pattern measurements out to the sibling
             // workers when configured; with `verify_parallel == 1` the
             // executor measures everything locally (and still feeds the
@@ -2006,6 +2044,14 @@ fn run_job(c: &Coordinator, shared: &Shared, job: &Job) -> Result<CompletedJob> 
     if let Some(mape) = report.arbitration.estimate.as_ref().and_then(|e| e.mape) {
         shared.counters.estimator_error.set(mape);
     }
+    // Likewise the residency credit: only residency-shaped jobs (nonzero
+    // `--resident-bytes`) attach the residue, so the series stay flat —
+    // and absent from any fingerprint — under the default config.
+    if let Some(res) = &report.arbitration.residency {
+        let elided: u64 = res.blocks.iter().map(|b| b.elided_in + b.elided_out).sum();
+        shared.counters.residency_elided_bytes.add(elided);
+        shared.counters.residency_saved_secs.set(res.total_saved_transfer_secs);
+    }
 
     let report_json: Arc<str> = Arc::from(report_json::report_to_string(&report));
     // The verified decision is the product; failing to persist it degrades
@@ -2191,6 +2237,42 @@ mod tests {
         assert_eq!(fp.verify, base.verify);
         assert_eq!(fp.power, base.power);
         assert_eq!(fp.decision, base.decision);
+    }
+
+    #[test]
+    fn resident_budget_keys_the_verify_tier_only_when_nonzero() {
+        // The byte-identical-replay contract across the residency PR:
+        // `--resident-bytes 0` (the default) appends nothing, so the
+        // verify fingerprint — and everything chained off it — hashes
+        // exactly the pre-residency formula and old cache entries keep
+        // replaying. A nonzero budget changes what Step 3 observes (the
+        // paid/elided traffic split and the v5 residue), so it must key
+        // its own entries, and a different budget keys different ones.
+        let cfg = ServiceConfig::new("some/artifacts");
+        assert_eq!(cfg.resident_bytes, 0, "residency must be off by default");
+        let base = stage_fingerprints(&cfg);
+        let pre_residency = fnv_hex(&format!(
+            "verify|{}|artifacts:{}|reps:{}|warmup:{}|fuel:{}|tol:{}",
+            discovery_fingerprint(&cfg),
+            artifacts_fingerprint(&cfg.artifacts),
+            cfg.verify.reps,
+            cfg.verify.warmup,
+            cfg.verify.fuel,
+            cfg.verify.tolerance,
+        ));
+        assert_eq!(base.verify, pre_residency);
+
+        let mut resident = cfg.clone();
+        resident.resident_bytes = 64 << 20;
+        let fp = stage_fingerprints(&resident);
+        assert_eq!(fp.discovery, base.discovery, "residency is a verify-time concern");
+        assert_eq!(fp.estimate, base.estimate);
+        assert_ne!(fp.verify, base.verify, "a budget must invalidate measurements");
+        assert_ne!(fp.decision, base.decision, "and the decisions built on them");
+
+        let mut rebudgeted = resident.clone();
+        rebudgeted.resident_bytes = 128 << 20;
+        assert_ne!(stage_fingerprints(&rebudgeted).verify, fp.verify);
     }
 
     #[test]

@@ -107,6 +107,20 @@ pub enum TraceEvent {
         /// Backend policy the arbitration ran under.
         policy: String,
     },
+    /// The device data plane elided host<->device transfers for one
+    /// arbitrated block (`--resident-bytes`). Emitted only when a
+    /// nonzero residency budget shaped the run — an untraced or
+    /// zero-budget pipeline never produces this event.
+    ResidencyElided {
+        /// Site label of the block.
+        label: String,
+        /// Host->device bytes elided per run (inputs already resident).
+        elided_in: u64,
+        /// Device->host bytes elided per run (outputs handed on-device).
+        elided_out: u64,
+        /// Modeled PCIe transfer seconds saved per run.
+        saved_secs: f64,
+    },
     /// The service probed one cache tier for a job.
     CacheProbe {
         /// Tier name: `decision`, `verified`, `reconciled`, `estimated`,
@@ -185,6 +199,7 @@ impl TraceEvent {
             TraceEvent::PatternMeasured { .. } => "pattern",
             TraceEvent::PowerScored { .. } => "power",
             TraceEvent::ArbitrationVerdict { .. } => "verdict",
+            TraceEvent::ResidencyElided { .. } => "residency",
             TraceEvent::CacheProbe { .. } => "cache",
             TraceEvent::CacheCorrupt { .. } => "cache-corrupt",
             TraceEvent::Resumed { .. } => "resumed",
@@ -292,6 +307,12 @@ impl TraceRecord {
                 pairs.push(("margin_secs", Json::num(*margin_secs)));
                 pairs.push(("policy", Json::str(policy)));
             }
+            TraceEvent::ResidencyElided { label, elided_in, elided_out, saved_secs } => {
+                pairs.push(("label", Json::str(label)));
+                pairs.push(("elided_in", Json::num(*elided_in as f64)));
+                pairs.push(("elided_out", Json::num(*elided_out as f64)));
+                pairs.push(("saved_secs", Json::num(*saved_secs)));
+            }
             TraceEvent::CacheProbe { tier, hit } => {
                 pairs.push(("tier", Json::str(tier)));
                 pairs.push(("hit", Json::Bool(*hit)));
@@ -366,6 +387,12 @@ impl TraceRecord {
                 loser: get_str(v, "loser")?,
                 margin_secs: get_f64(v, "margin_secs")?,
                 policy: get_str(v, "policy")?,
+            },
+            "residency" => TraceEvent::ResidencyElided {
+                label: get_str(v, "label")?,
+                elided_in: get_u64(v, "elided_in")?,
+                elided_out: get_u64(v, "elided_out")?,
+                saved_secs: get_f64(v, "saved_secs")?,
             },
             "cache" => TraceEvent::CacheProbe {
                 tier: get_str(v, "tier")?,
@@ -665,6 +692,12 @@ mod tests {
                 loser: "fpga".into(),
                 margin_secs: 0.0125,
                 policy: "auto".into(),
+            },
+            TraceEvent::ResidencyElided {
+                label: "call:matmul".into(),
+                elided_in: 32_768,
+                elided_out: 0,
+                saved_secs: 5.46e-6,
             },
             TraceEvent::CacheProbe { tier: "decision".into(), hit: false },
             TraceEvent::CacheCorrupt {

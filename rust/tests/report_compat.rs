@@ -2,8 +2,9 @@
 //! pre-arbitration format) must still decode, a v2 fixture must
 //! round-trip byte-identically through `coordinator/report_json.rs` —
 //! the invariant the decision cache's byte-identical replay rests on —
-//! and synthesized v3 (power residue) and v4 (estimate residue)
-//! documents must decode and stay codec fixed points.
+//! and synthesized v3 (power residue), v4 (estimate residue), and v5
+//! (residency residue) documents must decode and stay codec fixed
+//! points.
 
 use fbo::coordinator::{report_json, Backend, BackendPolicy};
 use fbo::patterndb::json::{self, Json};
@@ -146,4 +147,79 @@ fn v4_documents_decode_and_are_a_codec_fixed_point() {
     assert_eq!(reencoded, v4_text, "canonically-built v4 must round-trip byte-identically");
     let twice = report_json::report_to_string(&report_json::report_from_str(&reencoded).unwrap());
     assert_eq!(twice, reencoded);
+}
+
+#[test]
+fn v5_documents_decode_and_are_a_codec_fixed_point() {
+    // Shape a v5 document from the committed v2 fixture: bump the format
+    // tag, graft a residency residue into the arbitration section, and
+    // give the first pattern's traffic its elided split — the three
+    // changes a nonzero --resident-bytes budget makes to the wire format.
+    // v1-v4 documents never carry any of them, so the older fixtures
+    // above double as the "absent residency" decode cases.
+    let mut top = json::parse(V2_FIXTURE).unwrap().as_obj().unwrap().clone();
+    top.insert("format".to_string(), Json::str("fbo-offload-report-v5"));
+    let residency = Json::obj(vec![
+        ("budget_bytes", Json::num(67108864.0)),
+        (
+            "blocks",
+            Json::Arr(vec![Json::obj(vec![
+                ("label", Json::str("only:call:fft2d")),
+                ("elided_in", Json::num(16384.0)),
+                ("elided_out", Json::num(32768.0)),
+                ("saved_transfer_secs", Json::num(8.192e-6)),
+            ])]),
+        ),
+        ("total_saved_transfer_secs", Json::num(8.192e-6)),
+    ]);
+    if let Some(Json::Obj(arb)) = top.get_mut("arbitration") {
+        arb.insert("residency".to_string(), residency);
+    } else {
+        panic!("v2 fixture must carry an arbitration section");
+    }
+    {
+        let Some(Json::Obj(outcome)) = top.get_mut("outcome") else {
+            panic!("v2 fixture must carry an outcome section");
+        };
+        let Some(Json::Arr(tried)) = outcome.get_mut("tried") else {
+            panic!("v2 fixture must carry tried patterns");
+        };
+        let Some(Json::Obj(pattern)) = tried.first_mut() else {
+            panic!("v2 fixture must carry at least one pattern");
+        };
+        let Some(Json::Obj(traffic)) = pattern.get_mut("traffic") else {
+            panic!("v2 fixture patterns must carry traffic");
+        };
+        traffic.insert("elided_in".to_string(), Json::num(16384.0));
+        traffic.insert("elided_out".to_string(), Json::num(32768.0));
+    }
+    let v5_text = json::to_string_pretty(&Json::Obj(top));
+
+    let report = report_json::report_from_str(&v5_text).expect("v5 documents must decode");
+    let residue = report.arbitration.residency.as_ref().expect("residency residue");
+    assert_eq!(residue.budget_bytes, 64 << 20);
+    assert_eq!(residue.blocks[0].elided_in, 16384);
+    assert_eq!(residue.blocks[0].elided_out, 32768);
+    assert_eq!(residue.total_saved_transfer_secs, 8.192e-6);
+    assert_eq!(report.outcome.tried[0].traffic.elided_in, 16384);
+    assert_eq!(report.outcome.tried[0].traffic.elided_out, 32768);
+    // The canonical re-encode keeps the v5 tag and is a codec fixed point.
+    let reencoded = report_json::report_to_string(&report);
+    assert!(reencoded.contains(report_json::REPORT_FORMAT_V5));
+    assert_eq!(reencoded, v5_text, "canonically-built v5 must round-trip byte-identically");
+    let twice = report_json::report_to_string(&report_json::report_from_str(&reencoded).unwrap());
+    assert_eq!(twice, reencoded);
+
+    // Tag <-> payload agreement: a v5 tag without the residency section
+    // (and the reverse) must be rejected as corrupt.
+    let v4_tagged = v5_text.replace("fbo-offload-report-v5", "fbo-offload-report-v4");
+    assert!(report_json::report_from_str(&v4_tagged).is_err(), "v4 tag + residency must fail");
+    assert!(
+        report_json::report_from_str(&V2_FIXTURE.replace(
+            report_json::REPORT_FORMAT,
+            "fbo-offload-report-v5"
+        ))
+        .is_err(),
+        "v5 tag without residency must fail"
+    );
 }

@@ -69,6 +69,7 @@ fn golden_jsonl_schema_is_stable() {
             "fleet",
             "estimate",
             "fleet-reconnect",
+            "residency",
         ],
         "fixture must exercise every event variant"
     );
